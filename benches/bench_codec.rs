@@ -1,0 +1,70 @@
+//! Codec + decoder benchmarks: bit packing, container round-trip, channel
+//! framing, and the shift-and-scale decoder — the edge-side hot path of the
+//! deployment pipeline (backs Table II / Fig. 9 machinery and §Perf L3).
+
+use qsq_edge::bench::run_bench;
+use qsq_edge::channel::{Link, LinkConfig};
+use qsq_edge::codec::{decode_model, encode_model, pack, EncodedModel, EncodedTensor};
+use qsq_edge::hw::decoder_rtl;
+use qsq_edge::quant::qsq::{quantize, AssignMode};
+use qsq_edge::util::prop::gen_weights;
+use qsq_edge::util::rng::Rng;
+
+fn main() {
+    println!("== bench_codec ==");
+    let mut r = Rng::new(0);
+    let w = gen_weights(&mut r, 256 * 120, 0.1);
+    let qt = quantize(&w, &[256, 120], 16, 4, AssignMode::Nearest).unwrap();
+    let n = qt.codes.len();
+
+    let res = run_bench("pack 3-bit codes [30720]", 3, 50, n as f64, || {
+        pack::pack_codes(&qt.codes, 3).unwrap()
+    });
+    println!("{}", res.report());
+
+    let packed = pack::pack_codes(&qt.codes, 3).unwrap();
+    let res = run_bench("unpack 3-bit codes [30720]", 3, 50, n as f64, || {
+        pack::unpack_codes(&packed, n, 3).unwrap()
+    });
+    println!("{}", res.report());
+
+    let model = EncodedModel {
+        tensors: vec![EncodedTensor { name: "f1w".into(), tensor: qt.clone() }],
+    };
+    let res = run_bench("container encode (1 tensor, 30720 codes)", 3, 50, n as f64, || {
+        encode_model(&model).unwrap()
+    });
+    println!("{}", res.report());
+
+    let bytes = encode_model(&model).unwrap();
+    let res = run_bench("container decode + CRC verify", 3, 50, n as f64, || {
+        decode_model(&bytes).unwrap()
+    });
+    println!("{}", res.report());
+
+    let res = run_bench(
+        "shift-and-scale decode_stream [30720 weights]",
+        3,
+        50,
+        n as f64,
+        || decoder_rtl::decode_stream(&qt.codes, &qt.scalars, qt.group, qt.oc),
+    );
+    println!("{}", res.report());
+
+    // arithmetic decode for comparison (QuantizedTensor::decode)
+    let res = run_bench("arithmetic decode [30720 weights]", 3, 50, n as f64, || qt.decode());
+    println!("{}", res.report());
+
+    // channel transfer of the whole container (clean + noisy)
+    for (ber, label) in [(0.0, "clean"), (1e-5, "ber=1e-5")] {
+        let cfg = LinkConfig { ber, ..Default::default() };
+        let res = run_bench(
+            &format!("link transmit {} bytes ({label})", bytes.len()),
+            1,
+            10,
+            bytes.len() as f64,
+            || Link::new(cfg, 7).transmit(&bytes).unwrap(),
+        );
+        println!("{}", res.report());
+    }
+}

@@ -1,0 +1,68 @@
+//! Quality Scalable Multiplier benchmarks — the §V.B / Fig.-11 numbers:
+//! partial products, energy/multiply, and error as the digit budget scales,
+//! on real trained-filter weight distributions.
+
+use qsq_edge::bench::run_bench;
+use qsq_edge::hw::csd;
+use qsq_edge::hw::fixedpoint::Format;
+use qsq_edge::hw::multiplier::{csd_nonzero_histogram, dot, QsmConfig};
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::model::store::{artifacts_dir, WeightStore};
+use qsq_edge::util::rng::Rng;
+
+fn main() {
+    println!("== bench_csd_multiplier ==");
+    let mut r = Rng::new(0);
+    let xs: Vec<f64> = (0..4096).map(|_| r.normal()).collect();
+
+    // weight source: trained LeNet f1w if available, else synthetic
+    let ws: Vec<f64> = match WeightStore::load(&artifacts_dir(), ModelKind::Lenet) {
+        Ok(store) => store.get("f1w").unwrap().data()[..4096].iter().map(|&v| v as f64).collect(),
+        Err(_) => (0..4096).map(|_| r.normal() * 0.1).collect(),
+    };
+
+    println!("\n-- energy/accuracy vs digit budget (4096-MAC dot, Q32.24) --");
+    println!(
+        "{:<8} {:>10} {:>14} {:>12} {:>14}",
+        "digits", "mean PP", "pJ/multiply", "rms err", "gated rows"
+    );
+    for digits in [1usize, 2, 3, 4, 6, 8, usize::MAX] {
+        let cfg = QsmConfig::new(Format::Q32_24, digits);
+        let (_, st) = dot(cfg, &xs, &ws);
+        println!(
+            "{:<8} {:>10.2} {:>14.3} {:>12.3e} {:>14.2}",
+            if digits == usize::MAX { "exact".into() } else { digits.to_string() },
+            st.mean_pp(),
+            st.energy_pj / st.multiplies as f64,
+            st.rms_err(),
+            st.gated_rows as f64 / st.multiplies as f64,
+        );
+    }
+
+    println!("\n-- throughput --");
+    for digits in [2usize, 4, usize::MAX] {
+        let cfg = QsmConfig::new(Format::Q32_24, digits);
+        let res = run_bench(
+            &format!(
+                "qsm dot 4096 MACs (digits={})",
+                if digits == usize::MAX { "exact".into() } else { digits.to_string() }
+            ),
+            2,
+            20,
+            4096.0,
+            || dot(cfg, &xs, &ws),
+        );
+        println!("{}", res.report());
+    }
+
+    let res = run_bench("csd encode i64 x 4096", 2, 50, 4096.0, || {
+        ws.iter().map(|&w| csd::to_csd((w * (1 << 24) as f64) as i64).len()).sum::<usize>()
+    });
+    println!("{}", res.report());
+
+    let ws32: Vec<f32> = ws.iter().map(|&v| v as f32).collect();
+    let res = run_bench("csd_nonzero_histogram 4096 (fig11 kernel)", 2, 50, 4096.0, || {
+        csd_nonzero_histogram(&ws32, Format::Q16_14)
+    });
+    println!("{}", res.report());
+}

@@ -1,0 +1,60 @@
+//! Quantizer benchmarks: the encode-side cost of every assignment mode on
+//! real LeNet/ConvNet tensors (backs Figs. 7/8/10: each sweep point pays one
+//! of these quantization calls).
+
+use qsq_edge::bench::run_bench;
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::model::store::{artifacts_dir, WeightStore};
+use qsq_edge::quant::qsq::{quantize, AssignMode};
+use qsq_edge::util::prop::gen_weights;
+use qsq_edge::util::rng::Rng;
+
+fn main() {
+    println!("== bench_quantizer ==");
+    let dir = artifacts_dir();
+
+    // synthetic tensor, all modes
+    let mut r = Rng::new(0);
+    let w = gen_weights(&mut r, 256 * 120, 0.1);
+    for (mode, name) in [
+        (AssignMode::Nearest, "nearest"),
+        (AssignMode::NearestOpt, "nearest-opt"),
+        (AssignMode::Sigma { gamma: 0.5, delta: 2.0 }, "sigma-fixed"),
+        (AssignMode::SigmaSearch, "sigma-search (19x8 grid)"),
+    ] {
+        let res = run_bench(
+            &format!("quantize f1w-sized [256,120] {name}"),
+            2,
+            if matches!(mode, AssignMode::SigmaSearch) { 5 } else { 20 },
+            (256 * 120) as f64,
+            || quantize(&w, &[256, 120], 16, 4, mode).unwrap(),
+        );
+        println!("{}", res.report());
+    }
+
+    // real model tensors end-to-end (whole-model encode, the deploy cost)
+    for kind in [ModelKind::Lenet, ModelKind::Convnet] {
+        if let Ok(store) = WeightStore::load(&dir, kind) {
+            let tensors: Vec<_> = store
+                .meta
+                .quantized_tensors()
+                .map(|t| (store.get(t.name).unwrap().clone(), t.shape.clone()))
+                .collect();
+            let total: usize = tensors.iter().map(|(t, _)| t.len()).sum();
+            let res = run_bench(
+                &format!("encode whole {} (sigma-search)", kind.name()),
+                1,
+                5,
+                total as f64,
+                || {
+                    for (t, shape) in &tensors {
+                        let g = qsq_edge::quant::vectorize::Grouping::nearest_divisor(shape, 16)
+                            .unwrap();
+                        quantize(t.data(), shape, g, 4, AssignMode::SigmaSearch).unwrap();
+                    }
+                },
+            );
+            println!("{}", res.report());
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! PJRT inference benchmarks — the serving hot path behind Tables/Figures
+//! that report accuracy at system level, and the §Perf L1/L2 comparison:
+//! fused Pallas QSQ artifact vs XLA-native reference vs host fallback.
+
+use qsq_edge::bench::run_bench;
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::model::store::{artifacts_dir, Dataset, WeightStore};
+use qsq_edge::quant::qsq::{quantize, AssignMode};
+use qsq_edge::runtime::client::{ArgValue, Runtime};
+use qsq_edge::runtime::host;
+use qsq_edge::tensor::Tensor;
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench_runtime_infer: no artifacts (run `make artifacts`); skipping");
+        return;
+    }
+    println!("== bench_runtime_infer ==");
+    let mut rt = Runtime::new(&dir).unwrap();
+
+    for kind in [ModelKind::Lenet, ModelKind::Convnet] {
+        let store = WeightStore::load(&dir, kind).unwrap();
+        let test = Dataset::load(&dir, kind.dataset(), "test").unwrap();
+        let weights: Vec<Tensor> = store.ordered().into_iter().cloned().collect();
+        for b in [1usize, 32, 128] {
+            let exe = rt.load(&format!("{}_fwd_b{}", kind.name(), b)).unwrap();
+            let x = test.batch(0, b);
+            let mut args = vec![ArgValue::F32(x)];
+            args.extend(weights.iter().map(|t| ArgValue::F32(t.clone())));
+            let res = run_bench(
+                &format!("pjrt {}_fwd_b{}", kind.name(), b),
+                3,
+                if b == 128 { 10 } else { 30 },
+                b as f64,
+                || exe.run(&args).unwrap(),
+            );
+            println!("{}", res.report());
+        }
+        // host fallback for comparison (L3-only path)
+        let x = test.batch(0, 32);
+        let res = run_bench(
+            &format!("host {} fwd b32 (pure rust)", kind.name()),
+            1,
+            5,
+            32.0,
+            || host::forward(&store, &x).unwrap(),
+        );
+        println!("{}", res.report());
+    }
+
+    // fused Pallas QSQ vs XLA-native ref artifact (same math) — §Perf L1
+    println!("\n-- fused QSQ kernel: pallas interpret vs XLA-native lowering --");
+    let store = WeightStore::load(&dir, ModelKind::Lenet).unwrap();
+    let test = Dataset::load(&dir, "mnist", "test").unwrap();
+    let groups: &[(&str, usize)] = &[("c1w", 5), ("c2w", 6), ("f1w", 16), ("f2w", 8)];
+    let mut args = vec![ArgValue::F32(test.batch(0, 32))];
+    for &(name, g) in groups {
+        let tm = store.meta.tensor(name).unwrap().clone();
+        let qt =
+            quantize(store.get(name).unwrap().data(), &tm.shape, g, 4, AssignMode::Nearest)
+                .unwrap();
+        args.push(ArgValue::codes(vec![qt.k, qt.oc], &qt.codes));
+        args.push(ArgValue::F32(
+            Tensor::new(vec![qt.k / qt.group, qt.oc], qt.scalars.clone()).unwrap(),
+        ));
+    }
+    for name in ["c1b", "c2b", "f1b", "f2b", "f3w", "f3b"] {
+        args.push(ArgValue::F32(store.get(name).unwrap().clone()));
+    }
+    for artifact in ["lenet_fwd_qsq_b32", "lenet_fwd_qsq_ref_b32"] {
+        let exe = rt.load(artifact).unwrap();
+        let res = run_bench(artifact, 3, 20, 32.0, || exe.run(&args).unwrap());
+        println!("{}", res.report());
+    }
+
+    // standalone CSD matmul kernel artifact
+    let exe = rt.load("csd_matmul_demo").unwrap();
+    let mut r = qsq_edge::util::rng::Rng::new(0);
+    let x = Tensor::new(vec![256, 256], (0..256 * 256).map(|_| (r.normal() * 0.5) as f32).collect()).unwrap();
+    let w = Tensor::new(vec![256, 256], (0..256 * 256).map(|_| (r.normal() * 0.1) as f32).collect()).unwrap();
+    let csd_args = vec![ArgValue::F32(x), ArgValue::F32(w)];
+    let res = run_bench("csd_matmul_demo [256x256x256, 3 digits]", 3, 20, (256 * 256 * 256) as f64, || {
+        exe.run(&csd_args).unwrap()
+    });
+    println!("{}", res.report());
+}

@@ -1,0 +1,74 @@
+//! End-to-end serving benchmark: TCP + dynamic batching + PJRT, measured as
+//! a client sees it.  This is the system-level throughput/latency number the
+//! edge story rests on (§Perf L3).
+
+use std::time::{Duration, Instant};
+
+use qsq_edge::coordinator::server::{Client, Server, ServerConfig};
+use qsq_edge::data::RequestGen;
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::model::store::artifacts_dir;
+use qsq_edge::util::stats;
+
+fn drive(clients: usize, per_client: usize, delay: Duration) -> Option<(f64, Vec<f64>)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let srv = Server::start(dir, ServerConfig { max_delay: delay, ..Default::default() }).unwrap();
+    let port = srv.port;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|t| {
+            std::thread::spawn(move || -> Vec<f64> {
+                let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+                let mut gen = RequestGen::new(ModelKind::Lenet, t as u64);
+                (0..per_client)
+                    .map(|i| {
+                        let (img, _) = gen.next();
+                        let reply = c.infer((t * 100_000 + i) as u64, img.data()).unwrap();
+                        reply.get("latency_us").as_f64().unwrap_or(0.0) / 1e3
+                    })
+                    .collect()
+            })
+        })
+        .collect();
+    let mut lat = Vec::new();
+    for h in handles {
+        lat.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    srv.stop();
+    Some(((clients * per_client) as f64 / wall, lat))
+}
+
+fn main() {
+    println!("== bench_serving_e2e (LeNet, batch-32 artifact) ==");
+    println!(
+        "{:<26} {:>12} {:>10} {:>10} {:>10}",
+        "scenario", "req/s", "p50 ms", "p95 ms", "p99 ms"
+    );
+    for (clients, n, delay_ms) in [
+        (1usize, 200usize, 5u64),
+        (4, 100, 5),
+        (8, 100, 5),
+        (16, 50, 5),
+        (8, 100, 1),
+        (8, 100, 20),
+    ] {
+        match drive(clients, n, Duration::from_millis(delay_ms)) {
+            Some((rps, lat)) => println!(
+                "{:<26} {:>12.0} {:>10.2} {:>10.2} {:>10.2}",
+                format!("{clients} clients, {delay_ms} ms win"),
+                rps,
+                stats::percentile(&lat, 50.0),
+                stats::percentile(&lat, 95.0),
+                stats::percentile(&lat, 99.0),
+            ),
+            None => {
+                eprintln!("no artifacts; skipping");
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Design-space exploration (Fig.-10 style): sweep quality level phi and
+//! vector length N over both models; print (memory savings, energy
+//! efficiency, accuracy) per point plus the QSM multiplier trade-off.
+//!
+//! ```bash
+//! cargo run --release --example quality_sweep [-- --fast]
+//! ```
+
+use anyhow::Result;
+
+use qsq_edge::hw::energy;
+use qsq_edge::hw::fixedpoint::Format;
+use qsq_edge::hw::multiplier::{dot, QsmConfig};
+use qsq_edge::model::bits;
+use qsq_edge::model::meta::{ModelKind, ModelMeta};
+use qsq_edge::model::store::{artifacts_dir, Dataset, WeightStore};
+use qsq_edge::quant::qsq::AssignMode;
+use qsq_edge::repro;
+use qsq_edge::runtime::client::Runtime;
+use qsq_edge::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let limit = if fast { 512 } else { 2048 };
+    let dir = artifacts_dir();
+    let mut rt = Runtime::new(&dir)?;
+
+    for kind in [ModelKind::Lenet, ModelKind::Convnet] {
+        let store = WeightStore::load(&dir, kind)?;
+        let test = Dataset::load(&dir, kind.dataset(), "test")?;
+        let meta = ModelMeta::of(kind);
+        let names = repro::quantized_names(kind);
+        let base = repro::eval_store(&mut rt, &store, &test, limit)?;
+        println!("\n== {} (fp32 {:.2}%) ==", kind.name(), 100.0 * base);
+        println!(
+            "{:<5} {:<4} {:>10} {:>12} {:>10} {:>12}",
+            "phi", "N", "savings", "energy eff", "accuracy", "acc (opt-a)"
+        );
+        let ns: &[usize] = if fast { &[8, 32] } else { &[4, 8, 16, 32, 64] };
+        for &phi in &[1u32, 4] {
+            for &n in ns {
+                let b = bits::quantized_only_bits(&meta, phi, n);
+                let eff = energy::energy_efficiency(b.full_bits, b.encoded_bits);
+                let qs = repro::quantized_store(&store, &names, phi, n, AssignMode::SigmaSearch)?;
+                let acc = repro::eval_store(&mut rt, &qs, &test, limit)?;
+                let qo = repro::quantized_store(&store, &names, phi, n, AssignMode::NearestOpt)?;
+                let acc_o = repro::eval_store(&mut rt, &qo, &test, limit)?;
+                println!(
+                    "{:<5} {:<4} {:>9.2}% {:>11.2}% {:>9.2}% {:>11.2}%",
+                    phi,
+                    n,
+                    100.0 * b.savings(),
+                    100.0 * eff,
+                    100.0 * acc,
+                    100.0 * acc_o
+                );
+            }
+        }
+    }
+
+    // QSM multiplier micro design space: partial products vs error
+    println!("\n== quality scalable multiplier (Q32.24, 4096 random MACs) ==");
+    println!("{:<10} {:>12} {:>14} {:>12}", "digits", "mean PPs", "energy pJ/mul", "rms err");
+    let mut r = Rng::new(1);
+    let xs: Vec<f64> = (0..4096).map(|_| r.normal()).collect();
+    let ws: Vec<f64> = (0..4096).map(|_| r.normal() * 0.1).collect();
+    for digits in [1usize, 2, 3, 4, 6, usize::MAX] {
+        let cfg = QsmConfig::new(Format::Q32_24, digits);
+        let (_, st) = dot(cfg, &xs, &ws);
+        println!(
+            "{:<10} {:>12.2} {:>14.3} {:>12.3e}",
+            if digits == usize::MAX { "exact".into() } else { digits.to_string() },
+            st.mean_pp(),
+            st.energy_pj / st.multiplies as f64,
+            st.rms_err()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: load the trained LeNet, quantize it with QSQ, and compare
+//! accuracy / size before and after — the 60-second tour of the library.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use qsq_edge::codec;
+use qsq_edge::coordinator::deploy;
+use qsq_edge::device::QualityConfig;
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::model::store::{artifacts_dir, Dataset, WeightStore};
+use qsq_edge::quant::qsq::AssignMode;
+use qsq_edge::repro;
+use qsq_edge::runtime::client::Runtime;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    println!("== qsq-edge quickstart ==\n");
+
+    // 1. the PJRT runtime over the AOT artifacts (python is build-time only)
+    let mut rt = Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 2. trained weights + held-out eval set
+    let store = WeightStore::load(&dir, ModelKind::Lenet)?;
+    let test = Dataset::load(&dir, "mnist", "test")?;
+    let base = repro::eval_store(&mut rt, &store, &test, 1024)?;
+    println!("LeNet fp32 accuracy      : {:.2}%", 100.0 * base);
+
+    // 3. Quality Scalable Quantization at the paper's operating point
+    for phi in [1u32, 2, 4] {
+        let names = repro::quantized_names(ModelKind::Lenet);
+        let q = repro::quantized_store(&store, &names, phi, 16, AssignMode::SigmaSearch)?;
+        let acc = repro::eval_store(&mut rt, &q, &test, 1024)?;
+        println!("quantized phi={phi} accuracy  : {:.2}%", 100.0 * acc);
+    }
+
+    // 4. what actually ships: the QSQ container
+    let encoded = deploy::encode_store(
+        &store,
+        QualityConfig { phi: 4, group: 16 },
+        AssignMode::SigmaSearch,
+    )?;
+    let bytes = codec::encode_model(&encoded)?;
+    println!(
+        "\ncontainer: {} bytes on the wire ({} bits encoded vs {} bits fp32 = {:.2}% savings)",
+        bytes.len(),
+        encoded.encoded_bits(),
+        encoded.full_precision_bits(),
+        100.0 * (1.0 - encoded.encoded_bits() as f64 / encoded.full_precision_bits() as f64)
+    );
+    println!("\nnext: `cargo run --release --example edge_deployment` for the full story");
+    Ok(())
+}

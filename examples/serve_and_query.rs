@@ -1,0 +1,86 @@
+//! Serving demo: start the TCP inference server, hammer it with concurrent
+//! synthetic clients, and print the batching/latency behaviour.
+//!
+//! ```bash
+//! cargo run --release --example serve_and_query [-- --clients 8 --n 100]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use qsq_edge::coordinator::server::{Client, Server, ServerConfig};
+use qsq_edge::data::RequestGen;
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::model::store::artifacts_dir;
+use qsq_edge::util::cli::Args;
+use qsq_edge::util::stats;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let clients = args.get_usize("clients", 8);
+    let per_client = args.get_usize("n", 100);
+
+    println!("starting server (LeNet, batch 32, 5 ms window)...");
+    let srv = Server::start(
+        artifacts_dir(),
+        ServerConfig { max_delay: Duration::from_millis(5), ..Default::default() },
+    )?;
+    let port = srv.port;
+    println!("server up on 127.0.0.1:{port}; {clients} clients x {per_client} requests\n");
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|t| {
+            std::thread::spawn(move || -> (Vec<f64>, Vec<f64>) {
+                let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+                let mut gen = RequestGen::new(ModelKind::Lenet, t as u64);
+                let (mut lat, mut batches) = (Vec::new(), Vec::new());
+                for i in 0..per_client {
+                    let (img, _) = gen.next();
+                    let reply = c.infer((t * 100_000 + i) as u64, img.data()).unwrap();
+                    assert!(reply.get("error").is_null(), "{}", reply.to_json());
+                    lat.push(reply.get("latency_us").as_f64().unwrap() / 1e3);
+                    batches.push(reply.get("batch").as_f64().unwrap_or(1.0));
+                }
+                (lat, batches)
+            })
+        })
+        .collect();
+
+    let mut lat = Vec::new();
+    let mut batch_sizes = Vec::new();
+    for h in handles {
+        let (l, b) = h.join().unwrap();
+        lat.extend(l);
+        batch_sizes.extend(b);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = (clients * per_client) as f64;
+
+    println!("throughput : {:.0} req/s ({:.2} s wall)", total / wall, wall);
+    println!(
+        "latency ms : p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
+        stats::percentile(&lat, 50.0),
+        stats::percentile(&lat, 95.0),
+        stats::percentile(&lat, 99.0),
+        lat.iter().cloned().fold(0.0, f64::max)
+    );
+    println!(
+        "batching   : mean batch {:.1} (server: {} batches / {} requests)",
+        stats::mean(&batch_sizes),
+        srv.metrics.counter("batches"),
+        srv.metrics.counter("requests")
+    );
+    if let Some((mean, p50, p95, _, _)) = srv.metrics.latency_summary("infer_batch") {
+        println!(
+            "PJRT infer : mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms per batch",
+            mean * 1e3,
+            p50 * 1e3,
+            p95 * 1e3
+        );
+    }
+    println!("\nmetrics snapshot:\n{}", srv.metrics.snapshot().to_json());
+    srv.stop();
+    Ok(())
+}

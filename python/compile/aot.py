@@ -1,0 +1,253 @@
+"""AOT entry point: train -> quantize parity vectors -> lower HLO artifacts.
+
+Emits HLO **text** (NOT ``lowered.compile()`` / ``.serialize()``): jax >= 0.5
+serializes HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the rust ``xla`` crate) rejects; the HLO text
+parser reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs under ``artifacts/``:
+  *.hlo.txt                 — one per compiled entry point
+  manifest.json             — arg shapes/dtypes/order for the rust runtime
+  weights/<model>/*.npy     — trained f32 parameters
+  data/*.npy                — train/test splits
+  parity/*                  — quantizer parity vectors for rust unit tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile import qsq_lib
+from compile import train as trainer
+
+# Group (vector length N) per quantized LeNet tensor in the fused artifact.
+# Must divide K of the matmul layout: c1w K=25, c2w K=150, f1w K=256, f2w K=120.
+LENET_QSQ_GROUPS = {"c1w": 5, "c2w": 6, "f1w": 16, "f2w": 8}
+
+_DT = {"f32": jnp.float32, "i8": jnp.int8, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _qsq_arg_shapes(groups: dict) -> list:
+    """(name, shape, dtype) list for the QSQ-encoded LeNet backbone."""
+    out = []
+    for n in model.LENET_QUANTIZED:
+        shp = model.LENET_SHAPES[n]
+        k = int(np.prod(shp[:-1])) if len(shp) == 4 else shp[0]
+        oc = shp[-1]
+        g = groups[n]
+        out.append((f"{n}_codes", (k, oc), "i8"))
+        out.append((f"{n}_scalars", (k // g, oc), "f32"))
+    return out
+
+
+def artifact_defs() -> list:
+    """Every AOT entry point: (name, fn, [(argname, shape, dtype)], meta)."""
+    defs = []
+    lenet_w = [(n, model.LENET_SHAPES[n], "f32") for n in model.LENET_PARAM_NAMES]
+    convnet_w = [(n, model.CONVNET_SHAPES[n], "f32") for n in model.CONVNET_PARAM_NAMES]
+
+    for b in (1, 32, 128):
+        defs.append(
+            dict(
+                name=f"lenet_fwd_b{b}",
+                fn=lambda x, *p: model.lenet_fwd(x, p, backend="ref"),
+                args=[("x", (b, 28, 28, 1), "f32")] + lenet_w,
+                meta={"model": "lenet", "batch": b, "kind": "fwd"},
+            )
+        )
+        defs.append(
+            dict(
+                name=f"convnet_fwd_b{b}",
+                fn=lambda x, *p: model.convnet_fwd(x, p, backend="ref"),
+                args=[("x", (b, 32, 32, 3), "f32")] + convnet_w,
+                meta={"model": "convnet", "batch": b, "kind": "fwd"},
+            )
+        )
+
+    defs.append(
+        dict(
+            name="lenet_features_b128",
+            fn=lambda x, *p: model.lenet_features(x, p, backend="ref"),
+            args=[("x", (128, 28, 28, 1), "f32")] + lenet_w[:8],
+            meta={"model": "lenet", "batch": 128, "kind": "features"},
+        )
+    )
+    defs.append(
+        dict(
+            name="fc_step_b128",
+            fn=model.fc_step,
+            args=[
+                ("feat", (128, 84), "f32"),
+                ("y1h", (128, 10), "f32"),
+                ("w", (84, 10), "f32"),
+                ("b", (10,), "f32"),
+                ("lr", (), "f32"),
+            ],
+            meta={"model": "lenet", "batch": 128, "kind": "fc_step"},
+        )
+    )
+
+    qargs = _qsq_arg_shapes(LENET_QSQ_GROUPS)
+    fp_names = ["c1b", "c2b", "f1b", "f2b", "f3w", "f3b"]
+    fp_args = [(n, model.LENET_SHAPES[n], "f32") for n in fp_names]
+    nq = len(qargs)
+
+    def _mk_qsq(backend):
+        def fn(x, *rest):
+            q = rest[:nq]
+            fp = rest[nq:]
+            return model.lenet_fwd_qsq(x, q, fp, LENET_QSQ_GROUPS, backend=backend)
+
+        return fn
+
+    for backend, suffix in (("pallas", ""), ("ref", "_ref")):
+        defs.append(
+            dict(
+                name=f"lenet_fwd_qsq{suffix}_b32",
+                fn=_mk_qsq(backend),
+                args=[("x", (32, 28, 28, 1), "f32")] + qargs + fp_args,
+                meta={
+                    "model": "lenet",
+                    "batch": 32,
+                    "kind": "fwd_qsq",
+                    "backend": backend,
+                    "groups": LENET_QSQ_GROUPS,
+                    "quantized": model.LENET_QUANTIZED,
+                    "fp_args": fp_names,
+                },
+            )
+        )
+
+    defs.append(
+        dict(
+            name="csd_matmul_demo",
+            fn=lambda x, w: model.csd_dense_demo(x, w, digits=3, backend="pallas"),
+            args=[("x", (256, 256), "f32"), ("w", (256, 256), "f32")],
+            meta={"kind": "csd_demo", "digits": 3},
+        )
+    )
+    return defs
+
+
+def lower_all(out_dir: str, log=print) -> dict:
+    manifest = {}
+    for d in artifact_defs():
+        specs = [jax.ShapeDtypeStruct(shape, _DT[dt]) for (_, shape, dt) in d["args"]]
+        lowered = jax.jit(d["fn"]).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{d['name']}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(d["fn"], *specs)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        manifest[d["name"]] = {
+            "file": fname,
+            "args": [
+                {"name": n, "shape": list(s), "dtype": dt} for (n, s, dt) in d["args"]
+            ],
+            "outputs": [
+                {"shape": [int(v) for v in o.shape], "dtype": "f32"} for o in out_shapes
+            ],
+            "meta": d["meta"],
+        }
+        log(f"[aot] {d['name']}: {len(text)} chars, {len(d['args'])} args")
+    return manifest
+
+
+def write_parity(out_dir: str, log=print):
+    """Quantizer parity vectors: rust `quant::qsq` must reproduce exactly."""
+    pdir = os.path.join(out_dir, "parity")
+    os.makedirs(pdir, exist_ok=True)
+    rng = np.random.default_rng(42)
+    w = (rng.standard_normal((24, 8)) * 0.1).astype(np.float32)
+    np.save(os.path.join(pdir, "w.npy"), w)
+    index = []
+    for phi in (1, 2, 4):
+        for mode in ("sigma-search", "nearest", "nearest-opt"):
+            for group in (4, 8, 24):
+                qt = qsq_lib.quantize_matrix(w, group=group, phi=phi, mode=mode)
+                tag = f"phi{phi}_{mode.replace('-', '')}_g{group}"
+                np.save(os.path.join(pdir, f"codes_{tag}.npy"), qt.codes)
+                np.save(os.path.join(pdir, f"scalars_{tag}.npy"), qt.scalars)
+                np.save(os.path.join(pdir, f"decoded_{tag}.npy"), qt.decode())
+                index.append(
+                    {
+                        "tag": tag,
+                        "phi": phi,
+                        "mode": mode,
+                        "group": group,
+                        "gamma": qt.gamma,
+                        "delta": qt.delta,
+                        "error": qsq_lib.quantization_error(w, qt),
+                    }
+                )
+    with open(os.path.join(pdir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    log(f"[aot] parity vectors: {len(index)} cases")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--skip-train", action="store_true", help="reuse existing weights/data")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    metrics = {}
+    have_weights = os.path.exists(os.path.join(out, "weights", "convnet", "fcb.npy"))
+    if args.skip_train and have_weights:
+        print("[aot] --skip-train: reusing existing weights/data")
+        mpath = os.path.join(out, "manifest.json")
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                metrics = json.load(f).get("metrics", {})
+    else:
+        metrics = trainer.save_all(out)
+
+    manifest = lower_all(out)
+    write_parity(out)
+    payload = {
+        "version": 1,
+        "artifacts": manifest,
+        "metrics": metrics,
+        "models": {
+            "lenet": {
+                "params": model.LENET_PARAM_NAMES,
+                "shapes": {n: list(model.LENET_SHAPES[n]) for n in model.LENET_PARAM_NAMES},
+                "quantized": model.LENET_QUANTIZED,
+                "qsq_groups": LENET_QSQ_GROUPS,
+                "dataset": "mnist",
+            },
+            "convnet": {
+                "params": model.CONVNET_PARAM_NAMES,
+                "shapes": {n: list(model.CONVNET_SHAPES[n]) for n in model.CONVNET_PARAM_NAMES},
+                "quantized": model.CONVNET_QUANTIZED,
+                "dataset": "cifar",
+            },
+        },
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[aot] wrote manifest with {len(manifest)} artifacts to {out}")
+
+
+if __name__ == "__main__":
+    main()

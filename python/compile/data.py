@@ -1,0 +1,203 @@
+"""Deterministic synthetic datasets (DESIGN.md §2 substitution).
+
+The paper evaluates on MNIST and CIFAR-10, which are network downloads this
+environment does not have.  We substitute two seeded, procedurally generated
+datasets with identical tensor shapes and the same 10-class CNN task:
+
+- ``synth_mnist``  — 28x28x1 grayscale digits rendered from per-digit stroke
+  skeletons with random affine jitter, stroke width, and noise.
+- ``synth_cifar``  — 32x32x3 colour composites: 10 classes defined by
+  (colour family, shape, texture) with jitter and noise; several class pairs
+  share attributes so the task is non-trivial and quantization damage is
+  visible (the paper's ConvNet sits at 68–73 %).
+
+The rust side has an independent generator for *request* traffic
+(`rust/src/data/`); evaluation always uses the .npy sets written here so both
+languages score the same examples.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# synth-mnist: stroke skeletons in [0,1]^2, y axis points down.
+# ---------------------------------------------------------------------------
+
+
+def _arc(cx, cy, r, a0, a1, n=24):
+    t = np.linspace(a0, a1, n)
+    return np.stack([cx + r * np.cos(t), cy + r * np.sin(t)], axis=1)
+
+
+def _line(x0, y0, x1, y1, n=16):
+    t = np.linspace(0.0, 1.0, n)
+    return np.stack([x0 + (x1 - x0) * t, y0 + (y1 - y0) * t], axis=1)
+
+
+def _digit_strokes(d: int) -> np.ndarray:
+    """Polyline point cloud for digit d, as [P, 2] points in [0,1]^2."""
+    pi = np.pi
+    if d == 0:
+        return _arc(0.5, 0.5, 0.30, 0, 2 * pi, 48)
+    if d == 1:
+        return np.concatenate([_line(0.5, 0.15, 0.5, 0.85), _line(0.38, 0.28, 0.5, 0.15)])
+    if d == 2:
+        return np.concatenate(
+            [_arc(0.5, 0.33, 0.22, -pi, 0.25 * pi, 28), _line(0.65, 0.45, 0.3, 0.82), _line(0.3, 0.82, 0.72, 0.82)]
+        )
+    if d == 3:
+        return np.concatenate(
+            [_arc(0.48, 0.32, 0.18, -pi * 0.9, pi * 0.5, 24), _arc(0.48, 0.66, 0.20, -pi * 0.5, pi * 0.9, 24)]
+        )
+    if d == 4:
+        return np.concatenate(
+            [_line(0.62, 0.15, 0.62, 0.85), _line(0.62, 0.15, 0.3, 0.6), _line(0.3, 0.6, 0.78, 0.6)]
+        )
+    if d == 5:
+        return np.concatenate(
+            [_line(0.68, 0.18, 0.35, 0.18), _line(0.35, 0.18, 0.33, 0.47), _arc(0.5, 0.63, 0.2, -pi * 0.6, pi * 0.75, 28)]
+        )
+    if d == 6:
+        return np.concatenate([_arc(0.5, 0.62, 0.22, 0, 2 * pi, 32), _arc(0.62, 0.35, 0.35, pi * 0.6, pi * 1.05, 20)])
+    if d == 7:
+        return np.concatenate([_line(0.28, 0.18, 0.72, 0.18), _line(0.72, 0.18, 0.42, 0.85)])
+    if d == 8:
+        return np.concatenate([_arc(0.5, 0.33, 0.17, 0, 2 * pi, 28), _arc(0.5, 0.67, 0.21, 0, 2 * pi, 28)])
+    if d == 9:
+        return np.concatenate([_arc(0.5, 0.38, 0.22, 0, 2 * pi, 32), _line(0.7, 0.42, 0.6, 0.85)])
+    raise ValueError(d)
+
+
+_DIGITS = [_digit_strokes(d) for d in range(10)]
+_GRID28 = np.stack(np.meshgrid(np.arange(28), np.arange(28), indexing="ij"), axis=-1).reshape(-1, 2)
+
+
+def _render_digit(d: int, rng: np.random.Generator) -> np.ndarray:
+    pts = _DIGITS[d].copy()
+    # random affine: rotation, scale, shear, translation (about the center)
+    th = rng.uniform(-0.38, 0.38)
+    sx = rng.uniform(0.72, 1.22)
+    sy = rng.uniform(0.72, 1.22)
+    sh = rng.uniform(-0.22, 0.22)
+    rot = np.array([[np.cos(th), -np.sin(th)], [np.sin(th), np.cos(th)]])
+    aff = rot @ np.array([[sx, sh], [0.0, sy]])
+    pts = (pts - 0.5) @ aff.T + 0.5 + rng.uniform(-0.1, 0.1, size=2)
+    # random per-point wobble (stroke irregularity) and dropout (broken strokes)
+    pts = pts + rng.normal(0, 0.012, pts.shape)
+    keep = rng.random(len(pts)) > 0.12
+    if keep.sum() > 8:
+        pts = pts[keep]
+    pix = pts * 27.0  # to pixel coords (x right, y down) -> grid is (row, col)
+    pix = pix[:, ::-1]
+    width = rng.uniform(0.55, 1.5)
+    d2 = ((_GRID28[:, None, :] - pix[None, :, :]) ** 2).sum(axis=2)
+    img = np.exp(-d2.min(axis=1) / (2.0 * width**2)).reshape(28, 28)
+    # distractor clutter: a few random blobs
+    for _ in range(rng.integers(0, 3)):
+        cy, cx = rng.uniform(2, 26, 2)
+        r = rng.uniform(0.6, 1.4)
+        dd = ((_GRID28[:, 0] - cy) ** 2 + (_GRID28[:, 1] - cx) ** 2).reshape(28, 28)
+        img = np.maximum(img, rng.uniform(0.3, 0.7) * np.exp(-dd / (2 * r * r)))
+    contrast = rng.uniform(0.45, 1.0)
+    img = np.clip(img * contrast + rng.normal(0, 0.13, (28, 28)), 0.0, 1.0)
+    return img.astype(np.float32)
+
+
+def synth_mnist(n: int, seed: int = 0):
+    """n images -> (x [n,28,28,1] f32 in [0,1], y [n] int32)."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 10, size=n).astype(np.int32)
+    x = np.stack([_render_digit(int(d), rng) for d in y])[..., None]
+    return x.astype(np.float32), y
+
+
+# ---------------------------------------------------------------------------
+# synth-cifar: (colour, shape, texture) composites.
+# ---------------------------------------------------------------------------
+
+# class -> (rgb base colour, shape, texture)
+_CIFAR_CLASSES = [
+    ((0.85, 0.15, 0.15), "circle", "flat"),  # 0 red circle
+    ((0.95, 0.35, 0.10), "circle", "flat"),  # 1 orange circle (confusable w/ 0)
+    ((0.15, 0.70, 0.20), "square", "flat"),  # 2 green square
+    ((0.15, 0.45, 0.85), "square", "stripes"),  # 3 blue striped square
+    ((0.80, 0.20, 0.80), "triangle", "flat"),  # 4 magenta triangle
+    ((0.90, 0.85, 0.20), "triangle", "checker"),  # 5 yellow checker triangle
+    ((0.20, 0.80, 0.80), "ring", "flat"),  # 6 cyan ring
+    ((0.55, 0.30, 0.85), "ring", "stripes"),  # 7 purple striped ring (confusable w/ 6)
+    ((0.90, 0.90, 0.90), "cross", "flat"),  # 8 white cross
+    ((0.55, 0.55, 0.55), "cross", "checker"),  # 9 gray checker cross
+]
+
+_GRID32 = np.stack(np.meshgrid(np.linspace(0, 1, 32), np.linspace(0, 1, 32), indexing="ij"), axis=-1)
+
+
+def _shape_mask(shape: str, rng: np.random.Generator) -> np.ndarray:
+    cy, cx = 0.5 + rng.uniform(-0.12, 0.12, 2)
+    r = rng.uniform(0.2, 0.3)
+    yy, xx = _GRID32[..., 0], _GRID32[..., 1]
+    if shape == "circle":
+        return (((yy - cy) ** 2 + (xx - cx) ** 2) < r * r).astype(np.float32)
+    if shape == "ring":
+        d2 = (yy - cy) ** 2 + (xx - cx) ** 2
+        return ((d2 < r * r) & (d2 > (0.55 * r) ** 2)).astype(np.float32)
+    if shape == "square":
+        return ((np.abs(yy - cy) < r) & (np.abs(xx - cx) < r)).astype(np.float32)
+    if shape == "triangle":
+        return ((yy - cy + r > 0) & (yy - cy < 2 * (xx - cx) + r) & (yy - cy < -2 * (xx - cx) + r)).astype(np.float32)
+    if shape == "cross":
+        w = 0.4 * r
+        return ((np.abs(yy - cy) < w) & (np.abs(xx - cx) < r) | (np.abs(xx - cx) < w) & (np.abs(yy - cy) < r)).astype(
+            np.float32
+        )
+    raise ValueError(shape)
+
+
+def _texture(tex: str, rng: np.random.Generator) -> np.ndarray:
+    yy, xx = _GRID32[..., 0], _GRID32[..., 1]
+    if tex == "flat":
+        return np.ones((32, 32), np.float32)
+    if tex == "stripes":
+        f = rng.uniform(8, 12)
+        ph = rng.uniform(0, 2 * np.pi)
+        return (0.6 + 0.4 * np.sign(np.sin(2 * np.pi * f * xx + ph))).astype(np.float32)
+    if tex == "checker":
+        f = rng.uniform(4, 6)
+        return (0.6 + 0.4 * np.sign(np.sin(2 * np.pi * f * xx) * np.sin(2 * np.pi * f * yy))).astype(np.float32)
+    raise ValueError(tex)
+
+
+def _render_cifar(cls: int, rng: np.random.Generator) -> np.ndarray:
+    rgb, shape, tex = _CIFAR_CLASSES[cls]
+    # busy background: gradient + random colour blobs (clutter)
+    g0 = rng.uniform(0.0, 0.5, 3)
+    g1 = rng.uniform(0.0, 0.5, 3)
+    t = _GRID32[..., 0:1]
+    bg = g0 * (1 - t) + g1 * t
+    yy, xx = _GRID32[..., 0], _GRID32[..., 1]
+    for _ in range(rng.integers(1, 4)):
+        cy, cx = rng.uniform(0, 1, 2)
+        r = rng.uniform(0.08, 0.2)
+        blob = np.exp(-((yy - cy) ** 2 + (xx - cx) ** 2) / (2 * r * r))[..., None]
+        bg = bg * (1 - 0.6 * blob) + 0.6 * blob * rng.uniform(0.1, 0.8, 3)
+    mask = _shape_mask(shape, rng)[..., None]
+    texm = _texture(tex, rng)[..., None]
+    # heavy colour jitter pushes the confusable class pairs together
+    colour = np.clip(np.array(rgb) * rng.uniform(0.6, 1.3, 3) + rng.uniform(-0.12, 0.12, 3), 0, 1.3)
+    strength = rng.uniform(0.55, 1.0)  # low-contrast foregrounds
+    img = bg * (1 - strength * mask) + strength * mask * texm * colour
+    # occlusion bar
+    if rng.random() < 0.4:
+        o0 = rng.integers(0, 26)
+        img[o0 : o0 + rng.integers(3, 7), :, :] *= rng.uniform(0.2, 0.6)
+    img = img + rng.normal(0, 0.16, (32, 32, 3))
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def synth_cifar(n: int, seed: int = 0):
+    """n images -> (x [n,32,32,3] f32 in [0,1], y [n] int32)."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 10, size=n).astype(np.int32)
+    x = np.stack([_render_cifar(int(c), rng) for c in y])
+    return x.astype(np.float32), y

@@ -1,0 +1,65 @@
+"""L1 Pallas tiled matmul — the conv/dense compute hot-spot.
+
+Convolutions in this system are im2col + matmul (patch extraction is cheap
+data movement and stays in the L2 graph; the FLOPs live here).  The kernel is
+a classic MXU-shaped tiled matmul: grid over (M/bm, N/bn, K/bk) with an
+accumulating output block, f32 accumulation.
+
+interpret=True is mandatory on this image (CPU PJRT); block shapes are chosen
+for the TPU VMEM/MXU discussion in DESIGN.md §8 but the correctness contract
+(vs ``ref.matmul``) is backend-independent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 128,
+) -> jax.Array:
+    """Tiled f32 matmul x [M,K] @ w [K,N] -> [M,N] (zero-padded to tiles)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+
+    bm_ = min(bm, _round_up(m, 8))
+    bk_ = min(bk, _round_up(k, 8))
+    bn_ = min(bn, _round_up(n, 8))
+    mp, kp, np_ = _round_up(m, bm_), _round_up(k, bk_), _round_up(n, bn_)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]

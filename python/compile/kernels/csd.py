@@ -1,0 +1,80 @@
+"""L1 Pallas kernel for the Quality Scalable Multiplier (value model).
+
+The paper's QSM converts the multiplicand to Canonic Signed Digit form and
+truncates least-significant non-zero digits, trading partial products (energy)
+for accuracy.  A TPU MXU exposes no bit-level multiplier, so the kernel
+models the *value* effect: project each weight onto its k-term signed-power-
+of-two expansion (greedy, most significant digit first) before the matmul.
+The bit-accurate partial-product/energy accounting is the rust ``hw::csd`` /
+``hw::multiplier`` simulator; rust tests pin its value semantics to this
+kernel's.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _csd_approx_block(w: jax.Array, digits: int) -> jax.Array:
+    out = jnp.zeros_like(w)
+    r = w
+    for _ in range(digits):
+        mag = jnp.abs(r)
+        nz = mag > 1e-30
+        e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-30) * (4.0 / 3.0)))
+        term = jnp.where(nz, jnp.sign(r) * jnp.exp2(e), 0.0)
+        out = out + term
+        r = r - term
+    return out
+
+
+def _csd_mm_kernel(x_ref, w_ref, o_ref, *, digits: int):
+    w = _csd_approx_block(w_ref[...], digits)
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def csd_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    digits: int,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+) -> jax.Array:
+    """x [M,K] @ csd_approx(w [K,N], digits) -> [M,N].
+
+    K stays whole per grid step (weights decoded once per tile), grid walks
+    (M/bm, N/bn) — same schedule as the fused QSQ kernel.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+
+    bm_ = min(bm, _round_up(m, 8))
+    bn_ = min(bn, _round_up(n, 8))
+    mp, np_, kp = _round_up(m, bm_), _round_up(n, bn_), _round_up(k, 8)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // bm_, np_ // bn_)
+    out = pl.pallas_call(
+        functools.partial(_csd_mm_kernel, digits=digits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn_), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]

@@ -1,0 +1,125 @@
+"""L1 Pallas kernels for Quality Scalable Quantization (QSQ).
+
+Two kernels:
+
+- ``qsq_decode``  — the on-chip shift-and-scale decoder (paper Table II) as an
+  elementwise kernel: 3-bit codes (int8 carriers) + one f32 scalar per group
+  of N weights -> approximate f32 weights.
+- ``qsq_dense``   — the flagship *fused* kernel: decode a weight tile inside
+  VMEM and immediately feed the MXU matmul.  This is the TPU analog of the
+  paper's decode-on-load ASIC datapath: HBM traffic is codes + scalars, never
+  full-precision weights.  BlockSpec expresses the HBM<->VMEM schedule.
+
+Both MUST run with ``interpret=True``: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _decode_block(codes_blk: jax.Array, scalars_blk: jax.Array, group: int) -> jax.Array:
+    """Shift-and-scale decode of one VMEM-resident block (Table II).
+
+    codes_blk  int8 [K, N] — Table-II codes.
+    scalars_blk f32 [K//group, N] — per-group alpha.
+
+    Computed arithmetically (shift = exp2, invert = sign flip) rather than via
+    a LUT gather: pallas kernels may not capture array constants, and this is
+    also the faithful model of the shift-and-scale decoder hardware.
+    """
+    c = codes_blk.astype(jnp.int32)
+    neg = c >= 4
+    shift = jnp.where(neg, c - 4, c - 1).astype(jnp.float32)
+    mag = jnp.exp2(shift)
+    zero = (c == 0) | (c == 7)
+    lvl = jnp.where(zero, 0.0, jnp.where(neg, -mag, mag))
+    alpha = jnp.repeat(scalars_blk, group, axis=0)
+    return lvl * alpha
+
+
+def _qsq_decode_kernel(codes_ref, scalars_ref, o_ref, *, group: int):
+    o_ref[...] = _decode_block(codes_ref[...], scalars_ref[...], group)
+
+
+def qsq_decode(codes: jax.Array, scalars: jax.Array, group: int) -> jax.Array:
+    """Decode codes [K, N] + scalars [K//group, N] -> weights f32 [K, N].
+
+    Single-block kernel (weight tensors in this system are far below VMEM
+    capacity; the fused qsq_dense kernel is the tiled one).
+    """
+    k, n = codes.shape
+    assert k % group == 0, f"K={k} not divisible by group={group}"
+    assert scalars.shape == (k // group, n), (scalars.shape, (k // group, n))
+    return pl.pallas_call(
+        functools.partial(_qsq_decode_kernel, group=group),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.float32),
+        interpret=True,
+    )(codes, scalars)
+
+
+def _qsq_dense_kernel(x_ref, codes_ref, scalars_ref, o_ref, *, group: int):
+    """Fused decode+matmul over one (bm, K)x(K, bn) tile pair.
+
+    The full K (contraction) dimension is resident per grid step, so each
+    weight tile is decoded exactly once; the grid walks (M/bm, N/bn).
+    """
+    w = _decode_block(codes_ref[...], scalars_ref[...], group)
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def qsq_dense(
+    x: jax.Array,
+    codes: jax.Array,
+    scalars: jax.Array,
+    group: int,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+) -> jax.Array:
+    """Fused decode + matmul: x [M,K] @ decode(codes [K,N]) -> [M,N].
+
+    Tiles over (M, N); K stays whole per step so scalar groups never straddle
+    a block boundary.  Padding uses code 0 (decodes to exactly 0.0), so the
+    padded contraction is a no-op — an invariant the pytest suite checks.
+    """
+    m, k = x.shape
+    k2, n = codes.shape
+    assert k == k2 and k % group == 0
+    assert scalars.shape == (k // group, n)
+
+    mp = _round_up(m, min(bm, _round_up(m, 8)))
+    np_ = _round_up(n, min(bn, _round_up(n, 8)))
+    bm_ = min(bm, mp)
+    bn_ = min(bn, np_)
+    mp = _round_up(m, bm_)
+    np_ = _round_up(n, bn_)
+    kp = _round_up(k, math.lcm(group, 8))
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    cp = jnp.pad(codes, ((0, kp - k), (0, np_ - n)))  # pad code = 0 -> decodes to 0
+    sp = jnp.pad(scalars, ((0, (kp - k) // group), (0, np_ - n)))
+
+    grid = (mp // bm_, np_ // bn_)
+    out = pl.pallas_call(
+        functools.partial(_qsq_dense_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn_), lambda i, j: (0, j)),
+            pl.BlockSpec((kp // group, bn_), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, cp, sp)
+    return out[:m, :n]

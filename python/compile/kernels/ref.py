@@ -1,0 +1,115 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness signal).
+
+Every kernel in this package has a mathematically identical implementation
+here, written with plain `jax.numpy` / `lax` ops.  pytest (with hypothesis
+shape sweeps) asserts `assert_allclose(kernel(...), ref(...))`.
+
+The same functions double as the *training-time* compute path: interpret-mode
+Pallas is orders of magnitude slower than XLA-native ops on CPU, so
+`model.py` uses these refs during training and the Pallas kernels in the AOT
+artifacts — the tests here are what make that swap sound.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Decode LUT, Table II of the paper.  Code 0..7 -> level multiplier.
+# 0:0  1:+1  2:+2  3:+4  4:-1  5:-2  6:-4  7:unused (decodes to 0)
+DECODE_LUT = jnp.array([0.0, 1.0, 2.0, 4.0, -1.0, -2.0, -4.0, 0.0], dtype=jnp.float32)
+
+# Level multipliers available at each quality setting phi.
+PHI_LEVELS = {1: (0.0, 1.0), 2: (0.0, 1.0, 2.0), 4: (0.0, 1.0, 2.0, 4.0)}
+
+
+def qsq_decode(codes: jax.Array, scalars: jax.Array, group: int) -> jax.Array:
+    """Decode 3-bit QSQ codes to approximate weights.
+
+    codes   int8/int32 [K, ...]: Table-II codes, grouped along axis 0 in
+            contiguous runs of `group` rows sharing one scalar.
+    scalars f32 [K/group, ...]: per-group full-precision scalar (alpha).
+    Returns f32 array shaped like `codes`.
+    """
+    k = codes.shape[0]
+    assert k % group == 0, f"leading dim {k} not divisible by group {group}"
+    lvl = DECODE_LUT[codes.astype(jnp.int32)]
+    alpha = jnp.repeat(scalars, group, axis=0)
+    return lvl * alpha.astype(jnp.float32)
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain f32 matmul oracle for the tiled Pallas matmul."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def qsq_dense(x: jax.Array, codes: jax.Array, scalars: jax.Array, group: int) -> jax.Array:
+    """Fused decode + matmul oracle: x [B,IN] @ decode(codes [IN,OUT])."""
+    return matmul(x, qsq_decode(codes, scalars, group))
+
+
+def csd_approx(w: jax.Array, digits: int) -> jax.Array:
+    """Project each value onto its `digits`-term signed-power-of-two expansion.
+
+    Greedy most-significant-first expansion: at each step subtract the nearest
+    signed power of two of the residual.  This is the value-level model of the
+    paper's quality-scalable CSD multiplier (truncate least-significant
+    non-zero digits -> fewer partial products).  The bit-accurate integer CSD
+    (with the non-adjacency property and partial-product counting) lives in
+    the rust `hw::csd` module; tests there check agreement with this value
+    model.
+    """
+    out = jnp.zeros_like(w)
+    r = w
+    for _ in range(digits):
+        mag = jnp.abs(r)
+        nz = mag > 1e-30
+        # nearest power of two: 2^floor(log2(4/3 * |r|))
+        e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-30) * (4.0 / 3.0)))
+        term = jnp.where(nz, jnp.sign(r) * jnp.exp2(e), 0.0)
+        out = out + term
+        r = r - term
+    return out
+
+
+def csd_matmul(x: jax.Array, w: jax.Array, digits: int) -> jax.Array:
+    """Approximate matmul with the multiplicand (weights) CSD-truncated."""
+    return matmul(x, csd_approx(w, digits))
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1):
+    """Extract VALID conv patches -> ([B*H'*W', kh*kw*C], H', W').
+
+    Patch element ordering is (di, dj, c) — row-major over the kernel window,
+    channel fastest — matching `w.reshape(kh*kw*C, OC)` for w [kh,kw,C,OC].
+    """
+    b, h, w_, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w_ - kw) // stride + 1
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            sl = x[:, di : di + oh * stride : stride, dj : dj + ow * stride : stride, :]
+            cols.append(sl)
+    # [B, H', W', kh*kw, C] -> [B*H'*W', kh*kw*C]
+    patches = jnp.stack(cols, axis=3)
+    return patches.reshape(b * oh * ow, kh * kw * c), oh, ow
+
+
+def conv2d_nhwc(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """VALID conv oracle, NHWC x [B,H,W,C] * w [kh,kw,C,OC] -> [B,H',W',OC].
+
+    Implemented as im2col + matmul so the patch ordering is *identical* to the
+    Pallas path; cross-checked against lax.conv_general_dilated in tests.
+    """
+    patches, oh, ow = im2col(x, w.shape[0], w.shape[1], stride)
+    b = x.shape[0]
+    wf = w.reshape(-1, w.shape[3])
+    out = matmul(patches, wf)
+    return out.reshape(b, oh, ow, w.shape[3])
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 max-pool, stride 2, NHWC. H and W must be even."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))

@@ -1,0 +1,198 @@
+"""L2: model forward graphs (LeNet-5, ConvNet-4) calling the L1 kernels.
+
+Every forward takes the parameters *as arguments* so the rust coordinator can
+feed full-precision, decoded-approximate, or CSD-projected weights into the
+same compiled artifact.  The ``backend`` flag selects the compute path:
+
+  backend="ref"    — pure-jnp oracles (training + tests; fast under XLA CPU)
+  backend="pallas" — the L1 Pallas kernels (AOT artifacts; interpret=True)
+
+Both paths are pinned equal by pytest, so the swap is sound (see
+kernels/ref.py docstring).
+
+Parameter layouts (NHWC, VALID convs; conv weights [kh,kw,C,OC]):
+
+  LeNet-5 (28x28x1 -> 10), params = 10 tensors:
+    c1w[5,5,1,6]  c1b[6]   -> relu -> pool2    (24->12)
+    c2w[5,5,6,16] c2b[16]  -> relu -> pool2    (8->4)
+    f1w[256,120]  f1b[120] -> relu
+    f2w[120,84]   f2b[84]  -> relu             (= "features")
+    f3w[84,10]    f3b[10]                      (full-precision head)
+
+  ConvNet-4 (32x32x3 -> 10), params = 10 tensors, SAME 3x3 convs:
+    k1[3,3,3,32] b1 -> relu -> pool (32->16)
+    k2[3,3,32,32] b2 -> relu -> pool (16->8)
+    k3[3,3,32,64] b3 -> relu -> pool (8->4)
+    k4[3,3,64,64] b4 -> relu -> pool (4->2)
+    fcw[256,10] fcb
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import conv as kconv
+from compile.kernels import csd as kcsd
+from compile.kernels import qsq as kqsq
+from compile.kernels import ref
+
+LENET_PARAM_NAMES = ["c1w", "c1b", "c2w", "c2b", "f1w", "f1b", "f2w", "f2b", "f3w", "f3b"]
+LENET_SHAPES = {
+    "c1w": (5, 5, 1, 6),
+    "c1b": (6,),
+    "c2w": (5, 5, 6, 16),
+    "c2b": (16,),
+    "f1w": (256, 120),
+    "f1b": (120,),
+    "f2w": (120, 84),
+    "f2b": (84,),
+    "f3w": (84, 10),
+    "f3b": (10,),
+}
+CONVNET_PARAM_NAMES = ["k1", "b1", "k2", "b2", "k3", "b3", "k4", "b4", "fcw", "fcb"]
+CONVNET_SHAPES = {
+    "k1": (3, 3, 3, 32),
+    "b1": (32,),
+    "k2": (3, 3, 32, 32),
+    "b2": (32,),
+    "k3": (3, 3, 32, 64),
+    "b3": (64,),
+    "k4": (3, 3, 64, 64),
+    "b4": (64,),
+    "fcw": (256, 10),
+    "fcb": (10,),
+}
+# Tensors the QSQ pipeline quantizes (heads/biases stay fp32 — DESIGN.md §6).
+LENET_QUANTIZED = ["c1w", "c2w", "f1w", "f2w"]
+CONVNET_QUANTIZED = ["k1", "k2", "k3", "k4"]
+
+
+def _mm(backend: str):
+    return kconv.matmul if backend == "pallas" else ref.matmul
+
+
+def _conv2d(x, w, backend: str):
+    patches, oh, ow = ref.im2col(x, w.shape[0], w.shape[1])
+    out = _mm(backend)(patches, w.reshape(-1, w.shape[3]))
+    return out.reshape(x.shape[0], oh, ow, w.shape[3])
+
+
+def _conv2d_same(x, w, backend: str):
+    p = w.shape[0] // 2
+    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+    return _conv2d(xp, w, backend)
+
+
+def _conv2d_qsq(x, codes, scalars, group, kh, kw, c, oc, backend: str):
+    """Conv with QSQ-encoded weights: im2col then the fused decode+matmul."""
+    patches, oh, ow = ref.im2col(x, kh, kw)
+    if backend == "pallas":
+        out = kqsq.qsq_dense(patches, codes, scalars, group)
+    else:
+        out = ref.qsq_dense(patches, codes, scalars, group)
+    return out.reshape(x.shape[0], oh, ow, oc)
+
+
+def lenet_fwd(x, params, backend: str = "ref"):
+    """LeNet-5 forward: x [B,28,28,1] + 10 params -> logits [B,10]."""
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b, f3w, f3b = params
+    h = jax.nn.relu(_conv2d(x, c1w, backend) + c1b)
+    h = ref.maxpool2(h)
+    h = jax.nn.relu(_conv2d(h, c2w, backend) + c2b)
+    h = ref.maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(_mm(backend)(h, f1w) + f1b)
+    h = jax.nn.relu(_mm(backend)(h, f2w) + f2b)
+    return _mm(backend)(h, f3w) + f3b
+
+
+def lenet_features(x, params, backend: str = "ref"):
+    """Backbone up to the 84-d feature layer (input of the fp32 head)."""
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params[:8]
+    h = jax.nn.relu(_conv2d(x, c1w, backend) + c1b)
+    h = ref.maxpool2(h)
+    h = jax.nn.relu(_conv2d(h, c2w, backend) + c2b)
+    h = ref.maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(_mm(backend)(h, f1w) + f1b)
+    return jax.nn.relu(_mm(backend)(h, f2w) + f2b)
+
+
+def lenet_fwd_qsq(x, qargs, fp_params, groups, backend: str = "ref"):
+    """LeNet with QSQ-encoded backbone weights, decoded in-graph (L1 kernel).
+
+    qargs: (c1_codes, c1_scal, c2_codes, c2_scal, f1_codes, f1_scal,
+            f2_codes, f2_scal) in matmul layout.
+    fp_params: (c1b, c2b, f1b, f2b, f3w, f3b) full-precision leftovers.
+    groups: dict name->group length (static).
+    """
+    c1c, c1s, c2c, c2s, f1c, f1s, f2c, f2s = qargs
+    c1b, c2b, f1b, f2b, f3w, f3b = fp_params
+    qd = kqsq.qsq_dense if backend == "pallas" else ref.qsq_dense
+    h = jax.nn.relu(_conv2d_qsq(x, c1c, c1s, groups["c1w"], 5, 5, 1, 6, backend) + c1b)
+    h = ref.maxpool2(h)
+    h = jax.nn.relu(_conv2d_qsq(h, c2c, c2s, groups["c2w"], 5, 5, 6, 16, backend) + c2b)
+    h = ref.maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(qd(h, f1c, f1s, groups["f1w"]) + f1b)
+    h = jax.nn.relu(qd(h, f2c, f2s, groups["f2w"]) + f2b)
+    mm = _mm(backend)
+    return mm(h, f3w) + f3b
+
+
+def convnet_fwd(x, params, backend: str = "ref"):
+    """ConvNet-4 forward: x [B,32,32,3] + 10 params -> logits [B,10]."""
+    k1, b1, k2, b2, k3, b3, k4, b4, fcw, fcb = params
+    h = x
+    for kw_, bw_ in ((k1, b1), (k2, b2), (k3, b3), (k4, b4)):
+        h = jax.nn.relu(_conv2d_same(h, kw_, backend) + bw_)
+        h = ref.maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    return _mm(backend)(h, fcw) + fcb
+
+
+def csd_dense_demo(x, w, digits: int = 3, backend: str = "pallas"):
+    """Standalone CSD approximate-multiplier matmul (bench artifact)."""
+    if backend == "pallas":
+        return kcsd.csd_matmul(x, w, digits)
+    return ref.csd_matmul(x, w, digits)
+
+
+# ---------------------------------------------------------------------------
+# Loss / training-step graphs
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, y1h):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(y1h * logp, axis=1))
+
+
+def fc_step(feat, y1h, w, b, lr):
+    """One SGD step on the fp32 head only (paper Table III: FC fine-tune).
+
+    feat [B,84], y1h [B,10], w [84,10], b [10], lr scalar
+    -> (loss, w', b').  AOT-compiled; the rust coordinator drives the loop.
+    """
+
+    def loss_fn(wb):
+        return softmax_xent(ref.matmul(feat, wb[0]) + wb[1], y1h)
+
+    loss, g = jax.value_and_grad(loss_fn)((w, b))
+    return loss, w - lr * g[0], b - lr * g[1]
+
+
+def init_params(shapes: dict, names, seed: int = 0):
+    """He-init parameters in declaration order."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for n in names:
+        shp = shapes[n]
+        key, sub = jax.random.split(key)
+        if len(shp) == 1:
+            out.append(jnp.zeros(shp, jnp.float32))
+        else:
+            fan_in = int(jnp.prod(jnp.array(shp[:-1])))
+            out.append(jax.random.normal(sub, shp, jnp.float32) * jnp.sqrt(2.0 / fan_in))
+    return out

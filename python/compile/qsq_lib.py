@@ -1,0 +1,252 @@
+"""Quality Scalable Quantization — numpy implementation (eqs. 5–10).
+
+This is the build-time quantizer used by ``aot.py`` to produce the quantized
+artifacts and by pytest as a mirror of the rust runtime quantizer
+(``rust/src/quant/qsq.rs``).  Both sides share the layout convention below
+and are pinned against each other through parity vectors written to
+``artifacts/parity/``.
+
+Layout convention (shared with rust — keep in sync!):
+  * A weight tensor is quantized in its *matmul layout* ``[K, OC]`` (conv
+    weights ``[kh,kw,C,OC]`` are reshaped to ``[kh*kw*C, OC]`` with the
+    (di, dj, c) row ordering of ``ref.im2col``).
+  * Grouping is along K in contiguous runs of ``group`` rows per output
+    column: vector ``v = w[k0:k0+group, oc]``.  With ``group == C`` this is
+    exactly the paper's channel-wise vector (Fig. 5); ``group == K`` is
+    filter-wise (Fig. 6).
+  * Codes are Table-II values 0..6 stored one per int8; ``scalars`` has shape
+    ``[K/group, OC]`` (f32).
+
+Canonicalized assignment rule (DESIGN.md §6): per-sign MLE sigma, thresholds
+(gamma*sigma, sigma, delta*sigma), levels limited by phi in {1,2,4};
+(gamma, delta) found by exhaustive grid search minimizing eq. 5, per tensor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import numpy as np
+
+# Table II: code -> level multiplier (index = code).
+LUT = np.array([0.0, 1.0, 2.0, 4.0, -1.0, -2.0, -4.0, 0.0], dtype=np.float32)
+# level magnitude -> positive code
+_CODE_OF_LEVEL = {0.0: 0, 1.0: 1, 2.0: 2, 4.0: 3}
+
+GAMMA_GRID = np.round(np.arange(0.05, 1.00, 0.05), 4)
+DELTA_GRID = np.array([1.1, 1.25, 1.5, 1.75, 2.0, 2.25, 2.5, 3.0])
+
+
+def levels_for_phi(phi: int) -> np.ndarray:
+    if phi == 1:
+        return np.array([0.0, 1.0], dtype=np.float32)
+    if phi == 2:
+        return np.array([0.0, 1.0, 2.0], dtype=np.float32)
+    if phi == 4:
+        return np.array([0.0, 1.0, 2.0, 4.0], dtype=np.float32)
+    raise ValueError(f"phi must be in {{1,2,4}}, got {phi}")
+
+
+def code_bits(phi: int) -> int:
+    """Eq. 8 (canonicalized): bits for one weight's code at quality phi.
+
+    Level count is 2*(1+log2(phi))+1 (zero plus +/- each power of two up to
+    phi); bits = ceil(log2(levels)).  The paper's printed eq. 8 puts the +1
+    outside the log and yields 4 bits for phi=4, contradicting its own
+    "3-bit encoding" claim — we keep the version consistent with Table II:
+    phi=1 -> 2 bits, phi=2 -> 3 bits, phi=4 -> 3 bits.
+    """
+    levels = 2 * (1 + int(np.log2(phi))) + 1
+    return int(np.ceil(np.log2(levels)))
+
+
+@dataclasses.dataclass
+class QuantizedTensor:
+    """One quantized weight tensor (matmul layout)."""
+
+    codes: np.ndarray  # int8 [K, OC], Table-II codes
+    scalars: np.ndarray  # f32 [K/group, OC]
+    group: int
+    phi: int
+    gamma: float
+    delta: float
+    shape: tuple  # original tensor shape
+
+    def decode(self) -> np.ndarray:
+        """Shift-and-scale decode (Table II) back to the original shape."""
+        lvl = LUT[self.codes.astype(np.int32)]
+        alpha = np.repeat(self.scalars, self.group, axis=0)
+        return (lvl * alpha).reshape(self.shape).astype(np.float32)
+
+
+def to_matrix(w: np.ndarray) -> np.ndarray:
+    """Tensor -> matmul layout [K, OC]. 2-D passes through; 4-D conv reshapes."""
+    if w.ndim == 2:
+        return w
+    if w.ndim == 4:
+        kh, kw, c, oc = w.shape
+        return w.reshape(kh * kw * c, oc)
+    raise ValueError(f"unsupported ndim {w.ndim}")
+
+
+def _group_stats(vg: np.ndarray, phi: int):
+    """Per-group alpha (eq. 9) and per-sign MLE sigma (eq. 7) with fallbacks.
+
+    vg: [G, group, OC] grouped view.  Returns alpha, sig_p, sig_n each [G, OC].
+    """
+    absmean = np.abs(vg).mean(axis=1)
+    alpha = absmean / phi
+    pos = np.where(vg > 0, vg, np.nan)
+    neg = np.where(vg < 0, -vg, np.nan)
+    with np.errstate(invalid="ignore"), warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)  # empty sign sides
+        sig_p = np.nanstd(pos, axis=1)
+        sig_n = np.nanstd(neg, axis=1)
+        mu_p = np.nanmean(pos, axis=1)
+        mu_n = np.nanmean(neg, axis=1)
+    # Fallback when a sign side is empty or degenerate: use the mean magnitude
+    # of that side (or of the whole group) as the scale.
+    fallback = np.where(absmean > 0, absmean, 1.0)
+    sig_p = np.where(np.isnan(sig_p) | (sig_p <= 0), np.where(np.isnan(mu_p), fallback, np.maximum(mu_p, 1e-12)), sig_p)
+    sig_n = np.where(np.isnan(sig_n) | (sig_n <= 0), np.where(np.isnan(mu_n), fallback, np.maximum(mu_n, 1e-12)), sig_n)
+    return alpha, sig_p, sig_n
+
+
+def _assign_sigma(vg, alpha, sig_p, sig_n, phi, gamma, delta):
+    """Eq.-10 (canonicalized) code assignment. vg [G, group, OC] -> codes."""
+    sig = np.where(vg >= 0, sig_p[:, None, :], sig_n[:, None, :])
+    mag = np.abs(vg)
+    lvl = np.zeros_like(vg)
+    lvl = np.where(mag >= gamma * sig, 1.0, lvl)
+    if phi >= 2:
+        lvl = np.where(mag >= sig, 2.0, lvl)
+    if phi >= 4:
+        lvl = np.where(mag >= delta * sig, 4.0, lvl)
+    return np.sign(vg) * lvl
+
+
+def _assign_nearest(vg, alpha, phi):
+    """Ablation mode: nearest level in {0,±1α,±2α,±4α} (minimizes eq. 5)."""
+    lv = levels_for_phi(phi)
+    mag = np.abs(vg)
+    # distances to each level magnitude
+    d = np.abs(mag[..., None] - alpha[:, None, :, None] * lv.reshape(1, 1, 1, -1))
+    idx = d.argmin(axis=-1)
+    lvl = lv[idx]
+    return np.sign(vg) * lvl
+
+
+def _signed_level_to_code(slvl: np.ndarray) -> np.ndarray:
+    mag = np.abs(slvl)
+    base = np.zeros(slvl.shape, dtype=np.int8)
+    for m, c in _CODE_OF_LEVEL.items():
+        base = np.where(mag == m, np.int8(c), base)
+    return np.where((slvl < 0) & (mag > 0), base + np.int8(3), base).astype(np.int8)
+
+
+# Candidate multipliers for the alpha line-search ablation (mode="nearest-opt").
+_ALPHA_MULTS = np.array([0.5, 0.75, 1.0, 1.5, 2.0, 2.5, 3.0, 4.0])
+
+
+def quantize_matrix(
+    w: np.ndarray,
+    group: int,
+    phi: int = 4,
+    mode: str = "sigma-search",
+    gamma: float | None = None,
+    delta: float | None = None,
+) -> QuantizedTensor:
+    """Quantize w [K, OC] (or conv 4-D) with vectors of length ``group``.
+
+    mode: "sigma-search" (paper: exhaustive gamma/delta search),
+          "sigma" (fixed gamma/delta), "nearest" (ablation, optimal per eq. 5
+          given the paper's eq.-9 alpha), "nearest-opt" (ablation: per-group
+          line search over alpha — eq. 9 clamps everything above mean|w|,
+          which is what collapses deep all-layer quantization; see DESIGN.md).
+    """
+    shape = w.shape
+    wm = to_matrix(np.asarray(w, dtype=np.float32))
+    k, oc = wm.shape
+    assert k % group == 0, f"K={k} not divisible by group={group}"
+    g = k // group
+    vg = wm.reshape(g, group, oc)
+    alpha, sig_p, sig_n = _group_stats(vg, phi)
+
+    if mode == "nearest-opt":
+        # per-group 1-D search over alpha multipliers, nearest-level assignment
+        best_err = np.full((g, oc), np.inf)
+        best_alpha = alpha.copy()
+        best_slvl = np.zeros_like(vg)
+        for m in _ALPHA_MULTS:
+            a = alpha * m
+            slvl = _assign_nearest(vg, a, phi)
+            err = ((vg - slvl * a[:, None, :]) ** 2).sum(axis=1)
+            upd = err < best_err
+            best_err = np.where(upd, err, best_err)
+            best_alpha = np.where(upd, a, best_alpha)
+            best_slvl = np.where(upd[:, None, :], slvl, best_slvl)
+        codes = _signed_level_to_code(best_slvl).reshape(k, oc)
+        return QuantizedTensor(
+            codes=codes, scalars=best_alpha.astype(np.float32), group=group,
+            phi=phi, gamma=-1.0, delta=-1.0, shape=shape,
+        )
+
+    def encode_with(gam, dlt):
+        if mode == "nearest":
+            slvl = _assign_nearest(vg, alpha, phi)
+        else:
+            slvl = _assign_sigma(vg, alpha, sig_p, sig_n, phi, gam, dlt)
+        recon = slvl * alpha[:, None, :]
+        err = float(((vg - recon) ** 2).sum())
+        return slvl, err
+
+    if mode == "sigma-search":
+        best = (None, np.inf, 0.5, 2.0)
+        deltas = DELTA_GRID if phi >= 4 else np.array([2.0])
+        for gam in GAMMA_GRID:
+            for dlt in deltas:
+                slvl, err = encode_with(gam, dlt)
+                if err < best[1]:
+                    best = (slvl, err, float(gam), float(dlt))
+        slvl, _, gamma, delta = best
+    elif mode == "sigma":
+        gamma = 0.5 if gamma is None else gamma
+        delta = 2.0 if delta is None else delta
+        slvl, _ = encode_with(gamma, delta)
+    elif mode == "nearest":
+        gamma, delta = -1.0, -1.0
+        slvl, _ = encode_with(0, 0)
+    else:
+        raise ValueError(mode)
+
+    codes = _signed_level_to_code(slvl).reshape(k, oc)
+    return QuantizedTensor(
+        codes=codes,
+        scalars=alpha.astype(np.float32),
+        group=group,
+        phi=phi,
+        gamma=float(gamma),
+        delta=float(delta),
+        shape=shape,
+    )
+
+
+def quantization_error(w: np.ndarray, qt: QuantizedTensor) -> float:
+    """Eq. 5 objective value (sum of squared reconstruction error)."""
+    return float(((np.asarray(w, np.float32) - qt.decode()) ** 2).sum())
+
+
+def zeros_fraction(qt: QuantizedTensor) -> float:
+    return float((qt.codes == 0).mean())
+
+
+def encoded_bits(qt: QuantizedTensor, fpb: int = 32) -> int:
+    """Eq. 12: bits to store the encoded tensor (codes + scalars)."""
+    be = code_bits(qt.phi)
+    return int(qt.codes.size * be + qt.scalars.size * fpb)
+
+
+def full_precision_bits(shape, fpb: int = 32) -> int:
+    """Eq. 11: bits of the unquantized tensor."""
+    return int(np.prod(shape)) * fpb

@@ -1,0 +1,118 @@
+"""Build-time training (pure JAX; the paper used Keras).
+
+Trains LeNet-5 on synth-mnist and ConvNet-4 on synth-cifar with SGD+momentum
+on the "ref" compute path (XLA-native; pinned equal to the Pallas path by
+pytest), then writes:
+
+  artifacts/weights/{lenet,convnet}/<tensor>.npy
+  artifacts/data/{mnist,cifar}_{train,test}_{x,y}.npy
+  (metrics returned to aot.py for the manifest)
+
+Run via ``make artifacts`` (aot.py imports and drives this); never at request
+time.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as datagen
+from compile import model
+
+# Sizes chosen so every split is a multiple of the largest artifact batch
+# (128): train 7936 = 62*128, test 2048 = 16*128.
+TRAIN_N, TEST_N = 7936, 2048
+BATCH = 128
+
+
+def _one_hot(y, n=10):
+    return jnp.eye(n, dtype=jnp.float32)[y]
+
+
+def _loss(params, x, y1h, fwd):
+    return model.softmax_xent(fwd(x, params), y1h)
+
+
+@functools.partial(jax.jit, static_argnames=("fwd", "lr", "mom"))
+def _step(params, vel, x, y1h, fwd, lr=0.05, mom=0.9):
+    loss, grads = jax.value_and_grad(_loss)(params, x, y1h, fwd)
+    vel = [mom * v - lr * g for v, g in zip(vel, grads)]
+    params = [p + v for p, v in zip(params, vel)]
+    return params, vel, loss
+
+
+def accuracy(fwd, params, x, y, batch=BATCH):
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        logits = fwd(jnp.asarray(x[i : i + batch]), params)
+        hits += int((jnp.argmax(logits, axis=1) == jnp.asarray(y[i : i + batch])).sum())
+    return hits / x.shape[0]
+
+
+def train_model(name: str, epochs: int, lr: float, seed: int = 0, log=print):
+    if name == "lenet":
+        xtr, ytr = datagen.synth_mnist(TRAIN_N, seed=1)
+        xte, yte = datagen.synth_mnist(TEST_N, seed=2)
+        fwd = functools.partial(model.lenet_fwd, backend="ref")
+        params = model.init_params(model.LENET_SHAPES, model.LENET_PARAM_NAMES, seed)
+        pnames = model.LENET_PARAM_NAMES
+    elif name == "convnet":
+        xtr, ytr = datagen.synth_cifar(TRAIN_N, seed=3)
+        xte, yte = datagen.synth_cifar(TEST_N, seed=4)
+        fwd = functools.partial(model.convnet_fwd, backend="ref")
+        params = model.init_params(model.CONVNET_SHAPES, model.CONVNET_PARAM_NAMES, seed)
+        pnames = model.CONVNET_PARAM_NAMES
+    else:
+        raise ValueError(name)
+
+    fwd_jit = jax.jit(lambda x, p: fwd(x, p))
+    vel = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for ep in range(epochs):
+        order = rng.permutation(TRAIN_N)
+        tot = 0.0
+        lr_ep = lr * (0.5 ** (ep // 3))  # step decay: halve every 3 epochs
+        for i in range(0, TRAIN_N, BATCH):
+            idx = order[i : i + BATCH]
+            params, vel, loss = _step(
+                params, vel, jnp.asarray(xtr[idx]), _one_hot(jnp.asarray(ytr[idx])), fwd, lr=lr_ep
+            )
+            tot += float(loss)
+        acc = accuracy(fwd_jit, params, xte, yte)
+        log(f"[train:{name}] epoch {ep+1}/{epochs} loss={tot/(TRAIN_N//BATCH):.4f} test_acc={acc:.4f} ({time.time()-t0:.0f}s)")
+    final = accuracy(fwd_jit, params, xte, yte)
+    return {
+        "params": {n: np.asarray(p) for n, p in zip(pnames, params)},
+        "test_acc": final,
+        "data": {"train_x": xtr, "train_y": ytr, "test_x": xte, "test_y": yte},
+    }
+
+
+def save_all(out_dir: str, log=print):
+    """Train both models, write weights + datasets, return metrics dict."""
+    metrics = {}
+    datasets = {"lenet": "mnist", "convnet": "cifar"}
+    epochs = {"lenet": 8, "convnet": 12}
+    lrs = {"lenet": 0.05, "convnet": 0.05}
+    for name in ("lenet", "convnet"):
+        res = train_model(name, epochs[name], lrs[name], log=log)
+        wdir = os.path.join(out_dir, "weights", name)
+        os.makedirs(wdir, exist_ok=True)
+        for pname, arr in res["params"].items():
+            np.save(os.path.join(wdir, f"{pname}.npy"), arr)
+        ddir = os.path.join(out_dir, "data")
+        os.makedirs(ddir, exist_ok=True)
+        ds = datasets[name]
+        for split in ("train", "test"):
+            np.save(os.path.join(ddir, f"{ds}_{split}_x.npy"), res["data"][f"{split}_x"])
+            np.save(os.path.join(ddir, f"{ds}_{split}_y.npy"), res["data"][f"{split}_y"].astype(np.int32))
+        metrics[f"{name}_test_acc"] = res["test_acc"]
+        log(f"[train:{name}] final test_acc={res['test_acc']:.4f}")
+    return metrics

@@ -1,0 +1,72 @@
+"""AOT layer: artifact definitions are self-consistent and lower to HLO text."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_artifact_defs_consistent():
+    defs = aot.artifact_defs()
+    names = [d["name"] for d in defs]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    expected = {
+        "lenet_fwd_b1", "lenet_fwd_b32", "lenet_fwd_b128",
+        "convnet_fwd_b1", "convnet_fwd_b32", "convnet_fwd_b128",
+        "lenet_features_b128", "fc_step_b128",
+        "lenet_fwd_qsq_b32", "lenet_fwd_qsq_ref_b32", "csd_matmul_demo",
+    }
+    assert expected <= set(names)
+    for d in defs:
+        for (argname, shape, dt) in d["args"]:
+            assert dt in ("f32", "i8", "i32"), (d["name"], argname)
+
+
+def test_artifact_fns_trace():
+    """Every artifact function traces (eval_shape) with its declared specs."""
+    for d in aot.artifact_defs():
+        specs = [jax.ShapeDtypeStruct(s, aot._DT[t]) for (_, s, t) in d["args"]]
+        out = jax.eval_shape(d["fn"], *specs)
+        if not isinstance(out, (tuple, list)):
+            out = (out,)
+        assert all(o.dtype == jnp.float32 for o in out), d["name"]
+
+
+def test_hlo_text_lowering_smoke():
+    """to_hlo_text produces parseable HLO for a small jitted function."""
+
+    def f(x, y):
+        return (jnp.dot(x, y) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(f).lower(spec, spec))
+    assert "ENTRY" in text and "f32[4,4]" in text
+
+
+def test_hlo_text_lowering_pallas_qsq():
+    """The fused Pallas QSQ kernel lowers to plain HLO (no custom-calls that
+    the CPU PJRT client can't run)."""
+    from compile.kernels import qsq as kqsq
+
+    def f(x, c, s):
+        return (kqsq.qsq_dense(x, c, s, 4),)
+
+    text = aot.to_hlo_text(
+        jax.jit(f).lower(
+            jax.ShapeDtypeStruct((8, 8), jnp.float32),
+            jax.ShapeDtypeStruct((8, 16), jnp.int8),
+            jax.ShapeDtypeStruct((2, 16), jnp.float32),
+        )
+    )
+    assert "ENTRY" in text
+    assert "custom-call" not in text.lower(), "Mosaic custom-call leaked into CPU artifact"
+
+
+def test_qsq_arg_shapes_match_manifest_groups():
+    qargs = aot._qsq_arg_shapes(aot.LENET_QSQ_GROUPS)
+    by_name = {n: s for (n, s, _) in qargs}
+    assert by_name["c1w_codes"] == (25, 6)
+    assert by_name["c1w_scalars"] == (5, 6)
+    assert by_name["f1w_codes"] == (256, 120)
+    assert by_name["f1w_scalars"] == (16, 120)

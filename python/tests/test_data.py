@@ -1,0 +1,58 @@
+"""Synthetic dataset generators: determinism, shapes, value ranges, balance."""
+
+import numpy as np
+
+from compile import data as dg
+
+
+def test_mnist_shapes_and_range():
+    x, y = dg.synth_mnist(64, seed=7)
+    assert x.shape == (64, 28, 28, 1) and x.dtype == np.float32
+    assert y.shape == (64,) and y.dtype == np.int32
+    assert 0.0 <= x.min() and x.max() <= 1.0
+    assert set(np.unique(y)) <= set(range(10))
+
+
+def test_cifar_shapes_and_range():
+    x, y = dg.synth_cifar(64, seed=7)
+    assert x.shape == (64, 32, 32, 3) and x.dtype == np.float32
+    assert 0.0 <= x.min() and x.max() <= 1.0
+
+
+def test_determinism():
+    a = dg.synth_mnist(16, seed=5)
+    b = dg.synth_mnist(16, seed=5)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    c = dg.synth_cifar(16, seed=5)
+    d = dg.synth_cifar(16, seed=5)
+    np.testing.assert_array_equal(c[0], d[0])
+
+
+def test_seeds_differ():
+    a, _ = dg.synth_mnist(16, seed=1)
+    b, _ = dg.synth_mnist(16, seed=2)
+    assert np.abs(a - b).max() > 0.1
+
+
+def test_class_balance():
+    _, y = dg.synth_mnist(2000, seed=0)
+    counts = np.bincount(y, minlength=10)
+    assert counts.min() > 120  # roughly uniform
+
+
+def test_classes_distinguishable():
+    """Mean image of each digit class differs from every other class."""
+    x, y = dg.synth_mnist(1500, seed=3)
+    means = np.stack([x[y == d].mean(axis=0) for d in range(10)])
+    for i in range(10):
+        for j in range(i + 1, 10):
+            assert np.abs(means[i] - means[j]).mean() > 0.01, (i, j)
+
+
+def test_cifar_colour_separation():
+    x, y = dg.synth_cifar(1500, seed=3)
+    mean_rgb = np.stack([x[y == c].mean(axis=(0, 1, 2)) for c in range(10)])
+    # red-circle class 0 must be redder than green-square class 2
+    assert mean_rgb[0, 0] > mean_rgb[2, 0]
+    assert mean_rgb[2, 1] > mean_rgb[0, 1]

@@ -1,0 +1,170 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and code/group configurations); allclose against
+ref.py is THE signal that lets models train on the ref path and serve on the
+Pallas path (see kernels/ref.py docstring).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as kconv
+from compile.kernels import csd as kcsd
+from compile.kernels import qsq as kqsq
+from compile.kernels import ref
+
+_SET = dict(deadline=None, max_examples=20)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@settings(**_SET)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    got = kconv.matmul(x, w)
+    want = ref.matmul(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_tiled_multiblock():
+    # force several grid steps in every dimension
+    r = _rng(0)
+    x = jnp.asarray(r.standard_normal((130, 300)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((300, 140)), jnp.float32)
+    got = kconv.matmul(x, w, bm=64, bk=128, bn=64)
+    np.testing.assert_allclose(got, ref.matmul(x, w), rtol=1e-3, atol=1e-3)
+
+
+@settings(**_SET)
+@given(
+    groups=st.integers(1, 6),
+    group=st.sampled_from([1, 2, 4, 8]),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qsq_decode_matches_ref(groups, group, n, seed):
+    r = _rng(seed)
+    k = groups * group
+    codes = jnp.asarray(r.integers(0, 7, (k, n)), jnp.int8)
+    scal = jnp.asarray(r.standard_normal((groups, n)).astype(np.float32))
+    got = kqsq.qsq_decode(codes, scal, group)
+    want = ref.qsq_decode(codes, scal, group)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_qsq_decode_table2_semantics():
+    # code -> multiplier exactly per Table II, incl. the unused 111 pattern
+    scal = jnp.ones((1, 8), jnp.float32) * 0.5
+    codes = jnp.asarray(np.arange(8).reshape(1, 8), jnp.int8)
+    got = np.asarray(kqsq.qsq_decode(codes, scal, 1))[0]
+    np.testing.assert_allclose(got, [0.0, 0.5, 1.0, 2.0, -0.5, -1.0, -2.0, 0.0])
+
+
+@settings(**_SET)
+@given(
+    m=st.integers(1, 60),
+    groups=st.integers(1, 6),
+    group=st.sampled_from([1, 2, 4, 8]),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qsq_dense_matches_ref(m, groups, group, n, seed):
+    r = _rng(seed)
+    k = groups * group
+    x = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    codes = jnp.asarray(r.integers(0, 7, (k, n)), jnp.int8)
+    scal = jnp.asarray(r.standard_normal((groups, n)).astype(np.float32))
+    got = kqsq.qsq_dense(x, codes, scal, group)
+    want = ref.qsq_dense(x, codes, scal, group)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_qsq_dense_multiblock_padding():
+    # padded codes decode to exactly zero — multi-tile result must equal ref
+    r = _rng(1)
+    m, k, n, group = 150, 24, 135, 6
+    x = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    codes = jnp.asarray(r.integers(0, 7, (k, n)), jnp.int8)
+    scal = jnp.asarray(r.standard_normal((k // group, n)).astype(np.float32))
+    got = kqsq.qsq_dense(x, codes, scal, group, bm=64, bn=64)
+    np.testing.assert_allclose(got, ref.qsq_dense(x, codes, scal, group), rtol=1e-4, atol=1e-4)
+
+
+@settings(**_SET)
+@given(
+    m=st.integers(1, 50),
+    k=st.integers(1, 50),
+    n=st.integers(1, 50),
+    digits=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_csd_matmul_matches_ref(m, k, n, digits, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    got = kcsd.csd_matmul(x, w, digits)
+    want = ref.csd_matmul(x, w, digits)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**_SET)
+@given(digits=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_csd_approx_error_shrinks(digits, seed):
+    """Each extra CSD digit reduces (or keeps) the worst-case relative error."""
+    r = _rng(seed)
+    w = jnp.asarray(r.standard_normal(256) * 3.0, jnp.float32)
+    e1 = float(jnp.max(jnp.abs(ref.csd_approx(w, digits) - w)))
+    e2 = float(jnp.max(jnp.abs(ref.csd_approx(w, digits + 1) - w)))
+    assert e2 <= e1 + 1e-6
+
+
+def test_csd_approx_exact_for_powers_of_two():
+    w = jnp.asarray([1.0, -2.0, 0.5, 4.0, -0.25, 0.0], jnp.float32)
+    np.testing.assert_allclose(ref.csd_approx(w, 1), w, rtol=1e-6)
+
+
+@settings(**_SET)
+@given(
+    b=st.integers(1, 4),
+    hw=st.sampled_from([6, 9, 12]),
+    c=st.integers(1, 4),
+    oc=st.integers(1, 6),
+    kk=st.sampled_from([3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_oracle_matches_lax(b, hw, c, oc, kk, seed):
+    """The im2col conv oracle == XLA's native convolution."""
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((b, hw, hw, c)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((kk, kk, c, oc)), jnp.float32)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(ref.conv2d_nhwc(x, w), want, rtol=1e-3, atol=1e-3)
+
+
+def test_maxpool2():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    got = np.asarray(ref.maxpool2(x))[0, :, :, 0]
+    np.testing.assert_allclose(got, [[5, 7], [13, 15]])
+
+
+def test_qsq_dense_rejects_bad_group():
+    x = jnp.zeros((2, 10), jnp.float32)
+    codes = jnp.zeros((10, 3), jnp.int8)
+    scal = jnp.zeros((3, 3), jnp.float32)
+    with pytest.raises(AssertionError):
+        kqsq.qsq_dense(x, codes, scal, 3)  # 3 does not divide 10

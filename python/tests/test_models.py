@@ -1,0 +1,118 @@
+"""L2 model graphs: shapes, pallas/ref backend equivalence, QSQ-fused path."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, qsq_lib
+from compile.aot import LENET_QSQ_GROUPS
+
+
+def _lenet_params(seed=0):
+    return model.init_params(model.LENET_SHAPES, model.LENET_PARAM_NAMES, seed)
+
+
+def _convnet_params(seed=0):
+    return model.init_params(model.CONVNET_SHAPES, model.CONVNET_PARAM_NAMES, seed)
+
+
+def test_lenet_shapes():
+    x = jnp.zeros((4, 28, 28, 1), jnp.float32)
+    p = _lenet_params()
+    assert model.lenet_fwd(x, p).shape == (4, 10)
+    assert model.lenet_features(x, p).shape == (4, 84)
+
+
+def test_convnet_shapes():
+    x = jnp.zeros((4, 32, 32, 3), jnp.float32)
+    assert model.convnet_fwd(x, _convnet_params()).shape == (4, 10)
+
+
+def test_lenet_pallas_matches_ref():
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.standard_normal((2, 28, 28, 1)), jnp.float32)
+    p = _lenet_params()
+    a = model.lenet_fwd(x, p, backend="ref")
+    b = model.lenet_fwd(x, p, backend="pallas")
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_convnet_pallas_matches_ref():
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.standard_normal((1, 32, 32, 3)), jnp.float32)
+    p = _convnet_params()
+    a = model.convnet_fwd(x, p, backend="ref")
+    b = model.convnet_fwd(x, p, backend="pallas")
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def _qsq_args(params_dict, groups):
+    qargs, decoded = [], dict(params_dict)
+    for n in model.LENET_QUANTIZED:
+        qt = qsq_lib.quantize_matrix(params_dict[n], group=groups[n], phi=4, mode="nearest")
+        qargs += [jnp.asarray(qt.codes), jnp.asarray(qt.scalars)]
+        decoded[n] = jnp.asarray(qt.decode())
+    return qargs, decoded
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_lenet_qsq_fused_equals_decode_then_fwd(backend):
+    """fwd_qsq(codes) == fwd(decode(codes)) — the fused-kernel contract."""
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.standard_normal((2, 28, 28, 1)), jnp.float32)
+    p = _lenet_params(1)
+    pd = dict(zip(model.LENET_PARAM_NAMES, p))
+    qargs, decoded = _qsq_args(pd, LENET_QSQ_GROUPS)
+    fp = [pd[n] for n in ("c1b", "c2b", "f1b", "f2b", "f3w", "f3b")]
+    got = model.lenet_fwd_qsq(x, qargs, fp, LENET_QSQ_GROUPS, backend=backend)
+    want = model.lenet_fwd(x, [decoded[n] for n in model.LENET_PARAM_NAMES], backend="ref")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_fc_step_decreases_loss():
+    r = np.random.default_rng(0)
+    feat = jnp.asarray(r.standard_normal((128, 84)), jnp.float32)
+    y = r.integers(0, 10, 128)
+    y1h = jnp.asarray(np.eye(10, dtype=np.float32)[y])
+    w = jnp.asarray(r.standard_normal((84, 10)) * 0.1, jnp.float32)
+    b = jnp.zeros((10,), jnp.float32)
+    l0, w, b = model.fc_step(feat, y1h, w, b, jnp.float32(0.1))
+    l_prev = float(l0)
+    for _ in range(5):
+        l, w, b = model.fc_step(feat, y1h, w, b, jnp.float32(0.1))
+        assert float(l) <= l_prev + 1e-4
+        l_prev = float(l)
+
+
+def test_fc_step_gradient_matches_analytic():
+    """d/dW of softmax-CE == feat^T (p - y)/B — pins the AOT'd step."""
+    r = np.random.default_rng(3)
+    feat = jnp.asarray(r.standard_normal((16, 84)), jnp.float32)
+    y = r.integers(0, 10, 16)
+    y1h = jnp.asarray(np.eye(10, dtype=np.float32)[y])
+    w = jnp.asarray(r.standard_normal((84, 10)) * 0.1, jnp.float32)
+    b = jnp.zeros((10,), jnp.float32)
+    lr = 0.5
+    _, w2, b2 = model.fc_step(feat, y1h, w, b, jnp.float32(lr))
+    logits = feat @ w + b
+    p = jax.nn.softmax(logits)
+    gw = feat.T @ (p - y1h) / 16.0
+    gb = jnp.mean(p - y1h, axis=0)
+    np.testing.assert_allclose(w2, w - lr * gw, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(b2, b - lr * gb, rtol=1e-4, atol=1e-5)
+
+
+def test_init_params_shapes():
+    p = _lenet_params()
+    for arr, name in zip(p, model.LENET_PARAM_NAMES):
+        assert arr.shape == model.LENET_SHAPES[name]
+    # biases start at zero
+    assert float(jnp.abs(p[1]).max()) == 0.0
+
+
+def test_qsq_groups_divide_k():
+    for n, g in LENET_QSQ_GROUPS.items():
+        shp = model.LENET_SHAPES[n]
+        k = int(np.prod(shp[:-1]))
+        assert k % g == 0, (n, k, g)

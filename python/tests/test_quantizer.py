@@ -1,0 +1,121 @@
+"""QSQ quantizer (qsq_lib) properties — mirror of rust quant::qsq."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import qsq_lib
+
+_SET = dict(deadline=None, max_examples=30)
+
+
+def _w(seed, k=24, oc=8, scale=0.1):
+    return (np.random.default_rng(seed).standard_normal((k, oc)) * scale).astype(np.float32)
+
+
+@settings(**_SET)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    phi=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([2, 3, 4, 6, 8, 12, 24]),
+    mode=st.sampled_from(["sigma-search", "sigma", "nearest", "nearest-opt"]),
+)
+def test_decode_values_are_shiftable(seed, phi, group, mode):
+    """Every decoded value is level*alpha with level in the phi level set."""
+    w = _w(seed)
+    qt = qsq_lib.quantize_matrix(w, group=group, phi=phi, mode=mode)
+    levels = set(float(v) for v in qsq_lib.levels_for_phi(phi))
+    dec = qt.decode()
+    alpha = np.repeat(qt.scalars, group, axis=0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratio = np.where(alpha != 0, dec / np.where(alpha == 0, 1, alpha), 0.0)
+    for v in np.unique(np.abs(np.round(ratio, 5))):
+        assert float(v) in levels, f"decoded ratio {v} outside levels {levels}"
+
+
+@settings(**_SET)
+@given(seed=st.integers(0, 2**31 - 1), phi=st.sampled_from([1, 2, 4]))
+def test_codes_within_phi_range(seed, phi):
+    w = _w(seed)
+    qt = qsq_lib.quantize_matrix(w, group=4, phi=phi, mode="nearest")
+    mags = np.abs(qsq_lib.LUT[qt.codes.astype(np.int32)])
+    assert mags.max() <= max(qsq_lib.levels_for_phi(phi))
+    assert set(np.unique(qt.codes)) <= set(range(7))  # code 7 never emitted
+
+
+@settings(**_SET)
+@given(seed=st.integers(0, 2**31 - 1), group=st.sampled_from([2, 4, 8]))
+def test_nearest_error_monotone_in_phi(seed, group):
+    """More quantization levels never hurt the eq.-5 objective (nearest mode)."""
+    w = _w(seed)
+    errs = [
+        qsq_lib.quantization_error(w, qsq_lib.quantize_matrix(w, group=group, phi=phi, mode="nearest"))
+        for phi in (1, 2, 4)
+    ]
+    assert errs[0] >= errs[1] - 1e-5 and errs[1] >= errs[2] - 1e-5
+
+
+@settings(**_SET)
+@given(seed=st.integers(0, 2**31 - 1), phi=st.sampled_from([1, 2, 4]))
+def test_nearest_beats_sigma_rule(seed, phi):
+    """Nearest-level assignment is optimal for eq. 5 given eq.-9 alpha."""
+    w = _w(seed)
+    e_near = qsq_lib.quantization_error(w, qsq_lib.quantize_matrix(w, group=4, phi=phi, mode="nearest"))
+    e_sig = qsq_lib.quantization_error(w, qsq_lib.quantize_matrix(w, group=4, phi=phi, mode="sigma-search"))
+    assert e_near <= e_sig + 1e-5
+
+
+@settings(**_SET)
+@given(seed=st.integers(0, 2**31 - 1), phi=st.sampled_from([1, 2, 4]))
+def test_alpha_search_beats_eq9(seed, phi):
+    w = _w(seed)
+    e_opt = qsq_lib.quantization_error(w, qsq_lib.quantize_matrix(w, group=4, phi=phi, mode="nearest-opt"))
+    e_eq9 = qsq_lib.quantization_error(w, qsq_lib.quantize_matrix(w, group=4, phi=phi, mode="nearest"))
+    assert e_opt <= e_eq9 + 1e-5
+
+
+def test_alpha_eq9():
+    """alpha = mean(|v|)/phi exactly (eq. 9)."""
+    w = np.array([[1.0], [2.0], [3.0], [-2.0]], dtype=np.float32)
+    qt = qsq_lib.quantize_matrix(w, group=4, phi=4, mode="nearest")
+    assert qt.scalars.shape == (1, 1)
+    np.testing.assert_allclose(qt.scalars[0, 0], 2.0 / 4.0, rtol=1e-6)
+
+
+def test_code_bits_eq8():
+    # phi=1 -> ternary-ish 2 bits; phi=2,4 -> 3 bits (eq. 8)
+    assert qsq_lib.code_bits(1) == 2
+    assert qsq_lib.code_bits(2) == 3
+    assert qsq_lib.code_bits(4) == 3
+
+
+def test_bit_accounting_eq11_eq12():
+    shape = (5, 5, 6, 16)  # LeNet c2w
+    full = qsq_lib.full_precision_bits(shape)
+    assert full == 2400 * 32
+    qt = qsq_lib.quantize_matrix(np.random.default_rng(0).standard_normal(shape).astype(np.float32), group=6, phi=4)
+    enc = qsq_lib.encoded_bits(qt)
+    assert enc == 2400 * 3 + (2400 // 6) * 32
+    assert enc < full
+
+
+def test_zero_weights_all_zero_codes():
+    w = np.zeros((8, 2), dtype=np.float32)
+    qt = qsq_lib.quantize_matrix(w, group=4, phi=4, mode="nearest")
+    assert (qt.codes == 0).all()
+    assert (qt.decode() == 0).all()
+
+
+def test_group_must_divide():
+    with pytest.raises(AssertionError):
+        qsq_lib.quantize_matrix(_w(0, k=10), group=3, phi=4)
+
+
+@settings(**_SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_decode_shape_roundtrip_conv(seed):
+    w = (np.random.default_rng(seed).standard_normal((5, 5, 6, 16)) * 0.1).astype(np.float32)
+    qt = qsq_lib.quantize_matrix(w, group=6, phi=4, mode="nearest")
+    assert qt.decode().shape == w.shape
+    assert qt.codes.shape == (150, 16)
+    assert qt.scalars.shape == (25, 16)

@@ -1,0 +1,105 @@
+//! Timing harness: warmup + timed iterations, robust statistics, and a
+//! stable one-line report format that `cargo bench` targets print.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// per-iteration seconds
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    /// optional throughput denominator (items per iteration)
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        if self.median_s > 0.0 {
+            self.items_per_iter / self.median_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let scale = |s: f64| {
+            if s >= 1.0 {
+                format!("{s:.3} s")
+            } else if s >= 1e-3 {
+                format!("{:.3} ms", s * 1e3)
+            } else {
+                format!("{:.3} µs", s * 1e6)
+            }
+        };
+        let mut line = format!(
+            "{:<42} {:>12} median  {:>12} mean  {:>12} p95  ({} iters)",
+            self.name,
+            scale(self.median_s),
+            scale(self.mean_s),
+            scale(self.p95_s),
+            self.iters
+        );
+        if self.items_per_iter > 0.0 {
+            line.push_str(&format!("  [{:.0} items/s]", self.throughput()));
+        }
+        line
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs; `items_per_iter` feeds throughput.
+pub fn run_bench<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    items_per_iter: f64,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        median_s: stats::percentile(&samples, 50.0),
+        p95_s: stats::percentile(&samples, 95.0),
+        min_s: samples.iter().cloned().fold(f64::MAX, f64::min),
+        items_per_iter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let r = run_bench("spin", 2, 10, 100.0, || (0..1000).sum::<u64>());
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0 && r.median_s >= r.min_s);
+        assert!(r.throughput() > 0.0);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn report_scales_units() {
+        let mut r = run_bench("x", 0, 1, 0.0, || ());
+        r.median_s = 2.0;
+        assert!(r.report().contains(" s "));
+        r.median_s = 2e-3;
+        r.mean_s = 2e-3;
+        assert!(r.report().contains("ms"));
+    }
+}

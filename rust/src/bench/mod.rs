@@ -1,0 +1,5 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set).
+
+pub mod harness;
+
+pub use harness::{run_bench, BenchResult};

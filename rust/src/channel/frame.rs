@@ -1,0 +1,114 @@
+//! Link-layer framing: fixed-size payload frames with sequence numbers and
+//! per-frame CRC, so the receiver can detect corrupt frames and request
+//! selective retransmission.
+
+use anyhow::{bail, Result};
+
+use crate::codec::crc::crc32;
+
+pub const DEFAULT_PAYLOAD: usize = 1024;
+
+/// One frame: `[u32 seq][u32 payload_len][payload][u32 crc]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub seq: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.payload.len());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        let c = crc32(&out);
+        out.extend_from_slice(&c.to_le_bytes());
+        out
+    }
+
+    /// Parse and CRC-verify one frame.
+    pub fn from_bytes(b: &[u8]) -> Result<Frame> {
+        if b.len() < 12 {
+            bail!("frame too short");
+        }
+        let (body, tail) = b.split_at(b.len() - 4);
+        let stored = u32::from_le_bytes(tail.try_into().unwrap());
+        if crc32(body) != stored {
+            bail!("frame CRC mismatch");
+        }
+        let seq = u32::from_le_bytes(body[0..4].try_into().unwrap());
+        let len = u32::from_le_bytes(body[4..8].try_into().unwrap()) as usize;
+        if body.len() != 8 + len {
+            bail!("frame length mismatch");
+        }
+        Ok(Frame { seq, payload: body[8..].to_vec() })
+    }
+
+    /// Wire overhead per frame (header + crc).
+    pub const OVERHEAD: usize = 12;
+}
+
+/// Split a message into frames of `payload` bytes.
+pub fn fragment(data: &[u8], payload: usize) -> Vec<Frame> {
+    assert!(payload > 0);
+    data.chunks(payload)
+        .enumerate()
+        .map(|(i, c)| Frame { seq: i as u32, payload: c.to_vec() })
+        .collect()
+}
+
+/// Reassemble frames (must be complete and in any order).
+pub fn reassemble(mut frames: Vec<Frame>) -> Result<Vec<u8>> {
+    frames.sort_by_key(|f| f.seq);
+    for (i, f) in frames.iter().enumerate() {
+        if f.seq != i as u32 {
+            bail!("missing frame {i}");
+        }
+    }
+    Ok(frames.into_iter().flat_map(|f| f.payload).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn frame_roundtrip() {
+        let f = Frame { seq: 7, payload: vec![1, 2, 3, 4, 5] };
+        assert_eq!(Frame::from_bytes(&f.to_bytes()).unwrap(), f);
+    }
+
+    #[test]
+    fn corrupt_frame_rejected() {
+        let mut b = Frame { seq: 0, payload: vec![9; 64] }.to_bytes();
+        b[20] ^= 1;
+        assert!(Frame::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn fragment_reassemble() {
+        let mut r = Rng::new(0);
+        let data: Vec<u8> = (0..5000).map(|_| r.below(256) as u8).collect();
+        let mut frames = fragment(&data, 1024);
+        assert_eq!(frames.len(), 5);
+        // shuffle to prove order-independence
+        frames.reverse();
+        assert_eq!(reassemble(frames).unwrap(), data);
+    }
+
+    #[test]
+    fn missing_frame_detected() {
+        let data = vec![0u8; 3000];
+        let mut frames = fragment(&data, 1024);
+        frames.remove(1);
+        assert!(reassemble(frames).is_err());
+    }
+
+    #[test]
+    fn empty_message() {
+        let frames = fragment(&[], 100);
+        assert!(frames.is_empty());
+        assert_eq!(reassemble(frames).unwrap(), Vec::<u8>::new());
+    }
+}

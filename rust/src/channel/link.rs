@@ -1,0 +1,184 @@
+//! Point-to-point link simulator: bandwidth, propagation latency, and an
+//! optional bit-error rate.  Transfers are framed ([`super::frame`]); corrupt
+//! frames are detected by their CRC and retransmitted (stop-and-wait
+//! per-frame ARQ — adequate for the deployment pipeline's model push).
+
+use anyhow::Result;
+
+use super::frame::{fragment, reassemble, Frame};
+use crate::hw::energy;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LinkConfig {
+    /// Payload bits per second.
+    pub bandwidth_bps: f64,
+    /// One-way propagation latency, seconds.
+    pub latency_s: f64,
+    /// Independent bit-error probability on the wire.
+    pub ber: f64,
+    /// Frame payload size in bytes.
+    pub frame_payload: usize,
+    /// Give up after this many retransmissions of a single frame.
+    pub max_retries: u32,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        LinkConfig {
+            bandwidth_bps: 10e6, // 10 Mbit/s edge uplink
+            latency_s: 0.02,
+            ber: 0.0,
+            frame_payload: super::frame::DEFAULT_PAYLOAD,
+            max_retries: 16,
+        }
+    }
+}
+
+/// What a transfer cost.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransferReport {
+    pub payload_bytes: usize,
+    pub wire_bytes: usize,
+    pub frames: usize,
+    pub retransmissions: u32,
+    pub elapsed_s: f64,
+    /// DRAM-interface energy equivalent of the payload (paper §IV.C metric).
+    pub transfer_energy_pj: f64,
+}
+
+pub struct Link {
+    pub cfg: LinkConfig,
+    rng: Rng,
+}
+
+impl Link {
+    pub fn new(cfg: LinkConfig, seed: u64) -> Link {
+        Link { cfg, rng: Rng::new(seed) }
+    }
+
+    /// Corrupt a byte stream according to the BER.
+    fn corrupt(&mut self, data: &mut [u8]) -> bool {
+        if self.cfg.ber <= 0.0 {
+            return false;
+        }
+        let mut hit = false;
+        // Expected flips = bits * ber; sample per-byte to stay O(n).
+        let per_byte = 1.0 - (1.0 - self.cfg.ber).powi(8);
+        for b in data.iter_mut() {
+            if self.rng.chance(per_byte) {
+                *b ^= 1 << self.rng.below(8);
+                hit = true;
+            }
+        }
+        hit
+    }
+
+    /// Transmit a message, returning the received bytes and the cost report.
+    /// Every frame is CRC-checked; corrupt frames retransmit (ARQ).
+    pub fn transmit(&mut self, data: &[u8]) -> Result<(Vec<u8>, TransferReport)> {
+        let frames = fragment(data, self.cfg.frame_payload);
+        let mut received: Vec<Frame> = Vec::with_capacity(frames.len());
+        let mut report = TransferReport {
+            payload_bytes: data.len(),
+            frames: frames.len(),
+            ..Default::default()
+        };
+
+        for f in &frames {
+            let wire = f.to_bytes();
+            let mut tries = 0;
+            loop {
+                let mut sent = wire.clone();
+                self.corrupt(&mut sent);
+                report.wire_bytes += sent.len();
+                match Frame::from_bytes(&sent) {
+                    Ok(ok) => {
+                        received.push(ok);
+                        break;
+                    }
+                    Err(_) => {
+                        tries += 1;
+                        report.retransmissions += 1;
+                        if tries > self.cfg.max_retries {
+                            anyhow::bail!(
+                                "frame {} exceeded {} retries (ber={})",
+                                f.seq,
+                                self.cfg.max_retries,
+                                self.cfg.ber
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        report.elapsed_s = self.cfg.latency_s
+            + report.wire_bytes as f64 * 8.0 / self.cfg.bandwidth_bps
+            // one RTT per retransmission (stop-and-wait)
+            + report.retransmissions as f64 * 2.0 * self.cfg.latency_s;
+        report.transfer_energy_pj = energy::transfer_pj(data.len() as u64 * 8, false);
+
+        let bytes = reassemble(received)?;
+        Ok((bytes, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(n: usize) -> Vec<u8> {
+        (0..n).map(|i| (i * 31 % 251) as u8).collect()
+    }
+
+    #[test]
+    fn clean_link_delivers_exactly() {
+        let mut link = Link::new(LinkConfig::default(), 1);
+        let data = payload(10_000);
+        let (got, rep) = link.transmit(&data).unwrap();
+        assert_eq!(got, data);
+        assert_eq!(rep.retransmissions, 0);
+        assert!(rep.wire_bytes > rep.payload_bytes); // framing overhead
+        assert!(rep.elapsed_s > 0.0);
+    }
+
+    #[test]
+    fn noisy_link_recovers_via_arq() {
+        let cfg = LinkConfig { ber: 2e-5, ..Default::default() };
+        let mut link = Link::new(cfg, 2);
+        let data = payload(50_000);
+        let (got, rep) = link.transmit(&data).unwrap();
+        assert_eq!(got, data);
+        assert!(rep.retransmissions > 0, "expected some retransmissions");
+    }
+
+    #[test]
+    fn hopeless_link_errors_out() {
+        let cfg = LinkConfig { ber: 0.05, max_retries: 3, ..Default::default() };
+        let mut link = Link::new(cfg, 3);
+        assert!(link.transmit(&payload(5_000)).is_err());
+    }
+
+    #[test]
+    fn elapsed_scales_with_bandwidth() {
+        let data = payload(100_000);
+        let fast = Link::new(LinkConfig { bandwidth_bps: 100e6, ..Default::default() }, 4)
+            .transmit(&data)
+            .unwrap()
+            .1;
+        let slow = Link::new(LinkConfig { bandwidth_bps: 1e6, ..Default::default() }, 4)
+            .transmit(&data)
+            .unwrap()
+            .1;
+        assert!(slow.elapsed_s > 10.0 * fast.elapsed_s);
+    }
+
+    #[test]
+    fn empty_transfer() {
+        let mut link = Link::new(LinkConfig::default(), 5);
+        let (got, rep) = link.transmit(&[]).unwrap();
+        assert!(got.is_empty());
+        assert_eq!(rep.frames, 0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Simulated communication channel between the model server and the edge
+//! device (the paper's §I edge-computing story: encode → transmit → decode).
+
+pub mod frame;
+pub mod link;
+
+pub use link::{Link, LinkConfig, TransferReport};

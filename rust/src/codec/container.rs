@@ -1,0 +1,343 @@
+//! The `QSQ1` model container — the byte format an encoded model travels in.
+//!
+//! ```text
+//! [magic "QSQ1"][u16 version][u8 n_tensors]
+//! per tensor:
+//!   [u8 name_len][name][u8 rank][u32 dims...]
+//!   [u8 phi][u8 bits][u32 group][f32 gamma][f32 delta]
+//!   [u32 n_scalars][f32 scalars...]
+//!   [u32 n_codes][packed codes (bits/code)]
+//!   [u32 crc32 of this tensor section]
+//! [u32 crc32 of everything before]
+//! ```
+//!
+//! Little-endian throughout.  Every tensor section carries its own CRC so a
+//! receiver behind a lossy link can pinpoint corruption (see
+//! [`crate::channel`]) and request selective retransmission.
+
+use anyhow::{bail, Context, Result};
+
+use super::crc::crc32;
+use super::pack::{pack_codes, packed_len, unpack_codes};
+use crate::quant::codes::{code_bits, Code};
+use crate::quant::QuantizedTensor;
+
+pub const MAGIC: &[u8; 4] = b"QSQ1";
+pub const VERSION: u16 = 1;
+
+/// Wire remap for phi=1 (2-bit) streams: the ternary alphabet {0, +1, -1}
+/// uses Table-II codes {0, 1, 4}; on the wire they compact to {0, 1, 2}.
+fn to_wire(c: Code, phi: u32) -> Result<u8> {
+    if phi == 1 {
+        Ok(match c.0 {
+            0 | 7 => 0,
+            1 => 1,
+            4 => 2,
+            other => bail!("code {other} invalid for phi=1"),
+        })
+    } else {
+        Ok(c.0)
+    }
+}
+
+fn from_wire(w: u8, phi: u32) -> Result<Code> {
+    if phi == 1 {
+        Ok(match w {
+            0 => Code(0),
+            1 => Code(1),
+            2 => Code(4),
+            other => bail!("wire code {other} invalid for phi=1"),
+        })
+    } else {
+        Ok(Code(w))
+    }
+}
+
+/// One encoded tensor section (decoded form).
+#[derive(Clone, Debug)]
+pub struct EncodedTensor {
+    pub name: String,
+    pub tensor: QuantizedTensor,
+}
+
+/// A whole encoded model.
+#[derive(Clone, Debug)]
+pub struct EncodedModel {
+    pub tensors: Vec<EncodedTensor>,
+}
+
+impl EncodedModel {
+    /// Total payload bits (eq.-12 accounting, as actually serialized).
+    pub fn encoded_bits(&self) -> u64 {
+        self.tensors.iter().map(|t| t.tensor.encoded_bits(32)).sum()
+    }
+
+    pub fn full_precision_bits(&self) -> u64 {
+        self.tensors.iter().map(|t| t.tensor.full_precision_bits(32)).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&QuantizedTensor> {
+        self.tensors.iter().find(|t| t.name == name).map(|t| &t.tensor)
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize a model to container bytes.
+pub fn encode_model(model: &EncodedModel) -> Result<Vec<u8>> {
+    if model.tensors.len() > 255 {
+        bail!("too many tensors");
+    }
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(model.tensors.len() as u8);
+
+    for et in &model.tensors {
+        let t = &et.tensor;
+        let mut sec = Vec::new();
+        let name = et.name.as_bytes();
+        if name.len() > 255 {
+            bail!("tensor name too long");
+        }
+        sec.push(name.len() as u8);
+        sec.extend_from_slice(name);
+        sec.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            put_u32(&mut sec, d as u32);
+        }
+        let bits = code_bits(t.phi);
+        sec.push(t.phi as u8);
+        sec.push(bits as u8);
+        put_u32(&mut sec, t.group as u32);
+        put_f32(&mut sec, t.gamma as f32);
+        put_f32(&mut sec, t.delta as f32);
+        put_u32(&mut sec, t.scalars.len() as u32);
+        for &s in &t.scalars {
+            put_f32(&mut sec, s);
+        }
+        put_u32(&mut sec, t.codes.len() as u32);
+        let wire_codes: Vec<Code> = t
+            .codes
+            .iter()
+            .map(|&c| to_wire(c, t.phi).map(Code))
+            .collect::<Result<_>>()?;
+        sec.extend_from_slice(&pack_codes(&wire_codes, bits)?);
+        let c = crc32(&sec);
+        out.extend_from_slice(&sec);
+        put_u32(&mut out, c);
+    }
+    let total = crc32(&out);
+    put_u32(&mut out, total);
+    Ok(out)
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("container truncated at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Parse container bytes back into a model, verifying all CRCs.
+pub fn decode_model(bytes: &[u8]) -> Result<EncodedModel> {
+    if bytes.len() < 11 {
+        bail!("container too short");
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 4);
+    let total_crc = u32::from_le_bytes(tail.try_into().unwrap());
+    if crc32(body) != total_crc {
+        bail!("container total CRC mismatch");
+    }
+    let mut c = Cursor { b: body, i: 0 };
+    if c.take(4)? != MAGIC {
+        bail!("bad magic");
+    }
+    let ver = c.u16()?;
+    if ver != VERSION {
+        bail!("unsupported container version {ver}");
+    }
+    let n_tensors = c.u8()? as usize;
+    let mut tensors = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        let sec_start = c.i;
+        let name_len = c.u8()? as usize;
+        let name = String::from_utf8(c.take(name_len)?.to_vec()).context("tensor name")?;
+        let rank = c.u8()? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(c.u32()? as usize);
+        }
+        let phi = c.u8()? as u32;
+        let bits = c.u8()? as u32;
+        if !matches!(phi, 1 | 2 | 4) || bits != code_bits(phi) {
+            bail!("tensor {name}: inconsistent phi={phi}/bits={bits}");
+        }
+        let group = c.u32()? as usize;
+        let gamma = c.f32()? as f64;
+        let delta = c.f32()? as f64;
+        let n_scalars = c.u32()? as usize;
+        let mut scalars = Vec::with_capacity(n_scalars);
+        for _ in 0..n_scalars {
+            scalars.push(c.f32()?);
+        }
+        let n_codes = c.u32()? as usize;
+        let packed = c.take(packed_len(n_codes, bits))?;
+        let codes = unpack_codes(packed, n_codes, bits)?
+            .into_iter()
+            .map(|w| from_wire(w.0, phi))
+            .collect::<Result<Vec<Code>>>()?;
+        let sec_crc = crc32(&body[sec_start..c.i]);
+        let stored = c.u32()?;
+        if sec_crc != stored {
+            bail!("tensor {name}: section CRC mismatch");
+        }
+        let (k, oc) = crate::quant::qsq::matrix_dims(&shape)?;
+        if k * oc != n_codes || group == 0 || k % group != 0 || (k / group) * oc != n_scalars {
+            bail!("tensor {name}: inconsistent geometry");
+        }
+        tensors.push(EncodedTensor {
+            name,
+            tensor: QuantizedTensor {
+                codes,
+                scalars,
+                k,
+                oc,
+                group,
+                phi,
+                gamma,
+                delta,
+                shape,
+            },
+        });
+    }
+    if c.i != body.len() {
+        bail!("trailing bytes in container");
+    }
+    Ok(EncodedModel { tensors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::qsq::{quantize, AssignMode};
+    use crate::util::prop::gen_weights;
+    use crate::util::rng::Rng;
+
+    fn sample_model(seed: u64) -> EncodedModel {
+        let mut r = Rng::new(seed);
+        let w1 = gen_weights(&mut r, 150 * 16, 0.1);
+        let w2 = gen_weights(&mut r, 64 * 10, 0.2);
+        EncodedModel {
+            tensors: vec![
+                EncodedTensor {
+                    name: "c2w".into(),
+                    tensor: quantize(&w1, &[5, 5, 6, 16], 6, 4, AssignMode::SigmaSearch).unwrap(),
+                },
+                EncodedTensor {
+                    name: "fc".into(),
+                    tensor: quantize(&w2, &[64, 10], 16, 1, AssignMode::Nearest).unwrap(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let m = sample_model(1);
+        let bytes = encode_model(&m).unwrap();
+        let back = decode_model(&bytes).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        for (a, b) in m.tensors.iter().zip(&back.tensors) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.tensor.codes, b.tensor.codes);
+            assert_eq!(a.tensor.scalars, b.tensor.scalars);
+            assert_eq!(a.tensor.shape, b.tensor.shape);
+            assert_eq!(a.tensor.group, b.tensor.group);
+            assert_eq!(a.tensor.phi, b.tensor.phi);
+        }
+    }
+
+    #[test]
+    fn decoded_weights_identical_after_transit() {
+        let m = sample_model(2);
+        let back = decode_model(&encode_model(&m).unwrap()).unwrap();
+        for (a, b) in m.tensors.iter().zip(&back.tensors) {
+            assert_eq!(a.tensor.decode(), b.tensor.decode());
+        }
+    }
+
+    #[test]
+    fn container_smaller_than_full_precision() {
+        let m = sample_model(3);
+        let bytes = encode_model(&m).unwrap();
+        let full_bytes = m.full_precision_bits() / 8;
+        assert!(
+            (bytes.len() as u64) < full_bytes / 3,
+            "container {} vs full {}",
+            bytes.len(),
+            full_bytes
+        );
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let m = sample_model(4);
+        let bytes = encode_model(&m).unwrap();
+        // flip one bit anywhere -> total or section CRC must catch it
+        for pos in [8usize, bytes.len() / 2, bytes.len() - 5] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x10;
+            assert!(decode_model(&bad).is_err(), "corruption at {pos} undetected");
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let m = sample_model(5);
+        let bytes = encode_model(&m).unwrap();
+        assert!(decode_model(&bytes[..bytes.len() - 10]).is_err());
+        assert!(decode_model(&[]).is_err());
+    }
+
+    #[test]
+    fn phi1_uses_2bit_packing() {
+        let mut r = Rng::new(6);
+        let w = gen_weights(&mut r, 1024, 0.1);
+        let m = EncodedModel {
+            tensors: vec![EncodedTensor {
+                name: "t".into(),
+                tensor: quantize(&w, &[1024, 1], 16, 1, AssignMode::Nearest).unwrap(),
+            }],
+        };
+        let bytes = encode_model(&m).unwrap();
+        // 1024 codes * 2 bits = 256 bytes of codes; well under 3-bit packing
+        assert!(bytes.len() < 256 + 64 * 4 + 64);
+    }
+}

@@ -1,0 +1,63 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), table-driven.
+
+const POLY: u32 = 0xEDB8_8320;
+
+fn table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { (c >> 1) ^ POLY } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 of a byte slice.
+pub fn crc32(data: &[u8]) -> u32 {
+    let t = table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, forall};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_vectors() {
+        // standard check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn prop_detects_single_bit_flip() {
+        forall(
+            100,
+            |r: &mut Rng| {
+                let n = r.below(64) as usize + 1;
+                let data: Vec<u8> = (0..n).map(|_| r.below(256) as u8).collect();
+                let pos = r.below(n as u64 * 8);
+                (data, pos)
+            },
+            |(data, pos)| {
+                let orig = crc32(data);
+                let mut flipped = data.clone();
+                flipped[(pos / 8) as usize] ^= 1 << (pos % 8);
+                check(crc32(&flipped) != orig, "bit flip undetected")
+            },
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Model container codec: how an encoded DNN travels over the channel.
+//!
+//! * [`pack`]      — dense 2-/3-bit code bitstreams (LSB-first).
+//! * [`crc`]       — CRC-32 (IEEE) integrity check.
+//! * [`container`] — the `QSQ1` binary container: header + per-tensor
+//!   sections (codes, scalars, metadata), each CRC-protected, suitable for
+//!   framing over the simulated link and decode at the edge.
+
+pub mod container;
+pub mod crc;
+pub mod pack;
+
+pub use container::{decode_model, encode_model, EncodedModel, EncodedTensor};

@@ -1,0 +1,157 @@
+//! Dense bit packing for 2-/3-bit code streams (LSB-first within bytes).
+//!
+//! This is where the paper's memory-savings claim becomes real bytes: a
+//! 3-bit code stream occupies ceil(3n/8) bytes on the wire, not n bytes.
+
+use anyhow::{bail, Result};
+
+use crate::quant::codes::Code;
+
+/// Append `bits` low bits of `value` to the stream.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    bitpos: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&mut self, value: u32, bits: u32) {
+        for i in 0..bits {
+            let bit = (value >> i) & 1;
+            let byte = self.bitpos / 8;
+            if byte == self.buf.len() {
+                self.buf.push(0);
+            }
+            self.buf[byte] |= (bit as u8) << (self.bitpos % 8);
+            self.bitpos += 1;
+        }
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.bitpos
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// LSB-first bit reader.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    bitpos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, bitpos: 0 }
+    }
+
+    pub fn get(&mut self, bits: u32) -> Result<u32> {
+        let mut out = 0u32;
+        for i in 0..bits {
+            let byte = self.bitpos / 8;
+            if byte >= self.buf.len() {
+                bail!("bit stream exhausted at bit {}", self.bitpos);
+            }
+            let bit = (self.buf[byte] >> (self.bitpos % 8)) & 1;
+            out |= (bit as u32) << i;
+            self.bitpos += 1;
+        }
+        Ok(out)
+    }
+}
+
+/// Pack codes at `bits` per code (2 for phi=1, 3 for phi in {2,4}).
+pub fn pack_codes(codes: &[Code], bits: u32) -> Result<Vec<u8>> {
+    if !(1..=8).contains(&bits) {
+        bail!("bits per code must be 1..=8");
+    }
+    let mut w = BitWriter::new();
+    for c in codes {
+        if (c.0 as u32) >= (1 << bits) {
+            bail!("code {} does not fit in {bits} bits", c.0);
+        }
+        w.put(c.0 as u32, bits);
+    }
+    Ok(w.into_bytes())
+}
+
+/// Unpack `n` codes at `bits` per code.
+pub fn unpack_codes(buf: &[u8], n: usize, bits: u32) -> Result<Vec<Code>> {
+    let mut r = BitReader::new(buf);
+    (0..n).map(|_| r.get(bits).map(|v| Code(v as u8))).collect()
+}
+
+/// Bytes needed for n codes at `bits` per code.
+pub fn packed_len(n: usize, bits: u32) -> usize {
+    (n * bits as usize + 7) / 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, forall};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_3bit() {
+        let codes: Vec<Code> = (0..17).map(|i| Code(i % 7)).collect();
+        let packed = pack_codes(&codes, 3).unwrap();
+        assert_eq!(packed.len(), packed_len(17, 3));
+        assert_eq!(packed.len(), 7); // ceil(51/8)
+        let back = unpack_codes(&packed, 17, 3).unwrap();
+        assert_eq!(back, codes);
+    }
+
+    #[test]
+    fn roundtrip_2bit() {
+        let codes: Vec<Code> = vec![Code(0), Code(1), Code(2), Code(3), Code(1)];
+        let packed = pack_codes(&codes, 2).unwrap();
+        assert_eq!(packed.len(), 2);
+        assert_eq!(unpack_codes(&packed, 5, 2).unwrap(), codes);
+    }
+
+    #[test]
+    fn code_too_large_rejected() {
+        assert!(pack_codes(&[Code(4)], 2).is_err());
+        assert!(pack_codes(&[Code(4)], 3).is_ok());
+    }
+
+    #[test]
+    fn truncated_stream_rejected() {
+        let packed = pack_codes(&[Code(1); 10], 3).unwrap();
+        assert!(unpack_codes(&packed[..1], 10, 3).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        forall(
+            100,
+            |r: &mut Rng| {
+                let bits = [2u32, 3, 4][r.below(3) as usize];
+                let n = r.below(200) as usize;
+                let codes: Vec<Code> =
+                    (0..n).map(|_| Code(r.below(1 << bits) as u8)).collect();
+                (codes, bits)
+            },
+            |(codes, bits)| {
+                let packed = pack_codes(codes, *bits).map_err(|e| e.to_string())?;
+                check(packed.len() == packed_len(codes.len(), *bits), "len")?;
+                let back = unpack_codes(&packed, codes.len(), *bits).map_err(|e| e.to_string())?;
+                check(&back == codes, "roundtrip")
+            },
+        );
+    }
+
+    #[test]
+    fn density_beats_byte_per_code() {
+        // the actual memory-savings mechanism: 3 bits/code on the wire
+        assert!(packed_len(2400, 3) * 8 <= 2400 * 3 + 7);
+        assert!(packed_len(2400, 3) < 2400);
+    }
+}

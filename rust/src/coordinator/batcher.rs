@@ -1,0 +1,170 @@
+//! Dynamic batching queue for the serving loop.
+//!
+//! Requests arrive from acceptor threads; the single inference worker pops a
+//! batch when either (a) `max_batch` requests are waiting or (b) the oldest
+//! request has waited `max_delay` — the classic dynamic-batching policy the
+//! batch-32 PJRT artifact wants (the batch is padded to the artifact size by
+//! the worker).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued inference request.
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Thread-safe batch queue. `close()` wakes all waiters and drains.
+pub struct BatchQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+struct Inner<T> {
+    queue: VecDeque<Pending<T>>,
+    closed: bool,
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new(max_batch: usize, max_delay: Duration) -> Self {
+        assert!(max_batch > 0);
+        BatchQueue {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            max_batch,
+            max_delay,
+        }
+    }
+
+    /// Enqueue a request. Returns false if the queue is closed.
+    pub fn push(&self, payload: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        g.queue.push_back(Pending { payload, enqueued: Instant::now() });
+        self.cv.notify_all();
+        true
+    }
+
+    /// Pop the next batch, blocking until the batching policy fires or the
+    /// queue closes.  Returns `None` only when closed *and* drained.
+    pub fn pop_batch(&self) -> Option<Vec<Pending<T>>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.queue.is_empty() {
+                let oldest = g.queue.front().unwrap().enqueued;
+                let waited = oldest.elapsed();
+                if g.queue.len() >= self.max_batch || waited >= self.max_delay || g.closed {
+                    let n = g.queue.len().min(self.max_batch);
+                    return Some(g.queue.drain(..n).collect());
+                }
+                let remaining = self.max_delay - waited;
+                let (ng, _timeout) = self.cv.wait_timeout(g, remaining).unwrap();
+                g = ng;
+            } else if g.closed {
+                return None;
+            } else {
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+    }
+
+    /// Close the queue; wakes all waiters.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn full_batch_pops_immediately() {
+        let q = BatchQueue::new(4, Duration::from_secs(10));
+        for i in 0..4 {
+            assert!(q.push(i));
+        }
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].payload, 0);
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let q = Arc::new(BatchQueue::new(64, Duration::from_millis(30)));
+        q.push(42);
+        let t0 = Instant::now();
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn oversize_queue_pops_max_batch() {
+        let q = BatchQueue::new(3, Duration::from_secs(10));
+        for i in 0..7 {
+            q.push(i);
+        }
+        assert_eq!(q.pop_batch().unwrap().len(), 3);
+        assert_eq!(q.pop_batch().unwrap().len(), 3);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BatchQueue::new(8, Duration::from_secs(10));
+        q.push(1);
+        q.close();
+        assert!(!q.push(2));
+        assert_eq!(q.pop_batch().unwrap().len(), 1);
+        assert!(q.pop_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_consumer() {
+        let q = Arc::new(BatchQueue::new(16, Duration::from_millis(5)));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for i in 0..50 {
+                        q.push(p * 100 + i);
+                    }
+                })
+            })
+            .collect();
+        let qc = q.clone();
+        let consumer = thread::spawn(move || {
+            let mut got = 0;
+            while got < 200 {
+                if let Some(b) = qc.pop_batch() {
+                    got += b.len();
+                } else {
+                    break;
+                }
+            }
+            got
+        });
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert_eq!(consumer.join().unwrap(), 200);
+    }
+}

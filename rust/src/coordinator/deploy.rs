@@ -1,0 +1,228 @@
+//! The end-to-end deployment pipeline (the paper's edge-computing story):
+//!
+//! ```text
+//! trained weights ──quantize──▶ QSQ container ──channel──▶ edge decode
+//!        │                                                    │
+//!        └──────────── full-precision head ───────────────────┘
+//!                                              ▼
+//!                        WeightStore with approximate weights
+//! ```
+//!
+//! Produces a [`DeployReport`] with every number the paper's §IV.C cares
+//! about: encoded size, memory savings, transfer cost, decoder-op counts,
+//! zero fractions.
+
+use anyhow::Result;
+
+use crate::channel::{Link, LinkConfig, TransferReport};
+use crate::codec::{decode_model, encode_model, EncodedModel, EncodedTensor};
+use crate::device::QualityConfig;
+use crate::hw::decoder_rtl;
+use crate::model::store::WeightStore;
+use crate::quant::qsq::{quantize, AssignMode};
+use crate::quant::vectorize::Grouping;
+use crate::tensor::Tensor;
+
+/// Everything the deployment produced, for reporting.
+#[derive(Clone, Debug)]
+pub struct DeployReport {
+    pub quality: QualityConfig,
+    pub mode: AssignMode,
+    /// Encoded bits of the quantized tensors (eq. 12).
+    pub encoded_bits: u64,
+    /// Full-precision bits of the same tensors (eq. 11).
+    pub full_bits: u64,
+    /// Container bytes actually shipped.
+    pub container_bytes: usize,
+    pub transfer: TransferReport,
+    /// Total decoder operations at the edge.
+    pub decoder_ops: decoder_rtl::DecodeOps,
+    /// Zero-code fraction (zero-skip opportunity).
+    pub zeros_fraction: f64,
+    /// Mean relative reconstruction error across quantized tensors.
+    pub mean_rel_error: f64,
+}
+
+impl DeployReport {
+    pub fn memory_savings(&self) -> f64 {
+        1.0 - self.encoded_bits as f64 / self.full_bits as f64
+    }
+}
+
+/// Quantize the store's quantized tensors at (phi, N) and build a container.
+pub fn encode_store(
+    store: &WeightStore,
+    quality: QualityConfig,
+    mode: AssignMode,
+) -> Result<EncodedModel> {
+    let mut tensors = Vec::new();
+    for tm in store.meta.quantized_tensors() {
+        let w = store.get(tm.name)?;
+        let group = Grouping::nearest_divisor(&tm.shape, quality.group)?;
+        let qt = quantize(w.data(), &tm.shape, group, quality.phi, mode)?;
+        tensors.push(EncodedTensor { name: tm.name.to_string(), tensor: qt });
+    }
+    Ok(EncodedModel { tensors })
+}
+
+/// Run the whole pipeline; returns the edge-side store (decoded approximate
+/// weights + original fp32 head/biases) and the report.
+pub fn deploy(
+    store: &WeightStore,
+    quality: QualityConfig,
+    mode: AssignMode,
+    link_cfg: LinkConfig,
+    seed: u64,
+) -> Result<(WeightStore, DeployReport)> {
+    let encoded = encode_store(store, quality, mode)?;
+    let container = encode_model(&encoded)?;
+
+    let mut link = Link::new(link_cfg, seed);
+    let (received, transfer) = link.transmit(&container)?;
+    let decoded = decode_model(&received)?;
+
+    // edge side: reconstruct weights through the bit-level decoder simulator
+    let mut edge = store.clone();
+    let mut total_ops = decoder_rtl::DecodeOps::default();
+    let mut rel_err_sum = 0.0f64;
+    let mut nz = 0usize;
+    let mut zeros = 0u64;
+    let mut total_codes = 0u64;
+    for et in &decoded.tensors {
+        let (ws, ops) = decoder_rtl::decode_stream(
+            &et.tensor.codes,
+            &et.tensor.scalars,
+            et.tensor.group,
+            et.tensor.oc,
+        );
+        total_ops.exponent_adds += ops.exponent_adds;
+        total_ops.sign_flips += ops.sign_flips;
+        total_ops.zero_outputs += ops.zero_outputs;
+        zeros += et.tensor.codes.iter().filter(|c| c.is_skippable()).count() as u64;
+        total_codes += et.tensor.codes.len() as u64;
+
+        let orig = store.get(&et.name)?;
+        let diff: f64 = orig
+            .data()
+            .iter()
+            .zip(&ws)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        let norm: f64 = orig.data().iter().map(|&a| (a as f64).powi(2)).sum();
+        if norm > 0.0 {
+            rel_err_sum += (diff / norm).sqrt();
+            nz += 1;
+        }
+        edge.set(&et.name, Tensor::new(et.tensor.shape.clone(), ws)?)?;
+    }
+
+    let report = DeployReport {
+        quality,
+        mode,
+        encoded_bits: encoded.encoded_bits(),
+        full_bits: encoded.full_precision_bits(),
+        container_bytes: container.len(),
+        transfer,
+        decoder_ops: total_ops,
+        zeros_fraction: zeros as f64 / total_codes.max(1) as f64,
+        mean_rel_error: if nz > 0 { rel_err_sum / nz as f64 } else { 0.0 },
+    };
+    Ok((edge, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::ModelKind;
+    use crate::util::rng::Rng;
+
+    fn fake_store(seed: u64) -> WeightStore {
+        let mut r = Rng::new(seed);
+        let meta = crate::model::meta::ModelMeta::lenet();
+        let mut s = WeightStore::empty(ModelKind::Lenet);
+        for t in &meta.tensors {
+            let data: Vec<f32> = (0..t.numel()).map(|_| (r.normal() * 0.1) as f32).collect();
+            s.set_unchecked(t.name, Tensor::new(t.shape.clone(), data).unwrap());
+        }
+        s
+    }
+
+    #[test]
+    fn pipeline_roundtrip_clean_link() {
+        let store = fake_store(1);
+        let q = QualityConfig { phi: 4, group: 16 };
+        let (edge, rep) =
+            deploy(&store, q, AssignMode::Nearest, LinkConfig::default(), 7).unwrap();
+        assert!(rep.memory_savings() > 0.75, "savings {}", rep.memory_savings());
+        assert!(rep.mean_rel_error < 0.8);
+        assert!(rep.zeros_fraction > 0.0);
+        assert_eq!(rep.transfer.retransmissions, 0);
+        // unquantized tensors untouched
+        assert_eq!(edge.get("f3w").unwrap().data(), store.get("f3w").unwrap().data());
+        // quantized tensors actually changed
+        assert_ne!(edge.get("c2w").unwrap().data(), store.get("c2w").unwrap().data());
+    }
+
+    #[test]
+    fn pipeline_survives_noisy_link() {
+        let store = fake_store(2);
+        let q = QualityConfig { phi: 4, group: 8 };
+        let noisy = LinkConfig { ber: 1e-5, ..Default::default() };
+        let (edge_clean, _) =
+            deploy(&store, q, AssignMode::Nearest, LinkConfig::default(), 3).unwrap();
+        let (edge_noisy, rep) = deploy(&store, q, AssignMode::Nearest, noisy, 3).unwrap();
+        // ARQ must deliver bit-identical weights despite corruption
+        for t in ["c1w", "c2w", "f1w", "f2w"] {
+            assert_eq!(
+                edge_clean.get(t).unwrap().data(),
+                edge_noisy.get(t).unwrap().data(),
+                "{t} differs after noisy transit"
+            );
+        }
+        assert!(rep.transfer.retransmissions > 0);
+    }
+
+    #[test]
+    fn phi1_ships_fewer_bits_than_phi4() {
+        let store = fake_store(3);
+        let r1 = deploy(
+            &store,
+            QualityConfig { phi: 1, group: 16 },
+            AssignMode::Nearest,
+            LinkConfig::default(),
+            1,
+        )
+        .unwrap()
+        .1;
+        let r4 = deploy(
+            &store,
+            QualityConfig { phi: 4, group: 16 },
+            AssignMode::Nearest,
+            LinkConfig::default(),
+            1,
+        )
+        .unwrap()
+        .1;
+        assert!(r1.container_bytes < r4.container_bytes);
+        assert!(r1.mean_rel_error >= r4.mean_rel_error - 1e-9);
+    }
+
+    #[test]
+    fn decoder_op_counts_match_code_population() {
+        let store = fake_store(4);
+        let (_, rep) = deploy(
+            &store,
+            QualityConfig { phi: 4, group: 16 },
+            AssignMode::Nearest,
+            LinkConfig::default(),
+            5,
+        )
+        .unwrap();
+        let total = rep.decoder_ops.exponent_adds
+            + rep.decoder_ops.sign_flips
+            + rep.decoder_ops.zero_outputs;
+        assert!(total > 0);
+        // every zero code produced exactly one zero_output
+        assert!(rep.decoder_ops.zero_outputs as f64 > 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! On-device FC fine-tuning (paper Table III rows "5 epochs only FC" /
+//! "20 epochs only FC"), driven entirely from rust over two AOT artifacts:
+//!
+//!   * `lenet_features_b128` — frozen (quantized) backbone → 84-d features,
+//!   * `fc_step_b128`        — one SGD step on the fp32 head.
+//!
+//! The backbone weights stay encoded/approximate; only the head updates —
+//! exactly the paper's protocol, but running at the edge.
+
+use anyhow::{ensure, Result};
+
+use crate::model::store::{Dataset, WeightStore};
+use crate::runtime::client::{ArgValue, Runtime};
+use crate::tensor::{ops, Tensor};
+use crate::util::rng::Rng;
+
+pub const STEP_BATCH: usize = 128;
+
+/// Outcome of a fine-tuning run.
+#[derive(Clone, Debug)]
+pub struct FinetuneReport {
+    pub epochs: usize,
+    pub lr: f32,
+    /// Mean loss per epoch.
+    pub losses: Vec<f32>,
+    pub acc_before: f64,
+    pub acc_after: f64,
+}
+
+/// Compute backbone features for a whole dataset via the PJRT artifact.
+pub fn backbone_features(
+    rt: &mut Runtime,
+    store: &WeightStore,
+    data: &Dataset,
+) -> Result<Tensor> {
+    let exe = rt.load("lenet_features_b128")?;
+    let n = data.len();
+    ensure!(n % STEP_BATCH == 0, "dataset size {n} not divisible by {STEP_BATCH}");
+    let backbone = ["c1w", "c1b", "c2w", "c2b", "f1w", "f1b", "f2w", "f2b"];
+    let mut feats = Vec::with_capacity(n * 84);
+    for start in (0..n).step_by(STEP_BATCH) {
+        let mut args = vec![ArgValue::F32(data.batch(start, STEP_BATCH))];
+        for name in backbone {
+            args.push(ArgValue::F32(store.get(name)?.clone()));
+        }
+        let out = exe.run(&args)?;
+        feats.extend_from_slice(out[0].data());
+    }
+    Tensor::new(vec![n, 84], feats)
+}
+
+fn one_hot(labels: &[i32]) -> Tensor {
+    let mut data = vec![0.0f32; labels.len() * 10];
+    for (i, &y) in labels.iter().enumerate() {
+        data[i * 10 + y as usize] = 1.0;
+    }
+    Tensor::new(vec![labels.len(), 10], data).unwrap()
+}
+
+/// Head accuracy given precomputed features.
+pub fn head_accuracy(feats: &Tensor, y: &[i32], w: &Tensor, b: &Tensor) -> Result<f64> {
+    let logits = ops::add_bias(&ops::matmul(feats, w)?, b)?;
+    let preds = ops::argmax_rows(&logits);
+    let hits = preds.iter().zip(y).filter(|(&p, &t)| p as i32 == t).count();
+    Ok(hits as f64 / y.len().max(1) as f64)
+}
+
+/// Fine-tune the fp32 head on-device. Returns (w', b', report).
+pub fn finetune_fc(
+    rt: &mut Runtime,
+    store: &WeightStore,
+    train: &Dataset,
+    test: &Dataset,
+    epochs: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(Tensor, Tensor, FinetuneReport)> {
+    let train_feats = backbone_features(rt, store, train)?;
+    let test_feats = backbone_features(rt, store, test)?;
+
+    let mut w = store.get("f3w")?.clone();
+    let mut b = store.get("f3b")?.clone();
+    let acc_before = head_accuracy(&test_feats, &test.y, &w, &b)?;
+
+    let step = rt.load("fc_step_b128")?;
+    let mut rng = Rng::new(seed);
+    let n = train.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut losses = Vec::with_capacity(epochs);
+
+    for _ep in 0..epochs {
+        rng.shuffle(&mut order);
+        let mut tot = 0.0f32;
+        let mut steps = 0;
+        for chunk in order.chunks(STEP_BATCH) {
+            if chunk.len() < STEP_BATCH {
+                break;
+            }
+            // gather the feature rows + labels of this shuffled batch
+            let mut fb = Vec::with_capacity(STEP_BATCH * 84);
+            let mut yb = Vec::with_capacity(STEP_BATCH);
+            for &i in chunk {
+                fb.extend_from_slice(&train_feats.data()[i * 84..(i + 1) * 84]);
+                yb.push(train.y[i]);
+            }
+            let out = step.run(&[
+                ArgValue::F32(Tensor::new(vec![STEP_BATCH, 84], fb)?),
+                ArgValue::F32(one_hot(&yb)),
+                ArgValue::F32(w.clone()),
+                ArgValue::F32(b.clone()),
+                ArgValue::Scalar(lr),
+            ])?;
+            tot += out[0].data()[0];
+            w = out[1].clone();
+            b = out[2].clone();
+            steps += 1;
+        }
+        losses.push(tot / steps.max(1) as f32);
+    }
+
+    let acc_after = head_accuracy(&test_feats, &test.y, &w, &b)?;
+    Ok((
+        w,
+        b,
+        FinetuneReport { epochs, lr, losses, acc_before, acc_after },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_hot_layout() {
+        let t = one_hot(&[2, 0]);
+        assert_eq!(t.shape(), &[2, 10]);
+        assert_eq!(t.at2(0, 2), 1.0);
+        assert_eq!(t.at2(1, 0), 1.0);
+        assert_eq!(t.data().iter().sum::<f32>(), 2.0);
+    }
+
+    #[test]
+    fn head_accuracy_perfect_and_zero() {
+        // features = identity rows, head = identity -> logits pick the label
+        let feats = Tensor::new(vec![2, 84], {
+            let mut d = vec![0.0; 2 * 84];
+            d[3] = 1.0; // row 0 -> class 3
+            d[84 + 7] = 1.0; // row 1 -> class 7
+            d
+        })
+        .unwrap();
+        let mut wdata = vec![0.0f32; 84 * 10];
+        for c in 0..10 {
+            wdata[c * 10 + c] = 1.0; // feature c votes class c
+        }
+        let w = Tensor::new(vec![84, 10], wdata).unwrap();
+        let b = Tensor::zeros(vec![10]);
+        assert_eq!(head_accuracy(&feats, &[3, 7], &w, &b).unwrap(), 1.0);
+        assert_eq!(head_accuracy(&feats, &[0, 0], &w, &b).unwrap(), 0.0);
+    }
+}

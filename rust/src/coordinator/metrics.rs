@@ -1,0 +1,119 @@
+//! Serving metrics: counters + latency recorder with percentile snapshots.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::{self, Value};
+use crate::util::stats;
+
+/// Process-wide metrics registry (cheap enough for the serving rates here;
+/// the §Perf pass measures its overhead explicitly).
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    latencies: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn observe_s(&self, name: &str, seconds: f64) {
+        self.latencies
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(seconds);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    /// (mean, p50, p95, p99, max) over a latency series, seconds.
+    pub fn latency_summary(&self, name: &str) -> Option<(f64, f64, f64, f64, f64)> {
+        let g = self.latencies.lock().unwrap();
+        let xs = g.get(name)?;
+        if xs.is_empty() {
+            return None;
+        }
+        Some((
+            stats::mean(xs),
+            stats::percentile(xs, 50.0),
+            stats::percentile(xs, 95.0),
+            stats::percentile(xs, 99.0),
+            xs.iter().cloned().fold(f64::MIN, f64::max),
+        ))
+    }
+
+    /// JSON snapshot (counters + latency summaries in ms).
+    pub fn snapshot(&self) -> Value {
+        let counters = self.counters.lock().unwrap();
+        let lats = self.latencies.lock().unwrap();
+        let mut obj = BTreeMap::new();
+        for (k, v) in counters.iter() {
+            obj.insert(format!("counter.{k}"), json::num(*v as f64));
+        }
+        for (k, xs) in lats.iter() {
+            if xs.is_empty() {
+                continue;
+            }
+            obj.insert(format!("latency_ms.{k}.mean"), json::num(stats::mean(xs) * 1e3));
+            obj.insert(
+                format!("latency_ms.{k}.p50"),
+                json::num(stats::percentile(xs, 50.0) * 1e3),
+            );
+            obj.insert(
+                format!("latency_ms.{k}.p95"),
+                json::num(stats::percentile(xs, 95.0) * 1e3),
+            );
+            obj.insert(format!("latency_ms.{k}.count"), json::num(xs.len() as f64));
+        }
+        Value::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc("req", 1);
+        m.inc("req", 2);
+        assert_eq!(m.counter("req"), 3);
+        assert_eq!(m.counter("other"), 0);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_s("infer", i as f64 / 1000.0);
+        }
+        let (mean, p50, p95, _p99, max) = m.latency_summary("infer").unwrap();
+        assert!((mean - 0.0505).abs() < 1e-9);
+        assert!((p50 - 0.0505).abs() < 0.001);
+        assert!(p95 > 0.09 && p95 <= 0.1);
+        assert_eq!(max, 0.1);
+    }
+
+    #[test]
+    fn snapshot_is_json() {
+        let m = Metrics::new();
+        m.inc("served", 5);
+        m.observe_s("e2e", 0.002);
+        let snap = m.snapshot().to_json();
+        assert!(snap.contains("counter.served"));
+        assert!(snap.contains("latency_ms.e2e.mean"));
+        // parses back
+        assert!(crate::util::json::parse(&snap).is_ok());
+    }
+}

@@ -1,0 +1,8 @@
+//! L3 coordinator: deployment pipeline, router, batcher, server, fine-tune.
+
+pub mod batcher;
+pub mod deploy;
+pub mod finetune;
+pub mod metrics;
+pub mod router;
+pub mod server;

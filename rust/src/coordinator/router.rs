@@ -1,0 +1,122 @@
+//! Quality-aware request routing.
+//!
+//! Two routing decisions live here:
+//!   1. **Deployment routing** — which quality (phi, N) a device receives,
+//!      driven by its memory budget ([`DeviceProfile::select_quality`]).
+//!   2. **Serving routing** — which compiled artifact executes a batch,
+//!      driven by model kind and batch size (batch-1 for latency-critical
+//!      singletons, batch-32 for the batched path, batch-128 for bulk eval).
+
+use anyhow::{bail, Result};
+
+use crate::device::{DeviceProfile, QualityConfig};
+use crate::model::bits;
+use crate::model::meta::{ModelKind, ModelMeta};
+use crate::quant::qsq::AssignMode;
+
+/// A deployment decision for one device.
+#[derive(Clone, Debug)]
+pub struct DeployPlan {
+    pub device: String,
+    pub quality: QualityConfig,
+    pub mode: AssignMode,
+    pub estimated_bits: u64,
+}
+
+/// Decide the quality level for every device in a roster.
+pub fn plan_deployments(
+    meta: &ModelMeta,
+    devices: &[DeviceProfile],
+    mode: AssignMode,
+) -> Vec<Result<DeployPlan>> {
+    devices
+        .iter()
+        .map(|d| {
+            let bits_at = |phi: u32, group: usize| {
+                // whole-model footprint: encoded quantized tensors + fp rest
+                bits::model_bits(meta, phi, group).encoded_bits
+            };
+            match d.select_quality(bits_at) {
+                Some(q) => Ok(DeployPlan {
+                    device: d.name.clone(),
+                    quality: q,
+                    mode,
+                    estimated_bits: bits_at(q.phi, q.group),
+                }),
+                None => bail!(
+                    "device {} cannot fit {} at any quality",
+                    d.name,
+                    meta.kind.name()
+                ),
+            }
+        })
+        .collect()
+}
+
+/// Artifact name for (model, batch) on the serving path.
+pub fn artifact_for(kind: ModelKind, batch: usize) -> Result<(String, usize)> {
+    // supported compiled batch sizes, ascending
+    const SIZES: [usize; 3] = [1, 32, 128];
+    if batch == 0 {
+        bail!("empty batch");
+    }
+    let b = *SIZES
+        .iter()
+        .find(|&&s| batch <= s)
+        .unwrap_or(&SIZES[SIZES.len() - 1]);
+    Ok((format!("{}_fwd_b{}", kind.name(), b), b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::ModelMeta;
+
+    #[test]
+    fn artifact_selection() {
+        assert_eq!(
+            artifact_for(ModelKind::Lenet, 1).unwrap(),
+            ("lenet_fwd_b1".into(), 1)
+        );
+        assert_eq!(
+            artifact_for(ModelKind::Lenet, 7).unwrap(),
+            ("lenet_fwd_b32".into(), 32)
+        );
+        assert_eq!(
+            artifact_for(ModelKind::Convnet, 32).unwrap(),
+            ("convnet_fwd_b32".into(), 32)
+        );
+        assert_eq!(
+            artifact_for(ModelKind::Convnet, 100).unwrap(),
+            ("convnet_fwd_b128".into(), 128)
+        );
+        // oversize batches clamp to the largest artifact (caller splits)
+        assert_eq!(artifact_for(ModelKind::Lenet, 500).unwrap().1, 128);
+        assert!(artifact_for(ModelKind::Lenet, 0).is_err());
+    }
+
+    #[test]
+    fn deployment_plans_scale_with_device() {
+        let meta = ModelMeta::lenet();
+        let roster = crate::device::DeviceProfile::roster();
+        let plans = plan_deployments(&meta, &roster, AssignMode::SigmaSearch);
+        // every roster device fits LeNet at some quality
+        for p in &plans {
+            assert!(p.is_ok(), "{p:?}");
+        }
+        // server-class device gets the best quality
+        let server = plans.last().unwrap().as_ref().unwrap();
+        assert_eq!(server.quality.phi, 4);
+    }
+
+    #[test]
+    fn estimated_bits_fit_budget() {
+        let meta = ModelMeta::convnet();
+        let roster = crate::device::DeviceProfile::roster();
+        for (d, p) in roster.iter().zip(plan_deployments(&meta, &roster, AssignMode::Nearest)) {
+            if let Ok(plan) = p {
+                assert!(plan.estimated_bits / 8 <= d.model_budget_bytes, "{}", d.name);
+            }
+        }
+    }
+}

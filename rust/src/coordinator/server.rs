@@ -1,0 +1,339 @@
+//! TCP inference server: JSON-lines protocol, dynamic batching, one PJRT
+//! owner thread.
+//!
+//! Protocol (one JSON object per line):
+//! ```text
+//! -> {"id": 7, "pixels": [ ... H*W*C floats ... ]}
+//! <- {"id": 7, "pred": 3, "latency_us": 812, "batch": 32}
+//! ```
+//! Each connection is synchronous (request → response); concurrency comes
+//! from multiple connections feeding the shared [`BatchQueue`], which the
+//! PJRT worker drains in padded batches of the compiled artifact size.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::batcher::BatchQueue;
+use super::metrics::Metrics;
+use crate::model::meta::ModelKind;
+use crate::model::store::WeightStore;
+use crate::runtime::client::{ArgValue, Runtime};
+use crate::tensor::{ops, Tensor};
+use crate::util::json::{self, Value};
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub model: ModelKind,
+    /// Compiled artifact batch (the padded execution size).
+    pub batch: usize,
+    /// Dynamic batching window.
+    pub max_delay: Duration,
+    /// Bind address, e.g. "127.0.0.1:0" (port 0 = ephemeral).
+    pub bind: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            model: ModelKind::Lenet,
+            batch: 32,
+            max_delay: Duration::from_millis(5),
+            bind: "127.0.0.1:0".into(),
+        }
+    }
+}
+
+struct Job {
+    id: u64,
+    pixels: Vec<f32>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Value>,
+}
+
+/// A running server; `stop()` for graceful shutdown.
+pub struct Server {
+    pub port: u16,
+    pub metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    queue: Arc<BatchQueue<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the server; blocks until the PJRT worker has loaded weights and
+    /// compiled the artifact (so the first request is never a cold start).
+    pub fn start(artifacts: PathBuf, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.bind)
+            .with_context(|| format!("binding {}", cfg.bind))?;
+        listener.set_nonblocking(true)?;
+        let port = listener.local_addr()?.port();
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(BatchQueue::<Job>::new(cfg.batch, cfg.max_delay));
+        let metrics = Arc::new(Metrics::new());
+
+        // --- PJRT worker (owns the non-Send Runtime) ------------------------
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let wq = queue.clone();
+        let wm = metrics.clone();
+        let wcfg = cfg.clone();
+        let worker = thread::Builder::new().name("pjrt-worker".into()).spawn(move || {
+            let setup = (|| -> Result<_> {
+                let mut rt = Runtime::new(&artifacts)?;
+                let store = WeightStore::load(&artifacts, wcfg.model)?;
+                let (art, _) =
+                    super::router::artifact_for(wcfg.model, wcfg.batch)?;
+                let exe = rt.load(&art)?;
+                Ok((rt, store, exe))
+            })();
+            let (_rt, store, exe) = match setup {
+                Ok(v) => {
+                    let _ = ready_tx.send(Ok(()));
+                    v
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let (h, w, c) = wcfg.model.input_hwc();
+            let pix = h * w * c;
+            let weights: Vec<Tensor> = store.ordered().into_iter().cloned().collect();
+
+            while let Some(batch) = wq.pop_batch() {
+                let t0 = Instant::now();
+                let n = batch.len();
+                // pad to the compiled batch with zeros
+                let mut xdata = vec![0.0f32; wcfg.batch * pix];
+                for (i, job) in batch.iter().enumerate() {
+                    xdata[i * pix..(i + 1) * pix].copy_from_slice(&job.payload.pixels);
+                }
+                let x = Tensor::new(vec![wcfg.batch, h, w, c], xdata).unwrap();
+                let mut args = vec![ArgValue::F32(x)];
+                args.extend(weights.iter().map(|t| ArgValue::F32(t.clone())));
+                match exe.run(&args) {
+                    Ok(out) => {
+                        let preds = ops::argmax_rows(&out[0]);
+                        let infer_s = t0.elapsed().as_secs_f64();
+                        wm.observe_s("infer_batch", infer_s);
+                        wm.inc("batches", 1);
+                        wm.inc("requests", n as u64);
+                        for (i, job) in batch.into_iter().enumerate() {
+                            let e2e = job.payload.enqueued.elapsed();
+                            wm.observe_s("request_e2e", e2e.as_secs_f64());
+                            let resp = json::obj(vec![
+                                ("id", json::num(job.payload.id as f64)),
+                                ("pred", json::num(preds[i] as f64)),
+                                ("latency_us", json::num(e2e.as_micros() as f64)),
+                                ("batch", json::num(n as f64)),
+                            ]);
+                            let _ = job.payload.resp.send(resp);
+                        }
+                    }
+                    Err(e) => {
+                        for job in batch {
+                            let resp = json::obj(vec![
+                                ("id", json::num(job.payload.id as f64)),
+                                ("error", json::s(&format!("{e:#}"))),
+                            ]);
+                            let _ = job.payload.resp.send(resp);
+                        }
+                    }
+                }
+            }
+        })?;
+        ready_rx
+            .recv()
+            .context("pjrt worker died during startup")??;
+
+        // --- acceptor -------------------------------------------------------
+        let aq = queue.clone();
+        let ash = shutdown.clone();
+        let am = metrics.clone();
+        let pix_expected = {
+            let (h, w, c) = cfg.model.input_hwc();
+            h * w * c
+        };
+        let acceptor = thread::Builder::new().name("acceptor".into()).spawn(move || {
+            let mut conns: Vec<JoinHandle<()>> = Vec::new();
+            while !ash.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let q = aq.clone();
+                        let m = am.clone();
+                        let sh = ash.clone();
+                        conns.push(
+                            thread::Builder::new()
+                                .name("conn".into())
+                                .spawn(move || {
+                                    let _ = handle_conn(stream, q, m, pix_expected, sh);
+                                })
+                                .unwrap(),
+                        );
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        })?;
+
+        Ok(Server {
+            port,
+            metrics,
+            shutdown,
+            queue,
+            handles: vec![worker, acceptor],
+        })
+    }
+
+    /// Graceful shutdown: stop accepting, drain the queue, join threads.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // give in-flight connection reads a beat, then close the queue
+        thread::sleep(Duration::from_millis(20));
+        self.queue.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    queue: Arc<BatchQueue<Job>>,
+    metrics: Arc<Metrics>,
+    pix_expected: usize,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // read timeout so the thread notices shutdown even on idle connections
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    // `line` persists across timeout retries: read_line appends, so a line
+    // split by a read timeout reassembles on the next pass.
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) if line.ends_with('\n') => {}
+            Ok(_) => continue, // partial line at EOF-less boundary; keep reading
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shutdown.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            line.clear();
+            continue;
+        }
+        let reply = match parse_request(&line, pix_expected) {
+            Ok((id, pixels)) => {
+                let (tx, rx) = mpsc::channel();
+                let job = Job { id, pixels, enqueued: Instant::now(), resp: tx };
+                if !queue.push(job) {
+                    json::obj(vec![("error", json::s("server shutting down"))])
+                } else {
+                    match rx.recv_timeout(Duration::from_secs(30)) {
+                        Ok(v) => v,
+                        Err(_) => json::obj(vec![("error", json::s("inference timeout"))]),
+                    }
+                }
+            }
+            Err(e) => {
+                metrics.inc("bad_requests", 1);
+                json::obj(vec![("error", json::s(&format!("{e:#}")))])
+            }
+        };
+        writer.write_all(reply.to_json().as_bytes())?;
+        writer.write_all(b"\n")?;
+        line.clear();
+    }
+}
+
+fn parse_request(line: &str, pix_expected: usize) -> Result<(u64, Vec<f32>)> {
+    let v = json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let id = v
+        .get("id")
+        .as_f64()
+        .context("missing id")? as u64;
+    let pixels: Vec<f32> = v
+        .get("pixels")
+        .as_arr()
+        .context("missing pixels")?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(0.0) as f32)
+        .collect();
+    if pixels.len() != pix_expected {
+        bail!("expected {pix_expected} pixels, got {}", pixels.len());
+    }
+    Ok((id, pixels))
+}
+
+/// Simple blocking client for examples/tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Send one request, wait for its reply.
+    pub fn infer(&mut self, id: u64, pixels: &[f32]) -> Result<Value> {
+        let req = json::obj(vec![
+            ("id", json::num(id as f64)),
+            (
+                "pixels",
+                Value::Arr(pixels.iter().map(|&p| json::num(p as f64)).collect()),
+            ),
+        ]);
+        self.writer.write_all(req.to_json().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_validates() {
+        assert!(parse_request("{\"id\":1,\"pixels\":[0.0,1.0]}", 2).is_ok());
+        assert!(parse_request("{\"id\":1,\"pixels\":[0.0]}", 2).is_err());
+        assert!(parse_request("{\"pixels\":[0.0,1.0]}", 2).is_err());
+        assert!(parse_request("not json", 2).is_err());
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = ServerConfig::default();
+        assert_eq!(c.batch, 32);
+        assert!(c.bind.ends_with(":0"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Rust-side synthetic request generators (load-testing traffic for the
+//! serving path).  Evaluation always uses the python-generated .npy splits
+//! in `artifacts/data/` so both languages score identical examples; these
+//! generators only have to produce *plausible* in-distribution traffic.
+
+pub mod synth;
+
+pub use synth::RequestGen;

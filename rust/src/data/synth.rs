@@ -1,0 +1,129 @@
+//! Procedural image generators for serving-load traffic.
+//!
+//! Deliberately simpler than the python training generators (blobby digits /
+//! colour patches), but shape- and range-compatible, so the server's input
+//! validation and the batcher see realistic tensors at line rate.
+
+use crate::model::meta::ModelKind;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Streaming generator of (image, nominal_label) pairs for one model.
+pub struct RequestGen {
+    kind: ModelKind,
+    rng: Rng,
+}
+
+impl RequestGen {
+    pub fn new(kind: ModelKind, seed: u64) -> RequestGen {
+        RequestGen { kind, rng: Rng::new(seed) }
+    }
+
+    /// Next synthetic request image ([H, W, C] in [0,1]) and its class id.
+    pub fn next(&mut self) -> (Tensor, usize) {
+        let label = self.rng.below(10) as usize;
+        let img = match self.kind {
+            ModelKind::Lenet => self.digit_blob(label),
+            ModelKind::Convnet => self.colour_patch(label),
+        };
+        (img, label)
+    }
+
+    /// A noisy stroke-blob vaguely shaped by the label (28x28x1).
+    fn digit_blob(&mut self, label: usize) -> Tensor {
+        let mut data = vec![0.0f32; 28 * 28];
+        // label-dependent arc of gaussian blobs
+        let cx = 10.0 + (label % 5) as f64 * 2.0;
+        let cy = 8.0 + (label / 5) as f64 * 6.0;
+        let n_blobs = 6 + label % 4;
+        for b in 0..n_blobs {
+            let t = b as f64 / n_blobs as f64 * std::f64::consts::PI * 1.5;
+            let bx = cx + 6.0 * t.cos() + self.rng.range_f64(-1.0, 1.0);
+            let by = cy + 6.0 * t.sin() + self.rng.range_f64(-1.0, 1.0);
+            for i in 0..28 {
+                for j in 0..28 {
+                    let d2 = (i as f64 - by).powi(2) + (j as f64 - bx).powi(2);
+                    let v = (-d2 / 3.0).exp() as f32;
+                    let idx = i * 28 + j;
+                    if v > data[idx] {
+                        data[idx] = v;
+                    }
+                }
+            }
+        }
+        for v in data.iter_mut() {
+            *v = (*v + self.rng.range_f64(-0.08, 0.08) as f32).clamp(0.0, 1.0);
+        }
+        Tensor::new(vec![28, 28, 1], data).unwrap()
+    }
+
+    /// A coloured shape patch keyed by the label (32x32x3).
+    fn colour_patch(&mut self, label: usize) -> Tensor {
+        let base = [
+            [0.85, 0.15, 0.15],
+            [0.95, 0.35, 0.10],
+            [0.15, 0.70, 0.20],
+            [0.15, 0.45, 0.85],
+            [0.80, 0.20, 0.80],
+            [0.90, 0.85, 0.20],
+            [0.20, 0.80, 0.80],
+            [0.55, 0.30, 0.85],
+            [0.90, 0.90, 0.90],
+            [0.55, 0.55, 0.55],
+        ][label];
+        let cy = self.rng.range_f64(12.0, 20.0);
+        let cx = self.rng.range_f64(12.0, 20.0);
+        let r = self.rng.range_f64(6.0, 10.0);
+        let mut data = vec![0.0f32; 32 * 32 * 3];
+        for i in 0..32 {
+            for j in 0..32 {
+                let inside = ((i as f64 - cy).powi(2) + (j as f64 - cx).powi(2)).sqrt() < r;
+                for c in 0..3 {
+                    let bg = 0.2 + 0.1 * (i as f32 / 32.0);
+                    let v = if inside { base[c] as f32 } else { bg };
+                    data[(i * 32 + j) * 3 + c] =
+                        (v + self.rng.range_f64(-0.1, 0.1) as f32).clamp(0.0, 1.0);
+                }
+            }
+        }
+        Tensor::new(vec![32, 32, 3], data).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_range() {
+        let mut g = RequestGen::new(ModelKind::Lenet, 1);
+        let (img, label) = g.next();
+        assert_eq!(img.shape(), &[28, 28, 1]);
+        assert!(label < 10);
+        assert!(img.data().iter().all(|v| (0.0..=1.0).contains(v)));
+
+        let mut g = RequestGen::new(ModelKind::Convnet, 1);
+        let (img, _) = g.next();
+        assert_eq!(img.shape(), &[32, 32, 3]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = RequestGen::new(ModelKind::Lenet, 5);
+        let mut b = RequestGen::new(ModelKind::Lenet, 5);
+        let (ia, la) = a.next();
+        let (ib, lb) = b.next();
+        assert_eq!(la, lb);
+        assert_eq!(ia.data(), ib.data());
+    }
+
+    #[test]
+    fn labels_cover_classes() {
+        let mut g = RequestGen::new(ModelKind::Convnet, 9);
+        let mut seen = [false; 10];
+        for _ in 0..200 {
+            seen[g.next().1] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

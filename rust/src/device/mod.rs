@@ -1,0 +1,7 @@
+//! Edge-device profiles and quality selection — the paper's Fig. 3 point:
+//! edge hardware spans orders of magnitude in memory/compute, so the
+//! deployment must pick a quality level (phi, N) per device.
+
+pub mod profile;
+
+pub use profile::{DeviceClass, DeviceProfile, QualityConfig};

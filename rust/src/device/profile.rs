@@ -1,0 +1,155 @@
+//! Device classes with memory/compute/link budgets (Fig.-3-style spread) and
+//! the quality-selection policy the router uses.
+
+use crate::channel::LinkConfig;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    /// MCU-class: tens of KB of SRAM for weights (think Cortex-M).
+    McuTiny,
+    /// Small FPGA / embedded Linux: ~1 MB budget.
+    EdgeSmall,
+    /// Larger edge SoC: ~16 MB budget.
+    EdgeLarge,
+    /// Workstation-class fallback (full precision is fine).
+    Server,
+}
+
+/// Resource budget of one device.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: String,
+    pub class: DeviceClass,
+    /// Bytes available for model storage.
+    pub model_budget_bytes: u64,
+    /// Sustained MACs per second (scales the latency model).
+    pub macs_per_s: f64,
+    /// Downlink characteristics for the model push.
+    pub link: LinkConfig,
+}
+
+/// Quality configuration chosen for a device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QualityConfig {
+    /// phi in {1, 2, 4}; higher = more levels = better accuracy.
+    pub phi: u32,
+    /// Nominal vector length N (per-tensor resolved via nearest divisor).
+    pub group: usize,
+}
+
+impl DeviceProfile {
+    /// The Fig.-3-style roster of devices used across examples/benches.
+    pub fn roster() -> Vec<DeviceProfile> {
+        vec![
+            DeviceProfile {
+                name: "mcu-m4".into(),
+                class: DeviceClass::McuTiny,
+                model_budget_bytes: 48 * 1024,
+                macs_per_s: 5e6,
+                link: LinkConfig { bandwidth_bps: 250e3, latency_s: 0.08, ..Default::default() },
+            },
+            DeviceProfile {
+                name: "edge-fpga-small".into(),
+                class: DeviceClass::EdgeSmall,
+                model_budget_bytes: 1 << 20,
+                macs_per_s: 2e8,
+                link: LinkConfig { bandwidth_bps: 5e6, latency_s: 0.03, ..Default::default() },
+            },
+            DeviceProfile {
+                name: "edge-soc-large".into(),
+                class: DeviceClass::EdgeLarge,
+                model_budget_bytes: 16 << 20,
+                macs_per_s: 5e9,
+                link: LinkConfig { bandwidth_bps: 50e6, latency_s: 0.01, ..Default::default() },
+            },
+            DeviceProfile {
+                name: "server".into(),
+                class: DeviceClass::Server,
+                model_budget_bytes: 1 << 30,
+                macs_per_s: 1e11,
+                link: LinkConfig { bandwidth_bps: 1e9, latency_s: 0.001, ..Default::default() },
+            },
+        ]
+    }
+
+    /// Pick the *highest* quality whose encoded model fits the budget.
+    /// `bits_at(phi, group)` estimates the encoded model size.
+    pub fn select_quality(
+        &self,
+        bits_at: impl Fn(u32, usize) -> u64,
+    ) -> Option<QualityConfig> {
+        // quality-ordered candidates: high phi + small N (best accuracy)
+        // down to low phi + large N (smallest model)
+        let candidates = [
+            (4u32, 8usize),
+            (4, 16),
+            (4, 32),
+            (2, 16),
+            (2, 32),
+            (1, 16),
+            (1, 32),
+            (1, 64),
+        ];
+        for (phi, group) in candidates {
+            if bits_at(phi, group) / 8 <= self.model_budget_bytes {
+                return Some(QualityConfig { phi, group });
+            }
+        }
+        None
+    }
+
+    /// Crude per-inference latency model: MACs / throughput.
+    pub fn inference_latency_s(&self, macs: u64) -> f64 {
+        macs as f64 / self.macs_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// size model: codes at code_bits(phi) + one f32 per group of 16k weights
+    fn bits(total_weights: u64) -> impl Fn(u32, usize) -> u64 {
+        move |phi, group| {
+            let cb = crate::quant::codes::code_bits(phi) as u64;
+            total_weights * cb + total_weights / group as u64 * 32
+        }
+    }
+
+    #[test]
+    fn bigger_device_gets_better_quality() {
+        let roster = DeviceProfile::roster();
+        let weights = 10_000_000u64; // 10M-param model
+        let q: Vec<Option<QualityConfig>> =
+            roster.iter().map(|d| d.select_quality(bits(weights))).collect();
+        // the MCU can't fit a 10M-weight model at any quality
+        assert!(q[0].is_none());
+        // larger devices pick phi=4
+        assert_eq!(q[2].unwrap().phi, 4);
+        assert_eq!(q[3].unwrap().phi, 4);
+    }
+
+    #[test]
+    fn mcu_fits_small_model() {
+        let mcu = &DeviceProfile::roster()[0];
+        let q = mcu.select_quality(bits(45_000)).unwrap(); // LeNet-scale
+        assert!(q.phi >= 1);
+    }
+
+    #[test]
+    fn latency_scales_inverse_compute() {
+        let roster = DeviceProfile::roster();
+        let macs = 1_000_000;
+        assert!(
+            roster[0].inference_latency_s(macs) > 100.0 * roster[3].inference_latency_s(macs)
+        );
+    }
+
+    #[test]
+    fn quality_order_prefers_accuracy() {
+        // an unconstrained device must get the best quality (phi=4, N=8)
+        let d = &DeviceProfile::roster()[3];
+        let q = d.select_quality(|_, _| 0).unwrap();
+        assert_eq!(q, QualityConfig { phi: 4, group: 8 });
+    }
+}

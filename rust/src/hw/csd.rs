@@ -1,0 +1,220 @@
+//! Canonic Signed Digit (CSD / non-adjacent form) arithmetic — the number
+//! representation behind the paper's Quality Scalable Multiplier (§V.B).
+//!
+//! CSD re-codes an integer with digits in {-1, 0, +1} such that no two
+//! adjacent digits are non-zero; it is the minimal-weight signed-digit form,
+//! so a shift-and-add multiplier needs one partial product per non-zero
+//! digit.  The QSM truncates least-significant non-zero digits to trade
+//! accuracy for partial products (energy).
+
+/// CSD digits, least-significant first, each in {-1, 0, +1}.
+pub type Digits = Vec<i8>;
+
+/// Non-adjacent-form encoding of `n`.
+pub fn to_csd(mut n: i64) -> Digits {
+    let mut out = Vec::new();
+    while n != 0 {
+        if n & 1 != 0 {
+            // d = 2 - (n mod 4) in {-1, +1}
+            let d = 2 - (n.rem_euclid(4)) as i8;
+            out.push(d);
+            n -= d as i64;
+        } else {
+            out.push(0);
+        }
+        n /= 2;
+    }
+    out
+}
+
+/// Value of a digit string.
+pub fn from_csd(d: &[i8]) -> i64 {
+    d.iter()
+        .enumerate()
+        .map(|(i, &di)| di as i64 * (1i64 << i))
+        .sum()
+}
+
+/// Number of non-zero digits (= partial products of a CSD multiplier).
+pub fn nonzero_count(d: &[i8]) -> usize {
+    d.iter().filter(|&&x| x != 0).count()
+}
+
+/// NAF property: no two adjacent non-zeros.
+pub fn is_canonic(d: &[i8]) -> bool {
+    d.windows(2).all(|w| w[0] == 0 || w[1] == 0)
+}
+
+/// Keep only the `k` most-significant non-zero digits (the QSM quality knob:
+/// everything below is clock-gated away).
+pub fn truncate_msd(d: &[i8], k: usize) -> Digits {
+    let mut out = d.to_vec();
+    let mut kept = 0;
+    for i in (0..out.len()).rev() {
+        if out[i] != 0 {
+            if kept < k {
+                kept += 1;
+            } else {
+                out[i] = 0;
+            }
+        }
+    }
+    out
+}
+
+/// Value-level k-term signed-power-of-two approximation of an f64 — the
+/// float mirror of `truncate_msd` and the exact semantics of the Pallas
+/// `csd_approx` kernel (greedy nearest power of two, MSD first).
+pub fn spt_approx(w: f64, digits: usize) -> f64 {
+    let mut out = 0.0;
+    let mut r = w;
+    for _ in 0..digits {
+        let mag = r.abs();
+        if mag <= 1e-30 {
+            break;
+        }
+        // nearest power of two: 2^floor(log2(4/3 * |r|))
+        let e = (mag * (4.0 / 3.0)).log2().floor();
+        let term = r.signum() * e.exp2();
+        out += term;
+        r -= term;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, forall};
+
+    #[test]
+    fn known_encodings() {
+        // 7 = 8 - 1
+        assert_eq!(from_csd(&to_csd(7)), 7);
+        assert_eq!(nonzero_count(&to_csd(7)), 2);
+        // 15 = 16 - 1
+        assert_eq!(nonzero_count(&to_csd(15)), 2);
+        // powers of two use one digit
+        assert_eq!(nonzero_count(&to_csd(64)), 1);
+        assert_eq!(to_csd(0), Vec::<i8>::new());
+    }
+
+    #[test]
+    fn prop_roundtrip_and_canonic() {
+        forall(
+            300,
+            |r| r.range_i64(-(1 << 40), 1 << 40),
+            |&n| {
+                let d = to_csd(n);
+                check(from_csd(&d) == n, "roundtrip")?;
+                check(is_canonic(&d), "adjacent non-zeros")?;
+                check(d.iter().all(|&x| (-1..=1).contains(&x)), "digit range")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_csd_weight_no_worse_than_binary() {
+        // CSD is the minimal-weight signed representation: non-zero count
+        // never exceeds the binary popcount.
+        forall(
+            300,
+            |r| r.range_i64(0, 1 << 40),
+            |&n| {
+                let d = to_csd(n);
+                check(
+                    nonzero_count(&d) <= (n as u64).count_ones() as usize,
+                    "csd heavier than binary",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn prop_truncation_error_bounded() {
+        // dropped digits are all strictly below the last kept one; with NAF
+        // non-adjacency their sum is < 2/3 * 2^(e_kept_min) * 2 — bound by
+        // the weight of the smallest kept digit.
+        forall(
+            200,
+            |r| (r.range_i64(1, 1 << 30), r.below(4) as usize + 1),
+            |&(n, k)| {
+                let d = to_csd(n);
+                let t = truncate_msd(&d, k);
+                if nonzero_count(&d) <= k {
+                    return check(from_csd(&t) == n, "truncation changed exact value");
+                }
+                let kept_min = t
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &x)| x != 0)
+                    .map(|(i, _)| i)
+                    .min()
+                    .unwrap();
+                let err = (n - from_csd(&t)).abs();
+                check(err < (1i64 << kept_min), "truncation error too large")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_truncation_monotone() {
+        forall(
+            200,
+            |r| r.range_i64(1, 1 << 30),
+            |&n| {
+                let d = to_csd(n);
+                let mut last = i64::MAX;
+                for k in 1..=6 {
+                    let err = (n - from_csd(&truncate_msd(&d, k))).abs();
+                    check(err <= last, "error grew with more digits")?;
+                    last = err;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn spt_matches_integer_csd_on_powers() {
+        for v in [1.0f64, -2.0, 0.5, 4.0, -0.25] {
+            assert_eq!(spt_approx(v, 1), v);
+        }
+    }
+
+    #[test]
+    fn prop_spt_error_shrinks() {
+        forall(
+            200,
+            |r| r.normal() * 3.0,
+            |&w| {
+                let mut last = f64::MAX;
+                for k in 1..=8 {
+                    let err = (spt_approx(w, k) - w).abs();
+                    check(err <= last + 1e-12, "spt error grew")?;
+                    last = err;
+                }
+                // k-term greedy SPT error halves at least geometrically (1/3 ratio
+                // per term is the theoretical bound; we check a loose 2^-k).
+                check(last <= w.abs() / 256.0 + 1e-9, "8-term error too large")
+            },
+        );
+    }
+
+    #[test]
+    fn spt_and_csd_truncation_agree_on_error_scale() {
+        // both are k-term SPT approximations; their error magnitudes should
+        // be within the weight of the smallest kept term of each other
+        for n in [7i64, 11, 100, 1000, 12345] {
+            for k in 1..=3usize {
+                let csd_err = (n - from_csd(&truncate_msd(&to_csd(n), k))).abs() as f64;
+                let spt_err = (n as f64 - spt_approx(n as f64, k)).abs();
+                let scale = (n as f64) / (1 << k) as f64 + 1.0;
+                assert!(
+                    (csd_err - spt_err).abs() <= scale,
+                    "n={n} k={k}: csd {csd_err} vs spt {spt_err}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Bit-level simulator of the on-chip shift-and-scale decoder (paper §III,
+//! Table II).
+//!
+//! The decoder receives a 3-bit code and the group's full-precision scalar
+//! and recovers the approximate weight using only:
+//!   * sign inversion  — XOR of the f32 sign bit,
+//!   * "shifts"        — on a float datapath, ±1/±2 in the exponent field
+//!     (a power-of-two scale *is* an exponent add — no multiplier needed).
+//!
+//! This is the float-datapath realization of Table II; saturation at the
+//! exponent-field boundaries (overflow → ±inf clamp, underflow → 0) is
+//! modelled the way a hardware implementation would clamp.
+
+use crate::quant::codes::Code;
+
+/// Operation counts for energy accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeOps {
+    pub exponent_adds: u32,
+    pub sign_flips: u32,
+    pub zero_outputs: u32,
+}
+
+/// Decode one (code, scalar) pair on the bit level.
+pub fn decode_bits(code: Code, alpha_bits: u32) -> (u32, DecodeOps) {
+    let mut ops = DecodeOps::default();
+    if code.is_skippable() {
+        ops.zero_outputs = 1;
+        return (0, ops); // +0.0
+    }
+
+    let sign = alpha_bits & 0x8000_0000;
+    let exp = (alpha_bits >> 23) & 0xFF;
+    let frac = alpha_bits & 0x007F_FFFF;
+
+    // zero / denormal scalar: decoder outputs zero (denormals flushed)
+    if exp == 0 {
+        ops.zero_outputs = 1;
+        return (sign, ops);
+    }
+    // NaN / inf scalar propagates unchanged magnitude-wise
+    let mut new_exp = exp;
+    let shifts = code.shifts();
+    if shifts > 0 && exp != 0xFF {
+        ops.exponent_adds = 1; // one adder pass regardless of shift amount
+        let e = exp + shifts;
+        new_exp = if e >= 0xFF { 0xFE } else { e }; // saturate below inf
+    }
+    let mut out_sign = sign;
+    if code.inverts() {
+        ops.sign_flips = 1;
+        out_sign ^= 0x8000_0000;
+    }
+    ((out_sign) | (new_exp << 23) | frac, ops)
+}
+
+/// Decode to f32 (convenience wrapper used by tests and the codec).
+pub fn decode_f32(code: Code, alpha: f32) -> (f32, DecodeOps) {
+    let (bits, ops) = decode_bits(code, alpha.to_bits());
+    (f32::from_bits(bits), ops)
+}
+
+/// Decode a whole code/scalar stream in the `[K, OC]` matmul layout
+/// (codes row-major `[K, OC]`, scalars `[K/group, OC]`); returns weights +
+/// total op counts.
+///
+/// §Perf: per-scalar-row 8-entry decode LUT — the bit-level datapath runs
+/// once per (scalar, code) pair instead of once per weight (8/group of the
+/// naive cost), and the inner loop becomes a table lookup.  Op counts come
+/// from a code histogram (ops are a pure function of the code for normal
+/// scalars).  Before/after in EXPERIMENTS.md §Perf.
+pub fn decode_stream(
+    codes: &[Code],
+    scalars: &[f32],
+    group: usize,
+    oc: usize,
+) -> (Vec<f32>, DecodeOps) {
+    assert!(oc > 0 && group > 0 && codes.len() % oc == 0);
+    let k = codes.len() / oc;
+    assert!(k % group == 0 && scalars.len() == (k / group) * oc);
+    let g = k / group;
+
+    let mut out = vec![0.0f32; codes.len()];
+    // per-group-row decode LUTs: value + op-bitfield (bit0=exp-add,
+    // bit1=sign-flip, bit2=zero-output), one entry per (column, code)
+    let mut lut = vec![0.0f32; oc * 8];
+    let mut ops_lut = vec![0u8; oc * 8];
+    let (mut ea, mut sf, mut zo) = (0u64, 0u64, 0u64);
+    for gi in 0..g {
+        let srow = &scalars[gi * oc..(gi + 1) * oc];
+        for (j, &alpha) in srow.iter().enumerate() {
+            for c in 0..8u8 {
+                let (v, ops) = decode_f32(Code(c), alpha);
+                lut[j * 8 + c as usize] = v;
+                ops_lut[j * 8 + c as usize] = (ops.exponent_adds as u8)
+                    | ((ops.sign_flips as u8) << 1)
+                    | ((ops.zero_outputs as u8) << 2);
+            }
+        }
+        for i in 0..group {
+            let ki = gi * group + i;
+            let crow = &codes[ki * oc..(ki + 1) * oc];
+            let orow = &mut out[ki * oc..(ki + 1) * oc];
+            for (j, (&c, o)) in crow.iter().zip(orow.iter_mut()).enumerate() {
+                let idx = j * 8 + (c.0 & 7) as usize;
+                *o = lut[idx];
+                let ops = ops_lut[idx];
+                ea += (ops & 1) as u64;
+                sf += ((ops >> 1) & 1) as u64;
+                zo += ((ops >> 2) & 1) as u64;
+            }
+        }
+    }
+    let total = DecodeOps {
+        exponent_adds: ea as u32,
+        sign_flips: sf as u32,
+        zero_outputs: zo as u32,
+    };
+    (out, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, forall};
+
+    #[test]
+    fn matches_arithmetic_decode() {
+        // bit-level decode == multiplier*alpha for normal-range scalars
+        // (skippable codes output hard +0.0; arithmetic may give -0.0)
+        for c in 0..8u8 {
+            let code = Code(c);
+            for alpha in [0.5f32, 1.0, -0.75, 3.25e-3, 1.7e8] {
+                let (got, _) = decode_f32(code, alpha);
+                let want = code.decode(alpha);
+                if code.is_skippable() {
+                    assert_eq!(got, 0.0, "code={c} alpha={alpha}");
+                } else {
+                    assert_eq!(got.to_bits(), want.to_bits(), "code={c} alpha={alpha}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn op_counts_match_table2() {
+        let (_, ops) = decode_f32(Code(0), 1.0);
+        assert_eq!(ops, DecodeOps { exponent_adds: 0, sign_flips: 0, zero_outputs: 1 });
+        let (_, ops) = decode_f32(Code(1), 1.0);
+        assert_eq!(ops, DecodeOps::default());
+        let (_, ops) = decode_f32(Code(3), 1.0);
+        assert_eq!(ops.exponent_adds, 1);
+        let (_, ops) = decode_f32(Code(6), 1.0);
+        assert_eq!((ops.exponent_adds, ops.sign_flips), (1, 1));
+    }
+
+    #[test]
+    fn saturates_near_overflow() {
+        let huge = f32::MAX; // exponent 0xFE
+        let (v, _) = decode_f32(Code(3), huge); // x4 would overflow
+        assert!(v.is_finite());
+        assert!(v >= huge);
+    }
+
+    #[test]
+    fn zero_scalar_decodes_zero() {
+        let (v, ops) = decode_f32(Code(2), 0.0);
+        assert_eq!(v, 0.0);
+        assert_eq!(ops.zero_outputs, 1);
+    }
+
+    #[test]
+    fn prop_bitlevel_equals_float_decode() {
+        forall(
+            300,
+            |r| (Code(r.below(8) as u8), (r.normal() * 0.3) as f32),
+            |&(code, alpha)| {
+                if alpha == 0.0 || !alpha.is_normal() {
+                    return Ok(());
+                }
+                let (got, _) = decode_f32(code, alpha);
+                let want = code.decode(alpha);
+                if code.is_skippable() {
+                    return check(got == 0.0, "skippable code not zero");
+                }
+                // stay clear of overflow/underflow saturation
+                if want.is_normal() {
+                    check(got.to_bits() == want.to_bits(), "bit mismatch")
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn stream_counts_accumulate() {
+        let codes = vec![Code(0), Code(1), Code(5), Code(3)];
+        let scalars = vec![1.0f32, 2.0];
+        let (ws, ops) = decode_stream(&codes, &scalars, 2, 1);
+        assert_eq!(ws, vec![0.0, 1.0, -4.0, 8.0]);
+        assert_eq!(ops.zero_outputs, 1);
+        assert_eq!(ops.sign_flips, 1);
+        assert_eq!(ops.exponent_adds, 2);
+    }
+
+    #[test]
+    fn stream_matches_quantizer_decode() {
+        // decode_stream must reproduce QuantizedTensor::decode exactly for a
+        // multi-column tensor (the layout bug class this test pins)
+        use crate::quant::qsq::{quantize, AssignMode};
+        use crate::util::prop::gen_weights;
+        let mut r = crate::util::rng::Rng::new(3);
+        let w = gen_weights(&mut r, 24 * 6, 0.2);
+        let qt = quantize(&w, &[24, 6], 4, 4, AssignMode::SigmaSearch).unwrap();
+        let (ws, _) = decode_stream(&qt.codes, &qt.scalars, qt.group, qt.oc);
+        assert_eq!(ws, qt.decode());
+    }
+}

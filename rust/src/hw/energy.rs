@@ -1,0 +1,156 @@
+//! Energy model — the constants behind the paper's Figs. 1/2 and §IV.C.
+//!
+//! Per-operation energies are the 45 nm numbers of Horowitz (ISSCC'14) as
+//! popularized by Han et al. / Yang et al. (the paper's reference [8]).  The
+//! paper itself states 6400 pJ for a 32-bit DRAM transfer (§IV.C); the
+//! Horowitz figure is 640 pJ.  Both are kept: `DRAM_32` (Horowitz) drives the
+//! Fig.-2 breakdown, `PAPER_DRAM_32` reproduces the paper's §IV.C/Fig.-10
+//! arithmetic exactly.
+
+/// pJ per operation (45 nm).
+pub mod pj {
+    pub const ADD_INT8: f64 = 0.03;
+    pub const ADD_INT32: f64 = 0.1;
+    pub const ADD_FP16: f64 = 0.4;
+    pub const ADD_FP32: f64 = 0.9;
+    pub const MUL_INT8: f64 = 0.2;
+    pub const MUL_INT32: f64 = 3.1;
+    pub const MUL_FP16: f64 = 1.1;
+    pub const MUL_FP32: f64 = 3.7;
+    /// 8 KB SRAM read, 32 bits.
+    pub const SRAM_32: f64 = 5.0;
+    /// DRAM read, 32 bits (Horowitz).
+    pub const DRAM_32: f64 = 640.0;
+    /// DRAM read, 32 bits, as stated by the paper (§IV.C).
+    pub const PAPER_DRAM_32: f64 = 6400.0;
+    /// One shift-and-add partial product in the QSM (shift is wiring; the
+    /// add is an int32 add plus registering overhead).
+    pub const QSM_PARTIAL_PRODUCT: f64 = 0.15;
+    /// Decoder ops: exponent add / sign flip are sub-pJ register ops.
+    pub const DECODER_OP: f64 = 0.02;
+}
+
+/// Fig.-1 rows: (label, pJ) for the energy-per-operation chart.
+pub fn fig1_rows() -> Vec<(&'static str, f64)> {
+    vec![
+        ("8b int ADD", pj::ADD_INT8),
+        ("32b int ADD", pj::ADD_INT32),
+        ("16b fp ADD", pj::ADD_FP16),
+        ("32b fp ADD", pj::ADD_FP32),
+        ("8b int MULT", pj::MUL_INT8),
+        ("32b int MULT", pj::MUL_INT32),
+        ("16b fp MULT", pj::MUL_FP16),
+        ("32b fp MULT", pj::MUL_FP32),
+        ("32b SRAM read", pj::SRAM_32),
+        ("32b DRAM read", pj::DRAM_32),
+    ]
+}
+
+/// Mutable ledger accumulated while simulating an inference or a transfer.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    pub dram_bits: u64,
+    pub sram_bits: u64,
+    pub fp_adds: u64,
+    pub fp_muls: u64,
+    pub int_adds: u64,
+    pub partial_products: u64,
+    pub decoder_ops: u64,
+    pub skipped_macs: u64,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn dram_pj(&self) -> f64 {
+        self.dram_bits as f64 / 32.0 * pj::DRAM_32
+    }
+    pub fn sram_pj(&self) -> f64 {
+        self.sram_bits as f64 / 32.0 * pj::SRAM_32
+    }
+    pub fn compute_pj(&self) -> f64 {
+        self.fp_adds as f64 * pj::ADD_FP32
+            + self.fp_muls as f64 * pj::MUL_FP32
+            + self.int_adds as f64 * pj::ADD_INT32
+            + self.partial_products as f64 * pj::QSM_PARTIAL_PRODUCT
+            + self.decoder_ops as f64 * pj::DECODER_OP
+    }
+    pub fn total_pj(&self) -> f64 {
+        self.dram_pj() + self.sram_pj() + self.compute_pj()
+    }
+
+    pub fn add(&mut self, other: &Ledger) {
+        self.dram_bits += other.dram_bits;
+        self.sram_bits += other.sram_bits;
+        self.fp_adds += other.fp_adds;
+        self.fp_muls += other.fp_muls;
+        self.int_adds += other.int_adds;
+        self.partial_products += other.partial_products;
+        self.decoder_ops += other.decoder_ops;
+        self.skipped_macs += other.skipped_macs;
+    }
+}
+
+/// Energy to move `bits` over the DRAM interface (paper §IV.C arithmetic).
+pub fn transfer_pj(bits: u64, paper_constant: bool) -> f64 {
+    let per32 = if paper_constant { pj::PAPER_DRAM_32 } else { pj::DRAM_32 };
+    bits as f64 / 32.0 * per32
+}
+
+/// The paper's "energy efficiency" metric for Fig. 10: the *savings* of
+/// moving the encoded model instead of the full-precision one.
+pub fn energy_efficiency(full_bits: u64, encoded_bits: u64) -> f64 {
+    if full_bits == 0 {
+        return 0.0;
+    }
+    1.0 - encoded_bits as f64 / full_bits as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_ordering() {
+        // DRAM must dominate everything else by >2 orders of magnitude
+        let rows = fig1_rows();
+        let dram = rows.iter().find(|r| r.0.contains("DRAM")).unwrap().1;
+        for (label, e) in &rows {
+            if !label.contains("DRAM") {
+                assert!(dram / e > 100.0, "{label}");
+            }
+        }
+    }
+
+    #[test]
+    fn ledger_totals() {
+        let mut l = Ledger::new();
+        l.dram_bits = 64;
+        l.fp_muls = 10;
+        l.fp_adds = 10;
+        assert!((l.dram_pj() - 2.0 * pj::DRAM_32).abs() < 1e-9);
+        assert!((l.compute_pj() - (10.0 * pj::MUL_FP32 + 10.0 * pj::ADD_FP32)).abs() < 1e-9);
+        let mut l2 = Ledger::new();
+        l2.add(&l);
+        assert_eq!(l2.total_pj(), l.total_pj());
+    }
+
+    #[test]
+    fn transfer_uses_paper_constant() {
+        assert_eq!(transfer_pj(32, true), pj::PAPER_DRAM_32);
+        assert_eq!(transfer_pj(32, false), pj::DRAM_32);
+        assert_eq!(transfer_pj(64, false), 2.0 * pj::DRAM_32);
+    }
+
+    #[test]
+    fn efficiency_metric() {
+        // 3-bit codes + 1 scalar per 16 weights vs 32-bit weights
+        let full = 1600 * 32u64;
+        let enc = 1600 * 3 + 100 * 32u64;
+        let eff = energy_efficiency(full, enc);
+        assert!(eff > 0.8 && eff < 0.95, "{eff}");
+        assert_eq!(energy_efficiency(0, 10), 0.0);
+    }
+}

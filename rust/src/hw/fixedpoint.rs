@@ -1,0 +1,115 @@
+//! Signed fixed-point Q(m.n) values on an i64 carrier — the number format of
+//! the multiplier datapath simulator.
+
+use anyhow::{bail, Result};
+
+/// Fixed-point format: `frac` fractional bits, `total` total bits (incl sign).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Format {
+    pub total: u32,
+    pub frac: u32,
+}
+
+impl Format {
+    pub const Q16_14: Format = Format { total: 16, frac: 14 };
+    pub const Q32_24: Format = Format { total: 32, frac: 24 };
+
+    pub fn new(total: u32, frac: u32) -> Result<Format> {
+        if total == 0 || total > 63 || frac >= total {
+            bail!("bad fixed-point format Q{total}.{frac}");
+        }
+        Ok(Format { total, frac })
+    }
+
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.frac) as f64
+    }
+
+    pub fn max_raw(&self) -> i64 {
+        (1i64 << (self.total - 1)) - 1
+    }
+
+    pub fn min_raw(&self) -> i64 {
+        -(1i64 << (self.total - 1))
+    }
+}
+
+/// A fixed-point value: raw integer + format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fixed {
+    pub raw: i64,
+    pub fmt: Format,
+}
+
+impl Fixed {
+    /// Quantize an f64 with round-to-nearest and saturation.
+    pub fn from_f64(v: f64, fmt: Format) -> Fixed {
+        let scaled = (v * fmt.scale()).round() as i64;
+        Fixed { raw: scaled.clamp(fmt.min_raw(), fmt.max_raw()), fmt }
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.raw as f64 / self.fmt.scale()
+    }
+
+    /// Quantization step of the format.
+    pub fn epsilon(fmt: Format) -> f64 {
+        1.0 / fmt.scale()
+    }
+
+    /// Exact product (raw i128 intermediate) renormalized to `fmt`.
+    pub fn mul(self, other: Fixed) -> Fixed {
+        assert_eq!(self.fmt, other.fmt);
+        let prod = self.raw as i128 * other.raw as i128;
+        let shifted = (prod >> self.fmt.frac) as i64;
+        Fixed { raw: shifted.clamp(self.fmt.min_raw(), self.fmt.max_raw()), fmt: self.fmt }
+    }
+
+    pub fn saturated(self) -> bool {
+        self.raw == self.fmt.max_raw() || self.raw == self.fmt.min_raw()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_within_epsilon() {
+        let fmt = Format::Q16_14;
+        for v in [-1.5f64, -0.333, 0.0, 0.125, 1.9] {
+            let f = Fixed::from_f64(v, fmt);
+            assert!((f.to_f64() - v).abs() <= Fixed::epsilon(fmt) / 2.0 + 1e-12, "{v}");
+        }
+    }
+
+    #[test]
+    fn saturates() {
+        let fmt = Format::Q16_14;
+        let f = Fixed::from_f64(100.0, fmt);
+        assert!(f.saturated());
+        assert!((f.to_f64() - 2.0).abs() < 0.01); // Q16.14 max ~ 1.99994
+    }
+
+    #[test]
+    fn multiply() {
+        let fmt = Format::Q32_24;
+        let a = Fixed::from_f64(1.5, fmt);
+        let b = Fixed::from_f64(-0.5, fmt);
+        assert!((a.mul(b).to_f64() + 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bad_formats_rejected() {
+        assert!(Format::new(0, 0).is_err());
+        assert!(Format::new(16, 16).is_err());
+        assert!(Format::new(64, 10).is_err());
+    }
+
+    #[test]
+    fn power_of_two_exact() {
+        let fmt = Format::Q16_14;
+        assert_eq!(Fixed::from_f64(0.5, fmt).to_f64(), 0.5);
+        assert_eq!(Fixed::from_f64(-0.25, fmt).to_f64(), -0.25);
+    }
+}

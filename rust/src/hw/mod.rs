@@ -1,0 +1,15 @@
+//! Bit-accurate hardware simulators for the paper's micro-architecture story
+//! (§V): the shift-and-scale decoder (Table II), the CSD quality-scalable
+//! multiplier with gate clocking, fixed-point arithmetic, the energy model
+//! (Figs. 1/2), and zero-skip statistics.
+//!
+//! These run on the L3 side; the TPU-shaped value models live in the Pallas
+//! kernels (DESIGN.md §Hardware-Adaptation).  Tests pin the two against each
+//! other.
+
+pub mod csd;
+pub mod decoder_rtl;
+pub mod energy;
+pub mod fixedpoint;
+pub mod multiplier;
+pub mod zskip;

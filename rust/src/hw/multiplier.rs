@@ -1,0 +1,243 @@
+//! The Quality Scalable Multiplier (paper §V.B): a shift-and-add multiplier
+//! whose weight operand is CSD-recoded and truncated to at most `max_digits`
+//! non-zero digits; partial-product rows beyond that are clock-gated.
+//!
+//! Bit-accurate in fixed point (the datapath), with per-multiply energy and
+//! error statistics.  The Pallas `csd_matmul` kernel carries the same value
+//! semantics on the tensor path; `spt_approx` ties the two in tests.
+
+use super::csd;
+use super::energy::pj;
+use super::fixedpoint::{Fixed, Format};
+
+/// Multiplier configuration: number format + quality knob.
+#[derive(Clone, Copy, Debug)]
+pub struct QsmConfig {
+    pub fmt: Format,
+    /// Max CSD partial products (the quality knob). usize::MAX = exact CSD.
+    pub max_digits: usize,
+}
+
+impl QsmConfig {
+    pub fn new(fmt: Format, max_digits: usize) -> QsmConfig {
+        QsmConfig { fmt, max_digits }
+    }
+    /// Max partial-product rows the hardware provisions: CSD of a `total`-bit
+    /// number has at most ceil((total+1)/2) non-zeros (non-adjacency).
+    pub fn max_rows(&self) -> usize {
+        (self.fmt.total as usize + 2) / 2
+    }
+}
+
+/// Result of one simulated multiply.
+#[derive(Clone, Copy, Debug)]
+pub struct MulResult {
+    /// Approximate product (datapath output), as f64.
+    pub value: f64,
+    /// Exact product of the *fixed-point* operands (same format, no CSD
+    /// truncation) — isolates the CSD truncation error from quantization.
+    pub exact_fixed: f64,
+    /// Partial products actually summed.
+    pub partial_products: usize,
+    /// Rows clock-gated off.
+    pub gated_rows: usize,
+    /// Energy of this multiply (pJ): active partial products only — gate
+    /// clocking means gated rows cost (approximately) nothing.
+    pub energy_pj: f64,
+}
+
+/// Multiply activation `a` by weight `w` through the QSM datapath.
+pub fn multiply(cfg: QsmConfig, a: f64, w: f64) -> MulResult {
+    let af = Fixed::from_f64(a, cfg.fmt);
+    let wf = Fixed::from_f64(w, cfg.fmt);
+
+    let digits = csd::to_csd(wf.raw);
+    let kept = csd::truncate_msd(&digits, cfg.max_digits);
+    let pp = csd::nonzero_count(&kept);
+
+    // shift-and-add: sum_{i: d_i != 0} d_i * (a << i), renormalized by frac
+    let mut acc: i128 = 0;
+    for (i, &d) in kept.iter().enumerate() {
+        if d != 0 {
+            acc += d as i128 * ((af.raw as i128) << i);
+        }
+    }
+    let raw = (acc >> cfg.fmt.frac) as i64;
+    let clamped = raw.clamp(cfg.fmt.min_raw(), cfg.fmt.max_raw());
+
+    MulResult {
+        value: Fixed { raw: clamped, fmt: cfg.fmt }.to_f64(),
+        exact_fixed: af.mul(wf).to_f64(),
+        partial_products: pp,
+        gated_rows: cfg.max_rows().saturating_sub(pp),
+        energy_pj: pp as f64 * pj::QSM_PARTIAL_PRODUCT,
+    }
+}
+
+/// Aggregate statistics over a dot product / a whole layer.
+#[derive(Clone, Debug, Default)]
+pub struct QsmStats {
+    pub multiplies: u64,
+    pub partial_products: u64,
+    pub gated_rows: u64,
+    pub energy_pj: f64,
+    pub max_abs_err: f64,
+    pub sum_sq_err: f64,
+}
+
+impl QsmStats {
+    pub fn mean_pp(&self) -> f64 {
+        if self.multiplies == 0 {
+            0.0
+        } else {
+            self.partial_products as f64 / self.multiplies as f64
+        }
+    }
+    pub fn rms_err(&self) -> f64 {
+        if self.multiplies == 0 {
+            0.0
+        } else {
+            (self.sum_sq_err / self.multiplies as f64).sqrt()
+        }
+    }
+}
+
+/// Dot product through the QSM; returns (approx value, stats).
+pub fn dot(cfg: QsmConfig, xs: &[f64], ws: &[f64]) -> (f64, QsmStats) {
+    assert_eq!(xs.len(), ws.len());
+    let mut acc = 0.0;
+    let mut st = QsmStats::default();
+    for (&x, &w) in xs.iter().zip(ws) {
+        let r = multiply(cfg, x, w);
+        acc += r.value;
+        st.multiplies += 1;
+        st.partial_products += r.partial_products as u64;
+        st.gated_rows += r.gated_rows as u64;
+        st.energy_pj += r.energy_pj;
+        let err = (r.value - r.exact_fixed).abs();
+        st.max_abs_err = st.max_abs_err.max(err);
+        st.sum_sq_err += err * err;
+    }
+    (acc, st)
+}
+
+/// Histogram of CSD non-zero counts over a weight slice (Fig. 11).
+pub fn csd_nonzero_histogram(ws: &[f32], fmt: Format) -> Vec<u64> {
+    let mut hist = vec![0u64; (fmt.total as usize + 2) / 2 + 1];
+    for &w in ws {
+        let f = Fixed::from_f64(w as f64, fmt);
+        let nz = csd::nonzero_count(&csd::to_csd(f.raw));
+        let idx = nz.min(hist.len() - 1);
+        hist[idx] += 1;
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, forall};
+
+    const FMT: Format = Format::Q32_24;
+
+    #[test]
+    fn exact_when_digits_unlimited() {
+        let cfg = QsmConfig::new(FMT, usize::MAX);
+        for (a, w) in [(1.5, 0.75), (-2.0, 0.3), (0.1, -0.1), (3.0, 0.0)] {
+            let r = multiply(cfg, a, w);
+            assert!(
+                (r.value - r.exact_fixed).abs() < 1e-9,
+                "a={a} w={w}: {} vs {}",
+                r.value,
+                r.exact_fixed
+            );
+        }
+    }
+
+    #[test]
+    fn power_of_two_weight_single_pp() {
+        let cfg = QsmConfig::new(FMT, usize::MAX);
+        let r = multiply(cfg, 1.2345, 0.5);
+        assert_eq!(r.partial_products, 1);
+        assert!((r.value - 1.2345 * 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_weight_zero_energy() {
+        let cfg = QsmConfig::new(FMT, 4);
+        let r = multiply(cfg, 5.0, 0.0);
+        assert_eq!(r.partial_products, 0);
+        assert_eq!(r.energy_pj, 0.0);
+        assert_eq!(r.value, 0.0);
+    }
+
+    #[test]
+    fn prop_error_monotone_in_digits() {
+        forall(
+            100,
+            |r| (r.normal(), r.normal() * 0.5),
+            |&(a, w)| {
+                let mut last = f64::MAX;
+                for k in 1..=6 {
+                    let r = multiply(QsmConfig::new(FMT, k), a, w);
+                    let err = (r.value - r.exact_fixed).abs();
+                    check(err <= last + 1e-12, "error grew with more digits")?;
+                    last = err;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_energy_monotone_in_digits() {
+        forall(
+            100,
+            |r| (r.normal(), r.normal() * 0.5),
+            |&(a, w)| {
+                let mut last = 0.0f64;
+                for k in 1..=6 {
+                    let r = multiply(QsmConfig::new(FMT, k), a, w);
+                    check(r.energy_pj >= last - 1e-12, "energy not monotone")?;
+                    last = r.energy_pj;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_pp_bounded_by_quality() {
+        forall(
+            200,
+            |r| (r.normal(), r.normal(), r.below(6) as usize + 1),
+            |&(a, w, k)| {
+                let r = multiply(QsmConfig::new(FMT, k), a, w);
+                check(r.partial_products <= k, "pp exceeds quality knob")
+            },
+        );
+    }
+
+    #[test]
+    fn dot_accumulates() {
+        let cfg = QsmConfig::new(FMT, usize::MAX);
+        let xs = [1.0, 2.0, 3.0];
+        let ws = [0.5, -0.5, 1.0];
+        let (v, st) = dot(cfg, &xs, &ws);
+        assert!((v - 2.5).abs() < 1e-6);
+        assert_eq!(st.multiplies, 3);
+        assert!(st.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn histogram_shape() {
+        // Fig. 11's point: most trained-looking weights need few CSD digits
+        let mut r = crate::util::rng::Rng::new(1);
+        let ws: Vec<f32> = (0..5000).map(|_| (r.normal() * 0.05) as f32).collect();
+        let hist = csd_nonzero_histogram(&ws, Format::Q16_14);
+        let total: u64 = hist.iter().sum();
+        let low: u64 = hist[..6].iter().sum();
+        assert_eq!(total, 5000);
+        assert!(low as f64 / total as f64 > 0.8, "hist {hist:?}");
+    }
+}

@@ -1,0 +1,64 @@
+//! Zero-skip statistics (paper Fig. 2's "red" zero data points): MACs whose
+//! weight code is zero can be skipped entirely by the accelerator.
+
+use crate::hw::energy::pj;
+use crate::quant::codes::Code;
+
+/// Skip statistics over a quantized weight tensor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SkipStats {
+    pub total: u64,
+    pub skippable: u64,
+}
+
+impl SkipStats {
+    pub fn fraction(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.skippable as f64 / self.total as f64
+        }
+    }
+
+    /// Energy saved per activation row (one MAC per weight): skipped MACs
+    /// avoid a fp32 multiply + add.
+    pub fn saved_pj_per_row(&self) -> f64 {
+        self.skippable as f64 * (pj::MUL_FP32 + pj::ADD_FP32)
+    }
+}
+
+pub fn from_codes(codes: &[Code]) -> SkipStats {
+    SkipStats {
+        total: codes.len() as u64,
+        skippable: codes.iter().filter(|c| c.is_skippable()).count() as u64,
+    }
+}
+
+/// Zero fraction of raw f32 weights (|w| <= tol), for the "+6 % zeros" claim
+/// comparison between original and quantized tensors.
+pub fn raw_zero_fraction(ws: &[f32], tol: f32) -> f64 {
+    if ws.is_empty() {
+        return 0.0;
+    }
+    ws.iter().filter(|w| w.abs() <= tol).count() as f64 / ws.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_zero_codes() {
+        let codes = vec![Code(0), Code(1), Code(7), Code(4)];
+        let st = from_codes(&codes);
+        assert_eq!(st.skippable, 2);
+        assert_eq!(st.fraction(), 0.5);
+        assert!(st.saved_pj_per_row() > 0.0);
+    }
+
+    #[test]
+    fn raw_zeros() {
+        assert_eq!(raw_zero_fraction(&[0.0, 1.0, -0.0005, 2.0], 1e-3), 0.5);
+        assert_eq!(raw_zero_fraction(&[], 1e-3), 0.0);
+    }
+}

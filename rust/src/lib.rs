@@ -1,0 +1,33 @@
+//! # qsq-edge
+//!
+//! Production-quality reproduction of *"Quality Scalable Quantization
+//! Methodology for Deep Learning on Edge"* (Khaliq & Hafiz, CS.DC 2024) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the edge-deployment coordinator: QSQ
+//!   encoder/decoder, model container codec, channel simulator, device-aware
+//!   quality router, dynamic batcher, TCP serving loop, on-device FC
+//!   fine-tuning, and bit-accurate hardware simulators (shift-and-scale
+//!   decoder, CSD quality-scalable multiplier, energy model).
+//! * **L2/L1 (python, build-time only)** — JAX model graphs and Pallas
+//!   kernels, AOT-lowered to HLO text in `artifacts/`, loaded and executed
+//!   here via the PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the request path; `artifacts/` is the only interface.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index
+//! (every table and figure of the paper maps to a module in [`repro`]).
+
+pub mod bench;
+pub mod channel;
+pub mod codec;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod hw;
+pub mod model;
+pub mod quant;
+pub mod repro;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

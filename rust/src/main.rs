@@ -1,0 +1,324 @@
+//! qsq-edge CLI — leader entry point for the L3 coordinator.
+//!
+//! ```text
+//! qsq-edge info                                  # artifacts + platform
+//! qsq-edge eval   --model lenet [--phi 4 --n 16 --mode sigma-search]
+//! qsq-edge encode --model lenet --phi 4 --n 16 --out model.qsq
+//! qsq-edge decode --in model.qsq                 # container inspection
+//! qsq-edge deploy-sim --model lenet --device edge-fpga-small [--ber 1e-5]
+//! qsq-edge finetune --epochs 5 [--lr 0.05]
+//! qsq-edge serve  --port 9000 [--model lenet --batch 32]
+//! qsq-edge client --port 9000 --n 64             # synthetic load
+//! qsq-edge repro  --exp table3 [--fast]          # paper tables/figures
+//! qsq-edge repro  --exp all [--fast]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use qsq_edge::coordinator::{deploy, finetune, server};
+use qsq_edge::data::RequestGen;
+use qsq_edge::device::{DeviceProfile, QualityConfig};
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::model::store::{artifacts_dir, Dataset, Manifest, WeightStore};
+use qsq_edge::quant::qsq::AssignMode;
+use qsq_edge::repro::{self, Ctx};
+use qsq_edge::runtime::client::Runtime;
+use qsq_edge::util::cli::Args;
+use qsq_edge::util::log;
+
+fn main() {
+    log::level_from_env();
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts(args: &Args) -> PathBuf {
+    args.get("artifacts").map(PathBuf::from).unwrap_or_else(artifacts_dir)
+}
+
+fn model_kind(args: &Args) -> Result<ModelKind> {
+    ModelKind::from_name(&args.get_or("model", "lenet"))
+}
+
+fn mode(args: &Args) -> Result<AssignMode> {
+    let name = args.get_or("mode", "sigma-search");
+    AssignMode::from_name(&name).with_context(|| format!("unknown mode {name}"))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        "info" => cmd_info(args),
+        "eval" => cmd_eval(args),
+        "encode" => cmd_encode(args),
+        "decode" => cmd_decode(args),
+        "deploy-sim" => cmd_deploy_sim(args),
+        "finetune" => cmd_finetune(args),
+        "serve" => cmd_serve(args),
+        "client" => cmd_client(args),
+        "repro" => cmd_repro(args),
+        other => bail!("unknown subcommand {other:?} (try `qsq-edge help`)"),
+    }
+}
+
+const HELP: &str = "qsq-edge — Quality Scalable Quantization for deep learning on edge
+subcommands:
+  info          artifacts inventory + PJRT platform
+  eval          accuracy of a model (optionally quantized: --phi --n --mode)
+  encode        quantize + write a QSQ container  (--out model.qsq)
+  decode        inspect a QSQ container           (--in model.qsq)
+  deploy-sim    full encode→channel→decode pipeline vs a device profile
+  finetune      on-device FC fine-tuning of the quantized LeNet
+  serve         TCP inference server (JSON lines; dynamic batching)
+  client        synthetic load against a server (--port, --n)
+  repro         regenerate a paper table/figure   (--exp table3|fig7|...|all)
+common flags: --artifacts DIR  --model lenet|convnet  --fast";
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    let manifest = Manifest::load(&dir)?;
+    let mut rt = Runtime::new(&dir)?;
+    println!("artifacts dir : {}", dir.display());
+    println!("platform      : {}", rt.platform());
+    let mut names = manifest.artifact_names();
+    names.sort();
+    println!("artifacts ({}):", names.len());
+    for n in &names {
+        let a = manifest.artifact(n);
+        let args_n = a.get("args").as_arr().map(|x| x.len()).unwrap_or(0);
+        println!("  {n:<28} {args_n:>2} args  {}", a.get("file").as_str().unwrap_or("?"));
+    }
+    for key in ["lenet_test_acc", "convnet_test_acc"] {
+        if let Some(v) = manifest.metric(key) {
+            println!("metric {key} = {v:.4}");
+        }
+    }
+    // compile one artifact as a smoke check
+    let e = rt.load("lenet_fwd_b1")?;
+    println!("compiled lenet_fwd_b1: {} args OK", e.args.len());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    let kind = model_kind(args)?;
+    let mut rt = Runtime::new(&dir)?;
+    let store = WeightStore::load(&dir, kind)?;
+    let test = Dataset::load(&dir, kind.dataset(), "test")?;
+    let limit = if args.has_flag("fast") { 512 } else { usize::MAX };
+
+    let store = if let Some(phi) = args.get("phi") {
+        let phi: u32 = phi.parse().context("--phi")?;
+        let n = args.get_usize("n", 16);
+        let names = repro::quantized_names(kind);
+        println!("quantizing {names:?} at phi={phi}, N={n}, mode={}", mode(args)?.name());
+        repro::quantized_store(&store, &names, phi, n, mode(args)?)?
+    } else {
+        store
+    };
+    let acc = repro::eval_store(&mut rt, &store, &test, limit)?;
+    println!("{} accuracy: {:.4}", kind.name(), acc);
+    Ok(())
+}
+
+fn cmd_encode(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    let kind = model_kind(args)?;
+    let store = WeightStore::load(&dir, kind)?;
+    let q = QualityConfig { phi: args.get_usize("phi", 4) as u32, group: args.get_usize("n", 16) };
+    let encoded = deploy::encode_store(&store, q, mode(args)?)?;
+    let bytes = qsq_edge::codec::encode_model(&encoded)?;
+    let out = args.get_or("out", "model.qsq");
+    std::fs::write(&out, &bytes)?;
+    println!(
+        "wrote {out}: {} bytes ({} tensors, phi={}, N={}), savings {:.2}% vs fp32",
+        bytes.len(),
+        encoded.tensors.len(),
+        q.phi,
+        q.group,
+        100.0 * (1.0 - encoded.encoded_bits() as f64 / encoded.full_precision_bits() as f64)
+    );
+    Ok(())
+}
+
+fn cmd_decode(args: &Args) -> Result<()> {
+    let path = args.get("in").context("--in <file.qsq> required")?;
+    let bytes = std::fs::read(path)?;
+    let model = qsq_edge::codec::decode_model(&bytes)?;
+    println!("container {path}: {} bytes, {} tensors", bytes.len(), model.tensors.len());
+    for t in &model.tensors {
+        let qt = &t.tensor;
+        println!(
+            "  {:<6} shape {:?} phi={} group={} gamma={:.2} delta={:.2} zeros={:.1}% bits={}",
+            t.name,
+            qt.shape,
+            qt.phi,
+            qt.group,
+            qt.gamma,
+            qt.delta,
+            100.0 * qt.zeros_fraction(),
+            qt.encoded_bits(32),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_deploy_sim(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    let kind = model_kind(args)?;
+    let store = WeightStore::load(&dir, kind)?;
+    let roster = DeviceProfile::roster();
+    let dev_name = args.get_or("device", "edge-fpga-small");
+    let device = roster
+        .iter()
+        .find(|d| d.name == dev_name)
+        .with_context(|| {
+            format!(
+                "unknown device {dev_name} (roster: {:?})",
+                roster.iter().map(|d| &d.name).collect::<Vec<_>>()
+            )
+        })?;
+
+    let meta = store.meta.clone();
+    let quality = device
+        .select_quality(|phi, group| {
+            qsq_edge::model::bits::model_bits(&meta, phi, group).encoded_bits
+        })
+        .with_context(|| format!("{dev_name} cannot fit {}", kind.name()))?;
+
+    let mut link_cfg = device.link;
+    if let Some(ber) = args.get("ber") {
+        link_cfg.ber = ber.parse().context("--ber")?;
+    }
+    println!("device {dev_name}: selected quality phi={}, N={}", quality.phi, quality.group);
+    let (edge, rep) =
+        deploy::deploy(&store, quality, mode(args)?, link_cfg, args.get_u64("seed", 7))?;
+    println!(
+        "container      : {} bytes ({} frames, {} retransmissions)",
+        rep.container_bytes, rep.transfer.frames, rep.transfer.retransmissions
+    );
+    println!(
+        "transfer       : {:.3} s over {:.1} Mbps (+{:.0} µJ DRAM-equivalent)",
+        rep.transfer.elapsed_s,
+        link_cfg.bandwidth_bps / 1e6,
+        rep.transfer.transfer_energy_pj / 1e6
+    );
+    println!(
+        "memory savings : {:.2}% (encoded {} bits vs {} bits fp32)",
+        100.0 * rep.memory_savings(),
+        rep.encoded_bits,
+        rep.full_bits
+    );
+    println!(
+        "decoder ops    : {} exp-adds, {} sign-flips, {} zero-outputs",
+        rep.decoder_ops.exponent_adds, rep.decoder_ops.sign_flips, rep.decoder_ops.zero_outputs
+    );
+    println!(
+        "zeros fraction : {:.2}%  mean rel err: {:.4}",
+        100.0 * rep.zeros_fraction,
+        rep.mean_rel_error
+    );
+
+    // score the decoded edge model
+    let mut rt = Runtime::new(&dir)?;
+    let test = Dataset::load(&dir, kind.dataset(), "test")?;
+    let limit = if args.has_flag("fast") { 512 } else { usize::MAX };
+    let base = repro::eval_store(&mut rt, &store, &test, limit)?;
+    let edge_acc = repro::eval_store(&mut rt, &edge, &test, limit)?;
+    println!("accuracy       : fp32 {base:.4} -> edge {edge_acc:.4}");
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    let mut rt = Runtime::new(&dir)?;
+    let store = WeightStore::load(&dir, ModelKind::Lenet)?;
+    let train = Dataset::load(&dir, "mnist", "train")?;
+    let test = Dataset::load(&dir, "mnist", "test")?;
+    let names = repro::quantized_names(ModelKind::Lenet);
+    let q = repro::quantized_store(
+        &store,
+        &names,
+        args.get_usize("phi", 4) as u32,
+        args.get_usize("n", 16),
+        mode(args)?,
+    )?;
+    let epochs = args.get_usize("epochs", 5);
+    let lr = args.get_f64("lr", 0.05) as f32;
+    let (_, _, rep) = finetune::finetune_fc(&mut rt, &q, &train, &test, epochs, lr, 0)?;
+    println!("fine-tune (quantized backbone frozen, fp32 head, {epochs} epochs, lr {lr}):");
+    println!("  accuracy {:.4} -> {:.4}", rep.acc_before, rep.acc_after);
+    println!("  epoch losses: {:?}", rep.losses);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    let cfg = server::ServerConfig {
+        model: model_kind(args)?,
+        batch: args.get_usize("batch", 32),
+        max_delay: std::time::Duration::from_millis(args.get_u64("delay-ms", 5)),
+        bind: format!("127.0.0.1:{}", args.get_usize("port", 9000)),
+    };
+    let srv = server::Server::start(dir, cfg)?;
+    println!("serving on 127.0.0.1:{} (ctrl-c to stop)", srv.port);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        println!("{}", srv.metrics.snapshot().to_json());
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let kind = model_kind(args)?;
+    let port = args.get_usize("port", 9000);
+    let n = args.get_usize("n", 64);
+    let mut gen = RequestGen::new(kind, args.get_u64("seed", 1));
+    let mut client = server::Client::connect(&format!("127.0.0.1:{port}"))?;
+    let t0 = std::time::Instant::now();
+    let mut lat_us = Vec::with_capacity(n);
+    for i in 0..n {
+        let (img, _) = gen.next();
+        let reply = client.infer(i as u64, img.data())?;
+        if !reply.get("error").is_null() {
+            bail!("server error: {}", reply.get("error").as_str().unwrap_or("?"));
+        }
+        lat_us.push(reply.get("latency_us").as_f64().unwrap_or(0.0));
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let lat: Vec<f64> = lat_us.iter().map(|v| v / 1e3).collect();
+    println!(
+        "{n} requests in {total:.3} s ({:.1} req/s); latency ms p50={:.2} p95={:.2} max={:.2}",
+        n as f64 / total,
+        qsq_edge::util::stats::percentile(&lat, 50.0),
+        qsq_edge::util::stats::percentile(&lat, 95.0),
+        lat.iter().cloned().fold(0.0, f64::max),
+    );
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let ctx = Ctx::new(artifacts(args), args.has_flag("fast"));
+    let exp = args.get_or("exp", "all");
+    if exp == "all" {
+        for e in repro::ALL_EXPERIMENTS {
+            println!("================ {e} ================");
+            match repro::run_experiment(&ctx, e) {
+                Ok(s) => println!("{s}"),
+                Err(err) => println!("FAILED: {err:#}"),
+            }
+        }
+        Ok(())
+    } else {
+        let s = repro::run_experiment(&ctx, &exp)?;
+        println!("{s}");
+        Ok(())
+    }
+}

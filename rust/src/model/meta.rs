@@ -1,0 +1,184 @@
+//! Static architecture metadata — mirrors `python/compile/model.py`
+//! (LENET_SHAPES / CONVNET_SHAPES); the integration tests cross-check this
+//! against `artifacts/manifest.json` so the two can never drift silently.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Lenet,
+    Convnet,
+}
+
+impl ModelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Lenet => "lenet",
+            ModelKind::Convnet => "convnet",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<ModelKind> {
+        Ok(match s {
+            "lenet" => ModelKind::Lenet,
+            "convnet" => ModelKind::Convnet,
+            other => bail!("unknown model {other:?}"),
+        })
+    }
+
+    pub fn dataset(self) -> &'static str {
+        match self {
+            ModelKind::Lenet => "mnist",
+            ModelKind::Convnet => "cifar",
+        }
+    }
+
+    /// Input image shape (H, W, C).
+    pub fn input_hwc(self) -> (usize, usize, usize) {
+        match self {
+            ModelKind::Lenet => (28, 28, 1),
+            ModelKind::Convnet => (32, 32, 3),
+        }
+    }
+}
+
+/// One parameter tensor.
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: &'static str,
+    pub shape: Vec<usize>,
+    /// Included in the QSQ pipeline (heads/biases stay fp32 — DESIGN.md §6).
+    pub quantized: bool,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Full model description.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub kind: ModelKind,
+    pub tensors: Vec<TensorMeta>,
+}
+
+impl ModelMeta {
+    pub fn lenet() -> ModelMeta {
+        let t = |name, shape: &[usize], q| TensorMeta { name, shape: shape.to_vec(), quantized: q };
+        ModelMeta {
+            kind: ModelKind::Lenet,
+            tensors: vec![
+                t("c1w", &[5, 5, 1, 6], true),
+                t("c1b", &[6], false),
+                t("c2w", &[5, 5, 6, 16], true),
+                t("c2b", &[16], false),
+                t("f1w", &[256, 120], true),
+                t("f1b", &[120], false),
+                t("f2w", &[120, 84], true),
+                t("f2b", &[84], false),
+                t("f3w", &[84, 10], false),
+                t("f3b", &[10], false),
+            ],
+        }
+    }
+
+    pub fn convnet() -> ModelMeta {
+        let t = |name, shape: &[usize], q| TensorMeta { name, shape: shape.to_vec(), quantized: q };
+        ModelMeta {
+            kind: ModelKind::Convnet,
+            tensors: vec![
+                t("k1", &[3, 3, 3, 32], true),
+                t("b1", &[32], false),
+                t("k2", &[3, 3, 32, 32], true),
+                t("b2", &[32], false),
+                t("k3", &[3, 3, 32, 64], true),
+                t("b3", &[64], false),
+                t("k4", &[3, 3, 64, 64], true),
+                t("b4", &[64], false),
+                t("fcw", &[256, 10], false),
+                t("fcb", &[10], false),
+            ],
+        }
+    }
+
+    pub fn of(kind: ModelKind) -> ModelMeta {
+        match kind {
+            ModelKind::Lenet => ModelMeta::lenet(),
+            ModelKind::Convnet => ModelMeta::convnet(),
+        }
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&TensorMeta> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn quantized_tensors(&self) -> impl Iterator<Item = &TensorMeta> {
+        self.tensors.iter().filter(|t| t.quantized)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// MACs of one forward pass (conv as im2col matmul + dense layers).
+    pub fn macs_per_image(&self) -> u64 {
+        match self.kind {
+            ModelKind::Lenet => {
+                // conv1 24*24*150_col? -> out 24x24x6, K=25
+                let c1 = 24 * 24 * 6 * 25u64;
+                let c2 = 8 * 8 * 16 * 150u64;
+                let f = (256 * 120 + 120 * 84 + 84 * 10) as u64;
+                c1 + c2 + f
+            }
+            ModelKind::Convnet => {
+                let c1 = 32 * 32 * 32 * 27u64;
+                let c2 = 16 * 16 * 32 * 288u64;
+                let c3 = 8 * 8 * 64 * 288u64;
+                let c4 = 4 * 4 * 64 * 576u64;
+                c1 + c2 + c3 + c4 + 256 * 10
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_param_count() {
+        // 150+6 + 2400+16 + 30720+120 + 10080+84 + 840+10 = 44426
+        assert_eq!(ModelMeta::lenet().total_params(), 44426);
+    }
+
+    #[test]
+    fn convnet_param_count() {
+        let m = ModelMeta::convnet();
+        let want = 3 * 3 * 3 * 32 + 32 + 3 * 3 * 32 * 32 + 32 + 3 * 3 * 32 * 64 + 64
+            + 3 * 3 * 64 * 64 + 64 + 256 * 10 + 10;
+        assert_eq!(m.total_params(), want);
+    }
+
+    #[test]
+    fn quantized_set_matches_python() {
+        let l = ModelMeta::lenet();
+        let q: Vec<&str> = l.quantized_tensors().map(|t| t.name).collect();
+        assert_eq!(q, vec!["c1w", "c2w", "f1w", "f2w"]);
+        let c = ModelMeta::convnet();
+        let q: Vec<&str> = c.quantized_tensors().map(|t| t.name).collect();
+        assert_eq!(q, vec!["k1", "k2", "k3", "k4"]);
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        assert_eq!(ModelKind::from_name("lenet").unwrap(), ModelKind::Lenet);
+        assert!(ModelKind::from_name("vgg").is_err());
+    }
+
+    #[test]
+    fn macs_positive_and_ordered() {
+        assert!(ModelMeta::convnet().macs_per_image() > ModelMeta::lenet().macs_per_image());
+    }
+}

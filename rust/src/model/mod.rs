@@ -1,0 +1,9 @@
+//! Model metadata (LeNet-5, ConvNet-4), the weight store backed by the AOT
+//! artifacts, and the eq.-11/12 bit accounting behind Figs. 9/10.
+
+pub mod bits;
+pub mod meta;
+pub mod store;
+
+pub use meta::{ModelKind, ModelMeta, TensorMeta};
+pub use store::WeightStore;

@@ -1,0 +1,195 @@
+//! Weight/dataset store backed by the `artifacts/` directory produced by
+//! `make artifacts` (trained .npy tensors + eval splits + manifest.json).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::meta::{ModelKind, ModelMeta};
+use crate::tensor::Tensor;
+use crate::util::{json, npy};
+
+/// Loaded weights for one model.
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    pub kind: ModelKind,
+    pub meta: ModelMeta,
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl WeightStore {
+    /// Empty store (tests / incremental construction via `set_unchecked`).
+    pub fn empty(kind: ModelKind) -> WeightStore {
+        WeightStore { kind, meta: ModelMeta::of(kind), tensors: BTreeMap::new() }
+    }
+
+    /// Insert without shape validation (test fixtures, decoded tensors whose
+    /// metadata was already checked by the codec).
+    pub fn set_unchecked(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    /// Load `<artifacts>/weights/<model>/<tensor>.npy` for every tensor in
+    /// the model's metadata, validating shapes.
+    pub fn load(artifacts: &Path, kind: ModelKind) -> Result<WeightStore> {
+        let meta = ModelMeta::of(kind);
+        let dir = artifacts.join("weights").join(kind.name());
+        let mut tensors = BTreeMap::new();
+        for tm in &meta.tensors {
+            let path = dir.join(format!("{}.npy", tm.name));
+            let arr = npy::read(&path)?;
+            if arr.shape != tm.shape {
+                bail!(
+                    "{}: shape {:?} in npy vs {:?} in metadata",
+                    path.display(),
+                    arr.shape,
+                    tm.shape
+                );
+            }
+            tensors.insert(tm.name.to_string(), Tensor::new(arr.shape.clone(), arr.to_f32()?)?);
+        }
+        Ok(WeightStore { kind, meta, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor {name} not in store"))
+    }
+
+    /// Tensors in declaration order (the artifact argument order).
+    pub fn ordered(&self) -> Vec<&Tensor> {
+        self.meta.tensors.iter().map(|t| &self.tensors[t.name]).collect()
+    }
+
+    /// Replace a tensor (e.g. with decoded approximate weights).
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let tm = self
+            .meta
+            .tensor(name)
+            .with_context(|| format!("unknown tensor {name}"))?;
+        if t.shape() != tm.shape.as_slice() {
+            bail!("set {name}: shape {:?} vs {:?}", t.shape(), tm.shape);
+        }
+        self.tensors.insert(name.to_string(), t);
+        Ok(())
+    }
+}
+
+/// An eval/train split loaded from artifacts.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// [N, H, W, C]
+    pub x: Tensor,
+    pub y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn load(artifacts: &Path, dataset: &str, split: &str) -> Result<Dataset> {
+        let dir = artifacts.join("data");
+        let x = npy::read(dir.join(format!("{dataset}_{split}_x.npy")))?;
+        let y = npy::read(dir.join(format!("{dataset}_{split}_y.npy")))?;
+        if x.shape.len() != 4 || y.shape.len() != 1 || x.shape[0] != y.shape[0] {
+            bail!("dataset {dataset}/{split}: bad shapes {:?} / {:?}", x.shape, y.shape);
+        }
+        Ok(Dataset { x: Tensor::new(x.shape.clone(), x.to_f32()?)?, y: y.to_i32()? })
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Copy one image [H, W, C].
+    pub fn image(&self, i: usize) -> Tensor {
+        let s = self.x.shape();
+        let (h, w, c) = (s[1], s[2], s[3]);
+        let stride = h * w * c;
+        Tensor::new(
+            vec![h, w, c],
+            self.x.data()[i * stride..(i + 1) * stride].to_vec(),
+        )
+        .unwrap()
+    }
+
+    /// Copy a contiguous batch [B, H, W, C] starting at `start`.
+    pub fn batch(&self, start: usize, b: usize) -> Tensor {
+        let s = self.x.shape();
+        let (h, w, c) = (s[1], s[2], s[3]);
+        let stride = h * w * c;
+        Tensor::new(
+            vec![b, h, w, c],
+            self.x.data()[start * stride..(start + b) * stride].to_vec(),
+        )
+        .unwrap()
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: json::Value,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts: &Path) -> Result<Manifest> {
+        let path = artifacts.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        Ok(Manifest { root, dir: artifacts.to_path_buf() })
+    }
+
+    pub fn artifact(&self, name: &str) -> &json::Value {
+        self.root.get("artifacts").get(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.root
+            .get("artifacts")
+            .as_obj()
+            .map(|o| o.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let f = self
+            .artifact(name)
+            .get("file")
+            .as_str()
+            .with_context(|| format!("artifact {name} not in manifest"))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Baseline metric recorded at train time (e.g. "lenet_test_acc").
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.root.get("metrics").get(key).as_f64()
+    }
+}
+
+/// Default artifacts directory: $QSQ_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("QSQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Filesystem-dependent tests live in tests/ (integration); here only the
+    // pure helpers.
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("QSQ_ARTIFACTS", "/tmp/somewhere");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/somewhere"));
+        std::env::remove_var("QSQ_ARTIFACTS");
+        assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+    }
+}

@@ -1,0 +1,107 @@
+//! XNOR-Net / BWN-style binary baseline (paper eqs. 2–3):
+//! B* = sign(W), alpha* = ||W||_l1 / n.
+
+use anyhow::Result;
+
+use super::qsq::matrix_dims;
+
+/// Binary-quantized tensor: one sign bit per weight + per-group alpha.
+#[derive(Clone, Debug)]
+pub struct BinaryTensor {
+    /// true = +1, false = -1 (sign(0) stored as +1).
+    pub signs: Vec<bool>,
+    pub scalars: Vec<f32>,
+    pub k: usize,
+    pub oc: usize,
+    pub group: usize,
+    pub shape: Vec<usize>,
+}
+
+impl BinaryTensor {
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k * self.oc];
+        for ki in 0..self.k {
+            let gi = ki / self.group;
+            for j in 0..self.oc {
+                let a = self.scalars[gi * self.oc + j];
+                out[ki * self.oc + j] = if self.signs[ki * self.oc + j] { a } else { -a };
+            }
+        }
+        out
+    }
+
+    pub fn error(&self, w: &[f32]) -> f64 {
+        self.decode()
+            .iter()
+            .zip(w)
+            .map(|(d, &x)| {
+                let e = (x - d) as f64;
+                e * e
+            })
+            .sum()
+    }
+
+    /// 1 bit per weight + fp scalars.
+    pub fn encoded_bits(&self, fpb: u32) -> u64 {
+        self.signs.len() as u64 + self.scalars.len() as u64 * fpb as u64
+    }
+}
+
+/// eq. 2/3: B = sign(W), alpha = mean |W| per group.
+pub fn quantize_binary(w: &[f32], shape: &[usize], group: usize) -> Result<BinaryTensor> {
+    let (k, oc) = matrix_dims(shape)?;
+    anyhow::ensure!(w.len() == k * oc, "weight len mismatch");
+    anyhow::ensure!(group > 0 && k % group == 0, "group {group} must divide K={k}");
+    let g = k / group;
+    let mut signs = vec![true; k * oc];
+    let mut scalars = vec![0.0f32; g * oc];
+    for gi in 0..g {
+        for j in 0..oc {
+            let mut abs_sum = 0.0f64;
+            for i in 0..group {
+                let x = w[(gi * group + i) * oc + j];
+                abs_sum += (x as f64).abs();
+                signs[(gi * group + i) * oc + j] = x >= 0.0;
+            }
+            scalars[gi * oc + j] = (abs_sum / group as f64) as f32;
+        }
+    }
+    Ok(BinaryTensor { signs, scalars, k, oc, group, shape: shape.to_vec() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::gen_weights;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eq2_eq3_exact() {
+        let w = [1.0f32, -3.0, 2.0, -2.0];
+        let b = quantize_binary(&w, &[4, 1], 4).unwrap();
+        assert_eq!(b.scalars[0], 2.0); // (1+3+2+2)/4
+        assert_eq!(b.decode(), vec![2.0, -2.0, 2.0, -2.0]);
+    }
+
+    #[test]
+    fn alpha_is_l2_optimal_for_signs() {
+        // for fixed B=sign(W), alpha=mean|W| minimizes ||W - aB||^2:
+        // perturbing alpha must increase error
+        let mut r = Rng::new(4);
+        let w = gen_weights(&mut r, 32, 1.0);
+        let b = quantize_binary(&w, &[32, 1], 32).unwrap();
+        let base = b.error(&w);
+        for eps in [-0.05f32, 0.05] {
+            let mut b2 = b.clone();
+            b2.scalars[0] += eps;
+            assert!(b2.error(&w) >= base - 1e-9);
+        }
+    }
+
+    #[test]
+    fn binary_bits() {
+        let w = vec![1.0f32; 64];
+        let b = quantize_binary(&w, &[64, 1], 16).unwrap();
+        assert_eq!(b.encoded_bits(32), 64 + 4 * 32);
+    }
+}

@@ -1,0 +1,152 @@
+//! The 3-bit QSQ code alphabet (paper Table II).
+//!
+//! | code | bits | level | decode operation on the scalar      |
+//! |------|------|-------|--------------------------------------|
+//! | 0    | 000  |  0    | skipped (zero-skip eligible)         |
+//! | 1    | 001  | +1    | scalar as-is                         |
+//! | 2    | 010  | +2    | shift left once                      |
+//! | 3    | 011  | +4    | shift left twice                     |
+//! | 4    | 100  | -1    | invert                               |
+//! | 5    | 101  | -2    | invert, shift once                  |
+//! | 6    | 110  | -4    | invert, shift twice                 |
+//! | 7    | 111  |  —    | unused (reserved); decodes to 0      |
+
+/// One Table-II code. Stored as its 3-bit pattern in a u8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Code(pub u8);
+
+/// Decode multiplier lookup (index = code value).
+pub const LUT: [f32; 8] = [0.0, 1.0, 2.0, 4.0, -1.0, -2.0, -4.0, 0.0];
+
+impl Code {
+    pub const ZERO: Code = Code(0);
+
+    /// Construct from a signed level in {0, ±1, ±2, ±4}.
+    pub fn from_level(level: i32) -> Option<Code> {
+        Some(Code(match level {
+            0 => 0,
+            1 => 1,
+            2 => 2,
+            4 => 3,
+            -1 => 4,
+            -2 => 5,
+            -4 => 6,
+            _ => return None,
+        }))
+    }
+
+    /// The level multiplier this code decodes to.
+    #[inline]
+    pub fn multiplier(self) -> f32 {
+        LUT[(self.0 & 7) as usize]
+    }
+
+    /// Signed integer level.
+    #[inline]
+    pub fn level(self) -> i32 {
+        self.multiplier() as i32
+    }
+
+    /// Number of left shifts the decoder applies (0..=2).
+    #[inline]
+    pub fn shifts(self) -> u32 {
+        match self.0 & 7 {
+            2 | 5 => 1,
+            3 | 6 => 2,
+            _ => 0,
+        }
+    }
+
+    /// Whether the decoder inverts the sign.
+    #[inline]
+    pub fn inverts(self) -> bool {
+        matches!(self.0 & 7, 4 | 5 | 6)
+    }
+
+    /// Whether the multiply can be skipped entirely (zero or reserved).
+    #[inline]
+    pub fn is_skippable(self) -> bool {
+        matches!(self.0 & 7, 0 | 7)
+    }
+
+    pub fn is_reserved(self) -> bool {
+        self.0 & 7 == 7
+    }
+
+    /// Decode against a scalar: `multiplier * alpha` (Table II semantics).
+    #[inline]
+    pub fn decode(self, alpha: f32) -> f32 {
+        self.multiplier() * alpha
+    }
+}
+
+/// Maximum code level available at quality `phi` (1, 2 or 4).
+pub fn max_level(phi: u32) -> i32 {
+    phi as i32
+}
+
+/// Available signed levels at quality `phi`.
+pub fn levels_for_phi(phi: u32) -> Vec<i32> {
+    match phi {
+        1 => vec![0, 1],
+        2 => vec![0, 1, 2],
+        4 => vec![0, 1, 2, 4],
+        _ => panic!("phi must be 1, 2 or 4, got {phi}"),
+    }
+}
+
+/// Bits per code at quality `phi` (canonicalized eq. 8 — see DESIGN.md §6).
+pub fn code_bits(phi: u32) -> u32 {
+    let levels = 2 * (1 + phi.ilog2()) + 1; // 0 plus +/- each power of two
+    (levels as f64).log2().ceil() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_semantics() {
+        for (code, want) in LUT.iter().enumerate() {
+            assert_eq!(Code(code as u8).decode(1.0), *want);
+        }
+        // decode really is shift+invert: multiplier == ±2^shifts
+        for c in 0..8u8 {
+            let code = Code(c);
+            if code.is_skippable() {
+                assert_eq!(code.multiplier(), 0.0);
+            } else {
+                let sign = if code.inverts() { -1.0 } else { 1.0 };
+                assert_eq!(code.multiplier(), sign * (1 << code.shifts()) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn level_roundtrip() {
+        for lvl in [0, 1, 2, 4, -1, -2, -4] {
+            assert_eq!(Code::from_level(lvl).unwrap().level(), lvl);
+        }
+        assert!(Code::from_level(3).is_none());
+        assert!(Code::from_level(8).is_none());
+    }
+
+    #[test]
+    fn code_bits_eq8() {
+        assert_eq!(code_bits(1), 2);
+        assert_eq!(code_bits(2), 3);
+        assert_eq!(code_bits(4), 3);
+    }
+
+    #[test]
+    fn levels_per_phi() {
+        assert_eq!(levels_for_phi(1), vec![0, 1]);
+        assert_eq!(levels_for_phi(4), vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn reserved_code_decodes_zero() {
+        assert_eq!(Code(7).decode(123.0), 0.0);
+        assert!(Code(7).is_skippable());
+    }
+}

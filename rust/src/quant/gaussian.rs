@@ -1,0 +1,96 @@
+//! Per-group Gaussian statistics (paper eq. 7, MLE) with sign splitting.
+//!
+//! Mirrors `qsq_lib._group_stats`: sigma_P over positive entries, sigma_N
+//! over |negative| entries, with the same fallbacks when a sign side is
+//! empty or degenerate.  Computed in f64 (numpy promotes reductions), so the
+//! cross-language parity tests hold to ~1e-6.
+
+/// Per-group statistics for code assignment.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupStats {
+    /// mean(|v|) — the numerator of eq. 9.
+    pub abs_mean: f64,
+    /// eq.-9 scalar: mean(|v|)/phi.
+    pub alpha: f64,
+    /// MLE sigma of positive entries (with fallback).
+    pub sigma_p: f64,
+    /// MLE sigma of |negative| entries (with fallback).
+    pub sigma_n: f64,
+}
+
+/// Compute stats for one vector (group) of weights.
+pub fn group_stats(v: &[f32], phi: u32) -> GroupStats {
+    let n = v.len().max(1) as f64;
+    let abs_mean = v.iter().map(|&x| (x as f64).abs()).sum::<f64>() / n;
+    let alpha = abs_mean / phi as f64;
+
+    let (sig_p, mu_p) = side_stats(v.iter().filter(|&&x| x > 0.0).map(|&x| x as f64));
+    let (sig_n, mu_n) = side_stats(v.iter().filter(|&&x| x < 0.0).map(|&x| -x as f64));
+
+    let fallback = if abs_mean > 0.0 { abs_mean } else { 1.0 };
+    let fix = |sig: Option<f64>, mu: Option<f64>| match sig {
+        Some(s) if s > 0.0 => s,
+        _ => match mu {
+            Some(m) => m.max(1e-12),
+            None => fallback,
+        },
+    };
+    GroupStats {
+        abs_mean,
+        alpha,
+        sigma_p: fix(sig_p, mu_p),
+        sigma_n: fix(sig_n, mu_n),
+    }
+}
+
+/// (MLE sigma, mean) of an iterator; None for empty sides.
+fn side_stats(it: impl Iterator<Item = f64>) -> (Option<f64>, Option<f64>) {
+    let xs: Vec<f64> = it.collect();
+    if xs.is_empty() {
+        return (None, None);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    (Some(var.sqrt()), Some(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_is_eq9() {
+        let v = [1.0f32, 2.0, 3.0, -2.0];
+        let s = group_stats(&v, 4);
+        assert!((s.alpha - 2.0 / 4.0).abs() < 1e-12);
+        assert!((s.abs_mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sign_split_sigma() {
+        // positives {1,3}: mean 2, MLE sigma 1; negatives {-2}: single value
+        // -> sigma falls back to mean magnitude 2
+        let v = [1.0f32, 3.0, -2.0];
+        let s = group_stats(&v, 1);
+        assert!((s.sigma_p - 1.0).abs() < 1e-12);
+        assert!((s.sigma_n - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_zero_fallback() {
+        let s = group_stats(&[0.0f32; 8], 4);
+        assert_eq!(s.alpha, 0.0);
+        assert_eq!(s.sigma_p, 1.0);
+        assert_eq!(s.sigma_n, 1.0);
+    }
+
+    #[test]
+    fn single_sided() {
+        let v = [0.5f32, 0.5, 0.5];
+        let s = group_stats(&v, 1);
+        // degenerate sigma (0) falls back to side mean 0.5
+        assert!((s.sigma_p - 0.5).abs() < 1e-12);
+        // no negatives: falls back to abs_mean
+        assert!((s.sigma_n - 0.5).abs() < 1e-12);
+    }
+}

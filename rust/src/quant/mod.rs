@@ -1,0 +1,23 @@
+//! Quality Scalable Quantization (the paper's §III) plus the baselines it
+//! compares against.
+//!
+//! * [`codes`]     — the 3-bit Table-II code alphabet and its decode ops.
+//! * [`gaussian`]  — per-group MLE statistics (eq. 7) with sign splitting.
+//! * [`qsq`]       — the quantizer (eqs. 5–10): grouping, alpha (eq. 9),
+//!   sigma-threshold assignment with exhaustive (gamma, delta) search, plus
+//!   the `Nearest` / `NearestOpt` ablation modes.  Mirrors
+//!   `python/compile/qsq_lib.py`; parity is enforced by integration tests
+//!   against `artifacts/parity/`.
+//! * [`ternary`]   — TWN-style 2-bit baseline (Li et al., paper Table I).
+//! * [`binary`]    — XNOR/BWN-style 1-bit baseline (paper eqs. 2–3).
+//! * [`vectorize`] — channel-wise / filter-wise grouping (paper Figs. 5/6).
+
+pub mod binary;
+pub mod codes;
+pub mod gaussian;
+pub mod qsq;
+pub mod ternary;
+pub mod vectorize;
+
+pub use codes::Code;
+pub use qsq::{AssignMode, QuantizedTensor};

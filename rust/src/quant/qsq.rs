@@ -1,0 +1,440 @@
+//! The Quality Scalable Quantizer (paper §III.B, eqs. 5–10).
+//!
+//! Layout convention (shared with `python/compile/qsq_lib.py` — keep in
+//! sync): tensors are quantized in matmul layout `[K, OC]` row-major; conv
+//! weights `[kh,kw,C,OC]` reinterpret directly (C-order reshape is a no-op).
+//! Groups are contiguous runs of `group` rows per output column; scalars are
+//! `[K/group, OC]` row-major.
+//!
+//! Assignment modes (DESIGN.md §6):
+//! * `SigmaSearch` — the paper's method: per-sign sigma thresholds
+//!   (gamma·sigma, sigma, delta·sigma), (gamma, delta) tuned per tensor by
+//!   exhaustive grid search minimizing eq. 5.
+//! * `Sigma { gamma, delta }` — fixed thresholds.
+//! * `Nearest` — nearest level given the eq.-9 alpha (optimal for eq. 5).
+//! * `NearestOpt` — ablation: per-group 1-D line search over alpha (eq. 9
+//!   clamps everything above mean|w|, which collapses deep all-layer
+//!   quantization — this mode shows the recoverable gap).
+
+use anyhow::{bail, Result};
+
+use super::codes::{self, Code};
+use super::gaussian::{group_stats, GroupStats};
+
+/// Exhaustive-search grids (match qsq_lib.GAMMA_GRID / DELTA_GRID).
+pub const GAMMA_GRID: [f64; 19] = [
+    0.05, 0.10, 0.15, 0.20, 0.25, 0.30, 0.35, 0.40, 0.45, 0.50, 0.55, 0.60, 0.65, 0.70, 0.75,
+    0.80, 0.85, 0.90, 0.95,
+];
+pub const DELTA_GRID: [f64; 8] = [1.1, 1.25, 1.5, 1.75, 2.0, 2.25, 2.5, 3.0];
+/// Alpha multiplier candidates for `NearestOpt` (match qsq_lib._ALPHA_MULTS).
+pub const ALPHA_MULTS: [f64; 8] = [0.5, 0.75, 1.0, 1.5, 2.0, 2.5, 3.0, 4.0];
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AssignMode {
+    SigmaSearch,
+    Sigma { gamma: f64, delta: f64 },
+    Nearest,
+    NearestOpt,
+}
+
+impl AssignMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AssignMode::SigmaSearch => "sigma-search",
+            AssignMode::Sigma { .. } => "sigma",
+            AssignMode::Nearest => "nearest",
+            AssignMode::NearestOpt => "nearest-opt",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<AssignMode> {
+        Some(match s {
+            "sigma-search" => AssignMode::SigmaSearch,
+            "sigma" => AssignMode::Sigma { gamma: 0.5, delta: 2.0 },
+            "nearest" => AssignMode::Nearest,
+            "nearest-opt" => AssignMode::NearestOpt,
+            _ => return None,
+        })
+    }
+}
+
+/// One quantized tensor: Table-II codes + per-group scalars.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    /// [K, OC] row-major.
+    pub codes: Vec<Code>,
+    /// [K/group, OC] row-major.
+    pub scalars: Vec<f32>,
+    pub k: usize,
+    pub oc: usize,
+    pub group: usize,
+    pub phi: u32,
+    pub gamma: f64,
+    pub delta: f64,
+    /// Original tensor shape (C-order compatible with [K, OC]).
+    pub shape: Vec<usize>,
+}
+
+impl QuantizedTensor {
+    /// Shift-and-scale decode back to f32 in the original C-order layout.
+    pub fn decode(&self) -> Vec<f32> {
+        let g = self.k / self.group;
+        let mut out = vec![0.0f32; self.k * self.oc];
+        for ki in 0..self.k {
+            let gi = ki / self.group;
+            debug_assert!(gi < g);
+            for j in 0..self.oc {
+                let alpha = self.scalars[gi * self.oc + j];
+                out[ki * self.oc + j] = self.codes[ki * self.oc + j].decode(alpha);
+            }
+        }
+        out
+    }
+
+    /// Eq.-5 objective: sum of squared reconstruction error vs `w` [K,OC].
+    pub fn error(&self, w: &[f32]) -> f64 {
+        assert_eq!(w.len(), self.codes.len());
+        self.decode()
+            .iter()
+            .zip(w)
+            .map(|(d, &x)| {
+                let e = (x - d) as f64;
+                e * e
+            })
+            .sum()
+    }
+
+    /// Fraction of zero codes (the paper's "+6 % zeros" claim).
+    pub fn zeros_fraction(&self) -> f64 {
+        let z = self.codes.iter().filter(|c| c.is_skippable()).count();
+        z as f64 / self.codes.len().max(1) as f64
+    }
+
+    /// Eq. 12: bits for codes + full-precision scalars.
+    pub fn encoded_bits(&self, fpb: u32) -> u64 {
+        self.codes.len() as u64 * codes::code_bits(self.phi) as u64
+            + self.scalars.len() as u64 * fpb as u64
+    }
+
+    /// Eq. 11: bits of the unquantized tensor.
+    pub fn full_precision_bits(&self, fpb: u32) -> u64 {
+        self.codes.len() as u64 * fpb as u64
+    }
+
+    /// 1 - encoded/full (the paper's "memory savings" metric).
+    pub fn memory_savings(&self, fpb: u32) -> f64 {
+        1.0 - self.encoded_bits(fpb) as f64 / self.full_precision_bits(fpb) as f64
+    }
+}
+
+/// Quantize `w` (row-major `[K, OC]`, possibly a reshaped conv tensor).
+pub fn quantize(
+    w: &[f32],
+    shape: &[usize],
+    group: usize,
+    phi: u32,
+    mode: AssignMode,
+) -> Result<QuantizedTensor> {
+    let (k, oc) = matrix_dims(shape)?;
+    if w.len() != k * oc {
+        bail!("weight len {} != {}x{}", w.len(), k, oc);
+    }
+    if group == 0 || k % group != 0 {
+        bail!("group {group} must divide K={k}");
+    }
+    if !matches!(phi, 1 | 2 | 4) {
+        bail!("phi must be 1, 2 or 4");
+    }
+    let g = k / group;
+
+    // Per-(group, column) stats.  Gather each vector (strided column scan).
+    let mut stats: Vec<GroupStats> = Vec::with_capacity(g * oc);
+    let mut vbuf = vec![0.0f32; group];
+    for gi in 0..g {
+        for j in 0..oc {
+            for (i, slot) in vbuf.iter_mut().enumerate() {
+                *slot = w[(gi * group + i) * oc + j];
+            }
+            stats.push(group_stats(&vbuf, phi));
+        }
+    }
+
+    let assign_sigma = |gamma: f64, delta: f64| -> Vec<Code> {
+        let mut codes_out = vec![Code::ZERO; k * oc];
+        for ki in 0..k {
+            let gi = ki / group;
+            for j in 0..oc {
+                let st = &stats[gi * oc + j];
+                let x = w[ki * oc + j] as f64;
+                let sig = if x >= 0.0 { st.sigma_p } else { st.sigma_n };
+                let mag = x.abs();
+                let mut lvl = 0i32;
+                if mag >= gamma * sig {
+                    lvl = 1;
+                }
+                if phi >= 2 && mag >= sig {
+                    lvl = 2;
+                }
+                if phi >= 4 && mag >= delta * sig {
+                    lvl = 4;
+                }
+                let signed = if x > 0.0 { lvl } else if x < 0.0 { -lvl } else { 0 };
+                codes_out[ki * oc + j] = Code::from_level(signed).unwrap();
+            }
+        }
+        codes_out
+    };
+
+    let err_of = |codes_v: &[Code], alphas: &dyn Fn(usize, usize) -> f64| -> f64 {
+        let mut tot = 0.0f64;
+        for ki in 0..k {
+            let gi = ki / group;
+            for j in 0..oc {
+                let a = alphas(gi, j);
+                let d = codes_v[ki * oc + j].multiplier() as f64 * a;
+                let e = w[ki * oc + j] as f64 - d;
+                tot += e * e;
+            }
+        }
+        tot
+    };
+    let eq9_alpha = |gi: usize, j: usize| stats[gi * oc + j].alpha;
+
+    let levels = codes::levels_for_phi(phi);
+    let assign_nearest = |alpha_of: &dyn Fn(usize, usize) -> f64| -> Vec<Code> {
+        let mut codes_out = vec![Code::ZERO; k * oc];
+        for ki in 0..k {
+            let gi = ki / group;
+            for j in 0..oc {
+                let a = alpha_of(gi, j);
+                let x = w[ki * oc + j] as f64;
+                let mag = x.abs();
+                // first minimum wins (replicates np.argmin tie behaviour)
+                let mut best = (f64::INFINITY, 0i32);
+                for &l in &levels {
+                    let d = (mag - l as f64 * a).abs();
+                    if d < best.0 {
+                        best = (d, l);
+                    }
+                }
+                let signed = if x > 0.0 { best.1 } else if x < 0.0 { -best.1 } else { 0 };
+                codes_out[ki * oc + j] = Code::from_level(signed).unwrap();
+            }
+        }
+        codes_out
+    };
+
+    let (codes_v, scalars, gamma, delta) = match mode {
+        AssignMode::Sigma { gamma, delta } => {
+            let c = assign_sigma(gamma, delta);
+            (c, eq9_scalars(&stats, g, oc), gamma, delta)
+        }
+        AssignMode::SigmaSearch => {
+            let deltas: &[f64] = if phi >= 4 { &DELTA_GRID } else { &[2.0] };
+            let mut best: (Vec<Code>, f64, f64, f64) = (Vec::new(), f64::INFINITY, 0.5, 2.0);
+            for &gam in GAMMA_GRID.iter() {
+                for &dlt in deltas {
+                    let c = assign_sigma(gam, dlt);
+                    let e = err_of(&c, &eq9_alpha);
+                    if e < best.1 {
+                        best = (c, e, gam, dlt);
+                    }
+                }
+            }
+            (best.0, eq9_scalars(&stats, g, oc), best.2, best.3)
+        }
+        AssignMode::Nearest => {
+            let c = assign_nearest(&eq9_alpha);
+            (c, eq9_scalars(&stats, g, oc), -1.0, -1.0)
+        }
+        AssignMode::NearestOpt => {
+            // per-group alpha line search (strict-improvement, in ALPHA_MULTS
+            // order — replicates the python loop exactly)
+            let mut best_alpha: Vec<f64> = (0..g * oc).map(|i| stats[i].alpha).collect();
+            let mut best_err = vec![f64::INFINITY; g * oc];
+            for &m in ALPHA_MULTS.iter() {
+                for gi in 0..g {
+                    for j in 0..oc {
+                        let a = stats[gi * oc + j].alpha * m;
+                        let mut e = 0.0f64;
+                        for i in 0..group {
+                            let x = w[(gi * group + i) * oc + j] as f64;
+                            let mag = x.abs();
+                            let mut bd = f64::INFINITY;
+                            for &l in &levels {
+                                let d = (mag - l as f64 * a).abs();
+                                if d < bd {
+                                    bd = d;
+                                }
+                            }
+                            e += bd * bd;
+                        }
+                        if e < best_err[gi * oc + j] {
+                            best_err[gi * oc + j] = e;
+                            best_alpha[gi * oc + j] = a;
+                        }
+                    }
+                }
+            }
+            let alpha_of = |gi: usize, j: usize| best_alpha[gi * oc + j];
+            let c = assign_nearest(&alpha_of);
+            let scalars: Vec<f32> = best_alpha.iter().map(|&a| a as f32).collect();
+            (c, scalars, -1.0, -1.0)
+        }
+    };
+
+    Ok(QuantizedTensor {
+        codes: codes_v,
+        scalars,
+        k,
+        oc,
+        group,
+        phi,
+        gamma,
+        delta,
+        shape: shape.to_vec(),
+    })
+}
+
+fn eq9_scalars(stats: &[GroupStats], g: usize, oc: usize) -> Vec<f32> {
+    (0..g * oc).map(|i| stats[i].alpha as f32).collect()
+}
+
+/// Collapse a tensor shape to matmul dims (K, OC): last axis is OC.
+pub fn matrix_dims(shape: &[usize]) -> Result<(usize, usize)> {
+    match shape.len() {
+        2 => Ok((shape[0], shape[1])),
+        4 => Ok((shape[0] * shape[1] * shape[2], shape[3])),
+        _ => bail!("unsupported tensor rank {} for quantization", shape.len()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, forall, gen_weights};
+    use crate::util::rng::Rng;
+
+    fn gauss(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        gen_weights(&mut r, n, 0.1)
+    }
+
+    #[test]
+    fn decode_values_are_levels_times_alpha() {
+        let w = gauss(0, 24 * 8);
+        let qt = quantize(&w, &[24, 8], 4, 4, AssignMode::Nearest).unwrap();
+        let dec = qt.decode();
+        for ki in 0..24 {
+            for j in 0..8 {
+                let a = qt.scalars[(ki / 4) * 8 + j];
+                let d = dec[ki * 8 + j];
+                if a != 0.0 {
+                    let ratio = (d / a).abs();
+                    assert!(
+                        [0.0, 1.0, 2.0, 4.0].iter().any(|l| (ratio - l).abs() < 1e-5),
+                        "ratio {ratio}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_beats_sigma_search() {
+        let w = gauss(1, 24 * 8);
+        for phi in [1u32, 2, 4] {
+            let en = quantize(&w, &[24, 8], 4, phi, AssignMode::Nearest).unwrap().error(&w);
+            let es = quantize(&w, &[24, 8], 4, phi, AssignMode::SigmaSearch).unwrap().error(&w);
+            assert!(en <= es + 1e-9, "phi={phi}: {en} > {es}");
+        }
+    }
+
+    #[test]
+    fn prop_nearest_error_monotone_in_phi() {
+        forall(
+            40,
+            |r| gen_weights(r, 16 * 4, 0.2),
+            |w| {
+                let e1 = quantize(w, &[16, 4], 4, 1, AssignMode::Nearest).unwrap().error(w);
+                let e2 = quantize(w, &[16, 4], 4, 2, AssignMode::Nearest).unwrap().error(w);
+                let e4 = quantize(w, &[16, 4], 4, 4, AssignMode::Nearest).unwrap().error(w);
+                check(e1 >= e2 - 1e-9 && e2 >= e4 - 1e-9, "error not monotone in phi")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_alpha_opt_no_worse_than_eq9() {
+        forall(
+            30,
+            |r| gen_weights(r, 8 * 6, 0.3),
+            |w| {
+                let eo = quantize(w, &[8, 6], 4, 4, AssignMode::NearestOpt).unwrap().error(w);
+                let en = quantize(w, &[8, 6], 4, 4, AssignMode::Nearest).unwrap().error(w);
+                check(eo <= en + 1e-9, "alpha search made error worse")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_decode_bounded_by_phi_alpha() {
+        forall(
+            30,
+            |r| gen_weights(r, 32, 0.5),
+            |w| {
+                let qt = quantize(w, &[32, 1], 8, 4, AssignMode::SigmaSearch).unwrap();
+                let dec = qt.decode();
+                for (ki, &d) in dec.iter().enumerate() {
+                    let a = qt.scalars[ki / 8];
+                    if d.abs() > 4.0 * a.abs() + 1e-6 {
+                        return Err(format!("decoded {d} exceeds 4*alpha {a}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn zero_tensor_all_zero_codes() {
+        let w = vec![0.0f32; 16];
+        let qt = quantize(&w, &[16, 1], 4, 4, AssignMode::Nearest).unwrap();
+        assert_eq!(qt.zeros_fraction(), 1.0);
+        assert!(qt.decode().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bit_accounting() {
+        let w = gauss(2, 150 * 16);
+        let qt = quantize(&w, &[5, 5, 6, 16], 6, 4, AssignMode::Nearest).unwrap();
+        assert_eq!(qt.full_precision_bits(32), 2400 * 32);
+        assert_eq!(qt.encoded_bits(32), 2400 * 3 + 400 * 32);
+        assert!(qt.memory_savings(32) > 0.7);
+    }
+
+    #[test]
+    fn conv_shape_matrix_dims() {
+        assert_eq!(matrix_dims(&[5, 5, 6, 16]).unwrap(), (150, 16));
+        assert_eq!(matrix_dims(&[256, 120]).unwrap(), (256, 120));
+        assert!(matrix_dims(&[3]).is_err());
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        let w = vec![0.0f32; 12];
+        assert!(quantize(&w, &[12, 1], 5, 4, AssignMode::Nearest).is_err()); // 5 !| 12
+        assert!(quantize(&w, &[12, 1], 4, 3, AssignMode::Nearest).is_err()); // phi=3
+        assert!(quantize(&w, &[10, 1], 2, 4, AssignMode::Nearest).is_err()); // len mismatch
+    }
+
+    #[test]
+    fn phi1_never_emits_high_levels() {
+        let w = gauss(3, 64);
+        let qt = quantize(&w, &[64, 1], 8, 1, AssignMode::SigmaSearch).unwrap();
+        for c in &qt.codes {
+            assert!(c.level().abs() <= 1);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! TWN-style ternary baseline (Li et al. 2016; paper Table I, "2-bit").
+//!
+//! Threshold Δ = 0.7·mean(|w|); alpha = mean of |w| over the above-threshold
+//! entries; codes in {-1, 0, +1} (2 bits each).  Used as the 2-bit arm of the
+//! Fig.-10 design-space comparison.
+
+use anyhow::Result;
+
+use super::codes::Code;
+use super::qsq::{matrix_dims, QuantizedTensor};
+
+/// Quantize `w` ([K,OC] row-major or conv shape) to ternary with per-group
+/// alpha; `group` rows per column share one alpha (mirrors QSQ grouping so
+/// the Fig.-10 sweep compares like for like).
+pub fn quantize_ternary(w: &[f32], shape: &[usize], group: usize) -> Result<QuantizedTensor> {
+    let (k, oc) = matrix_dims(shape)?;
+    anyhow::ensure!(w.len() == k * oc, "weight len mismatch");
+    anyhow::ensure!(group > 0 && k % group == 0, "group {group} must divide K={k}");
+    let g = k / group;
+    let mut codes = vec![Code::ZERO; k * oc];
+    let mut scalars = vec![0.0f32; g * oc];
+
+    for gi in 0..g {
+        for j in 0..oc {
+            // Δ* = 0.7/n Σ|w| (TWN approximation of eq. 4's argmax)
+            let mut abs_sum = 0.0f64;
+            for i in 0..group {
+                abs_sum += (w[(gi * group + i) * oc + j] as f64).abs();
+            }
+            let delta = 0.7 * abs_sum / group as f64;
+            // alpha = mean |w| over entries above threshold
+            let (mut sum, mut cnt) = (0.0f64, 0usize);
+            for i in 0..group {
+                let a = (w[(gi * group + i) * oc + j] as f64).abs();
+                if a > delta {
+                    sum += a;
+                    cnt += 1;
+                }
+            }
+            let alpha = if cnt > 0 { sum / cnt as f64 } else { 0.0 };
+            scalars[gi * oc + j] = alpha as f32;
+            for i in 0..group {
+                let x = w[(gi * group + i) * oc + j] as f64;
+                let lvl = if x > delta {
+                    1
+                } else if x < -delta {
+                    -1
+                } else {
+                    0
+                };
+                codes[(gi * group + i) * oc + j] = Code::from_level(lvl).unwrap();
+            }
+        }
+    }
+
+    Ok(QuantizedTensor {
+        codes,
+        scalars,
+        k,
+        oc,
+        group,
+        phi: 1, // ternary levels {0, ±1} == phi=1 alphabet (2-bit)
+        gamma: 0.7,
+        delta: 0.7,
+        shape: shape.to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::gen_weights;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn levels_are_ternary() {
+        let mut r = Rng::new(0);
+        let w = gen_weights(&mut r, 64, 0.2);
+        let qt = quantize_ternary(&w, &[64, 1], 16).unwrap();
+        assert!(qt.codes.iter().all(|c| c.level().abs() <= 1));
+    }
+
+    #[test]
+    fn alpha_matches_twn_formula() {
+        // weights {1, -1, 0.1, -0.1}: Δ=0.7*0.55=0.385; alpha = mean{1,1}=1
+        let w = [1.0f32, -1.0, 0.1, -0.1];
+        let qt = quantize_ternary(&w, &[4, 1], 4).unwrap();
+        assert!((qt.scalars[0] - 1.0).abs() < 1e-6);
+        assert_eq!(
+            qt.codes.iter().map(|c| c.level()).collect::<Vec<_>>(),
+            vec![1, -1, 0, 0]
+        );
+    }
+
+    #[test]
+    fn ternary_error_worse_or_equal_qsq_phi4_nearest() {
+        // with the same grouping, richer alphabet + optimal assignment wins
+        let mut r = Rng::new(9);
+        let w = gen_weights(&mut r, 128, 0.3);
+        let t = quantize_ternary(&w, &[128, 1], 16).unwrap().error(&w);
+        let q = super::super::qsq::quantize(
+            &w,
+            &[128, 1],
+            16,
+            4,
+            super::super::qsq::AssignMode::NearestOpt,
+        )
+        .unwrap()
+        .error(&w);
+        assert!(q <= t + 1e-9, "qsq {q} vs ternary {t}");
+    }
+
+    #[test]
+    fn encoded_bits_uses_2bit_codes() {
+        let w = vec![0.5f32; 32];
+        let qt = quantize_ternary(&w, &[32, 1], 8).unwrap();
+        assert_eq!(qt.encoded_bits(32), 32 * 2 + 4 * 32);
+    }
+}

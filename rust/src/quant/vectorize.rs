@@ -1,0 +1,98 @@
+//! Vector (group) selection strategies — paper Figs. 5/6.
+//!
+//! The quantizer groups contiguous runs of rows in the `[K, OC]` matmul
+//! layout, where K is ordered (di, dj, c) with channels fastest.  That makes
+//! the paper's two strategies:
+//!
+//! * **channel-wise** (Fig. 5): group = C — each vector is the C channel
+//!   values at one kernel position for one output filter.
+//! * **filter-wise** (Fig. 6): group = K — one vector per output filter.
+//! * **fixed-N**: any divisor of K (the Fig. 8/9/10 sweeps).
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Grouping {
+    /// One vector per kernel position across channels (Fig. 5); group = C.
+    ChannelWise,
+    /// One vector per output filter (Fig. 6); group = K.
+    FilterWise,
+    /// Fixed vector length N (must divide K).
+    FixedN(usize),
+}
+
+impl Grouping {
+    /// Resolve to a concrete group length for a tensor shape.
+    pub fn resolve(self, shape: &[usize]) -> Result<usize> {
+        let (k, c) = match shape.len() {
+            4 => (shape[0] * shape[1] * shape[2], shape[2]),
+            2 => (shape[0], shape[0]),
+            _ => bail!("unsupported rank {}", shape.len()),
+        };
+        let g = match self {
+            Grouping::ChannelWise => c,
+            Grouping::FilterWise => k,
+            Grouping::FixedN(n) => n,
+        };
+        if g == 0 || k % g != 0 {
+            bail!("group {g} does not divide K={k} (shape {shape:?})");
+        }
+        Ok(g)
+    }
+
+    /// Best-effort fixed-N: largest divisor of K that is <= n (so sweeps can
+    /// use one nominal N across tensors with awkward K, as the paper does
+    /// for N in {2,4,8,...,64}).
+    pub fn nearest_divisor(shape: &[usize], n: usize) -> Result<usize> {
+        let k = match shape.len() {
+            4 => shape[0] * shape[1] * shape[2],
+            2 => shape[0],
+            _ => bail!("unsupported rank {}", shape.len()),
+        };
+        for g in (1..=n.min(k)).rev() {
+            if k % g == 0 {
+                return Ok(g);
+            }
+        }
+        Ok(1)
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Grouping::ChannelWise => "channel-wise".into(),
+            Grouping::FilterWise => "filter-wise".into(),
+            Grouping::FixedN(n) => format!("N={n}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channelwise_is_c() {
+        assert_eq!(Grouping::ChannelWise.resolve(&[5, 5, 6, 16]).unwrap(), 6);
+    }
+
+    #[test]
+    fn filterwise_is_k() {
+        assert_eq!(Grouping::FilterWise.resolve(&[5, 5, 6, 16]).unwrap(), 150);
+        assert_eq!(Grouping::FilterWise.resolve(&[256, 120]).unwrap(), 256);
+    }
+
+    #[test]
+    fn fixed_n_must_divide() {
+        assert_eq!(Grouping::FixedN(25).resolve(&[5, 5, 6, 16]).unwrap(), 25);
+        assert!(Grouping::FixedN(7).resolve(&[5, 5, 6, 16]).is_err());
+    }
+
+    #[test]
+    fn nearest_divisor_falls_back() {
+        // K = 150: nearest divisor <= 64 is 50
+        assert_eq!(Grouping::nearest_divisor(&[5, 5, 6, 16], 64).unwrap(), 50);
+        assert_eq!(Grouping::nearest_divisor(&[5, 5, 6, 16], 2).unwrap(), 2);
+        // K = 25: nearest divisor <= 8 is 5
+        assert_eq!(Grouping::nearest_divisor(&[5, 5, 1, 6], 8).unwrap(), 5);
+    }
+}

@@ -1,0 +1,47 @@
+//! Fig. 1 — energy per operation (add/mult vs DRAM access).
+//!
+//! Paper: a bar chart of 45 nm per-op energies showing DRAM reads dominating
+//! arithmetic by orders of magnitude (the motivation for model compression).
+//! Reproduced from the same Horowitz constants the paper cites through [8].
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::hw::energy;
+
+pub fn run(_ctx: &Ctx) -> Result<String> {
+    let rows = energy::fig1_rows();
+    let dram = rows.last().unwrap().1;
+    let mut out = String::from("Fig. 1 — energy per operation (45 nm)\n");
+    out.push_str(&format!("{:<16} {:>10}  {:>12}  bar\n", "operation", "pJ", "DRAM ratio"));
+    for (label, e) in &rows {
+        let ratio = dram / e;
+        let bar_len = ((e.log10() + 2.0) * 6.0).max(1.0) as usize;
+        out.push_str(&format!(
+            "{:<16} {:>10.2}  {:>11.0}x  {}\n",
+            label,
+            e,
+            ratio,
+            "#".repeat(bar_len)
+        ));
+    }
+    out.push_str(&format!(
+        "\npaper's §IV.C DRAM constant: {} pJ / 32 bits (kept for Fig.-10 parity; Horowitz value {} pJ)\n",
+        energy::pj::PAPER_DRAM_32,
+        energy::pj::DRAM_32
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_rows() {
+        let ctx = Ctx::new("artifacts".into(), true);
+        let s = run(&ctx).unwrap();
+        assert!(s.contains("DRAM"));
+        assert!(s.contains("32b fp MULT"));
+    }
+}

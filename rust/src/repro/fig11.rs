@@ -1,0 +1,73 @@
+//! Fig. 11 — distribution of CSD non-zero digits in trained filters.
+//!
+//! Paper: AlexNet filters analyzed with MATLAB `fi` showing most weights need
+//! few non-zero CSD digits (justifying the QSM truncation).  Substitution
+//! (DESIGN.md §2): our trained ConvNet/LeNet filters + a synthetic
+//! AlexNet-shaped Gaussian filter bank, in Q16.14 fixed point.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::hw::fixedpoint::Format;
+use crate::hw::multiplier::csd_nonzero_histogram;
+use crate::model::meta::ModelKind;
+use crate::model::store::WeightStore;
+use crate::util::rng::Rng;
+
+fn render_hist(name: &str, hist: &[u64], out: &mut String) {
+    let total: u64 = hist.iter().sum();
+    out.push_str(&format!("\n{name} ({} weights):\n", total));
+    for (nz, &count) in hist.iter().enumerate() {
+        if count == 0 && nz > 8 {
+            continue;
+        }
+        let frac = count as f64 / total.max(1) as f64;
+        out.push_str(&format!(
+            "  {:>2} non-zeros: {:>7.3}%  {}\n",
+            nz,
+            100.0 * frac,
+            "#".repeat((frac * 120.0) as usize)
+        ));
+    }
+    let cum: u64 = hist[..5.min(hist.len())].iter().sum();
+    out.push_str(&format!(
+        "  <=4 non-zeros cover {:.2}% of weights\n",
+        100.0 * cum as f64 / total.max(1) as f64
+    ));
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let fmt = Format::Q16_14;
+    let mut out = String::from("Fig. 11 — CSD non-zero distribution of filter weights (Q16.14)\n");
+
+    // trained filters from artifacts (both models)
+    for kind in [ModelKind::Lenet, ModelKind::Convnet] {
+        if let Ok(store) = WeightStore::load(&ctx.artifacts, kind) {
+            let mut all = Vec::new();
+            for tm in store.meta.quantized_tensors() {
+                all.extend_from_slice(store.get(tm.name)?.data());
+            }
+            render_hist(&format!("trained {} conv/fc filters", kind.name()), &csd_nonzero_histogram(&all, fmt), &mut out);
+        }
+    }
+
+    // synthetic AlexNet-shaped filter bank (the paper's subject)
+    let mut rng = Rng::new(11);
+    let alexnet_shapes: &[(usize, f64)] = &[
+        (11 * 11 * 3 * 96, 0.02),
+        (5 * 5 * 96 * 256 / 16, 0.015), // subsampled for runtime
+        (3 * 3 * 256 * 384 / 64, 0.01),
+    ];
+    let mut synth = Vec::new();
+    for &(n, sigma) in alexnet_shapes {
+        for _ in 0..n {
+            synth.push((rng.normal() * sigma) as f32);
+        }
+    }
+    render_hist("synthetic AlexNet-shaped Gaussian filters", &csd_nonzero_histogram(&synth, fmt), &mut out);
+
+    out.push_str(
+        "\n(the paper's point: few non-zeros represent most weights, so truncating\n CSD partial products in the QSM costs little accuracy — see bench_csd_multiplier)\n",
+    );
+    Ok(out)
+}

@@ -1,0 +1,52 @@
+//! Fig. 3 — resource comparison between edge devices (the paper compares
+//! FPGA boards; we carry the device roster that drives quality selection).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::coordinator::router::plan_deployments;
+use crate::device::DeviceProfile;
+use crate::model::meta::ModelMeta;
+use crate::quant::qsq::AssignMode;
+
+pub fn run(_ctx: &Ctx) -> Result<String> {
+    let roster = DeviceProfile::roster();
+    let mut out = String::from("Fig. 3 — edge-device resource spread + selected quality\n");
+    out.push_str(&format!(
+        "{:<18} {:>12} {:>12} {:>12}   lenet(phi,N)   convnet(phi,N)\n",
+        "device", "mem budget", "MACs/s", "downlink"
+    ));
+    let lenet = ModelMeta::lenet();
+    let convnet = ModelMeta::convnet();
+    let lp = plan_deployments(&lenet, &roster, AssignMode::SigmaSearch);
+    let cp = plan_deployments(&convnet, &roster, AssignMode::SigmaSearch);
+    for (i, d) in roster.iter().enumerate() {
+        let fmt_q = |p: &anyhow::Result<crate::coordinator::router::DeployPlan>| match p {
+            Ok(plan) => format!("({}, {})", plan.quality.phi, plan.quality.group),
+            Err(_) => "  —".to_string(),
+        };
+        out.push_str(&format!(
+            "{:<18} {:>10} KB {:>12.0e} {:>9.1} Mbps   {:<14} {}\n",
+            d.name,
+            d.model_budget_bytes / 1024,
+            d.macs_per_s,
+            d.link.bandwidth_bps / 1e6,
+            fmt_q(&lp[i]),
+            fmt_q(&cp[i]),
+        ));
+    }
+    out.push_str("\n(quality scalability: constrained devices receive lower phi / larger N)\n");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_roster() {
+        let s = run(&Ctx::new("artifacts".into(), true)).unwrap();
+        assert!(s.contains("mcu-m4"));
+        assert!(s.contains("server"));
+    }
+}

@@ -1,0 +1,76 @@
+//! Figs. 5/6 — channel-wise vs filter-wise vector selection, operationalized.
+//!
+//! The paper draws the two grouping strategies but never compares them
+//! head-to-head; this experiment does: reconstruction error (eq. 5), encoded
+//! bits, and end-to-end accuracy for channel-wise (Fig. 5), filter-wise
+//! (Fig. 6), and fixed-N grouping on both models.
+
+use anyhow::Result;
+
+use super::{eval_store, quantized_names, Ctx};
+use crate::model::meta::ModelKind;
+use crate::model::store::{Dataset, WeightStore};
+use crate::quant::qsq::{quantize, AssignMode};
+use crate::quant::vectorize::Grouping;
+use crate::runtime::client::Runtime;
+use crate::tensor::Tensor;
+
+fn quantize_with(
+    store: &WeightStore,
+    grouping: Grouping,
+) -> Result<(WeightStore, f64, u64)> {
+    let mut out = store.clone();
+    let mut err = 0.0f64;
+    let mut bits = 0u64;
+    for tm in store.meta.quantized_tensors() {
+        let g = match grouping {
+            Grouping::FixedN(n) => Grouping::nearest_divisor(&tm.shape, n)?,
+            other => other.resolve(&tm.shape)?,
+        };
+        let w = store.get(tm.name)?;
+        let qt = quantize(w.data(), &tm.shape, g, 4, AssignMode::SigmaSearch)?;
+        err += qt.error(w.data());
+        bits += qt.encoded_bits(32);
+        out.set(tm.name, Tensor::new(tm.shape.clone(), qt.decode())?)?;
+    }
+    Ok((out, err, bits))
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let mut rt = Runtime::new(&ctx.artifacts)?;
+    let mut out = String::from(
+        "Figs. 5/6 — vector selection strategies (phi=4, sigma-search, all quantized tensors)\n",
+    );
+    for kind in [ModelKind::Lenet, ModelKind::Convnet] {
+        let store = WeightStore::load(&ctx.artifacts, kind)?;
+        let test = Dataset::load(&ctx.artifacts, kind.dataset(), "test")?;
+        let base = eval_store(&mut rt, &store, &test, ctx.eval_limit())?;
+        out.push_str(&format!("\n{} (fp32 {:.2}%):\n", kind.name(), 100.0 * base));
+        out.push_str(&format!(
+            "{:<26} {:>14} {:>12} {:>10}\n",
+            "grouping", "eq.5 error", "enc. kbits", "accuracy"
+        ));
+        let strategies = [
+            Grouping::ChannelWise,
+            Grouping::FilterWise,
+            Grouping::FixedN(8),
+            Grouping::FixedN(32),
+        ];
+        for s in strategies {
+            let (q, err, bits) = quantize_with(&store, s)?;
+            let acc = eval_store(&mut rt, &q, &test, ctx.eval_limit())?;
+            out.push_str(&format!(
+                "{:<26} {:>14.4} {:>12.1} {:>9.2}%\n",
+                s.name(),
+                err,
+                bits as f64 / 1000.0,
+                100.0 * acc
+            ));
+        }
+        let _ = quantized_names(kind);
+    }
+    out.push_str(
+        "\n(channel-wise = Fig. 5: one scalar per kernel position; filter-wise = Fig. 6:\n one scalar per output filter — cheapest but coarsest; fixed-N interpolates)\n",
+    );
+    Ok(out)
+}

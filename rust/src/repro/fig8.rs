@@ -1,0 +1,43 @@
+//! Fig. 8 — ConvNet-4 quality-scalable quantization for varying vector
+//! lengths N: four bars per N (accuracy after quantizing the 1st, 2nd, 3rd,
+//! 4th conv layer respectively).
+
+use anyhow::Result;
+
+use super::{eval_store, quantized_store, Ctx};
+use crate::model::meta::ModelKind;
+use crate::model::store::{Dataset, WeightStore};
+use crate::quant::qsq::AssignMode;
+use crate::runtime::client::Runtime;
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let mut rt = Runtime::new(&ctx.artifacts)?;
+    let store = WeightStore::load(&ctx.artifacts, ModelKind::Convnet)?;
+    let test = Dataset::load(&ctx.artifacts, "cifar", "test")?;
+    let limit = ctx.eval_limit();
+
+    let layers = ["k1", "k2", "k3", "k4"];
+    let ns: &[usize] = if ctx.fast { &[8, 32] } else { &[2, 4, 8, 16, 32, 64] };
+
+    let base = eval_store(&mut rt, &store, &test, limit)?;
+    let mut out = String::from(
+        "Fig. 8 — ConvNet-4 accuracy after quantizing each conv layer (phi=4, sigma-search)\n",
+    );
+    out.push_str(&format!("baseline (fp32): {:.2}%\n", 100.0 * base));
+    out.push_str(&format!(
+        "{:<6} {:>9} {:>9} {:>9} {:>9}\n",
+        "N", "conv1", "conv2", "conv3", "conv4"
+    ));
+    for &n in ns {
+        let mut row = format!("{n:<6}");
+        for layer in layers {
+            let q = quantized_store(&store, &[layer], 4, n, AssignMode::SigmaSearch)?;
+            let acc = eval_store(&mut rt, &q, &test, limit)?;
+            row.push_str(&format!(" {:>8.2}%", 100.0 * acc));
+        }
+        out.push_str(&row);
+        out.push('\n');
+    }
+    out.push_str("\n(per-layer bars as in the paper; smaller N = finer scalars = higher accuracy)\n");
+    Ok(out)
+}

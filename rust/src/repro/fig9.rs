@@ -1,0 +1,48 @@
+//! Fig. 9 — memory savings from encoding full-precision weight vectors as
+//! codes + one scalar, as a function of vector length N (eqs. 11/12).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::model::bits;
+use crate::model::meta::ModelMeta;
+
+pub fn run(_ctx: &Ctx) -> Result<String> {
+    let mut out = String::from("Fig. 9 — memory savings vs vector length N (eqs. 11/12, phi=4 → 3-bit codes)\n");
+    out.push_str(&format!(
+        "{:<6} {:>16} {:>16} {:>18} {:>18}\n",
+        "N", "lenet (quant)", "convnet (quant)", "lenet (whole)", "convnet (whole)"
+    ));
+    let lenet = ModelMeta::lenet();
+    let convnet = ModelMeta::convnet();
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let lq = bits::quantized_only_bits(&lenet, 4, n).savings();
+        let cq = bits::quantized_only_bits(&convnet, 4, n).savings();
+        let lw = bits::model_bits(&lenet, 4, n).savings();
+        let cw = bits::model_bits(&convnet, 4, n).savings();
+        out.push_str(&format!(
+            "{:<6} {:>15.2}% {:>15.2}% {:>17.2}% {:>17.2}%  {}\n",
+            n,
+            100.0 * lq,
+            100.0 * cq,
+            100.0 * lw,
+            100.0 * cw,
+            "#".repeat((lq * 40.0) as usize)
+        ));
+    }
+    out.push_str("\n(savings saturate at 1 - 3/32 ≈ 90.6% as the per-vector scalar amortizes)\n");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn savings_monotone_in_n() {
+        let s = run(&Ctx::new("artifacts".into(), true)).unwrap();
+        assert!(s.contains("N"));
+        // lenet quantized-savings at N=16 reproduces the 82.49% headline band
+        assert!(s.contains("82.") || s.contains("83.") || s.contains("84."));
+    }
+}

@@ -1,0 +1,130 @@
+//! Paper reproduction drivers — one module per table/figure (DESIGN.md §5).
+//!
+//! Every module exposes `run(&Ctx) -> Result<String>`; the CLI (`qsq-edge
+//! repro --exp <id>`) prints the result, and EXPERIMENTS.md records
+//! paper-vs-measured for each.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::model::meta::ModelKind;
+use crate::model::store::{Dataset, WeightStore};
+use crate::quant::qsq::AssignMode;
+use crate::quant::vectorize::Grouping;
+use crate::runtime::client::{ArgValue, Runtime};
+use crate::tensor::{ops, Tensor};
+
+pub mod fig1;
+pub mod fig10;
+pub mod fig11;
+pub mod fig2;
+pub mod fig3;
+pub mod fig56;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table2;
+pub mod table3;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    /// Trim sweeps/eval sizes for CI-speed runs.
+    pub fast: bool,
+}
+
+impl Ctx {
+    pub fn new(artifacts: PathBuf, fast: bool) -> Ctx {
+        Ctx { artifacts, fast }
+    }
+
+    /// Eval-set size cap (fast mode trims to 512 images).
+    pub fn eval_limit(&self) -> usize {
+        if self.fast {
+            512
+        } else {
+            usize::MAX
+        }
+    }
+}
+
+/// Dispatch an experiment id to its driver.
+pub fn run_experiment(ctx: &Ctx, exp: &str) -> Result<String> {
+    match exp {
+        "fig1" => fig1::run(ctx),
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig56" => fig56::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "fig9" => fig9::run(ctx),
+        "fig10" => fig10::run(ctx),
+        "fig11" => fig11::run(ctx),
+        "table2" => table2::run(ctx),
+        "table3" => table3::run(ctx),
+        other => anyhow::bail!("unknown experiment {other:?} (try fig1..fig11, fig56, table2, table3)"),
+    }
+}
+
+pub const ALL_EXPERIMENTS: [&str; 11] = [
+    "fig1", "fig2", "fig3", "table2", "table3", "fig56", "fig7", "fig8", "fig9", "fig10",
+    "fig11",
+];
+
+/// Evaluate a weight store on a dataset through the PJRT b128 artifact.
+pub fn eval_store(
+    rt: &mut Runtime,
+    store: &WeightStore,
+    ds: &Dataset,
+    limit: usize,
+) -> Result<f64> {
+    const B: usize = 128;
+    let art = format!("{}_fwd_b128", store.kind.name());
+    let exe = rt.load(&art)?;
+    let n = ds.len().min(limit) / B * B;
+    anyhow::ensure!(n > 0, "eval set too small for batch {B}");
+    let weights: Vec<&Tensor> = store.ordered();
+    let mut hits = 0usize;
+    for start in (0..n).step_by(B) {
+        let mut args = vec![ArgValue::F32(ds.batch(start, B))];
+        args.extend(weights.iter().map(|t| ArgValue::F32((*t).clone())));
+        let out = exe.run(&args)?;
+        for (j, &p) in ops::argmax_rows(&out[0]).iter().enumerate() {
+            if p as i32 == ds.y[start + j] {
+                hits += 1;
+            }
+        }
+    }
+    Ok(hits as f64 / n as f64)
+}
+
+/// Quantize selected tensors of a store (decode-then-replace), returning the
+/// edge-side approximate store.
+pub fn quantized_store(
+    store: &WeightStore,
+    tensor_names: &[&str],
+    phi: u32,
+    nominal_n: usize,
+    mode: AssignMode,
+) -> Result<WeightStore> {
+    let mut out = store.clone();
+    for name in tensor_names {
+        let tm = store
+            .meta
+            .tensor(name)
+            .with_context(|| format!("tensor {name}"))?;
+        let g = Grouping::nearest_divisor(&tm.shape, nominal_n)?;
+        let qt = crate::quant::qsq::quantize(store.get(name)?.data(), &tm.shape, g, phi, mode)?;
+        out.set(name, Tensor::new(tm.shape.clone(), qt.decode())?)?;
+    }
+    Ok(out)
+}
+
+/// All quantized-tensor names of a model.
+pub fn quantized_names(kind: ModelKind) -> Vec<&'static str> {
+    crate::model::meta::ModelMeta::of(kind)
+        .quantized_tensors()
+        .map(|t| t.name)
+        .collect()
+}

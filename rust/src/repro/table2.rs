@@ -1,0 +1,59 @@
+//! Table II — the 3-bit code alphabet and its shift/invert decode semantics,
+//! verified against the bit-level decoder simulator.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::hw::decoder_rtl;
+use crate::quant::codes::Code;
+
+pub fn run(_ctx: &Ctx) -> Result<String> {
+    let alpha = 0.8125f32; // arbitrary scalar with a non-trivial mantissa
+    let mut out = String::from("Table II — 3-bit code decode semantics (scalar alpha = 0.8125)\n");
+    out.push_str(&format!(
+        "{:<6} {:<6} {:<9} {:<26} {:>10}  {:>10}\n",
+        "code", "bits", "level", "operation", "decoded", "bit-level"
+    ));
+    let ops_desc = [
+        "0 is skipped",
+        "scalar used as-is",
+        "shift left once",
+        "shift left twice",
+        "invert",
+        "invert, shift once",
+        "invert, shift twice",
+        "unused (reserved)",
+    ];
+    for c in 0..8u8 {
+        let code = Code(c);
+        let arithmetic = code.decode(alpha);
+        let (bitlevel, _) = decoder_rtl::decode_f32(code, alpha);
+        out.push_str(&format!(
+            "{:<6} {:<6} {:<9} {:<26} {:>10.4}  {:>10.4}\n",
+            c,
+            format!("{c:03b}"),
+            if code.is_reserved() { "—".into() } else { format!("{:+}", code.level()) },
+            ops_desc[c as usize],
+            arithmetic,
+            bitlevel,
+        ));
+        anyhow::ensure!(
+            (arithmetic - bitlevel).abs() < 1e-9 || code.is_skippable(),
+            "bit-level decoder diverges at code {c}"
+        );
+    }
+    out.push_str("\n(bit-level decoder = sign-bit XOR + exponent add; verified identical)\n");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_verifies() {
+        let s = run(&Ctx::new("artifacts".into(), true)).unwrap();
+        assert!(s.contains("shift left twice"));
+        assert!(s.contains("verified identical"));
+    }
+}

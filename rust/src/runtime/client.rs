@@ -1,0 +1,209 @@
+//! PJRT runtime: loads HLO-text artifacts (produced by `make artifacts`)
+//! onto the CPU PJRT client and executes them from the serving hot path.
+//!
+//! Interchange is HLO **text**: jax >= 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::store::Manifest;
+use crate::quant::codes::Code;
+use crate::tensor::Tensor;
+
+/// Declared dtype of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgDtype {
+    F32,
+    I8,
+    I32,
+}
+
+impl ArgDtype {
+    fn from_str(s: &str) -> Result<ArgDtype> {
+        Ok(match s {
+            "f32" => ArgDtype::F32,
+            "i8" => ArgDtype::I8,
+            "i32" => ArgDtype::I32,
+            other => bail!("unsupported artifact dtype {other}"),
+        })
+    }
+}
+
+/// One declared argument.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: ArgDtype,
+}
+
+/// Runtime argument values (host side).
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    F32(Tensor),
+    /// Codes carried as int8 (one code per byte in the PJRT artifact; the
+    /// dense 3-bit packing exists on the wire/container only).
+    I8 {
+        shape: Vec<usize>,
+        data: Vec<i8>,
+    },
+    Scalar(f32),
+}
+
+impl ArgValue {
+    pub fn codes(shape: Vec<usize>, codes: &[Code]) -> ArgValue {
+        ArgValue::I8 { shape, data: codes.iter().map(|c| c.0 as i8).collect() }
+    }
+}
+
+/// A compiled artifact + its manifest spec.
+pub struct Executable {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+    pub n_outputs: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host values; returns output tensors (f32).
+    pub fn run(&self, values: &[ArgValue]) -> Result<Vec<Tensor>> {
+        if values.len() != self.args.len() {
+            bail!(
+                "{}: got {} args, artifact declares {}",
+                self.name,
+                values.len(),
+                self.args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(values.len());
+        for (spec, val) in self.args.iter().zip(values) {
+            literals.push(to_literal(spec, val).with_context(|| {
+                format!("artifact {} argument {}", self.name, spec.name)
+            })?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            out.push(literal_to_tensor(&lit)?);
+        }
+        Ok(out)
+    }
+}
+
+fn to_literal(spec: &ArgSpec, val: &ArgValue) -> Result<xla::Literal> {
+    match val {
+        ArgValue::F32(t) => {
+            if t.shape() != spec.shape.as_slice() {
+                bail!("shape {:?} vs declared {:?}", t.shape(), spec.shape);
+            }
+            if spec.dtype != ArgDtype::F32 {
+                bail!("expected {:?}, got f32", spec.dtype);
+            }
+            if spec.shape.is_empty() {
+                return Ok(xla::Literal::scalar(t.data()[0]));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+        }
+        ArgValue::Scalar(v) => {
+            if !spec.shape.is_empty() {
+                bail!("scalar arg for non-scalar spec {:?}", spec.shape);
+            }
+            Ok(xla::Literal::scalar(*v))
+        }
+        ArgValue::I8 { shape, data } => {
+            if shape != &spec.shape {
+                bail!("shape {:?} vs declared {:?}", shape, spec.shape);
+            }
+            if spec.dtype != ArgDtype::I8 {
+                bail!("expected {:?}, got i8", spec.dtype);
+            }
+            let n: usize = shape.iter().product();
+            if n != data.len() {
+                bail!("i8 data len {} vs shape {:?}", data.len(), shape);
+            }
+            let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
+            Ok(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S8,
+                shape,
+                &bytes,
+            )?)
+        }
+    }
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(dims, data)
+}
+
+/// The runtime: PJRT client + manifest + compiled-executable cache.
+///
+/// NOT `Sync` — the serving design gives each inference worker thread its own
+/// `Runtime` or channels requests into a single owner thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, Arc<Executable>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the given artifacts directory.
+    pub fn new(artifacts: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name);
+        if spec.is_null() {
+            bail!("artifact {name} not in manifest");
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+
+        let mut args = Vec::new();
+        for a in spec.get("args").as_arr().unwrap_or(&[]) {
+            args.push(ArgSpec {
+                name: a.get("name").as_str().unwrap_or("?").to_string(),
+                shape: a
+                    .get("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: ArgDtype::from_str(a.get("dtype").as_str().unwrap_or("f32"))?,
+            });
+        }
+        let n_outputs = spec.get("outputs").as_arr().map(|a| a.len()).unwrap_or(1);
+        let e = Arc::new(Executable { name: name.to_string(), args, n_outputs, exe });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.cache.keys().map(|s| s.as_str()).collect()
+    }
+}

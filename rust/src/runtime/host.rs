@@ -1,0 +1,138 @@
+//! Pure-rust fallback inference engine.
+//!
+//! Mirrors the L2 model graphs exactly (same im2col ordering, same layer
+//! stack), so it serves three roles:
+//!   1. independent oracle the PJRT path is validated against,
+//!   2. fallback when `artifacts/` is absent (e.g. unit-test environments),
+//!   3. the "device simulator" arm of the energy accounting (it can run with
+//!      the QSM multiplier model to produce bit-accurate energy ledgers).
+
+use anyhow::{bail, Result};
+
+use crate::model::meta::ModelKind;
+use crate::model::store::WeightStore;
+use crate::tensor::{ops, Tensor};
+
+/// Forward one batch through the model, host-side.
+pub fn forward(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
+    match store.kind {
+        ModelKind::Lenet => lenet_fwd(store, x),
+        ModelKind::Convnet => convnet_fwd(store, x),
+    }
+}
+
+/// LeNet-5: x [B,28,28,1] -> logits [B,10].
+pub fn lenet_fwd(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
+    let feat = lenet_features(store, x)?;
+    let h = ops::add_bias(&ops::matmul(&feat, store.get("f3w")?)?, store.get("f3b")?)?;
+    Ok(h)
+}
+
+/// LeNet backbone up to the 84-d features (input of the fp32 head).
+pub fn lenet_features(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
+    if x.shape().len() != 4 || x.shape()[1] != 28 {
+        bail!("lenet expects [B,28,28,1], got {:?}", x.shape());
+    }
+    let b = x.shape()[0];
+    let h = ops::add_bias(&ops::conv2d(x, store.get("c1w")?)?, store.get("c1b")?)?.relu();
+    let h = ops::maxpool2(&h)?;
+    let h = ops::add_bias(&ops::conv2d(&h, store.get("c2w")?)?, store.get("c2b")?)?.relu();
+    let h = ops::maxpool2(&h)?;
+    let h = h.reshape(vec![b, 256])?;
+    let h = ops::add_bias(&ops::matmul(&h, store.get("f1w")?)?, store.get("f1b")?)?.relu();
+    let h = ops::add_bias(&ops::matmul(&h, store.get("f2w")?)?, store.get("f2b")?)?.relu();
+    Ok(h)
+}
+
+/// ConvNet-4: x [B,32,32,3] -> logits [B,10].
+pub fn convnet_fwd(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
+    if x.shape().len() != 4 || x.shape()[1] != 32 {
+        bail!("convnet expects [B,32,32,3], got {:?}", x.shape());
+    }
+    let b = x.shape()[0];
+    let mut h = x.clone();
+    for (kw, bw) in [("k1", "b1"), ("k2", "b2"), ("k3", "b3"), ("k4", "b4")] {
+        h = ops::add_bias(&ops::conv2d_same(&h, store.get(kw)?)?, store.get(bw)?)?.relu();
+        h = ops::maxpool2(&h)?;
+    }
+    let h = h.reshape(vec![b, 256])?;
+    ops::add_bias(&ops::matmul(&h, store.get("fcw")?)?, store.get("fcb")?)
+}
+
+/// Batched accuracy over a dataset slice.
+pub fn accuracy(
+    store: &WeightStore,
+    x: &Tensor,
+    y: &[i32],
+    batch: usize,
+) -> Result<f64> {
+    let n = x.shape()[0];
+    if n != y.len() || n == 0 {
+        bail!("dataset size mismatch");
+    }
+    let s = x.shape();
+    let stride: usize = s[1..].iter().product();
+    let mut hits = 0usize;
+    let mut i = 0;
+    while i < n {
+        let b = batch.min(n - i);
+        let xb = Tensor::new(
+            vec![b, s[1], s[2], s[3]],
+            x.data()[i * stride..(i + b) * stride].to_vec(),
+        )?;
+        let logits = forward(store, &xb)?;
+        for (j, &pred) in ops::argmax_rows(&logits).iter().enumerate() {
+            if pred as i32 == y[i + j] {
+                hits += 1;
+            }
+        }
+        i += b;
+    }
+    Ok(hits as f64 / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    // Full-weights tests live in tests/ (need artifacts); here: shape guards.
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        // A store can't be constructed without artifacts, so just check the
+        // shape guard logic via the public error path using a fake store is
+        // impossible — covered by integration tests. Here we only pin the
+        // accuracy() precondition.
+        let x = Tensor::zeros(vec![2, 28, 28, 1]);
+        let y = vec![0i32; 3];
+        // mismatched n vs y.len() must error before touching weights
+        let meta_err = accuracy(
+            // SAFETY: never dereferenced — constructed store is required, so
+            // we validate only via the public API in integration tests.
+            // This test just documents the contract.
+            &fake_store(),
+            &x,
+            &y,
+            2,
+        );
+        assert!(meta_err.is_err());
+    }
+
+    fn fake_store() -> WeightStore {
+        // minimal store with correct metadata but zero tensors of right shape
+        let meta = crate::model::meta::ModelMeta::lenet();
+        let mut s = WeightStore::empty(crate::model::meta::ModelKind::Lenet);
+        for t in &meta.tensors {
+            s.set_unchecked(t.name, Tensor::zeros(t.shape.clone()));
+        }
+        s
+    }
+
+    #[test]
+    fn zero_weights_give_uniform_logits() {
+        let store = fake_store();
+        let x = Tensor::zeros(vec![1, 28, 28, 1]);
+        let logits = forward(&store, &x).unwrap();
+        assert_eq!(logits.shape(), &[1, 10]);
+        assert!(logits.data().iter().all(|&v| v == 0.0));
+    }
+}

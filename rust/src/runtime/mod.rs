@@ -1,0 +1,7 @@
+//! Runtime layer: the PJRT client that loads + executes `artifacts/*.hlo.txt`
+//! ([`client`]) and the pure-rust fallback/oracle engine ([`host`]).
+
+pub mod client;
+pub mod host;
+
+pub use client::{ArgValue, Executable, Runtime};

@@ -1,0 +1,9 @@
+//! Host-side f32 tensor substrate: shapes, NHWC conv (im2col, mirroring the
+//! python kernel ordering), pooling, dense layers.  Powers the pure-rust
+//! fallback inference engine ([`crate::runtime::host`]) and serves as the
+//! oracle the PJRT path is validated against.
+
+pub mod ops;
+pub mod tensor;
+
+pub use tensor::Tensor;

@@ -1,0 +1,291 @@
+//! Neural-net ops on [`Tensor`]: matmul, im2col conv (VALID/SAME), pooling,
+//! softmax.  The im2col patch ordering is (di, dj, c) — identical to
+//! `python/compile/kernels/ref.py::im2col` — so conv weights reshape the same
+//! way on both sides.
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// x [M,K] @ w [K,N] -> [M,N].  Plain ikj loop with row-accumulation; the
+/// hot serving path runs on PJRT, this is the oracle/fallback.
+pub fn matmul(x: &Tensor, w: &Tensor) -> Result<Tensor> {
+    let (xs, ws) = (x.shape(), w.shape());
+    if xs.len() != 2 || ws.len() != 2 || xs[1] != ws[0] {
+        bail!("matmul shapes {:?} x {:?}", xs, ws);
+    }
+    let (m, k, n) = (xs[0], xs[1], ws[1]);
+    let mut out = vec![0.0f32; m * n];
+    let xd = x.data();
+    let wd = w.data();
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let a = xd[i * k + kk];
+            if a == 0.0 {
+                continue;
+            }
+            let wrow = &wd[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += a * wrow[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Add a bias vector [N] to every row of [M,N] (or broadcast over last dim).
+pub fn add_bias(x: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let n = *x.shape().last().unwrap_or(&0);
+    if b.shape() != [n] {
+        bail!("bias shape {:?} vs last dim {}", b.shape(), n);
+    }
+    let mut out = x.data().to_vec();
+    for (i, v) in out.iter_mut().enumerate() {
+        *v += b.data()[i % n];
+    }
+    Tensor::new(x.shape().to_vec(), out)
+}
+
+/// im2col for VALID conv: x [B,H,W,C], window kh x kw ->
+/// ([B*H'*W', kh*kw*C], H', W') with (di, dj, c) ordering.
+pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> Result<(Tensor, usize, usize)> {
+    let s = x.shape();
+    if s.len() != 4 {
+        bail!("im2col expects NHWC, got {:?}", s);
+    }
+    let (b, h, w, c) = (s[0], s[1], s[2], s[3]);
+    if h < kh || w < kw {
+        bail!("im2col window {kh}x{kw} larger than input {h}x{w}");
+    }
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    let kcols = kh * kw * c;
+    let mut out = vec![0.0f32; b * oh * ow * kcols];
+    let xd = x.data();
+    for bi in 0..b {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let row = ((bi * oh + oi) * ow + oj) * kcols;
+                for di in 0..kh {
+                    // one contiguous (kw*c)-long strip per kernel row
+                    let src = ((bi * h + oi + di) * w + oj) * c;
+                    let dst = row + di * kw * c;
+                    out[dst..dst + kw * c].copy_from_slice(&xd[src..src + kw * c]);
+                }
+            }
+        }
+    }
+    Ok((Tensor::new(vec![b * oh * ow, kcols], out)?, oh, ow))
+}
+
+/// VALID conv, NHWC x [B,H,W,C] * w [kh,kw,C,OC] -> [B,H',W',OC].
+pub fn conv2d(x: &Tensor, w: &Tensor) -> Result<Tensor> {
+    let ws = w.shape();
+    if ws.len() != 4 {
+        bail!("conv2d weight must be [kh,kw,C,OC], got {:?}", ws);
+    }
+    let (kh, kw, c, oc) = (ws[0], ws[1], ws[2], ws[3]);
+    if x.shape()[3] != c {
+        bail!("conv2d channel mismatch: x {:?} vs w {:?}", x.shape(), ws);
+    }
+    let (patches, oh, ow) = im2col(x, kh, kw)?;
+    let wf = w.reshape(vec![kh * kw * c, oc])?;
+    let out = matmul(&patches, &wf)?;
+    out.reshape(vec![x.shape()[0], oh, ow, oc])
+}
+
+/// SAME conv (odd kernel): zero-pad then VALID.
+pub fn conv2d_same(x: &Tensor, w: &Tensor) -> Result<Tensor> {
+    let p = w.shape()[0] / 2;
+    conv2d(&pad_hw(x, p)?, w)
+}
+
+/// Zero-pad H and W by `p` on each side.
+pub fn pad_hw(x: &Tensor, p: usize) -> Result<Tensor> {
+    let s = x.shape();
+    if s.len() != 4 {
+        bail!("pad_hw expects NHWC");
+    }
+    let (b, h, w, c) = (s[0], s[1], s[2], s[3]);
+    let (nh, nw) = (h + 2 * p, w + 2 * p);
+    let mut out = vec![0.0f32; b * nh * nw * c];
+    let xd = x.data();
+    for bi in 0..b {
+        for hi in 0..h {
+            let src = ((bi * h + hi) * w) * c;
+            let dst = ((bi * nh + hi + p) * nw + p) * c;
+            out[dst..dst + w * c].copy_from_slice(&xd[src..src + w * c]);
+        }
+    }
+    Tensor::new(vec![b, nh, nw, c], out)
+}
+
+/// 2x2 max pool, stride 2 (H, W must be even).
+pub fn maxpool2(x: &Tensor) -> Result<Tensor> {
+    let s = x.shape();
+    if s.len() != 4 || s[1] % 2 != 0 || s[2] % 2 != 0 {
+        bail!("maxpool2 expects NHWC with even H,W, got {:?}", s);
+    }
+    let (b, h, w, c) = (s[0], s[1], s[2], s[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; b * oh * ow * c];
+    for bi in 0..b {
+        for hi in 0..h {
+            for wi in 0..w {
+                for ci in 0..c {
+                    let v = x.at4(bi, hi, wi, ci);
+                    let o = ((bi * oh + hi / 2) * ow + wi / 2) * c + ci;
+                    if v > out[o] {
+                        out[o] = v;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![b, oh, ow, c], out)
+}
+
+/// Row-wise argmax of a [M,N] tensor.
+pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
+    let (m, n) = (x.shape()[0], x.shape()[1]);
+    (0..m)
+        .map(|i| {
+            let row = &x.data()[i * n..(i + 1) * n];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// Row-wise softmax (numerically stabilized).
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    let (m, n) = (x.shape()[0], x.shape()[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = &x.data()[i * n..(i + 1) * n];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0;
+        for j in 0..n {
+            let e = (row[j] - mx).exp();
+            out[i * n + j] = e;
+            sum += e;
+        }
+        for j in 0..n {
+            out[i * n + j] /= sum;
+        }
+    }
+    Tensor::new(vec![m, n], out).unwrap()
+}
+
+/// Mean softmax cross-entropy given integer labels.
+pub fn xent(logits: &Tensor, labels: &[usize]) -> f32 {
+    let p = softmax_rows(logits);
+    let n = logits.shape()[1];
+    let mut tot = 0.0;
+    for (i, &y) in labels.iter().enumerate() {
+        tot -= p.data()[i * n + y].max(1e-12).ln();
+    }
+    tot / labels.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: &[f32]) -> Tensor {
+        Tensor::new(shape.to_vec(), data.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn matmul_small() {
+        let x = t(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let w = t(&[2, 2], &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(matmul(&x, &w).unwrap().data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rejects_mismatch() {
+        let x = t(&[2, 3], &[0.0; 6]);
+        let w = t(&[2, 2], &[0.0; 4]);
+        assert!(matmul(&x, &w).is_err());
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel with weight 1.0 reproduces input
+        let x = t(&[1, 3, 3, 1], &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let w = t(&[1, 1, 1, 1], &[1.0]);
+        let y = conv2d(&x, &w).unwrap();
+        assert_eq!(y.shape(), &[1, 3, 3, 1]);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn conv_sum_kernel() {
+        // 2x2 all-ones kernel = sliding-window sum
+        let x = t(&[1, 3, 3, 1], &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let w = t(&[2, 2, 1, 1], &[1.0; 4]);
+        let y = conv2d(&x, &w).unwrap();
+        assert_eq!(y.shape(), &[1, 2, 2, 1]);
+        assert_eq!(y.data(), &[12.0, 16.0, 24.0, 28.0]);
+    }
+
+    #[test]
+    fn conv_same_preserves_hw() {
+        let x = Tensor::zeros(vec![2, 8, 8, 3]);
+        let w = Tensor::zeros(vec![3, 3, 3, 5]);
+        let y = conv2d_same(&x, &w).unwrap();
+        assert_eq!(y.shape(), &[2, 8, 8, 5]);
+    }
+
+    #[test]
+    fn im2col_ordering_matches_python() {
+        // x [1,2,2,2] with distinct values; kernel 2x2 -> single patch whose
+        // ordering must be (di, dj, c): [x00c0,x00c1,x01c0,x01c1,x10c0,...]
+        let x = t(&[1, 2, 2, 2], &[0., 1., 2., 3., 4., 5., 6., 7.]);
+        let (p, oh, ow) = im2col(&x, 2, 2).unwrap();
+        assert_eq!((oh, ow), (1, 1));
+        assert_eq!(p.data(), &[0., 1., 2., 3., 4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn maxpool_small() {
+        let x = t(&[1, 2, 2, 1], &[1.0, 5.0, 3.0, 2.0]);
+        assert_eq!(maxpool2(&x).unwrap().data(), &[5.0]);
+    }
+
+    #[test]
+    fn maxpool_odd_rejected() {
+        assert!(maxpool2(&Tensor::zeros(vec![1, 3, 4, 1])).is_err());
+    }
+
+    #[test]
+    fn argmax_and_softmax() {
+        let x = t(&[2, 3], &[0.1, 0.9, 0.0, 3.0, 1.0, 2.0]);
+        assert_eq!(argmax_rows(&x), vec![1, 0]);
+        let p = softmax_rows(&x);
+        for i in 0..2 {
+            let s: f32 = p.data()[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn xent_decreases_with_confidence() {
+        let good = t(&[1, 3], &[10.0, 0.0, 0.0]);
+        let bad = t(&[1, 3], &[0.0, 10.0, 0.0]);
+        assert!(xent(&good, &[0]) < xent(&bad, &[0]));
+    }
+
+    #[test]
+    fn pad_hw_places_center() {
+        let x = t(&[1, 1, 1, 1], &[7.0]);
+        let p = pad_hw(&x, 1).unwrap();
+        assert_eq!(p.shape(), &[1, 3, 3, 1]);
+        assert_eq!(p.at4(0, 1, 1, 0), 7.0);
+        assert_eq!(p.data().iter().sum::<f32>(), 7.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! From-scratch substrates: the offline crate universe is exactly the `xla`
+//! dependency closure, so the conventional helpers (serde, rand, clap,
+//! proptest, log) are implemented here instead (DESIGN.md §9).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod npy;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

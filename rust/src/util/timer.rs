@@ -1,0 +1,64 @@
+//! Wall-clock timing helpers.
+
+use std::time::Instant;
+
+/// Measure a closure's wall time in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Simple stopwatch accumulating named spans (single-threaded use).
+#[derive(Default)]
+pub struct Stopwatch {
+    spans: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time_it(f);
+        self.spans.push((name.to_string(), dt));
+        out
+    }
+    pub fn report(&self) -> String {
+        let total: f64 = self.spans.iter().map(|(_, t)| t).sum();
+        let mut out = String::new();
+        for (name, t) in &self.spans {
+            out.push_str(&format!(
+                "{name:<30} {:>9.3} ms  ({:>5.1}%)\n",
+                t * 1e3,
+                if total > 0.0 { 100.0 * t / total } else { 0.0 }
+            ));
+        }
+        out.push_str(&format!("{:<30} {:>9.3} ms\n", "TOTAL", total * 1e3));
+        out
+    }
+    pub fn spans(&self) -> &[(String, f64)] {
+        &self.spans
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_positive() {
+        let (v, dt) = time_it(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499500);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.measure("a", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        sw.measure("b", || ());
+        assert_eq!(sw.spans().len(), 2);
+        assert!(sw.report().contains("TOTAL"));
+    }
+}

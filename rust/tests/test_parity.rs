@@ -1,0 +1,126 @@
+//! Cross-language parity: the rust quantizer must reproduce the python
+//! quantizer (`python/compile/qsq_lib.py`) on the vectors written to
+//! `artifacts/parity/` by `make artifacts`.
+//!
+//! Codes are compared with a small mismatch allowance (threshold-boundary
+//! elements can flip under f32-vs-f64 accumulation differences); decoded
+//! weights must agree to 1e-3 absolute.
+
+use std::path::PathBuf;
+
+use qsq_edge::quant::qsq::{quantize, AssignMode};
+use qsq_edge::util::{json, npy};
+
+fn artifacts() -> PathBuf {
+    std::env::var("QSQ_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn parity_dir() -> Option<PathBuf> {
+    let d = artifacts().join("parity");
+    d.join("index.json").exists().then_some(d)
+}
+
+#[test]
+fn quantizer_matches_python_on_parity_vectors() {
+    let Some(dir) = parity_dir() else {
+        eprintln!("skipping: no artifacts/parity (run `make artifacts`)");
+        return;
+    };
+    let w = npy::read(dir.join("w.npy")).unwrap();
+    let wdata = w.to_f32().unwrap();
+    let index: json::Value =
+        json::parse(&std::fs::read_to_string(dir.join("index.json")).unwrap()).unwrap();
+
+    let mut cases = 0;
+    for case in index.as_arr().unwrap() {
+        let tag = case.get("tag").as_str().unwrap();
+        let phi = case.get("phi").as_usize().unwrap() as u32;
+        let group = case.get("group").as_usize().unwrap();
+        let mode = match case.get("mode").as_str().unwrap() {
+            "sigma-search" => AssignMode::SigmaSearch,
+            "nearest" => AssignMode::Nearest,
+            "nearest-opt" => AssignMode::NearestOpt,
+            m => panic!("unknown mode {m}"),
+        };
+        let qt = quantize(&wdata, &w.shape, group, phi, mode).unwrap();
+
+        let py_codes = npy::read(dir.join(format!("codes_{tag}.npy"))).unwrap().to_i8().unwrap();
+        let py_scalars =
+            npy::read(dir.join(format!("scalars_{tag}.npy"))).unwrap().to_f32().unwrap();
+        let py_decoded =
+            npy::read(dir.join(format!("decoded_{tag}.npy"))).unwrap().to_f32().unwrap();
+
+        // scalars: tight tolerance
+        assert_eq!(qt.scalars.len(), py_scalars.len(), "{tag}: scalar count");
+        for (i, (&a, &b)) in qt.scalars.iter().zip(&py_scalars).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                "{tag}: scalar[{i}] {a} vs {b}"
+            );
+        }
+        // codes: allow <=1% boundary flips
+        let mismatches = qt
+            .codes
+            .iter()
+            .zip(&py_codes)
+            .filter(|(a, b)| a.0 as i8 != **b)
+            .count();
+        assert!(
+            mismatches <= qt.codes.len() / 100 + 1,
+            "{tag}: {mismatches}/{} code mismatches",
+            qt.codes.len()
+        );
+        // decoded weights: close everywhere
+        let dec = qt.decode();
+        for (i, (&a, &b)) in dec.iter().zip(&py_decoded).enumerate() {
+            assert!((a - b).abs() <= 2e-3, "{tag}: decoded[{i}] {a} vs {b}");
+        }
+        // sigma-search picks the same or equally good thresholds
+        if let Some(py_err) = case.get("error").as_f64() {
+            let err = qt.error(&wdata);
+            assert!(
+                (err - py_err).abs() <= 0.02 * (1.0 + py_err),
+                "{tag}: eq.-5 error {err} vs python {py_err}"
+            );
+        }
+        cases += 1;
+    }
+    assert!(cases >= 27, "expected >=27 parity cases, ran {cases}");
+}
+
+#[test]
+fn gamma_delta_search_agrees_with_python() {
+    let Some(dir) = parity_dir() else {
+        eprintln!("skipping: no artifacts/parity");
+        return;
+    };
+    let w = npy::read(dir.join("w.npy")).unwrap();
+    let wdata = w.to_f32().unwrap();
+    let index: json::Value =
+        json::parse(&std::fs::read_to_string(dir.join("index.json")).unwrap()).unwrap();
+    for case in index.as_arr().unwrap() {
+        if case.get("mode").as_str() != Some("sigma-search") {
+            continue;
+        }
+        let phi = case.get("phi").as_usize().unwrap() as u32;
+        let group = case.get("group").as_usize().unwrap();
+        let qt = quantize(&wdata, &w.shape, group, phi, AssignMode::SigmaSearch).unwrap();
+        let (pg, pd) = (
+            case.get("gamma").as_f64().unwrap(),
+            case.get("delta").as_f64().unwrap(),
+        );
+        // grids are identical; equal-error ties may pick different cells, so
+        // compare achieved error rather than raw (gamma, delta) when they
+        // disagree
+        if (qt.gamma - pg).abs() > 1e-9 || (qt.delta - pd).abs() > 1e-9 {
+            let err = qt.error(&wdata);
+            let py_err = case.get("error").as_f64().unwrap();
+            assert!(
+                err <= py_err * 1.02 + 1e-9,
+                "phi={phi} g={group}: rust ({},{}) err {err} worse than python ({pg},{pd}) err {py_err}",
+                qt.gamma,
+                qt.delta
+            );
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! End-to-end pipeline integration over real artifacts: deploy (quantize →
+//! channel → decode) then score on the PJRT runtime; on-device FC fine-tune;
+//! quality scalability invariants.
+
+use std::path::PathBuf;
+
+use qsq_edge::channel::LinkConfig;
+use qsq_edge::coordinator::{deploy, finetune};
+use qsq_edge::device::QualityConfig;
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::model::store::{Dataset, WeightStore};
+use qsq_edge::quant::qsq::AssignMode;
+use qsq_edge::repro;
+use qsq_edge::runtime::client::Runtime;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = std::env::var("QSQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    d.join("manifest.json").exists().then_some(d)
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+const EVAL_LIMIT: usize = 512;
+
+#[test]
+fn deploy_then_eval_accuracy_degrades_gracefully() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let store = WeightStore::load(&dir, ModelKind::Lenet).unwrap();
+    let test = Dataset::load(&dir, "mnist", "test").unwrap();
+
+    let base = repro::eval_store(&mut rt, &store, &test, EVAL_LIMIT).unwrap();
+    let q = QualityConfig { phi: 4, group: 8 };
+    let (edge, rep) =
+        deploy::deploy(&store, q, AssignMode::SigmaSearch, LinkConfig::default(), 1).unwrap();
+    let edge_acc = repro::eval_store(&mut rt, &edge, &test, EVAL_LIMIT).unwrap();
+
+    assert!(base > 0.95, "baseline too low: {base}");
+    assert!(edge_acc > base - 0.12, "quantization damaged too much: {base} -> {edge_acc}");
+    assert!(edge_acc < base + 1e-9, "quantization cannot improve accuracy here");
+    assert!(rep.memory_savings() > 0.7);
+}
+
+#[test]
+fn deployed_weights_equal_direct_quantization() {
+    // channel + container must be transparent: deploy == quantized_store
+    let dir = need_artifacts!();
+    let store = WeightStore::load(&dir, ModelKind::Lenet).unwrap();
+    let q = QualityConfig { phi: 4, group: 16 };
+    let (edge, _) =
+        deploy::deploy(&store, q, AssignMode::Nearest, LinkConfig::default(), 2).unwrap();
+    let names = repro::quantized_names(ModelKind::Lenet);
+    let direct = repro::quantized_store(&store, &names, 4, 16, AssignMode::Nearest).unwrap();
+    for n in names {
+        assert_eq!(
+            edge.get(n).unwrap().data(),
+            direct.get(n).unwrap().data(),
+            "{n} differs between deploy and direct quantization"
+        );
+    }
+}
+
+#[test]
+fn quality_scalability_monotone_phi() {
+    // Fig.-7 invariant at system level: accuracy(phi=1) <= accuracy(phi=4)
+    let dir = need_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let store = WeightStore::load(&dir, ModelKind::Lenet).unwrap();
+    let test = Dataset::load(&dir, "mnist", "test").unwrap();
+    let names = repro::quantized_names(ModelKind::Lenet);
+
+    let mut accs = Vec::new();
+    for phi in [1u32, 2, 4] {
+        let q = repro::quantized_store(&store, &names, phi, 16, AssignMode::Nearest).unwrap();
+        accs.push(repro::eval_store(&mut rt, &q, &test, EVAL_LIMIT).unwrap());
+    }
+    assert!(
+        accs[0] <= accs[2] + 0.02,
+        "phi=1 ({}) should not beat phi=4 ({}) by more than noise",
+        accs[0],
+        accs[2]
+    );
+}
+
+#[test]
+fn finetune_recovers_accuracy() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let store = WeightStore::load(&dir, ModelKind::Lenet).unwrap();
+    let train = Dataset::load(&dir, "mnist", "train").unwrap();
+    let test = Dataset::load(&dir, "mnist", "test").unwrap();
+    let names = repro::quantized_names(ModelKind::Lenet);
+    let q = repro::quantized_store(&store, &names, 4, 16, AssignMode::SigmaSearch).unwrap();
+
+    let (_, _, rep) = finetune::finetune_fc(&mut rt, &q, &train, &test, 2, 0.05, 0).unwrap();
+    assert!(
+        rep.acc_after > rep.acc_before,
+        "FC fine-tune did not improve: {} -> {}",
+        rep.acc_before,
+        rep.acc_after
+    );
+    assert!(rep.losses.len() == 2 && rep.losses[1] <= rep.losses[0] + 0.05);
+}
+
+#[test]
+fn noisy_channel_is_transparent_end_to_end() {
+    let dir = need_artifacts!();
+    let store = WeightStore::load(&dir, ModelKind::Lenet).unwrap();
+    let q = QualityConfig { phi: 2, group: 8 };
+    let clean = deploy::deploy(&store, q, AssignMode::Nearest, LinkConfig::default(), 5)
+        .unwrap()
+        .0;
+    let noisy_cfg = LinkConfig { ber: 1e-5, ..Default::default() };
+    let (noisy, rep) = deploy::deploy(&store, q, AssignMode::Nearest, noisy_cfg, 5).unwrap();
+    assert!(rep.transfer.retransmissions > 0, "expected retransmissions at ber=1e-5");
+    for n in repro::quantized_names(ModelKind::Lenet) {
+        assert_eq!(clean.get(n).unwrap().data(), noisy.get(n).unwrap().data());
+    }
+}
+
+#[test]
+fn manifest_metadata_matches_rust_meta() {
+    // guard against python/rust metadata drift
+    let dir = need_artifacts!();
+    let manifest = qsq_edge::model::store::Manifest::load(&dir).unwrap();
+    for kind in [ModelKind::Lenet, ModelKind::Convnet] {
+        let meta = qsq_edge::model::meta::ModelMeta::of(kind);
+        let m = manifest.root.get("models").get(kind.name());
+        let names: Vec<&str> = m
+            .get("params")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap())
+            .collect();
+        let want: Vec<&str> = meta.tensors.iter().map(|t| t.name).collect();
+        assert_eq!(names, want, "{} param order drifted", kind.name());
+        for t in &meta.tensors {
+            let shape: Vec<usize> = m
+                .get("shapes")
+                .get(t.name)
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect();
+            assert_eq!(shape, t.shape, "{}::{} shape drifted", kind.name(), t.name);
+        }
+        let q: Vec<&str> = m
+            .get("quantized")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap())
+            .collect();
+        let want_q: Vec<&str> = meta.quantized_tensors().map(|t| t.name).collect();
+        assert_eq!(q, want_q, "{} quantized set drifted", kind.name());
+    }
+}

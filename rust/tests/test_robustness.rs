@@ -1,0 +1,152 @@
+//! Failure-injection / fuzz-ish robustness: hostile bytes must produce
+//! errors, never panics, across every parsing surface (container, frames,
+//! npy, json, server requests).
+
+use qsq_edge::channel::frame::Frame;
+use qsq_edge::codec::{decode_model, encode_model, EncodedModel, EncodedTensor};
+use qsq_edge::quant::qsq::{quantize, AssignMode};
+use qsq_edge::util::prop::gen_weights;
+use qsq_edge::util::rng::Rng;
+use qsq_edge::util::{json, npy};
+
+fn sample_container(seed: u64) -> Vec<u8> {
+    let mut r = Rng::new(seed);
+    let w = gen_weights(&mut r, 48 * 8, 0.1);
+    let model = EncodedModel {
+        tensors: vec![EncodedTensor {
+            name: "t".into(),
+            tensor: quantize(&w, &[48, 8], 8, 4, AssignMode::Nearest).unwrap(),
+        }],
+    };
+    encode_model(&model).unwrap()
+}
+
+#[test]
+fn container_survives_random_mutations() {
+    let bytes = sample_container(1);
+    let mut r = Rng::new(99);
+    let mut detected = 0;
+    for _ in 0..300 {
+        let mut bad = bytes.clone();
+        // 1-4 random byte mutations
+        for _ in 0..=r.below(3) {
+            let i = r.below(bad.len() as u64) as usize;
+            bad[i] ^= (1 + r.below(255)) as u8;
+        }
+        // must never panic; corruption must be detected (total CRC covers all)
+        if decode_model(&bad).is_err() {
+            detected += 1;
+        }
+    }
+    assert!(detected >= 299, "only {detected}/300 mutations detected");
+}
+
+#[test]
+fn container_survives_random_truncation() {
+    let bytes = sample_container(2);
+    let mut r = Rng::new(7);
+    for _ in 0..100 {
+        let n = r.below(bytes.len() as u64) as usize;
+        let _ = decode_model(&bytes[..n]); // must not panic
+    }
+}
+
+#[test]
+fn container_survives_pure_garbage() {
+    let mut r = Rng::new(3);
+    for len in [0usize, 1, 7, 64, 1024] {
+        let garbage: Vec<u8> = (0..len).map(|_| r.below(256) as u8).collect();
+        assert!(decode_model(&garbage).is_err());
+    }
+}
+
+#[test]
+fn frame_parser_never_panics() {
+    let mut r = Rng::new(5);
+    for _ in 0..500 {
+        let len = r.below(64) as usize;
+        let garbage: Vec<u8> = (0..len).map(|_| r.below(256) as u8).collect();
+        let _ = Frame::from_bytes(&garbage);
+    }
+}
+
+#[test]
+fn npy_parser_never_panics() {
+    let mut r = Rng::new(6);
+    // random garbage
+    for _ in 0..200 {
+        let len = r.below(256) as usize;
+        let garbage: Vec<u8> = (0..len).map(|_| r.below(256) as u8).collect();
+        let _ = npy::parse(&garbage);
+    }
+    // valid magic + garbage header
+    for _ in 0..200 {
+        let mut data = b"\x93NUMPY\x01\x00".to_vec();
+        let len = r.below(128) as usize;
+        data.extend((0..len).map(|_| r.below(256) as u8));
+        let _ = npy::parse(&data);
+    }
+}
+
+#[test]
+fn json_parser_never_panics() {
+    let mut r = Rng::new(8);
+    let charset: Vec<char> = "{}[]\",:0123456789.eE+-truefalsnl \\u00".chars().collect();
+    for _ in 0..2000 {
+        let len = r.below(48) as usize;
+        let s: String = (0..len)
+            .map(|_| charset[r.below(charset.len() as u64) as usize])
+            .collect();
+        let _ = json::parse(&s);
+    }
+}
+
+#[test]
+fn json_roundtrip_fuzz() {
+    // random valid values must roundtrip exactly
+    let mut r = Rng::new(9);
+    fn gen(r: &mut Rng, depth: u32) -> json::Value {
+        match if depth > 2 { r.below(4) } else { r.below(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(r.chance(0.5)),
+            2 => json::num((r.normal() * 100.0).round()),
+            3 => json::s(&format!("s{}", r.below(1000))),
+            4 => json::Value::Arr((0..r.below(4)).map(|_| gen(r, depth + 1)).collect()),
+            _ => json::obj(
+                (0..r.below(4))
+                    .map(|i| (format!("k{i}"), gen(r, depth + 1)))
+                    .collect::<Vec<_>>()
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect(),
+            ),
+        }
+    }
+    for _ in 0..300 {
+        let v = gen(&mut r, 0);
+        let text = v.to_json();
+        assert_eq!(json::parse(&text).unwrap(), v, "roundtrip failed for {text}");
+    }
+}
+
+#[test]
+fn quantizer_handles_pathological_inputs() {
+    for w in [
+        vec![0.0f32; 32],
+        vec![f32::MIN_POSITIVE; 32],
+        vec![1e30f32; 32],
+        vec![-1e-30f32; 32],
+        {
+            let mut v = vec![0.0f32; 32];
+            v[0] = 1.0;
+            v
+        },
+    ] {
+        for mode in [AssignMode::Nearest, AssignMode::SigmaSearch, AssignMode::NearestOpt] {
+            let qt = quantize(&w, &[32, 1], 8, 4, mode).unwrap();
+            for d in qt.decode() {
+                assert!(d.is_finite(), "non-finite decode for mode {mode:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Runtime integration: PJRT artifacts vs the pure-rust host oracle, the
+//! fused QSQ artifact vs decode-then-forward, and the fc_step semantics.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they skip politely
+//! when it is absent so `cargo test` works in a fresh checkout.
+
+use std::path::PathBuf;
+
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::model::store::{Dataset, WeightStore};
+use qsq_edge::quant::qsq::{quantize, AssignMode};
+use qsq_edge::quant::vectorize::Grouping;
+use qsq_edge::runtime::client::{ArgValue, Runtime};
+use qsq_edge::runtime::host;
+use qsq_edge::tensor::{ops, Tensor};
+
+fn artifacts() -> Option<PathBuf> {
+    let d = std::env::var("QSQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    d.join("manifest.json").exists().then_some(d)
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn pjrt_matches_host_oracle_lenet() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let store = WeightStore::load(&dir, ModelKind::Lenet).unwrap();
+    let test = Dataset::load(&dir, "mnist", "test").unwrap();
+
+    let exe = rt.load("lenet_fwd_b32").unwrap();
+    let x = test.batch(0, 32);
+    let mut args = vec![ArgValue::F32(x.clone())];
+    args.extend(store.ordered().into_iter().map(|t| ArgValue::F32(t.clone())));
+    let pjrt_logits = &exe.run(&args).unwrap()[0];
+
+    let host_logits = host::lenet_fwd(&store, &x).unwrap();
+    assert_eq!(pjrt_logits.shape(), host_logits.shape());
+    let diff = pjrt_logits.max_abs_diff(&host_logits);
+    assert!(diff < 1e-2, "PJRT vs host oracle diverge: {diff}");
+    // predictions identical
+    assert_eq!(ops::argmax_rows(pjrt_logits), ops::argmax_rows(&host_logits));
+}
+
+#[test]
+fn pjrt_matches_host_oracle_convnet() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let store = WeightStore::load(&dir, ModelKind::Convnet).unwrap();
+    let test = Dataset::load(&dir, "cifar", "test").unwrap();
+
+    let exe = rt.load("convnet_fwd_b32").unwrap();
+    let x = test.batch(0, 32);
+    let mut args = vec![ArgValue::F32(x.clone())];
+    args.extend(store.ordered().into_iter().map(|t| ArgValue::F32(t.clone())));
+    let pjrt_logits = &exe.run(&args).unwrap()[0];
+    let host_logits = host::convnet_fwd(&store, &x).unwrap();
+    let diff = pjrt_logits.max_abs_diff(&host_logits);
+    assert!(diff < 5e-2, "PJRT vs host oracle diverge: {diff}");
+    assert_eq!(ops::argmax_rows(pjrt_logits), ops::argmax_rows(&host_logits));
+}
+
+/// The fused Pallas decode+matmul artifact must equal quantize→decode→fwd.
+#[test]
+fn fused_qsq_artifact_matches_decode_then_forward() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let store = WeightStore::load(&dir, ModelKind::Lenet).unwrap();
+    let test = Dataset::load(&dir, "mnist", "test").unwrap();
+    let x = test.batch(64, 32);
+
+    // the groups baked into the artifact (manifest.models.lenet.qsq_groups)
+    let groups: &[(&str, usize)] = &[("c1w", 5), ("c2w", 6), ("f1w", 16), ("f2w", 8)];
+
+    // build fused-artifact args: x, (codes, scalars)*4, fp32 leftovers
+    let mut args = vec![ArgValue::F32(x.clone())];
+    let mut decoded = store.clone();
+    for &(name, g) in groups {
+        let tm = store.meta.tensor(name).unwrap().clone();
+        let qt = quantize(store.get(name).unwrap().data(), &tm.shape, g, 4, AssignMode::SigmaSearch)
+            .unwrap();
+        args.push(ArgValue::codes(vec![qt.k, qt.oc], &qt.codes));
+        args.push(ArgValue::F32(
+            Tensor::new(vec![qt.k / qt.group, qt.oc], qt.scalars.clone()).unwrap(),
+        ));
+        decoded
+            .set(name, Tensor::new(tm.shape.clone(), qt.decode()).unwrap())
+            .unwrap();
+    }
+    for name in ["c1b", "c2b", "f1b", "f2b", "f3w", "f3b"] {
+        args.push(ArgValue::F32(store.get(name).unwrap().clone()));
+    }
+
+    for artifact in ["lenet_fwd_qsq_b32", "lenet_fwd_qsq_ref_b32"] {
+        let exe = rt.load(artifact).unwrap();
+        let fused = &exe.run(&args).unwrap()[0];
+        let want = host::lenet_fwd(&decoded, &x).unwrap();
+        let diff = fused.max_abs_diff(&want);
+        assert!(diff < 1e-2, "{artifact} vs decode-then-fwd: {diff}");
+        assert_eq!(ops::argmax_rows(fused), ops::argmax_rows(&want), "{artifact}");
+    }
+}
+
+/// fc_step artifact: loss decreases and the update matches the analytic
+/// softmax-CE gradient.
+#[test]
+fn fc_step_artifact_descends() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("fc_step_b128").unwrap();
+
+    let mut r = qsq_edge::util::rng::Rng::new(0);
+    let feat: Vec<f32> = (0..128 * 84).map(|_| (r.normal() * 0.5) as f32).collect();
+    let mut y1h = vec![0.0f32; 128 * 10];
+    for i in 0..128 {
+        y1h[i * 10 + (r.below(10) as usize)] = 1.0;
+    }
+    let mut w = Tensor::zeros(vec![84, 10]);
+    let mut b = Tensor::zeros(vec![10]);
+    let mut last = f32::INFINITY;
+    for _ in 0..10 {
+        let out = exe
+            .run(&[
+                ArgValue::F32(Tensor::new(vec![128, 84], feat.clone()).unwrap()),
+                ArgValue::F32(Tensor::new(vec![128, 10], y1h.clone()).unwrap()),
+                ArgValue::F32(w.clone()),
+                ArgValue::F32(b.clone()),
+                ArgValue::Scalar(0.5),
+            ])
+            .unwrap();
+        let loss = out[0].data()[0];
+        assert!(loss <= last + 1e-4, "loss increased: {loss} > {last}");
+        last = loss;
+        w = out[1].clone();
+        b = out[2].clone();
+    }
+    // started at ln(10), must have descended meaningfully
+    assert!(last < 2.0, "loss barely moved: {last}");
+}
+
+/// Arg validation: wrong shapes and wrong dtypes are rejected host-side.
+#[test]
+fn executable_rejects_bad_args() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("lenet_fwd_b1").unwrap();
+    // wrong arg count
+    assert!(exe.run(&[]).is_err());
+    // wrong shape
+    let mut args: Vec<ArgValue> = vec![ArgValue::F32(Tensor::zeros(vec![1, 28, 28, 3]))];
+    let store = WeightStore::load(&dir, ModelKind::Lenet).unwrap();
+    args.extend(store.ordered().into_iter().map(|t| ArgValue::F32(t.clone())));
+    assert!(exe.run(&args).is_err());
+}
+
+#[test]
+fn unknown_artifact_rejected() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    assert!(rt.load("no_such_artifact").is_err());
+}

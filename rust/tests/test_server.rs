@@ -1,0 +1,150 @@
+//! Serving-path integration: TCP server with dynamic batching over the PJRT
+//! runtime, exercised by concurrent clients.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use qsq_edge::coordinator::server::{Client, Server, ServerConfig};
+use qsq_edge::data::RequestGen;
+use qsq_edge::model::meta::ModelKind;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = std::env::var("QSQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    d.join("manifest.json").exists().then_some(d)
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn serves_single_request() {
+    let dir = need_artifacts!();
+    let srv = Server::start(dir, ServerConfig::default()).unwrap();
+    let mut c = Client::connect(&format!("127.0.0.1:{}", srv.port)).unwrap();
+    let mut gen = RequestGen::new(ModelKind::Lenet, 1);
+    let (img, _) = gen.next();
+    let reply = c.infer(42, img.data()).unwrap();
+    assert_eq!(reply.get("id").as_f64(), Some(42.0));
+    let pred = reply.get("pred").as_f64().unwrap();
+    assert!((0.0..10.0).contains(&pred));
+    assert!(reply.get("latency_us").as_f64().unwrap() > 0.0);
+    srv.stop();
+}
+
+#[test]
+fn batches_concurrent_clients() {
+    let dir = need_artifacts!();
+    let cfg = ServerConfig {
+        max_delay: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let srv = Server::start(dir, cfg).unwrap();
+    let port = srv.port;
+
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+                let mut gen = RequestGen::new(ModelKind::Lenet, t);
+                let mut batched = 0u64;
+                for i in 0..10 {
+                    let (img, _) = gen.next();
+                    let reply = c.infer(t * 100 + i, img.data()).unwrap();
+                    assert!(reply.get("error").is_null(), "{}", reply.to_json());
+                    if reply.get("batch").as_f64().unwrap_or(1.0) > 1.0 {
+                        batched += 1;
+                    }
+                }
+                batched
+            })
+        })
+        .collect();
+    let batched: u64 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    assert!(
+        batched > 0,
+        "dynamic batching never formed a multi-request batch across 8 clients"
+    );
+    assert_eq!(srv.metrics.counter("requests"), 80);
+    assert!(srv.metrics.counter("batches") < 80, "no batching happened at all");
+    srv.stop();
+}
+
+#[test]
+fn rejects_malformed_requests_without_dying() {
+    let dir = need_artifacts!();
+    let srv = Server::start(dir, ServerConfig::default()).unwrap();
+    let port = srv.port;
+
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(format!("127.0.0.1:{port}")).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+
+    // garbage json
+    w.write_all(b"this is not json\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+
+    // wrong pixel count
+    line.clear();
+    w.write_all(b"{\"id\":1,\"pixels\":[1.0,2.0]}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+
+    // server still healthy for a valid request
+    let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+    let mut gen = RequestGen::new(ModelKind::Lenet, 3);
+    let (img, _) = gen.next();
+    let reply = c.infer(5, img.data()).unwrap();
+    assert!(reply.get("error").is_null());
+    assert_eq!(srv.metrics.counter("bad_requests"), 2);
+    srv.stop();
+}
+
+#[test]
+fn predictions_match_offline_eval() {
+    // the served prediction for a test image equals the offline artifact run
+    let dir = need_artifacts!();
+    use qsq_edge::model::store::Dataset;
+    use qsq_edge::repro;
+    use qsq_edge::runtime::client::Runtime;
+    let test = Dataset::load(&dir, "mnist", "test").unwrap();
+
+    let srv = Server::start(dir.clone(), ServerConfig::default()).unwrap();
+    let mut c = Client::connect(&format!("127.0.0.1:{}", srv.port)).unwrap();
+    let mut served = Vec::new();
+    for i in 0..16 {
+        let img = test.image(i);
+        let reply = c.infer(i as u64, img.data()).unwrap();
+        served.push(reply.get("pred").as_f64().unwrap() as usize);
+    }
+    srv.stop();
+
+    // offline: same images through eval path
+    let mut rt = Runtime::new(&dir).unwrap();
+    let store = qsq_edge::model::store::WeightStore::load(&dir, ModelKind::Lenet).unwrap();
+    let exe = rt.load("lenet_fwd_b128").unwrap();
+    let mut args = vec![qsq_edge::runtime::client::ArgValue::F32(test.batch(0, 128))];
+    args.extend(
+        store
+            .ordered()
+            .into_iter()
+            .map(|t| qsq_edge::runtime::client::ArgValue::F32(t.clone())),
+    );
+    let logits = &exe.run(&args).unwrap()[0];
+    let offline = qsq_edge::tensor::ops::argmax_rows(logits);
+    assert_eq!(&served[..], &offline[..16]);
+    let _ = repro::quantized_names(ModelKind::Lenet); // keep import used
+}
