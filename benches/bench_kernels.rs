@@ -1,0 +1,126 @@
+//! Kernel benchmarks — the three hot paths this layer owns, each against its
+//! naive oracle, at real LeNet/ConvNet layer shapes:
+//!
+//! * code-domain `qgemm` (packed codes, zero-skip, shift/add) vs
+//!   decode-to-f32 + naive matmul — the old serving path;
+//! * blocked/parallel f32 matmul vs the naive ikj loop;
+//! * O(sort) sigma-search quantization vs the naive 19x8 grid (152 full
+//!   assignment passes).
+//!
+//! Emits `BENCH_kernels.json` (name/median/p95/throughput per entry) so the
+//! perf trajectory is tracked across PRs.
+
+use qsq_edge::bench::{run_bench, write_json, BenchResult};
+use qsq_edge::kernels::{self, PackedQTensor};
+use qsq_edge::quant::qsq::{matrix_dims, quantize, quantize_sigma_search_naive, AssignMode};
+use qsq_edge::tensor::{ops, Tensor};
+use qsq_edge::util::prop::gen_weights;
+use qsq_edge::util::rng::Rng;
+
+fn main() {
+    println!("== bench_kernels ==");
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut r = Rng::new(0);
+
+    // --- qgemm vs decode + naive matmul at real layer shapes ----------------
+    let qgemm_layers: &[(&str, usize, &[usize], usize)] = &[
+        ("lenet-c2w[150,16]", 64, &[5, 5, 6, 16], 6),
+        ("lenet-f1w[256,120]", 32, &[256, 120], 16),
+        ("convnet-k3[288,64]", 64, &[3, 3, 32, 64], 16),
+    ];
+    for &(name, m, shape, group) in qgemm_layers {
+        let (k, oc) = matrix_dims(shape).unwrap();
+        let w = gen_weights(&mut r, k * oc, 0.2);
+        let qt = quantize(&w, shape, group, 4, AssignMode::SigmaSearch).unwrap();
+        let packed = PackedQTensor::pack(&qt).unwrap();
+        let x = Tensor::new(vec![m, k], gen_weights(&mut r, m * k, 1.0)).unwrap();
+        let items = (m * k * oc) as f64;
+
+        let base = run_bench(&format!("decode+naive-matmul {name} m={m}"), 3, 20, items, || {
+            let dec = Tensor::new(vec![k, oc], qt.decode()).unwrap();
+            ops::matmul_naive(&x, &dec).unwrap()
+        });
+        println!("{}", base.report());
+        // the steady-state old serving path: weights decoded once at deploy
+        // time, every inference pays only the f32 matmul
+        let dec = Tensor::new(vec![k, oc], qt.decode()).unwrap();
+        let predec = run_bench(&format!("predecoded-matmul   {name} m={m}"), 3, 20, items, || {
+            ops::matmul_naive(&x, &dec).unwrap()
+        });
+        println!("{}", predec.report());
+        let fast = run_bench(&format!("qgemm-packed        {name} m={m}"), 3, 20, items, || {
+            kernels::qgemm(&x, &packed).unwrap()
+        });
+        println!("{}", fast.report());
+        println!(
+            "  -> qgemm speedup {:.2}x vs decode+matmul, {:.2}x vs predecoded matmul \
+             (zero-skip {:.1}% of codes)",
+            base.median_s / fast.median_s.max(1e-12),
+            predec.median_s / fast.median_s.max(1e-12),
+            100.0 * packed.skipped_fraction()
+        );
+        results.push(base);
+        results.push(predec);
+        results.push(fast);
+    }
+
+    // --- blocked/parallel f32 matmul vs the naive ikj loop ------------------
+    let mm_shapes: &[(&str, usize, usize, usize)] = &[
+        ("conv-im2col[784,150]x[150,16]", 784, 150, 16),
+        ("fc[128,256]x[256,120]", 128, 256, 120),
+        ("square[256,256]^2", 256, 256, 256),
+    ];
+    for &(name, m, k, n) in mm_shapes {
+        let x = Tensor::new(vec![m, k], gen_weights(&mut r, m * k, 1.0)).unwrap();
+        let w = Tensor::new(vec![k, n], gen_weights(&mut r, k * n, 1.0)).unwrap();
+        let items = (m * k * n) as f64;
+        let naive = run_bench(&format!("matmul-naive   {name}"), 2, 12, items, || {
+            ops::matmul_naive(&x, &w).unwrap()
+        });
+        println!("{}", naive.report());
+        let blocked = run_bench(&format!("matmul-blocked {name}"), 2, 12, items, || {
+            ops::matmul(&x, &w).unwrap()
+        });
+        println!("{}", blocked.report());
+        println!(
+            "  -> blocked speedup {:.2}x",
+            naive.median_s / blocked.median_s.max(1e-12)
+        );
+        results.push(naive);
+        results.push(blocked);
+    }
+
+    // --- O(sort) sigma-search vs the naive 19x8 grid ------------------------
+    let qshapes: &[(&str, &[usize], usize)] = &[
+        ("convnet-k3[3,3,32,64]", &[3, 3, 32, 64], 16),
+        ("lenet-f1w[256,120]", &[256, 120], 16),
+    ];
+    for &(name, shape, group) in qshapes {
+        let (k, oc) = matrix_dims(shape).unwrap();
+        let w = gen_weights(&mut r, k * oc, 0.1);
+        // sanity: the two searches must agree exactly before we time them
+        let a = quantize(&w, shape, group, 4, AssignMode::SigmaSearch).unwrap();
+        let b = quantize_sigma_search_naive(&w, shape, group, 4).unwrap();
+        assert_eq!((a.gamma, a.delta), (b.gamma, b.delta), "{name}: search argmin diverged");
+        assert_eq!(a.codes, b.codes, "{name}: codes diverged");
+
+        let items = (k * oc) as f64;
+        let naive = run_bench(&format!("sigma-search-naive-grid {name}"), 1, 5, items, || {
+            quantize_sigma_search_naive(&w, shape, group, 4).unwrap()
+        });
+        println!("{}", naive.report());
+        let fast = run_bench(&format!("sigma-search-osort      {name}"), 1, 20, items, || {
+            quantize(&w, shape, group, 4, AssignMode::SigmaSearch).unwrap()
+        });
+        println!("{}", fast.report());
+        println!(
+            "  -> sigma-search speedup {:.2}x",
+            naive.median_s / fast.median_s.max(1e-12)
+        );
+        results.push(naive);
+        results.push(fast);
+    }
+
+    write_json("BENCH_kernels.json", "bench_kernels", &results).unwrap();
+    println!("\nwrote BENCH_kernels.json ({} entries)", results.len());
+}

@@ -1,8 +1,12 @@
-//! Timing harness: warmup + timed iterations, robust statistics, and a
-//! stable one-line report format that `cargo bench` targets print.
+//! Timing harness: warmup + timed iterations, robust statistics, a stable
+//! one-line report format that `cargo bench` targets print, and a
+//! machine-readable JSON emitter (`BENCH_<name>.json`) so the perf
+//! trajectory is trackable across PRs.
 
+use std::path::Path;
 use std::time::Instant;
 
+use crate::util::json::{self, Value};
 use crate::util::stats;
 
 #[derive(Clone, Debug)]
@@ -50,6 +54,33 @@ impl BenchResult {
         }
         line
     }
+
+    /// Machine-readable form (one entry of a `BENCH_*.json` file).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("iters", json::num(self.iters as f64)),
+            ("median_s", json::num(self.median_s)),
+            ("mean_s", json::num(self.mean_s)),
+            ("p95_s", json::num(self.p95_s)),
+            ("min_s", json::num(self.min_s)),
+            ("items_per_iter", json::num(self.items_per_iter)),
+            ("throughput_items_per_s", json::num(self.throughput())),
+        ])
+    }
+}
+
+/// Write a bench suite's results as `{"bench": <suite>, "results": [...]}`.
+pub fn write_json(
+    path: impl AsRef<Path>,
+    suite: &str,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    let v = json::obj(vec![
+        ("bench", json::s(suite)),
+        ("results", Value::Arr(results.iter().map(|r| r.to_json()).collect())),
+    ]);
+    std::fs::write(path, v.to_json() + "\n")
 }
 
 /// Time `f` with `warmup` + `iters` runs; `items_per_iter` feeds throughput.
@@ -91,6 +122,23 @@ mod tests {
         assert!(r.mean_s >= 0.0 && r.median_s >= r.min_s);
         assert!(r.throughput() > 0.0);
         assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn json_emission_parses_back() {
+        let r = run_bench("spin2", 0, 3, 10.0, || (0..1000).sum::<u64>());
+        let path = std::env::temp_dir().join("qsq_bench_harness_test.json");
+        write_json(&path, "unit-suite", &[r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(text.trim()).unwrap();
+        assert_eq!(v.get("bench").as_str(), Some("unit-suite"));
+        let results = v.get("results").as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").as_str(), Some("spin2"));
+        assert!(results[0].get("median_s").as_f64().is_some());
+        assert!(results[0].get("p95_s").as_f64().is_some());
+        assert!(results[0].get("throughput_items_per_s").as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

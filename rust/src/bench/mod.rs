@@ -2,4 +2,4 @@
 
 pub mod harness;
 
-pub use harness::{run_bench, BenchResult};
+pub use harness::{run_bench, write_json, BenchResult};

@@ -15,12 +15,12 @@
 use anyhow::Result;
 
 use crate::channel::{Link, LinkConfig, TransferReport};
-use crate::codec::{decode_model, encode_model, EncodedModel, EncodedTensor};
+use crate::codec::{decode_model, encode_model, EncodedModel};
 use crate::device::QualityConfig;
 use crate::hw::decoder_rtl;
 use crate::model::store::WeightStore;
-use crate::quant::qsq::{quantize, AssignMode};
-use crate::quant::vectorize::Grouping;
+use crate::quant::qsq::AssignMode;
+use crate::runtime::host::QuantizedEngine;
 use crate::tensor::Tensor;
 
 /// Everything the deployment produced, for reporting.
@@ -50,19 +50,15 @@ impl DeployReport {
 }
 
 /// Quantize the store's quantized tensors at (phi, N) and build a container.
+/// (Delegates to [`crate::runtime::host::quantize_tensors`] — the same
+/// policy the serving engine quantizes with, so shipped codes and
+/// host-quantized serving can never drift.)
 pub fn encode_store(
     store: &WeightStore,
     quality: QualityConfig,
     mode: AssignMode,
 ) -> Result<EncodedModel> {
-    let mut tensors = Vec::new();
-    for tm in store.meta.quantized_tensors() {
-        let w = store.get(tm.name)?;
-        let group = Grouping::nearest_divisor(&tm.shape, quality.group)?;
-        let qt = quantize(w.data(), &tm.shape, group, quality.phi, mode)?;
-        tensors.push(EncodedTensor { name: tm.name.to_string(), tensor: qt });
-    }
-    Ok(EncodedModel { tensors })
+    Ok(EncodedModel { tensors: crate::runtime::host::quantize_tensors(store, quality, mode)? })
 }
 
 /// Run the whole pipeline; returns the edge-side store (decoded approximate
@@ -74,6 +70,34 @@ pub fn deploy(
     link_cfg: LinkConfig,
     seed: u64,
 ) -> Result<(WeightStore, DeployReport)> {
+    let (edge, report, _) = deploy_full(store, quality, mode, link_cfg, seed)?;
+    Ok((edge, report))
+}
+
+/// [`deploy`] plus a code-domain serving engine built from exactly the codes
+/// that crossed the channel: quantized layers run on
+/// [`crate::kernels::qgemm`] without ever materializing f32 weights.
+pub fn deploy_engine(
+    store: &WeightStore,
+    quality: QualityConfig,
+    mode: AssignMode,
+    link_cfg: LinkConfig,
+    seed: u64,
+) -> Result<(QuantizedEngine, DeployReport)> {
+    let (edge, report, decoded) = deploy_full(store, quality, mode, link_cfg, seed)?;
+    let engine = QuantizedEngine::from_encoded(&edge, &decoded)?;
+    Ok((engine, report))
+}
+
+/// Pipeline internals shared by [`deploy`] and [`deploy_engine`]: also
+/// returns the post-channel [`EncodedModel`] (the shipped codes).
+pub fn deploy_full(
+    store: &WeightStore,
+    quality: QualityConfig,
+    mode: AssignMode,
+    link_cfg: LinkConfig,
+    seed: u64,
+) -> Result<(WeightStore, DeployReport, EncodedModel)> {
     let encoded = encode_store(store, quality, mode)?;
     let container = encode_model(&encoded)?;
 
@@ -127,7 +151,7 @@ pub fn deploy(
         zeros_fraction: zeros as f64 / total_codes.max(1) as f64,
         mean_rel_error: if nz > 0 { rel_err_sum / nz as f64 } else { 0.0 },
     };
-    Ok((edge, report))
+    Ok((edge, report, decoded))
 }
 
 #[cfg(test)]
@@ -205,6 +229,27 @@ mod tests {
         .1;
         assert!(r1.container_bytes < r4.container_bytes);
         assert!(r1.mean_rel_error >= r4.mean_rel_error - 1e-9);
+    }
+
+    #[test]
+    fn deploy_engine_matches_edge_store_forward() {
+        let store = fake_store(6);
+        let q = QualityConfig { phi: 4, group: 16 };
+        let (edge, _) =
+            deploy(&store, q, AssignMode::SigmaSearch, LinkConfig::default(), 11).unwrap();
+        let (engine, rep) =
+            deploy_engine(&store, q, AssignMode::SigmaSearch, LinkConfig::default(), 11).unwrap();
+        assert!(rep.zeros_fraction > 0.0);
+        // the engine skips exactly the zero codes the report counted
+        assert!((engine.skipped_fraction() - rep.zeros_fraction).abs() < 1e-12);
+
+        let mut r = Rng::new(42);
+        let xdata: Vec<f32> = (0..2 * 28 * 28).map(|_| r.f64() as f32).collect();
+        let x = Tensor::new(vec![2, 28, 28, 1], xdata).unwrap();
+        let got = engine.forward(&x).unwrap();
+        let want = crate::runtime::host::forward(&edge, &x).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-2, "engine vs decoded edge store: {diff}");
     }
 
     #[test]

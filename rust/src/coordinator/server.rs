@@ -1,5 +1,5 @@
-//! TCP inference server: JSON-lines protocol, dynamic batching, one PJRT
-//! owner thread.
+//! TCP inference server: JSON-lines protocol, dynamic batching, one
+//! inference owner thread over a pluggable engine.
 //!
 //! Protocol (one JSON object per line):
 //! ```text
@@ -8,11 +8,16 @@
 //! ```
 //! Each connection is synchronous (request → response); concurrency comes
 //! from multiple connections feeding the shared [`BatchQueue`], which the
-//! PJRT worker drains in padded batches of the compiled artifact size.
+//! worker drains in dynamic batches.  The worker executes on one of three
+//! engines ([`EngineSelect`]): the PJRT artifact (padded to the compiled
+//! batch size), the pure-rust blocked-GEMM f32 engine, or the code-domain
+//! [`QuantizedEngine`] (packed codes on qgemm).  `Auto` picks PJRT when the
+//! runtime and artifacts are present and falls back to the host engine
+//! otherwise, so the server also works in PJRT-less builds.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::{self, JoinHandle};
@@ -20,23 +25,42 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::batcher::BatchQueue;
+use super::batcher::{BatchQueue, Pending};
 use super::metrics::Metrics;
+use crate::device::QualityConfig;
 use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
-use crate::runtime::client::{ArgValue, Runtime};
+use crate::quant::qsq::AssignMode;
+use crate::runtime::client::{ArgValue, Executable, Runtime};
+use crate::runtime::host::{self, QuantizedEngine};
 use crate::tensor::{ops, Tensor};
 use crate::util::json::{self, Value};
+
+/// Which inference engine the worker thread runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineSelect {
+    /// PJRT if the runtime and artifacts load, else the host f32 engine.
+    Auto,
+    /// PJRT only; startup fails if it is unavailable.
+    Pjrt,
+    /// Pure-rust f32 engine (blocked/parallel GEMM).
+    Host,
+    /// Pure-rust code-domain engine: weights quantized at this quality and
+    /// served from packed codes on the qgemm kernel.
+    HostQuantized(QualityConfig),
+}
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub model: ModelKind,
-    /// Compiled artifact batch (the padded execution size).
+    /// Compiled artifact batch (the padded execution size on PJRT).
     pub batch: usize,
     /// Dynamic batching window.
     pub max_delay: Duration,
     /// Bind address, e.g. "127.0.0.1:0" (port 0 = ephemeral).
     pub bind: String,
+    /// Inference engine selection.
+    pub engine: EngineSelect,
 }
 
 impl Default for ServerConfig {
@@ -46,8 +70,78 @@ impl Default for ServerConfig {
             batch: 32,
             max_delay: Duration::from_millis(5),
             bind: "127.0.0.1:0".into(),
+            engine: EngineSelect::Auto,
         }
     }
+}
+
+/// The worker's engine (constructed on, and owned by, the worker thread —
+/// `Runtime` is not `Send`).
+enum Backend {
+    Pjrt {
+        /// Keeps the PJRT client alive for the executable's lifetime.
+        _rt: Runtime,
+        exe: Arc<Executable>,
+        weights: Vec<Tensor>,
+    },
+    Host(WeightStore),
+    Quant(QuantizedEngine),
+}
+
+impl Backend {
+    fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt { .. } => "pjrt",
+            Backend::Host(_) => "host-f32",
+            Backend::Quant(_) => "host-qgemm",
+        }
+    }
+}
+
+fn pjrt_backend(artifacts: &Path, cfg: &ServerConfig, store: &WeightStore) -> Result<Backend> {
+    let mut rt = Runtime::new(artifacts)?;
+    let (art, _) = super::router::artifact_for(cfg.model, cfg.batch)?;
+    let exe = rt.load(&art)?;
+    let weights = store.ordered().into_iter().cloned().collect();
+    Ok(Backend::Pjrt { _rt: rt, exe, weights })
+}
+
+fn build_backend(artifacts: &Path, cfg: &ServerConfig) -> Result<Backend> {
+    let store = WeightStore::load(artifacts, cfg.model)?;
+    match cfg.engine {
+        EngineSelect::Pjrt => pjrt_backend(artifacts, cfg, &store),
+        EngineSelect::Host => Ok(Backend::Host(store)),
+        EngineSelect::HostQuantized(q) => Ok(Backend::Quant(QuantizedEngine::quantize_store(
+            &store,
+            q,
+            AssignMode::SigmaSearch,
+        )?)),
+        EngineSelect::Auto => match pjrt_backend(artifacts, cfg, &store) {
+            Ok(b) => Ok(b),
+            Err(e) => {
+                eprintln!("server: PJRT unavailable ({e:#}); falling back to host engine");
+                Ok(Backend::Host(store))
+            }
+        },
+    }
+}
+
+/// Copy a dynamic batch into one [rows, H, W, C] tensor; `rows` beyond the
+/// batch stay zero (the PJRT path pads to the compiled batch size, the host
+/// path passes `rows == batch.len()` for no padding).
+fn batch_tensor(
+    batch: &[Pending<Job>],
+    rows: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Result<Tensor> {
+    let pix = h * w * c;
+    let mut xdata = vec![0.0f32; rows * pix];
+    for (i, job) in batch.iter().enumerate() {
+        xdata[i * pix..(i + 1) * pix].copy_from_slice(&job.payload.pixels);
+    }
+    Tensor::new(vec![rows, h, w, c], xdata)
 }
 
 struct Job {
@@ -79,48 +173,47 @@ impl Server {
         let queue = Arc::new(BatchQueue::<Job>::new(cfg.batch, cfg.max_delay));
         let metrics = Arc::new(Metrics::new());
 
-        // --- PJRT worker (owns the non-Send Runtime) ------------------------
+        // --- inference worker (owns the non-Send Backend) -------------------
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let wq = queue.clone();
         let wm = metrics.clone();
         let wcfg = cfg.clone();
-        let worker = thread::Builder::new().name("pjrt-worker".into()).spawn(move || {
-            let setup = (|| -> Result<_> {
-                let mut rt = Runtime::new(&artifacts)?;
-                let store = WeightStore::load(&artifacts, wcfg.model)?;
-                let (art, _) =
-                    super::router::artifact_for(wcfg.model, wcfg.batch)?;
-                let exe = rt.load(&art)?;
-                Ok((rt, store, exe))
-            })();
-            let (_rt, store, exe) = match setup {
-                Ok(v) => {
+        let worker = thread::Builder::new().name("infer-worker".into()).spawn(move || {
+            let backend = match build_backend(&artifacts, &wcfg) {
+                Ok(b) => {
                     let _ = ready_tx.send(Ok(()));
-                    v
+                    b
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
                     return;
                 }
             };
+            wm.inc(&format!("engine_{}", backend.name()), 1);
             let (h, w, c) = wcfg.model.input_hwc();
-            let pix = h * w * c;
-            let weights: Vec<Tensor> = store.ordered().into_iter().cloned().collect();
 
             while let Some(batch) = wq.pop_batch() {
                 let t0 = Instant::now();
                 let n = batch.len();
-                // pad to the compiled batch with zeros
-                let mut xdata = vec![0.0f32; wcfg.batch * pix];
-                for (i, job) in batch.iter().enumerate() {
-                    xdata[i * pix..(i + 1) * pix].copy_from_slice(&job.payload.pixels);
-                }
-                let x = Tensor::new(vec![wcfg.batch, h, w, c], xdata).unwrap();
-                let mut args = vec![ArgValue::F32(x)];
-                args.extend(weights.iter().map(|t| ArgValue::F32(t.clone())));
-                match exe.run(&args) {
-                    Ok(out) => {
-                        let preds = ops::argmax_rows(&out[0]);
+                let preds: Result<Vec<usize>> = match &backend {
+                    Backend::Pjrt { exe, weights, .. } => {
+                        // pad to the compiled batch with zeros
+                        batch_tensor(&batch, wcfg.batch, h, w, c).and_then(|x| {
+                            let mut args = vec![ArgValue::F32(x)];
+                            args.extend(weights.iter().map(|t| ArgValue::F32(t.clone())));
+                            let out = exe.run(&args)?;
+                            Ok(ops::argmax_rows(&out[0]))
+                        })
+                    }
+                    Backend::Host(store) => batch_tensor(&batch, n, h, w, c)
+                        .and_then(|x| host::forward(store, &x))
+                        .map(|logits| ops::argmax_rows(&logits)),
+                    Backend::Quant(engine) => batch_tensor(&batch, n, h, w, c)
+                        .and_then(|x| engine.forward(&x))
+                        .map(|logits| ops::argmax_rows(&logits)),
+                };
+                match preds {
+                    Ok(preds) => {
                         let infer_s = t0.elapsed().as_secs_f64();
                         wm.observe_s("infer_batch", infer_s);
                         wm.inc("batches", 1);
@@ -151,7 +244,7 @@ impl Server {
         })?;
         ready_rx
             .recv()
-            .context("pjrt worker died during startup")??;
+            .context("inference worker died during startup")??;
 
         // --- acceptor -------------------------------------------------------
         let aq = queue.clone();
@@ -335,5 +428,29 @@ mod tests {
         let c = ServerConfig::default();
         assert_eq!(c.batch, 32);
         assert!(c.bind.ends_with(":0"));
+        assert_eq!(c.engine, EngineSelect::Auto);
+    }
+
+    #[test]
+    fn batch_tensor_copies_rows() {
+        let (tx, _rx) = mpsc::channel();
+        let jobs: Vec<Pending<Job>> = (0..2)
+            .map(|i| Pending {
+                payload: Job {
+                    id: i,
+                    pixels: vec![i as f32; 4],
+                    enqueued: Instant::now(),
+                    resp: tx.clone(),
+                },
+                enqueued: Instant::now(),
+            })
+            .collect();
+        let t = batch_tensor(&jobs, 2, 2, 2, 1).unwrap();
+        assert_eq!(t.shape(), &[2, 2, 2, 1]);
+        assert_eq!(t.data(), &[0.0, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0]);
+        // padded rows stay zero (the PJRT path)
+        let p = batch_tensor(&jobs, 3, 2, 2, 1).unwrap();
+        assert_eq!(p.shape(), &[3, 2, 2, 1]);
+        assert_eq!(&p.data()[8..], &[0.0; 4]);
     }
 }

@@ -1,0 +1,148 @@
+//! Cache-blocked, scoped-thread-parallel f32 GEMM (std only).
+//!
+//! The naive ikj loop in `tensor/ops.rs` streams the whole `w` matrix through
+//! cache once per output row.  This kernel tiles columns (`TILE_J`) and the
+//! reduction dimension (`TILE_K`) so each `w` tile is reused across a whole
+//! band of rows while it is hot, and splits the row dimension across scoped
+//! threads for large problems.
+//!
+//! Numerical contract: for every output element the reduction runs over `k`
+//! in ascending order with the same zero-activation skip as the naive loop,
+//! so the result is bitwise identical to `ops::matmul_naive` (threading
+//! partitions whole rows and cannot reorder any per-element accumulation).
+
+/// Column-tile width: one tile of `out`/`w` rows stays resident in L1.
+pub const TILE_J: usize = 64;
+/// Reduction-tile depth: `TILE_K` rows of a `w` column tile fit in L2.
+pub const TILE_K: usize = 128;
+/// Below this many MACs the blocked single-thread path runs un-threaded.
+const PAR_THRESHOLD_MACS: usize = 1 << 20;
+
+/// `out[M,N] += x[M,K] @ w[K,N]` for one band of rows, blocked over (j, k).
+fn gemm_band(out: &mut [f32], xd: &[f32], wd: &[f32], k: usize, n: usize) {
+    let rows = out.len() / n;
+    for jj in (0..n).step_by(TILE_J) {
+        let jend = (jj + TILE_J).min(n);
+        for kk in (0..k).step_by(TILE_K) {
+            let kend = (kk + TILE_K).min(k);
+            for i in 0..rows {
+                let orow = &mut out[i * n + jj..i * n + jend];
+                let xrow = &xd[i * k..(i + 1) * k];
+                for (kx, &a) in xrow.iter().enumerate().take(kend).skip(kk) {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let wrow = &wd[kx * n + jj..kx * n + jend];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += a * wv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Number of worker threads for an `m x k x n` GEMM.
+fn threads_for(m: usize, k: usize, n: usize) -> usize {
+    let macs = m.saturating_mul(k).saturating_mul(n);
+    if macs < PAR_THRESHOLD_MACS || m < 2 {
+        return 1;
+    }
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    cores.min(m).min(16)
+}
+
+/// `out[M,N] = x[M,K] @ w[K,N]` (caller provides a zeroed `out`).
+///
+/// Dispatches to the blocked kernel, parallelized over row bands with scoped
+/// threads when the problem is large enough to amortize spawn cost.
+pub fn matmul_into(out: &mut [f32], xd: &[f32], wd: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(xd.len(), m * k);
+    debug_assert_eq!(wd.len(), k * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let nthreads = threads_for(m, k, n);
+    if nthreads <= 1 {
+        gemm_band(out, xd, wd, k, n);
+        return;
+    }
+    // uniform row bands (the last one may be short); each thread owns one
+    // disjoint band of `out` and the matching rows of `x`
+    let rows_per_band = m.div_ceil(nthreads);
+    std::thread::scope(|scope| {
+        for (oband, xband) in out
+            .chunks_mut(rows_per_band * n)
+            .zip(xd.chunks(rows_per_band * k))
+        {
+            scope.spawn(move || gemm_band(oband, xband, wd, k, n));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(xd: &[f32], wd: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = xd[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[i * n + j] += a * wd[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn gauss(seed: u64, len: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..len).map(|_| (r.normal() * 0.5) as f32).collect()
+    }
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        // exercise tile remainders, single rows/cols, and the threaded path
+        for (si, &(m, k, n)) in [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (17, 130, 65),
+            (64, 256, 120),
+            (33, 100, 200),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let xd = gauss(si as u64, m * k);
+            let wd = gauss(100 + si as u64, k * n);
+            let mut out = vec![0.0f32; m * n];
+            matmul_into(&mut out, &xd, &wd, m, k, n);
+            let want = naive(&xd, &wd, m, k, n);
+            assert_eq!(out, want, "shape ({m},{k},{n}) diverged from naive");
+        }
+    }
+
+    #[test]
+    fn threaded_band_matches_naive() {
+        // big enough to cross PAR_THRESHOLD_MACS with several bands
+        let (m, k, n) = (64, 256, 256);
+        let xd = gauss(7, m * k);
+        let wd = gauss(8, k * n);
+        let mut out = vec![0.0f32; m * n];
+        matmul_into(&mut out, &xd, &wd, m, k, n);
+        assert_eq!(out, naive(&xd, &wd, m, k, n));
+    }
+
+    #[test]
+    fn zero_sized_ok() {
+        let mut out: Vec<f32> = vec![];
+        matmul_into(&mut out, &[], &[], 0, 4, 0);
+    }
+}

@@ -1,0 +1,29 @@
+//! The compute-kernel layer — the serving hot path.
+//!
+//! Everything under `kernels/` exists to make inference run as fast as the
+//! host hardware allows while staying dependency-free (std only):
+//!
+//! * [`blocked`] — cache-blocked, scoped-thread-parallel f32 GEMM.  This is
+//!   what [`crate::tensor::ops::matmul`] (and therefore `im2col` conv and the
+//!   fp32 model head) dispatches to; the original ikj loop survives as
+//!   [`crate::tensor::ops::matmul_naive`], the bitwise oracle.
+//! * [`qgemm`] — the code-domain GEMM.  It consumes a packed
+//!   [`crate::quant::QuantizedTensor`] directly: zero codes are skipped at
+//!   pack time, each surviving code contributes via sign/shift-built tables
+//!   (no multiplies in the inner loop), and the per-group `alpha` scales each
+//!   partial sum exactly once.  This turns the paper's decode hardware story
+//!   (Table II: shift + invert + skip) into actual host-side speedup, and is
+//!   what [`crate::runtime::host::QuantizedEngine`] runs quantized layers on.
+//!
+//! The third member of this PR's kernel set lives with the quantizer it
+//! accelerates: [`crate::quant::sigma_fast`] scores the whole 19x8
+//! (gamma, delta) grid from sorted-|w| prefix sums in O(sort) instead of 152
+//! full assignment passes.
+//!
+//! `benches/bench_kernels.rs` tracks all three against their naive oracles
+//! and emits `BENCH_kernels.json` for cross-PR perf trajectories.
+
+pub mod blocked;
+pub mod qgemm;
+
+pub use qgemm::{qgemm, qgemm_qt, PackedQTensor};

@@ -1,0 +1,234 @@
+//! Packed code-domain GEMM: multiply a f32 activation matrix by a
+//! [`QuantizedTensor`] without ever decoding the weights to f32.
+//!
+//! The QSQ levels are {0, ±1, ±2, ±4}, so each weight contributes to a dot
+//! product as a sign flip plus at most two left shifts of the activation.
+//! The kernel exploits all three structural properties of the code tensor:
+//!
+//! * **zero skip** — zero/reserved codes are dropped at pack time, so the
+//!   inner loop never touches them (the paper's "+6 % zeros" becomes real
+//!   work saved, not just [`crate::hw::zskip`] bookkeeping);
+//! * **shift/add only** — per activation value `a` the eight possible
+//!   contributions {0, a, 2a, 4a, -a, -2a, -4a, 0} are built once per group
+//!   with additions and negations only, then selected by code — the inner
+//!   loop contains no multiply;
+//! * **hoisted scaling** — the per-(group, column) scalar `alpha` multiplies
+//!   the group partial sum once, instead of once per element as the
+//!   decode-then-matmul path does.
+
+use anyhow::{bail, Result};
+
+use crate::hw::zskip::SkipStats;
+use crate::quant::qsq::QuantizedTensor;
+use crate::tensor::Tensor;
+
+/// One non-skippable code: (row offset within the group, 3-bit code).
+type Entry = (u16, u8);
+
+/// A [`QuantizedTensor`] repacked for the code-domain GEMM: per
+/// (group, column) runs of nonzero codes in CSR-like form.
+#[derive(Clone, Debug)]
+pub struct PackedQTensor {
+    pub k: usize,
+    pub oc: usize,
+    pub group: usize,
+    /// Original tensor shape (C-order compatible with `[K, OC]`).
+    pub shape: Vec<usize>,
+    /// `[K/group, OC]` row-major per-group scalars.
+    scalars: Vec<f32>,
+    /// Nonzero codes, grouped by (group, column), rows ascending.
+    entries: Vec<Entry>,
+    /// CSR offsets into `entries`, length `(K/group)*OC + 1`.
+    starts: Vec<u32>,
+    /// Zero-skip statistics realized by this packing.
+    pub skip: SkipStats,
+}
+
+impl PackedQTensor {
+    /// Pack a quantized tensor (drops zero/reserved codes).
+    pub fn pack(qt: &QuantizedTensor) -> Result<PackedQTensor> {
+        if qt.group == 0 || qt.k % qt.group != 0 {
+            bail!("group {} must divide K={}", qt.group, qt.k);
+        }
+        if qt.group > u16::MAX as usize + 1 {
+            bail!("group {} too large for packed offsets", qt.group);
+        }
+        let g = qt.k / qt.group;
+        let cells = g * qt.oc;
+        let mut entries = Vec::with_capacity(qt.codes.len());
+        let mut starts = Vec::with_capacity(cells + 1);
+        starts.push(0u32);
+        for gi in 0..g {
+            for j in 0..qt.oc {
+                for r in 0..qt.group {
+                    let code = qt.codes[(gi * qt.group + r) * qt.oc + j];
+                    if !code.is_skippable() {
+                        entries.push((r as u16, code.0 & 7));
+                    }
+                }
+                starts.push(entries.len() as u32);
+            }
+        }
+        let total = qt.codes.len() as u64;
+        let skip = SkipStats { total, skippable: total - entries.len() as u64 };
+        Ok(PackedQTensor {
+            k: qt.k,
+            oc: qt.oc,
+            group: qt.group,
+            shape: qt.shape.clone(),
+            scalars: qt.scalars.clone(),
+            entries,
+            starts,
+            skip,
+        })
+    }
+
+    /// Fraction of codes the GEMM never touches.
+    pub fn skipped_fraction(&self) -> f64 {
+        self.skip.fraction()
+    }
+}
+
+/// `x [M,K] @ packed [K,OC] -> [M,OC]`, entirely in the code domain.
+pub fn qgemm(x: &Tensor, p: &PackedQTensor) -> Result<Tensor> {
+    let xs = x.shape();
+    if xs.len() != 2 || xs[1] != p.k {
+        bail!("qgemm shapes {:?} x [{}, {}]", xs, p.k, p.oc);
+    }
+    let (m, k, oc) = (xs[0], p.k, p.oc);
+    let g = k / p.group;
+    let xd = x.data();
+    let mut out = vec![0.0f32; m * oc];
+    // per-group shift table: lut[r*8 + code] = level(code) * a, built with
+    // adds/negations only (a2 = a+a, a4 = a2+a2)
+    let mut lut = vec![0.0f32; p.group * 8];
+    for i in 0..m {
+        let xrow = &xd[i * k..(i + 1) * k];
+        let orow = &mut out[i * oc..(i + 1) * oc];
+        for gi in 0..g {
+            for r in 0..p.group {
+                let a = xrow[gi * p.group + r];
+                let a2 = a + a;
+                let a4 = a2 + a2;
+                let l = &mut lut[r * 8..r * 8 + 8];
+                l[0] = 0.0;
+                l[1] = a;
+                l[2] = a2;
+                l[3] = a4;
+                l[4] = -a;
+                l[5] = -a2;
+                l[6] = -a4;
+                l[7] = 0.0;
+            }
+            let cell0 = gi * oc;
+            for j in 0..oc {
+                let s = p.starts[cell0 + j] as usize;
+                let e = p.starts[cell0 + j + 1] as usize;
+                let mut acc = 0.0f32;
+                for &(r, c) in &p.entries[s..e] {
+                    acc += lut[(r as usize) * 8 + c as usize];
+                }
+                // the only multiply: one alpha per (group, column)
+                orow[j] += p.scalars[cell0 + j] * acc;
+            }
+        }
+    }
+    Tensor::new(vec![m, oc], out)
+}
+
+/// Convenience: pack on the fly (prefer holding a [`PackedQTensor`] on hot
+/// paths — packing costs one pass over the codes).
+pub fn qgemm_qt(x: &Tensor, qt: &QuantizedTensor) -> Result<Tensor> {
+    qgemm(x, &PackedQTensor::pack(qt)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codes::Code;
+    use crate::quant::qsq::{quantize, AssignMode};
+    use crate::tensor::ops;
+    use crate::util::rng::Rng;
+
+    /// Build a QuantizedTensor with random codes and power-of-two scalars so
+    /// decode-then-matmul and qgemm are both exact in f32.
+    fn dyadic_qt(seed: u64, k: usize, oc: usize, group: usize) -> QuantizedTensor {
+        let mut r = Rng::new(seed);
+        let levels = [0i32, 1, 2, 4, -1, -2, -4];
+        let codes: Vec<Code> = (0..k * oc)
+            .map(|_| Code::from_level(levels[r.below(7) as usize]).unwrap())
+            .collect();
+        let scalars: Vec<f32> = (0..(k / group) * oc)
+            .map(|_| (2.0f32).powi(r.range_i64(-2, 2) as i32))
+            .collect();
+        QuantizedTensor {
+            codes,
+            scalars,
+            k,
+            oc,
+            group,
+            phi: 4,
+            gamma: 0.5,
+            delta: 2.0,
+            shape: vec![k, oc],
+        }
+    }
+
+    fn int_activations(seed: u64, m: usize, k: usize) -> Tensor {
+        let mut r = Rng::new(seed);
+        let data: Vec<f32> = (0..m * k).map(|_| r.range_i64(-8, 8) as f32).collect();
+        Tensor::new(vec![m, k], data).unwrap()
+    }
+
+    #[test]
+    fn exact_vs_decode_matmul_on_dyadic_data() {
+        for (seed, m, k, oc, group) in [(1u64, 3, 16, 5, 4), (2, 7, 48, 9, 16), (3, 1, 8, 1, 8)] {
+            let qt = dyadic_qt(seed, k, oc, group);
+            let x = int_activations(seed + 100, m, k);
+            let dec = Tensor::new(vec![k, oc], qt.decode()).unwrap();
+            let want = ops::matmul_naive(&x, &dec).unwrap();
+            let got = qgemm_qt(&x, &qt).unwrap();
+            assert_eq!(got.shape(), want.shape());
+            // all values dyadic and well within the f32 mantissa -> exact
+            assert_eq!(got.data(), want.data(), "seed {seed} diverged");
+        }
+    }
+
+    #[test]
+    fn close_on_real_quantized_gaussian_weights() {
+        let mut r = Rng::new(9);
+        let w: Vec<f32> = (0..150 * 16).map(|_| (r.normal() * 0.2) as f32).collect();
+        let qt = quantize(&w, &[150, 16], 6, 4, AssignMode::SigmaSearch).unwrap();
+        let xdata: Vec<f32> = (0..24 * 150).map(|_| (r.normal() * 0.8) as f32).collect();
+        let x = Tensor::new(vec![24, 150], xdata).unwrap();
+        let dec = Tensor::new(vec![150, 16], qt.decode()).unwrap();
+        let want = ops::matmul_naive(&x, &dec).unwrap();
+        let got = qgemm_qt(&x, &qt).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-3, "qgemm vs decode+matmul: {diff}");
+    }
+
+    #[test]
+    fn zero_codes_are_dropped_at_pack_time() {
+        let mut qt = dyadic_qt(5, 16, 4, 4);
+        for c in qt.codes.iter_mut().step_by(2) {
+            *c = Code::ZERO;
+        }
+        let p = PackedQTensor::pack(&qt).unwrap();
+        assert!(p.skipped_fraction() >= 0.5);
+        assert_eq!(p.skip.total, 64);
+        let x = int_activations(6, 2, 16);
+        let dec = Tensor::new(vec![16, 4], qt.decode()).unwrap();
+        assert_eq!(
+            qgemm(&x, &p).unwrap().data(),
+            ops::matmul_naive(&x, &dec).unwrap().data()
+        );
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let qt = dyadic_qt(7, 16, 4, 4);
+        let x = int_activations(8, 2, 12);
+        assert!(qgemm_qt(&x, &qt).is_err());
+    }
+}

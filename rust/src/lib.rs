@@ -25,6 +25,7 @@ pub mod coordinator;
 pub mod data;
 pub mod device;
 pub mod hw;
+pub mod kernels;
 pub mod model;
 pub mod quant;
 pub mod repro;

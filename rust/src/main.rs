@@ -77,7 +77,8 @@ subcommands:
   decode        inspect a QSQ container           (--in model.qsq)
   deploy-sim    full encode→channel→decode pipeline vs a device profile
   finetune      on-device FC fine-tuning of the quantized LeNet
-  serve         TCP inference server (JSON lines; dynamic batching)
+  serve         TCP inference server (JSON lines; dynamic batching;
+                --engine auto|pjrt|host|host-quant)
   client        synthetic load against a server (--port, --n)
   repro         regenerate a paper table/figure   (--exp table3|fig7|...|all)
 common flags: --artifacts DIR  --model lenet|convnet  --fast";
@@ -262,11 +263,22 @@ fn cmd_finetune(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = artifacts(args);
+    let engine = match args.get_or("engine", "auto").as_str() {
+        "auto" => server::EngineSelect::Auto,
+        "pjrt" => server::EngineSelect::Pjrt,
+        "host" => server::EngineSelect::Host,
+        "host-quant" => server::EngineSelect::HostQuantized(QualityConfig {
+            phi: args.get_usize("phi", 4) as u32,
+            group: args.get_usize("n", 16),
+        }),
+        other => bail!("unknown engine {other:?} (auto|pjrt|host|host-quant)"),
+    };
     let cfg = server::ServerConfig {
         model: model_kind(args)?,
         batch: args.get_usize("batch", 32),
         max_delay: std::time::Duration::from_millis(args.get_u64("delay-ms", 5)),
         bind: format!("127.0.0.1:{}", args.get_usize("port", 9000)),
+        engine,
     };
     let srv = server::Server::start(dir, cfg)?;
     println!("serving on 127.0.0.1:{} (ctrl-c to stop)", srv.port);

@@ -58,9 +58,21 @@ impl WeightStore {
             .with_context(|| format!("tensor {name} not in store"))
     }
 
-    /// Tensors in declaration order (the artifact argument order).
+    /// Tensors in declaration order (the artifact argument order).  Tensors
+    /// that were [`remove`](Self::remove)d are skipped — callers that need
+    /// the full artifact argument list (the PJRT path) get a clean
+    /// arg-count error from the executable instead of a panic here.
     pub fn ordered(&self) -> Vec<&Tensor> {
-        self.meta.tensors.iter().map(|t| &self.tensors[t.name]).collect()
+        self.meta
+            .tensors
+            .iter()
+            .filter_map(|t| self.tensors.get(t.name))
+            .collect()
+    }
+
+    /// Remove a tensor (e.g. once packed codes shadow its f32 form).
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        self.tensors.remove(name)
     }
 
     /// Replace a tensor (e.g. with decoded approximate weights).

@@ -8,6 +8,8 @@
 //!   the `Nearest` / `NearestOpt` ablation modes.  Mirrors
 //!   `python/compile/qsq_lib.py`; parity is enforced by integration tests
 //!   against `artifacts/parity/`.
+//! * [`sigma_fast`] — O(sort) scoring of the whole (gamma, delta) grid from
+//!   sorted-|w| prefix sums; identical argmin to the naive 152-pass sweep.
 //! * [`ternary`]   — TWN-style 2-bit baseline (Li et al., paper Table I).
 //! * [`binary`]    — XNOR/BWN-style 1-bit baseline (paper eqs. 2–3).
 //! * [`vectorize`] — channel-wise / filter-wise grouping (paper Figs. 5/6).
@@ -16,6 +18,7 @@ pub mod binary;
 pub mod codes;
 pub mod gaussian;
 pub mod qsq;
+pub mod sigma_fast;
 pub mod ternary;
 pub mod vectorize;
 

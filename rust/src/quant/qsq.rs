@@ -20,6 +20,7 @@ use anyhow::{bail, Result};
 
 use super::codes::{self, Code};
 use super::gaussian::{group_stats, GroupStats};
+use super::sigma_fast;
 
 /// Exhaustive-search grids (match qsq_lib.GAMMA_GRID / DELTA_GRID).
 pub const GAMMA_GRID: [f64; 19] = [
@@ -128,14 +129,14 @@ impl QuantizedTensor {
     }
 }
 
-/// Quantize `w` (row-major `[K, OC]`, possibly a reshaped conv tensor).
-pub fn quantize(
+/// Validate quantizer inputs and compute the per-(group, column) statistics
+/// (strided column scan), shared by [`quantize`] and the search oracles.
+fn validate_and_stats(
     w: &[f32],
     shape: &[usize],
     group: usize,
     phi: u32,
-    mode: AssignMode,
-) -> Result<QuantizedTensor> {
+) -> Result<(usize, usize, Vec<GroupStats>)> {
     let (k, oc) = matrix_dims(shape)?;
     if w.len() != k * oc {
         bail!("weight len {} != {}x{}", w.len(), k, oc);
@@ -147,8 +148,6 @@ pub fn quantize(
         bail!("phi must be 1, 2 or 4");
     }
     let g = k / group;
-
-    // Per-(group, column) stats.  Gather each vector (strided column scan).
     let mut stats: Vec<GroupStats> = Vec::with_capacity(g * oc);
     let mut vbuf = vec![0.0f32; group];
     for gi in 0..g {
@@ -159,46 +158,90 @@ pub fn quantize(
             stats.push(group_stats(&vbuf, phi));
         }
     }
+    Ok((k, oc, stats))
+}
 
-    let assign_sigma = |gamma: f64, delta: f64| -> Vec<Code> {
-        let mut codes_out = vec![Code::ZERO; k * oc];
-        for ki in 0..k {
-            let gi = ki / group;
-            for j in 0..oc {
-                let st = &stats[gi * oc + j];
-                let x = w[ki * oc + j] as f64;
-                let sig = if x >= 0.0 { st.sigma_p } else { st.sigma_n };
-                let mag = x.abs();
-                let mut lvl = 0i32;
-                if mag >= gamma * sig {
-                    lvl = 1;
-                }
-                if phi >= 2 && mag >= sig {
-                    lvl = 2;
-                }
-                if phi >= 4 && mag >= delta * sig {
-                    lvl = 4;
-                }
-                let signed = if x > 0.0 { lvl } else if x < 0.0 { -lvl } else { 0 };
-                codes_out[ki * oc + j] = Code::from_level(signed).unwrap();
+/// Sigma-threshold code assignment (eqs. 6/8) for one (gamma, delta).
+pub(crate) fn assign_sigma_codes(
+    w: &[f32],
+    k: usize,
+    oc: usize,
+    group: usize,
+    phi: u32,
+    stats: &[GroupStats],
+    gamma: f64,
+    delta: f64,
+) -> Vec<Code> {
+    let mut codes_out = vec![Code::ZERO; k * oc];
+    for ki in 0..k {
+        let gi = ki / group;
+        for j in 0..oc {
+            let st = &stats[gi * oc + j];
+            let x = w[ki * oc + j] as f64;
+            let sig = if x >= 0.0 { st.sigma_p } else { st.sigma_n };
+            let mag = x.abs();
+            let mut lvl = 0i32;
+            if mag >= gamma * sig {
+                lvl = 1;
             }
+            if phi >= 2 && mag >= sig {
+                lvl = 2;
+            }
+            if phi >= 4 && mag >= delta * sig {
+                lvl = 4;
+            }
+            let signed = if x > 0.0 { lvl } else if x < 0.0 { -lvl } else { 0 };
+            codes_out[ki * oc + j] = Code::from_level(signed).unwrap();
         }
-        codes_out
-    };
+    }
+    codes_out
+}
 
-    let err_of = |codes_v: &[Code], alphas: &dyn Fn(usize, usize) -> f64| -> f64 {
-        let mut tot = 0.0f64;
-        for ki in 0..k {
-            let gi = ki / group;
-            for j in 0..oc {
-                let a = alphas(gi, j);
-                let d = codes_v[ki * oc + j].multiplier() as f64 * a;
-                let e = w[ki * oc + j] as f64 - d;
-                tot += e * e;
-            }
+/// Eq.-5 error of a code assignment under the eq.-9 scalars.
+pub(crate) fn eq5_error_eq9_alpha(
+    w: &[f32],
+    k: usize,
+    oc: usize,
+    group: usize,
+    codes_v: &[Code],
+    stats: &[GroupStats],
+) -> f64 {
+    let mut tot = 0.0f64;
+    for ki in 0..k {
+        let gi = ki / group;
+        for j in 0..oc {
+            let a = stats[gi * oc + j].alpha;
+            let d = codes_v[ki * oc + j].multiplier() as f64 * a;
+            let e = w[ki * oc + j] as f64 - d;
+            tot += e * e;
         }
-        tot
-    };
+    }
+    tot
+}
+
+/// Delta-grid candidates at quality `phi` (below phi=4 the level-4 threshold
+/// is unused, so a single placeholder keeps the search shape).
+pub(crate) fn deltas_for(phi: u32) -> &'static [f64] {
+    if phi >= 4 {
+        &DELTA_GRID
+    } else {
+        &[2.0]
+    }
+}
+
+/// Quantize `w` (row-major `[K, OC]`, possibly a reshaped conv tensor).
+pub fn quantize(
+    w: &[f32],
+    shape: &[usize],
+    group: usize,
+    phi: u32,
+    mode: AssignMode,
+) -> Result<QuantizedTensor> {
+    let (k, oc, stats) = validate_and_stats(w, shape, group, phi)?;
+    let g = k / group;
+
+    let assign_sigma =
+        |gamma: f64, delta: f64| assign_sigma_codes(w, k, oc, group, phi, &stats, gamma, delta);
     let eq9_alpha = |gi: usize, j: usize| stats[gi * oc + j].alpha;
 
     let levels = codes::levels_for_phi(phi);
@@ -231,18 +274,11 @@ pub fn quantize(
             (c, eq9_scalars(&stats, g, oc), gamma, delta)
         }
         AssignMode::SigmaSearch => {
-            let deltas: &[f64] = if phi >= 4 { &DELTA_GRID } else { &[2.0] };
-            let mut best: (Vec<Code>, f64, f64, f64) = (Vec::new(), f64::INFINITY, 0.5, 2.0);
-            for &gam in GAMMA_GRID.iter() {
-                for &dlt in deltas {
-                    let c = assign_sigma(gam, dlt);
-                    let e = err_of(&c, &eq9_alpha);
-                    if e < best.1 {
-                        best = (c, e, gam, dlt);
-                    }
-                }
-            }
-            (best.0, eq9_scalars(&stats, g, oc), best.2, best.3)
+            // O(sort) grid scoring (see `sigma_fast`): same argmin as the
+            // naive 19x8 assignment sweep, then a single assignment pass.
+            let (gam, dlt) = sigma_fast::search(w, k, oc, group, phi, &stats);
+            let c = assign_sigma(gam, dlt);
+            (c, eq9_scalars(&stats, g, oc), gam, dlt)
         }
         AssignMode::Nearest => {
             let c = assign_nearest(&eq9_alpha);
@@ -287,6 +323,32 @@ pub fn quantize(
     Ok(QuantizedTensor {
         codes: codes_v,
         scalars,
+        k,
+        oc,
+        group,
+        phi,
+        gamma,
+        delta,
+        shape: shape.to_vec(),
+    })
+}
+
+/// The pre-kernel SigmaSearch: one full assignment + error pass per grid
+/// candidate (152 passes at phi=4).  Oracle for `sigma_fast` identity tests
+/// and the speedup baseline in `bench_kernels`.
+pub fn quantize_sigma_search_naive(
+    w: &[f32],
+    shape: &[usize],
+    group: usize,
+    phi: u32,
+) -> Result<QuantizedTensor> {
+    let (k, oc, stats) = validate_and_stats(w, shape, group, phi)?;
+    let g = k / group;
+    let (gamma, delta) = sigma_fast::search_naive(w, k, oc, group, phi, &stats);
+    let codes_v = assign_sigma_codes(w, k, oc, group, phi, &stats, gamma, delta);
+    Ok(QuantizedTensor {
+        codes: codes_v,
+        scalars: eq9_scalars(&stats, g, oc),
         k,
         oc,
         group,
@@ -427,6 +489,19 @@ mod tests {
         assert!(quantize(&w, &[12, 1], 5, 4, AssignMode::Nearest).is_err()); // 5 !| 12
         assert!(quantize(&w, &[12, 1], 4, 3, AssignMode::Nearest).is_err()); // phi=3
         assert!(quantize(&w, &[10, 1], 2, 4, AssignMode::Nearest).is_err()); // len mismatch
+    }
+
+    #[test]
+    fn fast_sigma_search_identical_to_naive_grid() {
+        for phi in [1u32, 2, 4] {
+            let w = gauss(40 + phi as u64, 48 * 6);
+            let fast = quantize(&w, &[48, 6], 8, phi, AssignMode::SigmaSearch).unwrap();
+            let naive = quantize_sigma_search_naive(&w, &[48, 6], 8, phi).unwrap();
+            assert_eq!(fast.gamma, naive.gamma, "phi={phi}");
+            assert_eq!(fast.delta, naive.delta, "phi={phi}");
+            assert_eq!(fast.codes, naive.codes, "phi={phi}");
+            assert_eq!(fast.scalars, naive.scalars, "phi={phi}");
+        }
     }
 
     #[test]

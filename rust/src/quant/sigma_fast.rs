@@ -1,0 +1,235 @@
+//! O(sort) sigma-threshold grid search (the encode-side kernel).
+//!
+//! `AssignMode::SigmaSearch` scores every (gamma, delta) candidate of the
+//! 19x8 grid by the eq.-5 reconstruction error.  The naive method runs one
+//! full assignment pass per candidate: `152 * K * OC` threshold compares and
+//! error terms.  This module computes the identical argmin from sorted
+//! per-(group, column, sign) magnitudes:
+//!
+//! For one cell side with eq.-9 alpha `a`, sorted magnitudes `m[0..n]` and
+//! suffix sums `SM(i) = sum(m[i..n])`, the thresholds `t1 = gamma*sigma`,
+//! `t2 = sigma`, `t3 = delta*sigma` split the side into level bins at the
+//! partition indices `i1 <= i2 <= i3` (the grids guarantee
+//! `gamma < 1 < delta`), and the squared error decomposes as
+//!
+//! ```text
+//! err = sum(m^2)                                   (candidate-independent)
+//!     - 2a*SM(i1) +    a^2*(n-i1)                  (depends on gamma only)
+//!     - 2a*SM(i2) +  3*a^2*(n-i2)                  (constant; phi >= 2)
+//!     - 4a*SM(i3) + 12*a^2*(n-i3)                  (depends on delta only)
+//! ```
+//!
+//! so the whole grid costs one binary search per gamma plus one per delta
+//! per cell side — `O(K*OC*log(group))` total instead of
+//! `O(152*K*OC)` — and the scored objective is algebraically identical to
+//! the naive pass, so the search returns the same (gamma, delta) (and hence
+//! bitwise-identical codes once assigned).  Candidates whose assignments
+//! coincide produce exactly equal scores in both methods, so first-wins
+//! tie-breaking agrees too.  The one caveat: candidates with *distinct*
+//! assignments are ranked by f64 sums accumulated in different orders, so
+//! two candidates whose true errors differ by less than accumulated
+//! rounding (~1e-13 relative) could in principle rank oppositely; for
+//! continuous weight distributions such near-exact error ties do not occur
+//! (the identity tests and `bench_kernels` assert agreement on real
+//! tensors).
+
+use super::gaussian::GroupStats;
+use super::qsq::{assign_sigma_codes, deltas_for, eq5_error_eq9_alpha, GAMMA_GRID};
+
+/// One sign side of a (group, column) cell: sorted |w| plus suffix sums.
+struct Side {
+    mags: Vec<f64>,
+    /// `suffix[i] = sum(mags[i..])`, length `mags.len() + 1`.
+    suffix: Vec<f64>,
+}
+
+impl Side {
+    fn build(mut mags: Vec<f64>) -> Side {
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut suffix = vec![0.0f64; mags.len() + 1];
+        for i in (0..mags.len()).rev() {
+            suffix[i] = suffix[i + 1] + mags[i];
+        }
+        Side { mags, suffix }
+    }
+
+    /// First index with `mags[i] >= t` (the naive pass levels up on `>=`).
+    #[inline]
+    fn split(&self, t: f64) -> usize {
+        self.mags.partition_point(|&m| m < t)
+    }
+
+    /// `-c1*a*SM(i) + c2*a^2*(n-i)` — one bin-boundary term of the error.
+    #[inline]
+    fn term(&self, i: usize, a: f64, c1: f64, c2: f64) -> f64 {
+        -c1 * a * self.suffix[i] + c2 * a * a * (self.mags.len() - i) as f64
+    }
+}
+
+/// Search the (gamma, delta) grid; identical argmin to [`search_naive`].
+///
+/// `stats` are the per-(group, column) eq.-7/eq.-9 statistics in the same
+/// `[K/group, OC]` row-major order the quantizer uses.
+pub fn search(
+    w: &[f32],
+    k: usize,
+    oc: usize,
+    group: usize,
+    phi: u32,
+    stats: &[GroupStats],
+) -> (f64, f64) {
+    let g = k / group;
+    let deltas = deltas_for(phi);
+
+    let mut s2 = 0.0f64;
+    let mut t1 = vec![0.0f64; GAMMA_GRID.len()];
+    let mut t2 = 0.0f64;
+    let mut t3 = vec![0.0f64; deltas.len()];
+
+    let mut pos = Vec::with_capacity(group);
+    let mut neg = Vec::with_capacity(group);
+    for gi in 0..g {
+        for j in 0..oc {
+            pos.clear();
+            neg.clear();
+            for i in 0..group {
+                let x = w[(gi * group + i) * oc + j] as f64;
+                s2 += x * x;
+                if x > 0.0 {
+                    pos.push(x);
+                } else if x < 0.0 {
+                    neg.push(-x);
+                }
+                // exact zeros always assign level 0 with zero error
+            }
+            let st = &stats[gi * oc + j];
+            let a = st.alpha;
+            for (side, sig) in [
+                (Side::build(std::mem::take(&mut pos)), st.sigma_p),
+                (Side::build(std::mem::take(&mut neg)), st.sigma_n),
+            ] {
+                if side.mags.is_empty() {
+                    continue;
+                }
+                if phi >= 2 {
+                    t2 += side.term(side.split(sig), a, 2.0, 3.0);
+                }
+                for (ig, &gamma) in GAMMA_GRID.iter().enumerate() {
+                    t1[ig] += side.term(side.split(gamma * sig), a, 2.0, 1.0);
+                }
+                if phi >= 4 {
+                    for (id, &delta) in deltas.iter().enumerate() {
+                        t3[id] += side.term(side.split(delta * sig), a, 4.0, 12.0);
+                    }
+                }
+            }
+        }
+    }
+
+    let base = s2 + if phi >= 2 { t2 } else { 0.0 };
+    let mut best = (f64::INFINITY, 0.5, 2.0);
+    for (ig, &gamma) in GAMMA_GRID.iter().enumerate() {
+        for (id, &delta) in deltas.iter().enumerate() {
+            let e = base + t1[ig] + if phi >= 4 { t3[id] } else { 0.0 };
+            if e < best.0 {
+                best = (e, gamma, delta);
+            }
+        }
+    }
+    (best.1, best.2)
+}
+
+/// The original exhaustive search: one full assignment + error pass per grid
+/// candidate.  Kept as the oracle for tests and `bench_kernels`.
+pub fn search_naive(
+    w: &[f32],
+    k: usize,
+    oc: usize,
+    group: usize,
+    phi: u32,
+    stats: &[GroupStats],
+) -> (f64, f64) {
+    let mut best = (f64::INFINITY, 0.5, 2.0);
+    for &gamma in GAMMA_GRID.iter() {
+        for &delta in deltas_for(phi) {
+            let codes = assign_sigma_codes(w, k, oc, group, phi, stats, gamma, delta);
+            let e = eq5_error_eq9_alpha(w, k, oc, group, &codes, stats);
+            if e < best.0 {
+                best = (e, gamma, delta);
+            }
+        }
+    }
+    (best.1, best.2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gaussian::group_stats;
+    use crate::util::prop::{check, forall, gen_weights};
+
+    fn stats_for(w: &[f32], k: usize, oc: usize, group: usize, phi: u32) -> Vec<GroupStats> {
+        let g = k / group;
+        let mut stats = Vec::with_capacity(g * oc);
+        let mut vbuf = vec![0.0f32; group];
+        for gi in 0..g {
+            for j in 0..oc {
+                for (i, slot) in vbuf.iter_mut().enumerate() {
+                    *slot = w[(gi * group + i) * oc + j];
+                }
+                stats.push(group_stats(&vbuf, phi));
+            }
+        }
+        stats
+    }
+
+    #[test]
+    fn prop_fast_matches_naive_grid() {
+        for phi in [1u32, 2, 4] {
+            forall(
+                12,
+                |r| gen_weights(r, 48 * 8, 0.2),
+                |w| {
+                    let stats = stats_for(w, 48, 8, 4, phi);
+                    let fast = search(w, 48, 8, 4, phi, &stats);
+                    let naive = search_naive(w, 48, 8, 4, phi, &stats);
+                    check(fast == naive, &format!("phi={phi}: {fast:?} != {naive:?}"))
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn split_uses_geq_threshold() {
+        let side = Side::build(vec![1.0, 2.0, 3.0]);
+        assert_eq!(side.split(2.0), 1); // m == t levels up, like `mag >= t`
+        assert_eq!(side.split(2.5), 2);
+        assert_eq!(side.split(0.5), 0);
+        assert_eq!(side.split(9.0), 3);
+        assert_eq!(side.suffix, vec![6.0, 5.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn all_zero_tensor_picks_first_candidate() {
+        let w = vec![0.0f32; 32];
+        let stats = stats_for(&w, 32, 1, 8, 4);
+        let fast = search(&w, 32, 1, 8, 4, &stats);
+        let naive = search_naive(&w, 32, 1, 8, 4, &stats);
+        assert_eq!(fast, naive);
+        assert_eq!(fast, (GAMMA_GRID[0], crate::quant::qsq::DELTA_GRID[0]));
+    }
+
+    #[test]
+    fn single_sided_cells_agree() {
+        // all-positive weights: the negative side is empty everywhere
+        let w: Vec<f32> = (0..64).map(|i| 0.01 + (i % 7) as f32 * 0.05).collect();
+        for phi in [1u32, 2, 4] {
+            let stats = stats_for(&w, 64, 1, 8, phi);
+            assert_eq!(
+                search(&w, 64, 1, 8, phi, &stats),
+                search_naive(&w, 64, 1, 8, phi, &stats),
+                "phi={phi}"
+            );
+        }
+    }
+}

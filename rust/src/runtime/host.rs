@@ -1,16 +1,28 @@
-//! Pure-rust fallback inference engine.
+//! Pure-rust inference engines.
 //!
-//! Mirrors the L2 model graphs exactly (same im2col ordering, same layer
-//! stack), so it serves three roles:
-//!   1. independent oracle the PJRT path is validated against,
-//!   2. fallback when `artifacts/` is absent (e.g. unit-test environments),
-//!   3. the "device simulator" arm of the energy accounting (it can run with
-//!      the QSM multiplier model to produce bit-accurate energy ledgers).
+//! Two engines live here, both mirroring the L2 model graphs exactly (same
+//! im2col ordering, same layer stack):
+//!
+//! * the f32 path ([`forward`]) — runs every layer on the blocked/parallel
+//!   GEMM ([`crate::kernels::blocked`] via `ops::matmul`).  It is the oracle
+//!   the PJRT path is validated against and the fallback when `artifacts/`
+//!   is absent.
+//! * [`QuantizedEngine`] — the code-domain path: quantized layers execute on
+//!   [`crate::kernels::qgemm`] straight from packed codes (zero-skip,
+//!   shift/add, hoisted alpha), only the fp32 head and biases touch the f32
+//!   GEMM.  This is what the edge side actually serves with.
 
-use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 
+use anyhow::{bail, Context, Result};
+
+use crate::codec::{EncodedModel, EncodedTensor};
+use crate::device::QualityConfig;
+use crate::kernels::{self, PackedQTensor};
 use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
+use crate::quant::qsq::{quantize, AssignMode};
+use crate::quant::vectorize::Grouping;
 use crate::tensor::{ops, Tensor};
 
 /// Forward one batch through the model, host-side.
@@ -57,6 +69,151 @@ pub fn convnet_fwd(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
     }
     let h = h.reshape(vec![b, 256])?;
     ops::add_bias(&ops::matmul(&h, store.get("fcw")?)?, store.get("fcb")?)
+}
+
+/// Quantize every quantized tensor of a store at (phi, N) — the one
+/// canonical policy (per-tensor nearest-divisor grouping) shared by the
+/// deploy pipeline's `encode_store` and the serving engine.
+pub fn quantize_tensors(
+    store: &WeightStore,
+    quality: QualityConfig,
+    mode: AssignMode,
+) -> Result<Vec<EncodedTensor>> {
+    let mut tensors = Vec::new();
+    for tm in store.meta.quantized_tensors() {
+        let w = store.get(tm.name)?;
+        let group = Grouping::nearest_divisor(&tm.shape, quality.group)?;
+        let qt = quantize(w.data(), &tm.shape, group, quality.phi, mode)?;
+        tensors.push(EncodedTensor { name: tm.name.to_string(), tensor: qt });
+    }
+    Ok(tensors)
+}
+
+/// The code-domain serving engine: quantized tensors stay as packed codes
+/// and execute on [`kernels::qgemm`]; everything else (biases, fp32 head)
+/// comes from the wrapped [`WeightStore`] and runs on the blocked f32 GEMM.
+/// The f32 forms of packed tensors are dropped from the wrapped store, so
+/// quantized-layer weights exist only as codes.
+#[derive(Clone, Debug)]
+pub struct QuantizedEngine {
+    store: WeightStore,
+    packed: BTreeMap<String, PackedQTensor>,
+}
+
+impl QuantizedEngine {
+    /// Quantize the store's quantized tensors at (phi, N) and pack them.
+    pub fn quantize_store(
+        store: &WeightStore,
+        quality: QualityConfig,
+        mode: AssignMode,
+    ) -> Result<QuantizedEngine> {
+        let em = EncodedModel { tensors: quantize_tensors(store, quality, mode)? };
+        QuantizedEngine::from_encoded(store, &em)
+    }
+
+    /// Build from codes that arrived over the channel (the edge side): the
+    /// shipped [`EncodedModel`] supplies the quantized tensors, `store`
+    /// supplies the fp32 head/biases.
+    pub fn from_encoded(store: &WeightStore, em: &EncodedModel) -> Result<QuantizedEngine> {
+        let mut packed = BTreeMap::new();
+        for et in &em.tensors {
+            store
+                .meta
+                .tensor(&et.name)
+                .with_context(|| format!("encoded tensor {} not in model meta", et.name))?;
+            packed.insert(et.name.clone(), PackedQTensor::pack(&et.tensor)?);
+        }
+        // drop the f32 forms the packed codes shadow — dense()/conv() never
+        // read them, so keeping them would double quantized-layer memory
+        let mut store = store.clone();
+        for name in packed.keys() {
+            store.remove(name);
+        }
+        Ok(QuantizedEngine { store, packed })
+    }
+
+    pub fn kind(&self) -> ModelKind {
+        self.store.kind
+    }
+
+    /// Fraction of packed codes the qgemm never touches (realized zero-skip).
+    pub fn skipped_fraction(&self) -> f64 {
+        let (mut total, mut skip) = (0u64, 0u64);
+        for p in self.packed.values() {
+            total += p.skip.total;
+            skip += p.skip.skippable;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            skip as f64 / total as f64
+        }
+    }
+
+    /// Forward one batch, dispatching each layer to qgemm or the f32 GEMM.
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        match self.store.kind {
+            ModelKind::Lenet => self.lenet(x),
+            ModelKind::Convnet => self.convnet(x),
+        }
+    }
+
+    fn dense(&self, x: &Tensor, name: &str) -> Result<Tensor> {
+        match self.packed.get(name) {
+            Some(p) => kernels::qgemm(x, p),
+            None => ops::matmul(x, self.store.get(name)?),
+        }
+    }
+
+    fn conv(&self, x: &Tensor, name: &str, same: bool) -> Result<Tensor> {
+        let Some(p) = self.packed.get(name) else {
+            let w = self.store.get(name)?;
+            return if same { ops::conv2d_same(x, w) } else { ops::conv2d(x, w) };
+        };
+        if p.shape.len() != 4 {
+            bail!("{name}: packed conv weight must be [kh,kw,C,OC], got {:?}", p.shape);
+        }
+        let (kh, kw, oc) = (p.shape[0], p.shape[1], p.shape[3]);
+        let padded;
+        let xin = if same {
+            padded = ops::pad_hw(x, kh / 2)?;
+            &padded
+        } else {
+            x
+        };
+        let (patches, oh, ow) = ops::im2col(xin, kh, kw)?;
+        let out = kernels::qgemm(&patches, p)?;
+        out.reshape(vec![xin.shape()[0], oh, ow, oc])
+    }
+
+    fn lenet(&self, x: &Tensor) -> Result<Tensor> {
+        if x.shape().len() != 4 || x.shape()[1] != 28 {
+            bail!("lenet expects [B,28,28,1], got {:?}", x.shape());
+        }
+        let b = x.shape()[0];
+        let h = ops::add_bias(&self.conv(x, "c1w", false)?, self.store.get("c1b")?)?.relu();
+        let h = ops::maxpool2(&h)?;
+        let h = ops::add_bias(&self.conv(&h, "c2w", false)?, self.store.get("c2b")?)?.relu();
+        let h = ops::maxpool2(&h)?;
+        let h = h.reshape(vec![b, 256])?;
+        let h = ops::add_bias(&self.dense(&h, "f1w")?, self.store.get("f1b")?)?.relu();
+        let h = ops::add_bias(&self.dense(&h, "f2w")?, self.store.get("f2b")?)?.relu();
+        ops::add_bias(&self.dense(&h, "f3w")?, self.store.get("f3b")?)
+    }
+
+    fn convnet(&self, x: &Tensor) -> Result<Tensor> {
+        if x.shape().len() != 4 || x.shape()[1] != 32 {
+            bail!("convnet expects [B,32,32,3], got {:?}", x.shape());
+        }
+        let b = x.shape()[0];
+        let mut h = x.clone();
+        for (kw, bw) in [("k1", "b1"), ("k2", "b2"), ("k3", "b3"), ("k4", "b4")] {
+            h = ops::add_bias(&self.conv(&h, kw, true)?, self.store.get(bw)?)?.relu();
+            h = ops::maxpool2(&h)?;
+        }
+        let h = h.reshape(vec![b, 256])?;
+        ops::add_bias(&self.dense(&h, "fcw")?, self.store.get("fcb")?)
+    }
 }
 
 /// Batched accuracy over a dataset slice.
@@ -134,5 +291,50 @@ mod tests {
         let logits = forward(&store, &x).unwrap();
         assert_eq!(logits.shape(), &[1, 10]);
         assert!(logits.data().iter().all(|&v| v == 0.0));
+    }
+
+    fn random_store(seed: u64) -> WeightStore {
+        let mut r = crate::util::rng::Rng::new(seed);
+        let meta = crate::model::meta::ModelMeta::lenet();
+        let mut s = WeightStore::empty(crate::model::meta::ModelKind::Lenet);
+        for t in &meta.tensors {
+            let data: Vec<f32> = (0..t.numel()).map(|_| (r.normal() * 0.1) as f32).collect();
+            s.set_unchecked(t.name, Tensor::new(t.shape.clone(), data).unwrap());
+        }
+        s
+    }
+
+    #[test]
+    fn quantized_engine_matches_decoded_store_forward() {
+        let store = random_store(3);
+        let quality = QualityConfig { phi: 4, group: 16 };
+        let engine =
+            QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+
+        // reference: decode the same quantization into f32 weights, run the
+        // plain f32 engine
+        let mut decoded = store.clone();
+        for tm in store.meta.quantized_tensors() {
+            let g = Grouping::nearest_divisor(&tm.shape, quality.group).unwrap();
+            let qt = quantize(store.get(tm.name).unwrap().data(), &tm.shape, g, 4,
+                AssignMode::SigmaSearch)
+            .unwrap();
+            decoded
+                .set(tm.name, Tensor::new(tm.shape.clone(), qt.decode()).unwrap())
+                .unwrap();
+        }
+
+        let mut r = crate::util::rng::Rng::new(9);
+        let xdata: Vec<f32> = (0..2 * 28 * 28).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![2, 28, 28, 1], xdata).unwrap();
+        let got = engine.forward(&x).unwrap();
+        let want = forward(&decoded, &x).unwrap();
+        assert_eq!(got.shape(), want.shape());
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-2, "qgemm engine vs decoded-store forward: {diff}");
+        // same predictions
+        assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&want));
+        assert!(engine.skipped_fraction() > 0.0);
+        assert_eq!(engine.kind(), crate::model::meta::ModelKind::Lenet);
     }
 }

@@ -7,9 +7,23 @@ use anyhow::{bail, Result};
 
 use super::Tensor;
 
-/// x [M,K] @ w [K,N] -> [M,N].  Plain ikj loop with row-accumulation; the
-/// hot serving path runs on PJRT, this is the oracle/fallback.
+/// x [M,K] @ w [K,N] -> [M,N] on the blocked, scoped-thread-parallel kernel
+/// ([`crate::kernels::blocked`]) — the host serving hot path.  Bitwise
+/// identical to [`matmul_naive`] (same per-element reduction order).
 pub fn matmul(x: &Tensor, w: &Tensor) -> Result<Tensor> {
+    let (xs, ws) = (x.shape(), w.shape());
+    if xs.len() != 2 || ws.len() != 2 || xs[1] != ws[0] {
+        bail!("matmul shapes {:?} x {:?}", xs, ws);
+    }
+    let (m, k, n) = (xs[0], xs[1], ws[1]);
+    let mut out = vec![0.0f32; m * n];
+    crate::kernels::blocked::matmul_into(&mut out, x.data(), w.data(), m, k, n);
+    Tensor::new(vec![m, n], out)
+}
+
+/// The original plain ikj loop with row-accumulation — kept as the oracle
+/// the blocked/parallel kernel and the code-domain qgemm are tested against.
+pub fn matmul_naive(x: &Tensor, w: &Tensor) -> Result<Tensor> {
     let (xs, ws) = (x.shape(), w.shape());
     if xs.len() != 2 || ws.len() != 2 || xs[1] != ws[0] {
         bail!("matmul shapes {:?} x {:?}", xs, ws);
@@ -35,14 +49,20 @@ pub fn matmul(x: &Tensor, w: &Tensor) -> Result<Tensor> {
 }
 
 /// Add a bias vector [N] to every row of [M,N] (or broadcast over last dim).
+/// Row-sliced vector adds — no per-element div/mod in the hot loop.
 pub fn add_bias(x: &Tensor, b: &Tensor) -> Result<Tensor> {
     let n = *x.shape().last().unwrap_or(&0);
     if b.shape() != [n] {
         bail!("bias shape {:?} vs last dim {}", b.shape(), n);
     }
     let mut out = x.data().to_vec();
-    for (i, v) in out.iter_mut().enumerate() {
-        *v += b.data()[i % n];
+    if n > 0 {
+        let bd = b.data();
+        for row in out.chunks_exact_mut(n) {
+            for (v, &bv) in row.iter_mut().zip(bd) {
+                *v += bv;
+            }
+        }
     }
     Tensor::new(x.shape().to_vec(), out)
 }
@@ -211,6 +231,28 @@ mod tests {
         let x = t(&[2, 3], &[0.0; 6]);
         let w = t(&[2, 2], &[0.0; 4]);
         assert!(matmul(&x, &w).is_err());
+        assert!(matmul_naive(&x, &w).is_err());
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_oracle() {
+        let mut r = crate::util::rng::Rng::new(11);
+        let xd: Vec<f32> = (0..19 * 77).map(|_| (r.normal()) as f32).collect();
+        let wd: Vec<f32> = (0..77 * 130).map(|_| (r.normal()) as f32).collect();
+        let x = t(&[19, 77], &xd);
+        let w = t(&[77, 130], &wd);
+        let fast = matmul(&x, &w).unwrap();
+        let slow = matmul_naive(&x, &w).unwrap();
+        assert_eq!(fast.data(), slow.data());
+    }
+
+    #[test]
+    fn add_bias_broadcasts_rows() {
+        let x = t(&[2, 3], &[0., 1., 2., 3., 4., 5.]);
+        let b = t(&[3], &[10., 20., 30.]);
+        assert_eq!(add_bias(&x, &b).unwrap().data(), &[10., 21., 32., 13., 24., 35.]);
+        let bad = t(&[2], &[1., 2.]);
+        assert!(add_bias(&x, &bad).is_err());
     }
 
     #[test]

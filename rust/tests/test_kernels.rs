@@ -1,0 +1,153 @@
+//! Property tests for the kernels layer (no artifacts needed):
+//!
+//! (a) code-domain `qgemm` equals the decode-then-fp32-matmul oracle —
+//!     exactly on dyadic data (where both paths are exact in f32), and
+//!     within tight tolerance on real quantized gaussian tensors;
+//! (b) the blocked/parallel matmul equals the naive ikj loop within 1e-5
+//!     (it is in fact bitwise identical — same reduction order);
+//! (c) the O(sort) sigma-search picks the identical (gamma, delta, codes)
+//!     as the naive 152-pass grid, including at ConvNet layer sizes.
+
+use qsq_edge::kernels::{qgemm_qt, PackedQTensor};
+use qsq_edge::quant::codes::Code;
+use qsq_edge::quant::qsq::{quantize, quantize_sigma_search_naive, AssignMode, QuantizedTensor};
+use qsq_edge::tensor::{ops, Tensor};
+use qsq_edge::util::prop::{check, forall, gen_weights};
+use qsq_edge::util::rng::Rng;
+
+/// Random codes + power-of-two scalars + integer activations: every
+/// intermediate of both GEMMs is exactly representable in f32.
+fn dyadic_case(seed: u64, m: usize, k: usize, oc: usize, group: usize) -> (Tensor, QuantizedTensor) {
+    let mut r = Rng::new(seed);
+    let levels = [0i32, 1, 2, 4, -1, -2, -4];
+    let codes: Vec<Code> = (0..k * oc)
+        .map(|_| Code::from_level(levels[r.below(7) as usize]).unwrap())
+        .collect();
+    let scalars: Vec<f32> = (0..(k / group) * oc)
+        .map(|_| (2.0f32).powi(r.range_i64(-2, 2) as i32))
+        .collect();
+    let qt = QuantizedTensor {
+        codes,
+        scalars,
+        k,
+        oc,
+        group,
+        phi: 4,
+        gamma: 0.5,
+        delta: 2.0,
+        shape: vec![k, oc],
+    };
+    let xdata: Vec<f32> = (0..m * k).map(|_| r.range_i64(-8, 8) as f32).collect();
+    (Tensor::new(vec![m, k], xdata).unwrap(), qt)
+}
+
+#[test]
+fn prop_qgemm_equals_decode_matmul_exactly_on_dyadic_data() {
+    forall(
+        25,
+        |r| r.next_u64(),
+        |&seed| {
+            // vary the shape with the seed too
+            let m = 1 + (seed % 7) as usize;
+            let group = [2usize, 4, 8][(seed % 3) as usize];
+            let k = group * (2 + (seed % 5) as usize);
+            let oc = 1 + (seed % 9) as usize;
+            let (x, qt) = dyadic_case(seed, m, k, oc, group);
+            let dec = Tensor::new(vec![k, oc], qt.decode()).unwrap();
+            let want = ops::matmul_naive(&x, &dec).unwrap();
+            let got = qgemm_qt(&x, &qt).unwrap();
+            check(
+                got.data() == want.data(),
+                &format!("qgemm != oracle at m={m} k={k} oc={oc} group={group}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_qgemm_close_on_real_quantized_tensors() {
+    forall(
+        10,
+        |r| gen_weights(r, 96 * 12, 0.2),
+        |w| {
+            let qt = quantize(w, &[96, 12], 8, 4, AssignMode::SigmaSearch).unwrap();
+            let mut r2 = Rng::new(w.len() as u64);
+            let xdata: Vec<f32> = (0..16 * 96).map(|_| (r2.normal() * 0.7) as f32).collect();
+            let x = Tensor::new(vec![16, 96], xdata).unwrap();
+            let dec = Tensor::new(vec![96, 12], qt.decode()).unwrap();
+            let want = ops::matmul_naive(&x, &dec).unwrap();
+            let got = qgemm_qt(&x, &qt).unwrap();
+            let diff = got.max_abs_diff(&want) as f64;
+            check(diff < 1e-3, &format!("qgemm drifted from oracle by {diff}"))
+        },
+    );
+}
+
+#[test]
+fn prop_blocked_matmul_matches_naive_within_1e5() {
+    forall(
+        20,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            let m = 1 + (r.below(96)) as usize;
+            let k = 1 + (r.below(300)) as usize;
+            let n = 1 + (r.below(200)) as usize;
+            let x = Tensor::new(vec![m, k], gen_weights(&mut r, m * k, 1.0)).unwrap();
+            let w = Tensor::new(vec![k, n], gen_weights(&mut r, k * n, 1.0)).unwrap();
+            let fast = ops::matmul(&x, &w).unwrap();
+            let slow = ops::matmul_naive(&x, &w).unwrap();
+            let diff = fast.max_abs_diff(&slow) as f64;
+            check(diff <= 1e-5, &format!("blocked vs naive diff {diff} at ({m},{k},{n})"))
+        },
+    );
+}
+
+#[test]
+fn prop_fast_sigma_search_identical_to_naive_grid() {
+    for phi in [1u32, 2, 4] {
+        forall(
+            8,
+            |r| gen_weights(r, 64 * 6, 0.25),
+            |w| {
+                let fast = quantize(w, &[64, 6], 8, phi, AssignMode::SigmaSearch).unwrap();
+                let naive = quantize_sigma_search_naive(w, &[64, 6], 8, phi).unwrap();
+                check(
+                    fast.gamma == naive.gamma
+                        && fast.delta == naive.delta
+                        && fast.codes == naive.codes,
+                    &format!(
+                        "phi={phi}: fast (g={}, d={}) != naive (g={}, d={})",
+                        fast.gamma, fast.delta, naive.gamma, naive.delta
+                    ),
+                )
+            },
+        );
+    }
+}
+
+#[test]
+fn fast_sigma_search_identical_at_convnet_layer_size() {
+    // ConvNet k3: [3,3,32,64] -> [288, 64], the shape the >=10x speedup
+    // claim is benchmarked at (benches/bench_kernels.rs)
+    let mut r = Rng::new(77);
+    let w = gen_weights(&mut r, 288 * 64, 0.1);
+    let shape = [3usize, 3, 32, 64];
+    let fast = quantize(&w, &shape, 16, 4, AssignMode::SigmaSearch).unwrap();
+    let naive = quantize_sigma_search_naive(&w, &shape, 16, 4).unwrap();
+    assert_eq!(fast.gamma, naive.gamma);
+    assert_eq!(fast.delta, naive.delta);
+    assert_eq!(fast.codes, naive.codes);
+    assert_eq!(fast.scalars, naive.scalars);
+}
+
+#[test]
+fn packed_tensor_skips_all_zero_columns() {
+    // an all-zero tensor packs to zero entries and qgemm returns zeros
+    let qt = quantize(&[0.0f32; 64], &[64, 1], 8, 4, AssignMode::Nearest).unwrap();
+    let p = PackedQTensor::pack(&qt).unwrap();
+    assert_eq!(p.skipped_fraction(), 1.0);
+    let x = Tensor::new(vec![2, 64], vec![1.0; 128]).unwrap();
+    let y = qgemm_qt(&x, &qt).unwrap();
+    assert!(y.data().iter().all(|&v| v == 0.0));
+}

@@ -1,0 +1,177 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The real crate needs the `xla_extension` native toolchain, which is not
+//! present in the offline build image.  This stub mirrors exactly the API
+//! surface `qsq_edge::runtime::client` uses, so the crate compiles and every
+//! non-PJRT code path (quantizer, codec, channel, host kernels, server with
+//! the host engine) works; any attempt to actually start a PJRT client
+//! returns an "unavailable" error at runtime, which the callers treat the
+//! same way as missing `artifacts/` (they skip or fall back to the host
+//! engine).  Swap this path dependency for the real `xla` crate to enable
+//! the PJRT serving path.
+
+#![allow(dead_code)]
+
+use std::fmt;
+
+/// Stub error: every fallible operation reports PJRT as unavailable.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT is unavailable in this offline build \
+         (rust/vendor/xla is a stub; swap in the real `xla` crate and the \
+         xla_extension toolchain to enable the PJRT path)"
+    ))
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S8,
+    S32,
+}
+
+/// Host-side literal value (shape + f32 storage; adequate for the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Literal {
+    pub fn scalar(v: f32) -> Literal {
+        Literal { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { shape: vec![v.len()], data: v.to_vec() }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(unavailable("Literal::reshape: element count mismatch"));
+        }
+        Ok(Literal {
+            shape: dims.iter().map(|&d| d as usize).collect(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        Ok(Literal {
+            shape: shape.to_vec(),
+            data: data.iter().map(|&b| b as f32).collect(),
+        })
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.shape.iter().map(|&d| d as i64).collect() })
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> Vec<i64> {
+        self.dims.clone()
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub (no PJRT)".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), vec![2, 2]);
+        assert!(Literal::vec1(&[1.0]).reshape(&[3]).is_err());
+    }
+}
