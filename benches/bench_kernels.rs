@@ -1,9 +1,15 @@
-//! Kernel benchmarks — the three hot paths this layer owns, each against its
-//! naive oracle, at real LeNet/ConvNet layer shapes:
+//! Kernel benchmarks — the hot paths the kernels layer owns, each against
+//! its naive oracle, at real LeNet/ConvNet layer shapes:
 //!
-//! * code-domain `qgemm` (packed codes, zero-skip, shift/add) vs
-//!   decode-to-f32 + naive matmul — the old serving path;
-//! * blocked/parallel f32 matmul vs the naive ikj loop;
+//! * code-domain `qgemm` v1 (entry-packed, single-thread reference) and v2
+//!   (plane-packed, row-parallel) vs decode-to-f32 + naive matmul — the old
+//!   serving path — and against each other;
+//! * the fused `qconv` (scratch-arena patch staging) vs the materialized
+//!   pad + im2col + qgemm2 pipeline it replaced, with the arena's
+//!   reuse/alloc counters printed so "zero per-request im2col allocations"
+//!   is visible in the output;
+//! * end-to-end engine forwards (f32 fused vs code-domain) on random stores;
+//! * blocked/microtiled f32 matmul vs the naive ikj loop;
 //! * O(sort) sigma-search quantization vs the naive 19x8 grid (152 full
 //!   assignment passes).
 //!
@@ -11,18 +17,39 @@
 //! perf trajectory is tracked across PRs.
 
 use qsq_edge::bench::{run_bench, write_json, BenchResult};
-use qsq_edge::kernels::{self, PackedQTensor};
+use qsq_edge::data::synth_store;
+use qsq_edge::device::QualityConfig;
+use qsq_edge::kernels::{self, PackedQTensor, PackedQTensorV2, Scratch};
+use qsq_edge::model::meta::ModelKind;
 use qsq_edge::quant::qsq::{matrix_dims, quantize, quantize_sigma_search_naive, AssignMode};
+use qsq_edge::quant::vectorize::Grouping;
+use qsq_edge::runtime::host::{self, QuantizedEngine};
 use qsq_edge::tensor::{ops, Tensor};
 use qsq_edge::util::prop::gen_weights;
 use qsq_edge::util::rng::Rng;
+
+/// A synthetic JSON entry carrying the scratch-arena counters under a
+/// *stable* name so cross-PR tooling can track the series: `items_per_iter`
+/// holds the reuse count and `iters` the alloc count (the timing fields are
+/// zero — this entry measures allocation behavior, not latency).
+fn scratch_entry(name: &str, stats: kernels::ScratchStats) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: stats.allocs as usize,
+        mean_s: 0.0,
+        median_s: 0.0,
+        p95_s: 0.0,
+        min_s: 0.0,
+        items_per_iter: stats.reuses as f64,
+    }
+}
 
 fn main() {
     println!("== bench_kernels ==");
     let mut results: Vec<BenchResult> = Vec::new();
     let mut r = Rng::new(0);
 
-    // --- qgemm vs decode + naive matmul at real layer shapes ----------------
+    // --- qgemm v1/v2 vs decode + naive matmul at real layer shapes ----------
     let qgemm_layers: &[(&str, usize, &[usize], usize)] = &[
         ("lenet-c2w[150,16]", 64, &[5, 5, 6, 16], 6),
         ("lenet-f1w[256,120]", 32, &[256, 120], 16),
@@ -33,6 +60,7 @@ fn main() {
         let w = gen_weights(&mut r, k * oc, 0.2);
         let qt = quantize(&w, shape, group, 4, AssignMode::SigmaSearch).unwrap();
         let packed = PackedQTensor::pack(&qt).unwrap();
+        let packed2 = PackedQTensorV2::pack(&qt).unwrap();
         let x = Tensor::new(vec![m, k], gen_weights(&mut r, m * k, 1.0)).unwrap();
         let items = (m * k * oc) as f64;
 
@@ -52,16 +80,103 @@ fn main() {
             kernels::qgemm(&x, &packed).unwrap()
         });
         println!("{}", fast.report());
+        let v2 = run_bench(&format!("qgemm2-planes       {name} m={m}"), 3, 20, items, || {
+            kernels::qgemm2(&x, &packed2).unwrap()
+        });
+        println!("{}", v2.report());
         println!(
-            "  -> qgemm speedup {:.2}x vs decode+matmul, {:.2}x vs predecoded matmul \
-             (zero-skip {:.1}% of codes)",
+            "  -> qgemm v1 speedup {:.2}x vs decode+matmul, {:.2}x vs predecoded; \
+             v2 speedup {:.2}x vs v1 (zero-skip {:.1}% of codes)",
             base.median_s / fast.median_s.max(1e-12),
             predec.median_s / fast.median_s.max(1e-12),
+            fast.median_s / v2.median_s.max(1e-12),
             100.0 * packed.skipped_fraction()
         );
         results.push(base);
         results.push(predec);
         results.push(fast);
+        results.push(v2);
+    }
+
+    // --- fused qconv vs the materialized pad+im2col+qgemm2 pipeline ---------
+    let conv_layers: &[(&str, &[usize], &[usize], bool)] = &[
+        ("lenet-c1[5,5,1,6]   b=32", &[5, 5, 1, 6], &[32, 28, 28, 1], false),
+        ("convnet-k2[3,3,32,32] b=8", &[3, 3, 32, 32], &[8, 16, 16, 32], true),
+    ];
+    let mut scratch = Scratch::new();
+    for &(name, wshape, xshape, same) in conv_layers {
+        let nw: usize = wshape.iter().product();
+        let w = gen_weights(&mut r, nw, 0.2);
+        let group = Grouping::nearest_divisor(wshape, 16).unwrap();
+        let qt = quantize(&w, wshape, group, 4, AssignMode::SigmaSearch).unwrap();
+        let p = PackedQTensorV2::pack(&qt).unwrap();
+        let nx: usize = xshape.iter().product();
+        let x = Tensor::new(xshape.to_vec(), gen_weights(&mut r, nx, 1.0)).unwrap();
+        let (kh, kw) = (wshape[0], wshape[1]);
+        // items = output elements * patch width (the GEMM work)
+        let pad = if same { kh / 2 } else { 0 };
+        let oh = xshape[1] + 2 * pad - kh + 1;
+        let ow = xshape[2] + 2 * pad - kw + 1;
+        let items = (xshape[0] * oh * ow * wshape[3] * kh * kw * wshape[2]) as f64;
+
+        let mat = run_bench(&format!("conv-materialized {name}"), 3, 15, items, || {
+            let padded;
+            let xin = if same {
+                padded = ops::pad_hw(&x, kh / 2).unwrap();
+                &padded
+            } else {
+                &x
+            };
+            let (patches, _, _) = ops::im2col(xin, kh, kw).unwrap();
+            kernels::qgemm2(&patches, &p).unwrap()
+        });
+        println!("{}", mat.report());
+        let fused = run_bench(&format!("conv-fused-arena  {name}"), 3, 15, items, || {
+            kernels::qconv(&x, &p, same, &mut scratch).unwrap()
+        });
+        println!("{}", fused.report());
+        println!(
+            "  -> fused-conv speedup {:.2}x vs materialized im2col",
+            mat.median_s / fused.median_s.max(1e-12)
+        );
+        results.push(mat);
+        results.push(fused);
+    }
+    println!(
+        "  scratch arena after fused convs: {} buffer reuses, {} allocs \
+         (warm iterations allocate no im2col buffers)",
+        scratch.stats.reuses, scratch.stats.allocs
+    );
+    results.push(scratch_entry("qconv-scratch-arena", scratch.stats));
+
+    // --- end-to-end engine forwards on random stores ------------------------
+    {
+        let store = synth_store(42, ModelKind::Lenet);
+        let quality = QualityConfig { phi: 4, group: 16 };
+        let engine =
+            QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+        let b = 32usize;
+        let xdata = gen_weights(&mut r, b * 28 * 28, 1.0);
+        let x = Tensor::new(vec![b, 28, 28, 1], xdata).unwrap();
+        let items = b as f64;
+        let mut s_f32 = Scratch::new();
+        let f32e = run_bench("engine-fwd lenet f32-fused   b=32", 2, 12, items, || {
+            host::forward_with(&store, &x, &mut s_f32).unwrap()
+        });
+        println!("{}", f32e.report());
+        let mut s_q = Scratch::new();
+        let qe = run_bench("engine-fwd lenet code-domain b=32", 2, 12, items, || {
+            engine.forward_with(&x, &mut s_q).unwrap()
+        });
+        println!("{}", qe.report());
+        println!(
+            "  -> code-domain engine {:.2}x vs f32 fused (zero-skip {:.1}%)",
+            f32e.median_s / qe.median_s.max(1e-12),
+            100.0 * engine.skipped_fraction()
+        );
+        results.push(f32e);
+        results.push(qe);
+        results.push(scratch_entry("engine-scratch-arena", s_q.stats));
     }
 
     // --- blocked/parallel f32 matmul vs the naive ikj loop ------------------

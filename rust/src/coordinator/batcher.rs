@@ -47,7 +47,12 @@ impl<T> BatchQueue<T> {
             return false;
         }
         g.queue.push_back(Pending { payload, enqueued: Instant::now() });
-        self.cv.notify_all();
+        // single-consumer queue: the inference worker is the only condvar
+        // waiter (push never blocks), so one wakeup per push suffices —
+        // notify_all would make every producer syscall-storm the same
+        // thread.  close() keeps notify_all as the belt-and-braces wakeup
+        // for that same worker.
+        self.cv.notify_one();
         true
     }
 
@@ -135,6 +140,45 @@ mod tests {
         assert!(!q.push(2));
         assert_eq!(q.pop_batch().unwrap().len(), 1);
         assert!(q.pop_batch().is_none());
+    }
+
+    #[test]
+    fn timeout_flush_fires_under_concurrent_pushers() {
+        // regression for the notify_one switch: with max_batch far above the
+        // offered load, every pop must come from the timeout path, and
+        // concurrent pushers re-notifying the single consumer must never
+        // stall it past the flush deadline
+        let q = Arc::new(BatchQueue::new(1024, Duration::from_millis(20)));
+        let total = 15;
+        let producers: Vec<_> = (0..3)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for i in 0..5 {
+                        assert!(q.push(p * 100 + i));
+                        thread::sleep(Duration::from_millis(7));
+                    }
+                })
+            })
+            .collect();
+        let mut got = 0;
+        while got < total {
+            let t0 = Instant::now();
+            let batch = q.pop_batch().expect("queue is never closed here");
+            assert!(!batch.is_empty());
+            // each flush must come from the max_delay timer, not a full
+            // batch — generous bound for slow CI
+            assert!(
+                t0.elapsed() < Duration::from_millis(1500),
+                "timeout flush stalled: {:?}",
+                t0.elapsed()
+            );
+            got += batch.len();
+        }
+        assert_eq!(got, total);
+        for p in producers {
+            p.join().unwrap();
+        }
     }
 
     #[test]

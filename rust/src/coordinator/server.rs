@@ -8,12 +8,16 @@
 //! ```
 //! Each connection is synchronous (request → response); concurrency comes
 //! from multiple connections feeding the shared [`BatchQueue`], which the
-//! worker drains in dynamic batches.  The worker executes on one of three
+//! worker drains in dynamic batches.  The worker executes on one of the
 //! engines ([`EngineSelect`]): the PJRT artifact (padded to the compiled
 //! batch size), the pure-rust blocked-GEMM f32 engine, or the code-domain
-//! [`QuantizedEngine`] (packed codes on qgemm).  `Auto` picks PJRT when the
-//! runtime and artifacts are present and falls back to the host engine
-//! otherwise, so the server also works in PJRT-less builds.
+//! [`QuantizedEngine`] (plane-packed codes on qgemm v2).  `Auto` is
+//! *batch-aware*: instead of picking one engine at startup it re-dispatches
+//! every popped batch — batches that fill enough of the compiled artifact
+//! run on PJRT (or the threaded f32 host engine when PJRT is absent), while
+//! small/singleton batches skip the padding waste and run on the low-latency
+//! code-domain engine.  The worker owns one [`Scratch`] arena, so the host
+//! paths stop allocating per request once warm.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -28,6 +32,7 @@ use anyhow::{bail, Context, Result};
 use super::batcher::{BatchQueue, Pending};
 use super::metrics::Metrics;
 use crate::device::QualityConfig;
+use crate::kernels::Scratch;
 use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::AssignMode;
@@ -36,10 +41,18 @@ use crate::runtime::host::{self, QuantizedEngine};
 use crate::tensor::{ops, Tensor};
 use crate::util::json::{self, Value};
 
+/// Quality the batch-aware `Auto` backend quantizes its small-batch engine
+/// at (the canonical phi=4, N=16 point the deploy pipeline defaults to).
+const AUTO_QUALITY: QualityConfig = QualityConfig { phi: 4, group: 16 };
+
 /// Which inference engine the worker thread runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineSelect {
-    /// PJRT if the runtime and artifacts load, else the host f32 engine.
+    /// Batch-aware hybrid: every popped batch is re-dispatched — to the
+    /// PJRT artifact when the batch fills enough of the compiled size
+    /// ([`batch_prefers_artifact`]; threaded f32 host engine when PJRT is
+    /// unavailable), and to the code-domain quantized engine for
+    /// small/singleton batches where padding waste would dominate.
     Auto,
     /// PJRT only; startup fails if it is unavailable.
     Pjrt,
@@ -75,17 +88,32 @@ impl Default for ServerConfig {
     }
 }
 
+/// The loaded PJRT pieces (client kept alive for the executable's lifetime).
+struct PjrtParts {
+    _rt: Runtime,
+    exe: Arc<Executable>,
+    /// Prebuilt argument vector: slot 0 is overwritten with each batch
+    /// tensor, slots 1.. hold the weights — wrapped once at startup so
+    /// dispatching a batch never re-copies the model.
+    args: Vec<ArgValue>,
+}
+
 /// The worker's engine (constructed on, and owned by, the worker thread —
 /// `Runtime` is not `Send`).
 enum Backend {
-    Pjrt {
-        /// Keeps the PJRT client alive for the executable's lifetime.
-        _rt: Runtime,
-        exe: Arc<Executable>,
-        weights: Vec<Tensor>,
-    },
+    Pjrt(PjrtParts),
     Host(WeightStore),
     Quant(QuantizedEngine),
+    /// Batch-aware hybrid ([`EngineSelect::Auto`]): each popped batch picks
+    /// PJRT (if loaded) or the f32 store for artifact-sized batches, and the
+    /// code-domain engine for small ones.  The f32 store is kept only when
+    /// PJRT is absent — with PJRT live it would never be read, and the
+    /// weights already sit in the prebuilt `PjrtParts::args` slots.
+    Hybrid {
+        pjrt: Option<PjrtParts>,
+        store: Option<WeightStore>,
+        quant: QuantizedEngine,
+    },
 }
 
 impl Backend {
@@ -94,36 +122,80 @@ impl Backend {
             Backend::Pjrt { .. } => "pjrt",
             Backend::Host(_) => "host-f32",
             Backend::Quant(_) => "host-qgemm",
+            Backend::Hybrid { .. } => "auto-hybrid",
         }
     }
 }
 
-fn pjrt_backend(artifacts: &Path, cfg: &ServerConfig, store: &WeightStore) -> Result<Backend> {
+/// The `threads_for`-style crossover of the batch-aware dispatch: running a
+/// padded artifact costs the full compiled batch regardless of occupancy,
+/// and the compiled kernels are roughly a few times faster per row than the
+/// host engines — so the artifact wins once a batch fills at least a
+/// quarter of the compiled size, and below that the padding waste hands the
+/// batch to the low-latency code-domain engine.
+pub fn batch_prefers_artifact(n: usize, artifact_batch: usize) -> bool {
+    n.saturating_mul(4) >= artifact_batch
+}
+
+fn pjrt_parts(artifacts: &Path, cfg: &ServerConfig, store: &WeightStore) -> Result<PjrtParts> {
     let mut rt = Runtime::new(artifacts)?;
     let (art, _) = super::router::artifact_for(cfg.model, cfg.batch)?;
     let exe = rt.load(&art)?;
-    let weights = store.ordered().into_iter().cloned().collect();
-    Ok(Backend::Pjrt { _rt: rt, exe, weights })
+    let mut args = vec![ArgValue::F32(Tensor::zeros(vec![0]))];
+    args.extend(store.ordered().into_iter().map(|t| ArgValue::F32(t.clone())));
+    Ok(PjrtParts { _rt: rt, exe, args })
 }
 
 fn build_backend(artifacts: &Path, cfg: &ServerConfig) -> Result<Backend> {
     let store = WeightStore::load(artifacts, cfg.model)?;
     match cfg.engine {
-        EngineSelect::Pjrt => pjrt_backend(artifacts, cfg, &store),
+        EngineSelect::Pjrt => Ok(Backend::Pjrt(pjrt_parts(artifacts, cfg, &store)?)),
         EngineSelect::Host => Ok(Backend::Host(store)),
         EngineSelect::HostQuantized(q) => Ok(Backend::Quant(QuantizedEngine::quantize_store(
             &store,
             q,
             AssignMode::SigmaSearch,
         )?)),
-        EngineSelect::Auto => match pjrt_backend(artifacts, cfg, &store) {
-            Ok(b) => Ok(b),
-            Err(e) => {
-                eprintln!("server: PJRT unavailable ({e:#}); falling back to host engine");
-                Ok(Backend::Host(store))
+        EngineSelect::Auto => {
+            let pjrt = match pjrt_parts(artifacts, cfg, &store) {
+                Ok(p) => Some(p),
+                Err(e) => {
+                    eprintln!(
+                        "server: PJRT unavailable ({e:#}); host engines will serve all batches"
+                    );
+                    None
+                }
+            };
+            // a quantization failure must not take Auto down — degrade to
+            // the pre-hybrid behavior (PJRT, or the plain f32 engine)
+            match QuantizedEngine::quantize_store(&store, AUTO_QUALITY, AssignMode::SigmaSearch) {
+                Ok(quant) => {
+                    let store = if pjrt.is_none() { Some(store) } else { None };
+                    Ok(Backend::Hybrid { pjrt, store, quant })
+                }
+                Err(e) => {
+                    eprintln!(
+                        "server: quantized engine unavailable ({e:#}); \
+                         batch-aware dispatch disabled"
+                    );
+                    match pjrt {
+                        Some(pj) => Ok(Backend::Pjrt(pj)),
+                        None => Ok(Backend::Host(store)),
+                    }
+                }
             }
-        },
+        }
     }
+}
+
+/// Run one batch on the PJRT artifact, padding to the compiled batch size.
+/// Only the batch tensor slot of the prebuilt args is replaced.
+fn run_pjrt(pj: &mut PjrtParts, batch: &[Pending<Job>], cfg: &ServerConfig) -> Result<Vec<usize>> {
+    let (h, w, c) = cfg.model.input_hwc();
+    let x = batch_tensor(batch, cfg.batch, h, w, c)?;
+    pj.args[0] = ArgValue::F32(x);
+    let out = pj.exe.run(&pj.args)?;
+    Ok(ops::argmax_rows(&out[0]))
 }
 
 /// Copy a dynamic batch into one [rows, H, W, C] tensor; `rows` beyond the
@@ -179,7 +251,7 @@ impl Server {
         let wm = metrics.clone();
         let wcfg = cfg.clone();
         let worker = thread::Builder::new().name("infer-worker".into()).spawn(move || {
-            let backend = match build_backend(&artifacts, &wcfg) {
+            let mut backend = match build_backend(&artifacts, &wcfg) {
                 Ok(b) => {
                     let _ = ready_tx.send(Ok(()));
                     b
@@ -191,26 +263,44 @@ impl Server {
             };
             wm.inc(&format!("engine_{}", backend.name()), 1);
             let (h, w, c) = wcfg.model.input_hwc();
+            // one arena per worker: the host engines stop allocating per
+            // request once the buffers are warm
+            let mut scratch = Scratch::new();
 
             while let Some(batch) = wq.pop_batch() {
                 let t0 = Instant::now();
                 let n = batch.len();
-                let preds: Result<Vec<usize>> = match &backend {
-                    Backend::Pjrt { exe, weights, .. } => {
-                        // pad to the compiled batch with zeros
-                        batch_tensor(&batch, wcfg.batch, h, w, c).and_then(|x| {
-                            let mut args = vec![ArgValue::F32(x)];
-                            args.extend(weights.iter().map(|t| ArgValue::F32(t.clone())));
-                            let out = exe.run(&args)?;
-                            Ok(ops::argmax_rows(&out[0]))
-                        })
-                    }
+                let preds: Result<Vec<usize>> = match &mut backend {
+                    Backend::Pjrt(pj) => run_pjrt(pj, &batch, &wcfg),
                     Backend::Host(store) => batch_tensor(&batch, n, h, w, c)
-                        .and_then(|x| host::forward(store, &x))
+                        .and_then(|x| host::forward_with(store, &x, &mut scratch))
                         .map(|logits| ops::argmax_rows(&logits)),
                     Backend::Quant(engine) => batch_tensor(&batch, n, h, w, c)
-                        .and_then(|x| engine.forward(&x))
+                        .and_then(|x| engine.forward_with(&x, &mut scratch))
                         .map(|logits| ops::argmax_rows(&logits)),
+                    Backend::Hybrid { pjrt, store, quant } => {
+                        // batch-aware re-dispatch: artifact-sized batches on
+                        // PJRT (or the threaded f32 engine), small ones on
+                        // the code-domain engine
+                        match (batch_prefers_artifact(n, wcfg.batch), pjrt, store) {
+                            (true, Some(pj), _) => {
+                                wm.inc("dispatch_pjrt", 1);
+                                run_pjrt(pj, &batch, &wcfg)
+                            }
+                            (true, None, Some(store)) => {
+                                wm.inc("dispatch_host_f32", 1);
+                                batch_tensor(&batch, n, h, w, c)
+                                    .and_then(|x| host::forward_with(store, &x, &mut scratch))
+                                    .map(|logits| ops::argmax_rows(&logits))
+                            }
+                            _ => {
+                                wm.inc("dispatch_host_quant", 1);
+                                batch_tensor(&batch, n, h, w, c)
+                                    .and_then(|x| quant.forward_with(&x, &mut scratch))
+                                    .map(|logits| ops::argmax_rows(&logits))
+                            }
+                        }
+                    }
                 };
                 match preds {
                     Ok(preds) => {
@@ -421,6 +511,19 @@ mod tests {
         assert!(parse_request("{\"id\":1,\"pixels\":[0.0]}", 2).is_err());
         assert!(parse_request("{\"pixels\":[0.0,1.0]}", 2).is_err());
         assert!(parse_request("not json", 2).is_err());
+    }
+
+    #[test]
+    fn crossover_prefers_artifact_only_when_batch_fills_it() {
+        // singletons and near-empty batches stay on the host-quant engine
+        assert!(!batch_prefers_artifact(1, 32));
+        assert!(!batch_prefers_artifact(7, 32));
+        // a quarter-full (or better) batch amortizes the padding
+        assert!(batch_prefers_artifact(8, 32));
+        assert!(batch_prefers_artifact(32, 32));
+        // degenerate compiled sizes never panic
+        assert!(batch_prefers_artifact(1, 1));
+        assert!(batch_prefers_artifact(0, 0));
     }
 
     #[test]

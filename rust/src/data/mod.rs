@@ -5,4 +5,4 @@
 
 pub mod synth;
 
-pub use synth::RequestGen;
+pub use synth::{synth_store, RequestGen};

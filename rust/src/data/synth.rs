@@ -4,9 +4,24 @@
 //! colour patches), but shape- and range-compatible, so the server's input
 //! validation and the batcher see realistic tensors at line rate.
 
-use crate::model::meta::ModelKind;
+use crate::model::meta::{ModelKind, ModelMeta};
+use crate::model::store::WeightStore;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// A seeded random [`WeightStore`] with the exact tensor roster of `kind` —
+/// the artifact-free stand-in that engine tests and kernel benches forward
+/// through (weights ~ N(0, 0.1), nothing trained).
+pub fn synth_store(seed: u64, kind: ModelKind) -> WeightStore {
+    let mut r = Rng::new(seed);
+    let meta = ModelMeta::of(kind);
+    let mut s = WeightStore::empty(kind);
+    for t in &meta.tensors {
+        let data: Vec<f32> = (0..t.numel()).map(|_| (r.normal() * 0.1) as f32).collect();
+        s.set_unchecked(t.name, Tensor::new(t.shape.clone(), data).unwrap());
+    }
+    s
+}
 
 /// Streaming generator of (image, nominal_label) pairs for one model.
 pub struct RequestGen {

@@ -5,7 +5,7 @@ use crate::hw::energy::pj;
 use crate::quant::codes::Code;
 
 /// Skip statistics over a quantized weight tensor.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SkipStats {
     pub total: u64,
     pub skippable: u64,

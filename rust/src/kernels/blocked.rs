@@ -1,38 +1,97 @@
 //! Cache-blocked, scoped-thread-parallel f32 GEMM (std only).
 //!
 //! The naive ikj loop in `tensor/ops.rs` streams the whole `w` matrix through
-//! cache once per output row.  This kernel tiles columns (`TILE_J`) and the
-//! reduction dimension (`TILE_K`) so each `w` tile is reused across a whole
-//! band of rows while it is hot, and splits the row dimension across scoped
-//! threads for large problems.
+//! cache once per output row.  This kernel tiles columns (`TILE_J`) so a `w`
+//! column tile is reused across a whole band of rows while hot, and runs a
+//! 4x8 register microtile ([`MR`] x [`NR`]) inside each tile: 32 accumulators
+//! live in registers across the entire `k` reduction, one 8-wide `w` strip is
+//! loaded once per four rows instead of once per row, and the accumulator
+//! arrays are shaped for the autovectorizer's lanes.  The row dimension
+//! splits across scoped threads for large problems
+//! ([`crate::kernels::for_each_row_band`]).
 //!
 //! Numerical contract: for every output element the reduction runs over `k`
-//! in ascending order with the same zero-activation skip as the naive loop,
-//! so the result is bitwise identical to `ops::matmul_naive` (threading
-//! partitions whole rows and cannot reorder any per-element accumulation).
+//! in ascending order into a single accumulator starting at +0.0, with the
+//! same zero-activation skip as the naive loop, so the result is bitwise
+//! identical to `ops::matmul_naive` (threading partitions whole rows, and
+//! spilling a register accumulator into a zeroed output adds +0.0, which
+//! cannot change the value).
 
-/// Column-tile width: one tile of `out`/`w` rows stays resident in L1.
+/// Column-tile width: one tile of `out`/`w` columns stays resident in L1.
 pub const TILE_J: usize = 64;
-/// Reduction-tile depth: `TILE_K` rows of a `w` column tile fit in L2.
-pub const TILE_K: usize = 128;
+/// Microtile rows: how many `out` rows accumulate in registers at once.
+pub const MR: usize = 4;
+/// Microtile columns: the register accumulator width per row.
+pub const NR: usize = 8;
 /// Below this many MACs the blocked single-thread path runs un-threaded.
-const PAR_THRESHOLD_MACS: usize = 1 << 20;
+pub(crate) const PAR_THRESHOLD_MACS: usize = 1 << 20;
 
-/// `out[M,N] += x[M,K] @ w[K,N]` for one band of rows, blocked over (j, k).
-fn gemm_band(out: &mut [f32], xd: &[f32], wd: &[f32], k: usize, n: usize) {
+/// `out[rows,N] += x[rows,K] @ w[K,N]` for one band of rows (`out` zeroed by
+/// the caller), blocked over columns with a [`MR`]x[`NR`] register microtile.
+pub fn gemm_band(out: &mut [f32], xd: &[f32], wd: &[f32], k: usize, n: usize) {
+    if n == 0 || k == 0 {
+        return;
+    }
     let rows = out.len() / n;
     for jj in (0..n).step_by(TILE_J) {
         let jend = (jj + TILE_J).min(n);
-        for kk in (0..k).step_by(TILE_K) {
-            let kend = (kk + TILE_K).min(k);
-            for i in 0..rows {
-                let orow = &mut out[i * n + jj..i * n + jend];
+        let mut j = jj;
+        while j + NR <= jend {
+            // MR-row quads: 32 register accumulators across the whole k loop
+            let mut i = 0;
+            while i + MR <= rows {
+                let mut acc = [[0.0f32; NR]; MR];
+                for kx in 0..k {
+                    let wrow = &wd[kx * n + j..kx * n + j + NR];
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let a = xd[(i + r) * k + kx];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        for (c, &wv) in accr.iter_mut().zip(wrow) {
+                            *c += a * wv;
+                        }
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate() {
+                    let orow = &mut out[(i + r) * n + j..(i + r) * n + j + NR];
+                    for (o, &c) in orow.iter_mut().zip(accr) {
+                        *o += c;
+                    }
+                }
+                i += MR;
+            }
+            // leftover rows: one NR-wide accumulator row at a time
+            while i < rows {
+                let mut accr = [0.0f32; NR];
                 let xrow = &xd[i * k..(i + 1) * k];
-                for (kx, &a) in xrow.iter().enumerate().take(kend).skip(kk) {
+                for (kx, &a) in xrow.iter().enumerate() {
                     if a == 0.0 {
                         continue;
                     }
-                    let wrow = &wd[kx * n + jj..kx * n + jend];
+                    let wrow = &wd[kx * n + j..kx * n + j + NR];
+                    for (c, &wv) in accr.iter_mut().zip(wrow) {
+                        *c += a * wv;
+                    }
+                }
+                let orow = &mut out[i * n + j..i * n + j + NR];
+                for (o, &c) in orow.iter_mut().zip(&accr) {
+                    *o += c;
+                }
+                i += 1;
+            }
+            j += NR;
+        }
+        // leftover columns (< NR): direct accumulation, still k-ascending
+        if j < jend {
+            for i in 0..rows {
+                let xrow = &xd[i * k..(i + 1) * k];
+                for (kx, &a) in xrow.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let wrow = &wd[kx * n + j..kx * n + jend];
+                    let orow = &mut out[i * n + j..i * n + jend];
                     for (o, &wv) in orow.iter_mut().zip(wrow) {
                         *o += a * wv;
                     }
@@ -42,20 +101,10 @@ fn gemm_band(out: &mut [f32], xd: &[f32], wd: &[f32], k: usize, n: usize) {
     }
 }
 
-/// Number of worker threads for an `m x k x n` GEMM.
-fn threads_for(m: usize, k: usize, n: usize) -> usize {
-    let macs = m.saturating_mul(k).saturating_mul(n);
-    if macs < PAR_THRESHOLD_MACS || m < 2 {
-        return 1;
-    }
-    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
-    cores.min(m).min(16)
-}
-
 /// `out[M,N] = x[M,K] @ w[K,N]` (caller provides a zeroed `out`).
 ///
-/// Dispatches to the blocked kernel, parallelized over row bands with scoped
-/// threads when the problem is large enough to amortize spawn cost.
+/// Dispatches to the microtiled kernel, parallelized over row bands with
+/// scoped threads when the problem is large enough to amortize spawn cost.
 pub fn matmul_into(out: &mut [f32], xd: &[f32], wd: &[f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(out.len(), m * n);
     debug_assert_eq!(xd.len(), m * k);
@@ -63,22 +112,10 @@ pub fn matmul_into(out: &mut [f32], xd: &[f32], wd: &[f32], m: usize, k: usize, 
     if m == 0 || n == 0 {
         return;
     }
-    let nthreads = threads_for(m, k, n);
-    if nthreads <= 1 {
-        gemm_band(out, xd, wd, k, n);
-        return;
-    }
-    // uniform row bands (the last one may be short); each thread owns one
-    // disjoint band of `out` and the matching rows of `x`
-    let rows_per_band = m.div_ceil(nthreads);
-    std::thread::scope(|scope| {
-        for (oband, xband) in out
-            .chunks_mut(rows_per_band * n)
-            .zip(xd.chunks(rows_per_band * k))
-        {
-            scope.spawn(move || gemm_band(oband, xband, wd, k, n));
-        }
-    });
+    let macs = m.saturating_mul(k).saturating_mul(n);
+    let nthreads = super::threads_for_rows(m, macs, PAR_THRESHOLD_MACS);
+    let band = |_: usize, oband: &mut [f32], xband: &[f32]| gemm_band(oband, xband, wd, k, n);
+    super::for_each_row_band(out, xd, m, k, n, nthreads, band);
 }
 
 #[cfg(test)]
@@ -109,10 +146,13 @@ mod tests {
 
     #[test]
     fn matches_naive_various_shapes() {
-        // exercise tile remainders, single rows/cols, and the threaded path
+        // exercise microtile remainders (rows % MR, cols % NR, tile edges),
+        // single rows/cols, and the threaded path
         for (si, &(m, k, n)) in [
             (1usize, 1usize, 1usize),
             (3, 5, 7),
+            (5, 9, 9),
+            (6, 13, 17),
             (17, 130, 65),
             (64, 256, 120),
             (33, 100, 200),
@@ -126,6 +166,20 @@ mod tests {
             matmul_into(&mut out, &xd, &wd, m, k, n);
             let want = naive(&xd, &wd, m, k, n);
             assert_eq!(out, want, "shape ({m},{k},{n}) diverged from naive");
+        }
+    }
+
+    #[test]
+    fn microtile_bitwise_on_dyadic_data() {
+        // integer data: every accumulation is exact, so any divergence is a
+        // structural bug rather than float reassociation
+        let mut r = Rng::new(41);
+        for (m, k, n) in [(4usize, 8usize, 8usize), (7, 11, 19), (9, 16, 8)] {
+            let xd: Vec<f32> = (0..m * k).map(|_| r.range_i64(-4, 4) as f32).collect();
+            let wd: Vec<f32> = (0..k * n).map(|_| r.range_i64(-4, 4) as f32).collect();
+            let mut out = vec![0.0f32; m * n];
+            gemm_band(&mut out, &xd, &wd, k, n);
+            assert_eq!(out, naive(&xd, &wd, m, k, n), "dyadic ({m},{k},{n})");
         }
     }
 
@@ -144,5 +198,6 @@ mod tests {
     fn zero_sized_ok() {
         let mut out: Vec<f32> = vec![];
         matmul_into(&mut out, &[], &[], 0, 4, 0);
+        gemm_band(&mut out, &[], &[], 0, 0);
     }
 }

@@ -3,27 +3,197 @@
 //! Everything under `kernels/` exists to make inference run as fast as the
 //! host hardware allows while staying dependency-free (std only):
 //!
-//! * [`blocked`] — cache-blocked, scoped-thread-parallel f32 GEMM.  This is
-//!   what [`crate::tensor::ops::matmul`] (and therefore `im2col` conv and the
+//! * [`blocked`] — cache-blocked f32 GEMM with a 4x8 register-accumulator
+//!   microtile, parallelized over row bands with scoped threads.  This is
+//!   what [`crate::tensor::ops::matmul`] (and therefore im2col conv and the
 //!   fp32 model head) dispatches to; the original ikj loop survives as
 //!   [`crate::tensor::ops::matmul_naive`], the bitwise oracle.
-//! * [`qgemm`] — the code-domain GEMM.  It consumes a packed
-//!   [`crate::quant::QuantizedTensor`] directly: zero codes are skipped at
-//!   pack time, each surviving code contributes via sign/shift-built tables
-//!   (no multiplies in the inner loop), and the per-group `alpha` scales each
-//!   partial sum exactly once.  This turns the paper's decode hardware story
-//!   (Table II: shift + invert + skip) into actual host-side speedup, and is
-//!   what [`crate::runtime::host::QuantizedEngine`] runs quantized layers on.
+//! * [`qgemm`] — the code-domain GEMM, in two generations.  v1
+//!   ([`PackedQTensor`] + [`qgemm`](qgemm::qgemm)) is the retained
+//!   single-thread reference: zero codes dropped at pack time, shift/add
+//!   contribution tables, hoisted per-group alpha.  v2
+//!   ([`PackedQTensorV2`] + [`qgemm2`]) repacks the surviving codes into six
+//!   per-level *offset planes* per (group, column) cell, so the inner loop is
+//!   a straight contiguous sum per plane (lane-friendly for the
+//!   autovectorizer, no 8-way LUT select, half the bytes per entry) and the
+//!   row dimension is split across scoped threads with the same band scheme
+//!   as the blocked f32 kernel.  v2 is what the serving engine runs.
+//! * [`qconv`] — the fused conv pipeline: im2col patches are staged
+//!   chunk-by-chunk into a reusable [`Scratch`] arena and multiplied
+//!   band-by-band on the plane-packed qgemm (or the f32 microkernel), so the
+//!   full patch matrix is never materialized and steady-state serving
+//!   allocates nothing per request.
 //!
-//! The third member of this PR's kernel set lives with the quantizer it
+//! The remaining member of the kernel set lives with the quantizer it
 //! accelerates: [`crate::quant::sigma_fast`] scores the whole 19x8
 //! (gamma, delta) grid from sorted-|w| prefix sums in O(sort) instead of 152
 //! full assignment passes.
 //!
-//! `benches/bench_kernels.rs` tracks all three against their naive oracles
-//! and emits `BENCH_kernels.json` for cross-PR perf trajectories.
+//! `benches/bench_kernels.rs` tracks all of these against their naive
+//! oracles and emits `BENCH_kernels.json` for cross-PR perf trajectories.
 
 pub mod blocked;
+pub mod qconv;
 pub mod qgemm;
 
-pub use qgemm::{qgemm, qgemm_qt, PackedQTensor};
+pub use qconv::{fconv_into, qconv, qconv_into};
+pub use qgemm::{
+    qgemm, qgemm2, qgemm2_into, qgemm2_qt, qgemm2_threads, qgemm_qt, PackedQTensor,
+    PackedQTensorV2,
+};
+
+/// Decide how many scoped worker threads a row-parallel kernel should use:
+/// one unless the total inner-loop work amortizes spawn cost, then at most
+/// one per row, per core, capped at 16 (diminishing returns on the band
+/// sizes this crate serves).
+pub fn threads_for_rows(m: usize, total_ops: usize, par_threshold: usize) -> usize {
+    if total_ops < par_threshold || m < 2 {
+        return 1;
+    }
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    cores.min(m).min(16)
+}
+
+/// Split `out` (`m` rows of `out_cols`) and `x` (`m` rows of `x_cols`) into
+/// matching row bands and run `band(first_row, out_band, x_band)` on each
+/// from its own scoped thread.  Bands partition whole rows, so per-element
+/// reduction order is untouched: a threaded run is bitwise identical to
+/// `band(0, out, x)`.
+pub fn for_each_row_band<F>(
+    out: &mut [f32],
+    x: &[f32],
+    m: usize,
+    x_cols: usize,
+    out_cols: usize,
+    nthreads: usize,
+    band: F,
+) where
+    F: Fn(usize, &mut [f32], &[f32]) + Sync,
+{
+    if m == 0 {
+        return;
+    }
+    if nthreads <= 1 || x_cols == 0 || out_cols == 0 {
+        band(0, out, x);
+        return;
+    }
+    let rows_per_band = m.div_ceil(nthreads);
+    std::thread::scope(|scope| {
+        for (bi, (oband, xband)) in out
+            .chunks_mut(rows_per_band * out_cols)
+            .zip(x.chunks(rows_per_band * x_cols))
+            .enumerate()
+        {
+            let bref = &band;
+            scope.spawn(move || bref(bi * rows_per_band, oband, xband));
+        }
+    });
+}
+
+/// Counters for the scratch arena: how often a kernel found a warm buffer
+/// already big enough (`reuses`) vs had to grow one (`allocs`).  In steady
+/// state serving, `allocs` stops moving after the first request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    pub reuses: u64,
+    pub allocs: u64,
+}
+
+/// Reusable per-worker buffers for the fused serving pipeline.  One arena
+/// lives on each inference worker (and inside every one-shot `forward`), so
+/// im2col patch staging, SAME-conv padding, and layer activations stop
+/// allocating once the buffers have grown to the largest layer.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// im2col patch staging — per-thread chunk slabs, never the full matrix.
+    pub patches: Vec<f32>,
+    /// SAME-conv zero-pad staging.
+    pub padded: Vec<f32>,
+    /// Activation ping buffer (layer inputs / pooled outputs).
+    pub act_a: Vec<f32>,
+    /// Activation pong buffer (conv / dense outputs before pooling).
+    pub act_b: Vec<f32>,
+    pub stats: ScratchStats,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
+/// Grow `buf` to hold at least `len` elements without touching existing
+/// contents (callers overwrite their slice before reading it).  Counts the
+/// warm-hit/grow in `stats`.
+pub fn ensure_cap(buf: &mut Vec<f32>, len: usize, stats: &mut ScratchStats) {
+    if buf.len() >= len {
+        stats.reuses += 1;
+        return;
+    }
+    if buf.capacity() >= len {
+        stats.reuses += 1;
+    } else {
+        stats.allocs += 1;
+    }
+    buf.resize(len, 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_for_rows_thresholds() {
+        assert_eq!(threads_for_rows(64, 100, 1 << 20), 1, "small work stays serial");
+        assert_eq!(threads_for_rows(1, usize::MAX, 1), 1, "one row stays serial");
+        let t = threads_for_rows(64, 1 << 22, 1 << 20);
+        assert!(t >= 1 && t <= 16);
+        assert!(threads_for_rows(2, 1 << 22, 1 << 20) <= 2, "never more threads than rows");
+    }
+
+    #[test]
+    fn row_bands_cover_all_rows_once() {
+        let (m, xc, oc) = (7, 3, 2);
+        let x: Vec<f32> = (0..m * xc).map(|v| v as f32).collect();
+        let mut out = vec![0.0f32; m * oc];
+        // band kernel: out[i][j] = first_row + local_i (checks offsets line up)
+        for_each_row_band(&mut out, &x, m, xc, oc, 3, |row0, ob, xb| {
+            let rows = ob.len() / oc;
+            assert_eq!(xb.len(), rows * xc);
+            for i in 0..rows {
+                for j in 0..oc {
+                    ob[i * oc + j] += (row0 + i) as f32;
+                }
+            }
+        });
+        for i in 0..m {
+            for j in 0..oc {
+                assert_eq!(out[i * oc + j], i as f32, "row {i} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_bands_single_thread_and_empty() {
+        let mut out = vec![0.0f32; 4];
+        for_each_row_band(&mut out, &[1.0, 2.0], 2, 1, 2, 1, |row0, ob, _| {
+            assert_eq!(row0, 0);
+            ob.fill(5.0);
+        });
+        assert_eq!(out, vec![5.0; 4]);
+        let mut empty: Vec<f32> = vec![];
+        for_each_row_band(&mut empty, &[], 0, 4, 4, 8, |_, _, _| panic!("no rows, no bands"));
+    }
+
+    #[test]
+    fn ensure_cap_counts_reuse() {
+        let mut stats = ScratchStats::default();
+        let mut buf = Vec::new();
+        ensure_cap(&mut buf, 64, &mut stats);
+        assert_eq!((stats.allocs, stats.reuses), (1, 0));
+        assert_eq!(buf.len(), 64);
+        ensure_cap(&mut buf, 32, &mut stats);
+        ensure_cap(&mut buf, 64, &mut stats);
+        assert_eq!((stats.allocs, stats.reuses), (1, 2), "warm buffer must not realloc");
+    }
+}

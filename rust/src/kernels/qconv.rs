@@ -1,0 +1,354 @@
+//! Fused conv pipeline: im2col patches staged chunk-by-chunk into the
+//! [`Scratch`] arena and multiplied band-by-band, so the full patch matrix
+//! is never materialized and steady-state serving allocates nothing.
+//!
+//! The classic path (`ops::conv2d`) builds the whole `[B*H'*W', kh*kw*C]`
+//! patch matrix — for ConvNet's first layer at batch 32 that is a ~3.5 MB
+//! allocation per request before the GEMM even starts.  Here each scoped
+//! thread owns one band of output rows and one small staging slab
+//! ([`CHUNK`] patch rows); it alternates staging a slab with multiplying it
+//! on the band kernel, so patch data is consumed while still hot in L1/L2.
+//! The same driver serves both kernels:
+//!
+//! * [`qconv_into`] — code-domain: the slab hits
+//!   [`super::qgemm::qgemm2_band`] (plane-packed, multiplication-free);
+//! * [`fconv_into`] — f32: the slab hits [`super::blocked::gemm_band`]
+//!   (4x8 register microtile).
+//!
+//! Both produce output bitwise identical to pad + im2col + (q)gemm over the
+//! materialized matrix: chunking only splits *rows* of the patch matrix, and
+//! every per-element reduction runs in the same order.
+
+use anyhow::{bail, Result};
+
+use super::blocked;
+use super::qgemm::{qgemm2_band, PackedQTensorV2, QGEMM_PAR_THRESHOLD};
+use super::{ensure_cap, threads_for_rows, Scratch, ScratchStats};
+use crate::tensor::ops;
+use crate::tensor::Tensor;
+
+/// Patch rows staged per slab: small enough that a slab stays cache-hot,
+/// large enough to amortize the staging loop.
+pub const CHUNK: usize = 32;
+
+/// Resolved conv geometry (pre/post padding and output dims).
+struct Geom {
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    /// Post-padding input dims.
+    h2: usize,
+    w2: usize,
+    kh: usize,
+    kw: usize,
+    oc: usize,
+    pad: usize,
+    /// Patch width `kh*kw*c`.
+    kcols: usize,
+    oh: usize,
+    ow: usize,
+    /// Output rows `b*oh*ow`.
+    rows: usize,
+}
+
+fn geometry(
+    xlen: usize,
+    (b, h, w, c): (usize, usize, usize, usize),
+    (kh, kw, oc): (usize, usize, usize),
+    same: bool,
+) -> Result<Geom> {
+    if xlen != b * h * w * c {
+        bail!("conv input len {xlen} != {b}x{h}x{w}x{c}");
+    }
+    let pad = if same { kh / 2 } else { 0 };
+    let (h2, w2) = (h + 2 * pad, w + 2 * pad);
+    if h2 < kh || w2 < kw {
+        bail!("conv window {kh}x{kw} larger than input {h2}x{w2}");
+    }
+    let (oh, ow) = (h2 - kh + 1, w2 - kw + 1);
+    Ok(Geom {
+        b,
+        h,
+        w,
+        c,
+        h2,
+        w2,
+        kh,
+        kw,
+        oc,
+        pad,
+        kcols: kh * kw * c,
+        oh,
+        ow,
+        rows: b * oh * ow,
+    })
+}
+
+/// Stage the zero-padded input into the `padded` scratch buffer (or pass
+/// the input through untouched for VALID convs).
+fn staged_input<'a>(
+    xd: &'a [f32],
+    g: &Geom,
+    padded: &'a mut Vec<f32>,
+    stats: &mut ScratchStats,
+) -> &'a [f32] {
+    if g.pad == 0 {
+        return xd;
+    }
+    let plen = g.b * g.h2 * g.w2 * g.c;
+    ensure_cap(padded, plen, stats);
+    let pd = &mut padded[..plen];
+    pd.fill(0.0);
+    ops::pad_hw_into(xd, (g.b, g.h, g.w, g.c), g.pad, pd);
+    &padded[..plen]
+}
+
+/// The shared band/chunk driver: split the `[B*H'*W']` patch-row space into
+/// scoped-thread bands; within a band, alternate staging a [`CHUNK`]-row
+/// im2col slab into this band's slice of `patches` with running `kernel`
+/// (which accumulates `slab @ weight` into its zeroed out chunk).
+/// `cost = (work_per_row, par_threshold)` feeds thread dispatch.
+fn conv_driver<K>(
+    xin: &[f32],
+    g: &Geom,
+    cost: (usize, usize),
+    patches: &mut Vec<f32>,
+    stats: &mut ScratchStats,
+    out: &mut [f32],
+    kernel: &K,
+) where
+    K: Fn(&mut [f32], &[f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), g.rows * g.oc);
+    if g.rows == 0 || g.oc == 0 {
+        return;
+    }
+    let nthreads = threads_for_rows(g.rows, g.rows.saturating_mul(cost.0), cost.1);
+    ensure_cap(patches, nthreads * CHUNK * g.kcols, stats);
+    let (kcols, oc) = (g.kcols, g.oc);
+    let run_band = |row0: usize, oband: &mut [f32], pband: &mut [f32]| {
+        let band_rows = oband.len() / oc;
+        let mut done = 0;
+        while done < band_rows {
+            let nr = CHUNK.min(band_rows - done);
+            let slab = &mut pband[..nr * kcols];
+            ops::im2col_rows_into(xin, (g.b, g.h2, g.w2, g.c), g.kh, g.kw, row0 + done, nr, slab);
+            let ochunk = &mut oband[done * oc..(done + nr) * oc];
+            ochunk.fill(0.0);
+            kernel(ochunk, slab);
+            done += nr;
+        }
+    };
+    if nthreads <= 1 {
+        run_band(0, out, &mut patches[..CHUNK * kcols]);
+        return;
+    }
+    let rpb = g.rows.div_ceil(nthreads);
+    std::thread::scope(|scope| {
+        for (bi, (oband, pband)) in out
+            .chunks_mut(rpb * oc)
+            .zip(patches.chunks_mut(CHUNK * kcols))
+            .enumerate()
+        {
+            let rb = &run_band;
+            scope.spawn(move || rb(bi * rpb, oband, pband));
+        }
+    });
+}
+
+/// Fused code-domain conv: `x [B,H,W,C]` (flat slice) ⊛ packed
+/// `[kh,kw,C,OC]` → `out [B*H'*W'*OC]` (grown in place, never reallocated
+/// once warm).  Returns `(H', W', OC)`.
+pub fn qconv_into(
+    xd: &[f32],
+    dims: (usize, usize, usize, usize),
+    p: &PackedQTensorV2,
+    same: bool,
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+) -> Result<(usize, usize, usize)> {
+    if p.shape.len() != 4 {
+        bail!("qconv: packed weight must be [kh,kw,C,OC], got {:?}", p.shape);
+    }
+    let (kh, kw, oc) = (p.shape[0], p.shape[1], p.shape[3]);
+    if p.shape[2] != dims.3 {
+        bail!("qconv channel mismatch: input C={} vs weight {:?}", dims.3, p.shape);
+    }
+    let g = geometry(xd.len(), dims, (kh, kw, oc), same)?;
+    if g.kcols != p.k {
+        bail!("qconv: weight K={} but window is {}x{}x{}", p.k, kh, kw, dims.3);
+    }
+    ensure_cap(out, g.rows * g.oc, &mut scratch.stats);
+    let xin = staged_input(xd, &g, &mut scratch.padded, &mut scratch.stats);
+    conv_driver(
+        xin,
+        &g,
+        (p.ops_per_row(), QGEMM_PAR_THRESHOLD),
+        &mut scratch.patches,
+        &mut scratch.stats,
+        &mut out[..g.rows * g.oc],
+        &|o: &mut [f32], slab: &[f32]| qgemm2_band(o, slab, p),
+    );
+    Ok((g.oh, g.ow, oc))
+}
+
+/// Fused f32 conv: same pipeline with the blocked microkernel.  `wd` is the
+/// conv weight `[kh,kw,C,OC]` flattened — row-major, which is exactly the
+/// reshaped `[kh*kw*C, OC]` GEMM operand.  Returns `(H', W')`.
+pub fn fconv_into(
+    xd: &[f32],
+    dims: (usize, usize, usize, usize),
+    wd: &[f32],
+    (kh, kw, oc): (usize, usize, usize),
+    same: bool,
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+) -> Result<(usize, usize)> {
+    let g = geometry(xd.len(), dims, (kh, kw, oc), same)?;
+    if wd.len() != g.kcols * oc {
+        bail!("fconv weight len {} != {}x{}x{}x{}", wd.len(), kh, kw, dims.3, oc);
+    }
+    ensure_cap(out, g.rows * g.oc, &mut scratch.stats);
+    let xin = staged_input(xd, &g, &mut scratch.padded, &mut scratch.stats);
+    let kcols = g.kcols;
+    conv_driver(
+        xin,
+        &g,
+        (kcols * oc, blocked::PAR_THRESHOLD_MACS),
+        &mut scratch.patches,
+        &mut scratch.stats,
+        &mut out[..g.rows * g.oc],
+        &|o: &mut [f32], slab: &[f32]| blocked::gemm_band(o, slab, wd, kcols, oc),
+    );
+    Ok((g.oh, g.ow))
+}
+
+/// Convenience wrapper over [`qconv_into`]: `x [B,H,W,C]` ⊛ packed →
+/// `[B,H',W',OC]` tensor (allocates the result; serving paths use
+/// `qconv_into` with a pooled output buffer instead).
+pub fn qconv(x: &Tensor, p: &PackedQTensorV2, same: bool, scratch: &mut Scratch) -> Result<Tensor> {
+    let s = x.shape();
+    if s.len() != 4 {
+        bail!("qconv expects NHWC, got {:?}", s);
+    }
+    let dims = (s[0], s[1], s[2], s[3]);
+    let mut out = Vec::new();
+    let (oh, ow, oc) = qconv_into(x.data(), dims, p, same, scratch, &mut out)?;
+    out.truncate(dims.0 * oh * ow * oc);
+    Tensor::new(vec![dims.0, oh, ow, oc], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::qgemm2;
+    use crate::quant::qsq::{quantize, AssignMode};
+    use crate::tensor::ops as tops;
+    use crate::util::rng::Rng;
+
+    fn gauss(r: &mut Rng, len: usize, s: f64) -> Vec<f32> {
+        (0..len).map(|_| (r.normal() * s) as f32).collect()
+    }
+
+    /// The materialized oracle: pad + full im2col + plane-packed qgemm.
+    fn oracle(x: &Tensor, p: &PackedQTensorV2, same: bool) -> Tensor {
+        let (kh, kw, oc) = (p.shape[0], p.shape[1], p.shape[3]);
+        let padded;
+        let xin = if same {
+            padded = tops::pad_hw(x, kh / 2).unwrap();
+            &padded
+        } else {
+            x
+        };
+        let (patches, oh, ow) = tops::im2col(xin, kh, kw).unwrap();
+        let out = qgemm2(&patches, p).unwrap();
+        out.reshape(vec![x.shape()[0], oh, ow, oc]).unwrap()
+    }
+
+    #[test]
+    fn fused_qconv_bitwise_equals_materialized_oracle() {
+        let mut r = Rng::new(5);
+        for (wshape, xs, same) in [
+            (vec![5usize, 5, 1, 6], vec![2usize, 28, 28, 1], false), // lenet c1
+            (vec![3, 3, 3, 8], vec![2, 16, 16, 3], true),            // convnet-ish k1
+            (vec![3, 3, 8, 4], vec![1, 8, 8, 8], true),
+            (vec![1, 1, 4, 4], vec![3, 6, 6, 4], false),
+        ] {
+            let nw: usize = wshape.iter().product();
+            let w = gauss(&mut r, nw, 0.3);
+            let group = crate::quant::vectorize::Grouping::nearest_divisor(&wshape, 8).unwrap();
+            let qt = quantize(&w, &wshape, group, 4, AssignMode::SigmaSearch).unwrap();
+            let p = PackedQTensorV2::pack(&qt).unwrap();
+            let nx: usize = xs.iter().product();
+            let x = Tensor::new(xs.clone(), gauss(&mut r, nx, 1.0)).unwrap();
+            let want = oracle(&x, &p, same);
+            let mut scratch = Scratch::new();
+            let got = qconv(&x, &p, same, &mut scratch).unwrap();
+            assert_eq!(got.shape(), want.shape(), "{wshape:?} same={same}");
+            assert_eq!(got.data(), want.data(), "{wshape:?} same={same} diverged");
+        }
+    }
+
+    #[test]
+    fn fused_f32_conv_bitwise_equals_conv2d() {
+        let mut r = Rng::new(6);
+        let x = Tensor::new(vec![2, 10, 10, 3], gauss(&mut r, 2 * 10 * 10 * 3, 1.0)).unwrap();
+        let w = Tensor::new(vec![3, 3, 3, 5], gauss(&mut r, 3 * 3 * 3 * 5, 0.5)).unwrap();
+        for same in [false, true] {
+            let want = if same {
+                tops::conv2d_same(&x, &w).unwrap()
+            } else {
+                tops::conv2d(&x, &w).unwrap()
+            };
+            let mut scratch = Scratch::new();
+            let mut out = Vec::new();
+            let (oh, ow) = fconv_into(
+                x.data(),
+                (2, 10, 10, 3),
+                w.data(),
+                (3, 3, 5),
+                same,
+                &mut scratch,
+                &mut out,
+            )
+            .unwrap();
+            assert_eq!(want.shape(), &[2, oh, ow, 5]);
+            assert_eq!(&out[..2 * oh * ow * 5], want.data(), "same={same} diverged");
+        }
+    }
+
+    #[test]
+    fn scratch_stops_allocating_after_first_pass() {
+        let mut r = Rng::new(7);
+        let w = gauss(&mut r, 3 * 3 * 8 * 4, 0.3);
+        let qt = quantize(&w, &[3, 3, 8, 4], 8, 4, AssignMode::SigmaSearch).unwrap();
+        let p = PackedQTensorV2::pack(&qt).unwrap();
+        let x = Tensor::new(vec![2, 8, 8, 8], gauss(&mut r, 2 * 8 * 8 * 8, 1.0)).unwrap();
+        let mut scratch = Scratch::new();
+        let mut out = Vec::new();
+        qconv_into(x.data(), (2, 8, 8, 8), &p, true, &mut scratch, &mut out).unwrap();
+        let cold_allocs = scratch.stats.allocs;
+        assert!(cold_allocs > 0);
+        for _ in 0..3 {
+            qconv_into(x.data(), (2, 8, 8, 8), &p, true, &mut scratch, &mut out).unwrap();
+        }
+        assert_eq!(scratch.stats.allocs, cold_allocs, "warm passes must not allocate");
+        assert!(scratch.stats.reuses >= 9, "stats: {:?}", scratch.stats);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut r = Rng::new(8);
+        let w = gauss(&mut r, 3 * 3 * 4 * 2, 0.3);
+        let qt = quantize(&w, &[3, 3, 4, 2], 4, 4, AssignMode::Nearest).unwrap();
+        let p = PackedQTensorV2::pack(&qt).unwrap();
+        let mut scratch = Scratch::new();
+        // channel mismatch
+        let x = Tensor::new(vec![1, 6, 6, 3], vec![0.0; 108]).unwrap();
+        assert!(qconv(&x, &p, false, &mut scratch).is_err());
+        // window larger than input
+        let x = Tensor::new(vec![1, 2, 2, 4], vec![0.0; 16]).unwrap();
+        assert!(qconv(&x, &p, false, &mut scratch).is_err());
+    }
+}

@@ -3,18 +3,29 @@
 //!
 //! The QSQ levels are {0, ±1, ±2, ±4}, so each weight contributes to a dot
 //! product as a sign flip plus at most two left shifts of the activation.
-//! The kernel exploits all three structural properties of the code tensor:
+//! Two generations of the kernel live here:
 //!
-//! * **zero skip** — zero/reserved codes are dropped at pack time, so the
-//!   inner loop never touches them (the paper's "+6 % zeros" becomes real
-//!   work saved, not just [`crate::hw::zskip`] bookkeeping);
-//! * **shift/add only** — per activation value `a` the eight possible
-//!   contributions {0, a, 2a, 4a, -a, -2a, -4a, 0} are built once per group
-//!   with additions and negations only, then selected by code — the inner
-//!   loop contains no multiply;
-//! * **hoisted scaling** — the per-(group, column) scalar `alpha` multiplies
-//!   the group partial sum once, instead of once per element as the
-//!   decode-then-matmul path does.
+//! * **v1** ([`PackedQTensor`] + [`qgemm`]) — the retained single-thread
+//!   reference.  Nonzero codes are stored as interleaved (row-offset, code)
+//!   entries per (group, column) cell; the inner loop selects each entry's
+//!   contribution from an 8-wide shift table rebuilt per group row.
+//! * **v2** ([`PackedQTensorV2`] + [`qgemm2`]) — the serving kernel.  The
+//!   surviving codes of each cell are split into six *offset planes*, one
+//!   per nonzero level (+1, +2, +4, −1, −2, −4).  The inner loop is then a
+//!   straight sum of activations over each contiguous plane — no LUT build,
+//!   no per-entry code select, 2 bytes per entry instead of 4 — and the six
+//!   plane sums are combined with adds only
+//!   (`acc = (s₁−m₁) + 2(s₂−m₂) + 4(s₄−m₄)`, doublings as self-adds).  Rows
+//!   are split across scoped threads with the same band scheme as
+//!   [`super::blocked`], so a threaded run is bitwise identical to the
+//!   single-thread one.
+//!
+//! Both kernels share the structural wins of the code domain: zero/reserved
+//! codes are dropped at pack time (zero-skip), the inner loop contains no
+//! multiply, and the per-(group, column) `alpha` scales each partial sum
+//! exactly once.  On dyadic data (integer activations, power-of-two scalars)
+//! v1, v2, and decode-then-matmul are all exact and therefore bitwise equal
+//! — the property tests assert exactly that.
 
 use anyhow::{bail, Result};
 
@@ -22,10 +33,14 @@ use crate::hw::zskip::SkipStats;
 use crate::quant::qsq::QuantizedTensor;
 use crate::tensor::Tensor;
 
-/// One non-skippable code: (row offset within the group, 3-bit code).
+/// One non-skippable v1 code: (row offset within the group, 3-bit code).
 type Entry = (u16, u8);
 
-/// A [`QuantizedTensor`] repacked for the code-domain GEMM: per
+/// Below this many inner-loop adds a qgemm runs un-threaded (code-domain
+/// adds are cheap, so the crossover sits lower than the f32 GEMM's).
+pub(crate) const QGEMM_PAR_THRESHOLD: usize = 1 << 18;
+
+/// A [`QuantizedTensor`] repacked for the v1 code-domain GEMM: per
 /// (group, column) runs of nonzero codes in CSR-like form.
 #[derive(Clone, Debug)]
 pub struct PackedQTensor {
@@ -44,15 +59,20 @@ pub struct PackedQTensor {
     pub skip: SkipStats,
 }
 
+fn check_groups(qt: &QuantizedTensor) -> Result<()> {
+    if qt.group == 0 || qt.k % qt.group != 0 {
+        bail!("group {} must divide K={}", qt.group, qt.k);
+    }
+    if qt.group > u16::MAX as usize + 1 {
+        bail!("group {} too large for packed offsets", qt.group);
+    }
+    Ok(())
+}
+
 impl PackedQTensor {
     /// Pack a quantized tensor (drops zero/reserved codes).
     pub fn pack(qt: &QuantizedTensor) -> Result<PackedQTensor> {
-        if qt.group == 0 || qt.k % qt.group != 0 {
-            bail!("group {} must divide K={}", qt.group, qt.k);
-        }
-        if qt.group > u16::MAX as usize + 1 {
-            bail!("group {} too large for packed offsets", qt.group);
-        }
+        check_groups(qt)?;
         let g = qt.k / qt.group;
         let cells = g * qt.oc;
         let mut entries = Vec::with_capacity(qt.codes.len());
@@ -89,7 +109,9 @@ impl PackedQTensor {
     }
 }
 
-/// `x [M,K] @ packed [K,OC] -> [M,OC]`, entirely in the code domain.
+/// `x [M,K] @ packed [K,OC] -> [M,OC]`, entirely in the code domain — the
+/// v1 kernel, retained single-threaded as the reference v2 is checked
+/// against.
 pub fn qgemm(x: &Tensor, p: &PackedQTensor) -> Result<Tensor> {
     let xs = x.shape();
     if xs.len() != 2 || xs[1] != p.k {
@@ -142,6 +164,191 @@ pub fn qgemm_qt(x: &Tensor, qt: &QuantizedTensor) -> Result<Tensor> {
     qgemm(x, &PackedQTensor::pack(qt)?)
 }
 
+/// Number of offset planes per (group, column) cell — one per nonzero level.
+const PLANES: usize = 6;
+
+/// A [`QuantizedTensor`] repacked for the v2 code-domain GEMM: per
+/// (group, column) cell, six contiguous row-offset planes (one per nonzero
+/// level), so the inner loop never selects on a code.
+#[derive(Clone, Debug)]
+pub struct PackedQTensorV2 {
+    pub k: usize,
+    pub oc: usize,
+    pub group: usize,
+    /// Original tensor shape (C-order compatible with `[K, OC]`).
+    pub shape: Vec<usize>,
+    /// `[K/group, OC]` row-major per-group scalars.
+    scalars: Vec<f32>,
+    /// Row offsets within the group, plane-major per cell:
+    /// `[+1 plane | +2 | +4 | −1 | −2 | −4]` for cell 0, then cell 1, …
+    offsets: Vec<u16>,
+    /// Plane boundaries into `offsets`:
+    /// `bounds[cell*6 + p] .. bounds[cell*6 + p + 1]` is plane `p` of
+    /// `cell`; length `cells*6 + 1`.
+    bounds: Vec<u32>,
+    /// Zero-skip statistics realized by this packing.
+    pub skip: SkipStats,
+}
+
+impl PackedQTensorV2 {
+    /// Pack a quantized tensor into offset planes (drops zero/reserved
+    /// codes, same zero-skip as v1 — only the layout differs).
+    pub fn pack(qt: &QuantizedTensor) -> Result<PackedQTensorV2> {
+        check_groups(qt)?;
+        let g = qt.k / qt.group;
+        let cells = g * qt.oc;
+        let mut offsets = Vec::with_capacity(qt.codes.len());
+        let mut bounds = Vec::with_capacity(cells * PLANES + 1);
+        bounds.push(0u32);
+        // reusable per-plane buckets: one pass over each cell's codes, then
+        // drained in plane order (codes 1..=6 are the nonzero levels)
+        let mut buckets: [Vec<u16>; PLANES] = Default::default();
+        for gi in 0..g {
+            for j in 0..qt.oc {
+                for r in 0..qt.group {
+                    let code = qt.codes[(gi * qt.group + r) * qt.oc + j];
+                    if !code.is_skippable() {
+                        buckets[(code.0 & 7) as usize - 1].push(r as u16);
+                    }
+                }
+                for bucket in buckets.iter_mut() {
+                    offsets.extend_from_slice(bucket);
+                    bounds.push(offsets.len() as u32);
+                    bucket.clear();
+                }
+            }
+        }
+        let total = qt.codes.len() as u64;
+        let skip = SkipStats { total, skippable: total - offsets.len() as u64 };
+        Ok(PackedQTensorV2 {
+            k: qt.k,
+            oc: qt.oc,
+            group: qt.group,
+            shape: qt.shape.clone(),
+            scalars: qt.scalars.clone(),
+            offsets,
+            bounds,
+            skip,
+        })
+    }
+
+    /// Fraction of codes the GEMM never touches.
+    pub fn skipped_fraction(&self) -> f64 {
+        self.skip.fraction()
+    }
+
+    /// Inner-loop adds one activation row costs (used for thread dispatch).
+    pub(crate) fn ops_per_row(&self) -> usize {
+        self.offsets.len() + self.bounds.len()
+    }
+}
+
+/// Sum the activations a plane's offsets select — the v2 inner loop: a
+/// straight pass over a contiguous `u16` stream, no code select, no LUT.
+#[inline]
+fn plane_sum(offsets: &[u16], xg: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for &off in offsets {
+        s += xg[off as usize];
+    }
+    s
+}
+
+/// One row band of the v2 kernel: `out` is `rows x OC` (pre-zeroed, rows
+/// inferred), `xb` the matching rows of the activation matrix.  Accumulates
+/// into `out`.
+///
+/// Loop order is (group, column, row): the six plane segments and the cell's
+/// alpha are loaded once and reused across every row of the band, so only
+/// the activation gathers vary in the inner loop.  Per output element the
+/// group partials still accumulate in ascending group order with the same
+/// combine expression, so reordering rows/columns cannot change any value.
+pub(crate) fn qgemm2_band(out: &mut [f32], xb: &[f32], p: &PackedQTensorV2) {
+    let (k, oc) = (p.k, p.oc);
+    if oc == 0 {
+        return;
+    }
+    let g = k / p.group;
+    let rows = out.len() / oc;
+    for gi in 0..g {
+        let cell0 = gi * oc;
+        let x0 = gi * p.group;
+        for j in 0..oc {
+            let b = &p.bounds[(cell0 + j) * PLANES..(cell0 + j) * PLANES + PLANES + 1];
+            let alpha = p.scalars[cell0 + j];
+            // the six offset planes of this (group, column) cell
+            let seg = [
+                &p.offsets[b[0] as usize..b[1] as usize],
+                &p.offsets[b[1] as usize..b[2] as usize],
+                &p.offsets[b[2] as usize..b[3] as usize],
+                &p.offsets[b[3] as usize..b[4] as usize],
+                &p.offsets[b[4] as usize..b[5] as usize],
+                &p.offsets[b[5] as usize..b[6] as usize],
+            ];
+            for i in 0..rows {
+                let xg = &xb[i * k + x0..i * k + x0 + p.group];
+                // combine with adds only: (s1-m1) + 2(s2-m2) + 4(s4-m4)
+                let t1 = plane_sum(seg[0], xg) - plane_sum(seg[3], xg);
+                let mut t2 = plane_sum(seg[1], xg) - plane_sum(seg[4], xg);
+                t2 += t2;
+                let mut t4 = plane_sum(seg[2], xg) - plane_sum(seg[5], xg);
+                t4 += t4;
+                t4 += t4;
+                // the only multiply: one alpha per (group, column)
+                out[i * oc + j] += alpha * (t1 + t2 + t4);
+            }
+        }
+    }
+}
+
+/// `out[M,OC] = x[M,K] @ packed` on the plane-packed layout (caller provides
+/// a zeroed `out` of exactly `m * OC`), row bands across scoped threads.
+pub fn qgemm2_into(out: &mut [f32], xd: &[f32], m: usize, p: &PackedQTensorV2) {
+    debug_assert_eq!(out.len(), m * p.oc);
+    debug_assert_eq!(xd.len(), m * p.k);
+    let total = m.saturating_mul(p.ops_per_row());
+    let nthreads = super::threads_for_rows(m, total, QGEMM_PAR_THRESHOLD);
+    let band = |_: usize, ob: &mut [f32], xb: &[f32]| qgemm2_band(ob, xb, p);
+    super::for_each_row_band(out, xd, m, p.k, p.oc, nthreads, band);
+}
+
+/// Shared tensor-level entry: validate shapes, run with the given thread
+/// count (`None` = the production heuristic, via [`qgemm2_into`]).
+fn qgemm2_run(x: &Tensor, p: &PackedQTensorV2, nthreads: Option<usize>) -> Result<Tensor> {
+    let xs = x.shape();
+    if xs.len() != 2 || xs[1] != p.k {
+        bail!("qgemm2 shapes {:?} x [{}, {}]", xs, p.k, p.oc);
+    }
+    let m = xs[0];
+    let mut out = vec![0.0f32; m * p.oc];
+    match nthreads {
+        None => qgemm2_into(&mut out, x.data(), m, p),
+        Some(nt) => {
+            let band = |_: usize, ob: &mut [f32], xb: &[f32]| qgemm2_band(ob, xb, p);
+            super::for_each_row_band(&mut out, x.data(), m, p.k, p.oc, nt, band);
+        }
+    }
+    Tensor::new(vec![m, p.oc], out)
+}
+
+/// `x [M,K] @ packed [K,OC] -> [M,OC]` on the v2 plane-packed kernel.
+pub fn qgemm2(x: &Tensor, p: &PackedQTensorV2) -> Result<Tensor> {
+    qgemm2_run(x, p, None)
+}
+
+/// [`qgemm2`] with an explicit thread count — lets tests pin band
+/// boundaries (`m < bands`, `m % bands != 0`) and check the parallel run is
+/// bitwise identical to the single-thread one.
+pub fn qgemm2_threads(x: &Tensor, p: &PackedQTensorV2, nthreads: usize) -> Result<Tensor> {
+    qgemm2_run(x, p, Some(nthreads))
+}
+
+/// Convenience: pack into planes on the fly (prefer holding a
+/// [`PackedQTensorV2`] on hot paths).
+pub fn qgemm2_qt(x: &Tensor, qt: &QuantizedTensor) -> Result<Tensor> {
+    qgemm2(x, &PackedQTensorV2::pack(qt)?)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,6 +398,9 @@ mod tests {
             assert_eq!(got.shape(), want.shape());
             // all values dyadic and well within the f32 mantissa -> exact
             assert_eq!(got.data(), want.data(), "seed {seed} diverged");
+            // v2 must agree bitwise with both on dyadic data
+            let got2 = qgemm2_qt(&x, &qt).unwrap();
+            assert_eq!(got2.data(), want.data(), "seed {seed}: v2 diverged");
         }
     }
 
@@ -206,6 +416,9 @@ mod tests {
         let got = qgemm_qt(&x, &qt).unwrap();
         let diff = got.max_abs_diff(&want);
         assert!(diff < 1e-3, "qgemm vs decode+matmul: {diff}");
+        let got2 = qgemm2_qt(&x, &qt).unwrap();
+        let diff2 = got2.max_abs_diff(&want);
+        assert!(diff2 < 1e-3, "qgemm2 vs decode+matmul: {diff2}");
     }
 
     #[test]
@@ -217,12 +430,31 @@ mod tests {
         let p = PackedQTensor::pack(&qt).unwrap();
         assert!(p.skipped_fraction() >= 0.5);
         assert_eq!(p.skip.total, 64);
+        let p2 = PackedQTensorV2::pack(&qt).unwrap();
+        assert_eq!(p2.skip, p.skip, "both layouts realize the same zero-skip");
         let x = int_activations(6, 2, 16);
         let dec = Tensor::new(vec![16, 4], qt.decode()).unwrap();
-        assert_eq!(
-            qgemm(&x, &p).unwrap().data(),
-            ops::matmul_naive(&x, &dec).unwrap().data()
-        );
+        let want = ops::matmul_naive(&x, &dec).unwrap();
+        assert_eq!(qgemm(&x, &p).unwrap().data(), want.data());
+        assert_eq!(qgemm2(&x, &p2).unwrap().data(), want.data());
+    }
+
+    #[test]
+    fn v2_parallel_bands_bitwise_equal_single_thread() {
+        // gaussian (non-dyadic) data: banding must not reorder any reduction
+        let mut r = Rng::new(31);
+        let w: Vec<f32> = (0..64 * 9).map(|_| (r.normal() * 0.3) as f32).collect();
+        let qt = quantize(&w, &[64, 9], 16, 4, AssignMode::SigmaSearch).unwrap();
+        let p = PackedQTensorV2::pack(&qt).unwrap();
+        for m in [1usize, 3, 5, 8] {
+            let xdata: Vec<f32> = (0..m * 64).map(|_| (r.normal()) as f32).collect();
+            let x = Tensor::new(vec![m, 64], xdata).unwrap();
+            let st = qgemm2_threads(&x, &p, 1).unwrap();
+            for nt in [2usize, 3, 4, 7] {
+                let par = qgemm2_threads(&x, &p, nt).unwrap();
+                assert_eq!(par.data(), st.data(), "m={m} nt={nt} diverged");
+            }
+        }
     }
 
     #[test]
@@ -230,5 +462,6 @@ mod tests {
         let qt = dyadic_qt(7, 16, 4, 4);
         let x = int_activations(8, 2, 12);
         assert!(qgemm_qt(&x, &qt).is_err());
+        assert!(qgemm2_qt(&x, &qt).is_err());
     }
 }

@@ -1,16 +1,22 @@
 //! Pure-rust inference engines.
 //!
 //! Two engines live here, both mirroring the L2 model graphs exactly (same
-//! im2col ordering, same layer stack):
+//! im2col ordering, same layer stack), and both running the fused zero-copy
+//! pipeline: conv layers stage im2col patches band-by-band through a
+//! [`Scratch`] arena ([`crate::kernels::qconv`]), activations ping-pong
+//! between two pooled buffers, and epilogues (bias + ReLU, 2x2 pool) run in
+//! place — steady-state serving allocates only the returned logits.
 //!
-//! * the f32 path ([`forward`]) — runs every layer on the blocked/parallel
-//!   GEMM ([`crate::kernels::blocked`] via `ops::matmul`).  It is the oracle
-//!   the PJRT path is validated against and the fallback when `artifacts/`
-//!   is absent.
+//! * the f32 path ([`forward`] / [`forward_with`]) — every layer on the
+//!   blocked/microtiled GEMM ([`crate::kernels::blocked`]).  It is the
+//!   oracle the PJRT path is validated against and the fallback when
+//!   `artifacts/` is absent.  The original per-op tensor functions
+//!   ([`lenet_fwd`], [`convnet_fwd`]) survive as the readable references the
+//!   fused pipeline is tested against.
 //! * [`QuantizedEngine`] — the code-domain path: quantized layers execute on
-//!   [`crate::kernels::qgemm`] straight from packed codes (zero-skip,
-//!   shift/add, hoisted alpha), only the fp32 head and biases touch the f32
-//!   GEMM.  This is what the edge side actually serves with.
+//!   the plane-packed [`crate::kernels::qgemm2`] straight from packed codes
+//!   (zero-skip, shift/add, hoisted alpha, row-parallel), only the fp32 head
+//!   and biases touch the f32 GEMM.  This is what the edge side serves with.
 
 use std::collections::BTreeMap;
 
@@ -18,22 +24,27 @@ use anyhow::{bail, Context, Result};
 
 use crate::codec::{EncodedModel, EncodedTensor};
 use crate::device::QualityConfig;
-use crate::kernels::{self, PackedQTensor};
+use crate::kernels::{self, blocked, PackedQTensorV2, Scratch};
 use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::{quantize, AssignMode};
 use crate::quant::vectorize::Grouping;
 use crate::tensor::{ops, Tensor};
 
-/// Forward one batch through the model, host-side.
+/// Forward one batch through the model, host-side (one-shot scratch).
 pub fn forward(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
-    match store.kind {
-        ModelKind::Lenet => lenet_fwd(store, x),
-        ModelKind::Convnet => convnet_fwd(store, x),
-    }
+    forward_with(store, x, &mut Scratch::new())
 }
 
-/// LeNet-5: x [B,28,28,1] -> logits [B,10].
+/// Forward one batch on the fused f32 pipeline, reusing `scratch` — the
+/// serving form: a worker holds one arena and stops allocating per request
+/// once it is warm.
+pub fn forward_with(store: &WeightStore, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+    FusedFwd { store, packed: None }.run(x, scratch)
+}
+
+/// LeNet-5 on the per-op tensor path: x [B,28,28,1] -> logits [B,10].
+/// Retained as the readable reference the fused pipeline is tested against.
 pub fn lenet_fwd(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
     let feat = lenet_features(store, x)?;
     let h = ops::add_bias(&ops::matmul(&feat, store.get("f3w")?)?, store.get("f3b")?)?;
@@ -56,7 +67,8 @@ pub fn lenet_features(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
     Ok(h)
 }
 
-/// ConvNet-4: x [B,32,32,3] -> logits [B,10].
+/// ConvNet-4 on the per-op tensor path: x [B,32,32,3] -> logits [B,10].
+/// Retained as the readable reference the fused pipeline is tested against.
 pub fn convnet_fwd(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
     if x.shape().len() != 4 || x.shape()[1] != 32 {
         bail!("convnet expects [B,32,32,3], got {:?}", x.shape());
@@ -89,15 +101,191 @@ pub fn quantize_tensors(
     Ok(tensors)
 }
 
-/// The code-domain serving engine: quantized tensors stay as packed codes
-/// and execute on [`kernels::qgemm`]; everything else (biases, fp32 head)
-/// comes from the wrapped [`WeightStore`] and runs on the blocked f32 GEMM.
-/// The f32 forms of packed tensors are dropped from the wrapped store, so
-/// quantized-layer weights exist only as codes.
+/// The fused zero-copy forward pipeline, shared by the f32 engine
+/// (`packed: None`) and the code-domain [`QuantizedEngine`]: per layer the
+/// packed plane layout is preferred when present, the f32 weight otherwise.
+struct FusedFwd<'a> {
+    store: &'a WeightStore,
+    packed: Option<&'a BTreeMap<String, PackedQTensorV2>>,
+}
+
+impl FusedFwd<'_> {
+    fn packed_for(&self, name: &str) -> Option<&PackedQTensorV2> {
+        self.packed.and_then(|m| m.get(name))
+    }
+
+    /// The layer's bias, validated against the layer width `n` (the in-place
+    /// epilogues, unlike `ops::add_bias`, cannot detect a mismatch
+    /// themselves).
+    fn bias_of(&self, name: &str, n: usize) -> Result<&[f32]> {
+        let b = self.store.get(name)?;
+        if b.shape() != [n] {
+            bail!("{name}: bias shape {:?} vs layer width {n}", b.shape());
+        }
+        Ok(b.data())
+    }
+
+    /// One conv layer into the pooled `out` buffer; code-domain when packed.
+    fn conv_into(
+        &self,
+        xb: &[f32],
+        dims: (usize, usize, usize, usize),
+        name: &str,
+        same: bool,
+        scratch: &mut Scratch,
+        out: &mut Vec<f32>,
+    ) -> Result<(usize, usize, usize)> {
+        if let Some(p) = self.packed_for(name) {
+            return kernels::qconv_into(xb, dims, p, same, scratch, out);
+        }
+        let wt = self.store.get(name)?;
+        let ws = wt.shape();
+        if ws.len() != 4 || ws[2] != dims.3 {
+            bail!("{name}: conv weight must be [kh,kw,{},OC], got {:?}", dims.3, ws);
+        }
+        let (oh, ow) =
+            kernels::fconv_into(xb, dims, wt.data(), (ws[0], ws[1], ws[3]), same, scratch, out)?;
+        Ok((oh, ow, ws[3]))
+    }
+
+    /// One dense layer (`xb` is [m, K]) into the pooled `out` buffer;
+    /// returns the layer width N.
+    fn dense_into(
+        &self,
+        xb: &[f32],
+        m: usize,
+        name: &str,
+        scratch: &mut Scratch,
+        out: &mut Vec<f32>,
+    ) -> Result<usize> {
+        if let Some(p) = self.packed_for(name) {
+            if xb.len() != m * p.k {
+                bail!("{name}: dense input {} != {}x{}", xb.len(), m, p.k);
+            }
+            kernels::ensure_cap(out, m * p.oc, &mut scratch.stats);
+            let o = &mut out[..m * p.oc];
+            o.fill(0.0);
+            kernels::qgemm2_into(o, xb, m, p);
+            return Ok(p.oc);
+        }
+        let wt = self.store.get(name)?;
+        let ws = wt.shape();
+        if ws.len() != 2 || xb.len() != m * ws[0] {
+            bail!("{name}: dense input {} vs weight {:?}", xb.len(), ws);
+        }
+        let n = ws[1];
+        kernels::ensure_cap(out, m * n, &mut scratch.stats);
+        let o = &mut out[..m * n];
+        o.fill(0.0);
+        blocked::matmul_into(o, xb, wt.data(), m, ws[0], n);
+        Ok(n)
+    }
+
+    fn run(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        let s = x.shape();
+        let (want_hw, want_c) = match self.store.kind {
+            ModelKind::Lenet => (28, 1),
+            ModelKind::Convnet => (32, 3),
+        };
+        if s.len() != 4 || s[1] != want_hw || s[2] != want_hw || s[3] != want_c {
+            bail!(
+                "{:?} expects [B,{want_hw},{want_hw},{want_c}], got {s:?}",
+                self.store.kind
+            );
+        }
+        // activations ping-pong between two pooled buffers; they are moved
+        // out of the arena for the duration of the pass (the arena is still
+        // borrowed by every layer for patch/pad staging) and always put
+        // back, error or not
+        let mut cur = std::mem::take(&mut scratch.act_a);
+        let mut nxt = std::mem::take(&mut scratch.act_b);
+        let out = match self.store.kind {
+            ModelKind::Lenet => self.lenet_body(x, &mut cur, &mut nxt, scratch),
+            ModelKind::Convnet => self.convnet_body(x, &mut cur, &mut nxt, scratch),
+        };
+        scratch.act_a = cur;
+        scratch.act_b = nxt;
+        out
+    }
+
+    fn lenet_body(
+        &self,
+        x: &Tensor,
+        cur: &mut Vec<f32>,
+        nxt: &mut Vec<f32>,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let b = x.shape()[0];
+        // c1 reads the request tensor directly; every later layer lives in
+        // the ping/pong buffers
+        let (oh, ow, oc) = self.conv_into(x.data(), (b, 28, 28, 1), "c1w", false, scratch, nxt)?;
+        ops::bias_relu_inplace(&mut nxt[..b * oh * ow * oc], self.bias_of("c1b", oc)?);
+        let (mut dh, mut dw, mut dc) = (oh / 2, ow / 2, oc);
+        kernels::ensure_cap(cur, b * dh * dw * dc, &mut scratch.stats);
+        ops::maxpool2_into(&nxt[..b * oh * ow * oc], (b, oh, ow, oc), &mut cur[..b * dh * dw * dc]);
+
+        let (oh, ow, oc) =
+            self.conv_into(&cur[..b * dh * dw * dc], (b, dh, dw, dc), "c2w", false, scratch, nxt)?;
+        ops::bias_relu_inplace(&mut nxt[..b * oh * ow * oc], self.bias_of("c2b", oc)?);
+        (dh, dw, dc) = (oh / 2, ow / 2, oc);
+        kernels::ensure_cap(cur, b * dh * dw * dc, &mut scratch.stats);
+        ops::maxpool2_into(&nxt[..b * oh * ow * oc], (b, oh, ow, oc), &mut cur[..b * dh * dw * dc]);
+
+        // the NHWC activations are already row-major flat: [b, dh*dw*dc]
+        let mut feat = dh * dw * dc;
+        for (wname, bname) in [("f1w", "f1b"), ("f2w", "f2b")] {
+            let n = self.dense_into(&cur[..b * feat], b, wname, scratch, nxt)?;
+            ops::bias_relu_inplace(&mut nxt[..b * n], self.bias_of(bname, n)?);
+            std::mem::swap(cur, nxt);
+            feat = n;
+        }
+        let n = self.dense_into(&cur[..b * feat], b, "f3w", scratch, nxt)?;
+        let mut logits = nxt[..b * n].to_vec();
+        ops::bias_inplace(&mut logits, self.bias_of("f3b", n)?);
+        Tensor::new(vec![b, n], logits)
+    }
+
+    fn convnet_body(
+        &self,
+        x: &Tensor,
+        cur: &mut Vec<f32>,
+        nxt: &mut Vec<f32>,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let b = x.shape()[0];
+        let (mut dh, mut dw, mut dc) = (32usize, 32, 3);
+        let mut first = true;
+        for (kname, bname) in [("k1", "b1"), ("k2", "b2"), ("k3", "b3"), ("k4", "b4")] {
+            let xin: &[f32] = if first { x.data() } else { &cur[..b * dh * dw * dc] };
+            let (oh, ow, oc) = self.conv_into(xin, (b, dh, dw, dc), kname, true, scratch, nxt)?;
+            ops::bias_relu_inplace(&mut nxt[..b * oh * ow * oc], self.bias_of(bname, oc)?);
+            (dh, dw, dc) = (oh / 2, ow / 2, oc);
+            kernels::ensure_cap(cur, b * dh * dw * dc, &mut scratch.stats);
+            ops::maxpool2_into(
+                &nxt[..b * oh * ow * oc],
+                (b, oh, ow, oc),
+                &mut cur[..b * dh * dw * dc],
+            );
+            first = false;
+        }
+        let feat = dh * dw * dc;
+        let n = self.dense_into(&cur[..b * feat], b, "fcw", scratch, nxt)?;
+        let mut logits = nxt[..b * n].to_vec();
+        ops::bias_inplace(&mut logits, self.bias_of("fcb", n)?);
+        Tensor::new(vec![b, n], logits)
+    }
+}
+
+/// The code-domain serving engine: quantized tensors stay as plane-packed
+/// codes and execute on [`kernels::qgemm2`] / [`kernels::qconv_into`];
+/// everything else (biases, fp32 head) comes from the wrapped
+/// [`WeightStore`] and runs on the blocked f32 GEMM.  The f32 forms of
+/// packed tensors are dropped from the wrapped store, so quantized-layer
+/// weights exist only as codes.
 #[derive(Clone, Debug)]
 pub struct QuantizedEngine {
     store: WeightStore,
-    packed: BTreeMap<String, PackedQTensor>,
+    packed: BTreeMap<String, PackedQTensorV2>,
 }
 
 impl QuantizedEngine {
@@ -121,10 +309,11 @@ impl QuantizedEngine {
                 .meta
                 .tensor(&et.name)
                 .with_context(|| format!("encoded tensor {} not in model meta", et.name))?;
-            packed.insert(et.name.clone(), PackedQTensor::pack(&et.tensor)?);
+            packed.insert(et.name.clone(), PackedQTensorV2::pack(&et.tensor)?);
         }
-        // drop the f32 forms the packed codes shadow — dense()/conv() never
-        // read them, so keeping them would double quantized-layer memory
+        // drop the f32 forms the packed codes shadow — the fused pipeline
+        // never reads them, so keeping them would double quantized-layer
+        // memory
         let mut store = store.clone();
         for name in packed.keys() {
             store.remove(name);
@@ -150,69 +339,16 @@ impl QuantizedEngine {
         }
     }
 
-    /// Forward one batch, dispatching each layer to qgemm or the f32 GEMM.
+    /// Forward one batch (one-shot scratch).
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
-        match self.store.kind {
-            ModelKind::Lenet => self.lenet(x),
-            ModelKind::Convnet => self.convnet(x),
-        }
+        self.forward_with(x, &mut Scratch::new())
     }
 
-    fn dense(&self, x: &Tensor, name: &str) -> Result<Tensor> {
-        match self.packed.get(name) {
-            Some(p) => kernels::qgemm(x, p),
-            None => ops::matmul(x, self.store.get(name)?),
-        }
-    }
-
-    fn conv(&self, x: &Tensor, name: &str, same: bool) -> Result<Tensor> {
-        let Some(p) = self.packed.get(name) else {
-            let w = self.store.get(name)?;
-            return if same { ops::conv2d_same(x, w) } else { ops::conv2d(x, w) };
-        };
-        if p.shape.len() != 4 {
-            bail!("{name}: packed conv weight must be [kh,kw,C,OC], got {:?}", p.shape);
-        }
-        let (kh, kw, oc) = (p.shape[0], p.shape[1], p.shape[3]);
-        let padded;
-        let xin = if same {
-            padded = ops::pad_hw(x, kh / 2)?;
-            &padded
-        } else {
-            x
-        };
-        let (patches, oh, ow) = ops::im2col(xin, kh, kw)?;
-        let out = kernels::qgemm(&patches, p)?;
-        out.reshape(vec![xin.shape()[0], oh, ow, oc])
-    }
-
-    fn lenet(&self, x: &Tensor) -> Result<Tensor> {
-        if x.shape().len() != 4 || x.shape()[1] != 28 {
-            bail!("lenet expects [B,28,28,1], got {:?}", x.shape());
-        }
-        let b = x.shape()[0];
-        let h = ops::add_bias(&self.conv(x, "c1w", false)?, self.store.get("c1b")?)?.relu();
-        let h = ops::maxpool2(&h)?;
-        let h = ops::add_bias(&self.conv(&h, "c2w", false)?, self.store.get("c2b")?)?.relu();
-        let h = ops::maxpool2(&h)?;
-        let h = h.reshape(vec![b, 256])?;
-        let h = ops::add_bias(&self.dense(&h, "f1w")?, self.store.get("f1b")?)?.relu();
-        let h = ops::add_bias(&self.dense(&h, "f2w")?, self.store.get("f2b")?)?.relu();
-        ops::add_bias(&self.dense(&h, "f3w")?, self.store.get("f3b")?)
-    }
-
-    fn convnet(&self, x: &Tensor) -> Result<Tensor> {
-        if x.shape().len() != 4 || x.shape()[1] != 32 {
-            bail!("convnet expects [B,32,32,3], got {:?}", x.shape());
-        }
-        let b = x.shape()[0];
-        let mut h = x.clone();
-        for (kw, bw) in [("k1", "b1"), ("k2", "b2"), ("k3", "b3"), ("k4", "b4")] {
-            h = ops::add_bias(&self.conv(&h, kw, true)?, self.store.get(bw)?)?.relu();
-            h = ops::maxpool2(&h)?;
-        }
-        let h = h.reshape(vec![b, 256])?;
-        ops::add_bias(&self.dense(&h, "fcw")?, self.store.get("fcb")?)
+    /// Forward one batch, reusing `scratch` — the serving form: each layer
+    /// dispatches to the plane-packed code-domain kernels or the f32 GEMM,
+    /// and a warm arena allocates nothing per request.
+    pub fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        FusedFwd { store: &self.store, packed: Some(&self.packed) }.run(x, scratch)
     }
 }
 
@@ -229,6 +365,7 @@ pub fn accuracy(
     }
     let s = x.shape();
     let stride: usize = s[1..].iter().product();
+    let mut scratch = Scratch::new();
     let mut hits = 0usize;
     let mut i = 0;
     while i < n {
@@ -237,7 +374,7 @@ pub fn accuracy(
             vec![b, s[1], s[2], s[3]],
             x.data()[i * stride..(i + b) * stride].to_vec(),
         )?;
-        let logits = forward(store, &xb)?;
+        let logits = forward_with(store, &xb, &mut scratch)?;
         for (j, &pred) in ops::argmax_rows(&logits).iter().enumerate() {
             if pred as i32 == y[i + j] {
                 hits += 1;
@@ -251,26 +388,15 @@ pub fn accuracy(
 #[cfg(test)]
 mod tests {
     use super::*;
-    // Full-weights tests live in tests/ (need artifacts); here: shape guards.
+    // Full-weights tests live in tests/ (need artifacts); here: shape guards
+    // plus fused-vs-per-op pipeline equality on random stores.
 
     #[test]
     fn rejects_wrong_input_shape() {
-        // A store can't be constructed without artifacts, so just check the
-        // shape guard logic via the public error path using a fake store is
-        // impossible — covered by integration tests. Here we only pin the
-        // accuracy() precondition.
         let x = Tensor::zeros(vec![2, 28, 28, 1]);
         let y = vec![0i32; 3];
         // mismatched n vs y.len() must error before touching weights
-        let meta_err = accuracy(
-            // SAFETY: never dereferenced — constructed store is required, so
-            // we validate only via the public API in integration tests.
-            // This test just documents the contract.
-            &fake_store(),
-            &x,
-            &y,
-            2,
-        );
+        let meta_err = accuracy(&fake_store(), &x, &y, 2);
         assert!(meta_err.is_err());
     }
 
@@ -293,20 +419,60 @@ mod tests {
         assert!(logits.data().iter().all(|&v| v == 0.0));
     }
 
-    fn random_store(seed: u64) -> WeightStore {
-        let mut r = crate::util::rng::Rng::new(seed);
-        let meta = crate::model::meta::ModelMeta::lenet();
-        let mut s = WeightStore::empty(crate::model::meta::ModelKind::Lenet);
-        for t in &meta.tensors {
-            let data: Vec<f32> = (0..t.numel()).map(|_| (r.normal() * 0.1) as f32).collect();
-            s.set_unchecked(t.name, Tensor::new(t.shape.clone(), data).unwrap());
+    use crate::data::synth_store as random_store;
+
+    #[test]
+    fn fused_f32_forward_matches_per_op_reference() {
+        let kind = crate::model::meta::ModelKind::Lenet;
+        let store = random_store(11, kind);
+        let mut r = crate::util::rng::Rng::new(12);
+        let xdata: Vec<f32> = (0..3 * 28 * 28).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![3, 28, 28, 1], xdata).unwrap();
+        let fused = forward(&store, &x).unwrap();
+        let classic = lenet_fwd(&store, &x).unwrap();
+        assert_eq!(fused.shape(), classic.shape());
+        assert_eq!(fused.data(), classic.data(), "fused pipeline diverged from per-op path");
+    }
+
+    #[test]
+    fn fused_f32_convnet_matches_per_op_reference() {
+        let kind = crate::model::meta::ModelKind::Convnet;
+        let store = random_store(13, kind);
+        let mut r = crate::util::rng::Rng::new(14);
+        let xdata: Vec<f32> = (0..2 * 32 * 32 * 3).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![2, 32, 32, 3], xdata).unwrap();
+        let fused = forward(&store, &x).unwrap();
+        let classic = convnet_fwd(&store, &x).unwrap();
+        assert_eq!(fused.data(), classic.data(), "fused convnet diverged from per-op path");
+    }
+
+    #[test]
+    fn warm_scratch_stops_allocating() {
+        let store = random_store(15, crate::model::meta::ModelKind::Lenet);
+        let quality = QualityConfig { phi: 4, group: 16 };
+        let engine =
+            QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+        let mut r = crate::util::rng::Rng::new(16);
+        let xdata: Vec<f32> = (0..4 * 28 * 28).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![4, 28, 28, 1], xdata).unwrap();
+        let mut scratch = Scratch::new();
+        let first = engine.forward_with(&x, &mut scratch).unwrap();
+        let cold_allocs = scratch.stats.allocs;
+        for _ in 0..3 {
+            let again = engine.forward_with(&x, &mut scratch).unwrap();
+            assert_eq!(again.data(), first.data(), "warm pass changed the result");
         }
-        s
+        assert_eq!(
+            scratch.stats.allocs, cold_allocs,
+            "warm requests must not allocate: {:?}",
+            scratch.stats
+        );
+        assert!(scratch.stats.reuses > 0);
     }
 
     #[test]
     fn quantized_engine_matches_decoded_store_forward() {
-        let store = random_store(3);
+        let store = random_store(3, crate::model::meta::ModelKind::Lenet);
         let quality = QualityConfig { phi: 4, group: 16 };
         let engine =
             QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
@@ -336,5 +502,31 @@ mod tests {
         assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&want));
         assert!(engine.skipped_fraction() > 0.0);
         assert_eq!(engine.kind(), crate::model::meta::ModelKind::Lenet);
+    }
+
+    #[test]
+    fn quantized_convnet_engine_matches_decoded_store_forward() {
+        let store = random_store(21, crate::model::meta::ModelKind::Convnet);
+        let quality = QualityConfig { phi: 4, group: 16 };
+        let engine =
+            QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+        let mut decoded = store.clone();
+        for tm in store.meta.quantized_tensors() {
+            let g = Grouping::nearest_divisor(&tm.shape, quality.group).unwrap();
+            let qt = quantize(store.get(tm.name).unwrap().data(), &tm.shape, g, 4,
+                AssignMode::SigmaSearch)
+            .unwrap();
+            decoded
+                .set(tm.name, Tensor::new(tm.shape.clone(), qt.decode()).unwrap())
+                .unwrap();
+        }
+        let mut r = crate::util::rng::Rng::new(22);
+        let xdata: Vec<f32> = (0..2 * 32 * 32 * 3).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![2, 32, 32, 3], xdata).unwrap();
+        let got = engine.forward(&x).unwrap();
+        let want = forward(&decoded, &x).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 5e-2, "convnet engine vs decoded-store forward: {diff}");
+        assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&want));
     }
 }

@@ -81,21 +81,42 @@ pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> Result<(Tensor, usize, usize)
     let (oh, ow) = (h - kh + 1, w - kw + 1);
     let kcols = kh * kw * c;
     let mut out = vec![0.0f32; b * oh * ow * kcols];
-    let xd = x.data();
-    for bi in 0..b {
-        for oi in 0..oh {
-            for oj in 0..ow {
-                let row = ((bi * oh + oi) * ow + oj) * kcols;
-                for di in 0..kh {
-                    // one contiguous (kw*c)-long strip per kernel row
-                    let src = ((bi * h + oi + di) * w + oj) * c;
-                    let dst = row + di * kw * c;
-                    out[dst..dst + kw * c].copy_from_slice(&xd[src..src + kw * c]);
-                }
-            }
+    im2col_rows_into(x.data(), (b, h, w, c), kh, kw, 0, b * oh * ow, &mut out);
+    Ok((Tensor::new(vec![b * oh * ow, kcols], out)?, oh, ow))
+}
+
+/// Stage rows `[row0, row0+nrows)` of the VALID-conv patch matrix into
+/// `dst` (`nrows * kh*kw*C` floats, fully overwritten) — the band-staging
+/// primitive of the fused conv pipeline ([`crate::kernels::qconv`]).  Patch
+/// row `r` decodes as `(bi, oi, oj)` of the `[B, H', W']` output grid;
+/// ordering within a row is (di, dj, c), identical to [`im2col`].
+pub fn im2col_rows_into(
+    xd: &[f32],
+    (b, h, w, c): (usize, usize, usize, usize),
+    kh: usize,
+    kw: usize,
+    row0: usize,
+    nrows: usize,
+    dst: &mut [f32],
+) {
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    let kcols = kh * kw * c;
+    debug_assert!(row0 + nrows <= b * oh * ow);
+    debug_assert!(dst.len() >= nrows * kcols);
+    for r in 0..nrows {
+        let pr = row0 + r;
+        let oj = pr % ow;
+        let rest = pr / ow;
+        let oi = rest % oh;
+        let bi = rest / oh;
+        let drow = r * kcols;
+        for di in 0..kh {
+            // one contiguous (kw*c)-long strip per kernel row
+            let src = ((bi * h + oi + di) * w + oj) * c;
+            let dcol = drow + di * kw * c;
+            dst[dcol..dcol + kw * c].copy_from_slice(&xd[src..src + kw * c]);
         }
     }
-    Ok((Tensor::new(vec![b * oh * ow, kcols], out)?, oh, ow))
 }
 
 /// VALID conv, NHWC x [B,H,W,C] * w [kh,kw,C,OC] -> [B,H',W',OC].
@@ -129,15 +150,77 @@ pub fn pad_hw(x: &Tensor, p: usize) -> Result<Tensor> {
     let (b, h, w, c) = (s[0], s[1], s[2], s[3]);
     let (nh, nw) = (h + 2 * p, w + 2 * p);
     let mut out = vec![0.0f32; b * nh * nw * c];
-    let xd = x.data();
+    pad_hw_into(x.data(), (b, h, w, c), p, &mut out);
+    Tensor::new(vec![b, nh, nw, c], out)
+}
+
+/// Zero-pad H and W by `p` into `dst` (`b*(h+2p)*(w+2p)*c` floats, which the
+/// caller has zeroed — only the interior strips are written).
+pub fn pad_hw_into(
+    xd: &[f32],
+    (b, h, w, c): (usize, usize, usize, usize),
+    p: usize,
+    dst: &mut [f32],
+) {
+    let (nh, nw) = (h + 2 * p, w + 2 * p);
+    debug_assert!(dst.len() >= b * nh * nw * c);
     for bi in 0..b {
         for hi in 0..h {
             let src = ((bi * h + hi) * w) * c;
-            let dst = ((bi * nh + hi + p) * nw + p) * c;
-            out[dst..dst + w * c].copy_from_slice(&xd[src..src + w * c]);
+            let d = ((bi * nh + hi + p) * nw + p) * c;
+            dst[d..d + w * c].copy_from_slice(&xd[src..src + w * c]);
         }
     }
-    Tensor::new(vec![b, nh, nw, c], out)
+}
+
+/// `buf` is `[rows, n]` row-major: add the bias vector then ReLU, in place —
+/// the fused pipeline's layer epilogue (no intermediate tensors).
+pub fn bias_relu_inplace(buf: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    if n == 0 {
+        return;
+    }
+    for row in buf.chunks_exact_mut(n) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v = (*v + bv).max(0.0);
+        }
+    }
+}
+
+/// `buf` is `[rows, n]` row-major: add the bias vector in place (final
+/// logits — no activation).
+pub fn bias_inplace(buf: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    if n == 0 {
+        return;
+    }
+    for row in buf.chunks_exact_mut(n) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+}
+
+/// 2x2/stride-2 max pool from `src` `[b,h,w,c]` (h, w even) into `dst`
+/// `[b,h/2,w/2,c]` (fully overwritten).
+pub fn maxpool2_into(src: &[f32], (b, h, w, c): (usize, usize, usize, usize), dst: &mut [f32]) {
+    debug_assert!(h % 2 == 0 && w % 2 == 0);
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert!(dst.len() >= b * oh * ow * c);
+    for bi in 0..b {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let r0 = ((bi * h + 2 * oi) * w + 2 * oj) * c;
+                let r1 = r0 + w * c;
+                let o = ((bi * oh + oi) * ow + oj) * c;
+                for ci in 0..c {
+                    let m0 = src[r0 + ci].max(src[r0 + c + ci]);
+                    let m1 = src[r1 + ci].max(src[r1 + c + ci]);
+                    dst[o + ci] = m0.max(m1);
+                }
+            }
+        }
+    }
 }
 
 /// 2x2 max pool, stride 2 (H, W must be even).
@@ -320,6 +403,51 @@ mod tests {
         let good = t(&[1, 3], &[10.0, 0.0, 0.0]);
         let bad = t(&[1, 3], &[0.0, 10.0, 0.0]);
         assert!(xent(&good, &[0]) < xent(&bad, &[0]));
+    }
+
+    #[test]
+    fn im2col_rows_into_matches_full_matrix() {
+        let mut r = crate::util::rng::Rng::new(3);
+        let data: Vec<f32> = (0..2 * 6 * 5 * 3).map(|_| (r.normal()) as f32).collect();
+        let x = t(&[2, 6, 5, 3], &data);
+        let (full, oh, ow) = im2col(&x, 3, 2).unwrap();
+        let kcols = 3 * 2 * 3;
+        let rows = 2 * oh * ow;
+        // every (row0, nrows) band must reproduce the matching slice
+        for (row0, nrows) in [(0usize, rows), (3, 4), (rows - 2, 2), (5, 1)] {
+            let mut band = vec![0.0f32; nrows * kcols];
+            im2col_rows_into(x.data(), (2, 6, 5, 3), 3, 2, row0, nrows, &mut band);
+            assert_eq!(
+                &band[..],
+                &full.data()[row0 * kcols..(row0 + nrows) * kcols],
+                "band ({row0},{nrows})"
+            );
+        }
+    }
+
+    #[test]
+    fn inplace_epilogues_match_tensor_ops() {
+        let x = t(&[2, 3], &[0., -1., 2., 3., -4., 5.]);
+        let b = t(&[3], &[0.5, 0.5, -10.]);
+        let want_relu = add_bias(&x, &b).unwrap().relu();
+        let mut buf = x.data().to_vec();
+        bias_relu_inplace(&mut buf, b.data());
+        assert_eq!(&buf[..], want_relu.data());
+        let want_bias = add_bias(&x, &b).unwrap();
+        let mut buf = x.data().to_vec();
+        bias_inplace(&mut buf, b.data());
+        assert_eq!(&buf[..], want_bias.data());
+    }
+
+    #[test]
+    fn maxpool2_into_matches_maxpool2() {
+        let mut r = crate::util::rng::Rng::new(4);
+        let data: Vec<f32> = (0..2 * 4 * 6 * 3).map(|_| (r.normal()) as f32).collect();
+        let x = t(&[2, 4, 6, 3], &data);
+        let want = maxpool2(&x).unwrap();
+        let mut dst = vec![0.0f32; 2 * 2 * 3 * 3];
+        maxpool2_into(x.data(), (2, 4, 6, 3), &mut dst);
+        assert_eq!(&dst[..], want.data());
     }
 
     #[test]

@@ -1,16 +1,24 @@
 //! Property tests for the kernels layer (no artifacts needed):
 //!
-//! (a) code-domain `qgemm` equals the decode-then-fp32-matmul oracle —
-//!     exactly on dyadic data (where both paths are exact in f32), and
-//!     within tight tolerance on real quantized gaussian tensors;
-//! (b) the blocked/parallel matmul equals the naive ikj loop within 1e-5
+//! (a) code-domain `qgemm` (v1) and `qgemm2` (plane-packed v2) equal the
+//!     decode-then-fp32-matmul oracle — exactly on dyadic data (where all
+//!     paths are exact in f32, so v1 and v2 are bitwise equal), and within
+//!     tight tolerance on real quantized gaussian tensors;
+//! (b) the row-parallel v2 kernel is bitwise identical to its single-thread
+//!     reference across band-boundary shapes (m < bands, m % bands != 0);
+//! (c) the fused `qconv` equals the materialized pad + im2col + qgemm2
+//!     oracle bitwise at LeNet and ConvNet layer shapes, VALID and SAME;
+//! (d) the blocked/microtiled matmul equals the naive ikj loop within 1e-5
 //!     (it is in fact bitwise identical — same reduction order);
-//! (c) the O(sort) sigma-search picks the identical (gamma, delta, codes)
+//! (e) the O(sort) sigma-search picks the identical (gamma, delta, codes)
 //!     as the naive 152-pass grid, including at ConvNet layer sizes.
 
-use qsq_edge::kernels::{qgemm_qt, PackedQTensor};
+use qsq_edge::kernels::{
+    qconv, qgemm2, qgemm2_qt, qgemm2_threads, qgemm_qt, PackedQTensor, PackedQTensorV2, Scratch,
+};
 use qsq_edge::quant::codes::Code;
 use qsq_edge::quant::qsq::{quantize, quantize_sigma_search_naive, AssignMode, QuantizedTensor};
+use qsq_edge::quant::vectorize::Grouping;
 use qsq_edge::tensor::{ops, Tensor};
 use qsq_edge::util::prop::{check, forall, gen_weights};
 use qsq_edge::util::rng::Rng;
@@ -59,9 +67,88 @@ fn prop_qgemm_equals_decode_matmul_exactly_on_dyadic_data() {
             check(
                 got.data() == want.data(),
                 &format!("qgemm != oracle at m={m} k={k} oc={oc} group={group}"),
+            )?;
+            // v2 is exact on dyadic data too, hence bitwise equal to v1
+            let got2 = qgemm2_qt(&x, &qt).unwrap();
+            check(
+                got2.data() == want.data(),
+                &format!("qgemm2 != oracle at m={m} k={k} oc={oc} group={group}"),
             )
         },
     );
+}
+
+#[test]
+fn prop_qgemm2_parallel_bitwise_equals_single_thread_at_band_boundaries() {
+    forall(
+        20,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            // shapes that stress banding: m below, at, and just off the
+            // thread count, with non-dyadic gaussian data
+            let m = 1 + (r.below(11)) as usize;
+            let group = [4usize, 8, 16][(seed % 3) as usize];
+            let k = group * (1 + r.below(6) as usize);
+            let oc = 1 + r.below(14) as usize;
+            let w = gen_weights(&mut r, k * oc, 0.3);
+            let qt = quantize(&w, &[k, oc], group, 4, AssignMode::SigmaSearch).unwrap();
+            let p = PackedQTensorV2::pack(&qt).unwrap();
+            let xdata: Vec<f32> = gen_weights(&mut r, m * k, 1.0);
+            let x = Tensor::new(vec![m, k], xdata).unwrap();
+            let st = qgemm2_threads(&x, &p, 1).unwrap();
+            for nt in [2usize, 3, 5, 8] {
+                // covers m < bands and m % bands != 0
+                let par = qgemm2_threads(&x, &p, nt).unwrap();
+                check(
+                    par.data() == st.data(),
+                    &format!("parallel v2 != single-thread at m={m} k={k} oc={oc} nt={nt}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fused_qconv_equals_materialized_oracle_at_model_layer_shapes() {
+    // every conv layer shape of both models, VALID (LeNet) and SAME
+    // (ConvNet), against pad + full im2col + qgemm2 over the materialized
+    // patch matrix — bitwise: chunking only splits patch rows
+    let cases: &[(&[usize], &[usize], bool)] = &[
+        (&[5, 5, 1, 6], &[2, 28, 28, 1], false),  // lenet c1
+        (&[5, 5, 6, 16], &[2, 12, 12, 6], false), // lenet c2
+        (&[3, 3, 3, 32], &[2, 32, 32, 3], true),  // convnet k1
+        (&[3, 3, 32, 64], &[2, 8, 8, 32], true),  // convnet k3
+    ];
+    let mut r = Rng::new(0xBEEF);
+    let mut scratch = Scratch::new();
+    for &(wshape, xshape, same) in cases {
+        let nw: usize = wshape.iter().product();
+        let w = gen_weights(&mut r, nw, 0.2);
+        let group = Grouping::nearest_divisor(wshape, 16).unwrap();
+        let qt = quantize(&w, wshape, group, 4, AssignMode::SigmaSearch).unwrap();
+        let p = PackedQTensorV2::pack(&qt).unwrap();
+        let nx: usize = xshape.iter().product();
+        let x = Tensor::new(xshape.to_vec(), gen_weights(&mut r, nx, 1.0)).unwrap();
+
+        let (kh, kw) = (wshape[0], wshape[1]);
+        let padded;
+        let xin = if same {
+            padded = ops::pad_hw(&x, kh / 2).unwrap();
+            &padded
+        } else {
+            &x
+        };
+        let (patches, oh, ow) = ops::im2col(xin, kh, kw).unwrap();
+        let want = qgemm2(&patches, &p).unwrap();
+        let got = qconv(&x, &p, same, &mut scratch).unwrap();
+        assert_eq!(got.shape(), &[xshape[0], oh, ow, wshape[3]], "{wshape:?} same={same}");
+        assert_eq!(got.data(), want.data(), "{wshape:?} same={same} diverged from oracle");
+    }
+    // the arena was shared across all four layers: it must have grown, and
+    // growth must have stopped once warm for repeated shapes
+    assert!(scratch.stats.allocs > 0 || scratch.stats.reuses > 0);
 }
 
 #[test]

@@ -116,13 +116,20 @@ fn rejects_malformed_requests_without_dying() {
 #[test]
 fn predictions_match_offline_eval() {
     // the served prediction for a test image equals the offline artifact run
+    // (engine pinned to PJRT: the batch-aware Auto mode intentionally routes
+    // singleton batches to the quantized engine, which this parity check is
+    // not about)
     let dir = need_artifacts!();
     use qsq_edge::model::store::Dataset;
     use qsq_edge::repro;
     use qsq_edge::runtime::client::Runtime;
     let test = Dataset::load(&dir, "mnist", "test").unwrap();
 
-    let srv = Server::start(dir.clone(), ServerConfig::default()).unwrap();
+    let cfg = ServerConfig {
+        engine: qsq_edge::coordinator::server::EngineSelect::Pjrt,
+        ..Default::default()
+    };
+    let srv = Server::start(dir.clone(), cfg).unwrap();
     let mut c = Client::connect(&format!("127.0.0.1:{}", srv.port)).unwrap();
     let mut served = Vec::new();
     for i in 0..16 {
