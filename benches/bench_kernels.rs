@@ -14,7 +14,10 @@
 //!   assignment passes).
 //!
 //! Emits `BENCH_kernels.json` (name/median/p95/throughput per entry) so the
-//! perf trajectory is tracked across PRs.
+//! perf trajectory is tracked across PRs, including counter entries for the
+//! scratch arena (reuse/alloc), the persistent worker pool
+//! (spawn-vs-wakeup — spawns are asserted frozen across warm forwards), and
+//! the per-layer scratch high-water marks.
 
 use qsq_edge::bench::{run_bench, write_json, BenchResult};
 use qsq_edge::data::synth_store;
@@ -41,6 +44,36 @@ fn scratch_entry(name: &str, stats: kernels::ScratchStats) -> BenchResult {
         p95_s: 0.0,
         min_s: 0.0,
         items_per_iter: stats.reuses as f64,
+    }
+}
+
+/// A synthetic JSON entry for the persistent-pool counters (same convention
+/// as [`scratch_entry`]): `iters` holds the spawn count — which must stay
+/// frozen once serving is warm — and `items_per_iter` the wakeup count.
+fn pool_entry(name: &str, stats: kernels::PoolStats) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: stats.spawns as usize,
+        mean_s: 0.0,
+        median_s: 0.0,
+        p95_s: 0.0,
+        min_s: 0.0,
+        items_per_iter: stats.wakeups as f64,
+    }
+}
+
+/// A synthetic JSON entry for one layer's scratch high-water marks:
+/// `iters` holds the peak staging bytes (patch + pad) and `items_per_iter`
+/// the peak activation bytes.
+fn highwater_entry(name: &str, pk: kernels::LayerPeak) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: pk.patch_bytes + pk.pad_bytes,
+        mean_s: 0.0,
+        median_s: 0.0,
+        p95_s: 0.0,
+        min_s: 0.0,
+        items_per_iter: pk.act_bytes as f64,
     }
 }
 
@@ -177,6 +210,32 @@ fn main() {
         results.push(f32e);
         results.push(qe);
         results.push(scratch_entry("engine-scratch-arena", s_q.stats));
+
+        // --- persistent worker pool: spawns must be frozen once warm --------
+        let warm = engine.pool().stats();
+        for _ in 0..8 {
+            engine.forward_with(&x, &mut s_q).unwrap();
+        }
+        let after = engine.pool().stats();
+        assert_eq!(
+            after.spawns, warm.spawns,
+            "warm engine forwards must not spawn pool threads"
+        );
+        println!(
+            "  kernel pool: {} worker spawns (frozen across warm forwards), \
+             {} wakeups, {} band jobs",
+            after.spawns, after.wakeups, after.jobs
+        );
+        results.push(pool_entry("kernel-pool-spawns-vs-wakeups", after));
+
+        // --- per-layer scratch high-water marks -----------------------------
+        for (layer, pk) in s_q.layer_peaks() {
+            println!(
+                "  scratch high-water {layer}: patch {} B, pad {} B, act {} B",
+                pk.patch_bytes, pk.pad_bytes, pk.act_bytes
+            );
+            results.push(highwater_entry(&format!("scratch-hw lenet {layer}"), *pk));
+        }
     }
 
     // --- blocked/parallel f32 matmul vs the naive ikj loop ------------------

@@ -76,7 +76,7 @@ pub fn deploy(
 
 /// [`deploy`] plus a code-domain serving engine built from exactly the codes
 /// that crossed the channel: quantized layers run on
-/// [`crate::kernels::qgemm`] without ever materializing f32 weights.
+/// [`mod@crate::kernels::qgemm`] without ever materializing f32 weights.
 pub fn deploy_engine(
     store: &WeightStore,
     quality: QualityConfig,

@@ -1,4 +1,5 @@
-//! Serving metrics: counters + latency recorder with percentile snapshots.
+//! Serving metrics: counters, gauges, and a bounded latency recorder with
+//! percentile snapshots.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -6,12 +7,44 @@ use std::sync::Mutex;
 use crate::util::json::{self, Value};
 use crate::util::stats;
 
+/// Cap on stored samples per latency series.  Under sustained traffic an
+/// unbounded `Vec` grows forever; instead each series keeps a ring of the
+/// most recent [`LATENCY_WINDOW`] samples (percentiles reflect the recent
+/// window — exactly what serving dashboards want) while `total` keeps the
+/// lifetime observation count.
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// One latency series: a bounded ring of recent samples plus the lifetime
+/// count.
+#[derive(Default)]
+struct Series {
+    /// The most recent samples, at most [`LATENCY_WINDOW`] of them.
+    samples: Vec<f64>,
+    /// Ring cursor: the oldest sample, overwritten next once full.
+    next: usize,
+    /// Samples ever observed (reported as the series count).
+    total: u64,
+}
+
+impl Series {
+    fn push(&mut self, v: f64) {
+        self.total += 1;
+        if self.samples.len() < LATENCY_WINDOW {
+            self.samples.push(v);
+        } else {
+            self.samples[self.next] = v;
+            self.next = (self.next + 1) % LATENCY_WINDOW;
+        }
+    }
+}
+
 /// Process-wide metrics registry (cheap enough for the serving rates here;
 /// the §Perf pass measures its overhead explicitly).
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
-    latencies: Mutex<BTreeMap<String, Vec<f64>>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    latencies: Mutex<BTreeMap<String, Series>>,
 }
 
 impl Metrics {
@@ -21,6 +54,13 @@ impl Metrics {
 
     pub fn inc(&self, name: &str, by: u64) {
         *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set an absolute (last-write-wins) value — used for externally-owned
+    /// counters like the kernel pool's spawn/wakeup totals and the scratch
+    /// arena's per-layer high-water marks.
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
     }
 
     pub fn observe_s(&self, name: &str, seconds: f64) {
@@ -36,10 +76,15 @@ impl Metrics {
         *self.counters.lock().unwrap().get(name).unwrap_or(&0)
     }
 
-    /// (mean, p50, p95, p99, max) over a latency series, seconds.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// (mean, p50, p95, p99, max) over the retained window of a latency
+    /// series (the most recent [`LATENCY_WINDOW`] samples), seconds.
     pub fn latency_summary(&self, name: &str) -> Option<(f64, f64, f64, f64, f64)> {
         let g = self.latencies.lock().unwrap();
-        let xs = g.get(name)?;
+        let xs = &g.get(name)?.samples;
         if xs.is_empty() {
             return None;
         }
@@ -52,15 +97,22 @@ impl Metrics {
         ))
     }
 
-    /// JSON snapshot (counters + latency summaries in ms).
+    /// JSON snapshot (counters + gauges + latency summaries in ms; the
+    /// latency `count` is the lifetime total, the percentiles cover the
+    /// retained window).
     pub fn snapshot(&self) -> Value {
         let counters = self.counters.lock().unwrap();
+        let gauges = self.gauges.lock().unwrap();
         let lats = self.latencies.lock().unwrap();
         let mut obj = BTreeMap::new();
         for (k, v) in counters.iter() {
             obj.insert(format!("counter.{k}"), json::num(*v as f64));
         }
-        for (k, xs) in lats.iter() {
+        for (k, v) in gauges.iter() {
+            obj.insert(format!("gauge.{k}"), json::num(*v));
+        }
+        for (k, s) in lats.iter() {
+            let xs = &s.samples;
             if xs.is_empty() {
                 continue;
             }
@@ -73,7 +125,7 @@ impl Metrics {
                 format!("latency_ms.{k}.p95"),
                 json::num(stats::percentile(xs, 95.0) * 1e3),
             );
-            obj.insert(format!("latency_ms.{k}.count"), json::num(xs.len() as f64));
+            obj.insert(format!("latency_ms.{k}.count"), json::num(s.total as f64));
         }
         Value::Obj(obj)
     }
@@ -93,6 +145,19 @@ mod tests {
     }
 
     #[test]
+    fn gauges_last_write_wins() {
+        let m = Metrics::new();
+        assert_eq!(m.gauge("pool.spawns"), None);
+        m.set_gauge("pool.spawns", 3.0);
+        m.set_gauge("pool.spawns", 3.0);
+        m.set_gauge("pool.wakeups", 120.0);
+        assert_eq!(m.gauge("pool.spawns"), Some(3.0));
+        let snap = m.snapshot().to_json();
+        assert!(snap.contains("gauge.pool.spawns"));
+        assert!(snap.contains("gauge.pool.wakeups"));
+    }
+
+    #[test]
     fn latency_percentiles() {
         let m = Metrics::new();
         for i in 1..=100 {
@@ -106,12 +171,58 @@ mod tests {
     }
 
     #[test]
+    fn latency_series_is_bounded_under_sustained_traffic() {
+        // regression: observe_s used to grow each series without bound
+        let m = Metrics::new();
+        for _ in 0..6000 {
+            m.observe_s("e2e", 1.0);
+        }
+        for _ in 0..LATENCY_WINDOW {
+            m.observe_s("e2e", 3.0);
+        }
+        {
+            let g = m.latencies.lock().unwrap();
+            let s = g.get("e2e").unwrap();
+            assert_eq!(s.samples.len(), LATENCY_WINDOW, "ring must cap retained samples");
+            assert_eq!(s.total, 6000 + LATENCY_WINDOW as u64);
+        }
+        // the retained window holds only the most recent samples
+        let (mean, p50, _p95, _p99, max) = m.latency_summary("e2e").unwrap();
+        assert_eq!(p50, 3.0);
+        assert_eq!(mean, 3.0);
+        assert_eq!(max, 3.0);
+        // the snapshot count reports the lifetime total, not the window
+        let snap = m.snapshot().to_json();
+        assert!(
+            snap.contains(&format!("\"latency_ms.e2e.count\":{}", 6000 + LATENCY_WINDOW)),
+            "snapshot: {snap}"
+        );
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_first() {
+        let mut s = Series::default();
+        for i in 0..LATENCY_WINDOW + 10 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.samples.len(), LATENCY_WINDOW);
+        // the first 10 slots now hold the wrapped-around newest samples
+        assert_eq!(s.samples[0], LATENCY_WINDOW as f64);
+        assert_eq!(s.samples[9], (LATENCY_WINDOW + 9) as f64);
+        // slot 10 still holds the oldest retained sample
+        assert_eq!(s.samples[10], 10.0);
+        assert_eq!(s.total, (LATENCY_WINDOW + 10) as u64);
+    }
+
+    #[test]
     fn snapshot_is_json() {
         let m = Metrics::new();
         m.inc("served", 5);
+        m.set_gauge("scratch_hw.c1w.act_bytes", 1024.0);
         m.observe_s("e2e", 0.002);
         let snap = m.snapshot().to_json();
         assert!(snap.contains("counter.served"));
+        assert!(snap.contains("gauge.scratch_hw.c1w.act_bytes"));
         assert!(snap.contains("latency_ms.e2e.mean"));
         // parses back
         assert!(crate::util::json::parse(&snap).is_ok());

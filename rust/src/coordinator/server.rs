@@ -17,7 +17,11 @@
 //! run on PJRT (or the threaded f32 host engine when PJRT is absent), while
 //! small/singleton batches skip the padding waste and run on the low-latency
 //! code-domain engine.  The worker owns one [`Scratch`] arena, so the host
-//! paths stop allocating per request once warm.
+//! paths stop allocating per request once warm, and all host kernels
+//! dispatch row bands on the persistent worker pool — the worker exports the
+//! pool's spawn/wakeup counters and the arena's per-layer high-water marks
+//! as metrics gauges (`pool.*`, `scratch_hw.*`), where a flat `pool.spawns`
+//! is the "zero threads spawned per request" steady-state invariant.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -32,7 +36,7 @@ use anyhow::{bail, Context, Result};
 use super::batcher::{BatchQueue, Pending};
 use super::metrics::Metrics;
 use crate::device::QualityConfig;
-use crate::kernels::Scratch;
+use crate::kernels::{self, Scratch};
 use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::AssignMode;
@@ -266,6 +270,9 @@ impl Server {
             // one arena per worker: the host engines stop allocating per
             // request once the buffers are warm
             let mut scratch = Scratch::new();
+            // the persistent kernel pool the host engines dispatch bands on;
+            // its spawn counter stays flat once serving is warm
+            let pool = kernels::Pool::global();
 
             while let Some(batch) = wq.pop_batch() {
                 let t0 = Instant::now();
@@ -308,6 +315,28 @@ impl Server {
                         wm.observe_s("infer_batch", infer_s);
                         wm.inc("batches", 1);
                         wm.inc("requests", n as u64);
+                        // pool + arena telemetry: spawns must stay flat once
+                        // warm (a moving spawn gauge is a perf regression),
+                        // and the per-layer high-water marks show how much
+                        // arena each layer of the served model really needs
+                        let ps = pool.stats();
+                        wm.set_gauge("pool.spawns", ps.spawns as f64);
+                        wm.set_gauge("pool.wakeups", ps.wakeups as f64);
+                        wm.set_gauge("pool.jobs", ps.jobs as f64);
+                        for (layer, pk) in scratch.layer_peaks() {
+                            wm.set_gauge(
+                                &format!("scratch_hw.{layer}.patch_bytes"),
+                                pk.patch_bytes as f64,
+                            );
+                            wm.set_gauge(
+                                &format!("scratch_hw.{layer}.pad_bytes"),
+                                pk.pad_bytes as f64,
+                            );
+                            wm.set_gauge(
+                                &format!("scratch_hw.{layer}.act_bytes"),
+                                pk.act_bytes as f64,
+                            );
+                        }
                         for (i, job) in batch.into_iter().enumerate() {
                             let e2e = job.payload.enqueued.elapsed();
                             wm.observe_s("request_e2e", e2e.as_secs_f64());

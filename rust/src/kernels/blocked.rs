@@ -7,8 +7,8 @@
 //! live in registers across the entire `k` reduction, one 8-wide `w` strip is
 //! loaded once per four rows instead of once per row, and the accumulator
 //! arrays are shaped for the autovectorizer's lanes.  The row dimension
-//! splits across scoped threads for large problems
-//! ([`crate::kernels::for_each_row_band`]).
+//! splits across the persistent worker pool for large problems
+//! ([`crate::kernels::for_each_row_band`] on [`crate::kernels::Pool`]).
 //!
 //! Numerical contract: for every output element the reduction runs over `k`
 //! in ascending order into a single accumulator starting at +0.0, with the
@@ -103,9 +103,23 @@ pub fn gemm_band(out: &mut [f32], xd: &[f32], wd: &[f32], k: usize, n: usize) {
 
 /// `out[M,N] = x[M,K] @ w[K,N]` (caller provides a zeroed `out`).
 ///
-/// Dispatches to the microtiled kernel, parallelized over row bands with
-/// scoped threads when the problem is large enough to amortize spawn cost.
+/// Dispatches to the microtiled kernel, parallelized over row bands on the
+/// global worker pool when the problem is large enough to amortize dispatch.
 pub fn matmul_into(out: &mut [f32], xd: &[f32], wd: &[f32], m: usize, k: usize, n: usize) {
+    matmul_into_on(super::Pool::global(), out, xd, wd, m, k, n)
+}
+
+/// [`matmul_into`] with an explicit worker-pool handle (the serving engines
+/// thread their pool through here).
+pub fn matmul_into_on(
+    pool: &super::Pool,
+    out: &mut [f32],
+    xd: &[f32],
+    wd: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     debug_assert_eq!(out.len(), m * n);
     debug_assert_eq!(xd.len(), m * k);
     debug_assert_eq!(wd.len(), k * n);
@@ -113,9 +127,9 @@ pub fn matmul_into(out: &mut [f32], xd: &[f32], wd: &[f32], m: usize, k: usize, 
         return;
     }
     let macs = m.saturating_mul(k).saturating_mul(n);
-    let nthreads = super::threads_for_rows(m, macs, PAR_THRESHOLD_MACS);
+    let nthreads = super::threads_for_rows(m, macs, PAR_THRESHOLD_MACS).min(pool.width());
     let band = |_: usize, oband: &mut [f32], xband: &[f32]| gemm_band(oband, xband, wd, k, n);
-    super::for_each_row_band(out, xd, m, k, n, nthreads, band);
+    super::for_each_row_band_on(pool, out, xd, m, k, n, nthreads, band);
 }
 
 #[cfg(test)]

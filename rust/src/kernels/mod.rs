@@ -4,11 +4,11 @@
 //! host hardware allows while staying dependency-free (std only):
 //!
 //! * [`blocked`] — cache-blocked f32 GEMM with a 4x8 register-accumulator
-//!   microtile, parallelized over row bands with scoped threads.  This is
+//!   microtile, parallelized over row bands on the worker pool.  This is
 //!   what [`crate::tensor::ops::matmul`] (and therefore im2col conv and the
 //!   fp32 model head) dispatches to; the original ikj loop survives as
 //!   [`crate::tensor::ops::matmul_naive`], the bitwise oracle.
-//! * [`qgemm`] — the code-domain GEMM, in two generations.  v1
+//! * [`mod@qgemm`] — the code-domain GEMM, in two generations.  v1
 //!   ([`PackedQTensor`] + [`qgemm`](qgemm::qgemm)) is the retained
 //!   single-thread reference: zero codes dropped at pack time, shift/add
 //!   contribution tables, hoisted per-group alpha.  v2
@@ -16,13 +16,32 @@
 //!   per-level *offset planes* per (group, column) cell, so the inner loop is
 //!   a straight contiguous sum per plane (lane-friendly for the
 //!   autovectorizer, no 8-way LUT select, half the bytes per entry) and the
-//!   row dimension is split across scoped threads with the same band scheme
+//!   row dimension is split across pool workers with the same band scheme
 //!   as the blocked f32 kernel.  v2 is what the serving engine runs.
-//! * [`qconv`] — the fused conv pipeline: im2col patches are staged
+//! * [`mod@qconv`] — the fused conv pipeline: im2col patches are staged
 //!   chunk-by-chunk into a reusable [`Scratch`] arena and multiplied
 //!   band-by-band on the plane-packed qgemm (or the f32 microkernel), so the
 //!   full patch matrix is never materialized and steady-state serving
 //!   allocates nothing per request.
+//! * [`mod@pool`] — the persistent worker pool all three row-band kernels
+//!   dispatch on.  Workers are spawned once (lazily, on first kernel use)
+//!   and then *parked*; a warm dispatch costs one condvar wakeup per band
+//!   instead of a `std::thread::scope` spawn + join per matmul, so
+//!   steady-state serving spawns zero threads per request
+//!   ([`PoolStats::spawns`] freezes after initialization, exactly like
+//!   [`ScratchStats::allocs`] freezes once the arena is warm).
+//!
+//! ## The `PALLAS_POOL_THREADS` knob
+//!
+//! The global pool sizes itself to `available_parallelism`, capped at
+//! [`pool::MAX_POOL_THREADS`].  Set `PALLAS_POOL_THREADS=<n>` (read once, at
+//! the first parallel kernel call) to override: `n` is the total compute
+//! width *including* the dispatching thread, so `PALLAS_POOL_THREADS=1`
+//! spawns no workers at all and every kernel runs its serial single-thread
+//! path — useful on tiny edge cores, under cgroup CPU quotas the runtime
+//! cannot see, or to pin down nondeterministic scheduling while debugging.
+//! Band partitioning is by whole rows either way, so threaded and serial
+//! runs are bitwise identical.
 //!
 //! The remaining member of the kernel set lives with the quantizer it
 //! accelerates: [`crate::quant::sigma_fast`] scores the whole 19x8
@@ -30,36 +49,49 @@
 //! full assignment passes.
 //!
 //! `benches/bench_kernels.rs` tracks all of these against their naive
-//! oracles and emits `BENCH_kernels.json` for cross-PR perf trajectories.
+//! oracles and emits `BENCH_kernels.json` for cross-PR perf trajectories
+//! (including the pool's spawn-vs-wakeup counters and the arena's per-layer
+//! high-water marks).
 
 pub mod blocked;
+pub mod pool;
 pub mod qconv;
 pub mod qgemm;
 
+pub use pool::{Pool, PoolStats};
 pub use qconv::{fconv_into, qconv, qconv_into};
 pub use qgemm::{
-    qgemm, qgemm2, qgemm2_into, qgemm2_qt, qgemm2_threads, qgemm_qt, PackedQTensor,
-    PackedQTensorV2,
+    qgemm, qgemm2, qgemm2_into, qgemm2_into_on, qgemm2_qt, qgemm2_threads, qgemm_qt,
+    PackedQTensor, PackedQTensorV2,
 };
 
-/// Decide how many scoped worker threads a row-parallel kernel should use:
-/// one unless the total inner-loop work amortizes spawn cost, then at most
-/// one per row, per core, capped at 16 (diminishing returns on the band
-/// sizes this crate serves).
+/// Decide how many band workers a row-parallel kernel should use: one
+/// unless the total inner-loop work amortizes dispatch cost, then at most
+/// one per row, per core, capped at [`pool::MAX_POOL_THREADS`].  The pool
+/// entry points additionally clamp this to their pool's width, so a
+/// `PALLAS_POOL_THREADS=1` global pool serves fully serially — this
+/// function itself stays pool-agnostic (it neither touches nor initializes
+/// the global pool).
 pub fn threads_for_rows(m: usize, total_ops: usize, par_threshold: usize) -> usize {
     if total_ops < par_threshold || m < 2 {
         return 1;
     }
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
-    cores.min(m).min(16)
+    cores.min(m).min(pool::MAX_POOL_THREADS)
 }
 
+/// One pre-split row band awaiting pickup by a pool job: `(first_row,
+/// out_band, x_band)`, taken exactly once by the job that owns the index.
+type BandPart<'a> = std::sync::Mutex<Option<(usize, &'a mut [f32], &'a [f32])>>;
+
 /// Split `out` (`m` rows of `out_cols`) and `x` (`m` rows of `x_cols`) into
-/// matching row bands and run `band(first_row, out_band, x_band)` on each
-/// from its own scoped thread.  Bands partition whole rows, so per-element
-/// reduction order is untouched: a threaded run is bitwise identical to
-/// `band(0, out, x)`.
-pub fn for_each_row_band<F>(
+/// matching row bands and run `band(first_row, out_band, x_band)` on each,
+/// spread over `pool`'s workers plus the calling thread.  Bands partition
+/// whole rows, so per-element reduction order is untouched: a pooled run is
+/// bitwise identical to `band(0, out, x)`.
+#[allow(clippy::too_many_arguments)] // a GEMM band is inherently 3 shapes + 2 slices + dispatch
+pub fn for_each_row_band_on<F>(
+    pool: &Pool,
     out: &mut [f32],
     x: &[f32],
     m: usize,
@@ -78,16 +110,36 @@ pub fn for_each_row_band<F>(
         return;
     }
     let rows_per_band = m.div_ceil(nthreads);
-    std::thread::scope(|scope| {
-        for (bi, (oband, xband)) in out
-            .chunks_mut(rows_per_band * out_cols)
-            .zip(x.chunks(rows_per_band * x_cols))
-            .enumerate()
-        {
-            let bref = &band;
-            scope.spawn(move || bref(bi * rows_per_band, oband, xband));
-        }
+    let nbands = m.div_ceil(rows_per_band);
+    if nbands <= 1 {
+        band(0, out, x);
+        return;
+    }
+    let parts: Vec<BandPart> = out
+        .chunks_mut(rows_per_band * out_cols)
+        .zip(x.chunks(rows_per_band * x_cols))
+        .enumerate()
+        .map(|(bi, (ob, xb))| std::sync::Mutex::new(Some((bi * rows_per_band, ob, xb))))
+        .collect();
+    pool.run_bands(nbands, &|bi: usize| {
+        let (row0, ob, xb) = parts[bi].lock().unwrap().take().expect("band taken once");
+        band(row0, ob, xb);
     });
+}
+
+/// [`for_each_row_band_on`] on the global pool — the form the kernels use.
+pub fn for_each_row_band<F>(
+    out: &mut [f32],
+    x: &[f32],
+    m: usize,
+    x_cols: usize,
+    out_cols: usize,
+    nthreads: usize,
+    band: F,
+) where
+    F: Fn(usize, &mut [f32], &[f32]) + Sync,
+{
+    for_each_row_band_on(Pool::global(), out, x, m, x_cols, out_cols, nthreads, band)
 }
 
 /// Counters for the scratch arena: how often a kernel found a warm buffer
@@ -99,13 +151,44 @@ pub struct ScratchStats {
     pub allocs: u64,
 }
 
+/// Per-layer high-water marks of the scratch arena: the peak bytes a named
+/// layer ever staged in each buffer class.  Engines fold these into
+/// [`Scratch::note_layer`]; the server exports them as metrics gauges, so
+/// "how much arena does each layer actually need" is visible in the
+/// `/metrics`-style snapshot without a debugger.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LayerPeak {
+    /// Peak im2col patch-slab bytes (all band slabs of one call combined).
+    pub patch_bytes: usize,
+    /// Peak SAME-conv zero-pad staging bytes.
+    pub pad_bytes: usize,
+    /// Peak activation (kernel output) bytes.
+    pub act_bytes: usize,
+}
+
+impl LayerPeak {
+    /// Fold a kernel call's staging sizes (in f32 elements) into the peak.
+    pub(crate) fn grow(&mut self, patch_elems: usize, pad_elems: usize, act_elems: usize) {
+        let b = std::mem::size_of::<f32>();
+        self.patch_bytes = self.patch_bytes.max(patch_elems * b);
+        self.pad_bytes = self.pad_bytes.max(pad_elems * b);
+        self.act_bytes = self.act_bytes.max(act_elems * b);
+    }
+
+    fn merge(&mut self, other: LayerPeak) {
+        self.patch_bytes = self.patch_bytes.max(other.patch_bytes);
+        self.pad_bytes = self.pad_bytes.max(other.pad_bytes);
+        self.act_bytes = self.act_bytes.max(other.act_bytes);
+    }
+}
+
 /// Reusable per-worker buffers for the fused serving pipeline.  One arena
 /// lives on each inference worker (and inside every one-shot `forward`), so
 /// im2col patch staging, SAME-conv padding, and layer activations stop
 /// allocating once the buffers have grown to the largest layer.
 #[derive(Debug, Default)]
 pub struct Scratch {
-    /// im2col patch staging — per-thread chunk slabs, never the full matrix.
+    /// im2col patch staging — per-band chunk slabs, never the full matrix.
     pub patches: Vec<f32>,
     /// SAME-conv zero-pad staging.
     pub padded: Vec<f32>,
@@ -114,11 +197,32 @@ pub struct Scratch {
     /// Activation pong buffer (conv / dense outputs before pooling).
     pub act_b: Vec<f32>,
     pub stats: ScratchStats,
+    /// Staging sizes of the most recent kernel call(s), pending attribution
+    /// to a layer by [`Scratch::note_layer`].
+    pub(crate) last: LayerPeak,
+    /// Per-layer high-water marks, ordered by first execution.
+    layer_peaks: Vec<(String, LayerPeak)>,
 }
 
 impl Scratch {
     pub fn new() -> Scratch {
         Scratch::default()
+    }
+
+    /// Attribute the staging sizes recorded since the previous call to the
+    /// named layer, folding them into that layer's high-water mark.  The
+    /// fused engines call this once per layer.
+    pub fn note_layer(&mut self, name: &str) {
+        let last = std::mem::take(&mut self.last);
+        match self.layer_peaks.iter_mut().find(|(n, _)| n == name) {
+            Some((_, pk)) => pk.merge(last),
+            None => self.layer_peaks.push((name.to_string(), last)),
+        }
+    }
+
+    /// Per-layer arena high-water marks, in first-execution order.
+    pub fn layer_peaks(&self) -> &[(String, LayerPeak)] {
+        &self.layer_peaks
     }
 }
 
@@ -147,7 +251,7 @@ mod tests {
         assert_eq!(threads_for_rows(64, 100, 1 << 20), 1, "small work stays serial");
         assert_eq!(threads_for_rows(1, usize::MAX, 1), 1, "one row stays serial");
         let t = threads_for_rows(64, 1 << 22, 1 << 20);
-        assert!(t >= 1 && t <= 16);
+        assert!(t >= 1 && t <= pool::MAX_POOL_THREADS);
         assert!(threads_for_rows(2, 1 << 22, 1 << 20) <= 2, "never more threads than rows");
     }
 
@@ -186,6 +290,31 @@ mod tests {
     }
 
     #[test]
+    fn row_bands_on_private_pool_match_serial() {
+        let pool = Pool::new(3);
+        let (m, xc, oc) = (10, 4, 3);
+        let x: Vec<f32> = (0..m * xc).map(|v| (v as f32).sin()).collect();
+        let mut serial = vec![0.0f32; m * oc];
+        for_each_row_band_on(&pool, &mut serial, &x, m, xc, oc, 1, |row0, ob, xb| {
+            for i in 0..ob.len() / oc {
+                for j in 0..oc {
+                    ob[i * oc + j] = xb[i * xc] * (row0 + i + j) as f32;
+                }
+            }
+        });
+        let mut pooled = vec![0.0f32; m * oc];
+        for_each_row_band_on(&pool, &mut pooled, &x, m, xc, oc, 3, |row0, ob, xb| {
+            for i in 0..ob.len() / oc {
+                for j in 0..oc {
+                    ob[i * oc + j] = xb[i * xc] * (row0 + i + j) as f32;
+                }
+            }
+        });
+        assert_eq!(pooled, serial, "pooled bands must be bitwise identical to serial");
+        assert!(pool.stats().wakeups > 0, "the 3-wide pool must actually run bands");
+    }
+
+    #[test]
     fn ensure_cap_counts_reuse() {
         let mut stats = ScratchStats::default();
         let mut buf = Vec::new();
@@ -195,5 +324,27 @@ mod tests {
         ensure_cap(&mut buf, 32, &mut stats);
         ensure_cap(&mut buf, 64, &mut stats);
         assert_eq!((stats.allocs, stats.reuses), (1, 2), "warm buffer must not realloc");
+    }
+
+    #[test]
+    fn layer_peaks_track_component_maxima() {
+        let mut s = Scratch::new();
+        s.last.grow(100, 0, 400);
+        s.note_layer("c1w");
+        s.last.grow(50, 20, 800);
+        s.note_layer("c1w");
+        s.last.grow(10, 10, 10);
+        s.note_layer("f1w");
+        let peaks = s.layer_peaks();
+        assert_eq!(peaks.len(), 2);
+        assert_eq!(peaks[0].0, "c1w");
+        assert_eq!(
+            peaks[0].1,
+            LayerPeak { patch_bytes: 400, pad_bytes: 80, act_bytes: 3200 },
+            "per-component max over both passes, in bytes"
+        );
+        assert_eq!(peaks[1].1.act_bytes, 40);
+        // `last` is drained by note_layer
+        assert_eq!(s.last, LayerPeak::default());
     }
 }

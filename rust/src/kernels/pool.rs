@@ -1,0 +1,415 @@
+//! Persistent worker pool for the row-band kernels (std only).
+//!
+//! Before this module existed, every parallel matmul paid a
+//! `std::thread::scope` spawn + join per call.  At the small batch sizes
+//! edge serving sees, that fixed dispatch overhead rivals the kernel work
+//! itself.  Here the workers are spawned once, then *parked* on a condvar;
+//! dispatching a warm kernel costs one mutex/condvar wakeup per band instead
+//! of a thread spawn, and steady-state serving spawns **zero** threads per
+//! request (the [`PoolStats::spawns`] counter freezes after initialization,
+//! exactly like `ScratchStats::allocs` freezes after warm-up).
+//!
+//! Design:
+//!
+//! * **Per-worker job slots.**  Each worker owns one `Slot` (a mutex +
+//!   condvar).  A caller leases idle workers from a free-list, posts one
+//!   band job into each leased slot, runs the remaining bands itself, and
+//!   waits for the leased workers to report back.  Because leasing is
+//!   non-blocking — a caller takes only workers that are currently idle and
+//!   runs everything else inline — two engines dispatching concurrently
+//!   simply split the worker set and can never deadlock, even if a band
+//!   function itself re-enters the pool.
+//! * **Epoch/generation barrier.**  Every slot carries a `seq` generation
+//!   counter bumped when a job is posted and a `done` counter the worker
+//!   sets when it finishes.  `run_bands` returns only after `done` has
+//!   caught up with `seq` on every leased slot, so the band closure (which
+//!   borrows the caller's stack) is provably never used after `run_bands`
+//!   returns — that barrier is what makes the internal lifetime erasure
+//!   sound.
+//! * **Identical banding.**  The pool only *executes* band indices; the
+//!   whole-row band partitioning (and therefore every per-element reduction
+//!   order) is fixed by the caller exactly as the scoped-thread
+//!   `for_each_row_band` fixed it, so a pooled run stays bitwise identical
+//!   to a single-thread run.
+//! * **Sizing.**  The lazily-initialized global pool
+//!   ([`Pool::global`], via `OnceLock`) sizes itself to
+//!   `available_parallelism` capped at [`MAX_POOL_THREADS`].  The
+//!   `PALLAS_POOL_THREADS` environment variable overrides the size (read
+//!   once, at first use); `PALLAS_POOL_THREADS=1` keeps zero workers and
+//!   every kernel degrades to the serial single-thread path.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Hard cap on pool width (caller + workers): beyond this the band sizes
+/// this crate serves see diminishing returns, and it bounds the damage of a
+/// typo'd `PALLAS_POOL_THREADS`.
+pub const MAX_POOL_THREADS: usize = 16;
+
+/// One posted band job: the type-erased band closure and the band index the
+/// worker must run.  The `'static` is a lie told by [`Pool::run_bands`]'s
+/// lifetime erasure; its epoch barrier guarantees the reference is never
+/// dereferenced after `run_bands` returns.
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    band: usize,
+}
+
+/// Worker-side state guarded by the slot mutex.
+#[derive(Default)]
+struct SlotState {
+    /// The posted job, taken by the worker exactly once per generation.
+    job: Option<Job>,
+    /// Generation counter: bumped by the caller when a job is posted.
+    seq: u64,
+    /// Completion counter: set to `seq` by the worker when the job is done.
+    done: u64,
+    /// The job's band closure panicked (re-raised on the caller).
+    panicked: bool,
+    /// Pool is being dropped; the worker exits once its slot is drained.
+    shutdown: bool,
+}
+
+/// One parked worker's mailbox: callers post under the mutex and signal the
+/// condvar; the worker signals the same condvar when the job completes.
+#[derive(Default)]
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+/// Monotonic pool counters (see [`Pool::stats`]).  In steady-state serving
+/// `spawns` is flat — threads are created only when the pool is built —
+/// while `wakeups` and `jobs` keep climbing with traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Worker threads ever spawned (frozen after pool construction).
+    pub spawns: u64,
+    /// Band jobs handed to a parked worker (one condvar wakeup each).
+    pub wakeups: u64,
+    /// Band jobs executed in total, inline bands included.
+    pub jobs: u64,
+}
+
+struct Stats {
+    spawns: AtomicU64,
+    wakeups: AtomicU64,
+    jobs: AtomicU64,
+}
+
+/// The persistent worker pool.  See the module docs for the design; see
+/// [`Pool::global`] for the process-wide instance the kernels use.
+pub struct Pool {
+    slots: Vec<std::sync::Arc<Slot>>,
+    /// Indices of currently idle workers (leased/returned by `run_bands`).
+    free: Mutex<Vec<usize>>,
+    stats: Stats,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool")
+            .field("width", &self.width())
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+/// Resolve a `PALLAS_POOL_THREADS`-style override: a parseable value >= 1 is
+/// clamped to [`MAX_POOL_THREADS`]; anything else (unset, garbage, `0`)
+/// falls back to `default`.
+pub fn parse_pool_threads(raw: Option<&str>, default: usize) -> usize {
+    match raw.and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n.min(MAX_POOL_THREADS),
+        _ => default.clamp(1, MAX_POOL_THREADS),
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1)
+        .min(MAX_POOL_THREADS)
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+impl Pool {
+    /// The process-wide pool every kernel entry point defaults to.  Built
+    /// lazily on first use (`OnceLock`), sized by `PALLAS_POOL_THREADS` or
+    /// `available_parallelism` capped at [`MAX_POOL_THREADS`].
+    pub fn global() -> &'static Pool {
+        GLOBAL.get_or_init(Pool::from_env)
+    }
+
+    /// Build a pool sized from the environment (the global pool's recipe,
+    /// constructible privately so tests can pin the env override).
+    pub fn from_env() -> Pool {
+        let threads = parse_pool_threads(
+            std::env::var("PALLAS_POOL_THREADS").ok().as_deref(),
+            default_threads(),
+        );
+        Pool::new(threads)
+    }
+
+    /// Build a pool of total width `threads` (the caller counts as one, so
+    /// `threads - 1` workers are spawned and parked; `threads <= 1` spawns
+    /// none and [`Pool::run_bands`] runs everything serially).
+    pub fn new(threads: usize) -> Pool {
+        let nworkers = threads.clamp(1, MAX_POOL_THREADS) - 1;
+        let pool = Pool {
+            slots: (0..nworkers).map(|_| std::sync::Arc::new(Slot::default())).collect(),
+            free: Mutex::new((0..nworkers).collect()),
+            stats: Stats {
+                spawns: AtomicU64::new(0),
+                wakeups: AtomicU64::new(0),
+                jobs: AtomicU64::new(0),
+            },
+            handles: Mutex::new(Vec::with_capacity(nworkers)),
+        };
+        let mut handles = Vec::with_capacity(nworkers);
+        for (i, slot) in pool.slots.iter().enumerate() {
+            let slot = slot.clone();
+            pool.stats.spawns.fetch_add(1, Ordering::Relaxed);
+            let h = std::thread::Builder::new()
+                .name(format!("pallas-pool-{i}"))
+                .spawn(move || worker_loop(&slot))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        *pool.handles.lock().unwrap() = handles;
+        pool
+    }
+
+    /// Total compute width: the dispatching caller plus the parked workers.
+    pub fn width(&self) -> usize {
+        self.slots.len() + 1
+    }
+
+    /// Parked worker count (`width - 1`).
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Snapshot of the pool counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            spawns: self.stats.spawns.load(Ordering::Relaxed),
+            wakeups: self.stats.wakeups.load(Ordering::Relaxed),
+            jobs: self.stats.jobs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `f(0), f(1), .., f(nbands - 1)`, each call exactly once, spread
+    /// over idle pool workers plus the calling thread.
+    ///
+    /// The caller always runs band 0 (and every band no worker was free
+    /// for), so a width-1 pool — or a fully leased-out one — degrades to the
+    /// serial loop.  Band functions must partition their data by band index;
+    /// the pool adds no ordering of its own, so results are identical to the
+    /// serial loop no matter how bands land on workers.
+    ///
+    /// Panics in `f` (on either a worker or the caller) are re-raised here
+    /// after the barrier, never lost, and never wedge a worker.
+    pub fn run_bands(&self, nbands: usize, f: &(dyn Fn(usize) + Sync)) {
+        if nbands == 0 {
+            return;
+        }
+        self.stats.jobs.fetch_add(nbands as u64, Ordering::Relaxed);
+        if nbands == 1 || self.slots.is_empty() {
+            for b in 0..nbands {
+                f(b);
+            }
+            return;
+        }
+        // lease whatever is idle, never more than the spare bands; leasing
+        // is non-blocking, which is what makes concurrent callers (and
+        // re-entrant band functions) deadlock-free
+        let leased: Vec<usize> = {
+            let mut free = self.free.lock().unwrap();
+            let take = free.len().min(nbands - 1);
+            let at = free.len() - take;
+            free.split_off(at)
+        };
+        // SAFETY (lifetime erasure): the erased reference is dereferenced
+        // only by leased workers, and the epoch barrier below does not let
+        // this function return before every leased worker has set
+        // `done == seq` for the generation posted here — so the borrow of
+        // `f` (and everything it captures) strictly outlives every use.
+        let fj: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f) };
+        let mut posted = Vec::with_capacity(leased.len());
+        for (i, &w) in leased.iter().enumerate() {
+            let slot = &self.slots[w];
+            let mut st = slot.state.lock().unwrap();
+            st.seq += 1;
+            st.job = Some(Job { f: fj, band: i + 1 });
+            posted.push(st.seq);
+            slot.cv.notify_all();
+        }
+        self.stats.wakeups.fetch_add(leased.len() as u64, Ordering::Relaxed);
+        // the caller is a worker too: band 0, plus the bands nobody was
+        // free to take.  Catch a panic so an unwinding caller still waits
+        // out the barrier before the band closure's stack frame dies.
+        let caller = catch_unwind(AssertUnwindSafe(|| {
+            f(0);
+            for b in leased.len() + 1..nbands {
+                f(b);
+            }
+        }));
+        // epoch barrier: every leased worker must finish its generation
+        let mut worker_panicked = false;
+        for (&w, &seq) in leased.iter().zip(&posted) {
+            let slot = &self.slots[w];
+            let mut st = slot.state.lock().unwrap();
+            while st.done < seq {
+                st = slot.cv.wait(st).unwrap();
+            }
+            worker_panicked |= std::mem::take(&mut st.panicked);
+        }
+        self.free.lock().unwrap().extend_from_slice(&leased);
+        if let Err(p) = caller {
+            resume_unwind(p);
+        }
+        assert!(!worker_panicked, "kernel pool worker panicked while running a band");
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            let mut st = slot.state.lock().unwrap();
+            st.shutdown = true;
+            slot.cv.notify_all();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A parked worker: wait for a job on the slot condvar, run it, publish
+/// `done`, park again.  A panicking band closure is caught so the worker
+/// (and the caller's barrier) survive; the flag is re-raised caller-side.
+fn worker_loop(slot: &Slot) {
+    loop {
+        let job = {
+            let mut st = slot.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.job.take() {
+                    break job;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = slot.cv.wait(st).unwrap();
+            }
+        };
+        let ok = catch_unwind(AssertUnwindSafe(|| (job.f)(job.band))).is_ok();
+        let mut st = slot.state.lock().unwrap();
+        st.done = st.seq;
+        st.panicked |= !ok;
+        slot.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_band_exactly_once() {
+        let pool = Pool::new(4);
+        for nbands in [1usize, 2, 3, 4, 9] {
+            let hits: Vec<AtomicUsize> = (0..nbands).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_bands(nbands, &|b| {
+                hits[b].fetch_add(1, Ordering::Relaxed);
+            });
+            for (b, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "band {b} of {nbands}");
+            }
+        }
+        let s = pool.stats();
+        assert_eq!(s.spawns, 3, "width-4 pool spawns exactly 3 workers, once");
+        assert_eq!(s.jobs, 1 + 2 + 3 + 4 + 9);
+        assert!(s.wakeups > 0);
+    }
+
+    #[test]
+    fn width_one_pool_is_serial() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.workers(), 0);
+        let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_bands(5, &|b| {
+            hits[b].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        let s = pool.stats();
+        assert_eq!((s.spawns, s.wakeups), (0, 0), "serial pool never spawns or wakes");
+        assert_eq!(s.jobs, 5);
+    }
+
+    #[test]
+    fn spawns_freeze_after_construction() {
+        let pool = Pool::new(3);
+        let cold = pool.stats().spawns;
+        for _ in 0..50 {
+            pool.run_bands(3, &|_| {});
+        }
+        let warm = pool.stats();
+        assert_eq!(warm.spawns, cold, "warm dispatches must not spawn threads");
+        assert_eq!(warm.jobs, 150);
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool_without_deadlock() {
+        let pool = Pool::new(4);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        pool.run_bands(4, &|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 100 * 4);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = Pool::new(2);
+        let hit = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_bands(2, &|b| {
+                if b == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(hit.is_err(), "worker panic must reach the caller");
+        // the pool is still usable afterwards
+        let n = AtomicUsize::new(0);
+        pool.run_bands(2, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn parse_pool_threads_override() {
+        assert_eq!(parse_pool_threads(Some("1"), 8), 1);
+        assert_eq!(parse_pool_threads(Some(" 4 "), 8), 4);
+        assert_eq!(parse_pool_threads(Some("999"), 8), MAX_POOL_THREADS);
+        assert_eq!(parse_pool_threads(Some("0"), 8), 8, "0 falls back to default");
+        assert_eq!(parse_pool_threads(Some("nope"), 8), 8);
+        assert_eq!(parse_pool_threads(None, 8), 8);
+        assert_eq!(parse_pool_threads(None, 0), 1, "default itself is clamped");
+    }
+}

@@ -4,14 +4,14 @@
 //!
 //! The classic path (`ops::conv2d`) builds the whole `[B*H'*W', kh*kw*C]`
 //! patch matrix — for ConvNet's first layer at batch 32 that is a ~3.5 MB
-//! allocation per request before the GEMM even starts.  Here each scoped
-//! thread owns one band of output rows and one small staging slab
-//! ([`CHUNK`] patch rows); it alternates staging a slab with multiplying it
-//! on the band kernel, so patch data is consumed while still hot in L1/L2.
-//! The same driver serves both kernels:
+//! allocation per request before the GEMM even starts.  Here each band of
+//! output rows runs as one persistent-pool job ([`super::pool`]) owning one
+//! small staging slab ([`CHUNK`] patch rows); it alternates staging a slab
+//! with multiplying it on the band kernel, so patch data is consumed while
+//! still hot in L1/L2.  The same driver serves both kernels:
 //!
-//! * [`qconv_into`] — code-domain: the slab hits
-//!   [`super::qgemm::qgemm2_band`] (plane-packed, multiplication-free);
+//! * [`qconv_into`] — code-domain: the slab hits the plane-packed,
+//!   multiplication-free `qgemm2_band`;
 //! * [`fconv_into`] — f32: the slab hits [`super::blocked::gemm_band`]
 //!   (4x8 register microtile).
 //!
@@ -23,7 +23,7 @@ use anyhow::{bail, Result};
 
 use super::blocked;
 use super::qgemm::{qgemm2_band, PackedQTensorV2, QGEMM_PAR_THRESHOLD};
-use super::{ensure_cap, threads_for_rows, Scratch, ScratchStats};
+use super::{ensure_cap, threads_for_rows, LayerPeak, Pool, Scratch, ScratchStats};
 use crate::tensor::ops;
 use crate::tensor::Tensor;
 
@@ -104,17 +104,26 @@ fn staged_input<'a>(
     &padded[..plen]
 }
 
+/// One pre-split conv band awaiting pickup by a pool job: `(first_row,
+/// out_band, patch_slab)`, taken exactly once by the job that owns the
+/// index.
+type ConvBandPart<'a> = std::sync::Mutex<Option<(usize, &'a mut [f32], &'a mut [f32])>>;
+
 /// The shared band/chunk driver: split the `[B*H'*W']` patch-row space into
-/// scoped-thread bands; within a band, alternate staging a [`CHUNK`]-row
-/// im2col slab into this band's slice of `patches` with running `kernel`
-/// (which accumulates `slab @ weight` into its zeroed out chunk).
-/// `cost = (work_per_row, par_threshold)` feeds thread dispatch.
+/// row bands, one persistent-pool job each; within a band, alternate
+/// staging a [`CHUNK`]-row im2col slab into this band's slice of `patches`
+/// with running `kernel` (which accumulates `slab @ weight` into its zeroed
+/// out chunk).  `cost = (work_per_row, par_threshold)` feeds band dispatch;
+/// `last` collects the staging high-water for layer telemetry.
+#[allow(clippy::too_many_arguments)] // geometry + 3 disjoint scratch fields + pool, by design
 fn conv_driver<K>(
+    pool: &Pool,
     xin: &[f32],
     g: &Geom,
     cost: (usize, usize),
     patches: &mut Vec<f32>,
     stats: &mut ScratchStats,
+    last: &mut LayerPeak,
     out: &mut [f32],
     kernel: &K,
 ) where
@@ -124,8 +133,10 @@ fn conv_driver<K>(
     if g.rows == 0 || g.oc == 0 {
         return;
     }
-    let nthreads = threads_for_rows(g.rows, g.rows.saturating_mul(cost.0), cost.1);
+    let nthreads =
+        threads_for_rows(g.rows, g.rows.saturating_mul(cost.0), cost.1).min(pool.width());
     ensure_cap(patches, nthreads * CHUNK * g.kcols, stats);
+    last.grow(nthreads * CHUNK * g.kcols, 0, out.len());
     let (kcols, oc) = (g.kcols, g.oc);
     let run_band = |row0: usize, oband: &mut [f32], pband: &mut [f32]| {
         let band_rows = oband.len() / oc;
@@ -145,22 +156,24 @@ fn conv_driver<K>(
         return;
     }
     let rpb = g.rows.div_ceil(nthreads);
-    std::thread::scope(|scope| {
-        for (bi, (oband, pband)) in out
-            .chunks_mut(rpb * oc)
-            .zip(patches.chunks_mut(CHUNK * kcols))
-            .enumerate()
-        {
-            let rb = &run_band;
-            scope.spawn(move || rb(bi * rpb, oband, pband));
-        }
+    let nbands = g.rows.div_ceil(rpb);
+    let parts: Vec<ConvBandPart> = out
+        .chunks_mut(rpb * oc)
+        .zip(patches.chunks_mut(CHUNK * kcols))
+        .enumerate()
+        .map(|(bi, (ob, pb))| std::sync::Mutex::new(Some((bi * rpb, ob, pb))))
+        .collect();
+    pool.run_bands(nbands, &|bi: usize| {
+        let (row0, ob, pb) = parts[bi].lock().unwrap().take().expect("band taken once");
+        run_band(row0, ob, pb);
     });
 }
 
 /// Fused code-domain conv: `x [B,H,W,C]` (flat slice) ⊛ packed
 /// `[kh,kw,C,OC]` → `out [B*H'*W'*OC]` (grown in place, never reallocated
-/// once warm).  Returns `(H', W', OC)`.
+/// once warm).  Band jobs run on `pool`.  Returns `(H', W', OC)`.
 pub fn qconv_into(
+    pool: &Pool,
     xd: &[f32],
     dims: (usize, usize, usize, usize),
     p: &PackedQTensorV2,
@@ -180,13 +193,18 @@ pub fn qconv_into(
         bail!("qconv: weight K={} but window is {}x{}x{}", p.k, kh, kw, dims.3);
     }
     ensure_cap(out, g.rows * g.oc, &mut scratch.stats);
+    if g.pad > 0 {
+        scratch.last.grow(0, g.b * g.h2 * g.w2 * g.c, 0);
+    }
     let xin = staged_input(xd, &g, &mut scratch.padded, &mut scratch.stats);
     conv_driver(
+        pool,
         xin,
         &g,
         (p.ops_per_row(), QGEMM_PAR_THRESHOLD),
         &mut scratch.patches,
         &mut scratch.stats,
+        &mut scratch.last,
         &mut out[..g.rows * g.oc],
         &|o: &mut [f32], slab: &[f32]| qgemm2_band(o, slab, p),
     );
@@ -196,7 +214,9 @@ pub fn qconv_into(
 /// Fused f32 conv: same pipeline with the blocked microkernel.  `wd` is the
 /// conv weight `[kh,kw,C,OC]` flattened — row-major, which is exactly the
 /// reshaped `[kh*kw*C, OC]` GEMM operand.  Returns `(H', W')`.
+#[allow(clippy::too_many_arguments)] // conv geometry is irreducibly wide
 pub fn fconv_into(
+    pool: &Pool,
     xd: &[f32],
     dims: (usize, usize, usize, usize),
     wd: &[f32],
@@ -210,14 +230,19 @@ pub fn fconv_into(
         bail!("fconv weight len {} != {}x{}x{}x{}", wd.len(), kh, kw, dims.3, oc);
     }
     ensure_cap(out, g.rows * g.oc, &mut scratch.stats);
+    if g.pad > 0 {
+        scratch.last.grow(0, g.b * g.h2 * g.w2 * g.c, 0);
+    }
     let xin = staged_input(xd, &g, &mut scratch.padded, &mut scratch.stats);
     let kcols = g.kcols;
     conv_driver(
+        pool,
         xin,
         &g,
         (kcols * oc, blocked::PAR_THRESHOLD_MACS),
         &mut scratch.patches,
         &mut scratch.stats,
+        &mut scratch.last,
         &mut out[..g.rows * g.oc],
         &|o: &mut [f32], slab: &[f32]| blocked::gemm_band(o, slab, wd, kcols, oc),
     );
@@ -225,8 +250,8 @@ pub fn fconv_into(
 }
 
 /// Convenience wrapper over [`qconv_into`]: `x [B,H,W,C]` ⊛ packed →
-/// `[B,H',W',OC]` tensor (allocates the result; serving paths use
-/// `qconv_into` with a pooled output buffer instead).
+/// `[B,H',W',OC]` tensor on the global pool (allocates the result; serving
+/// paths use `qconv_into` with a reusable output buffer instead).
 pub fn qconv(x: &Tensor, p: &PackedQTensorV2, same: bool, scratch: &mut Scratch) -> Result<Tensor> {
     let s = x.shape();
     if s.len() != 4 {
@@ -234,7 +259,7 @@ pub fn qconv(x: &Tensor, p: &PackedQTensorV2, same: bool, scratch: &mut Scratch)
     }
     let dims = (s[0], s[1], s[2], s[3]);
     let mut out = Vec::new();
-    let (oh, ow, oc) = qconv_into(x.data(), dims, p, same, scratch, &mut out)?;
+    let (oh, ow, oc) = qconv_into(Pool::global(), x.data(), dims, p, same, scratch, &mut out)?;
     out.truncate(dims.0 * oh * ow * oc);
     Tensor::new(vec![dims.0, oh, ow, oc], out)
 }
@@ -304,6 +329,7 @@ mod tests {
             let mut scratch = Scratch::new();
             let mut out = Vec::new();
             let (oh, ow) = fconv_into(
+                Pool::global(),
                 x.data(),
                 (2, 10, 10, 3),
                 w.data(),
@@ -327,11 +353,12 @@ mod tests {
         let x = Tensor::new(vec![2, 8, 8, 8], gauss(&mut r, 2 * 8 * 8 * 8, 1.0)).unwrap();
         let mut scratch = Scratch::new();
         let mut out = Vec::new();
-        qconv_into(x.data(), (2, 8, 8, 8), &p, true, &mut scratch, &mut out).unwrap();
+        let pool = Pool::global();
+        qconv_into(pool, x.data(), (2, 8, 8, 8), &p, true, &mut scratch, &mut out).unwrap();
         let cold_allocs = scratch.stats.allocs;
         assert!(cold_allocs > 0);
         for _ in 0..3 {
-            qconv_into(x.data(), (2, 8, 8, 8), &p, true, &mut scratch, &mut out).unwrap();
+            qconv_into(pool, x.data(), (2, 8, 8, 8), &p, true, &mut scratch, &mut out).unwrap();
         }
         assert_eq!(scratch.stats.allocs, cold_allocs, "warm passes must not allocate");
         assert!(scratch.stats.reuses >= 9, "stats: {:?}", scratch.stats);

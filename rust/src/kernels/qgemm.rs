@@ -16,8 +16,8 @@
 //!   no per-entry code select, 2 bytes per entry instead of 4 — and the six
 //!   plane sums are combined with adds only
 //!   (`acc = (s₁−m₁) + 2(s₂−m₂) + 4(s₄−m₄)`, doublings as self-adds).  Rows
-//!   are split across scoped threads with the same band scheme as
-//!   [`super::blocked`], so a threaded run is bitwise identical to the
+//!   are split across the persistent worker pool with the same band scheme
+//!   as [`super::blocked`], so a pooled run is bitwise identical to the
 //!   single-thread one.
 //!
 //! Both kernels share the structural wins of the code domain: zero/reserved
@@ -302,14 +302,26 @@ pub(crate) fn qgemm2_band(out: &mut [f32], xb: &[f32], p: &PackedQTensorV2) {
 }
 
 /// `out[M,OC] = x[M,K] @ packed` on the plane-packed layout (caller provides
-/// a zeroed `out` of exactly `m * OC`), row bands across scoped threads.
+/// a zeroed `out` of exactly `m * OC`), row bands on the global worker pool.
 pub fn qgemm2_into(out: &mut [f32], xd: &[f32], m: usize, p: &PackedQTensorV2) {
+    qgemm2_into_on(super::Pool::global(), out, xd, m, p)
+}
+
+/// [`qgemm2_into`] with an explicit worker-pool handle (the serving engines
+/// thread their pool through here).
+pub fn qgemm2_into_on(
+    pool: &super::Pool,
+    out: &mut [f32],
+    xd: &[f32],
+    m: usize,
+    p: &PackedQTensorV2,
+) {
     debug_assert_eq!(out.len(), m * p.oc);
     debug_assert_eq!(xd.len(), m * p.k);
     let total = m.saturating_mul(p.ops_per_row());
-    let nthreads = super::threads_for_rows(m, total, QGEMM_PAR_THRESHOLD);
+    let nthreads = super::threads_for_rows(m, total, QGEMM_PAR_THRESHOLD).min(pool.width());
     let band = |_: usize, ob: &mut [f32], xb: &[f32]| qgemm2_band(ob, xb, p);
-    super::for_each_row_band(out, xd, m, p.k, p.oc, nthreads, band);
+    super::for_each_row_band_on(pool, out, xd, m, p.k, p.oc, nthreads, band);
 }
 
 /// Shared tensor-level entry: validate shapes, run with the given thread

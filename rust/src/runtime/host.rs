@@ -3,9 +3,12 @@
 //! Two engines live here, both mirroring the L2 model graphs exactly (same
 //! im2col ordering, same layer stack), and both running the fused zero-copy
 //! pipeline: conv layers stage im2col patches band-by-band through a
-//! [`Scratch`] arena ([`crate::kernels::qconv`]), activations ping-pong
+//! [`Scratch`] arena ([`mod@crate::kernels::qconv`]), activations ping-pong
 //! between two pooled buffers, and epilogues (bias + ReLU, 2x2 pool) run in
-//! place — steady-state serving allocates only the returned logits.
+//! place — steady-state serving allocates only the returned logits.  All
+//! row-band kernels dispatch on the persistent worker pool
+//! ([`crate::kernels::Pool`]), so a warm engine spawns zero threads per
+//! request.
 //!
 //! * the f32 path ([`forward`] / [`forward_with`]) — every layer on the
 //!   blocked/microtiled GEMM ([`crate::kernels::blocked`]).  It is the
@@ -24,7 +27,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::codec::{EncodedModel, EncodedTensor};
 use crate::device::QualityConfig;
-use crate::kernels::{self, blocked, PackedQTensorV2, Scratch};
+use crate::kernels::{self, blocked, PackedQTensorV2, Pool, Scratch};
 use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::{quantize, AssignMode};
@@ -38,9 +41,9 @@ pub fn forward(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
 
 /// Forward one batch on the fused f32 pipeline, reusing `scratch` — the
 /// serving form: a worker holds one arena and stops allocating per request
-/// once it is warm.
+/// once it is warm.  Band jobs run on the global persistent pool.
 pub fn forward_with(store: &WeightStore, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
-    FusedFwd { store, packed: None }.run(x, scratch)
+    FusedFwd { store, packed: None, pool: Pool::global() }.run(x, scratch)
 }
 
 /// LeNet-5 on the per-op tensor path: x [B,28,28,1] -> logits [B,10].
@@ -104,9 +107,12 @@ pub fn quantize_tensors(
 /// The fused zero-copy forward pipeline, shared by the f32 engine
 /// (`packed: None`) and the code-domain [`QuantizedEngine`]: per layer the
 /// packed plane layout is preferred when present, the f32 weight otherwise.
+/// Every row-band kernel dispatches on `pool`, so steady-state serving
+/// spawns zero threads per request.
 struct FusedFwd<'a> {
     store: &'a WeightStore,
     packed: Option<&'a BTreeMap<String, PackedQTensorV2>>,
+    pool: &'static Pool,
 }
 
 impl FusedFwd<'_> {
@@ -136,15 +142,23 @@ impl FusedFwd<'_> {
         out: &mut Vec<f32>,
     ) -> Result<(usize, usize, usize)> {
         if let Some(p) = self.packed_for(name) {
-            return kernels::qconv_into(xb, dims, p, same, scratch, out);
+            return kernels::qconv_into(self.pool, xb, dims, p, same, scratch, out);
         }
         let wt = self.store.get(name)?;
         let ws = wt.shape();
         if ws.len() != 4 || ws[2] != dims.3 {
             bail!("{name}: conv weight must be [kh,kw,{},OC], got {:?}", dims.3, ws);
         }
-        let (oh, ow) =
-            kernels::fconv_into(xb, dims, wt.data(), (ws[0], ws[1], ws[3]), same, scratch, out)?;
+        let (oh, ow) = kernels::fconv_into(
+            self.pool,
+            xb,
+            dims,
+            wt.data(),
+            (ws[0], ws[1], ws[3]),
+            same,
+            scratch,
+            out,
+        )?;
         Ok((oh, ow, ws[3]))
     }
 
@@ -163,9 +177,10 @@ impl FusedFwd<'_> {
                 bail!("{name}: dense input {} != {}x{}", xb.len(), m, p.k);
             }
             kernels::ensure_cap(out, m * p.oc, &mut scratch.stats);
+            scratch.last.grow(0, 0, m * p.oc);
             let o = &mut out[..m * p.oc];
             o.fill(0.0);
-            kernels::qgemm2_into(o, xb, m, p);
+            kernels::qgemm2_into_on(self.pool, o, xb, m, p);
             return Ok(p.oc);
         }
         let wt = self.store.get(name)?;
@@ -175,9 +190,10 @@ impl FusedFwd<'_> {
         }
         let n = ws[1];
         kernels::ensure_cap(out, m * n, &mut scratch.stats);
+        scratch.last.grow(0, 0, m * n);
         let o = &mut out[..m * n];
         o.fill(0.0);
-        blocked::matmul_into(o, xb, wt.data(), m, ws[0], n);
+        blocked::matmul_into_on(self.pool, o, xb, wt.data(), m, ws[0], n);
         Ok(n)
     }
 
@@ -220,6 +236,7 @@ impl FusedFwd<'_> {
         // the ping/pong buffers
         let (oh, ow, oc) = self.conv_into(x.data(), (b, 28, 28, 1), "c1w", false, scratch, nxt)?;
         ops::bias_relu_inplace(&mut nxt[..b * oh * ow * oc], self.bias_of("c1b", oc)?);
+        scratch.note_layer("c1w");
         let (mut dh, mut dw, mut dc) = (oh / 2, ow / 2, oc);
         kernels::ensure_cap(cur, b * dh * dw * dc, &mut scratch.stats);
         ops::maxpool2_into(&nxt[..b * oh * ow * oc], (b, oh, ow, oc), &mut cur[..b * dh * dw * dc]);
@@ -227,6 +244,7 @@ impl FusedFwd<'_> {
         let (oh, ow, oc) =
             self.conv_into(&cur[..b * dh * dw * dc], (b, dh, dw, dc), "c2w", false, scratch, nxt)?;
         ops::bias_relu_inplace(&mut nxt[..b * oh * ow * oc], self.bias_of("c2b", oc)?);
+        scratch.note_layer("c2w");
         (dh, dw, dc) = (oh / 2, ow / 2, oc);
         kernels::ensure_cap(cur, b * dh * dw * dc, &mut scratch.stats);
         ops::maxpool2_into(&nxt[..b * oh * ow * oc], (b, oh, ow, oc), &mut cur[..b * dh * dw * dc]);
@@ -236,10 +254,12 @@ impl FusedFwd<'_> {
         for (wname, bname) in [("f1w", "f1b"), ("f2w", "f2b")] {
             let n = self.dense_into(&cur[..b * feat], b, wname, scratch, nxt)?;
             ops::bias_relu_inplace(&mut nxt[..b * n], self.bias_of(bname, n)?);
+            scratch.note_layer(wname);
             std::mem::swap(cur, nxt);
             feat = n;
         }
         let n = self.dense_into(&cur[..b * feat], b, "f3w", scratch, nxt)?;
+        scratch.note_layer("f3w");
         let mut logits = nxt[..b * n].to_vec();
         ops::bias_inplace(&mut logits, self.bias_of("f3b", n)?);
         Tensor::new(vec![b, n], logits)
@@ -259,6 +279,7 @@ impl FusedFwd<'_> {
             let xin: &[f32] = if first { x.data() } else { &cur[..b * dh * dw * dc] };
             let (oh, ow, oc) = self.conv_into(xin, (b, dh, dw, dc), kname, true, scratch, nxt)?;
             ops::bias_relu_inplace(&mut nxt[..b * oh * ow * oc], self.bias_of(bname, oc)?);
+            scratch.note_layer(kname);
             (dh, dw, dc) = (oh / 2, ow / 2, oc);
             kernels::ensure_cap(cur, b * dh * dw * dc, &mut scratch.stats);
             ops::maxpool2_into(
@@ -270,6 +291,7 @@ impl FusedFwd<'_> {
         }
         let feat = dh * dw * dc;
         let n = self.dense_into(&cur[..b * feat], b, "fcw", scratch, nxt)?;
+        scratch.note_layer("fcw");
         let mut logits = nxt[..b * n].to_vec();
         ops::bias_inplace(&mut logits, self.bias_of("fcb", n)?);
         Tensor::new(vec![b, n], logits)
@@ -286,6 +308,10 @@ impl FusedFwd<'_> {
 pub struct QuantizedEngine {
     store: WeightStore,
     packed: BTreeMap<String, PackedQTensorV2>,
+    /// The persistent worker pool every row-band kernel of this engine
+    /// dispatches on — shared process-wide, so engines running concurrently
+    /// split one warm worker set instead of spawning per matmul.
+    pool: &'static Pool,
 }
 
 impl QuantizedEngine {
@@ -318,11 +344,17 @@ impl QuantizedEngine {
         for name in packed.keys() {
             store.remove(name);
         }
-        Ok(QuantizedEngine { store, packed })
+        Ok(QuantizedEngine { store, packed, pool: Pool::global() })
     }
 
     pub fn kind(&self) -> ModelKind {
         self.store.kind
+    }
+
+    /// The worker pool this engine dispatches on (its `stats()` expose the
+    /// spawn/wakeup counters; spawns stay flat across warm forwards).
+    pub fn pool(&self) -> &'static Pool {
+        self.pool
     }
 
     /// Fraction of packed codes the qgemm never touches (realized zero-skip).
@@ -348,7 +380,8 @@ impl QuantizedEngine {
     /// dispatches to the plane-packed code-domain kernels or the f32 GEMM,
     /// and a warm arena allocates nothing per request.
     pub fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
-        FusedFwd { store: &self.store, packed: Some(&self.packed) }.run(x, scratch)
+        FusedFwd { store: &self.store, packed: Some(&self.packed), pool: self.pool }
+            .run(x, scratch)
     }
 }
 
@@ -468,6 +501,39 @@ mod tests {
             scratch.stats
         );
         assert!(scratch.stats.reuses > 0);
+    }
+
+    #[test]
+    fn layer_peaks_recorded_per_layer() {
+        let store = random_store(17, crate::model::meta::ModelKind::Lenet);
+        let mut scratch = Scratch::new();
+        let x = Tensor::zeros(vec![2, 28, 28, 1]);
+        forward_with(&store, &x, &mut scratch).unwrap();
+        let names: Vec<&str> = scratch.layer_peaks().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["c1w", "c2w", "f1w", "f2w", "f3w"], "layers in execution order");
+        for (n, pk) in scratch.layer_peaks() {
+            assert!(pk.act_bytes > 0, "{n} must record activation bytes");
+        }
+        // conv layers stage patch slabs; LeNet convs are VALID, so no pad
+        let c1 = scratch.layer_peaks()[0].1;
+        assert!(c1.patch_bytes > 0);
+        assert_eq!(c1.pad_bytes, 0);
+        // a second, bigger batch raises the high-water marks monotonically
+        let x2 = Tensor::zeros(vec![4, 28, 28, 1]);
+        forward_with(&store, &x2, &mut scratch).unwrap();
+        let c1b = scratch.layer_peaks()[0].1;
+        assert!(c1b.act_bytes >= 2 * c1.act_bytes, "peaks track the larger batch");
+    }
+
+    #[test]
+    fn convnet_same_layers_record_pad_staging() {
+        let store = random_store(19, crate::model::meta::ModelKind::Convnet);
+        let mut scratch = Scratch::new();
+        let x = Tensor::zeros(vec![1, 32, 32, 3]);
+        forward_with(&store, &x, &mut scratch).unwrap();
+        let (name, k1) = &scratch.layer_peaks()[0];
+        assert_eq!(name, "k1");
+        assert!(k1.pad_bytes > 0, "SAME conv must record zero-pad staging");
     }
 
     #[test]

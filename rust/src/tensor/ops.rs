@@ -87,7 +87,7 @@ pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> Result<(Tensor, usize, usize)
 
 /// Stage rows `[row0, row0+nrows)` of the VALID-conv patch matrix into
 /// `dst` (`nrows * kh*kw*C` floats, fully overwritten) — the band-staging
-/// primitive of the fused conv pipeline ([`crate::kernels::qconv`]).  Patch
+/// primitive of the fused conv pipeline ([`mod@crate::kernels::qconv`]).  Patch
 /// row `r` decodes as `(bi, oi, oj)` of the `[B, H', W']` output grid;
 /// ordering within a row is (di, dj, c), identical to [`im2col`].
 pub fn im2col_rows_into(

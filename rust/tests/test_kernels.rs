@@ -11,14 +11,23 @@
 //! (d) the blocked/microtiled matmul equals the naive ikj loop within 1e-5
 //!     (it is in fact bitwise identical — same reduction order);
 //! (e) the O(sort) sigma-search picks the identical (gamma, delta, codes)
-//!     as the naive 152-pass grid, including at ConvNet layer sizes.
+//!     as the naive 152-pass grid, including at ConvNet layer sizes;
+//! (f) the persistent worker pool: pooled band runs are bitwise identical
+//!     to single-thread at band boundaries, the spawn counter freezes after
+//!     warm-up, concurrent engines share the pool without deadlock, and
+//!     `PALLAS_POOL_THREADS=1` degrades to the serial path.
 
+use qsq_edge::data::synth_store;
+use qsq_edge::device::QualityConfig;
 use qsq_edge::kernels::{
-    qconv, qgemm2, qgemm2_qt, qgemm2_threads, qgemm_qt, PackedQTensor, PackedQTensorV2, Scratch,
+    blocked, for_each_row_band_on, qconv, qgemm2, qgemm2_qt, qgemm2_threads, qgemm_qt,
+    PackedQTensor, PackedQTensorV2, Pool, Scratch,
 };
+use qsq_edge::model::meta::ModelKind;
 use qsq_edge::quant::codes::Code;
 use qsq_edge::quant::qsq::{quantize, quantize_sigma_search_naive, AssignMode, QuantizedTensor};
 use qsq_edge::quant::vectorize::Grouping;
+use qsq_edge::runtime::host::QuantizedEngine;
 use qsq_edge::tensor::{ops, Tensor};
 use qsq_edge::util::prop::{check, forall, gen_weights};
 use qsq_edge::util::rng::Rng;
@@ -226,6 +235,138 @@ fn fast_sigma_search_identical_at_convnet_layer_size() {
     assert_eq!(fast.delta, naive.delta);
     assert_eq!(fast.codes, naive.codes);
     assert_eq!(fast.scalars, naive.scalars);
+}
+
+#[test]
+fn pooled_bands_bitwise_equal_serial_at_band_boundaries() {
+    // the blocked f32 microkernel through private pools of several widths,
+    // at shapes that stress banding (m below, at, and just off the width)
+    let mut r = Rng::new(0xA11A5);
+    let (k, n) = (37, 29);
+    let wd = gen_weights(&mut r, k * n, 0.5);
+    for m in [1usize, 2, 3, 5, 8, 13] {
+        let xd = gen_weights(&mut r, m * k, 1.0);
+        let mut serial = vec![0.0f32; m * n];
+        blocked::gemm_band(&mut serial, &xd, &wd, k, n);
+        for width in [2usize, 3, 5] {
+            let pool = Pool::new(width);
+            let mut pooled = vec![0.0f32; m * n];
+            for_each_row_band_on(&pool, &mut pooled, &xd, m, k, n, width, |_, ob, xb| {
+                blocked::gemm_band(ob, xb, &wd, k, n);
+            });
+            assert_eq!(pooled, serial, "m={m} width={width} diverged from serial");
+        }
+    }
+}
+
+#[test]
+fn pool_spawns_frozen_across_warm_engine_forwards() {
+    // the acceptance invariant: steady-state serving spawns zero threads
+    // per request — the global pool's spawn counter must not move across
+    // warm QuantizedEngine forwards, and the outputs must stay identical
+    let store = synth_store(33, ModelKind::Lenet);
+    let quality = QualityConfig { phi: 4, group: 16 };
+    let engine = QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+    let mut r = Rng::new(34);
+    let xdata: Vec<f32> = gen_weights(&mut r, 32 * 28 * 28, 1.0);
+    let x = Tensor::new(vec![32, 28, 28, 1], xdata).unwrap();
+    let mut scratch = Scratch::new();
+    // warm-up: first forward builds the pool (lazily) and grows the arena
+    let first = engine.forward_with(&x, &mut scratch).unwrap();
+    let warm_spawns = engine.pool().stats().spawns;
+    for _ in 0..5 {
+        let again = engine.forward_with(&x, &mut scratch).unwrap();
+        assert_eq!(again.data(), first.data(), "warm forward changed the result");
+    }
+    let s = engine.pool().stats();
+    assert_eq!(
+        s.spawns, warm_spawns,
+        "warm forwards must not spawn threads (pool stats: {s:?})"
+    );
+}
+
+#[test]
+fn concurrent_engines_share_the_pool_without_deadlock() {
+    // two engines on two threads, both dispatching on the shared global
+    // pool; a watchdog timeout turns a deadlock into a failure, not a hang
+    let quality = QualityConfig { phi: 4, group: 16 };
+    let lenet = QuantizedEngine::quantize_store(
+        &synth_store(35, ModelKind::Lenet),
+        quality,
+        AssignMode::SigmaSearch,
+    )
+    .unwrap();
+    let convnet = QuantizedEngine::quantize_store(
+        &synth_store(36, ModelKind::Convnet),
+        quality,
+        AssignMode::SigmaSearch,
+    )
+    .unwrap();
+    let (tx, rx) = std::sync::mpsc::channel::<bool>();
+    // detached (not scoped) threads: on a real deadlock the workers never
+    // return, and a scoped join would hang the test past its watchdog —
+    // detached, the recv_timeout below fails the test in 120 s and the
+    // wedged threads die with the process
+    let txa = tx.clone();
+    std::thread::spawn(move || {
+        let mut r = Rng::new(37);
+        let x =
+            Tensor::new(vec![16, 28, 28, 1], gen_weights(&mut r, 16 * 28 * 28, 1.0)).unwrap();
+        let mut scratch = Scratch::new();
+        let want = lenet.forward_with(&x, &mut scratch).unwrap();
+        let mut ok = true;
+        for _ in 0..6 {
+            let got = lenet.forward_with(&x, &mut scratch).unwrap();
+            ok &= got.data() == want.data();
+        }
+        let _ = txa.send(ok);
+    });
+    let txb = tx;
+    std::thread::spawn(move || {
+        let mut r = Rng::new(38);
+        let x =
+            Tensor::new(vec![4, 32, 32, 3], gen_weights(&mut r, 4 * 32 * 32 * 3, 1.0)).unwrap();
+        let mut scratch = Scratch::new();
+        let want = convnet.forward_with(&x, &mut scratch).unwrap();
+        let mut ok = true;
+        for _ in 0..6 {
+            let got = convnet.forward_with(&x, &mut scratch).unwrap();
+            ok &= got.data() == want.data();
+        }
+        let _ = txb.send(ok);
+    });
+    for _ in 0..2 {
+        let ok = rx
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .expect("concurrent engine forwards deadlocked on the shared pool");
+        assert!(ok, "concurrent forwards diverged from their single-engine results");
+    }
+}
+
+#[test]
+fn pool_threads_env_of_one_degrades_to_serial() {
+    // pin the global pool's config first so the env write cannot race its
+    // lazy initialization, then build a private pool from the override
+    let _ = Pool::global();
+    std::env::set_var("PALLAS_POOL_THREADS", "1");
+    let pool = Pool::from_env();
+    std::env::remove_var("PALLAS_POOL_THREADS");
+    assert_eq!(pool.workers(), 0, "PALLAS_POOL_THREADS=1 must spawn no workers");
+    // kernels on a width-1 pool run the serial path and still compute
+    // correct results
+    let mut r = Rng::new(39);
+    let (m, k, n) = (9, 21, 17);
+    let xd = gen_weights(&mut r, m * k, 1.0);
+    let wd = gen_weights(&mut r, k * n, 0.5);
+    let mut serial = vec![0.0f32; m * n];
+    blocked::gemm_band(&mut serial, &xd, &wd, k, n);
+    let mut pooled = vec![0.0f32; m * n];
+    for_each_row_band_on(&pool, &mut pooled, &xd, m, k, n, 8, |_, ob, xb| {
+        blocked::gemm_band(ob, xb, &wd, k, n);
+    });
+    assert_eq!(pooled, serial);
+    let s = pool.stats();
+    assert_eq!((s.spawns, s.wakeups), (0, 0), "serial pool must never spawn or wake");
 }
 
 #[test]
