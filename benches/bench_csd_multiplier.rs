@@ -1,11 +1,15 @@
 //! Quality Scalable Multiplier benchmarks — the §V.B / Fig.-11 numbers:
 //! partial products, energy/multiply, and error as the digit budget scales,
-//! on real trained-filter weight distributions.
+//! on real trained-filter weight distributions — plus the tensor-path
+//! `kernels::csd` twin at the same digit budgets, so scalar-simulator and
+//! serving-kernel throughput sit side by side.
 
 use qsq_edge::bench::run_bench;
+use qsq_edge::device::CsdQuality;
 use qsq_edge::hw::csd;
 use qsq_edge::hw::fixedpoint::Format;
 use qsq_edge::hw::multiplier::{csd_nonzero_histogram, dot, QsmConfig};
+use qsq_edge::kernels::{csd_gemm_into, PackedCsdTensor};
 use qsq_edge::model::meta::ModelKind;
 use qsq_edge::model::store::{artifacts_dir, WeightStore};
 use qsq_edge::util::rng::Rng;
@@ -65,4 +69,28 @@ fn main() {
         csd_nonzero_histogram(&ws32, Format::Q16_14)
     });
     println!("{}", res.report());
+
+    // the same 4096 MACs through the tensor-path twin: weights packed once
+    // into digit planes (kernels::csd), activations as one [1, 4096] row —
+    // the per-multiply CSD work moves to pack time, which is the point
+    println!("\n-- kernels::csd tensor path (same MACs, packed once) --");
+    let xs32: Vec<f32> = xs.iter().map(|&v| v as f32).collect();
+    for digits in [2usize, 4, usize::MAX] {
+        let q = CsdQuality { fmt: Format::Q16_14, max_digits: digits };
+        let p = PackedCsdTensor::pack(&ws32, &[4096, 1], q).unwrap();
+        let label = if digits == usize::MAX { "exact".into() } else { digits.to_string() };
+        let mut out = [0.0f32; 1];
+        let res = run_bench(
+            &format!("csd-gemm 4096 MACs (digits={label}, {:.2} pp/MAC)", p.stats.mean_pp()),
+            2,
+            50,
+            4096.0,
+            || {
+                out[0] = 0.0;
+                csd_gemm_into(&mut out, &xs32, 1, &p);
+                out[0]
+            },
+        );
+        println!("{}", res.report());
+    }
 }

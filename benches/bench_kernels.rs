@@ -9,6 +9,10 @@
 //!   reuse/alloc counters printed so "zero per-request im2col allocations"
 //!   is visible in the output;
 //! * end-to-end engine forwards (f32 fused vs code-domain) on random stores;
+//! * the truncated-CSD shift-and-add GEMM (`kernels::csd`) across digit
+//!   budgets vs the f32 matmul over its decode, next to the per-scalar QSM
+//!   datapath simulator (`hw::multiplier::dot`) it is reconciled against —
+//!   the `bench_csd_multiplier`-vs-`kernels::csd` trajectory entries;
 //! * blocked/microtiled f32 matmul vs the naive ikj loop;
 //! * O(sort) sigma-search quantization vs the naive 19x8 grid (152 full
 //!   assignment passes).
@@ -236,6 +240,58 @@ fn main() {
             );
             results.push(highwater_entry(&format!("scratch-hw lenet {layer}"), *pk));
         }
+    }
+
+    // --- truncated-CSD shift-and-add GEMM vs the per-scalar QSM simulator ---
+    {
+        use qsq_edge::device::CsdQuality;
+        use qsq_edge::hw::fixedpoint::Format;
+        use qsq_edge::hw::multiplier::{dot, QsmConfig};
+        use qsq_edge::kernels::PackedCsdTensor;
+
+        let (name, m, shape): (&str, usize, &[usize]) = ("lenet-f1w[256,120]", 32, &[256, 120]);
+        let (k, oc) = matrix_dims(shape).unwrap();
+        let w = gen_weights(&mut r, k * oc, 0.2);
+        let x = Tensor::new(vec![m, k], gen_weights(&mut r, m * k, 1.0)).unwrap();
+        let items = (m * k * oc) as f64;
+        // f32 baseline at the same shape: what the CSD dial is traded against
+        let dec = Tensor::new(
+            vec![k, oc],
+            PackedCsdTensor::pack(&w, shape, CsdQuality::exact()).unwrap().decode(),
+        )
+        .unwrap();
+        let f32base = run_bench(&format!("csd-decoded-matmul  {name} m={m}"), 3, 20, items, || {
+            ops::matmul(&x, &dec).unwrap()
+        });
+        println!("{}", f32base.report());
+        results.push(f32base);
+        for digits in [2usize, 4, usize::MAX] {
+            let q = CsdQuality { fmt: Format::Q16_14, max_digits: digits };
+            let p = PackedCsdTensor::pack(&w, shape, q).unwrap();
+            let label =
+                if digits == usize::MAX { "exact".to_string() } else { format!("k={digits}") };
+            let b = run_bench(&format!("csd-gemm {label:<7} {name} m={m}"), 3, 20, items, || {
+                kernels::csd_gemm(&x, &p).unwrap()
+            });
+            println!("{}", b.report());
+            println!(
+                "  -> digit dial {label}: {:.2} pp/MAC, {:.1}% MACs fully gated",
+                p.stats.mean_pp(),
+                100.0 * p.skipped_fraction()
+            );
+            results.push(b);
+        }
+        // the per-scalar QSM datapath simulator over one column of the same
+        // MACs — the bit-accurate oracle `kernels::csd` is reconciled with
+        // (bench_csd_multiplier sweeps it in depth); items = k MACs
+        let cfg = QsmConfig::new(Format::Q16_14, 4);
+        let xs: Vec<f64> = x.data()[..k].iter().map(|&v| v as f64).collect();
+        let ws: Vec<f64> = (0..k).map(|row| w[row * oc] as f64).collect();
+        let sim = run_bench(&format!("qsm-dot-sim k=4     {name} 1col"), 2, 20, k as f64, || {
+            dot(cfg, &xs, &ws)
+        });
+        println!("{}", sim.report());
+        results.push(sim);
     }
 
     // --- blocked/parallel f32 matmul vs the naive ikj loop ------------------

@@ -1,13 +1,19 @@
 //! Design-space exploration (Fig.-10 style): sweep quality level phi and
 //! vector length N over both models; print (memory savings, energy
-//! efficiency, accuracy) per point plus the QSM multiplier trade-off.
+//! efficiency, accuracy) per point plus the QSM multiplier trade-off — and
+//! the CSD digit dial stacked on top of (phi, N), i.e. the full
+//! accuracy-vs-energy frontier both quality knobs span.
 //!
 //! ```bash
 //! cargo run --release --example quality_sweep [-- --fast]
 //! ```
+//!
+//! The trained-model sweep needs `artifacts/`; without it that section is
+//! skipped and the synthetic-store CSD frontier still runs.
 
 use anyhow::Result;
 
+use qsq_edge::device::CsdQuality;
 use qsq_edge::hw::energy;
 use qsq_edge::hw::fixedpoint::Format;
 use qsq_edge::hw::multiplier::{dot, QsmConfig};
@@ -17,10 +23,22 @@ use qsq_edge::model::store::{artifacts_dir, Dataset, WeightStore};
 use qsq_edge::quant::qsq::AssignMode;
 use qsq_edge::repro;
 use qsq_edge::runtime::client::Runtime;
+use qsq_edge::runtime::host::{forward, CsdEngine};
+use qsq_edge::tensor::{ops, Tensor};
 use qsq_edge::util::rng::Rng;
 
 fn main() -> Result<()> {
     let fast = std::env::args().any(|a| a == "--fast");
+    if let Err(e) = trained_sweep(fast) {
+        println!("(trained-model sweep skipped: {e:#})");
+    }
+    qsm_micro_sweep();
+    csd_dial_sweep(fast)?;
+    Ok(())
+}
+
+/// The original Fig.-10 sweep on trained artifacts (PJRT evaluation).
+fn trained_sweep(fast: bool) -> Result<()> {
     let limit = if fast { 512 } else { 2048 };
     let dir = artifacts_dir();
     let mut rt = Runtime::new(&dir)?;
@@ -57,8 +75,11 @@ fn main() -> Result<()> {
             }
         }
     }
+    Ok(())
+}
 
-    // QSM multiplier micro design space: partial products vs error
+/// QSM multiplier micro design space: partial products vs error.
+fn qsm_micro_sweep() {
     println!("\n== quality scalable multiplier (Q32.24, 4096 random MACs) ==");
     println!("{:<10} {:>12} {:>14} {:>12}", "digits", "mean PPs", "energy pJ/mul", "rms err");
     let mut r = Rng::new(1);
@@ -75,5 +96,55 @@ fn main() -> Result<()> {
             st.rms_err()
         );
     }
+}
+
+/// The CSD digit dial stacked on (phi, N): quantize + decode at the QSQ
+/// point, serve through [`CsdEngine`] at each digit budget, and print the
+/// accuracy-vs-energy frontier — argmax agreement with the fp32 forward as
+/// the accuracy proxy (synthetic store, so no artifacts needed), partial
+/// products per MAC and pJ/input from the engine's energy ledger as the
+/// energy axis.
+fn csd_dial_sweep(fast: bool) -> Result<()> {
+    use qsq_edge::data::synth_store;
+
+    let kind = ModelKind::Lenet;
+    let store = synth_store(33, kind);
+    let n = if fast { 32 } else { 128 };
+    let mut r = Rng::new(7);
+    let xdata: Vec<f32> = (0..n * 28 * 28).map(|_| r.f32()).collect();
+    let x = Tensor::new(vec![n, 28, 28, 1], xdata)?;
+    let base_pred = ops::argmax_rows(&forward(&store, &x)?);
+
+    println!("\n== CSD digit dial x (phi, N) — accuracy-vs-energy frontier ==");
+    println!("   (synthetic LeNet, {n} inputs; agreement vs the fp32 forward)");
+    println!(
+        "{:<5} {:<4} {:<8} {:>9} {:>9} {:>10} {:>12}",
+        "phi", "N", "digits", "agree", "pp/MAC", "gated", "pJ/input"
+    );
+    let names = repro::quantized_names(kind);
+    for &(phi, group) in &[(4u32, 16usize), (1, 16)] {
+        // the QSQ dial first: quantize + decode at (phi, N)
+        let qs = repro::quantized_store(&store, &names, phi, group, AssignMode::SigmaSearch)?;
+        for &digits in &[1usize, 2, 3, 4, usize::MAX] {
+            // ... then the CSD dial on the decoded weights
+            let engine = CsdEngine::from_store(&qs, CsdQuality::new(digits))?;
+            let pred = ops::argmax_rows(&engine.forward(&x)?);
+            let agree = pred.iter().zip(&base_pred).filter(|(a, b)| a == b).count();
+            let led = engine.ledger();
+            println!(
+                "{:<5} {:<4} {:<8} {:>8.1}% {:>9.2} {:>9.1}% {:>12.3e}",
+                phi,
+                group,
+                if digits == usize::MAX { "exact".into() } else { digits.to_string() },
+                100.0 * agree as f64 / n as f64,
+                engine.mean_pp(),
+                100.0 * engine.skipped_fraction(),
+                // one forward served all n inputs: normalize to per input
+                led.total_pj() / (engine.forwards().max(1) as usize * n) as f64
+            );
+        }
+    }
+    println!("   (fewer digits -> fewer partial products -> less pJ/input;");
+    println!("    the dial is runtime-selectable via EngineSelect::HostCsd)");
     Ok(())
 }

@@ -16,11 +16,11 @@ use anyhow::Result;
 
 use crate::channel::{Link, LinkConfig, TransferReport};
 use crate::codec::{decode_model, encode_model, EncodedModel};
-use crate::device::QualityConfig;
+use crate::device::{CsdQuality, QualityConfig};
 use crate::hw::decoder_rtl;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::AssignMode;
-use crate::runtime::host::QuantizedEngine;
+use crate::runtime::host::{CsdEngine, QuantizedEngine};
 use crate::tensor::Tensor;
 
 /// Everything the deployment produced, for reporting.
@@ -86,6 +86,25 @@ pub fn deploy_engine(
 ) -> Result<(QuantizedEngine, DeployReport)> {
     let (edge, report, decoded) = deploy_full(store, quality, mode, link_cfg, seed)?;
     let engine = QuantizedEngine::from_encoded(&edge, &decoded)?;
+    Ok((engine, report))
+}
+
+/// [`deploy`] plus a CSD shift-and-add serving engine
+/// ([`crate::runtime::host::CsdEngine`]) built on the edge-side store: the
+/// QSQ dial (phi, N) decides which codes cross the channel, then the `csd`
+/// digit dial truncates the decoded weights' CSD form on top — the two
+/// quality knobs compose, and the engine's energy ledger prices exactly the
+/// composition the device serves.
+pub fn deploy_csd_engine(
+    store: &WeightStore,
+    quality: QualityConfig,
+    csd: CsdQuality,
+    mode: AssignMode,
+    link_cfg: LinkConfig,
+    seed: u64,
+) -> Result<(CsdEngine, DeployReport)> {
+    let (edge, report, _) = deploy_full(store, quality, mode, link_cfg, seed)?;
+    let engine = CsdEngine::from_store(&edge, csd)?;
     Ok((engine, report))
 }
 
@@ -250,6 +269,52 @@ mod tests {
         let want = crate::runtime::host::forward(&edge, &x).unwrap();
         let diff = got.max_abs_diff(&want);
         assert!(diff < 1e-2, "engine vs decoded edge store: {diff}");
+    }
+
+    #[test]
+    fn deploy_csd_engine_composes_both_dials() {
+        let store = fake_store(8);
+        let q = QualityConfig { phi: 4, group: 16 };
+        let (edge, _) =
+            deploy(&store, q, AssignMode::SigmaSearch, LinkConfig::default(), 13).unwrap();
+        let (engine, rep) = super::deploy_csd_engine(
+            &store,
+            q,
+            CsdQuality::exact(),
+            AssignMode::SigmaSearch,
+            LinkConfig::default(),
+            13,
+        )
+        .unwrap();
+        assert!(rep.memory_savings() > 0.5);
+
+        // exact CSD on top of the QSQ-decoded edge store: the engine output
+        // tracks the edge-store f32 forward (same weights, fixed-point
+        // recoded, different reduction order)
+        let mut r = Rng::new(43);
+        let xdata: Vec<f32> = (0..2 * 28 * 28).map(|_| r.f64() as f32).collect();
+        let x = Tensor::new(vec![2, 28, 28, 1], xdata).unwrap();
+        let got = engine.forward(&x).unwrap();
+        let want = crate::runtime::host::forward(&edge, &x).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-2, "csd engine vs decoded edge store: {diff}");
+        // the dial's energy ledger was charged for the forward
+        let led = engine.ledger();
+        assert!(led.partial_products > 0);
+        assert_eq!(engine.forwards(), 1);
+
+        // a 1-digit budget spends strictly fewer partial products per MAC
+        let (cheap, _) = super::deploy_csd_engine(
+            &store,
+            q,
+            CsdQuality::new(1),
+            AssignMode::SigmaSearch,
+            LinkConfig::default(),
+            13,
+        )
+        .unwrap();
+        assert!(cheap.mean_pp() <= 1.0 + 1e-12);
+        assert!(cheap.mean_pp() < engine.mean_pp());
     }
 
     #[test]

@@ -1,5 +1,10 @@
 //! Serving metrics: counters, gauges, and a bounded latency recorder with
 //! percentile snapshots.
+//!
+//! The JSON snapshot schema — `counter.*`, `gauge.pool.*`,
+//! `gauge.scratch_hw.<layer>.*`, `gauge.energy.*`, `latency_ms.<series>.*`
+//! and the latency-ring semantics — is documented for dashboard consumers
+//! in `docs/METRICS.md`; keep the two in sync.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

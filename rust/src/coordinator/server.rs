@@ -10,8 +10,11 @@
 //! from multiple connections feeding the shared [`BatchQueue`], which the
 //! worker drains in dynamic batches.  The worker executes on one of the
 //! engines ([`EngineSelect`]): the PJRT artifact (padded to the compiled
-//! batch size), the pure-rust blocked-GEMM f32 engine, or the code-domain
-//! [`QuantizedEngine`] (plane-packed codes on qgemm v2).  `Auto` is
+//! batch size), the pure-rust blocked-GEMM f32 engine, the code-domain
+//! [`QuantizedEngine`] (plane-packed codes on qgemm v2), or the CSD
+//! shift-and-add [`CsdEngine`] (truncated-CSD digit planes on
+//! `kernels::csd`, which additionally exports its per-request energy ledger
+//! as `energy.*` gauges).  `Auto` is
 //! *batch-aware*: instead of picking one engine at startup it re-dispatches
 //! every popped batch — batches that fill enough of the compiled artifact
 //! run on PJRT (or the threaded f32 host engine when PJRT is absent), while
@@ -35,13 +38,13 @@ use anyhow::{bail, Context, Result};
 
 use super::batcher::{BatchQueue, Pending};
 use super::metrics::Metrics;
-use crate::device::QualityConfig;
+use crate::device::{CsdQuality, QualityConfig};
 use crate::kernels::{self, Scratch};
 use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::AssignMode;
 use crate::runtime::client::{ArgValue, Executable, Runtime};
-use crate::runtime::host::{self, QuantizedEngine};
+use crate::runtime::host::{self, CsdEngine, QuantizedEngine};
 use crate::tensor::{ops, Tensor};
 use crate::util::json::{self, Value};
 
@@ -65,6 +68,10 @@ pub enum EngineSelect {
     /// Pure-rust code-domain engine: weights quantized at this quality and
     /// served from packed codes on the qgemm kernel.
     HostQuantized(QualityConfig),
+    /// Pure-rust CSD shift-and-add engine (§V.B): weights truncated-CSD
+    /// packed at this digit budget and served on `kernels::csd`, with the
+    /// per-request energy ledger exported as `energy.*` gauges.
+    HostCsd(CsdQuality),
 }
 
 #[derive(Clone, Debug)]
@@ -108,6 +115,8 @@ enum Backend {
     Pjrt(PjrtParts),
     Host(WeightStore),
     Quant(QuantizedEngine),
+    /// CSD shift-and-add engine with the per-request energy ledger.
+    Csd(CsdEngine),
     /// Batch-aware hybrid ([`EngineSelect::Auto`]): each popped batch picks
     /// PJRT (if loaded) or the f32 store for artifact-sized batches, and the
     /// code-domain engine for small ones.  The f32 store is kept only when
@@ -126,6 +135,7 @@ impl Backend {
             Backend::Pjrt { .. } => "pjrt",
             Backend::Host(_) => "host-f32",
             Backend::Quant(_) => "host-qgemm",
+            Backend::Csd(_) => "host-csd",
             Backend::Hybrid { .. } => "auto-hybrid",
         }
     }
@@ -160,6 +170,7 @@ fn build_backend(artifacts: &Path, cfg: &ServerConfig) -> Result<Backend> {
             q,
             AssignMode::SigmaSearch,
         )?)),
+        EngineSelect::HostCsd(q) => Ok(Backend::Csd(CsdEngine::from_store(&store, q)?)),
         EngineSelect::Auto => {
             let pjrt = match pjrt_parts(artifacts, cfg, &store) {
                 Ok(p) => Some(p),
@@ -285,6 +296,9 @@ impl Server {
                     Backend::Quant(engine) => batch_tensor(&batch, n, h, w, c)
                         .and_then(|x| engine.forward_with(&x, &mut scratch))
                         .map(|logits| ops::argmax_rows(&logits)),
+                    Backend::Csd(engine) => batch_tensor(&batch, n, h, w, c)
+                        .and_then(|x| engine.forward_with(&x, &mut scratch))
+                        .map(|logits| ops::argmax_rows(&logits)),
                     Backend::Hybrid { pjrt, store, quant } => {
                         // batch-aware re-dispatch: artifact-sized batches on
                         // PJRT (or the threaded f32 engine), small ones on
@@ -336,6 +350,21 @@ impl Server {
                                 &format!("scratch_hw.{layer}.act_bytes"),
                                 pk.act_bytes as f64,
                             );
+                        }
+                        // energy ledger (CSD engine): lifetime totals as
+                        // absolute gauges.  `energy.forwards` divides to
+                        // per-batch numbers (one forward per popped batch);
+                        // per-request uses counter.requests — docs/METRICS.md
+                        if let Backend::Csd(engine) = &backend {
+                            let led = engine.ledger();
+                            wm.set_gauge("energy.partial_products", led.partial_products as f64);
+                            wm.set_gauge("energy.gated_rows", led.gated_rows as f64);
+                            wm.set_gauge("energy.skipped_macs", led.skipped_macs as f64);
+                            wm.set_gauge("energy.fp_muls", led.fp_muls as f64);
+                            wm.set_gauge("energy.fp_adds", led.fp_adds as f64);
+                            wm.set_gauge("energy.compute_pj", led.compute_pj());
+                            wm.set_gauge("energy.total_pj", led.total_pj());
+                            wm.set_gauge("energy.forwards", engine.forwards() as f64);
                         }
                         for (i, job) in batch.into_iter().enumerate() {
                             let e2e = job.payload.enqueued.elapsed();

@@ -4,4 +4,4 @@
 
 pub mod profile;
 
-pub use profile::{DeviceClass, DeviceProfile, QualityConfig};
+pub use profile::{CsdQuality, DeviceClass, DeviceProfile, QualityConfig};

@@ -1,7 +1,9 @@
 //! Device classes with memory/compute/link budgets (Fig.-3-style spread) and
-//! the quality-selection policy the router uses.
+//! the quality-selection policies the router uses: the QSQ dial
+//! ([`QualityConfig`]) and the CSD multiplier dial ([`CsdQuality`]).
 
 use crate::channel::LinkConfig;
+use crate::hw::fixedpoint::Format;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum DeviceClass {
@@ -35,6 +37,49 @@ pub struct QualityConfig {
     pub phi: u32,
     /// Nominal vector length N (per-tensor resolved via nearest divisor).
     pub group: usize,
+}
+
+/// The second, orthogonal quality dial (paper §V.B): how many CSD
+/// partial-product rows the Quality Scalable Multiplier keeps per weight.
+/// Weights are fixed-point recoded in `fmt`, CSD-encoded, and truncated to
+/// the `max_digits` most-significant non-zero digits; everything below is
+/// clock-gated away.  `max_digits = usize::MAX` is exact CSD (the full
+/// fixed-point product), `1` is a single signed power of two per weight.
+///
+/// This composes with [`QualityConfig`]: (phi, N) decides which codes cross
+/// the channel, `CsdQuality` decides how many partial products the edge
+/// multiplier spends on each surviving weight
+/// ([`crate::kernels::csd`] / [`crate::runtime::host::CsdEngine`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CsdQuality {
+    /// Fixed-point recoding format of the weight operand.
+    pub fmt: Format,
+    /// Max kept CSD digits (partial products) per weight.
+    pub max_digits: usize,
+}
+
+impl CsdQuality {
+    /// Default weight format: Q16.14 covers the (-2, 2) range every
+    /// QSQ-decoded weight lives in, at 14 fractional bits.
+    pub const DEFAULT_FMT: Format = Format::Q16_14;
+
+    /// Dial at `max_digits` partial products in the default weight format.
+    pub fn new(max_digits: usize) -> CsdQuality {
+        CsdQuality { fmt: Self::DEFAULT_FMT, max_digits }
+    }
+
+    /// Exact CSD: no truncation, bit-identical to the fixed-point product.
+    pub fn exact() -> CsdQuality {
+        Self::new(usize::MAX)
+    }
+
+    /// Partial-product rows the hardware provisions — delegates to
+    /// [`crate::hw::multiplier::QsmConfig::max_rows`] (the NAF bound
+    /// `ceil((total + 1) / 2)`), so kernel-side gating accounting can never
+    /// drift from the per-scalar datapath simulator.
+    pub fn max_rows(&self) -> usize {
+        crate::hw::multiplier::QsmConfig::new(self.fmt, self.max_digits).max_rows()
+    }
 }
 
 impl DeviceProfile {
@@ -143,6 +188,18 @@ mod tests {
         assert!(
             roster[0].inference_latency_s(macs) > 100.0 * roster[3].inference_latency_s(macs)
         );
+    }
+
+    #[test]
+    fn csd_quality_rows_match_naf_bound() {
+        assert_eq!(CsdQuality::exact().max_rows(), 9, "Q16.14: ceil(17/2)");
+        assert_eq!(
+            CsdQuality { fmt: Format::Q32_24, max_digits: 4 }.max_rows(),
+            17,
+            "Q32.24: ceil(33/2)"
+        );
+        assert_eq!(CsdQuality::new(3).max_digits, 3);
+        assert_eq!(CsdQuality::new(1).fmt, CsdQuality::DEFAULT_FMT);
     }
 
     #[test]

@@ -63,8 +63,9 @@ pub fn truncate_msd(d: &[i8], k: usize) -> Digits {
 }
 
 /// Value-level k-term signed-power-of-two approximation of an f64 — the
-/// float mirror of `truncate_msd` and the exact semantics of the Pallas
-/// `csd_approx` kernel (greedy nearest power of two, MSD first).
+/// float mirror of `truncate_msd` (greedy nearest power of two, MSD first).
+/// The tensor-path form of the same truncation is
+/// [`crate::kernels::csd::PackedCsdTensor`].
 pub fn spt_approx(w: f64, digits: usize) -> f64 {
     let mut out = 0.0;
     let mut r = w;

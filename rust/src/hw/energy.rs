@@ -55,6 +55,10 @@ pub struct Ledger {
     pub fp_muls: u64,
     pub int_adds: u64,
     pub partial_products: u64,
+    /// QSM partial-product rows clock-gated off by the digit budget —
+    /// tracked for the gating ratio, charged (approximately) nothing in
+    /// [`Ledger::compute_pj`].
+    pub gated_rows: u64,
     pub decoder_ops: u64,
     pub skipped_macs: u64,
 }
@@ -88,6 +92,7 @@ impl Ledger {
         self.fp_muls += other.fp_muls;
         self.int_adds += other.int_adds;
         self.partial_products += other.partial_products;
+        self.gated_rows += other.gated_rows;
         self.decoder_ops += other.decoder_ops;
         self.skipped_macs += other.skipped_macs;
     }
@@ -130,11 +135,14 @@ mod tests {
         l.dram_bits = 64;
         l.fp_muls = 10;
         l.fp_adds = 10;
+        l.gated_rows = 7;
         assert!((l.dram_pj() - 2.0 * pj::DRAM_32).abs() < 1e-9);
+        // gated rows are tracked but cost nothing
         assert!((l.compute_pj() - (10.0 * pj::MUL_FP32 + 10.0 * pj::ADD_FP32)).abs() < 1e-9);
         let mut l2 = Ledger::new();
         l2.add(&l);
         assert_eq!(l2.total_pj(), l.total_pj());
+        assert_eq!(l2.gated_rows, 7);
     }
 
     #[test]

@@ -3,9 +3,12 @@
 //! multiplier with gate clocking, fixed-point arithmetic, the energy model
 //! (Figs. 1/2), and zero-skip statistics.
 //!
-//! These run on the L3 side; the TPU-shaped value models live in the Pallas
-//! kernels (DESIGN.md §Hardware-Adaptation).  Tests pin the two against each
-//! other.
+//! These are the per-scalar oracles.  The QSM's tensor-path twin lives on
+//! the serving hot path as [`crate::kernels::csd`] (truncated-CSD digit
+//! planes over the worker pool); tests pin kernel and simulator against
+//! each other bit for bit, and the serving engine accumulates
+//! [`energy::Ledger`]s that price each request in these models' pJ
+//! constants.
 
 pub mod csd;
 pub mod decoder_rtl;

@@ -3,8 +3,12 @@
 //! non-zero digits; partial-product rows beyond that are clock-gated.
 //!
 //! Bit-accurate in fixed point (the datapath), with per-multiply energy and
-//! error statistics.  The Pallas `csd_matmul` kernel carries the same value
-//! semantics on the tensor path; `spt_approx` ties the two in tests.
+//! error statistics.  This is the per-scalar *oracle*; the serving hot path
+//! carries the same value semantics in tensor form as
+//! [`crate::kernels::csd`] (truncated-CSD digit planes, shift-and-add inner
+//! loop), and the property tests pin the two against each other bit for bit
+//! on lossless inputs.  [`super::csd::spt_approx`] is the float mirror of
+//! the same truncation.
 
 use super::csd;
 use super::energy::pj;

@@ -1,0 +1,633 @@
+//! CSD-domain GEMM: the paper's Quality Scalable Multiplier (§V.B) as a
+//! packed tensor kernel on the serving hot path.
+//!
+//! `hw::multiplier` simulates the QSM one scalar multiply at a time: the
+//! weight operand is fixed-point recoded, CSD-encoded (digits in {-1, 0, +1},
+//! no two adjacent non-zeros), truncated to at most `max_digits` non-zero
+//! digits, and multiplied by shift-and-add — one partial product per kept
+//! digit, everything below the budget clock-gated away.  This module carries
+//! the same value semantics on the tensor path, with the layout tricks of
+//! [`mod@super::qgemm`]'s v2 generation:
+//!
+//! * **Pack once, per-column digit planes.**  [`PackedCsdTensor::pack`]
+//!   fixed-point-quantizes every f32 weight ([`CsdQuality::fmt`]), CSD-recodes
+//!   it, truncates to the [`CsdQuality::max_digits`] most-significant
+//!   non-zero digits, and buckets the survivors by (column, digit exponent,
+//!   sign).  Each bucket becomes one contiguous *digit plane* of row
+//!   offsets — the CSD analogue of qgemm2's per-level offset planes.
+//! * **Shift-and-add inner loop.**  Per output element the kernel sums the
+//!   activations each plane selects (a straight pass over a contiguous `u16`
+//!   stream) and combines plane sums as `acc += 2^(e - frac) * (pos - neg)`.
+//!   The only multiplies are those exact power-of-two scalings — wire shifts
+//!   in the QSM datapath, exact f32 ops here — so at most `max_digits`
+//!   partial products are spent per weight, exactly like the hardware.
+//! * **Same banding, same fusion.**  Rows split across the persistent worker
+//!   pool via [`super::for_each_row_band_on`] (pooled runs are bitwise
+//!   identical to serial), and [`super::qconv::csd_conv_into`] runs the same
+//!   band/chunk `Scratch`-arena conv pipeline as the code-domain kernel.
+//!
+//! Exact CSD (`max_digits = usize::MAX`) reproduces the fixed-point product
+//! bit-for-bit, so on activations where the fixed-point path is lossless the
+//! kernel is *bitwise* equal to the [`crate::hw::multiplier::dot`] oracle —
+//! the property tests assert exactly that.  Truncation error is monotone in
+//! the digit budget (fewer digits, more error, less energy); the per-tensor
+//! digit statistics ([`CsdStats`]) feed the [`Ledger`] the serving engine
+//! accumulates per forward and exports as `energy.*` metrics gauges.
+//!
+//! ```
+//! use qsq_edge::device::CsdQuality;
+//! use qsq_edge::kernels::csd::{csd_gemm, PackedCsdTensor};
+//! use qsq_edge::tensor::Tensor;
+//!
+//! // pack a [K=2, OC=2] weight matrix at a 2-digit budget; all four
+//! // weights are <= 2-digit CSD values, so the truncation loses nothing
+//! let w = [0.75f32, -0.5, 1.0, 0.375];
+//! let p = PackedCsdTensor::pack(&w, &[2, 2], CsdQuality::new(2)).unwrap();
+//! assert_eq!(p.stats.digits_dropped, 0);
+//!
+//! let x = Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap();
+//! let y = csd_gemm(&x, &p).unwrap();
+//! assert_eq!(y.data(), &[2.75, 0.25]); // [1*0.75 + 2*1.0, 1*-0.5 + 2*0.375]
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::device::CsdQuality;
+use crate::hw::csd::{nonzero_count, to_csd, truncate_msd};
+use crate::hw::energy::Ledger;
+use crate::hw::fixedpoint::Fixed;
+use crate::tensor::Tensor;
+
+/// Below this many inner-loop adds a csd_gemm runs un-threaded (shift-and-add
+/// work per entry matches the code-domain kernel, so the crossover does too).
+pub(crate) const CSD_PAR_THRESHOLD: usize = 1 << 18;
+
+/// One digit plane: every kept CSD digit of one column that shares an
+/// exponent, positive rows first.  `offsets[start..mid]` are the +1 digits'
+/// row indices, `offsets[mid..end]` the -1 digits'.
+#[derive(Clone, Copy, Debug)]
+struct Plane {
+    /// `2^(digit_index - frac)`: the exact power-of-two weight of the plane.
+    scale: f32,
+    start: u32,
+    mid: u32,
+    end: u32,
+}
+
+/// Digit statistics realized by a packing — the energy side of the dial.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CsdStats {
+    /// Weights packed (MAC operands per activation row).
+    pub weights: u64,
+    /// Non-zero CSD digits kept = partial products spent per activation row.
+    pub digits_kept: u64,
+    /// Non-zero digits the `max_digits` budget truncated (gated) away.
+    pub digits_dropped: u64,
+    /// Weights whose kept digit string is empty — fully skipped MACs
+    /// (zero weights, or everything truncated at tiny budgets).
+    pub zero_weights: u64,
+}
+
+impl CsdStats {
+    /// Mean kept partial products per MAC.
+    pub fn mean_pp(&self) -> f64 {
+        if self.weights == 0 {
+            0.0
+        } else {
+            self.digits_kept as f64 / self.weights as f64
+        }
+    }
+
+    /// Fraction of MACs fully gated (no digits survive the budget).
+    pub fn skipped_fraction(&self) -> f64 {
+        if self.weights == 0 {
+            0.0
+        } else {
+            self.zero_weights as f64 / self.weights as f64
+        }
+    }
+
+    /// Fold another tensor's digit statistics into this aggregate (the
+    /// engine sums its packed tensors through here).
+    pub fn add(&mut self, other: &CsdStats) {
+        self.weights += other.weights;
+        self.digits_kept += other.digits_kept;
+        self.digits_dropped += other.digits_dropped;
+        self.zero_weights += other.zero_weights;
+    }
+}
+
+/// An f32 weight tensor packed into truncated-CSD digit planes for the
+/// shift-and-add GEMM ([`csd_gemm`]) and the fused conv pipeline
+/// ([`super::qconv::csd_conv_into`]).
+#[derive(Clone, Debug)]
+pub struct PackedCsdTensor {
+    pub k: usize,
+    pub oc: usize,
+    /// The dial this tensor was packed at (format + digit budget).
+    pub quality: CsdQuality,
+    /// Original tensor shape (C-order compatible with `[K, OC]`).
+    pub shape: Vec<usize>,
+    /// Row offsets (within K) of every digit plane, concatenated.
+    offsets: Vec<u16>,
+    /// Digit planes, grouped by column, exponent ascending within a column.
+    planes: Vec<Plane>,
+    /// `planes[col_bounds[j] .. col_bounds[j+1]]` are column `j`'s planes.
+    col_bounds: Vec<u32>,
+    /// Digit statistics realized by this packing.
+    pub stats: CsdStats,
+}
+
+/// `2^e` as an exact f32 (`e` stays within f32's normal exponent range for
+/// every valid [`crate::hw::fixedpoint::Format`]).
+fn pow2(e: i32) -> f32 {
+    (e as f64).exp2() as f32
+}
+
+impl PackedCsdTensor {
+    /// Fixed-point recode, CSD-encode, and truncate `w` (C-order, shape
+    /// `[.., OC]` flattened to `[K, OC]`) at `quality`, bucketing the kept
+    /// digits into per-(column, exponent, sign) planes.
+    pub fn pack(w: &[f32], shape: &[usize], quality: CsdQuality) -> Result<PackedCsdTensor> {
+        let (k, oc) = crate::quant::qsq::matrix_dims(shape)?;
+        if w.len() != k * oc {
+            bail!("csd pack: {} weights vs shape {:?}", w.len(), shape);
+        }
+        if k > u16::MAX as usize + 1 {
+            bail!("csd pack: K={k} too large for packed row offsets");
+        }
+        let fmt = quality.fmt;
+        let mut offsets: Vec<u16> = Vec::new();
+        let mut planes: Vec<Plane> = Vec::new();
+        let mut col_bounds: Vec<u32> = Vec::with_capacity(oc + 1);
+        col_bounds.push(0);
+        let mut stats = CsdStats { weights: (k * oc) as u64, ..CsdStats::default() };
+        // per-column buckets: digit index -> (+1 rows, -1 rows), drained in
+        // ascending-exponent order so the accumulation order is canonical
+        let mut buckets: std::collections::BTreeMap<u32, (Vec<u16>, Vec<u16>)> =
+            std::collections::BTreeMap::new();
+        for j in 0..oc {
+            buckets.clear();
+            for r in 0..k {
+                let raw = Fixed::from_f64(w[r * oc + j] as f64, fmt).raw;
+                let full = to_csd(raw);
+                let total_nz = nonzero_count(&full);
+                let kept = truncate_msd(&full, quality.max_digits);
+                let kept_nz = nonzero_count(&kept);
+                stats.digits_kept += kept_nz as u64;
+                stats.digits_dropped += (total_nz - kept_nz) as u64;
+                if kept_nz == 0 {
+                    stats.zero_weights += 1;
+                    continue;
+                }
+                for (i, &d) in kept.iter().enumerate() {
+                    if d != 0 {
+                        let bucket = buckets.entry(i as u32).or_default();
+                        if d > 0 {
+                            bucket.0.push(r as u16);
+                        } else {
+                            bucket.1.push(r as u16);
+                        }
+                    }
+                }
+            }
+            for (&i, (pos, neg)) in buckets.iter() {
+                let start = offsets.len() as u32;
+                offsets.extend_from_slice(pos);
+                let mid = offsets.len() as u32;
+                offsets.extend_from_slice(neg);
+                let end = offsets.len() as u32;
+                planes.push(Plane { scale: pow2(i as i32 - fmt.frac as i32), start, mid, end });
+            }
+            col_bounds.push(planes.len() as u32);
+        }
+        Ok(PackedCsdTensor {
+            k,
+            oc,
+            quality,
+            shape: shape.to_vec(),
+            offsets,
+            planes,
+            col_bounds,
+            stats,
+        })
+    }
+
+    /// The approximate f32 weights this packing represents (`[K, OC]`
+    /// row-major): exactly `from_csd(truncate_msd(to_csd(fixed(w)), k))`
+    /// renormalized, the value the shift-and-add datapath computes with.
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k * self.oc];
+        for j in 0..self.oc {
+            let (lo, hi) = (self.col_bounds[j] as usize, self.col_bounds[j + 1] as usize);
+            for pl in &self.planes[lo..hi] {
+                for &r in &self.offsets[pl.start as usize..pl.mid as usize] {
+                    out[r as usize * self.oc + j] += pl.scale;
+                }
+                for &r in &self.offsets[pl.mid as usize..pl.end as usize] {
+                    out[r as usize * self.oc + j] -= pl.scale;
+                }
+            }
+        }
+        out
+    }
+
+    /// Fraction of MACs fully gated (no digits survive the budget).
+    pub fn skipped_fraction(&self) -> f64 {
+        self.stats.skipped_fraction()
+    }
+
+    /// Inner-loop adds one activation row costs (for thread dispatch).
+    pub(crate) fn ops_per_row(&self) -> usize {
+        self.offsets.len() + 2 * self.planes.len()
+    }
+
+    /// The energy this tensor spends on `rows` activation rows: one partial
+    /// product per kept digit per row, one gated row per provisioned-but-idle
+    /// multiplier row ([`CsdQuality::max_rows`]), one skipped MAC per fully
+    /// gated weight.  The serving engine folds this into its per-request
+    /// [`Ledger`] and exports it as `energy.*` gauges.
+    pub fn ledger_for_rows(&self, rows: usize) -> Ledger {
+        let r = rows as u64;
+        let provisioned = self.stats.weights * self.quality.max_rows() as u64;
+        Ledger {
+            partial_products: r * self.stats.digits_kept,
+            gated_rows: r * (provisioned - self.stats.digits_kept),
+            skipped_macs: r * self.stats.zero_weights,
+            ..Ledger::default()
+        }
+    }
+}
+
+/// Sum the activations a plane's offsets select — a straight pass over a
+/// contiguous `u16` stream, shared shape with qgemm2's inner loop.
+#[inline]
+fn plane_sum(offsets: &[u16], xrow: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for &off in offsets {
+        s += xrow[off as usize];
+    }
+    s
+}
+
+/// One row band of the CSD kernel: `out` is `rows x OC` (rows inferred),
+/// `xb` the matching rows of the activation matrix.  Accumulates into `out`.
+///
+/// Loop order is (column, row, plane): a column's plane list is resolved
+/// once and reused across every row of the band.  Per output element the
+/// planes accumulate in ascending exponent order with rows ascending inside
+/// each plane, so band/chunk splits cannot change any value.
+pub(crate) fn csd_band(out: &mut [f32], xb: &[f32], p: &PackedCsdTensor) {
+    let (k, oc) = (p.k, p.oc);
+    if oc == 0 {
+        return;
+    }
+    let rows = out.len() / oc;
+    for j in 0..oc {
+        let (lo, hi) = (p.col_bounds[j] as usize, p.col_bounds[j + 1] as usize);
+        let planes = &p.planes[lo..hi];
+        if planes.is_empty() {
+            continue; // fully gated column: every MAC skipped
+        }
+        for i in 0..rows {
+            let xrow = &xb[i * k..(i + 1) * k];
+            let mut acc = 0.0f32;
+            for pl in planes {
+                let s = plane_sum(&p.offsets[pl.start as usize..pl.mid as usize], xrow)
+                    - plane_sum(&p.offsets[pl.mid as usize..pl.end as usize], xrow);
+                // the only multiply: an exact power-of-two scaling (a wire
+                // shift in the QSM datapath)
+                acc += pl.scale * s;
+            }
+            out[i * oc + j] += acc;
+        }
+    }
+}
+
+/// `out[M,OC] = x[M,K] @ packed` on the digit-plane layout (caller provides
+/// a zeroed `out` of exactly `m * OC`), row bands on the global worker pool.
+pub fn csd_gemm_into(out: &mut [f32], xd: &[f32], m: usize, p: &PackedCsdTensor) {
+    csd_gemm_into_on(super::Pool::global(), out, xd, m, p)
+}
+
+/// [`csd_gemm_into`] with an explicit worker-pool handle (the serving
+/// engines thread their pool through here).
+pub fn csd_gemm_into_on(
+    pool: &super::Pool,
+    out: &mut [f32],
+    xd: &[f32],
+    m: usize,
+    p: &PackedCsdTensor,
+) {
+    debug_assert_eq!(out.len(), m * p.oc);
+    debug_assert_eq!(xd.len(), m * p.k);
+    let total = m.saturating_mul(p.ops_per_row());
+    let nthreads = super::threads_for_rows(m, total, CSD_PAR_THRESHOLD).min(pool.width());
+    let band = |_: usize, ob: &mut [f32], xb: &[f32]| csd_band(ob, xb, p);
+    super::for_each_row_band_on(pool, out, xd, m, p.k, p.oc, nthreads, band);
+}
+
+/// Shared tensor-level entry: validate shapes, run with the given thread
+/// count (`None` = the production heuristic, via [`csd_gemm_into`]).
+fn csd_gemm_run(x: &Tensor, p: &PackedCsdTensor, nthreads: Option<usize>) -> Result<Tensor> {
+    let xs = x.shape();
+    if xs.len() != 2 || xs[1] != p.k {
+        bail!("csd_gemm shapes {:?} x [{}, {}]", xs, p.k, p.oc);
+    }
+    let m = xs[0];
+    let mut out = vec![0.0f32; m * p.oc];
+    match nthreads {
+        None => csd_gemm_into(&mut out, x.data(), m, p),
+        Some(nt) => {
+            let band = |_: usize, ob: &mut [f32], xb: &[f32]| csd_band(ob, xb, p);
+            super::for_each_row_band(&mut out, x.data(), m, p.k, p.oc, nt, band);
+        }
+    }
+    Tensor::new(vec![m, p.oc], out)
+}
+
+/// `x [M,K] @ packed [K,OC] -> [M,OC]` on the truncated-CSD shift-and-add
+/// kernel.
+pub fn csd_gemm(x: &Tensor, p: &PackedCsdTensor) -> Result<Tensor> {
+    csd_gemm_run(x, p, None)
+}
+
+/// [`csd_gemm`] with an explicit thread count — lets tests pin band
+/// boundaries and check the parallel run is bitwise identical to the
+/// single-thread one.
+pub fn csd_gemm_threads(x: &Tensor, p: &PackedCsdTensor, nthreads: usize) -> Result<Tensor> {
+    csd_gemm_run(x, p, Some(nthreads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::csd::{from_csd, is_canonic};
+    use crate::hw::fixedpoint::Format;
+    use crate::hw::multiplier::{dot, QsmConfig};
+    use crate::tensor::ops;
+    use crate::util::prop::{check, forall};
+    use crate::util::rng::Rng;
+
+    const FMT: Format = Format::Q16_14;
+
+    fn quality(max_digits: usize) -> CsdQuality {
+        CsdQuality { fmt: FMT, max_digits }
+    }
+
+    /// Gaussian weights clamped to |w| <= 0.9 so the fixed-point oracle
+    /// never saturates, even after MSD-first truncation rounds a value up.
+    fn safe_weights(r: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| ((r.normal() * 0.2).clamp(-0.9, 0.9)) as f32).collect()
+    }
+
+    /// Ternary activations keep every partial sum of the kernel a small
+    /// multiple of 2^-frac — exactly representable in f32 at these shapes.
+    fn ternary_x(r: &mut Rng, m: usize, k: usize) -> Tensor {
+        let data: Vec<f32> = (0..m * k).map(|_| r.range_i64(-1, 1) as f32).collect();
+        Tensor::new(vec![m, k], data).unwrap()
+    }
+
+    /// The (exponent, sign) digits a packing stores for weight (r, j).
+    fn weight_digits(p: &PackedCsdTensor, r: usize, j: usize) -> Vec<(i32, i8)> {
+        let mut out = Vec::new();
+        let (lo, hi) = (p.col_bounds[j] as usize, p.col_bounds[j + 1] as usize);
+        for pl in &p.planes[lo..hi] {
+            let e = (pl.scale.log2().round() as i32) + p.quality.fmt.frac as i32;
+            for &row in &p.offsets[pl.start as usize..pl.mid as usize] {
+                if row as usize == r {
+                    out.push((e, 1i8));
+                }
+            }
+            for &row in &p.offsets[pl.mid as usize..pl.end as usize] {
+                if row as usize == r {
+                    out.push((e, -1i8));
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn exact_decode_matches_fixed_point_quantization() {
+        let mut r = Rng::new(1);
+        let w = safe_weights(&mut r, 48 * 5);
+        let p = PackedCsdTensor::pack(&w, &[48, 5], quality(usize::MAX)).unwrap();
+        let dec = p.decode();
+        for (i, (&wi, &di)) in w.iter().zip(&dec).enumerate() {
+            let want = Fixed::from_f64(wi as f64, FMT).to_f64() as f32;
+            assert_eq!(di, want, "weight {i}: {wi}");
+        }
+        assert_eq!(p.stats.digits_dropped, 0, "exact packing drops nothing");
+    }
+
+    #[test]
+    fn prop_packed_digits_keep_csd_invariants() {
+        // the packed tensor form preserves per-weight NAF structure: <= k
+        // non-zeros, non-adjacent exponents, and the value equals the
+        // truncated integer-CSD reconstruction
+        forall(
+            40,
+            |r| (r.next_u64(), r.below(4) as usize + 1),
+            |&(seed, max_digits)| {
+                let mut r = Rng::new(seed);
+                let (k, oc) = (12usize, 4usize);
+                let w = safe_weights(&mut r, k * oc);
+                let p = PackedCsdTensor::pack(&w, &[k, oc], quality(max_digits)).unwrap();
+                for row in 0..k {
+                    for j in 0..oc {
+                        let mut digits = weight_digits(&p, row, j);
+                        digits.sort_by_key(|&(e, _)| e);
+                        check(digits.len() <= max_digits, "digit budget exceeded")?;
+                        check(
+                            digits.windows(2).all(|d| d[1].0 > d[0].0 + 1),
+                            "adjacent CSD exponents in packed form",
+                        )?;
+                        let raw = Fixed::from_f64(w[row * oc + j] as f64, FMT).raw;
+                        let want = from_csd(&truncate_msd(&to_csd(raw), max_digits));
+                        let got: i64 = digits.iter().map(|&(e, s)| s as i64 * (1i64 << e)).sum();
+                        check(got == want, "packed digits != truncated CSD value")?;
+                        check(is_canonic(&to_csd(raw)), "source CSD not canonic")?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_truncation_error_monotone_in_digit_budget() {
+        forall(
+            30,
+            |r| r.next_u64(),
+            |&seed| {
+                let mut r = Rng::new(seed);
+                let (k, oc) = (16usize, 3usize);
+                let w = safe_weights(&mut r, k * oc);
+                let exact_pack = PackedCsdTensor::pack(&w, &[k, oc], quality(usize::MAX)).unwrap();
+                let exact = exact_pack.decode();
+                let total_digits = exact_pack.stats.digits_kept;
+                let mut last_err = f64::MAX;
+                let mut last_pp = 0u64;
+                for budget in [1usize, 2, 3, 4, 6, usize::MAX] {
+                    let p = PackedCsdTensor::pack(&w, &[k, oc], quality(budget)).unwrap();
+                    let err: f64 = p
+                        .decode()
+                        .iter()
+                        .zip(&exact)
+                        .map(|(&a, &b)| (a - b).abs() as f64)
+                        .sum();
+                    check(err <= last_err + 1e-12, "error grew with a larger budget")?;
+                    check(p.stats.digits_kept >= last_pp, "pp shrank with a larger budget")?;
+                    check(
+                        p.stats.digits_kept + p.stats.digits_dropped == total_digits,
+                        "kept + dropped != total digits",
+                    )?;
+                    last_err = err;
+                    last_pp = p.stats.digits_kept;
+                }
+                check(last_err == 0.0, "unlimited budget must reproduce exact CSD")
+            },
+        );
+    }
+
+    #[test]
+    fn exact_csd_gemm_bitwise_matches_qsm_dot_oracle_at_model_shapes() {
+        // lenet-c2 [5,5,6,16] -> [150,16] and f1w [256,120]: on ternary
+        // activations every value of both paths is an exact small multiple
+        // of 2^-frac, so the kernel must equal the per-scalar fixed-point
+        // datapath simulator bit for bit.
+        let mut r = Rng::new(7);
+        for (shape, m) in [(vec![5usize, 5, 6, 16], 3usize), (vec![256, 120], 2)] {
+            let (k, oc) = crate::quant::qsq::matrix_dims(&shape).unwrap();
+            let w = safe_weights(&mut r, k * oc);
+            let p = PackedCsdTensor::pack(&w, &shape, quality(usize::MAX)).unwrap();
+            let x = ternary_x(&mut r, m, k);
+            let got = csd_gemm(&x, &p).unwrap();
+            let cfg = QsmConfig::new(FMT, usize::MAX);
+            for j in 0..oc {
+                let ws: Vec<f64> = (0..k).map(|row| w[row * oc + j] as f64).collect();
+                for i in 0..m {
+                    let xs: Vec<f64> =
+                        x.data()[i * k..(i + 1) * k].iter().map(|&v| v as f64).collect();
+                    let (want, _) = dot(cfg, &xs, &ws);
+                    assert_eq!(
+                        got.data()[i * oc + j],
+                        want as f32,
+                        "shape {shape:?}: out[{i},{j}] diverged from the QSM oracle"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_csd_gemm_bitwise_matches_qsm_dot_oracle() {
+        let mut r = Rng::new(9);
+        let (k, oc, m) = (64usize, 8usize, 4usize);
+        let w = safe_weights(&mut r, k * oc);
+        let x = ternary_x(&mut r, m, k);
+        for budget in [1usize, 2, 3, 5] {
+            let p = PackedCsdTensor::pack(&w, &[k, oc], quality(budget)).unwrap();
+            let got = csd_gemm(&x, &p).unwrap();
+            let cfg = QsmConfig::new(FMT, budget);
+            for j in 0..oc {
+                let ws: Vec<f64> = (0..k).map(|row| w[row * oc + j] as f64).collect();
+                for i in 0..m {
+                    let xs: Vec<f64> =
+                        x.data()[i * k..(i + 1) * k].iter().map(|&v| v as f64).collect();
+                    let (want, st) = dot(cfg, &xs, &ws);
+                    assert_eq!(got.data()[i * oc + j], want as f32, "k={budget} [{i},{j}]");
+                    assert!(st.multiplies == k as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn csd_gemm_equals_decode_matmul_and_is_close_on_gaussian_data() {
+        let mut r = Rng::new(11);
+        let (k, oc, m) = (48usize, 9usize, 5usize);
+        let w = safe_weights(&mut r, k * oc);
+        for budget in [2usize, 4, usize::MAX] {
+            let p = PackedCsdTensor::pack(&w, &[k, oc], quality(budget)).unwrap();
+            let dec = Tensor::new(vec![k, oc], p.decode()).unwrap();
+            // exact equality on ternary data (both paths exact in f32)
+            let xi = ternary_x(&mut r, m, k);
+            let got = csd_gemm(&xi, &p).unwrap();
+            let want = ops::matmul_naive(&xi, &dec).unwrap();
+            assert_eq!(got.data(), want.data(), "budget {budget} on ternary data");
+            // tight closeness on gaussian activations (different reduction
+            // orders, same approximate weights)
+            let xdata: Vec<f32> = (0..m * k).map(|_| r.normal() as f32).collect();
+            let xg = Tensor::new(vec![m, k], xdata).unwrap();
+            let got = csd_gemm(&xg, &p).unwrap();
+            let want = ops::matmul_naive(&xg, &dec).unwrap();
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-4, "budget {budget}: {diff}");
+        }
+    }
+
+    #[test]
+    fn parallel_bands_bitwise_equal_single_thread() {
+        let mut r = Rng::new(13);
+        let (k, oc) = (64usize, 7usize);
+        let w = safe_weights(&mut r, k * oc);
+        let p = PackedCsdTensor::pack(&w, &[k, oc], quality(3)).unwrap();
+        for m in [1usize, 3, 5, 8] {
+            let xdata: Vec<f32> = (0..m * k).map(|_| r.normal() as f32).collect();
+            let x = Tensor::new(vec![m, k], xdata).unwrap();
+            let st = csd_gemm_threads(&x, &p, 1).unwrap();
+            for nt in [2usize, 3, 4, 7] {
+                let par = csd_gemm_threads(&x, &p, nt).unwrap();
+                assert_eq!(par.data(), st.data(), "m={m} nt={nt} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weights_are_skipped_and_counted() {
+        let w = vec![0.0f32; 32];
+        let p = PackedCsdTensor::pack(&w, &[8, 4], quality(usize::MAX)).unwrap();
+        assert_eq!(p.stats.zero_weights, 32);
+        assert_eq!(p.stats.digits_kept, 0);
+        assert_eq!(p.skipped_fraction(), 1.0);
+        let x = Tensor::new(vec![2, 8], vec![1.0; 16]).unwrap();
+        assert!(csd_gemm(&x, &p).unwrap().data().iter().all(|&v| v == 0.0));
+        // a zero digit budget gates everything, harmlessly
+        let mut r = Rng::new(17);
+        let w = safe_weights(&mut r, 32);
+        let p0 = PackedCsdTensor::pack(&w, &[8, 4], quality(0)).unwrap();
+        assert_eq!(p0.stats.zero_weights, 32);
+        assert!(csd_gemm(&x, &p0).unwrap().data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn ledger_counts_scale_with_rows() {
+        let mut r = Rng::new(19);
+        let w = safe_weights(&mut r, 24 * 4);
+        let p = PackedCsdTensor::pack(&w, &[24, 4], quality(2)).unwrap();
+        let l1 = p.ledger_for_rows(1);
+        let l8 = p.ledger_for_rows(8);
+        assert_eq!(l1.partial_products, p.stats.digits_kept);
+        assert_eq!(l8.partial_products, 8 * l1.partial_products);
+        assert_eq!(l8.gated_rows, 8 * l1.gated_rows);
+        assert_eq!(l8.skipped_macs, 8 * l1.skipped_macs);
+        // provisioned rows = weights * max_rows, split pp vs gated
+        assert_eq!(
+            l1.partial_products + l1.gated_rows,
+            p.stats.weights * p.quality.max_rows() as u64
+        );
+        assert!(l1.total_pj() > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let w = vec![0.1f32; 12];
+        assert!(PackedCsdTensor::pack(&w, &[5, 2], quality(2)).is_err(), "len mismatch");
+        assert!(PackedCsdTensor::pack(&w, &[12], quality(2)).is_err(), "rank 1");
+        let p = PackedCsdTensor::pack(&w, &[6, 2], quality(2)).unwrap();
+        let x = Tensor::new(vec![2, 5], vec![0.0; 10]).unwrap();
+        assert!(csd_gemm(&x, &p).is_err(), "K mismatch");
+    }
+}

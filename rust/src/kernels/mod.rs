@@ -18,13 +18,22 @@
 //!   autovectorizer, no 8-way LUT select, half the bytes per entry) and the
 //!   row dimension is split across pool workers with the same band scheme
 //!   as the blocked f32 kernel.  v2 is what the serving engine runs.
+//! * [`mod@csd`] — the CSD-domain GEMM: f32 weights fixed-point recoded,
+//!   CSD-encoded, truncated to a per-weight digit budget
+//!   ([`crate::device::CsdQuality`], the paper's §V.B quality dial), and
+//!   packed into per-(column, exponent, sign) digit planes so the inner loop
+//!   is pure shift-and-add with at most `max_digits` partial products per
+//!   weight.  Exact CSD is bitwise-reconcilable with the per-scalar
+//!   [`crate::hw::multiplier`] datapath simulator; the digit statistics feed
+//!   the serving engine's per-request energy ledger (`energy.*` gauges).
 //! * [`mod@qconv`] — the fused conv pipeline: im2col patches are staged
 //!   chunk-by-chunk into a reusable [`Scratch`] arena and multiplied
-//!   band-by-band on the plane-packed qgemm (or the f32 microkernel), so the
-//!   full patch matrix is never materialized and steady-state serving
-//!   allocates nothing per request.
-//! * [`mod@pool`] — the persistent worker pool all three row-band kernels
-//!   dispatch on.  Workers are spawned once (lazily, on first kernel use)
+//!   band-by-band on the plane-packed qgemm, the CSD shift-and-add kernel,
+//!   or the f32 microkernel, so the full patch matrix is never materialized
+//!   and steady-state serving allocates nothing per request.
+//! * [`mod@pool`] — the persistent worker pool every row-band kernel
+//!   (blocked f32, qgemm2, csd, and the fused conv driver) dispatches on.
+//!   Workers are spawned once (lazily, on first kernel use)
 //!   and then *parked*; a warm dispatch costs one condvar wakeup per band
 //!   instead of a `std::thread::scope` spawn + join per matmul, so
 //!   steady-state serving spawns zero threads per request
@@ -54,12 +63,16 @@
 //! high-water marks).
 
 pub mod blocked;
+pub mod csd;
 pub mod pool;
 pub mod qconv;
 pub mod qgemm;
 
+pub use csd::{
+    csd_gemm, csd_gemm_into, csd_gemm_into_on, csd_gemm_threads, CsdStats, PackedCsdTensor,
+};
 pub use pool::{Pool, PoolStats};
-pub use qconv::{fconv_into, qconv, qconv_into};
+pub use qconv::{csd_conv, csd_conv_into, fconv_into, qconv, qconv_into};
 pub use qgemm::{
     qgemm, qgemm2, qgemm2_into, qgemm2_into_on, qgemm2_qt, qgemm2_threads, qgemm_qt,
     PackedQTensor, PackedQTensorV2,

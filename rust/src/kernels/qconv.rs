@@ -8,10 +8,12 @@
 //! output rows runs as one persistent-pool job ([`super::pool`]) owning one
 //! small staging slab ([`CHUNK`] patch rows); it alternates staging a slab
 //! with multiplying it on the band kernel, so patch data is consumed while
-//! still hot in L1/L2.  The same driver serves both kernels:
+//! still hot in L1/L2.  The same driver serves all three kernels:
 //!
 //! * [`qconv_into`] — code-domain: the slab hits the plane-packed,
 //!   multiplication-free `qgemm2_band`;
+//! * [`csd_conv_into`] — CSD-domain: the slab hits the truncated-CSD
+//!   shift-and-add band kernel ([`mod@super::csd`], the quality-dial path);
 //! * [`fconv_into`] — f32: the slab hits [`super::blocked::gemm_band`]
 //!   (4x8 register microtile).
 //!
@@ -22,6 +24,7 @@
 use anyhow::{bail, Result};
 
 use super::blocked;
+use super::csd::{csd_band, PackedCsdTensor, CSD_PAR_THRESHOLD};
 use super::qgemm::{qgemm2_band, PackedQTensorV2, QGEMM_PAR_THRESHOLD};
 use super::{ensure_cap, threads_for_rows, LayerPeak, Pool, Scratch, ScratchStats};
 use crate::tensor::ops;
@@ -169,6 +172,58 @@ fn conv_driver<K>(
     });
 }
 
+/// Shared prologue + driver for the packed conv kernels ([`qconv_into`],
+/// [`csd_conv_into`]): validate the `[kh,kw,C,OC]` packed `shape` (with
+/// GEMM reduction width `k`) against the input geometry, stage the arena
+/// buffers, and run the band/chunk driver with the given band `kernel`.
+/// `what` names the caller in errors; `cost` feeds thread dispatch.
+#[allow(clippy::too_many_arguments)] // geometry + 2 packed fields + scratch + kernel, by design
+fn packed_conv_into<K>(
+    pool: &Pool,
+    xd: &[f32],
+    dims: (usize, usize, usize, usize),
+    what: &str,
+    shape: &[usize],
+    k: usize,
+    cost: (usize, usize),
+    same: bool,
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+    kernel: &K,
+) -> Result<(usize, usize, usize)>
+where
+    K: Fn(&mut [f32], &[f32]) + Sync,
+{
+    if shape.len() != 4 {
+        bail!("{what}: packed weight must be [kh,kw,C,OC], got {shape:?}");
+    }
+    let (kh, kw, oc) = (shape[0], shape[1], shape[3]);
+    if shape[2] != dims.3 {
+        bail!("{what} channel mismatch: input C={} vs weight {shape:?}", dims.3);
+    }
+    let g = geometry(xd.len(), dims, (kh, kw, oc), same)?;
+    if g.kcols != k {
+        bail!("{what}: weight K={k} but window is {kh}x{kw}x{}", dims.3);
+    }
+    ensure_cap(out, g.rows * g.oc, &mut scratch.stats);
+    if g.pad > 0 {
+        scratch.last.grow(0, g.b * g.h2 * g.w2 * g.c, 0);
+    }
+    let xin = staged_input(xd, &g, &mut scratch.padded, &mut scratch.stats);
+    conv_driver(
+        pool,
+        xin,
+        &g,
+        cost,
+        &mut scratch.patches,
+        &mut scratch.stats,
+        &mut scratch.last,
+        &mut out[..g.rows * g.oc],
+        kernel,
+    );
+    Ok((g.oh, g.ow, oc))
+}
+
 /// Fused code-domain conv: `x [B,H,W,C]` (flat slice) ⊛ packed
 /// `[kh,kw,C,OC]` → `out [B*H'*W'*OC]` (grown in place, never reallocated
 /// once warm).  Band jobs run on `pool`.  Returns `(H', W', OC)`.
@@ -181,34 +236,68 @@ pub fn qconv_into(
     scratch: &mut Scratch,
     out: &mut Vec<f32>,
 ) -> Result<(usize, usize, usize)> {
-    if p.shape.len() != 4 {
-        bail!("qconv: packed weight must be [kh,kw,C,OC], got {:?}", p.shape);
-    }
-    let (kh, kw, oc) = (p.shape[0], p.shape[1], p.shape[3]);
-    if p.shape[2] != dims.3 {
-        bail!("qconv channel mismatch: input C={} vs weight {:?}", dims.3, p.shape);
-    }
-    let g = geometry(xd.len(), dims, (kh, kw, oc), same)?;
-    if g.kcols != p.k {
-        bail!("qconv: weight K={} but window is {}x{}x{}", p.k, kh, kw, dims.3);
-    }
-    ensure_cap(out, g.rows * g.oc, &mut scratch.stats);
-    if g.pad > 0 {
-        scratch.last.grow(0, g.b * g.h2 * g.w2 * g.c, 0);
-    }
-    let xin = staged_input(xd, &g, &mut scratch.padded, &mut scratch.stats);
-    conv_driver(
+    packed_conv_into(
         pool,
-        xin,
-        &g,
+        xd,
+        dims,
+        "qconv",
+        &p.shape,
+        p.k,
         (p.ops_per_row(), QGEMM_PAR_THRESHOLD),
-        &mut scratch.patches,
-        &mut scratch.stats,
-        &mut scratch.last,
-        &mut out[..g.rows * g.oc],
+        same,
+        scratch,
+        out,
         &|o: &mut [f32], slab: &[f32]| qgemm2_band(o, slab, p),
-    );
-    Ok((g.oh, g.ow, oc))
+    )
+}
+
+/// Fused CSD-domain conv: `x [B,H,W,C]` (flat slice) ⊛ truncated-CSD packed
+/// `[kh,kw,C,OC]` → `out [B*H'*W'*OC]` (grown in place, never reallocated
+/// once warm) — the same band/chunk arena driver as [`qconv_into`] with the
+/// shift-and-add band kernel.  Band jobs run on `pool`.  Returns
+/// `(H', W', OC)`.
+pub fn csd_conv_into(
+    pool: &Pool,
+    xd: &[f32],
+    dims: (usize, usize, usize, usize),
+    p: &PackedCsdTensor,
+    same: bool,
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+) -> Result<(usize, usize, usize)> {
+    packed_conv_into(
+        pool,
+        xd,
+        dims,
+        "csd_conv",
+        &p.shape,
+        p.k,
+        (p.ops_per_row(), CSD_PAR_THRESHOLD),
+        same,
+        scratch,
+        out,
+        &|o: &mut [f32], slab: &[f32]| csd_band(o, slab, p),
+    )
+}
+
+/// Convenience wrapper over [`csd_conv_into`] on the global pool (allocates
+/// the result; serving paths use `csd_conv_into` with a reusable output
+/// buffer instead).
+pub fn csd_conv(
+    x: &Tensor,
+    p: &PackedCsdTensor,
+    same: bool,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    let s = x.shape();
+    if s.len() != 4 {
+        bail!("csd_conv expects NHWC, got {:?}", s);
+    }
+    let dims = (s[0], s[1], s[2], s[3]);
+    let mut out = Vec::new();
+    let (oh, ow, oc) = csd_conv_into(Pool::global(), x.data(), dims, p, same, scratch, &mut out)?;
+    out.truncate(dims.0 * oh * ow * oc);
+    Tensor::new(vec![dims.0, oh, ow, oc], out)
 }
 
 /// Fused f32 conv: same pipeline with the blocked microkernel.  `wd` is the
@@ -312,6 +401,45 @@ mod tests {
             let got = qconv(&x, &p, same, &mut scratch).unwrap();
             assert_eq!(got.shape(), want.shape(), "{wshape:?} same={same}");
             assert_eq!(got.data(), want.data(), "{wshape:?} same={same} diverged");
+        }
+    }
+
+    #[test]
+    fn fused_csd_conv_bitwise_equals_materialized_oracle() {
+        use crate::device::CsdQuality;
+        use crate::hw::fixedpoint::Format;
+        use crate::kernels::csd::{csd_gemm, PackedCsdTensor};
+        let mut r = Rng::new(21);
+        for (wshape, xs, same, digits) in [
+            (vec![5usize, 5, 1, 6], vec![2usize, 28, 28, 1], false, 2usize), // lenet c1
+            (vec![3, 3, 3, 8], vec![2, 12, 12, 3], true, usize::MAX),
+        ] {
+            let nw: usize = wshape.iter().product();
+            let w = gauss(&mut r, nw, 0.3);
+            let q = CsdQuality { fmt: Format::Q16_14, max_digits: digits };
+            let p = PackedCsdTensor::pack(&w, &wshape, q).unwrap();
+            let nx: usize = xs.iter().product();
+            let x = Tensor::new(xs.clone(), gauss(&mut r, nx, 1.0)).unwrap();
+            // materialized oracle: pad + full im2col + csd_gemm
+            let (kh, kw, oc) = (wshape[0], wshape[1], wshape[3]);
+            let padded;
+            let xin = if same {
+                padded = tops::pad_hw(&x, kh / 2).unwrap();
+                &padded
+            } else {
+                &x
+            };
+            let (patches, oh, ow) = tops::im2col(xin, kh, kw).unwrap();
+            let want =
+                csd_gemm(&patches, &p).unwrap().reshape(vec![xs[0], oh, ow, oc]).unwrap();
+            let mut scratch = Scratch::new();
+            let got = csd_conv(&x, &p, same, &mut scratch).unwrap();
+            assert_eq!(got.shape(), want.shape(), "{wshape:?} same={same}");
+            assert_eq!(
+                got.data(),
+                want.data(),
+                "{wshape:?} same={same} digits={digits} diverged"
+            );
         }
     }
 

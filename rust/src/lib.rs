@@ -15,8 +15,49 @@
 //!
 //! Python never runs on the request path; `artifacts/` is the only interface.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index
-//! (every table and figure of the paper maps to a module in [`repro`]).
+//! ## Layer map (weights flowing left to right)
+//!
+//! ```text
+//! quant ──▶ codec/channel ──▶ kernels ──▶ runtime ──▶ coordinator
+//!   │                            ▲                        │
+//!   └────────── hw (oracles) ────┘        repro (paper tables/figures)
+//! ```
+//!
+//! * [`quant`] — the QSQ quantizer: 3-bit codes over {0, ±1, ±2, ±4} with
+//!   per-group scalars, the O(sort) sigma-search, vector grouping.
+//! * [`codec`] / [`channel`] — the shipped container (CRC-framed, eq.-11/12
+//!   bit accounting) and the lossy ARQ link it crosses.
+//! * [`kernels`] — the serving hot path: blocked f32 GEMM, the code-domain
+//!   `qgemm` (v1/v2), the truncated-CSD shift-and-add
+//!   [`kernels::csd`], the fused conv arena, and the persistent
+//!   worker pool all of them band on.
+//! * [`runtime`] — the engines: PJRT executables when `artifacts/` is
+//!   present, the pure-rust fused f32 path, the code-domain
+//!   [`runtime::host::QuantizedEngine`], and the CSD
+//!   [`runtime::host::CsdEngine`] with its per-request energy ledger.
+//! * [`coordinator`] — serving: dynamic batcher, batch-aware engine
+//!   dispatch, deploy pipeline ([`coordinator::deploy`]), metrics snapshot
+//!   (schema in `docs/METRICS.md`).
+//! * [`hw`] — bit-accurate micro-architecture simulators, the oracles the
+//!   kernels are property-tested against.
+//! * [`repro`] — one module per table/figure of the paper.
+//!
+//! ## The two quality dials
+//!
+//! The paper's deployment story exposes two orthogonal quality/energy knobs,
+//! and both are runtime-selectable here:
+//!
+//! 1. **QSQ (phi, N)** ([`device::QualityConfig`]) — how many code levels
+//!    and how long each scalar group is; decides what crosses the channel.
+//! 2. **CSD digits** ([`device::CsdQuality`]) — how many signed-power-of-two
+//!    partial products the Quality Scalable Multiplier spends per weight at
+//!    inference; decides what the edge multiplier computes
+//!    ([`kernels::csd`], §V.B).
+//!
+//! See the repository `README.md` for the build/test/bench workflow,
+//! `docs/METRICS.md` for the serving metrics schema, and [`repro`] for the
+//! per-experiment index (every table and figure of the paper maps to a
+//! module there).
 
 pub mod bench;
 pub mod channel;

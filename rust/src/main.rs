@@ -19,7 +19,7 @@ use anyhow::{bail, Context, Result};
 
 use qsq_edge::coordinator::{deploy, finetune, server};
 use qsq_edge::data::RequestGen;
-use qsq_edge::device::{DeviceProfile, QualityConfig};
+use qsq_edge::device::{CsdQuality, DeviceProfile, QualityConfig};
 use qsq_edge::model::meta::ModelKind;
 use qsq_edge::model::store::{artifacts_dir, Dataset, Manifest, WeightStore};
 use qsq_edge::quant::qsq::AssignMode;
@@ -78,7 +78,8 @@ subcommands:
   deploy-sim    full encode→channel→decode pipeline vs a device profile
   finetune      on-device FC fine-tuning of the quantized LeNet
   serve         TCP inference server (JSON lines; dynamic batching;
-                --engine auto|pjrt|host|host-quant)
+                --engine auto|pjrt|host|host-quant|host-csd
+                [--digits K: CSD partial products/weight; omit for exact])
   client        synthetic load against a server (--port, --n)
   repro         regenerate a paper table/figure   (--exp table3|fig7|...|all)
 common flags: --artifacts DIR  --model lenet|convnet  --fast";
@@ -271,7 +272,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             phi: args.get_usize("phi", 4) as u32,
             group: args.get_usize("n", 16),
         }),
-        other => bail!("unknown engine {other:?} (auto|pjrt|host|host-quant)"),
+        // --digits N = CSD partial products per weight; omitted = exact.
+        // N=0 is honored as a real (fully gated) budget, matching the kernel.
+        "host-csd" => server::EngineSelect::HostCsd(match args.get("digits") {
+            None => CsdQuality::exact(),
+            Some(d) => CsdQuality::new(
+                d.parse::<usize>().with_context(|| format!("--digits {d:?} is not a number"))?,
+            ),
+        }),
+        other => bail!("unknown engine {other:?} (auto|pjrt|host|host-quant|host-csd)"),
     };
     let cfg = server::ServerConfig {
         model: model_kind(args)?,

@@ -1,7 +1,7 @@
 //! Pure-rust inference engines.
 //!
-//! Two engines live here, both mirroring the L2 model graphs exactly (same
-//! im2col ordering, same layer stack), and both running the fused zero-copy
+//! Three engines live here, all mirroring the L2 model graphs exactly (same
+//! im2col ordering, same layer stack), and all running the fused zero-copy
 //! pipeline: conv layers stage im2col patches band-by-band through a
 //! [`Scratch`] arena ([`mod@crate::kernels::qconv`]), activations ping-pong
 //! between two pooled buffers, and epilogues (bias + ReLU, 2x2 pool) run in
@@ -20,14 +20,23 @@
 //!   the plane-packed [`crate::kernels::qgemm2`] straight from packed codes
 //!   (zero-skip, shift/add, hoisted alpha, row-parallel), only the fp32 head
 //!   and biases touch the f32 GEMM.  This is what the edge side serves with.
+//! * [`CsdEngine`] — the CSD shift-and-add path: quantized-layer weights are
+//!   truncated-CSD packed ([`crate::kernels::csd`]) at a
+//!   [`CsdQuality`] digit budget — the paper's §V.B quality dial — and every
+//!   forward accumulates a per-request [`Ledger`] (partial products summed,
+//!   multiplier rows gated, MACs skipped, fp32-head work), which the server
+//!   exports as `energy.*` metrics gauges.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
 use crate::codec::{EncodedModel, EncodedTensor};
-use crate::device::QualityConfig;
-use crate::kernels::{self, blocked, PackedQTensorV2, Pool, Scratch};
+use crate::device::{CsdQuality, QualityConfig};
+use crate::hw::energy::Ledger;
+use crate::kernels::{self, blocked, PackedCsdTensor, PackedQTensorV2, Pool, Scratch};
 use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::{quantize, AssignMode};
@@ -43,7 +52,8 @@ pub fn forward(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
 /// serving form: a worker holds one arena and stops allocating per request
 /// once it is warm.  Band jobs run on the global persistent pool.
 pub fn forward_with(store: &WeightStore, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
-    FusedFwd { store, packed: None, pool: Pool::global() }.run(x, scratch)
+    let fwd = FusedFwd { store, packed: None, csd: None, energy: None, pool: Pool::global() };
+    fwd.run(x, scratch)
 }
 
 /// LeNet-5 on the per-op tensor path: x [B,28,28,1] -> logits [B,10].
@@ -104,20 +114,46 @@ pub fn quantize_tensors(
     Ok(tensors)
 }
 
-/// The fused zero-copy forward pipeline, shared by the f32 engine
-/// (`packed: None`) and the code-domain [`QuantizedEngine`]: per layer the
-/// packed plane layout is preferred when present, the f32 weight otherwise.
-/// Every row-band kernel dispatches on `pool`, so steady-state serving
-/// spawns zero threads per request.
+/// The fused zero-copy forward pipeline, shared by the f32 engine (`packed`
+/// and `csd` both `None`), the code-domain [`QuantizedEngine`], and the CSD
+/// [`CsdEngine`]: per layer the packed layout is preferred when present, the
+/// f32 weight otherwise.  Every row-band kernel dispatches on `pool`, so
+/// steady-state serving spawns zero threads per request.  When `energy` is
+/// set (the CSD engine), every layer folds its per-request cost into that
+/// ledger.
 struct FusedFwd<'a> {
     store: &'a WeightStore,
     packed: Option<&'a BTreeMap<String, PackedQTensorV2>>,
+    csd: Option<&'a BTreeMap<String, PackedCsdTensor>>,
+    energy: Option<&'a Mutex<Ledger>>,
     pool: &'static Pool,
 }
 
 impl FusedFwd<'_> {
     fn packed_for(&self, name: &str) -> Option<&PackedQTensorV2> {
         self.packed.and_then(|m| m.get(name))
+    }
+
+    fn csd_for(&self, name: &str) -> Option<&PackedCsdTensor> {
+        self.csd.and_then(|m| m.get(name))
+    }
+
+    /// Fold one CSD layer's shift-and-add cost over `rows` activation rows
+    /// into the per-request energy ledger.
+    fn note_csd_energy(&self, p: &PackedCsdTensor, rows: usize) {
+        if let Some(l) = self.energy {
+            l.lock().unwrap().add(&p.ledger_for_rows(rows));
+        }
+    }
+
+    /// Fold one f32 layer's GEMM cost (`macs` multiply-accumulates — the
+    /// fp32 head/bias layers of the CSD engine) into the energy ledger.
+    fn note_f32_energy(&self, macs: usize) {
+        if let Some(l) = self.energy {
+            let mut l = l.lock().unwrap();
+            l.fp_muls += macs as u64;
+            l.fp_adds += macs as u64;
+        }
     }
 
     /// The layer's bias, validated against the layer width `n` (the in-place
@@ -141,6 +177,11 @@ impl FusedFwd<'_> {
         scratch: &mut Scratch,
         out: &mut Vec<f32>,
     ) -> Result<(usize, usize, usize)> {
+        if let Some(p) = self.csd_for(name) {
+            let (oh, ow, oc) = kernels::csd_conv_into(self.pool, xb, dims, p, same, scratch, out)?;
+            self.note_csd_energy(p, dims.0 * oh * ow);
+            return Ok((oh, ow, oc));
+        }
         if let Some(p) = self.packed_for(name) {
             return kernels::qconv_into(self.pool, xb, dims, p, same, scratch, out);
         }
@@ -159,6 +200,7 @@ impl FusedFwd<'_> {
             scratch,
             out,
         )?;
+        self.note_f32_energy(dims.0 * oh * ow * ws[0] * ws[1] * ws[2] * ws[3]);
         Ok((oh, ow, ws[3]))
     }
 
@@ -172,6 +214,18 @@ impl FusedFwd<'_> {
         scratch: &mut Scratch,
         out: &mut Vec<f32>,
     ) -> Result<usize> {
+        if let Some(p) = self.csd_for(name) {
+            if xb.len() != m * p.k {
+                bail!("{name}: dense input {} != {}x{}", xb.len(), m, p.k);
+            }
+            kernels::ensure_cap(out, m * p.oc, &mut scratch.stats);
+            scratch.last.grow(0, 0, m * p.oc);
+            let o = &mut out[..m * p.oc];
+            o.fill(0.0);
+            kernels::csd_gemm_into_on(self.pool, o, xb, m, p);
+            self.note_csd_energy(p, m);
+            return Ok(p.oc);
+        }
         if let Some(p) = self.packed_for(name) {
             if xb.len() != m * p.k {
                 bail!("{name}: dense input {} != {}x{}", xb.len(), m, p.k);
@@ -194,6 +248,7 @@ impl FusedFwd<'_> {
         let o = &mut out[..m * n];
         o.fill(0.0);
         blocked::matmul_into_on(self.pool, o, xb, wt.data(), m, ws[0], n);
+        self.note_f32_energy(m * ws[0] * n);
         Ok(n)
     }
 
@@ -380,8 +435,136 @@ impl QuantizedEngine {
     /// dispatches to the plane-packed code-domain kernels or the f32 GEMM,
     /// and a warm arena allocates nothing per request.
     pub fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
-        FusedFwd { store: &self.store, packed: Some(&self.packed), pool: self.pool }
-            .run(x, scratch)
+        FusedFwd {
+            store: &self.store,
+            packed: Some(&self.packed),
+            csd: None,
+            energy: None,
+            pool: self.pool,
+        }
+        .run(x, scratch)
+    }
+}
+
+/// The CSD shift-and-add serving engine (paper §V.B on the serving path):
+/// quantized-layer weights are truncated-CSD packed once
+/// ([`kernels::PackedCsdTensor`]) and execute on the digit-plane
+/// [`kernels::csd_gemm_into_on`] / [`kernels::csd_conv_into`] kernels with at
+/// most [`CsdQuality::max_digits`] partial products per weight; biases and
+/// the fp32 head come from the wrapped [`WeightStore`] on the blocked f32
+/// GEMM.  The f32 forms of packed tensors are dropped from the wrapped
+/// store, exactly like [`QuantizedEngine`].
+///
+/// Every forward folds its shift-and-add cost into a process-lifetime
+/// [`Ledger`] (partial products summed, multiplier rows gated, MACs fully
+/// skipped, fp32-head MACs) — [`CsdEngine::ledger`] snapshots it, and the
+/// server exports it as `energy.*` metrics gauges (see `docs/METRICS.md`).
+#[derive(Debug)]
+pub struct CsdEngine {
+    store: WeightStore,
+    packed: BTreeMap<String, PackedCsdTensor>,
+    quality: CsdQuality,
+    /// Accumulated energy over every forward of this engine's lifetime.
+    ledger: Mutex<Ledger>,
+    /// Forwards completed (one per batch — the per-batch ledger divisor).
+    forwards: AtomicU64,
+    /// The persistent worker pool every row-band kernel dispatches on.
+    pool: &'static Pool,
+}
+
+impl CsdEngine {
+    /// Pack the store's quantized tensors at the CSD digit budget.  The
+    /// store's f32 weights are the packing source, so stacking this on a
+    /// QSQ-decoded edge store composes the two dials (phi/N, then digits).
+    pub fn from_store(store: &WeightStore, quality: CsdQuality) -> Result<CsdEngine> {
+        let mut packed = BTreeMap::new();
+        for tm in store.meta.quantized_tensors() {
+            let w = store.get(tm.name)?;
+            packed.insert(
+                tm.name.to_string(),
+                PackedCsdTensor::pack(w.data(), &tm.shape, quality)?,
+            );
+        }
+        // drop the f32 forms the packed digit planes shadow, exactly like
+        // the code-domain engine
+        let mut store = store.clone();
+        for name in packed.keys() {
+            store.remove(name);
+        }
+        Ok(CsdEngine {
+            store,
+            packed,
+            quality,
+            ledger: Mutex::new(Ledger::new()),
+            forwards: AtomicU64::new(0),
+            pool: Pool::global(),
+        })
+    }
+
+    pub fn kind(&self) -> ModelKind {
+        self.store.kind
+    }
+
+    /// The digit dial this engine serves at.
+    pub fn quality(&self) -> CsdQuality {
+        self.quality
+    }
+
+    /// The worker pool this engine dispatches on.
+    pub fn pool(&self) -> &'static Pool {
+        self.pool
+    }
+
+    /// Aggregate digit statistics across every packed tensor of the engine.
+    pub fn stats(&self) -> kernels::CsdStats {
+        let mut agg = kernels::CsdStats::default();
+        for p in self.packed.values() {
+            agg.add(&p.stats);
+        }
+        agg
+    }
+
+    /// Mean kept partial products per MAC across the packed tensors — the
+    /// realized energy side of the digit dial.
+    pub fn mean_pp(&self) -> f64 {
+        self.stats().mean_pp()
+    }
+
+    /// Fraction of MACs fully gated (no digits survive the budget).
+    pub fn skipped_fraction(&self) -> f64 {
+        self.stats().skipped_fraction()
+    }
+
+    /// Snapshot of the accumulated energy ledger.
+    pub fn ledger(&self) -> Ledger {
+        self.ledger.lock().unwrap().clone()
+    }
+
+    /// Forwards completed since construction.
+    pub fn forwards(&self) -> u64 {
+        self.forwards.load(Ordering::Relaxed)
+    }
+
+    /// Forward one batch (one-shot scratch).
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.forward_with(x, &mut Scratch::new())
+    }
+
+    /// Forward one batch, reusing `scratch` — the serving form.  The
+    /// request's shift-and-add cost lands in the engine ledger.
+    pub fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        let out = FusedFwd {
+            store: &self.store,
+            packed: None,
+            csd: Some(&self.packed),
+            energy: Some(&self.ledger),
+            pool: self.pool,
+        }
+        .run(x, scratch);
+        if out.is_ok() {
+            self.forwards.fetch_add(1, Ordering::Relaxed);
+        }
+        out
     }
 }
 
@@ -568,6 +751,111 @@ mod tests {
         assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&want));
         assert!(engine.skipped_fraction() > 0.0);
         assert_eq!(engine.kind(), crate::model::meta::ModelKind::Lenet);
+    }
+
+    #[test]
+    fn csd_engine_matches_decoded_store_forward_and_counts_energy() {
+        let store = random_store(23, crate::model::meta::ModelKind::Lenet);
+        let engine = CsdEngine::from_store(&store, CsdQuality::exact()).unwrap();
+
+        // reference: replace each quantized tensor with the packed decode
+        // (the exact value the shift-and-add datapath computes with), run
+        // the plain f32 engine
+        let mut decoded = store.clone();
+        for tm in store.meta.quantized_tensors() {
+            let p = kernels::PackedCsdTensor::pack(
+                store.get(tm.name).unwrap().data(),
+                &tm.shape,
+                CsdQuality::exact(),
+            )
+            .unwrap();
+            decoded
+                .set(tm.name, Tensor::new(tm.shape.clone(), p.decode()).unwrap())
+                .unwrap();
+        }
+
+        let mut r = crate::util::rng::Rng::new(24);
+        let xdata: Vec<f32> = (0..2 * 28 * 28).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![2, 28, 28, 1], xdata).unwrap();
+        let got = engine.forward(&x).unwrap();
+        let want = forward(&decoded, &x).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-2, "csd engine vs decoded-store forward: {diff}");
+        assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&want));
+        assert_eq!(engine.kind(), crate::model::meta::ModelKind::Lenet);
+        assert!(engine.mean_pp() > 0.0);
+
+        // the ledger accumulates linearly with forwards: a second identical
+        // batch exactly doubles every counter
+        let l1 = engine.ledger();
+        assert!(l1.partial_products > 0, "csd layers must spend partial products");
+        assert!(l1.fp_muls > 0, "the fp32 head must be charged");
+        assert!(l1.total_pj() > 0.0);
+        assert_eq!(engine.forwards(), 1);
+        engine.forward(&x).unwrap();
+        let l2 = engine.ledger();
+        assert_eq!(l2.partial_products, 2 * l1.partial_products);
+        assert_eq!(l2.gated_rows, 2 * l1.gated_rows);
+        assert_eq!(l2.fp_muls, 2 * l1.fp_muls);
+        assert_eq!(engine.forwards(), 2);
+    }
+
+    #[test]
+    fn csd_engine_digit_dial_bounds_pp_and_tracks_its_decode() {
+        let store = random_store(25, crate::model::meta::ModelKind::Lenet);
+        let mut r = crate::util::rng::Rng::new(26);
+        let xdata: Vec<f32> = (0..2 * 28 * 28).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![2, 28, 28, 1], xdata).unwrap();
+        let mut last_pp = 0.0f64;
+        for digits in [1usize, 2, 4] {
+            let q = CsdQuality::new(digits);
+            let engine = CsdEngine::from_store(&store, q).unwrap();
+            // dialing digits down spends fewer partial products, never more
+            // than the dial allows
+            let pp = engine.mean_pp();
+            assert!(pp >= last_pp, "digits={digits}: pp shrank with a larger budget");
+            assert!(pp <= digits as f64 + 1e-12, "digits={digits}: pp exceeds the dial");
+            last_pp = pp;
+            // the truncated engine still computes exactly with its own
+            // decode: the f32 engine over decoded weights agrees per-dial
+            let mut decoded = store.clone();
+            for tm in store.meta.quantized_tensors() {
+                let p = kernels::PackedCsdTensor::pack(
+                    store.get(tm.name).unwrap().data(),
+                    &tm.shape,
+                    q,
+                )
+                .unwrap();
+                decoded
+                    .set(tm.name, Tensor::new(tm.shape.clone(), p.decode()).unwrap())
+                    .unwrap();
+            }
+            let got = engine.forward(&x).unwrap();
+            let want = forward(&decoded, &x).unwrap();
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-2, "digits={digits}: csd engine vs its decode: {diff}");
+        }
+    }
+
+    #[test]
+    fn csd_engine_warm_scratch_stops_allocating() {
+        let store = random_store(27, crate::model::meta::ModelKind::Lenet);
+        let engine = CsdEngine::from_store(&store, CsdQuality::new(3)).unwrap();
+        let mut r = crate::util::rng::Rng::new(28);
+        let xdata: Vec<f32> = (0..4 * 28 * 28).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![4, 28, 28, 1], xdata).unwrap();
+        let mut scratch = Scratch::new();
+        let first = engine.forward_with(&x, &mut scratch).unwrap();
+        let cold_allocs = scratch.stats.allocs;
+        for _ in 0..3 {
+            let again = engine.forward_with(&x, &mut scratch).unwrap();
+            assert_eq!(again.data(), first.data(), "warm pass changed the result");
+        }
+        assert_eq!(
+            scratch.stats.allocs, cold_allocs,
+            "warm csd requests must not allocate: {:?}",
+            scratch.stats
+        );
     }
 
     #[test]

@@ -15,13 +15,17 @@
 //! (f) the persistent worker pool: pooled band runs are bitwise identical
 //!     to single-thread at band boundaries, the spawn counter freezes after
 //!     warm-up, concurrent engines share the pool without deadlock, and
-//!     `PALLAS_POOL_THREADS=1` degrades to the serial path.
+//!     `PALLAS_POOL_THREADS=1` degrades to the serial path;
+//! (g) the truncated-CSD shift-and-add kernel (`kernels::csd`): bitwise
+//!     equal to matmul over its own decode on ternary data at every digit
+//!     budget, pooled runs bitwise equal to serial at band boundaries, and
+//!     the `CsdEngine` charges its energy ledger linearly per forward.
 
 use qsq_edge::data::synth_store;
-use qsq_edge::device::QualityConfig;
+use qsq_edge::device::{CsdQuality, QualityConfig};
 use qsq_edge::kernels::{
-    blocked, for_each_row_band_on, qconv, qgemm2, qgemm2_qt, qgemm2_threads, qgemm_qt,
-    PackedQTensor, PackedQTensorV2, Pool, Scratch,
+    blocked, csd_gemm_threads, for_each_row_band_on, qconv, qgemm2, qgemm2_qt, qgemm2_threads,
+    qgemm_qt, PackedCsdTensor, PackedQTensor, PackedQTensorV2, Pool, Scratch,
 };
 use qsq_edge::model::meta::ModelKind;
 use qsq_edge::quant::codes::Code;
@@ -378,4 +382,98 @@ fn packed_tensor_skips_all_zero_columns() {
     let x = Tensor::new(vec![2, 64], vec![1.0; 128]).unwrap();
     let y = qgemm_qt(&x, &qt).unwrap();
     assert!(y.data().iter().all(|&v| v == 0.0));
+}
+
+// --- (g) truncated-CSD shift-and-add kernel ---------------------------------
+
+#[test]
+fn prop_csd_gemm_parallel_bitwise_equals_single_thread_at_band_boundaries() {
+    forall(
+        20,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            let m = 1 + r.below(11) as usize;
+            let k = 8 * (1 + r.below(6) as usize);
+            let oc = 1 + r.below(14) as usize;
+            let digits = [1usize, 2, 4, usize::MAX][(seed % 4) as usize];
+            let w = gen_weights(&mut r, k * oc, 0.3);
+            let p = PackedCsdTensor::pack(&w, &[k, oc], CsdQuality::new(digits)).unwrap();
+            let xdata: Vec<f32> = gen_weights(&mut r, m * k, 1.0);
+            let x = Tensor::new(vec![m, k], xdata).unwrap();
+            let st = csd_gemm_threads(&x, &p, 1).unwrap();
+            for nt in [2usize, 3, 5, 8] {
+                // covers m < bands and m % bands != 0
+                let par = csd_gemm_threads(&x, &p, nt).unwrap();
+                check(
+                    par.data() == st.data(),
+                    &format!("parallel csd != single-thread at m={m} k={k} oc={oc} nt={nt}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_csd_gemm_exact_against_its_decode_on_ternary_data() {
+    // on {-1, 0, +1} activations both the digit-plane kernel and f32
+    // matmul over the packed decode are exact, so they must agree bitwise
+    // at every digit budget
+    forall(
+        20,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            let m = 1 + (seed % 5) as usize;
+            let k = 8 * (1 + r.below(5) as usize);
+            let oc = 1 + r.below(9) as usize;
+            // no saturation concerns here: the oracle is the packing's own
+            // decode, which reflects any fixed-point clamping identically
+            let w = gen_weights(&mut r, k * oc, 0.2);
+            let xdata: Vec<f32> = (0..m * k).map(|_| r.range_i64(-1, 1) as f32).collect();
+            let x = Tensor::new(vec![m, k], xdata).unwrap();
+            for digits in [1usize, 3, usize::MAX] {
+                let p = PackedCsdTensor::pack(&w, &[k, oc], CsdQuality::new(digits)).unwrap();
+                let dec = Tensor::new(vec![k, oc], p.decode()).unwrap();
+                let want = ops::matmul_naive(&x, &dec).unwrap();
+                let got = qsq_edge::kernels::csd_gemm(&x, &p).unwrap();
+                check(
+                    got.data() == want.data(),
+                    &format!("csd_gemm != decode oracle at m={m} k={k} oc={oc} digits={digits}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn csd_engine_ledger_accumulates_linearly_and_pool_spawns_stay_frozen() {
+    use qsq_edge::runtime::host::CsdEngine;
+    let store = synth_store(51, ModelKind::Lenet);
+    let engine = CsdEngine::from_store(&store, CsdQuality::new(2)).unwrap();
+    let mut r = Rng::new(52);
+    let xdata: Vec<f32> = (0..2 * 28 * 28).map(|_| r.f32()).collect();
+    let x = Tensor::new(vec![2, 28, 28, 1], xdata).unwrap();
+    let mut scratch = Scratch::new();
+    let first = engine.forward_with(&x, &mut scratch).unwrap();
+    let l1 = engine.ledger();
+    assert!(l1.partial_products > 0, "csd layers must spend partial products");
+    assert!(engine.mean_pp() <= 2.0 + 1e-12, "pp bounded by the 2-digit dial");
+    let warm_spawns = engine.pool().stats().spawns;
+    for _ in 0..4 {
+        let again = engine.forward_with(&x, &mut scratch).unwrap();
+        assert_eq!(again.data(), first.data(), "warm csd forward changed the result");
+    }
+    let l5 = engine.ledger();
+    assert_eq!(l5.partial_products, 5 * l1.partial_products, "ledger must scale linearly");
+    assert_eq!(l5.gated_rows, 5 * l1.gated_rows);
+    assert_eq!(l5.skipped_macs, 5 * l1.skipped_macs);
+    assert_eq!(engine.forwards(), 5);
+    assert_eq!(
+        engine.pool().stats().spawns,
+        warm_spawns,
+        "warm csd forwards must not spawn pool threads"
+    );
 }
