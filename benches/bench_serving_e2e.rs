@@ -1,14 +1,82 @@
-//! End-to-end serving benchmark: TCP + dynamic batching + PJRT, measured as
-//! a client sees it.  This is the system-level throughput/latency number the
-//! edge story rests on (§Perf L3).
+//! End-to-end serving benchmark, two parts:
+//!
+//! * **Per-policy dispatch** (no artifacts needed): the `Auto` engine
+//!   roster over a synthetic store, timed per batch size under each
+//!   `DispatchPolicy` (batch-fill / latency-floor / energy-budget), with
+//!   the routed engine named in each entry.  Results are appended to
+//!   `BENCH_kernels.json` (created if absent) so the dispatch trajectory
+//!   rides the same cross-PR artifact and CI step summary as the kernels.
+//! * **TCP + dynamic batching + PJRT** (needs `make artifacts`): the
+//!   system-level throughput/latency number the edge story rests on
+//!   (§Perf L3), measured as a client sees it.
 
 use std::time::{Duration, Instant};
 
-use qsq_edge::coordinator::server::{Client, Server, ServerConfig};
-use qsq_edge::data::RequestGen;
+use qsq_edge::bench::{run_bench, BenchResult};
+use qsq_edge::coordinator::server::{Client, Roster, Server, ServerConfig};
+use qsq_edge::data::{synth_store, RequestGen};
+use qsq_edge::kernels::Scratch;
 use qsq_edge::model::meta::ModelKind;
 use qsq_edge::model::store::artifacts_dir;
+use qsq_edge::runtime::engine::PolicySelect;
+use qsq_edge::tensor::Tensor;
+use qsq_edge::util::json::{self, Value};
+use qsq_edge::util::rng::Rng;
 use qsq_edge::util::stats;
+
+/// Time every (policy, batch-size) dispatch route of the Auto roster on a
+/// synthetic LeNet store.  Entry names carry the routed engine, so the JSON
+/// shows which engine each policy hands each batch size to.
+fn policy_dispatch_entries() -> Vec<BenchResult> {
+    println!("== per-policy roster dispatch (synthetic store, no artifacts) ==");
+    let mut out = Vec::new();
+    let mut r = Rng::new(5);
+    for policy in [
+        PolicySelect::BatchFill,
+        PolicySelect::LatencyFloor,
+        PolicySelect::EnergyBudget,
+    ] {
+        let cfg = ServerConfig { policy, ..Default::default() };
+        let roster = Roster::build(None, synth_store(5, ModelKind::Lenet), &cfg).unwrap();
+        let mut scratch = Scratch::new();
+        for n in [1usize, 8, 32] {
+            let xdata: Vec<f32> = (0..n * 28 * 28).map(|_| r.f32()).collect();
+            let x = Tensor::new(vec![n, 28, 28, 1], xdata).unwrap();
+            let engine = roster.engine(roster.route(n)).name();
+            let name = format!("dispatch {:<13} b={n:<2} -> {engine}", policy.name());
+            let b = run_bench(&name, 2, 12, n as f64, || {
+                roster.dispatch(&x, &mut scratch).unwrap()
+            });
+            println!("{}", b.report());
+            out.push(b);
+        }
+    }
+    out
+}
+
+/// Append `entries` to `BENCH_kernels.json`'s results array (keeping the
+/// existing kernel entries when the kernel bench ran first in this
+/// directory), creating the file when absent — one artifact, one step
+/// summary, one cross-PR trajectory.
+fn merge_into_bench_kernels(entries: &[BenchResult]) {
+    const PATH: &str = "BENCH_kernels.json";
+    let mut results: Vec<Value> = std::fs::read_to_string(PATH)
+        .ok()
+        .and_then(|text| json::parse(text.trim()).ok())
+        .map(|doc| doc.get("results").as_arr().unwrap_or(&[]).to_vec())
+        .unwrap_or_default();
+    // re-runs replace their own entries instead of duplicating them
+    results.retain(|v| {
+        v.get("name").as_str().map(|n| !n.starts_with("dispatch ")).unwrap_or(true)
+    });
+    results.extend(entries.iter().map(|r| r.to_json()));
+    let merged = json::obj(vec![
+        ("bench", json::s("bench_kernels")),
+        ("results", Value::Arr(results)),
+    ]);
+    std::fs::write(PATH, merged.to_json() + "\n").unwrap();
+    println!("merged {} dispatch entries into {PATH}", entries.len());
+}
 
 fn drive(clients: usize, per_client: usize, delay: Duration) -> Option<(f64, Vec<f64>)> {
     let dir = artifacts_dir();
@@ -43,7 +111,10 @@ fn drive(clients: usize, per_client: usize, delay: Duration) -> Option<(f64, Vec
 }
 
 fn main() {
-    println!("== bench_serving_e2e (LeNet, batch-32 artifact) ==");
+    let entries = policy_dispatch_entries();
+    merge_into_bench_kernels(&entries);
+
+    println!("\n== bench_serving_e2e (LeNet, batch-32 artifact) ==");
     println!(
         "{:<26} {:>12} {:>10} {:>10} {:>10}",
         "scenario", "req/s", "p50 ms", "p95 ms", "p99 ms"
@@ -66,7 +137,7 @@ fn main() {
                 stats::percentile(&lat, 99.0),
             ),
             None => {
-                eprintln!("no artifacts; skipping");
+                eprintln!("no artifacts; skipping the TCP/PJRT scenarios");
                 return;
             }
         }

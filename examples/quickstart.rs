@@ -1,14 +1,17 @@
-//! Quickstart: load the trained LeNet, quantize it with QSQ, and compare
-//! accuracy / size before and after — the 60-second tour of the library.
+//! Quickstart: load the trained LeNet (or a synthetic stand-in when no
+//! artifacts are present), quantize it with QSQ, and compare accuracy / size
+//! before and after — the 60-second tour of the library.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart      # artifact-free tour
 //! ```
 
 use anyhow::Result;
 
 use qsq_edge::codec;
 use qsq_edge::coordinator::deploy;
+use qsq_edge::data::synth_store;
 use qsq_edge::device::QualityConfig;
 use qsq_edge::model::meta::ModelKind;
 use qsq_edge::model::store::{artifacts_dir, Dataset, WeightStore};
@@ -19,39 +22,47 @@ use qsq_edge::runtime::client::Runtime;
 fn main() -> Result<()> {
     let dir = artifacts_dir();
     println!("== qsq-edge quickstart ==\n");
+    let trained = dir.join("manifest.json").exists();
 
-    // 1. the PJRT runtime over the AOT artifacts (python is build-time only)
-    let mut rt = Runtime::new(&dir)?;
-    println!("PJRT platform: {}", rt.platform());
+    // 1. trained weights via the PJRT runtime when artifacts exist; a
+    //    synthetic store otherwise (python is build-time only either way)
+    let store = if trained {
+        WeightStore::load(&dir, ModelKind::Lenet)?
+    } else {
+        println!("(no artifacts/ — synthetic weights; accuracy numbers skipped)");
+        synth_store(1, ModelKind::Lenet)
+    };
 
-    // 2. trained weights + held-out eval set
-    let store = WeightStore::load(&dir, ModelKind::Lenet)?;
-    let test = Dataset::load(&dir, "mnist", "test")?;
-    let base = repro::eval_store(&mut rt, &store, &test, 1024)?;
-    println!("LeNet fp32 accuracy      : {:.2}%", 100.0 * base);
-
-    // 3. Quality Scalable Quantization at the paper's operating point
-    for phi in [1u32, 2, 4] {
-        let names = repro::quantized_names(ModelKind::Lenet);
-        let q = repro::quantized_store(&store, &names, phi, 16, AssignMode::SigmaSearch)?;
-        let acc = repro::eval_store(&mut rt, &q, &test, 1024)?;
-        println!("quantized phi={phi} accuracy  : {:.2}%", 100.0 * acc);
+    // 2. accuracy before/after quantization (needs the trained artifacts)
+    if trained {
+        let mut rt = Runtime::new(&dir)?;
+        println!("PJRT platform: {}", rt.platform());
+        let test = Dataset::load(&dir, "mnist", "test")?;
+        let base = repro::eval_store(&mut rt, &store, &test, 1024)?;
+        println!("LeNet fp32 accuracy      : {:.2}%", 100.0 * base);
+        for phi in [1u32, 2, 4] {
+            let names = repro::quantized_names(ModelKind::Lenet);
+            let q = repro::quantized_store(&store, &names, phi, 16, AssignMode::SigmaSearch)?;
+            let acc = repro::eval_store(&mut rt, &q, &test, 1024)?;
+            println!("quantized phi={phi} accuracy  : {:.2}%", 100.0 * acc);
+        }
     }
 
-    // 4. what actually ships: the QSQ container
-    let encoded = deploy::encode_store(
-        &store,
-        QualityConfig { phi: 4, group: 16 },
-        AssignMode::SigmaSearch,
-    )?;
-    let bytes = codec::encode_model(&encoded)?;
-    println!(
-        "\ncontainer: {} bytes on the wire ({} bits encoded vs {} bits fp32 = {:.2}% savings)",
-        bytes.len(),
-        encoded.encoded_bits(),
-        encoded.full_precision_bits(),
-        100.0 * (1.0 - encoded.encoded_bits() as f64 / encoded.full_precision_bits() as f64)
-    );
+    // 3. Quality Scalable Quantization at every phi: what actually ships
+    for phi in [1u32, 2, 4] {
+        let encoded = deploy::encode_store(
+            &store,
+            QualityConfig { phi, group: 16 },
+            AssignMode::SigmaSearch,
+        )?;
+        let bytes = codec::encode_model(&encoded)?;
+        println!(
+            "container phi={phi}: {:>6} bytes on the wire ({} tensors, {:.2}% savings vs fp32)",
+            bytes.len(),
+            encoded.tensors.len(),
+            100.0 * (1.0 - encoded.encoded_bits() as f64 / encoded.full_precision_bits() as f64)
+        );
+    }
     println!("\nnext: `cargo run --release --example edge_deployment` for the full story");
     Ok(())
 }

@@ -12,11 +12,11 @@
 //! about: encoded size, memory savings, transfer cost, decoder-op counts,
 //! zero fractions.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::channel::{Link, LinkConfig, TransferReport};
 use crate::codec::{decode_model, encode_model, EncodedModel};
-use crate::device::{CsdQuality, QualityConfig};
+use crate::device::{CsdQuality, DeviceProfile, QualityConfig};
 use crate::hw::decoder_rtl;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::AssignMode;
@@ -27,6 +27,10 @@ use crate::tensor::Tensor;
 #[derive(Clone, Debug)]
 pub struct DeployReport {
     pub quality: QualityConfig,
+    /// The stacked CSD digit dial, when the deployment built a CSD engine
+    /// ([`deploy_csd_engine`] / [`deploy_for_device`]); `None` for
+    /// QSQ-only deployments.
+    pub csd: Option<CsdQuality>,
     pub mode: AssignMode,
     /// Encoded bits of the quantized tensors (eq. 12).
     pub encoded_bits: u64,
@@ -103,9 +107,52 @@ pub fn deploy_csd_engine(
     link_cfg: LinkConfig,
     seed: u64,
 ) -> Result<(CsdEngine, DeployReport)> {
-    let (edge, report, _) = deploy_full(store, quality, mode, link_cfg, seed)?;
+    let (edge, mut report, _) = deploy_full(store, quality, mode, link_cfg, seed)?;
     let engine = CsdEngine::from_store(&edge, csd)?;
+    report.csd = Some(csd);
     Ok((engine, report))
+}
+
+/// The device-profile-driven form of the whole pipeline: the profile's
+/// memory budget sizes the QSQ dial, its MACs-derived energy budget sizes
+/// the CSD digit dial ([`DeviceProfile::select_quality`]), and the model
+/// ships over the profile's own link — a device profile alone determines
+/// the full stacked-dial configuration the returned engine serves at (the
+/// report records both dials).
+pub fn deploy_for_device(
+    store: &WeightStore,
+    device: &DeviceProfile,
+    mode: AssignMode,
+    seed: u64,
+) -> Result<(CsdEngine, DeployReport)> {
+    let (_, engine, report) = deploy_for_device_with_link(store, device, mode, device.link, seed)?;
+    Ok((engine, report))
+}
+
+/// [`deploy_for_device`] with an explicit link override (e.g. a `--ber`
+/// noise injection on the profile's link); additionally returns the
+/// post-channel edge store so callers can score or re-pack it without
+/// replaying the deployment.
+pub fn deploy_for_device_with_link(
+    store: &WeightStore,
+    device: &DeviceProfile,
+    mode: AssignMode,
+    link_cfg: LinkConfig,
+    seed: u64,
+) -> Result<(WeightStore, CsdEngine, DeployReport)> {
+    let meta = &store.meta;
+    let (quality, csd) = device
+        .select_quality(
+            |phi, group| crate::model::bits::model_bits(meta, phi, group).encoded_bits,
+            meta.macs_per_image(),
+        )
+        .with_context(|| {
+            format!("device {} cannot fit {} at any quality", device.name, store.kind.name())
+        })?;
+    let (edge, mut report, _) = deploy_full(store, quality, mode, link_cfg, seed)?;
+    let engine = CsdEngine::from_store(&edge, csd)?;
+    report.csd = Some(csd);
+    Ok((edge, engine, report))
 }
 
 /// Pipeline internals shared by [`deploy`] and [`deploy_engine`]: also
@@ -161,6 +208,7 @@ pub fn deploy_full(
 
     let report = DeployReport {
         quality,
+        csd: None,
         mode,
         encoded_bits: encoded.encoded_bits(),
         full_bits: encoded.full_precision_bits(),
@@ -315,6 +363,37 @@ mod tests {
         .unwrap();
         assert!(cheap.mean_pp() <= 1.0 + 1e-12);
         assert!(cheap.mean_pp() < engine.mean_pp());
+    }
+
+    #[test]
+    fn deploy_for_device_derives_both_dials_from_the_profile() {
+        use crate::device::DeviceProfile;
+        let store = fake_store(9);
+        let roster = DeviceProfile::roster();
+        let mcu = roster.iter().find(|d| d.name == "mcu-m4").unwrap();
+        let server = roster.iter().find(|d| d.name == "server").unwrap();
+        let (mcu_engine, mcu_rep) =
+            deploy_for_device(&store, mcu, AssignMode::SigmaSearch, 5).unwrap();
+        let (srv_engine, srv_rep) =
+            deploy_for_device(&store, server, AssignMode::SigmaSearch, 5).unwrap();
+        // both dials recorded in the report, and the engine serves at the
+        // report's digit dial
+        let mcu_csd = mcu_rep.csd.unwrap();
+        let srv_csd = srv_rep.csd.unwrap();
+        assert_eq!(mcu_engine.quality(), mcu_csd);
+        assert_eq!(srv_engine.quality(), srv_csd);
+        // the MCU-class profile selects a smaller digit budget than the
+        // server-class profile, and the realized energy follows the dial
+        assert!(
+            mcu_csd.max_digits < srv_csd.max_digits,
+            "mcu {} vs server {}",
+            mcu_csd.max_digits,
+            srv_csd.max_digits
+        );
+        assert!(mcu_engine.mean_pp() <= mcu_csd.max_digits as f64 + 1e-12);
+        assert!(mcu_engine.mean_pp() < srv_engine.mean_pp());
+        // the QSQ dial still tracks the memory budget (server >= mcu quality)
+        assert!(srv_rep.quality.phi >= mcu_rep.quality.phi);
     }
 
     #[test]

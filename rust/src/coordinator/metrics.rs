@@ -2,8 +2,9 @@
 //! percentile snapshots.
 //!
 //! The JSON snapshot schema — `counter.*`, `gauge.pool.*`,
-//! `gauge.scratch_hw.<layer>.*`, `gauge.energy.*`, `latency_ms.<series>.*`
-//! and the latency-ring semantics — is documented for dashboard consumers
+//! `gauge.scratch_hw.<layer>.*`, the unified per-engine
+//! `gauge.engine.<name>.*` family, `latency_ms.<series>.*` and the
+//! latency-ring semantics — is documented for dashboard consumers
 //! in `docs/METRICS.md`; keep the two in sync.
 
 use std::collections::BTreeMap;

@@ -9,26 +9,31 @@
 
 use anyhow::{bail, Result};
 
-use crate::device::{DeviceProfile, QualityConfig};
+use crate::device::{CsdQuality, DeviceProfile, QualityConfig};
 use crate::model::bits;
 use crate::model::meta::{ModelKind, ModelMeta};
 use crate::quant::qsq::AssignMode;
 
-/// A deployment decision for one device.
+/// A deployment decision for one device: both stacked quality dials.
 #[derive(Clone, Debug)]
 pub struct DeployPlan {
     pub device: String,
+    /// QSQ dial — what crosses the channel (memory budget).
     pub quality: QualityConfig,
+    /// CSD digit dial — what the edge multiplier spends per weight
+    /// (MACs-derived energy budget).
+    pub csd: CsdQuality,
     pub mode: AssignMode,
     pub estimated_bits: u64,
 }
 
-/// Decide the quality level for every device in a roster.
+/// Decide the stacked-dial quality level for every device in a roster.
 pub fn plan_deployments(
     meta: &ModelMeta,
     devices: &[DeviceProfile],
     mode: AssignMode,
 ) -> Vec<Result<DeployPlan>> {
+    let macs = meta.macs_per_image();
     devices
         .iter()
         .map(|d| {
@@ -36,10 +41,11 @@ pub fn plan_deployments(
                 // whole-model footprint: encoded quantized tensors + fp rest
                 bits::model_bits(meta, phi, group).encoded_bits
             };
-            match d.select_quality(bits_at) {
-                Some(q) => Ok(DeployPlan {
+            match d.select_quality(bits_at, macs) {
+                Some((q, csd)) => Ok(DeployPlan {
                     device: d.name.clone(),
                     quality: q,
+                    csd,
                     mode,
                     estimated_bits: bits_at(q.phi, q.group),
                 }),
@@ -104,9 +110,13 @@ mod tests {
         for p in &plans {
             assert!(p.is_ok(), "{p:?}");
         }
-        // server-class device gets the best quality
+        // server-class device gets the best quality on both dials
         let server = plans.last().unwrap().as_ref().unwrap();
         assert_eq!(server.quality.phi, 4);
+        assert_eq!(server.csd, crate::device::CsdQuality::exact());
+        // the MCU plan carries a strictly smaller digit budget
+        let mcu = plans.first().unwrap().as_ref().unwrap();
+        assert!(mcu.csd.max_digits < server.csd.max_digits);
     }
 
     #[test]

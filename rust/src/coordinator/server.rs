@@ -8,23 +8,25 @@
 //! ```
 //! Each connection is synchronous (request → response); concurrency comes
 //! from multiple connections feeding the shared [`BatchQueue`], which the
-//! worker drains in dynamic batches.  The worker executes on one of the
-//! engines ([`EngineSelect`]): the PJRT artifact (padded to the compiled
-//! batch size), the pure-rust blocked-GEMM f32 engine, the code-domain
-//! [`QuantizedEngine`] (plane-packed codes on qgemm v2), or the CSD
+//! worker drains in dynamic batches.  The worker executes over a [`Roster`]
+//! of boxed [`Engine`]s: the PJRT artifact wrapper (padded to the compiled
+//! batch size), the pure-rust blocked-GEMM [`F32Engine`], the code-domain
+//! [`QuantizedEngine`] (plane-packed codes on qgemm v2), and the CSD
 //! shift-and-add [`CsdEngine`] (truncated-CSD digit planes on
-//! `kernels::csd`, which additionally exports its per-request energy ledger
-//! as `energy.*` gauges).  `Auto` is
-//! *batch-aware*: instead of picking one engine at startup it re-dispatches
-//! every popped batch — batches that fill enough of the compiled artifact
-//! run on PJRT (or the threaded f32 host engine when PJRT is absent), while
-//! small/singleton batches skip the padding waste and run on the low-latency
-//! code-domain engine.  The worker owns one [`Scratch`] arena, so the host
-//! paths stop allocating per request once warm, and all host kernels
-//! dispatch row bands on the persistent worker pool — the worker exports the
-//! pool's spawn/wakeup counters and the arena's per-layer high-water marks
-//! as metrics gauges (`pool.*`, `scratch_hw.*`), where a flat `pool.spawns`
-//! is the "zero threads spawned per request" steady-state invariant.
+//! `kernels::csd`).  [`EngineSelect`] pins the roster to one engine, or
+//! `Auto` builds the full roster and a pluggable
+//! [`DispatchPolicy`] re-routes every popped batch (`--policy`
+//! batch-fill|latency|energy): artifact-filling batches to the compiled
+//! path, small/singleton batches to the low-latency or minimum-energy host
+//! engines — under the energy policy the smallest batches reach the CSD
+//! engine.  The worker owns one [`Scratch`] arena, so the host paths stop
+//! allocating per request once warm, and all host kernels dispatch row bands
+//! on the persistent worker pool.  After every batch the worker exports the
+//! pool's spawn/wakeup counters, the arena's per-layer high-water marks
+//! (`pool.*`, `scratch_hw.*` — a flat `pool.spawns` is the "zero threads
+//! spawned per request" steady-state invariant), and every roster engine's
+//! uniform [`crate::runtime::engine::EngineReport`] as the
+//! `engine.<name>.*` gauge family (`docs/METRICS.md`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -43,23 +45,30 @@ use crate::kernels::{self, Scratch};
 use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::AssignMode;
-use crate::runtime::client::{ArgValue, Executable, Runtime};
-use crate::runtime::host::{self, CsdEngine, QuantizedEngine};
+use crate::runtime::engine::{DispatchPolicy, Engine, EngineKind, PjrtEngine, PolicySelect};
+use crate::runtime::host::{CsdEngine, F32Engine, QuantizedEngine};
 use crate::tensor::{ops, Tensor};
 use crate::util::json::{self, Value};
 
-/// Quality the batch-aware `Auto` backend quantizes its small-batch engine
-/// at (the canonical phi=4, N=16 point the deploy pipeline defaults to).
+pub use crate::runtime::engine::batch_prefers_artifact;
+
+/// Quality the `Auto` roster quantizes its code-domain engine at (the
+/// canonical phi=4, N=16 point the deploy pipeline defaults to).
 const AUTO_QUALITY: QualityConfig = QualityConfig { phi: 4, group: 16 };
 
-/// Which inference engine the worker thread runs.
+/// Digit budget the `Auto` roster's CSD engine serves at: 4 kept partial
+/// products per weight keeps truncation error small while the energy policy
+/// still halves-or-better the shift-and-add work of exact CSD.
+const AUTO_CSD_DIGITS: usize = 4;
+
+/// Which inference engine(s) the worker thread runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineSelect {
-    /// Batch-aware hybrid: every popped batch is re-dispatched — to the
-    /// PJRT artifact when the batch fills enough of the compiled size
-    /// ([`batch_prefers_artifact`]; threaded f32 host engine when PJRT is
-    /// unavailable), and to the code-domain quantized engine for
-    /// small/singleton batches where padding waste would dominate.
+    /// Batch-aware roster: every popped batch is re-routed by the
+    /// [`DispatchPolicy`] in [`ServerConfig::policy`] over the full engine
+    /// roster — the PJRT artifact (threaded f32 host engine when PJRT is
+    /// unavailable), the code-domain quantized engine, and the CSD
+    /// shift-and-add engine.
     Auto,
     /// PJRT only; startup fails if it is unavailable.
     Pjrt,
@@ -70,7 +79,8 @@ pub enum EngineSelect {
     HostQuantized(QualityConfig),
     /// Pure-rust CSD shift-and-add engine (§V.B): weights truncated-CSD
     /// packed at this digit budget and served on `kernels::csd`, with the
-    /// per-request energy ledger exported as `energy.*` gauges.
+    /// per-request energy ledger exported via the `engine.host-csd.*`
+    /// gauge family.
     HostCsd(CsdQuality),
 }
 
@@ -85,6 +95,9 @@ pub struct ServerConfig {
     pub bind: String,
     /// Inference engine selection.
     pub engine: EngineSelect,
+    /// Batch-dispatch policy for the `Auto` roster (ignored when the
+    /// roster is pinned to a single engine).
+    pub policy: PolicySelect,
 }
 
 impl Default for ServerConfig {
@@ -95,127 +108,179 @@ impl Default for ServerConfig {
             max_delay: Duration::from_millis(5),
             bind: "127.0.0.1:0".into(),
             engine: EngineSelect::Auto,
+            policy: PolicySelect::BatchFill,
         }
     }
 }
 
-/// The loaded PJRT pieces (client kept alive for the executable's lifetime).
-struct PjrtParts {
-    _rt: Runtime,
-    exe: Arc<Executable>,
-    /// Prebuilt argument vector: slot 0 is overwritten with each batch
-    /// tensor, slots 1.. hold the weights — wrapped once at startup so
-    /// dispatching a batch never re-copies the model.
-    args: Vec<ArgValue>,
+/// The worker's engine roster: every serving engine as a boxed [`Engine`],
+/// with a [`DispatchPolicy`] picking one per popped batch.  A pinned
+/// [`EngineSelect`] builds a one-engine roster (the policy is then inert);
+/// `Auto` builds the full roster.  Constructed on, and owned by, the worker
+/// thread — the PJRT runtime is not `Send`.
+pub struct Roster {
+    engines: Vec<Box<dyn Engine>>,
+    /// `engines[i]`'s kind, precomputed for the policy's route call.
+    kinds: Vec<EngineKind>,
+    policy: Box<dyn DispatchPolicy>,
+    /// The batch size the policy crossovers price against: the compiled
+    /// artifact batch (the padded cost a routed batch actually pays) when a
+    /// PJRT engine is on the roster, the dynamic-batching cap otherwise.
+    artifact_batch: usize,
+    /// `dispatch_<engine>` counter names, precomputed per roster index so
+    /// the worker's hot loop does not format a key per batch.
+    dispatch_counters: Vec<String>,
 }
 
-/// The worker's engine (constructed on, and owned by, the worker thread —
-/// `Runtime` is not `Send`).
-enum Backend {
-    Pjrt(PjrtParts),
-    Host(WeightStore),
-    Quant(QuantizedEngine),
-    /// CSD shift-and-add engine with the per-request energy ledger.
-    Csd(CsdEngine),
-    /// Batch-aware hybrid ([`EngineSelect::Auto`]): each popped batch picks
-    /// PJRT (if loaded) or the f32 store for artifact-sized batches, and the
-    /// code-domain engine for small ones.  The f32 store is kept only when
-    /// PJRT is absent — with PJRT live it would never be read, and the
-    /// weights already sit in the prebuilt `PjrtParts::args` slots.
-    Hybrid {
-        pjrt: Option<PjrtParts>,
-        store: Option<WeightStore>,
-        quant: QuantizedEngine,
-    },
-}
-
-impl Backend {
-    fn name(&self) -> &'static str {
-        match self {
-            Backend::Pjrt { .. } => "pjrt",
-            Backend::Host(_) => "host-f32",
-            Backend::Quant(_) => "host-qgemm",
-            Backend::Csd(_) => "host-csd",
-            Backend::Hybrid { .. } => "auto-hybrid",
-        }
-    }
-}
-
-/// The `threads_for`-style crossover of the batch-aware dispatch: running a
-/// padded artifact costs the full compiled batch regardless of occupancy,
-/// and the compiled kernels are roughly a few times faster per row than the
-/// host engines — so the artifact wins once a batch fills at least a
-/// quarter of the compiled size, and below that the padding waste hands the
-/// batch to the low-latency code-domain engine.
-pub fn batch_prefers_artifact(n: usize, artifact_batch: usize) -> bool {
-    n.saturating_mul(4) >= artifact_batch
-}
-
-fn pjrt_parts(artifacts: &Path, cfg: &ServerConfig, store: &WeightStore) -> Result<PjrtParts> {
-    let mut rt = Runtime::new(artifacts)?;
-    let (art, _) = super::router::artifact_for(cfg.model, cfg.batch)?;
-    let exe = rt.load(&art)?;
-    let mut args = vec![ArgValue::F32(Tensor::zeros(vec![0]))];
-    args.extend(store.ordered().into_iter().map(|t| ArgValue::F32(t.clone())));
-    Ok(PjrtParts { _rt: rt, exe, args })
-}
-
-fn build_backend(artifacts: &Path, cfg: &ServerConfig) -> Result<Backend> {
-    let store = WeightStore::load(artifacts, cfg.model)?;
-    match cfg.engine {
-        EngineSelect::Pjrt => Ok(Backend::Pjrt(pjrt_parts(artifacts, cfg, &store)?)),
-        EngineSelect::Host => Ok(Backend::Host(store)),
-        EngineSelect::HostQuantized(q) => Ok(Backend::Quant(QuantizedEngine::quantize_store(
-            &store,
-            q,
-            AssignMode::SigmaSearch,
-        )?)),
-        EngineSelect::HostCsd(q) => Ok(Backend::Csd(CsdEngine::from_store(&store, q)?)),
-        EngineSelect::Auto => {
-            let pjrt = match pjrt_parts(artifacts, cfg, &store) {
-                Ok(p) => Some(p),
-                Err(e) => {
-                    eprintln!(
-                        "server: PJRT unavailable ({e:#}); host engines will serve all batches"
-                    );
-                    None
-                }
-            };
-            // a quantization failure must not take Auto down — degrade to
-            // the pre-hybrid behavior (PJRT, or the plain f32 engine)
-            match QuantizedEngine::quantize_store(&store, AUTO_QUALITY, AssignMode::SigmaSearch) {
-                Ok(quant) => {
-                    let store = if pjrt.is_none() { Some(store) } else { None };
-                    Ok(Backend::Hybrid { pjrt, store, quant })
-                }
-                Err(e) => {
-                    eprintln!(
-                        "server: quantized engine unavailable ({e:#}); \
-                         batch-aware dispatch disabled"
-                    );
-                    match pjrt {
-                        Some(pj) => Ok(Backend::Pjrt(pj)),
-                        None => Ok(Backend::Host(store)),
+impl Roster {
+    /// Build the roster `cfg` asks for over an already-loaded store.
+    /// `artifacts` is the directory the PJRT artifact would compile from;
+    /// pass `None` to skip the PJRT path (benches and dispatch tests run
+    /// rosters over synthetic stores with no artifacts on disk).
+    pub fn build(
+        artifacts: Option<&Path>,
+        store: WeightStore,
+        cfg: &ServerConfig,
+    ) -> Result<Roster> {
+        let mut engines: Vec<Box<dyn Engine>> = Vec::new();
+        // the batch size the policy crossovers price against: the PJRT
+        // engine's *compiled* batch when one is on the roster — artifact_for
+        // rounds cfg.batch up to a compiled size, and that padded size is
+        // the cost a routed batch actually pays, whatever the dynamic
+        // batcher's cap is — cfg.batch otherwise
+        let mut artifact_batch = cfg.batch;
+        match cfg.engine {
+            EngineSelect::Pjrt => {
+                let dir = artifacts.context("PJRT engine needs an artifacts directory")?;
+                let p = PjrtEngine::load(dir, cfg.model, cfg.batch, &store)?;
+                artifact_batch = p.batch();
+                engines.push(Box::new(p));
+            }
+            EngineSelect::Host => engines.push(Box::new(F32Engine::new(store))),
+            EngineSelect::HostQuantized(q) => engines.push(Box::new(
+                QuantizedEngine::quantize_store(&store, q, AssignMode::SigmaSearch)?,
+            )),
+            EngineSelect::HostCsd(q) => {
+                engines.push(Box::new(CsdEngine::from_store(&store, q)?))
+            }
+            EngineSelect::Auto => {
+                // a packing failure must not take Auto down: each engine
+                // that fails to build is simply absent from the roster, and
+                // the policies' preference orders route around it
+                let pjrt = artifacts.and_then(|dir| {
+                    match PjrtEngine::load(dir, cfg.model, cfg.batch, &store) {
+                        Ok(p) => Some(p),
+                        Err(e) => {
+                            eprintln!(
+                                "server: PJRT unavailable ({e:#}); the f32 host engine \
+                                 serves artifact-sized batches"
+                            );
+                            None
+                        }
                     }
+                });
+                let quant =
+                    QuantizedEngine::quantize_store(&store, AUTO_QUALITY, AssignMode::SigmaSearch);
+                match quant {
+                    Ok(q) => engines.push(Box::new(q)),
+                    Err(e) => eprintln!("server: quantized engine unavailable ({e:#})"),
+                }
+                match CsdEngine::from_store(&store, CsdQuality::new(AUTO_CSD_DIGITS)) {
+                    Ok(c) => engines.push(Box::new(c)),
+                    Err(e) => eprintln!("server: csd engine unavailable ({e:#})"),
+                }
+                // artifact-class engine last: PJRT when live (the weights
+                // already sit in its prebuilt args), the f32 store otherwise
+                match pjrt {
+                    Some(p) => {
+                        artifact_batch = p.batch();
+                        engines.push(Box::new(p));
+                    }
+                    None => engines.push(Box::new(F32Engine::new(store))),
                 }
             }
         }
+        if engines.is_empty() {
+            bail!("no engine could be built for {:?}", cfg.engine);
+        }
+        if artifact_batch > cfg.batch && engines.len() > 1 {
+            // the dynamic batcher can never form a batch that fills the
+            // compiled artifact — under latency-floor the artifact engine
+            // will (correctly: every batch would pay padding) see no traffic
+            eprintln!(
+                "server: compiled artifact batch {artifact_batch} exceeds the batching \
+                 cap {}; padding-averse policies will keep batches on the host engines",
+                cfg.batch
+            );
+        }
+        let kinds = engines.iter().map(|e| e.kind()).collect();
+        let dispatch_counters = engines
+            .iter()
+            .map(|e| format!("dispatch_{}", e.name().replace('-', "_")))
+            .collect();
+        Ok(Roster { engines, kinds, policy: cfg.policy.build(), artifact_batch, dispatch_counters })
+    }
+
+    /// Backend label for the startup `engine_*` counter: the pinned engine's
+    /// name, or `auto-hybrid` for a policy-routed roster.
+    pub fn name(&self) -> &'static str {
+        if self.engines.len() == 1 {
+            self.engines[0].name()
+        } else {
+            "auto-hybrid"
+        }
+    }
+
+    /// The active dispatch policy's name.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn len(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty()
+    }
+
+    /// The engine at roster index `i`.
+    pub fn engine(&self, i: usize) -> &dyn Engine {
+        self.engines[i].as_ref()
+    }
+
+    /// The precomputed `dispatch_<engine>` counter key for roster index `i`.
+    pub fn dispatch_counter(&self, i: usize) -> &str {
+        &self.dispatch_counters[i]
+    }
+
+    /// Every engine on the roster (for telemetry export).
+    pub fn engines(&self) -> impl Iterator<Item = &dyn Engine> {
+        self.engines.iter().map(|e| e.as_ref())
+    }
+
+    /// The roster index the policy routes an `n`-row batch to.
+    pub fn route(&self, n: usize) -> usize {
+        if self.engines.len() == 1 {
+            return 0;
+        }
+        self.policy
+            .route(n, self.artifact_batch, &self.kinds)
+            .min(self.engines.len() - 1)
+    }
+
+    /// Route and execute one batch; returns the chosen roster index and the
+    /// logits (real rows only — the PJRT wrapper trims its padding).
+    pub fn dispatch(&self, x: &Tensor, scratch: &mut Scratch) -> Result<(usize, Tensor)> {
+        let i = self.route(x.shape()[0]);
+        let logits = self.engines[i].forward_with(x, scratch)?;
+        Ok((i, logits))
     }
 }
 
-/// Run one batch on the PJRT artifact, padding to the compiled batch size.
-/// Only the batch tensor slot of the prebuilt args is replaced.
-fn run_pjrt(pj: &mut PjrtParts, batch: &[Pending<Job>], cfg: &ServerConfig) -> Result<Vec<usize>> {
-    let (h, w, c) = cfg.model.input_hwc();
-    let x = batch_tensor(batch, cfg.batch, h, w, c)?;
-    pj.args[0] = ArgValue::F32(x);
-    let out = pj.exe.run(&pj.args)?;
-    Ok(ops::argmax_rows(&out[0]))
-}
-
 /// Copy a dynamic batch into one [rows, H, W, C] tensor; `rows` beyond the
-/// batch stay zero (the PJRT path pads to the compiled batch size, the host
-/// path passes `rows == batch.len()` for no padding).
+/// batch stay zero.  The worker passes `rows == batch.len()` — any padding
+/// to a compiled artifact size happens inside the PJRT engine wrapper.
 fn batch_tensor(
     batch: &[Pending<Job>],
     rows: usize,
@@ -260,23 +325,26 @@ impl Server {
         let queue = Arc::new(BatchQueue::<Job>::new(cfg.batch, cfg.max_delay));
         let metrics = Arc::new(Metrics::new());
 
-        // --- inference worker (owns the non-Send Backend) -------------------
+        // --- inference worker (owns the non-Send engine roster) -------------
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let wq = queue.clone();
         let wm = metrics.clone();
         let wcfg = cfg.clone();
         let worker = thread::Builder::new().name("infer-worker".into()).spawn(move || {
-            let mut backend = match build_backend(&artifacts, &wcfg) {
-                Ok(b) => {
+            let roster = match WeightStore::load(&artifacts, wcfg.model)
+                .and_then(|store| Roster::build(Some(&artifacts), store, &wcfg))
+            {
+                Ok(r) => {
                     let _ = ready_tx.send(Ok(()));
-                    b
+                    r
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
                     return;
                 }
             };
-            wm.inc(&format!("engine_{}", backend.name()), 1);
+            wm.inc(&format!("engine_{}", roster.name()), 1);
+            wm.inc(&format!("policy_{}", roster.policy_name()), 1);
             let (h, w, c) = wcfg.model.input_hwc();
             // one arena per worker: the host engines stop allocating per
             // request once the buffers are warm
@@ -288,43 +356,13 @@ impl Server {
             while let Some(batch) = wq.pop_batch() {
                 let t0 = Instant::now();
                 let n = batch.len();
-                let preds: Result<Vec<usize>> = match &mut backend {
-                    Backend::Pjrt(pj) => run_pjrt(pj, &batch, &wcfg),
-                    Backend::Host(store) => batch_tensor(&batch, n, h, w, c)
-                        .and_then(|x| host::forward_with(store, &x, &mut scratch))
-                        .map(|logits| ops::argmax_rows(&logits)),
-                    Backend::Quant(engine) => batch_tensor(&batch, n, h, w, c)
-                        .and_then(|x| engine.forward_with(&x, &mut scratch))
-                        .map(|logits| ops::argmax_rows(&logits)),
-                    Backend::Csd(engine) => batch_tensor(&batch, n, h, w, c)
-                        .and_then(|x| engine.forward_with(&x, &mut scratch))
-                        .map(|logits| ops::argmax_rows(&logits)),
-                    Backend::Hybrid { pjrt, store, quant } => {
-                        // batch-aware re-dispatch: artifact-sized batches on
-                        // PJRT (or the threaded f32 engine), small ones on
-                        // the code-domain engine
-                        match (batch_prefers_artifact(n, wcfg.batch), pjrt, store) {
-                            (true, Some(pj), _) => {
-                                wm.inc("dispatch_pjrt", 1);
-                                run_pjrt(pj, &batch, &wcfg)
-                            }
-                            (true, None, Some(store)) => {
-                                wm.inc("dispatch_host_f32", 1);
-                                batch_tensor(&batch, n, h, w, c)
-                                    .and_then(|x| host::forward_with(store, &x, &mut scratch))
-                                    .map(|logits| ops::argmax_rows(&logits))
-                            }
-                            _ => {
-                                wm.inc("dispatch_host_quant", 1);
-                                batch_tensor(&batch, n, h, w, c)
-                                    .and_then(|x| quant.forward_with(&x, &mut scratch))
-                                    .map(|logits| ops::argmax_rows(&logits))
-                            }
-                        }
-                    }
-                };
-                match preds {
-                    Ok(preds) => {
+                let routed: Result<(usize, Vec<usize>)> = batch_tensor(&batch, n, h, w, c)
+                    .and_then(|x| roster.dispatch(&x, &mut scratch))
+                    .map(|(i, logits)| (i, ops::argmax_rows(&logits)));
+                match routed {
+                    Ok((idx, preds)) => {
+                        let engine = roster.engine(idx);
+                        wm.inc(roster.dispatch_counter(idx), 1);
                         let infer_s = t0.elapsed().as_secs_f64();
                         wm.observe_s("infer_batch", infer_s);
                         wm.inc("batches", 1);
@@ -351,21 +389,16 @@ impl Server {
                                 pk.act_bytes as f64,
                             );
                         }
-                        // energy ledger (CSD engine): lifetime totals as
-                        // absolute gauges.  `energy.forwards` divides to
-                        // per-batch numbers (one forward per popped batch);
-                        // per-request uses counter.requests — docs/METRICS.md
-                        if let Backend::Csd(engine) = &backend {
-                            let led = engine.ledger();
-                            wm.set_gauge("energy.partial_products", led.partial_products as f64);
-                            wm.set_gauge("energy.gated_rows", led.gated_rows as f64);
-                            wm.set_gauge("energy.skipped_macs", led.skipped_macs as f64);
-                            wm.set_gauge("energy.fp_muls", led.fp_muls as f64);
-                            wm.set_gauge("energy.fp_adds", led.fp_adds as f64);
-                            wm.set_gauge("energy.compute_pj", led.compute_pj());
-                            wm.set_gauge("energy.total_pj", led.total_pj());
-                            wm.set_gauge("energy.forwards", engine.forwards() as f64);
-                        }
+                        // uniform per-engine telemetry: the engine that
+                        // served this batch exports the `engine.<name>.*`
+                        // gauge family from its EngineReport — forwards,
+                        // zero-skip, mean partial products, the lifetime
+                        // energy ledger (divide by `.forwards` for
+                        // per-batch numbers, by counter.requests for
+                        // per-request — docs/METRICS.md).  Only the routed
+                        // engine's report can have changed, so the other
+                        // roster members' gauges stay at their last export.
+                        engine.report().export(|k, v| wm.set_gauge(k, v));
                         for (i, job) in batch.into_iter().enumerate() {
                             let e2e = job.payload.enqueued.elapsed();
                             wm.observe_s("request_e2e", e2e.as_secs_f64());
@@ -572,24 +605,132 @@ mod tests {
     }
 
     #[test]
-    fn crossover_prefers_artifact_only_when_batch_fills_it() {
-        // singletons and near-empty batches stay on the host-quant engine
-        assert!(!batch_prefers_artifact(1, 32));
-        assert!(!batch_prefers_artifact(7, 32));
-        // a quarter-full (or better) batch amortizes the padding
-        assert!(batch_prefers_artifact(8, 32));
-        assert!(batch_prefers_artifact(32, 32));
-        // degenerate compiled sizes never panic
-        assert!(batch_prefers_artifact(1, 1));
-        assert!(batch_prefers_artifact(0, 0));
-    }
-
-    #[test]
     fn default_config_sane() {
         let c = ServerConfig::default();
         assert_eq!(c.batch, 32);
         assert!(c.bind.ends_with(":0"));
         assert_eq!(c.engine, EngineSelect::Auto);
+        assert_eq!(c.policy, PolicySelect::BatchFill);
+    }
+
+    use crate::data::synth_store;
+    use crate::util::rng::Rng;
+
+    fn synth_batch(r: &mut Rng, n: usize) -> Tensor {
+        let xdata: Vec<f32> = (0..n * 28 * 28).map(|_| r.f32()).collect();
+        Tensor::new(vec![n, 28, 28, 1], xdata).unwrap()
+    }
+
+    /// The acceptance route map: `--engine auto --policy energy` must reach
+    /// every engine class — PJRT-or-f32 for artifact-filling batches, the
+    /// code-domain engine for mid-size, and the CSD engine (previously
+    /// unreachable from Auto) for the smallest — with every route's
+    /// `engine.*` gauges populated from the same EngineReport schema.
+    #[test]
+    fn energy_policy_routes_each_engine_and_exports_uniform_gauges() {
+        let store = synth_store(71, ModelKind::Lenet);
+        let cfg = ServerConfig { policy: PolicySelect::EnergyBudget, ..Default::default() };
+        // no artifacts on disk -> the artifact-class slot is the f32 engine
+        let roster = Roster::build(None, store, &cfg).unwrap();
+        assert_eq!(roster.len(), 3, "auto roster: qgemm2 + csd + f32");
+        assert_eq!(roster.name(), "auto-hybrid");
+        assert_eq!(roster.policy_name(), "energy-budget");
+
+        let m = Metrics::new();
+        let mut scratch = Scratch::new();
+        let mut r = Rng::new(72);
+        let mut routed = std::collections::BTreeSet::new();
+        for n in [1usize, 5, 32] {
+            let x = synth_batch(&mut r, n);
+            let (i, logits) = roster.dispatch(&x, &mut scratch).unwrap();
+            assert_eq!(logits.shape(), &[n, 10], "n={n}");
+            routed.insert(roster.engine(i).kind());
+        }
+        assert_eq!(
+            routed.into_iter().collect::<Vec<_>>(),
+            vec![EngineKind::F32, EngineKind::Quantized, EngineKind::Csd],
+            "energy policy must route a batch to each engine class"
+        );
+
+        // every engine's report lands in the uniform engine.* gauge family
+        for e in roster.engines() {
+            e.report().export(|k, v| m.set_gauge(k, v));
+        }
+        for name in ["host-f32", "host-qgemm", "host-csd"] {
+            assert_eq!(
+                m.gauge(&format!("engine.{name}.forwards")),
+                Some(1.0),
+                "{name}: exactly one batch routed"
+            );
+            for suffix in [
+                "skipped_fraction",
+                "mean_pp",
+                "energy.partial_products",
+                "energy.fp_muls",
+                "energy.compute_pj",
+                "energy.total_pj",
+                "pool.spawns",
+            ] {
+                assert!(
+                    m.gauge(&format!("engine.{name}.{suffix}")).is_some(),
+                    "engine.{name}.{suffix} missing from the uniform schema"
+                );
+            }
+        }
+        // and the fields mean what they say: the CSD route spent partial
+        // products, the f32 route spent fp32 MACs, the code-domain route
+        // skipped zero codes and charged only its fp32 head
+        assert!(m.gauge("engine.host-csd.energy.partial_products").unwrap() > 0.0);
+        assert!(m.gauge("engine.host-csd.mean_pp").unwrap() > 0.0);
+        assert!(m.gauge("engine.host-f32.energy.fp_muls").unwrap() > 0.0);
+        assert!(m.gauge("engine.host-qgemm.skipped_fraction").unwrap() > 0.0);
+        let head = m.gauge("engine.host-qgemm.energy.fp_muls").unwrap();
+        let full = m.gauge("engine.host-f32.energy.fp_muls").unwrap();
+        assert!(head > 0.0 && head < full, "code-domain charges only the fp32 head");
+    }
+
+    #[test]
+    fn pinned_roster_routes_everything_to_its_engine() {
+        let store = synth_store(73, ModelKind::Lenet);
+        let cfg = ServerConfig {
+            engine: EngineSelect::HostCsd(CsdQuality::new(3)),
+            policy: PolicySelect::EnergyBudget,
+            ..Default::default()
+        };
+        let roster = Roster::build(None, store, &cfg).unwrap();
+        assert_eq!(roster.len(), 1);
+        assert_eq!(roster.name(), "host-csd");
+        for n in [1usize, 8, 32] {
+            assert_eq!(roster.route(n), 0);
+        }
+        let mut r = Rng::new(74);
+        let mut scratch = Scratch::new();
+        let (i, logits) = roster.dispatch(&synth_batch(&mut r, 2), &mut scratch).unwrap();
+        assert_eq!((i, logits.shape()), (0, &[2usize, 10][..]));
+        let rep = roster.engine(0).report();
+        assert_eq!(rep.kind, EngineKind::Csd);
+        assert!(rep.mean_pp <= 3.0 + 1e-12, "digit dial bounds the report's pp");
+    }
+
+    #[test]
+    fn policies_differ_on_partial_batches() {
+        // the three policies are genuinely different routers on the same
+        // roster: a half-full batch goes artifact-class under batch-fill,
+        // stays host under latency-floor, and the smallest batch only
+        // reaches CSD under the energy policy
+        let mk = |policy| {
+            let cfg = ServerConfig { policy, ..Default::default() };
+            Roster::build(None, synth_store(75, ModelKind::Lenet), &cfg).unwrap()
+        };
+        let fill = mk(PolicySelect::BatchFill);
+        let floor = mk(PolicySelect::LatencyFloor);
+        let energy = mk(PolicySelect::EnergyBudget);
+        let kind_at = |r: &Roster, n: usize| r.engine(r.route(n)).kind();
+        assert_eq!(kind_at(&fill, 16), EngineKind::F32);
+        assert_eq!(kind_at(&floor, 16), EngineKind::Quantized);
+        assert_eq!(kind_at(&fill, 1), EngineKind::Quantized);
+        assert_eq!(kind_at(&energy, 1), EngineKind::Csd);
+        assert_eq!(kind_at(&floor, 32), EngineKind::F32);
     }
 
     #[test]

@@ -64,7 +64,20 @@ impl CsdQuality {
     pub const DEFAULT_FMT: Format = Format::Q16_14;
 
     /// Dial at `max_digits` partial products in the default weight format.
+    ///
+    /// # Panics
+    /// `max_digits` must be at least 1: a zero budget truncates *every*
+    /// weight to zero and the engine would serve an all-zero model.  The
+    /// kernels handle `max_digits = 0` harmlessly (everything gated), so a
+    /// caller that really wants that degenerate dial can construct
+    /// `CsdQuality { max_digits: 0, .. }` directly — but it is never a
+    /// quality level worth selecting, so the constructor rejects it.
     pub fn new(max_digits: usize) -> CsdQuality {
+        assert!(
+            max_digits > 0,
+            "CsdQuality::new(0) would gate every weight (an all-zero model); \
+             use max_digits >= 1, or build the struct directly for the degenerate dial"
+        );
         CsdQuality { fmt: Self::DEFAULT_FMT, max_digits }
     }
 
@@ -117,12 +130,25 @@ impl DeviceProfile {
         ]
     }
 
-    /// Pick the *highest* quality whose encoded model fits the budget.
-    /// `bits_at(phi, group)` estimates the encoded model size.
+    /// Joint quality selection over both stacked dials (the full §V story):
+    /// the *highest* QSQ quality whose encoded model fits the memory budget
+    /// (`bits_at(phi, group)` estimates the encoded size), paired with the
+    /// largest CSD digit budget the device's MACs-derived energy budget
+    /// affords for a model costing `macs` MACs per inference
+    /// ([`Self::select_csd_quality`]).  The search is separable because the
+    /// dials price different resources — (phi, N) buys bytes on the device,
+    /// `max_digits` buys partial-product rows per request — and the paper's
+    /// methodology stacks them: the codes that fit cross the channel, then
+    /// the edge multiplier truncates their CSD form on top.  A device
+    /// profile alone therefore determines the full stacked-dial
+    /// configuration.
+    ///
+    /// Returns `None` only when no (phi, N) fits the memory budget.
     pub fn select_quality(
         &self,
         bits_at: impl Fn(u32, usize) -> u64,
-    ) -> Option<QualityConfig> {
+        macs: u64,
+    ) -> Option<(QualityConfig, CsdQuality)> {
         // quality-ordered candidates: high phi + small N (best accuracy)
         // down to low phi + large N (smallest model)
         let candidates = [
@@ -137,10 +163,34 @@ impl DeviceProfile {
         ];
         for (phi, group) in candidates {
             if bits_at(phi, group) / 8 <= self.model_budget_bytes {
-                return Some(QualityConfig { phi, group });
+                return Some((QualityConfig { phi, group }, self.select_csd_quality(macs)));
             }
         }
         None
+    }
+
+    /// Size the CSD digit dial from the device's energy/compute budget: the
+    /// device sustains [`DeviceProfile::macs_per_s`] multiplier rows per
+    /// second, and serving wants each inference inside
+    /// [`ENERGY_LATENCY_TARGET_S`] — so it can afford
+    /// `macs_per_s * target` shift-and-add rows per request.  Each MAC
+    /// spends at most `max_digits` rows, so the largest affordable budget is
+    /// `floor(affordable_rows / macs)`, clamped to at least 1 (the memory
+    /// dial already decided the model fits; a device below the target just
+    /// serves slower at the cheapest dial) and promoted to
+    /// [`CsdQuality::exact`] once it reaches the NAF row bound (more digits
+    /// than the multiplier provisions buy nothing).
+    pub fn select_csd_quality(&self, macs: u64) -> CsdQuality {
+        if macs == 0 {
+            return CsdQuality::exact();
+        }
+        let affordable_rows = self.macs_per_s * ENERGY_LATENCY_TARGET_S;
+        let digits = ((affordable_rows / macs as f64).floor() as usize).max(1);
+        if digits >= CsdQuality::exact().max_rows() {
+            CsdQuality::exact()
+        } else {
+            CsdQuality::new(digits)
+        }
     }
 
     /// Crude per-inference latency model: MACs / throughput.
@@ -148,6 +198,14 @@ impl DeviceProfile {
         macs as f64 / self.macs_per_s
     }
 }
+
+/// Serving-rate target the energy dial is sized against: every profile
+/// should sustain ~100 inferences/s (10 ms each) at its selected digit
+/// budget.  This is what makes the budget *MACs-derived*: a device that can
+/// afford more multiplier rows per 10 ms window gets more CSD digits per
+/// weight, an MCU that cannot even afford one full row per MAC serves at
+/// the 1-digit floor.
+pub const ENERGY_LATENCY_TARGET_S: f64 = 0.01;
 
 #[cfg(test)]
 mod tests {
@@ -161,24 +219,61 @@ mod tests {
         }
     }
 
+    /// LeNet-scale per-inference MACs (the roster tests' energy workload).
+    const LENET_MACS: u64 = 281_640;
+
     #[test]
     fn bigger_device_gets_better_quality() {
         let roster = DeviceProfile::roster();
         let weights = 10_000_000u64; // 10M-param model
-        let q: Vec<Option<QualityConfig>> =
-            roster.iter().map(|d| d.select_quality(bits(weights))).collect();
+        let q: Vec<Option<(QualityConfig, CsdQuality)>> =
+            roster.iter().map(|d| d.select_quality(bits(weights), LENET_MACS)).collect();
         // the MCU can't fit a 10M-weight model at any quality
         assert!(q[0].is_none());
         // larger devices pick phi=4
-        assert_eq!(q[2].unwrap().phi, 4);
-        assert_eq!(q[3].unwrap().phi, 4);
+        assert_eq!(q[2].unwrap().0.phi, 4);
+        assert_eq!(q[3].unwrap().0.phi, 4);
     }
 
     #[test]
     fn mcu_fits_small_model() {
         let mcu = &DeviceProfile::roster()[0];
-        let q = mcu.select_quality(bits(45_000)).unwrap(); // LeNet-scale
+        let (q, csd) = mcu.select_quality(bits(45_000), LENET_MACS).unwrap(); // LeNet-scale
         assert!(q.phi >= 1);
+        assert!(csd.max_digits >= 1);
+    }
+
+    #[test]
+    fn joint_selection_scales_the_digit_budget_with_compute() {
+        // the acceptance invariant: the MCU-class profile provably selects
+        // a smaller digit budget than the server-class profile, with the
+        // middle of the roster in between
+        let roster = DeviceProfile::roster();
+        let csd: Vec<CsdQuality> =
+            roster.iter().map(|d| d.select_csd_quality(LENET_MACS)).collect();
+        let mcu = csd[0].max_digits;
+        let server = csd[3].max_digits;
+        assert!(mcu < server, "mcu budget {mcu} must be below server budget {server}");
+        // the MCU cannot afford even one row per MAC in the 10 ms window,
+        // so it serves at the 1-digit floor; the server is unconstrained
+        assert_eq!(mcu, 1);
+        assert_eq!(csd[3], CsdQuality::exact());
+        // budgets are monotone in device compute
+        for w in csd.windows(2) {
+            assert!(w[0].max_digits <= w[1].max_digits, "{csd:?} not monotone");
+        }
+        // the small-FPGA tier lands strictly between floor and exact:
+        // 2e8 MACs/s * 10 ms = 2e6 rows / 281640 MACs = 7 digits
+        assert_eq!(csd[1].max_digits, 7);
+        // joint selection returns the same digit dial next to the QSQ dial
+        let (_, joint) = roster[1].select_quality(bits(45_000), LENET_MACS).unwrap();
+        assert_eq!(joint, csd[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "all-zero model")]
+    fn csd_quality_rejects_zero_digit_budget() {
+        let _ = CsdQuality::new(0);
     }
 
     #[test]
@@ -204,9 +299,12 @@ mod tests {
 
     #[test]
     fn quality_order_prefers_accuracy() {
-        // an unconstrained device must get the best quality (phi=4, N=8)
+        // an unconstrained device must get the best quality on both dials
         let d = &DeviceProfile::roster()[3];
-        let q = d.select_quality(|_, _| 0).unwrap();
+        let (q, csd) = d.select_quality(|_, _| 0, 1_000_000).unwrap();
         assert_eq!(q, QualityConfig { phi: 4, group: 8 });
+        assert_eq!(csd, CsdQuality::exact());
+        // a zero-MAC model is degenerate: exact CSD, not a panic
+        assert_eq!(d.select_csd_quality(0), CsdQuality::exact());
     }
 }

@@ -32,7 +32,7 @@
 //! the property tests assert exactly that.  Truncation error is monotone in
 //! the digit budget (fewer digits, more error, less energy); the per-tensor
 //! digit statistics ([`CsdStats`]) feed the [`Ledger`] the serving engine
-//! accumulates per forward and exports as `energy.*` metrics gauges.
+//! accumulates per forward and exports via the `engine.host-csd.*` gauges.
 //!
 //! ```
 //! use qsq_edge::device::CsdQuality;
@@ -246,7 +246,7 @@ impl PackedCsdTensor {
     /// product per kept digit per row, one gated row per provisioned-but-idle
     /// multiplier row ([`CsdQuality::max_rows`]), one skipped MAC per fully
     /// gated weight.  The serving engine folds this into its per-request
-    /// [`Ledger`] and exports it as `energy.*` gauges.
+    /// [`Ledger`] and exports it via the `engine.host-csd.*` gauges.
     pub fn ledger_for_rows(&self, rows: usize) -> Ledger {
         let r = rows as u64;
         let provisioned = self.stats.weights * self.quality.max_rows() as u64;

@@ -25,7 +25,7 @@
 //!   is pure shift-and-add with at most `max_digits` partial products per
 //!   weight.  Exact CSD is bitwise-reconcilable with the per-scalar
 //!   [`crate::hw::multiplier`] datapath simulator; the digit statistics feed
-//!   the serving engine's per-request energy ledger (`energy.*` gauges).
+//!   the serving engine's per-request energy ledger (`engine.host-csd.*` gauges).
 //! * [`mod@qconv`] — the fused conv pipeline: im2col patches are staged
 //!   chunk-by-chunk into a reusable [`Scratch`] arena and multiplied
 //!   band-by-band on the plane-packed qgemm, the CSD shift-and-add kernel,

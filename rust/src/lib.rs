@@ -31,13 +31,19 @@
 //!   `qgemm` (v1/v2), the truncated-CSD shift-and-add
 //!   [`kernels::csd`], the fused conv arena, and the persistent
 //!   worker pool all of them band on.
-//! * [`runtime`] — the engines: PJRT executables when `artifacts/` is
-//!   present, the pure-rust fused f32 path, the code-domain
+//! * [`runtime`] — the engines, all behind the unified
+//!   [`runtime::engine::Engine`] trait: PJRT executables when `artifacts/`
+//!   is present ([`runtime::engine::PjrtEngine`]), the pure-rust fused f32
+//!   [`runtime::host::F32Engine`], the code-domain
 //!   [`runtime::host::QuantizedEngine`], and the CSD
-//!   [`runtime::host::CsdEngine`] with its per-request energy ledger.
-//! * [`coordinator`] — serving: dynamic batcher, batch-aware engine
-//!   dispatch, deploy pipeline ([`coordinator::deploy`]), metrics snapshot
-//!   (schema in `docs/METRICS.md`).
+//!   [`runtime::host::CsdEngine`] — each reporting the same
+//!   [`runtime::engine::EngineReport`] telemetry schema, with the pluggable
+//!   [`runtime::engine::DispatchPolicy`] batch routers alongside.
+//! * [`coordinator`] — serving: dynamic batcher, the policy-driven engine
+//!   roster ([`coordinator::server::Roster`]), deploy pipeline
+//!   ([`coordinator::deploy`], incl. the device-profile-driven
+//!   [`coordinator::deploy::deploy_for_device`]), metrics snapshot (schema
+//!   in `docs/METRICS.md`).
 //! * [`hw`] — bit-accurate micro-architecture simulators, the oracles the
 //!   kernels are property-tested against.
 //! * [`repro`] — one module per table/figure of the paper.
@@ -53,6 +59,10 @@
 //!    partial products the Quality Scalable Multiplier spends per weight at
 //!    inference; decides what the edge multiplier computes
 //!    ([`kernels::csd`], §V.B).
+//!
+//! [`device::DeviceProfile::select_quality`] picks both jointly: the memory
+//! budget sizes the QSQ dial, a MACs-derived energy budget sizes the digit
+//! dial — one device profile determines the full stacked configuration.
 //!
 //! See the repository `README.md` for the build/test/bench workflow,
 //! `docs/METRICS.md` for the serving metrics schema, and [`repro`] for the

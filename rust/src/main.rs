@@ -79,7 +79,8 @@ subcommands:
   finetune      on-device FC fine-tuning of the quantized LeNet
   serve         TCP inference server (JSON lines; dynamic batching;
                 --engine auto|pjrt|host|host-quant|host-csd
-                [--digits K: CSD partial products/weight; omit for exact])
+                [--digits K: CSD partial products/weight, K >= 1; omit for exact]
+                [--policy batch-fill|latency|energy: Auto batch dispatch])
   client        synthetic load against a server (--port, --n)
   repro         regenerate a paper table/figure   (--exp table3|fig7|...|all)
 common flags: --artifacts DIR  --model lenet|convnet  --fast";
@@ -189,20 +190,31 @@ fn cmd_deploy_sim(args: &Args) -> Result<()> {
             )
         })?;
 
-    let meta = store.meta.clone();
-    let quality = device
-        .select_quality(|phi, group| {
-            qsq_edge::model::bits::model_bits(&meta, phi, group).encoded_bits
-        })
-        .with_context(|| format!("{dev_name} cannot fit {}", kind.name()))?;
-
     let mut link_cfg = device.link;
     if let Some(ber) = args.get("ber") {
         link_cfg.ber = ber.parse().context("--ber")?;
     }
-    println!("device {dev_name}: selected quality phi={}, N={}", quality.phi, quality.group);
-    let (edge, rep) =
-        deploy::deploy(&store, quality, mode(args)?, link_cfg, args.get_u64("seed", 7))?;
+    // joint two-dial deployment: the profile's memory budget sizes (phi, N),
+    // its MACs-derived energy budget sizes the CSD digit dial, and the model
+    // ships over the (possibly --ber-overridden) link — one pipeline pass
+    let (edge, engine, rep) = deploy::deploy_for_device_with_link(
+        &store,
+        device,
+        mode(args)?,
+        link_cfg,
+        args.get_u64("seed", 7),
+    )?;
+    let quality = rep.quality;
+    let csd = rep.csd.expect("csd engine deployment records the digit dial");
+    let digits = if csd.max_digits == usize::MAX {
+        "exact".to_string()
+    } else {
+        csd.max_digits.to_string()
+    };
+    println!(
+        "device {dev_name}: selected quality phi={}, N={} + csd digits={digits}",
+        quality.phi, quality.group
+    );
     println!(
         "container      : {} bytes ({} frames, {} retransmissions)",
         rep.container_bytes, rep.transfer.frames, rep.transfer.retransmissions
@@ -227,6 +239,19 @@ fn cmd_deploy_sim(args: &Args) -> Result<()> {
         "zeros fraction : {:.2}%  mean rel err: {:.4}",
         100.0 * rep.zeros_fraction,
         rep.mean_rel_error
+    );
+
+    // the stacked second dial: the CSD engine the deployment built on the
+    // post-channel edge store at the selected digit budget
+    let (h, w, c) = kind.input_hwc();
+    engine.forward(&qsq_edge::tensor::Tensor::zeros(vec![1, h, w, c]))?;
+    let led = engine.ledger();
+    println!(
+        "csd engine     : {:.2} pp/MAC at digits={digits}, {:.1}% MACs gated, \
+         {:.1} nJ compute/request",
+        engine.mean_pp(),
+        100.0 * engine.skipped_fraction(),
+        led.compute_pj() / 1e3
     );
 
     // score the decoded edge model
@@ -273,21 +298,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
             group: args.get_usize("n", 16),
         }),
         // --digits N = CSD partial products per weight; omitted = exact.
-        // N=0 is honored as a real (fully gated) budget, matching the kernel.
         "host-csd" => server::EngineSelect::HostCsd(match args.get("digits") {
             None => CsdQuality::exact(),
-            Some(d) => CsdQuality::new(
-                d.parse::<usize>().with_context(|| format!("--digits {d:?} is not a number"))?,
-            ),
+            Some(d) => {
+                let digits: usize = d
+                    .parse()
+                    .with_context(|| format!("--digits {d:?} is not a number"))?;
+                if digits == 0 {
+                    // a zero budget truncates every weight to zero — the
+                    // server would happily serve an all-zero model
+                    bail!(
+                        "--digits 0 would gate every weight and serve an all-zero \
+                         model; use --digits 1 for the cheapest dial, or omit \
+                         --digits for exact CSD"
+                    );
+                }
+                CsdQuality::new(digits)
+            }
         }),
         other => bail!("unknown engine {other:?} (auto|pjrt|host|host-quant|host-csd)"),
     };
+    let policy = qsq_edge::runtime::engine::PolicySelect::from_name(
+        &args.get_or("policy", "batch-fill"),
+    )?;
     let cfg = server::ServerConfig {
         model: model_kind(args)?,
         batch: args.get_usize("batch", 32),
         max_delay: std::time::Duration::from_millis(args.get_u64("delay-ms", 5)),
         bind: format!("127.0.0.1:{}", args.get_usize("port", 9000)),
         engine,
+        policy,
     };
     let srv = server::Server::start(dir, cfg)?;
     println!("serving on 127.0.0.1:{} (ctrl-c to stop)", srv.port);

@@ -1,0 +1,644 @@
+//! The unified serving-engine abstraction: one [`Engine`] trait over every
+//! inference path, one [`EngineReport`] telemetry schema, and the pluggable
+//! [`DispatchPolicy`] the server routes batches with.
+//!
+//! Before this module each engine was a bespoke special case: the server's
+//! backend was a five-variant enum with per-variant match arms, the
+//! batch-aware `Auto` hybrid could not reach the CSD engine at all, and
+//! every engine exported its own ad-hoc metrics (`skipped_fraction` here, an
+//! energy ledger there).  Now every engine — the fused f32 host path
+//! ([`F32Engine`]), the code-domain [`QuantizedEngine`], the truncated-CSD
+//! [`CsdEngine`], and the PJRT artifact wrapper ([`PjrtEngine`]) — is a
+//! first-class `Engine`:
+//!
+//! * [`Engine::forward_with`] — one batch through the engine, reusing the
+//!   worker's [`Scratch`] arena (engines that stage nothing, like PJRT,
+//!   simply ignore it);
+//! * [`Engine::kind`] / [`Engine::name`] — the stable identity dispatch
+//!   policies and metrics key off;
+//! * [`Engine::report`] — the uniform [`EngineReport`]: forwards served,
+//!   realized zero-skip, mean partial products per MAC, the accumulated
+//!   energy [`Ledger`], and the worker-pool counters.  The server exports it
+//!   as the `engine.<name>.*` gauge family (see `docs/METRICS.md`), the same
+//!   schema for every engine.
+//!
+//! A [`DispatchPolicy`] then routes each popped batch over a roster of boxed
+//! engines (`coordinator::server::Roster`): [`BatchFillPolicy`] is the
+//! classic quarter-full artifact crossover, [`LatencyFloorPolicy`] keeps
+//! every partial batch off the padded artifact, and [`EnergyBudgetPolicy`]
+//! sends the smallest batches to the shift-and-add CSD engine — the
+//! minimum-energy path that was previously unreachable from `Auto`.
+//! Policies are selected with `--policy` on the CLI ([`PolicySelect`]).
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::hw::energy::Ledger;
+use crate::kernels::{PoolStats, Scratch};
+use crate::model::meta::{ModelKind, ModelMeta};
+use crate::model::store::WeightStore;
+use crate::runtime::client::{ArgValue, Executable, Runtime};
+use crate::runtime::host::{CsdEngine, F32Engine, QuantizedEngine};
+use crate::tensor::Tensor;
+
+/// Which compute path an engine runs — the identity dispatch policies route
+/// on and metrics are keyed by.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum EngineKind {
+    /// Fused f32 host path on the blocked/microtiled GEMM.
+    F32,
+    /// Code-domain engine: plane-packed codes on qgemm v2.
+    Quantized,
+    /// Truncated-CSD shift-and-add engine (`kernels::csd`).
+    Csd,
+    /// Compiled PJRT artifact, padded to its compiled batch size.
+    Pjrt,
+}
+
+impl EngineKind {
+    /// Stable engine name — the `<name>` of the `engine.<name>.*` gauge
+    /// family and the `dispatch_*` counters.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::F32 => "host-f32",
+            EngineKind::Quantized => "host-qgemm",
+            EngineKind::Csd => "host-csd",
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// The uniform telemetry snapshot every [`Engine`] produces — one schema for
+/// what used to be per-engine ad-hoc counters.  Fields an engine has nothing
+/// to say about stay at their zero values (e.g. `mean_pp` for the f32 path),
+/// so consumers can always read the full family.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    pub kind: EngineKind,
+    /// [`EngineKind::name`] of `kind` (denormalized for exporters).
+    pub name: &'static str,
+    /// Forwards completed over the engine's lifetime (one per batch).
+    pub forwards: u64,
+    /// Fraction of MACs the packed form skips outright (zero codes for the
+    /// code-domain engine, fully gated weights for CSD; 0 for f32/PJRT).
+    pub skipped_fraction: f64,
+    /// Mean kept partial products per MAC (CSD digit dial; 0 elsewhere).
+    pub mean_pp: f64,
+    /// Accumulated energy over every forward ([`Ledger`]); for PJRT an
+    /// estimate from the model's MACs at the padded batch size.
+    pub ledger: Ledger,
+    /// Worker-pool counters, when the engine dispatches on the shared pool.
+    pub pool: Option<PoolStats>,
+}
+
+impl EngineReport {
+    /// An all-zero report for `kind` — engines fill in what they track.
+    pub fn new(kind: EngineKind) -> EngineReport {
+        EngineReport {
+            kind,
+            name: kind.name(),
+            forwards: 0,
+            skipped_fraction: 0.0,
+            mean_pp: 0.0,
+            ledger: Ledger::new(),
+            pool: None,
+        }
+    }
+
+    /// Emit the report as the uniform `engine.<name>.*` gauge family (the
+    /// schema `docs/METRICS.md` documents).  `set` receives (key, value)
+    /// pairs — the server hands it `Metrics::set_gauge`.
+    pub fn export(&self, mut set: impl FnMut(&str, f64)) {
+        let p = format!("engine.{}", self.name);
+        set(&format!("{p}.forwards"), self.forwards as f64);
+        set(&format!("{p}.skipped_fraction"), self.skipped_fraction);
+        set(&format!("{p}.mean_pp"), self.mean_pp);
+        set(&format!("{p}.energy.partial_products"), self.ledger.partial_products as f64);
+        set(&format!("{p}.energy.gated_rows"), self.ledger.gated_rows as f64);
+        set(&format!("{p}.energy.skipped_macs"), self.ledger.skipped_macs as f64);
+        set(&format!("{p}.energy.fp_muls"), self.ledger.fp_muls as f64);
+        set(&format!("{p}.energy.fp_adds"), self.ledger.fp_adds as f64);
+        set(&format!("{p}.energy.compute_pj"), self.ledger.compute_pj());
+        set(&format!("{p}.energy.total_pj"), self.ledger.total_pj());
+        if let Some(ps) = self.pool {
+            set(&format!("{p}.pool.spawns"), ps.spawns as f64);
+            set(&format!("{p}.pool.wakeups"), ps.wakeups as f64);
+            set(&format!("{p}.pool.jobs"), ps.jobs as f64);
+        }
+    }
+}
+
+/// One inference engine on the serving path.  Implemented by the fused f32
+/// host path, the code-domain and CSD engines, and the PJRT artifact
+/// wrapper; the server holds them as `Box<dyn Engine>` in a roster and
+/// routes batches with a [`DispatchPolicy`].
+pub trait Engine {
+    /// Forward one batch, reusing the worker's scratch arena (engines with
+    /// no host staging ignore it).  Implementations count the forward in
+    /// their lifetime telemetry on success.
+    fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor>;
+
+    /// The compute path this engine runs.
+    fn kind(&self) -> EngineKind;
+
+    /// Stable name ([`EngineKind::name`] unless an impl overrides it).
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// The model graph this engine serves.
+    fn model(&self) -> ModelKind;
+
+    /// Uniform telemetry snapshot (see [`EngineReport`]).
+    fn report(&self) -> EngineReport;
+}
+
+impl Engine for F32Engine {
+    fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        F32Engine::forward_with(self, x, scratch)
+    }
+
+    fn kind(&self) -> EngineKind {
+        EngineKind::F32
+    }
+
+    fn model(&self) -> ModelKind {
+        F32Engine::model(self)
+    }
+
+    fn report(&self) -> EngineReport {
+        EngineReport {
+            forwards: self.forwards(),
+            ledger: self.ledger(),
+            pool: Some(self.pool().stats()),
+            ..EngineReport::new(EngineKind::F32)
+        }
+    }
+}
+
+impl Engine for QuantizedEngine {
+    fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        QuantizedEngine::forward_with(self, x, scratch)
+    }
+
+    fn kind(&self) -> EngineKind {
+        EngineKind::Quantized
+    }
+
+    fn model(&self) -> ModelKind {
+        QuantizedEngine::model(self)
+    }
+
+    fn report(&self) -> EngineReport {
+        EngineReport {
+            forwards: self.forwards(),
+            skipped_fraction: self.skipped_fraction(),
+            ledger: self.ledger(),
+            pool: Some(self.pool().stats()),
+            ..EngineReport::new(EngineKind::Quantized)
+        }
+    }
+}
+
+impl Engine for CsdEngine {
+    fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        CsdEngine::forward_with(self, x, scratch)
+    }
+
+    fn kind(&self) -> EngineKind {
+        EngineKind::Csd
+    }
+
+    fn model(&self) -> ModelKind {
+        CsdEngine::model(self)
+    }
+
+    fn report(&self) -> EngineReport {
+        EngineReport {
+            forwards: self.forwards(),
+            skipped_fraction: self.skipped_fraction(),
+            mean_pp: self.mean_pp(),
+            ledger: self.ledger(),
+            pool: Some(self.pool().stats()),
+            ..EngineReport::new(EngineKind::Csd)
+        }
+    }
+}
+
+/// The PJRT artifact as an [`Engine`]: the compiled executable plus a
+/// prebuilt argument vector (slot 0 is replaced with each batch tensor,
+/// slots 1.. hold the weights, wrapped once at construction so dispatching a
+/// batch never re-copies the model).  Input batches are padded to the
+/// compiled batch size and only the real rows of the logits are returned, so
+/// the roster can treat this engine exactly like the host paths.
+///
+/// Not `Send`/`Sync` (the PJRT `Runtime` is thread-owned) — like every other
+/// engine it is constructed on, and owned by, the inference worker thread.
+pub struct PjrtEngine {
+    /// Keeps the PJRT client alive for the executable's lifetime.
+    _rt: Runtime,
+    exe: Arc<Executable>,
+    /// Prebuilt args; interior mutability because only slot 0 changes per
+    /// forward and the trait takes `&self` (single-threaded owner).
+    args: RefCell<Vec<ArgValue>>,
+    /// The compiled (padded) execution batch size.
+    batch: usize,
+    model: ModelKind,
+    /// MACs of one forward at the compiled batch (the padded rows pay too —
+    /// that is exactly the padding waste the dispatch policies trade off).
+    macs_per_exec: u64,
+    forwards: AtomicU64,
+}
+
+impl PjrtEngine {
+    /// Load and compile the artifact for `(model, batch)` from `artifacts`,
+    /// wrapping `store`'s weights into the prebuilt argument vector.
+    pub fn load(
+        artifacts: &Path,
+        model: ModelKind,
+        batch: usize,
+        store: &WeightStore,
+    ) -> Result<PjrtEngine> {
+        let mut rt = Runtime::new(artifacts)?;
+        let (art, compiled) = crate::coordinator::router::artifact_for(model, batch)?;
+        let exe = rt.load(&art)?;
+        let mut args = vec![ArgValue::F32(Tensor::zeros(vec![0]))];
+        args.extend(store.ordered().into_iter().map(|t| ArgValue::F32(t.clone())));
+        Ok(PjrtEngine {
+            _rt: rt,
+            exe,
+            args: RefCell::new(args),
+            batch: compiled,
+            model,
+            macs_per_exec: ModelMeta::of(model).macs_per_image() * compiled as u64,
+            forwards: AtomicU64::new(0),
+        })
+    }
+
+    /// The compiled (padded) batch size.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Forwards completed since construction.
+    pub fn forwards(&self) -> u64 {
+        self.forwards.load(Ordering::Relaxed)
+    }
+
+    /// Forward one batch: pad to the compiled size, execute, return the real
+    /// rows of the logits.
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let s = x.shape();
+        let (h, w, c) = self.model.input_hwc();
+        if s.len() != 4 || s[1] != h || s[2] != w || s[3] != c {
+            bail!("{:?} artifact expects [B,{h},{w},{c}], got {s:?}", self.model);
+        }
+        let b = s[0];
+        if b > self.batch {
+            bail!("batch {b} exceeds the compiled artifact batch {}", self.batch);
+        }
+        let pix = h * w * c;
+        let mut xdata = vec![0.0f32; self.batch * pix];
+        xdata[..b * pix].copy_from_slice(x.data());
+        let padded = Tensor::new(vec![self.batch, h, w, c], xdata)?;
+        let out = {
+            let mut args = self.args.borrow_mut();
+            args[0] = ArgValue::F32(padded);
+            self.exe.run(&args)?
+        };
+        let logits = &out[0];
+        let ls = logits.shape();
+        if ls.len() != 2 || ls[0] < b {
+            bail!("artifact returned logits {ls:?} for a {b}-row batch");
+        }
+        let n = ls[1];
+        let trimmed = Tensor::new(vec![b, n], logits.data()[..b * n].to_vec())?;
+        self.forwards.fetch_add(1, Ordering::Relaxed);
+        Ok(trimmed)
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn forward_with(&self, x: &Tensor, _scratch: &mut Scratch) -> Result<Tensor> {
+        self.forward(x)
+    }
+
+    fn kind(&self) -> EngineKind {
+        EngineKind::Pjrt
+    }
+
+    fn model(&self) -> ModelKind {
+        self.model
+    }
+
+    fn report(&self) -> EngineReport {
+        let fwd = self.forwards();
+        // the compiled kernels' cost model: every forward executes the full
+        // padded batch worth of f32 MACs, real rows or not
+        let macs = fwd * self.macs_per_exec;
+        EngineReport {
+            forwards: fwd,
+            ledger: Ledger { fp_muls: macs, fp_adds: macs, ..Ledger::default() },
+            ..EngineReport::new(EngineKind::Pjrt)
+        }
+    }
+}
+
+/// The batch-size crossover of artifact dispatch: running a padded artifact
+/// costs the full compiled batch regardless of occupancy, and the compiled
+/// kernels are roughly a few times faster per row than the host engines —
+/// so the artifact wins once a batch fills at least a quarter of the
+/// compiled size, and below that the padding waste hands the batch to a
+/// low-latency host engine.
+pub fn batch_prefers_artifact(n: usize, artifact_batch: usize) -> bool {
+    n.saturating_mul(4) >= artifact_batch
+}
+
+/// A pluggable batch-dispatch policy: given the popped batch size, the
+/// compiled artifact batch, and the kinds on the roster, pick the engine
+/// index to run.  Policies must tolerate any roster composition (a kind they
+/// would prefer may be absent — e.g. PJRT without artifacts), which is what
+/// the preference-order helper below encodes.
+pub trait DispatchPolicy {
+    /// Stable policy name (`--policy` value, `counter.policy_<name>`).
+    fn name(&self) -> &'static str;
+
+    /// Engine index in `kinds` for an `n`-row batch.
+    fn route(&self, n: usize, artifact_batch: usize, kinds: &[EngineKind]) -> usize;
+}
+
+/// First kind of `prefs` present in `kinds` (index into `kinds`); falls back
+/// to engine 0 so a route always lands on a live engine.
+fn first_of(kinds: &[EngineKind], prefs: &[EngineKind]) -> usize {
+    prefs
+        .iter()
+        .find_map(|p| kinds.iter().position(|k| k == p))
+        .unwrap_or(0)
+}
+
+/// Engines that amortize an artifact-filling batch best, in order.
+const ARTIFACT_PREFS: [EngineKind; 4] =
+    [EngineKind::Pjrt, EngineKind::F32, EngineKind::Quantized, EngineKind::Csd];
+/// Low-latency small-batch engines, in order.  Every exact path ranks
+/// ahead of the truncated CSD engine: if the code-domain engine is absent
+/// (a degraded roster), small batches must fall back to an *exact* engine
+/// — padded PJRT included — matching the old hybrid's degrade behavior.
+/// Only [`ENERGY_PREFS`] opts into CSD's approximation deliberately.
+const LATENCY_PREFS: [EngineKind; 4] =
+    [EngineKind::Quantized, EngineKind::F32, EngineKind::Pjrt, EngineKind::Csd];
+/// Minimum-energy engines (shift-and-add first), in order.
+const ENERGY_PREFS: [EngineKind; 4] =
+    [EngineKind::Csd, EngineKind::Quantized, EngineKind::F32, EngineKind::Pjrt];
+
+/// The classic quarter-full crossover ([`batch_prefers_artifact`]):
+/// artifact-filling batches go to the compiled artifact (threaded f32 host
+/// when PJRT is absent), everything smaller to the code-domain engine.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchFillPolicy;
+
+impl DispatchPolicy for BatchFillPolicy {
+    fn name(&self) -> &'static str {
+        "batch-fill"
+    }
+
+    fn route(&self, n: usize, artifact_batch: usize, kinds: &[EngineKind]) -> usize {
+        if batch_prefers_artifact(n, artifact_batch) {
+            first_of(kinds, &ARTIFACT_PREFS)
+        } else {
+            first_of(kinds, &LATENCY_PREFS)
+        }
+    }
+}
+
+/// Latency-floor dispatch: a partial batch on the padded artifact pays the
+/// full compiled-batch latency, so *only* batches that actually fill the
+/// artifact run on it — every partial batch stays on the low-latency host
+/// engines.  Trades peak throughput for a flat tail latency.  A corollary
+/// the contract implies: if the dynamic-batching cap is below the compiled
+/// artifact batch, no batch can ever fill the artifact, so the artifact
+/// engine deliberately sees no traffic (the server warns at startup).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyFloorPolicy;
+
+impl DispatchPolicy for LatencyFloorPolicy {
+    fn name(&self) -> &'static str {
+        "latency-floor"
+    }
+
+    fn route(&self, n: usize, artifact_batch: usize, kinds: &[EngineKind]) -> usize {
+        if n >= artifact_batch {
+            first_of(kinds, &ARTIFACT_PREFS)
+        } else {
+            first_of(kinds, &LATENCY_PREFS)
+        }
+    }
+}
+
+/// Energy-budget dispatch: artifact-filling batches amortize the compiled
+/// kernels, mid-size batches run code-domain (adds only, zero-skip), and the
+/// smallest batches — below an eighth of the compiled size, where per-request
+/// energy dominates — run on the truncated-CSD shift-and-add engine, the
+/// cheapest path per MAC ([`crate::hw::energy::pj::QSM_PARTIAL_PRODUCT`] vs
+/// a full f32 multiply).  This is the route that makes the CSD engine
+/// reachable from `Auto`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBudgetPolicy;
+
+impl DispatchPolicy for EnergyBudgetPolicy {
+    fn name(&self) -> &'static str {
+        "energy-budget"
+    }
+
+    fn route(&self, n: usize, artifact_batch: usize, kinds: &[EngineKind]) -> usize {
+        if batch_prefers_artifact(n, artifact_batch) {
+            first_of(kinds, &ARTIFACT_PREFS)
+        } else if n.saturating_mul(8) < artifact_batch {
+            first_of(kinds, &ENERGY_PREFS)
+        } else {
+            first_of(kinds, &LATENCY_PREFS)
+        }
+    }
+}
+
+/// CLI-level policy selection (`--policy batch-fill|latency|energy`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PolicySelect {
+    /// [`BatchFillPolicy`] — the quarter-full artifact crossover (default).
+    #[default]
+    BatchFill,
+    /// [`LatencyFloorPolicy`] — partial batches never pay artifact padding.
+    LatencyFloor,
+    /// [`EnergyBudgetPolicy`] — smallest batches take the CSD energy path.
+    EnergyBudget,
+}
+
+impl PolicySelect {
+    /// Parse a `--policy` value (short and long spellings accepted).
+    pub fn from_name(s: &str) -> Result<PolicySelect> {
+        Ok(match s {
+            "batch-fill" | "batchfill" => PolicySelect::BatchFill,
+            "latency" | "latency-floor" => PolicySelect::LatencyFloor,
+            "energy" | "energy-budget" => PolicySelect::EnergyBudget,
+            other => bail!("unknown policy {other:?} (batch-fill|latency|energy)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicySelect::BatchFill => "batch-fill",
+            PolicySelect::LatencyFloor => "latency-floor",
+            PolicySelect::EnergyBudget => "energy-budget",
+        }
+    }
+
+    /// Instantiate the policy.
+    pub fn build(self) -> Box<dyn DispatchPolicy> {
+        match self {
+            PolicySelect::BatchFill => Box::new(BatchFillPolicy),
+            PolicySelect::LatencyFloor => Box::new(LatencyFloorPolicy),
+            PolicySelect::EnergyBudget => Box::new(EnergyBudgetPolicy),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::EngineKind::{Csd, Pjrt, Quantized, F32};
+
+    #[test]
+    fn kind_names_are_stable() {
+        // metrics keys and dispatch counters are derived from these — a
+        // rename is a dashboard-breaking change
+        assert_eq!(F32.name(), "host-f32");
+        assert_eq!(Quantized.name(), "host-qgemm");
+        assert_eq!(Csd.name(), "host-csd");
+        assert_eq!(Pjrt.name(), "pjrt");
+    }
+
+    #[test]
+    fn crossover_prefers_artifact_only_when_batch_fills_it() {
+        assert!(!batch_prefers_artifact(1, 32));
+        assert!(!batch_prefers_artifact(7, 32));
+        assert!(batch_prefers_artifact(8, 32));
+        assert!(batch_prefers_artifact(32, 32));
+        // degenerate compiled sizes never panic
+        assert!(batch_prefers_artifact(1, 1));
+        assert!(batch_prefers_artifact(0, 0));
+    }
+
+    #[test]
+    fn batch_fill_routes_like_the_old_hybrid() {
+        let kinds = [Pjrt, Quantized, Csd];
+        let p = BatchFillPolicy;
+        assert_eq!(p.route(32, 32, &kinds), 0, "full batch -> artifact");
+        assert_eq!(p.route(8, 32, &kinds), 0, "quarter-full -> artifact");
+        assert_eq!(p.route(1, 32, &kinds), 1, "singleton -> code-domain");
+        // PJRT absent: the f32 engine takes the artifact-class batches
+        let kinds = [F32, Quantized, Csd];
+        assert_eq!(p.route(32, 32, &kinds), 0);
+        assert_eq!(p.route(3, 32, &kinds), 1);
+    }
+
+    #[test]
+    fn latency_floor_keeps_partial_batches_off_the_artifact() {
+        let kinds = [Pjrt, Quantized, Csd];
+        let p = LatencyFloorPolicy;
+        assert_eq!(p.route(32, 32, &kinds), 0, "only a full batch pays padding");
+        // batch-fill would send these to the artifact; latency-floor won't
+        assert_eq!(p.route(31, 32, &kinds), 1);
+        assert_eq!(p.route(8, 32, &kinds), 1);
+        assert_eq!(p.route(1, 32, &kinds), 1);
+    }
+
+    #[test]
+    fn energy_budget_reaches_every_engine_class() {
+        let kinds = [Pjrt, Quantized, Csd];
+        let p = EnergyBudgetPolicy;
+        assert_eq!(p.route(32, 32, &kinds), 0, "artifact-filling -> compiled");
+        assert_eq!(p.route(5, 32, &kinds), 1, "mid-size -> code-domain");
+        assert_eq!(p.route(1, 32, &kinds), 2, "smallest -> CSD shift-and-add");
+        assert_eq!(p.route(3, 32, &kinds), 2, "below an eighth -> CSD");
+        assert_eq!(p.route(4, 32, &kinds), 1, "an eighth exactly -> code-domain");
+    }
+
+    #[test]
+    fn policies_survive_any_roster_composition() {
+        // a roster missing the preferred kind falls through the preference
+        // order; a single-engine roster always routes to it
+        for policy in [
+            PolicySelect::BatchFill.build(),
+            PolicySelect::LatencyFloor.build(),
+            PolicySelect::EnergyBudget.build(),
+        ] {
+            for n in [0usize, 1, 4, 8, 32, 100] {
+                assert_eq!(policy.route(n, 32, &[Csd]), 0);
+                let i = policy.route(n, 32, &[Quantized, Csd]);
+                assert!(i < 2, "{} n={n}: index {i}", policy.name());
+            }
+        }
+        // artifact-class traffic without pjrt or f32 still routes somewhere
+        assert_eq!(BatchFillPolicy.route(32, 32, &[Quantized, Csd]), 0);
+    }
+
+    #[test]
+    fn degraded_rosters_fall_back_to_exact_engines() {
+        // when the code-domain engine failed to build, small batches must
+        // not silently land on the truncated CSD engine: batch-fill and
+        // latency-floor degrade to an exact path (f32, or padded PJRT),
+        // exactly like the old hybrid; only the energy policy picks CSD
+        for p in [&BatchFillPolicy as &dyn DispatchPolicy, &LatencyFloorPolicy] {
+            assert_eq!(p.route(1, 32, &[Csd, F32]), 1, "{}: f32 is exact", p.name());
+            assert_eq!(p.route(1, 32, &[Csd, Pjrt]), 1, "{}: pjrt is exact", p.name());
+        }
+        assert_eq!(EnergyBudgetPolicy.route(1, 32, &[Csd, Pjrt]), 0, "energy opts into CSD");
+    }
+
+    #[test]
+    fn policy_select_parses_and_builds() {
+        assert_eq!(PolicySelect::from_name("batch-fill").unwrap(), PolicySelect::BatchFill);
+        assert_eq!(PolicySelect::from_name("latency").unwrap(), PolicySelect::LatencyFloor);
+        assert_eq!(PolicySelect::from_name("energy").unwrap(), PolicySelect::EnergyBudget);
+        assert_eq!(PolicySelect::from_name("energy-budget").unwrap(), PolicySelect::EnergyBudget);
+        assert!(PolicySelect::from_name("round-robin").is_err());
+        assert_eq!(PolicySelect::default(), PolicySelect::BatchFill);
+        assert_eq!(PolicySelect::EnergyBudget.build().name(), "energy-budget");
+    }
+
+    #[test]
+    fn report_exports_the_uniform_gauge_family() {
+        let mut rep = EngineReport::new(EngineKind::Csd);
+        rep.forwards = 3;
+        rep.mean_pp = 2.5;
+        rep.ledger.partial_products = 120;
+        rep.pool = Some(PoolStats { spawns: 4, wakeups: 9, jobs: 12 });
+        let mut keys = Vec::new();
+        rep.export(|k, v| keys.push((k.to_string(), v)));
+        let get = |name: &str| {
+            keys.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+        };
+        assert_eq!(get("engine.host-csd.forwards"), Some(3.0));
+        assert_eq!(get("engine.host-csd.mean_pp"), Some(2.5));
+        assert_eq!(get("engine.host-csd.energy.partial_products"), Some(120.0));
+        assert_eq!(get("engine.host-csd.pool.spawns"), Some(4.0));
+        // every engine exports the same core family, populated or not
+        let mut f32_keys = Vec::new();
+        EngineReport::new(EngineKind::F32).export(|k, _| f32_keys.push(k.to_string()));
+        for suffix in [
+            "forwards",
+            "skipped_fraction",
+            "mean_pp",
+            "energy.partial_products",
+            "energy.total_pj",
+        ] {
+            assert!(
+                f32_keys.iter().any(|k| k == &format!("engine.host-f32.{suffix}")),
+                "missing engine.host-f32.{suffix}"
+            );
+        }
+    }
+}

@@ -10,22 +10,26 @@
 //! ([`crate::kernels::Pool`]), so a warm engine spawns zero threads per
 //! request.
 //!
-//! * the f32 path ([`forward`] / [`forward_with`]) — every layer on the
-//!   blocked/microtiled GEMM ([`crate::kernels::blocked`]).  It is the
-//!   oracle the PJRT path is validated against and the fallback when
-//!   `artifacts/` is absent.  The original per-op tensor functions
-//!   ([`lenet_fwd`], [`convnet_fwd`]) survive as the readable references the
-//!   fused pipeline is tested against.
+//! * the f32 path ([`forward`] / [`forward_with`], engine form
+//!   [`F32Engine`]) — every layer on the blocked/microtiled GEMM
+//!   ([`crate::kernels::blocked`]).  It is the oracle the PJRT path is
+//!   validated against and the fallback when `artifacts/` is absent.  The
+//!   original per-op tensor functions ([`lenet_fwd`], [`convnet_fwd`])
+//!   survive as the readable references the fused pipeline is tested
+//!   against.
 //! * [`QuantizedEngine`] — the code-domain path: quantized layers execute on
 //!   the plane-packed [`crate::kernels::qgemm2`] straight from packed codes
 //!   (zero-skip, shift/add, hoisted alpha, row-parallel), only the fp32 head
 //!   and biases touch the f32 GEMM.  This is what the edge side serves with.
 //! * [`CsdEngine`] — the CSD shift-and-add path: quantized-layer weights are
 //!   truncated-CSD packed ([`crate::kernels::csd`]) at a
-//!   [`CsdQuality`] digit budget — the paper's §V.B quality dial — and every
-//!   forward accumulates a per-request [`Ledger`] (partial products summed,
-//!   multiplier rows gated, MACs skipped, fp32-head work), which the server
-//!   exports as `energy.*` metrics gauges.
+//!   [`CsdQuality`] digit budget — the paper's §V.B quality dial.
+//!
+//! All three implement the unified [`crate::runtime::engine::Engine`]
+//! trait next to the PJRT wrapper: each accumulates a lifetime energy
+//! [`Ledger`] and a forwards counter and reports one
+//! [`crate::runtime::engine::EngineReport`], which the server exports as
+//! the uniform `engine.<name>.*` gauge family.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -94,6 +98,85 @@ pub fn convnet_fwd(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
     }
     let h = h.reshape(vec![b, 256])?;
     ops::add_bias(&ops::matmul(&h, store.get("fcw")?)?, store.get("fcb")?)
+}
+
+/// The fused f32 host path as a first-class engine: every layer on the
+/// blocked/microtiled GEMM, one energy [`Ledger`] accumulated across
+/// forwards (pure fp32 MACs — the baseline the quantized and CSD dials are
+/// priced against), one forwards counter.  The free function
+/// [`crate::runtime::host::forward_with`] remains the engine-less form for
+/// callers that own a bare [`WeightStore`]; the server serves through this
+/// wrapper so the f32 path reports the same `EngineReport` schema as every
+/// other engine ([`crate::runtime::engine::Engine`]).
+#[derive(Debug)]
+pub struct F32Engine {
+    store: WeightStore,
+    /// Accumulated fp32 GEMM cost over every forward of this engine.
+    ledger: Mutex<Ledger>,
+    /// Forwards completed (one per batch).
+    forwards: AtomicU64,
+    /// The persistent worker pool every row-band kernel dispatches on.
+    pool: &'static Pool,
+}
+
+impl F32Engine {
+    /// Wrap a weight store (typically the full-precision serving store).
+    pub fn new(store: WeightStore) -> F32Engine {
+        F32Engine {
+            store,
+            ledger: Mutex::new(Ledger::new()),
+            forwards: AtomicU64::new(0),
+            pool: Pool::global(),
+        }
+    }
+
+    pub fn model(&self) -> ModelKind {
+        self.store.kind
+    }
+
+    /// The wrapped store (read-only; the engine owns the serving copy).
+    pub fn store(&self) -> &WeightStore {
+        &self.store
+    }
+
+    /// The worker pool this engine dispatches on.
+    pub fn pool(&self) -> &'static Pool {
+        self.pool
+    }
+
+    /// Snapshot of the accumulated energy ledger.
+    pub fn ledger(&self) -> Ledger {
+        self.ledger.lock().unwrap().clone()
+    }
+
+    /// Forwards completed since construction.
+    pub fn forwards(&self) -> u64 {
+        self.forwards.load(Ordering::Relaxed)
+    }
+
+    /// Forward one batch (one-shot scratch).
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.forward_with(x, &mut Scratch::new())
+    }
+
+    /// Forward one batch, reusing `scratch` — the serving form.  Bitwise
+    /// identical to the free [`crate::runtime::host::forward_with`] over
+    /// the same store; additionally charges the request's f32 GEMM cost to
+    /// the engine ledger.
+    pub fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        let out = FusedFwd {
+            store: &self.store,
+            packed: None,
+            csd: None,
+            energy: Some(&self.ledger),
+            pool: self.pool,
+        }
+        .run(x, scratch);
+        if out.is_ok() {
+            self.forwards.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
 }
 
 /// Quantize every quantized tensor of a store at (phi, N) — the one
@@ -359,10 +442,19 @@ impl FusedFwd<'_> {
 /// [`WeightStore`] and runs on the blocked f32 GEMM.  The f32 forms of
 /// packed tensors are dropped from the wrapped store, so quantized-layer
 /// weights exist only as codes.
-#[derive(Clone, Debug)]
+///
+/// Like every serving engine it accumulates a lifetime energy [`Ledger`]
+/// (here: the fp32 head/bias MACs — the code-domain layers spend adds the
+/// ledger prices at zero) and a forwards counter, reported through the
+/// uniform [`crate::runtime::engine::EngineReport`] schema.
+#[derive(Debug)]
 pub struct QuantizedEngine {
     store: WeightStore,
     packed: BTreeMap<String, PackedQTensorV2>,
+    /// Accumulated energy over every forward (fp32 head/bias layers).
+    ledger: Mutex<Ledger>,
+    /// Forwards completed (one per batch).
+    forwards: AtomicU64,
     /// The persistent worker pool every row-band kernel of this engine
     /// dispatches on — shared process-wide, so engines running concurrently
     /// split one warm worker set instead of spawning per matmul.
@@ -399,10 +491,16 @@ impl QuantizedEngine {
         for name in packed.keys() {
             store.remove(name);
         }
-        Ok(QuantizedEngine { store, packed, pool: Pool::global() })
+        Ok(QuantizedEngine {
+            store,
+            packed,
+            ledger: Mutex::new(Ledger::new()),
+            forwards: AtomicU64::new(0),
+            pool: Pool::global(),
+        })
     }
 
-    pub fn kind(&self) -> ModelKind {
+    pub fn model(&self) -> ModelKind {
         self.store.kind
     }
 
@@ -410,6 +508,17 @@ impl QuantizedEngine {
     /// spawn/wakeup counters; spawns stay flat across warm forwards).
     pub fn pool(&self) -> &'static Pool {
         self.pool
+    }
+
+    /// Snapshot of the accumulated energy ledger (fp32 head/bias MACs; the
+    /// code-domain layers are adds-only and priced at zero here).
+    pub fn ledger(&self) -> Ledger {
+        self.ledger.lock().unwrap().clone()
+    }
+
+    /// Forwards completed since construction.
+    pub fn forwards(&self) -> u64 {
+        self.forwards.load(Ordering::Relaxed)
     }
 
     /// Fraction of packed codes the qgemm never touches (realized zero-skip).
@@ -435,14 +544,18 @@ impl QuantizedEngine {
     /// dispatches to the plane-packed code-domain kernels or the f32 GEMM,
     /// and a warm arena allocates nothing per request.
     pub fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
-        FusedFwd {
+        let out = FusedFwd {
             store: &self.store,
             packed: Some(&self.packed),
             csd: None,
-            energy: None,
+            energy: Some(&self.ledger),
             pool: self.pool,
         }
-        .run(x, scratch)
+        .run(x, scratch);
+        if out.is_ok() {
+            self.forwards.fetch_add(1, Ordering::Relaxed);
+        }
+        out
     }
 }
 
@@ -458,7 +571,8 @@ impl QuantizedEngine {
 /// Every forward folds its shift-and-add cost into a process-lifetime
 /// [`Ledger`] (partial products summed, multiplier rows gated, MACs fully
 /// skipped, fp32-head MACs) — [`CsdEngine::ledger`] snapshots it, and the
-/// server exports it as `energy.*` metrics gauges (see `docs/METRICS.md`).
+/// server exports via the `engine.host-csd.*` gauge family (see
+/// `docs/METRICS.md`).
 #[derive(Debug)]
 pub struct CsdEngine {
     store: WeightStore,
@@ -501,7 +615,7 @@ impl CsdEngine {
         })
     }
 
-    pub fn kind(&self) -> ModelKind {
+    pub fn model(&self) -> ModelKind {
         self.store.kind
     }
 
@@ -750,7 +864,7 @@ mod tests {
         // same predictions
         assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&want));
         assert!(engine.skipped_fraction() > 0.0);
-        assert_eq!(engine.kind(), crate::model::meta::ModelKind::Lenet);
+        assert_eq!(engine.model(), crate::model::meta::ModelKind::Lenet);
     }
 
     #[test]
@@ -782,7 +896,7 @@ mod tests {
         let diff = got.max_abs_diff(&want);
         assert!(diff < 1e-2, "csd engine vs decoded-store forward: {diff}");
         assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&want));
-        assert_eq!(engine.kind(), crate::model::meta::ModelKind::Lenet);
+        assert_eq!(engine.model(), crate::model::meta::ModelKind::Lenet);
         assert!(engine.mean_pp() > 0.0);
 
         // the ledger accumulates linearly with forwards: a second identical

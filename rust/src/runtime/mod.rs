@@ -1,7 +1,11 @@
 //! Runtime layer: the PJRT client that loads + executes `artifacts/*.hlo.txt`
-//! ([`client`]) and the pure-rust fallback/oracle engine ([`host`]).
+//! ([`client`]), the pure-rust engines ([`host`]), and the unified
+//! [`engine::Engine`] trait + batch-dispatch policies the server routes a
+//! roster of boxed engines with ([`engine`]).
 
 pub mod client;
+pub mod engine;
 pub mod host;
 
 pub use client::{ArgValue, Executable, Runtime};
+pub use engine::{DispatchPolicy, Engine, EngineKind, EngineReport, PjrtEngine, PolicySelect};

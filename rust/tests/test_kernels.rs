@@ -19,7 +19,13 @@
 //! (g) the truncated-CSD shift-and-add kernel (`kernels::csd`): bitwise
 //!     equal to matmul over its own decode on ternary data at every digit
 //!     budget, pooled runs bitwise equal to serial at band boundaries, and
-//!     the `CsdEngine` charges its energy ledger linearly per forward.
+//!     the `CsdEngine` charges its energy ledger linearly per forward;
+//! (h) the engine conformance suite: every `Engine` impl runs the same
+//!     synthetic store through one parameterized harness — bitwise against
+//!     the naive per-op oracle where the path is exact (f32), within
+//!     tolerance over its own decode elsewhere — with the warm-forward
+//!     scratch alloc-freeze and the uniform `EngineReport` schema asserted
+//!     through the trait, not per-engine APIs.
 
 use qsq_edge::data::synth_store;
 use qsq_edge::device::{CsdQuality, QualityConfig};
@@ -371,6 +377,119 @@ fn pool_threads_env_of_one_degrades_to_serial() {
     assert_eq!(pooled, serial);
     let s = pool.stats();
     assert_eq!((s.spawns, s.wakeups), (0, 0), "serial pool must never spawn or wake");
+}
+
+// --- (h) engine conformance suite -------------------------------------------
+
+#[test]
+fn engine_conformance_every_impl_on_the_same_store() {
+    use qsq_edge::model::store::WeightStore;
+    use qsq_edge::runtime::engine::{Engine, EngineKind};
+    use qsq_edge::runtime::host::{self, CsdEngine, F32Engine};
+
+    let store = synth_store(61, ModelKind::Lenet);
+    let quality = QualityConfig { phi: 4, group: 16 };
+    let csd_q = CsdQuality::new(3);
+
+    // each engine's oracle store: the f32 weights its compressed form
+    // decodes to (the f32 engine decodes to the store itself)
+    let decode_qsq = |store: &WeightStore| {
+        let mut decoded = store.clone();
+        for tm in store.meta.quantized_tensors() {
+            let g = Grouping::nearest_divisor(&tm.shape, quality.group).unwrap();
+            let qt = quantize(store.get(tm.name).unwrap().data(), &tm.shape, g, quality.phi,
+                AssignMode::SigmaSearch)
+            .unwrap();
+            decoded.set(tm.name, Tensor::new(tm.shape.clone(), qt.decode()).unwrap()).unwrap();
+        }
+        decoded
+    };
+    let decode_csd = |store: &WeightStore| {
+        let mut decoded = store.clone();
+        for tm in store.meta.quantized_tensors() {
+            let p = PackedCsdTensor::pack(store.get(tm.name).unwrap().data(), &tm.shape, csd_q)
+                .unwrap();
+            decoded.set(tm.name, Tensor::new(tm.shape.clone(), p.decode()).unwrap()).unwrap();
+        }
+        decoded
+    };
+
+    // (engine, oracle store, tolerance): 0.0 = bitwise.  The PJRT wrapper
+    // shares the trait but needs compiled artifacts; its parity is covered
+    // by tests/test_server.rs when artifacts exist.
+    type Case = (Box<dyn Engine>, WeightStore, f32);
+    let cases: Vec<Case> = vec![
+        (Box::new(F32Engine::new(store.clone())), store.clone(), 0.0),
+        (
+            Box::new(
+                QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch)
+                    .unwrap(),
+            ),
+            decode_qsq(&store),
+            1e-2,
+        ),
+        (Box::new(CsdEngine::from_store(&store, csd_q).unwrap()), decode_csd(&store), 1e-2),
+    ];
+
+    let mut r = Rng::new(62);
+    let xdata: Vec<f32> = gen_weights(&mut r, 3 * 28 * 28, 1.0);
+    let x = Tensor::new(vec![3, 28, 28, 1], xdata).unwrap();
+    let mut seen = Vec::new();
+    for (engine, oracle_store, tol) in cases {
+        let name = engine.name();
+        seen.push(engine.kind());
+        assert_eq!(engine.model(), ModelKind::Lenet, "{name}");
+
+        // the naive per-op oracle over the engine's decoded weights
+        let want = host::lenet_fwd(&oracle_store, &x).unwrap();
+        let mut scratch = Scratch::new();
+        let got = engine.forward_with(&x, &mut scratch).unwrap();
+        assert_eq!(got.shape(), want.shape(), "{name}");
+        if tol == 0.0 {
+            assert_eq!(got.data(), want.data(), "{name}: exact path must be bitwise");
+        } else {
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < tol, "{name}: {diff} vs oracle (tol {tol})");
+            assert_eq!(
+                ops::argmax_rows(&got),
+                ops::argmax_rows(&want),
+                "{name}: predictions diverged"
+            );
+        }
+
+        // uniform warm-forward invariant, asserted through the trait: a
+        // warm arena allocates nothing and the output never changes
+        let cold_allocs = scratch.stats.allocs;
+        for _ in 0..3 {
+            let again = engine.forward_with(&x, &mut scratch).unwrap();
+            assert_eq!(again.data(), got.data(), "{name}: warm forward changed the result");
+        }
+        assert_eq!(
+            scratch.stats.allocs, cold_allocs,
+            "{name}: warm forwards must not allocate ({:?})",
+            scratch.stats
+        );
+
+        // uniform report schema: forwards counted, energy charged, pool
+        // visible — the same fields for every engine
+        let rep = engine.report();
+        assert_eq!(rep.kind, engine.kind(), "{name}");
+        assert_eq!(rep.name, name);
+        assert_eq!(rep.forwards, 4, "{name}: 1 cold + 3 warm forwards");
+        assert!(rep.ledger.total_pj() > 0.0, "{name}: every engine charges energy");
+        assert!(rep.pool.is_some(), "{name}: host engines report their pool");
+        match rep.kind {
+            EngineKind::F32 => assert_eq!(rep.mean_pp, 0.0),
+            EngineKind::Quantized => {
+                assert!(rep.skipped_fraction > 0.0, "qgemm2 must realize zero-skip")
+            }
+            EngineKind::Csd => {
+                assert!(rep.mean_pp > 0.0 && rep.mean_pp <= 3.0 + 1e-12, "pp within the dial")
+            }
+            EngineKind::Pjrt => unreachable!(),
+        }
+    }
+    assert_eq!(seen, [EngineKind::F32, EngineKind::Quantized, EngineKind::Csd]);
 }
 
 #[test]

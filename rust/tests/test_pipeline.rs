@@ -131,6 +131,82 @@ fn noisy_channel_is_transparent_end_to_end() {
 }
 
 #[test]
+fn stacked_dials_from_device_profile_end_to_end() {
+    // the full stacked-dial story with no artifacts required: a device
+    // profile alone picks both quality dials (QSQ from the memory budget,
+    // CSD digits from the MACs-derived energy budget), the model is
+    // encoded, crosses the profile's channel, and the decoded edge store is
+    // served through the truncated-CSD engine — whose logits must track the
+    // f32 forward over its own decode, and whose EngineReport carries the
+    // energy the dial promised.
+    use qsq_edge::data::synth_store;
+    use qsq_edge::device::DeviceProfile;
+    use qsq_edge::kernels::PackedCsdTensor;
+    use qsq_edge::runtime::engine::{Engine, EngineKind};
+    use qsq_edge::runtime::host;
+    use qsq_edge::tensor::{ops, Tensor};
+    use qsq_edge::util::rng::Rng;
+
+    let store = synth_store(81, ModelKind::Lenet);
+    let roster = DeviceProfile::roster();
+    let device = roster.iter().find(|d| d.name == "edge-fpga-small").unwrap();
+    let (engine, rep) =
+        deploy::deploy_for_device(&store, device, AssignMode::SigmaSearch, 17).unwrap();
+
+    // the report records both dials, consistent with the profile's own
+    // selection and the engine's serving configuration
+    let meta = store.meta.clone();
+    let (want_q, want_csd) = device
+        .select_quality(
+            |phi, g| qsq_edge::model::bits::model_bits(&meta, phi, g).encoded_bits,
+            meta.macs_per_image(),
+        )
+        .unwrap();
+    assert_eq!(rep.quality, want_q);
+    assert_eq!(rep.csd, Some(want_csd));
+    assert_eq!(engine.quality(), want_csd);
+    assert!(want_csd.max_digits >= 1 && want_csd.max_digits != usize::MAX);
+    assert!(rep.memory_savings() > 0.5);
+
+    // oracle: replay the same deterministic deployment to get the edge
+    // store, stack the CSD decode on its quantized tensors, run f32
+    let (edge, _) =
+        deploy::deploy(&store, rep.quality, AssignMode::SigmaSearch, device.link, 17).unwrap();
+    let mut decoded = edge.clone();
+    for tm in store.meta.quantized_tensors() {
+        let p = PackedCsdTensor::pack(edge.get(tm.name).unwrap().data(), &tm.shape, want_csd)
+            .unwrap();
+        decoded
+            .set(tm.name, Tensor::new(tm.shape.clone(), p.decode()).unwrap())
+            .unwrap();
+    }
+    let mut r = Rng::new(82);
+    let xdata: Vec<f32> = (0..2 * 28 * 28).map(|_| r.f32()).collect();
+    let x = Tensor::new(vec![2, 28, 28, 1], xdata).unwrap();
+    let got = engine.forward(&x).unwrap();
+    let want = host::forward(&decoded, &x).unwrap();
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 1e-2, "stacked-dial engine vs its decode: {diff}");
+    assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&want));
+
+    // the uniform EngineReport carries the realized energy of the dial
+    let report = (&engine as &dyn Engine).report();
+    assert_eq!(report.kind, EngineKind::Csd);
+    assert_eq!(report.name, "host-csd");
+    assert_eq!(report.forwards, 1);
+    assert!(report.ledger.partial_products > 0, "csd layers must spend partial products");
+    assert!(report.ledger.fp_muls > 0, "the fp32 head must be charged");
+    assert!(report.ledger.total_pj() > 0.0);
+    assert!(report.mean_pp > 0.0);
+    assert!(
+        report.mean_pp <= want_csd.max_digits as f64 + 1e-12,
+        "realized pp {} exceeds the selected dial {}",
+        report.mean_pp,
+        want_csd.max_digits
+    );
+}
+
+#[test]
 fn manifest_metadata_matches_rust_meta() {
     // guard against python/rust metadata drift
     let dir = need_artifacts!();
