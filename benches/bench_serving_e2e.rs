@@ -1,4 +1,4 @@
-//! End-to-end serving benchmark, two parts:
+//! End-to-end serving benchmark, three parts:
 //!
 //! * **Per-policy dispatch** (no artifacts needed): the `Auto` engine
 //!   roster over a synthetic store, timed per batch size under each
@@ -6,6 +6,13 @@
 //!   the routed engine named in each entry.  Results are appended to
 //!   `BENCH_kernels.json` (created if absent) so the dispatch trajectory
 //!   rides the same cross-PR artifact and CI step summary as the kernels.
+//! * **Overload sweep** (no artifacts needed): a live TCP server over a
+//!   synthetic store with a deliberately tiny admission cap, hammered by an
+//!   increasing closed-loop client count.  Each load level emits its shed
+//!   rate and the tail (p99) latency of the requests that *were* served —
+//!   the two numbers that show bounded admission doing its job: sheds rise
+//!   with offered load while the served tail stays flat instead of growing
+//!   with queue depth.  Also merged into `BENCH_kernels.json`.
 //! * **TCP + dynamic batching + PJRT** (needs `make artifacts`): the
 //!   system-level throughput/latency number the edge story rests on
 //!   (§Perf L3), measured as a client sees it.
@@ -67,7 +74,10 @@ fn merge_into_bench_kernels(entries: &[BenchResult]) {
         .unwrap_or_default();
     // re-runs replace their own entries instead of duplicating them
     results.retain(|v| {
-        v.get("name").as_str().map(|n| !n.starts_with("dispatch ")).unwrap_or(true)
+        v.get("name")
+            .as_str()
+            .map(|n| !n.starts_with("dispatch ") && !n.starts_with("overload "))
+            .unwrap_or(true)
     });
     results.extend(entries.iter().map(|r| r.to_json()));
     let merged = json::obj(vec![
@@ -76,6 +86,101 @@ fn merge_into_bench_kernels(entries: &[BenchResult]) {
     ]);
     std::fs::write(PATH, merged.to_json() + "\n").unwrap();
     println!("merged {} dispatch entries into {PATH}", entries.len());
+}
+
+/// A `BenchResult` carrying a measured scalar rather than a timing
+/// distribution (the cross-PR trajectory file has one schema; scalar
+/// entries put the value in every timing field and name what it is).
+fn scalar_entry(name: &str, iters: usize, value_s: f64, items_per_iter: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: value_s,
+        median_s: value_s,
+        p95_s: value_s,
+        min_s: value_s,
+        items_per_iter,
+    }
+}
+
+/// Push a small-cap server past its admission limit and measure what the
+/// fault-tolerance layer promises: sheds absorb the excess (shed rate) while
+/// the served requests keep a bounded tail (p99), because queue wait is
+/// capped by the queue depth rather than the offered load.
+fn overload_sweep_entries() -> Vec<BenchResult> {
+    println!("\n== overload sweep (synthetic store, queue-cap 4, batch 4) ==");
+    println!(
+        "{:<24} {:>8} {:>8} {:>11} {:>10}",
+        "load", "served", "shed", "shed-rate", "p99 ms"
+    );
+    let mut out = Vec::new();
+    for clients in [2usize, 8, 32] {
+        let cfg = ServerConfig {
+            batch: 4,
+            queue_cap: 4,
+            max_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let srv =
+            Server::start_with_store(synth_store(5, ModelKind::Lenet), cfg).unwrap();
+        let port = srv.port;
+        let per_client = 40usize;
+        let handles: Vec<_> = (0..clients)
+            .map(|t| {
+                std::thread::spawn(move || -> (Vec<f64>, u64) {
+                    let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+                    let mut gen = RequestGen::new(ModelKind::Lenet, 900 + t as u64);
+                    let mut served = Vec::new();
+                    let mut shed = 0u64;
+                    for i in 0..per_client {
+                        let (img, _) = gen.next();
+                        let t0 = Instant::now();
+                        let r = c.infer((t * 100_000 + i) as u64, img.data()).unwrap();
+                        if r.get("pred").as_f64().is_some() {
+                            served.push(t0.elapsed().as_secs_f64());
+                        } else {
+                            shed += 1;
+                        }
+                    }
+                    (served, shed)
+                })
+            })
+            .collect();
+        let mut served = Vec::new();
+        let mut shed = 0u64;
+        for h in handles {
+            let (s, x) = h.join().unwrap();
+            served.extend(s);
+            shed += x;
+        }
+        srv.stop();
+        let total = (clients * per_client) as u64;
+        let shed_rate = shed as f64 / total as f64;
+        let p99_s = if served.is_empty() { 0.0 } else { stats::percentile(&served, 99.0) };
+        println!(
+            "{:<24} {:>8} {:>8} {:>11.3} {:>10.2}",
+            format!("{clients} closed-loop clients"),
+            served.len(),
+            shed,
+            shed_rate,
+            p99_s * 1e3
+        );
+        // shed rate rides items_per_iter (a dimensionless fraction); the
+        // served-tail entry is a real latency in the timing fields
+        out.push(scalar_entry(
+            &format!("overload c={clients:<2} shed-rate"),
+            total as usize,
+            0.0,
+            shed_rate,
+        ));
+        out.push(scalar_entry(
+            &format!("overload c={clients:<2} served-p99"),
+            served.len(),
+            p99_s,
+            0.0,
+        ));
+    }
+    out
 }
 
 fn drive(clients: usize, per_client: usize, delay: Duration) -> Option<(f64, Vec<f64>)> {
@@ -111,7 +216,8 @@ fn drive(clients: usize, per_client: usize, delay: Duration) -> Option<(f64, Vec
 }
 
 fn main() {
-    let entries = policy_dispatch_entries();
+    let mut entries = policy_dispatch_entries();
+    entries.extend(overload_sweep_entries());
     merge_into_bench_kernels(&entries);
 
     println!("\n== bench_serving_e2e (LeNet, batch-32 artifact) ==");

@@ -2,12 +2,36 @@
 //! optional bit-error rate.  Transfers are framed ([`super::frame`]); corrupt
 //! frames are detected by their CRC and retransmitted (stop-and-wait
 //! per-frame ARQ — adequate for the deployment pipeline's model push).
+//!
+//! Beyond the i.i.d. BER, a [`BurstConfig`] arms a two-state Gilbert–Elliott
+//! error model: the wire flips between a *good* state (the base `ber`) and a
+//! *bad* state (`ber_bad`), with per-byte transition probabilities.  Real
+//! edge radios fail exactly this way — fades and interference hit in bursts,
+//! not as independent coin flips — and bursts are the adversarial case for
+//! per-frame ARQ (a burst concentrates its damage on consecutive frames and
+//! their retransmissions, since the channel state persists across retries).
+//! The chaos harness arms it via `PALLAS_FAULTS=link.burst=ENTER:EXIT:BER`
+//! ([`crate::util::faults`]).
 
 use anyhow::Result;
 
 use super::frame::{fragment, reassemble, Frame};
 use crate::hw::energy;
 use crate::util::rng::Rng;
+
+/// Gilbert–Elliott burst-error profile: per-byte transition probabilities
+/// between the good state (the base [`LinkConfig::ber`]) and a bad state
+/// with its own, much higher, bit-error rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BurstConfig {
+    /// Per-byte probability of entering the bad state.
+    pub p_enter: f64,
+    /// Per-byte probability of leaving the bad state (1/p_exit is the mean
+    /// burst length in bytes).
+    pub p_exit: f64,
+    /// Bit-error probability while in the bad state.
+    pub ber_bad: f64,
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct LinkConfig {
@@ -21,6 +45,9 @@ pub struct LinkConfig {
     pub frame_payload: usize,
     /// Give up after this many retransmissions of a single frame.
     pub max_retries: u32,
+    /// Optional Gilbert–Elliott burst profile layered over `ber` (the good
+    /// state keeps the base BER; the bad state uses [`BurstConfig::ber_bad`]).
+    pub burst: Option<BurstConfig>,
 }
 
 impl Default for LinkConfig {
@@ -31,6 +58,7 @@ impl Default for LinkConfig {
             ber: 0.0,
             frame_payload: super::frame::DEFAULT_PAYLOAD,
             max_retries: 16,
+            burst: None,
         }
     }
 }
@@ -50,23 +78,66 @@ pub struct TransferReport {
 pub struct Link {
     pub cfg: LinkConfig,
     rng: Rng,
+    /// Gilbert–Elliott channel state: currently in the bad (burst) state.
+    /// Persists across frames *and* retransmissions — that persistence is
+    /// what makes bursts adversarial for stop-and-wait ARQ.
+    bad: bool,
+}
+
+/// Per-byte corruption probability for a bit-error rate (expected flips =
+/// bits × ber; sampling per byte keeps corruption O(n)).
+fn per_byte(ber: f64) -> f64 {
+    if ber <= 0.0 {
+        0.0
+    } else {
+        1.0 - (1.0 - ber).powi(8)
+    }
 }
 
 impl Link {
     pub fn new(cfg: LinkConfig, seed: u64) -> Link {
-        Link { cfg, rng: Rng::new(seed) }
+        Link { cfg, rng: Rng::new(seed), bad: false }
     }
 
-    /// Corrupt a byte stream according to the BER.
+    /// Corrupt a byte stream according to the error model: i.i.d. BER, or —
+    /// with a [`BurstConfig`] armed — the two-state Gilbert–Elliott chain.
     fn corrupt(&mut self, data: &mut [u8]) -> bool {
-        if self.cfg.ber <= 0.0 {
+        match self.cfg.burst {
+            Some(b) => self.corrupt_burst(data, b),
+            None => self.corrupt_iid(data),
+        }
+    }
+
+    fn corrupt_iid(&mut self, data: &mut [u8]) -> bool {
+        let p = per_byte(self.cfg.ber);
+        if p <= 0.0 {
             return false;
         }
         let mut hit = false;
-        // Expected flips = bits * ber; sample per-byte to stay O(n).
-        let per_byte = 1.0 - (1.0 - self.cfg.ber).powi(8);
         for b in data.iter_mut() {
-            if self.rng.chance(per_byte) {
+            if self.rng.chance(p) {
+                *b ^= 1 << self.rng.below(8);
+                hit = true;
+            }
+        }
+        hit
+    }
+
+    fn corrupt_burst(&mut self, data: &mut [u8], burst: BurstConfig) -> bool {
+        let p_good = per_byte(self.cfg.ber);
+        let p_bad = per_byte(burst.ber_bad);
+        let mut hit = false;
+        for b in data.iter_mut() {
+            // state transition per byte, then corrupt at the state's rate
+            if self.bad {
+                if self.rng.chance(burst.p_exit) {
+                    self.bad = false;
+                }
+            } else if self.rng.chance(burst.p_enter) {
+                self.bad = true;
+            }
+            let p = if self.bad { p_bad } else { p_good };
+            if p > 0.0 && self.rng.chance(p) {
                 *b ^= 1 << self.rng.below(8);
                 hit = true;
             }
@@ -172,6 +243,60 @@ mod tests {
             .unwrap()
             .1;
         assert!(slow.elapsed_s > 10.0 * fast.elapsed_s);
+    }
+
+    #[test]
+    fn burst_link_recovers_via_arq() {
+        // correlated loss: mean burst of ~20 bytes at a bad-state BER that
+        // almost certainly corrupts any frame the burst touches
+        let cfg = LinkConfig {
+            burst: Some(BurstConfig { p_enter: 5e-4, p_exit: 0.05, ber_bad: 5e-3 }),
+            max_retries: 64,
+            ..Default::default()
+        };
+        let mut link = Link::new(cfg, 11);
+        let data = payload(50_000);
+        let (got, rep) = link.transmit(&data).unwrap();
+        assert_eq!(got, data, "ARQ must still deliver exactly under bursts");
+        assert!(rep.retransmissions > 0, "bursts must have hit some frames");
+    }
+
+    #[test]
+    fn burst_outcome_is_deterministic_per_seed() {
+        let cfg = LinkConfig {
+            burst: Some(BurstConfig { p_enter: 1e-3, p_exit: 0.1, ber_bad: 2e-3 }),
+            max_retries: 64,
+            ..Default::default()
+        };
+        let data = payload(30_000);
+        let rep_a = Link::new(cfg, 21).transmit(&data).unwrap().1;
+        let rep_b = Link::new(cfg, 21).transmit(&data).unwrap().1;
+        assert_eq!(rep_a.retransmissions, rep_b.retransmissions);
+        assert_eq!(rep_a.wire_bytes, rep_b.wire_bytes);
+        // a different seed walks a different burst pattern (same totals
+        // would be a one-in-millions coincidence at these rates)
+        let rep_c = Link::new(cfg, 22).transmit(&data).unwrap().1;
+        assert!(
+            rep_a.retransmissions != rep_c.retransmissions
+                || rep_a.wire_bytes != rep_c.wire_bytes,
+            "different seeds should differ somewhere"
+        );
+    }
+
+    #[test]
+    fn unentered_burst_state_is_a_clean_link() {
+        // p_enter = 0: the chain never leaves the good state, and with the
+        // base BER at 0 the burst-mode path must deliver without a single
+        // corruption (exactly like no burst config at all)
+        let cfg = LinkConfig {
+            burst: Some(BurstConfig { p_enter: 0.0, p_exit: 0.5, ber_bad: 0.5 }),
+            ..Default::default()
+        };
+        let mut link = Link::new(cfg, 31);
+        let data = payload(20_000);
+        let (got, rep) = link.transmit(&data).unwrap();
+        assert_eq!(got, data);
+        assert_eq!(rep.retransmissions, 0);
     }
 
     #[test]

@@ -1,10 +1,26 @@
-//! Dynamic batching queue for the serving loop.
+//! Dynamic batching queue for the serving loop, with bounded admission and
+//! per-request deadlines.
 //!
 //! Requests arrive from acceptor threads; the single inference worker pops a
 //! batch when either (a) `max_batch` requests are waiting or (b) the oldest
 //! request has waited `max_delay` — the classic dynamic-batching policy the
 //! batch-32 PJRT artifact wants (the batch is padded to the artifact size by
 //! the worker).
+//!
+//! Two fault-tolerance mechanisms bound the queue's behavior under pressure:
+//!
+//! * **Admission control** — the queue holds at most `capacity` jobs;
+//!   [`BatchQueue::push`] returns [`PushError::Full`] at the cap instead of
+//!   growing without bound, and the server sheds the request with an
+//!   `overloaded` + `retry_after_ms` reply.
+//! * **Deadlines** — a job that already waited longer than `deadline` when
+//!   the worker pops is *shed* (returned in [`Popped::expired`], oldest
+//!   first) rather than served: its client has likely given up, and burning
+//!   a kernel slot on it would delay every live request behind it.
+//!
+//! [`BatchQueue::close`] drains and returns every queued-but-unserved job so
+//! the caller can send each a terminal reply — senders are never silently
+//! dropped on shutdown.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -16,12 +32,37 @@ pub struct Pending<T> {
     pub enqueued: Instant,
 }
 
-/// Thread-safe batch queue. `close()` wakes all waiters and drains.
+/// Why a [`BatchQueue::push`] was rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// The queue is at capacity — shed with a `retry_after` hint.
+    Full,
+    /// The queue is closed (server shutting down).
+    Closed,
+}
+
+/// One pop: the batch to serve plus any jobs shed at their deadline.
+pub struct Popped<T> {
+    /// The dynamic batch to execute (may be empty when only sheds fired).
+    pub jobs: Vec<Pending<T>>,
+    /// Jobs whose queue wait exceeded the deadline, oldest first — reply
+    /// `deadline exceeded` to these instead of serving them.
+    pub expired: Vec<Pending<T>>,
+}
+
+/// Thread-safe bounded batch queue. `close()` wakes all waiters and returns
+/// the drained backlog.
 pub struct BatchQueue<T> {
     inner: Mutex<Inner<T>>,
     cv: Condvar,
     pub max_batch: usize,
     pub max_delay: Duration,
+    /// Admission cap ([`PushError::Full`] at this depth); `usize::MAX` keeps
+    /// the queue unbounded.
+    pub capacity: usize,
+    /// Queue-wait deadline after which a popped job is shed; `None` never
+    /// sheds.
+    pub deadline: Option<Duration>,
 }
 
 struct Inner<T> {
@@ -30,21 +71,39 @@ struct Inner<T> {
 }
 
 impl<T> BatchQueue<T> {
+    /// An unbounded queue with no deadline (bench/unit-test convenience;
+    /// the server always uses [`BatchQueue::bounded`]).
     pub fn new(max_batch: usize, max_delay: Duration) -> Self {
+        Self::bounded(max_batch, max_delay, usize::MAX, None)
+    }
+
+    /// A queue with an admission cap and an optional queue-wait deadline.
+    pub fn bounded(
+        max_batch: usize,
+        max_delay: Duration,
+        capacity: usize,
+        deadline: Option<Duration>,
+    ) -> Self {
         assert!(max_batch > 0);
+        assert!(capacity > 0);
         BatchQueue {
             inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
             cv: Condvar::new(),
             max_batch,
             max_delay,
+            capacity,
+            deadline,
         }
     }
 
-    /// Enqueue a request. Returns false if the queue is closed.
-    pub fn push(&self, payload: T) -> bool {
+    /// Enqueue a request; rejects when closed or at capacity.
+    pub fn push(&self, payload: T) -> Result<(), PushError> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
-            return false;
+            return Err(PushError::Closed);
+        }
+        if g.queue.len() >= self.capacity {
+            return Err(PushError::Full);
         }
         g.queue.push_back(Pending { payload, enqueued: Instant::now() });
         // single-consumer queue: the inference worker is the only condvar
@@ -53,36 +112,68 @@ impl<T> BatchQueue<T> {
         // thread.  close() keeps notify_all as the belt-and-braces wakeup
         // for that same worker.
         self.cv.notify_one();
-        true
+        Ok(())
     }
 
     /// Pop the next batch, blocking until the batching policy fires or the
-    /// queue closes.  Returns `None` only when closed *and* drained.
-    pub fn pop_batch(&self) -> Option<Vec<Pending<T>>> {
+    /// queue closes.  Jobs past their deadline are shed into
+    /// [`Popped::expired`] (oldest first) and never occupy a batch slot.
+    /// Returns `None` only when closed (the backlog is drained by
+    /// [`BatchQueue::close`], not here).
+    pub fn pop_batch(&self) -> Option<Popped<T>> {
+        // injectable consumer stall (chaos testing); a no-op when disarmed
+        if let Some(stall) = crate::util::faults::queue_stall() {
+            std::thread::sleep(stall);
+        }
         let mut g = self.inner.lock().unwrap();
         loop {
+            if g.closed {
+                return None;
+            }
+            // shed expired jobs from the front before forming a batch; the
+            // front is the oldest, so shedding is oldest-first by
+            // construction
+            let mut expired = Vec::new();
+            if let Some(dl) = self.deadline {
+                while g.queue.front().map(|p| p.enqueued.elapsed() > dl).unwrap_or(false) {
+                    expired.push(g.queue.pop_front().unwrap());
+                }
+            }
             if !g.queue.is_empty() {
-                let oldest = g.queue.front().unwrap().enqueued;
-                let waited = oldest.elapsed();
-                if g.queue.len() >= self.max_batch || waited >= self.max_delay || g.closed {
+                let waited = g.queue.front().unwrap().enqueued.elapsed();
+                if g.queue.len() >= self.max_batch || waited >= self.max_delay {
                     let n = g.queue.len().min(self.max_batch);
-                    return Some(g.queue.drain(..n).collect());
+                    return Some(Popped { jobs: g.queue.drain(..n).collect(), expired });
+                }
+                if !expired.is_empty() {
+                    // deliver sheds now — their clients are already past the
+                    // deadline; don't sit on them for the batching window
+                    return Some(Popped { jobs: Vec::new(), expired });
                 }
                 let remaining = self.max_delay - waited;
                 let (ng, _timeout) = self.cv.wait_timeout(g, remaining).unwrap();
                 g = ng;
-            } else if g.closed {
-                return None;
+            } else if !expired.is_empty() {
+                return Some(Popped { jobs: Vec::new(), expired });
             } else {
                 g = self.cv.wait(g).unwrap();
             }
         }
     }
 
-    /// Close the queue; wakes all waiters.
-    pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+    /// Close the queue, waking all waiters, and return the drained backlog
+    /// so every unserved job can be sent a terminal reply (dropping their
+    /// response senders would leave clients hanging until their timeout).
+    pub fn close(&self) -> Vec<Pending<T>> {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        let drained = g.queue.drain(..).collect();
         self.cv.notify_all();
+        drained
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
     }
 
     pub fn len(&self) -> usize {
@@ -104,20 +195,21 @@ mod tests {
     fn full_batch_pops_immediately() {
         let q = BatchQueue::new(4, Duration::from_secs(10));
         for i in 0..4 {
-            assert!(q.push(i));
+            assert!(q.push(i).is_ok());
         }
-        let batch = q.pop_batch().unwrap();
-        assert_eq!(batch.len(), 4);
-        assert_eq!(batch[0].payload, 0);
+        let popped = q.pop_batch().unwrap();
+        assert_eq!(popped.jobs.len(), 4);
+        assert!(popped.expired.is_empty());
+        assert_eq!(popped.jobs[0].payload, 0);
     }
 
     #[test]
     fn timeout_flushes_partial_batch() {
         let q = Arc::new(BatchQueue::new(64, Duration::from_millis(30)));
-        q.push(42);
+        q.push(42).unwrap();
         let t0 = Instant::now();
-        let batch = q.pop_batch().unwrap();
-        assert_eq!(batch.len(), 1);
+        let popped = q.pop_batch().unwrap();
+        assert_eq!(popped.jobs.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(25));
     }
 
@@ -125,21 +217,113 @@ mod tests {
     fn oversize_queue_pops_max_batch() {
         let q = BatchQueue::new(3, Duration::from_secs(10));
         for i in 0..7 {
-            q.push(i);
+            q.push(i).unwrap();
         }
-        assert_eq!(q.pop_batch().unwrap().len(), 3);
-        assert_eq!(q.pop_batch().unwrap().len(), 3);
+        assert_eq!(q.pop_batch().unwrap().jobs.len(), 3);
+        assert_eq!(q.pop_batch().unwrap().jobs.len(), 3);
         assert_eq!(q.len(), 1);
     }
 
     #[test]
-    fn close_drains_then_none() {
+    fn close_drains_backlog_then_pop_returns_none() {
         let q = BatchQueue::new(8, Duration::from_secs(10));
-        q.push(1);
-        q.close();
-        assert!(!q.push(2));
-        assert_eq!(q.pop_batch().unwrap().len(), 1);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let drained = q.close();
+        assert_eq!(drained.len(), 2, "close returns the unserved backlog");
+        assert_eq!(drained[0].payload, 1);
+        assert_eq!(q.push(3), Err(PushError::Closed));
         assert!(q.pop_batch().is_none());
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn bounded_queue_rejects_at_capacity() {
+        let q = BatchQueue::bounded(4, Duration::from_secs(10), 3, None);
+        for i in 0..3 {
+            assert!(q.push(i).is_ok());
+        }
+        assert_eq!(q.push(99), Err(PushError::Full));
+        assert_eq!(q.len(), 3, "rejected pushes must not enqueue");
+        // draining frees capacity again
+        let popped = q.pop_batch().unwrap();
+        assert_eq!(popped.jobs.len(), 3);
+        assert!(q.push(100).is_ok());
+    }
+
+    #[test]
+    fn bounded_push_under_concurrent_producers_never_exceeds_cap() {
+        // hammer a cap-8 queue from 4 producers; every push either lands or
+        // reports Full, the depth never exceeds the cap, and accepted ==
+        // total - shed exactly (no lost or duplicated jobs)
+        let q = Arc::new(BatchQueue::bounded(64, Duration::from_secs(10), 8, None));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut shed = 0u64;
+                    for i in 0..50 {
+                        match q.push(p * 100 + i) {
+                            Ok(()) => {}
+                            Err(PushError::Full) => shed += 1,
+                            Err(PushError::Closed) => unreachable!(),
+                        }
+                        assert!(q.len() <= 8, "queue depth exceeded the cap");
+                    }
+                    shed
+                })
+            })
+            .collect();
+        let shed: u64 = producers.into_iter().map(|t| t.join().unwrap()).sum();
+        let queued = q.len() as u64;
+        assert_eq!(queued + shed, 200, "accepted + shed must cover every push");
+        assert!(queued <= 8);
+        assert!(shed >= 200 - 8, "with no consumer, all but cap must shed");
+    }
+
+    #[test]
+    fn deadline_sheds_oldest_first_and_serves_the_rest() {
+        let q = BatchQueue::bounded(
+            8,
+            Duration::from_millis(5),
+            usize::MAX,
+            Some(Duration::from_millis(40)),
+        );
+        q.push("old-a").unwrap();
+        q.push("old-b").unwrap();
+        thread::sleep(Duration::from_millis(90)); // both sail past the deadline
+        q.push("fresh").unwrap();
+        // first pop delivers the sheds immediately (no batching-window wait)
+        let popped = q.pop_batch().unwrap();
+        let shed: Vec<_> = popped.expired.iter().map(|p| p.payload).collect();
+        assert_eq!(shed, vec!["old-a", "old-b"], "sheds are oldest-first");
+        assert!(popped.jobs.is_empty(), "sheds are delivered without delay");
+        // the live job is untouched and forms the next batch
+        let next = q.pop_batch().unwrap();
+        let served: Vec<_> = next.jobs.iter().map(|p| p.payload).collect();
+        assert_eq!(served, vec!["fresh"]);
+        assert!(next.expired.is_empty());
+    }
+
+    #[test]
+    fn all_expired_pop_returns_sheds_without_waiting_for_the_window() {
+        let q = BatchQueue::bounded(
+            8,
+            Duration::from_secs(10), // window far longer than the test
+            usize::MAX,
+            Some(Duration::from_millis(30)),
+        );
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        thread::sleep(Duration::from_millis(80));
+        let t0 = Instant::now();
+        let popped = q.pop_batch().unwrap();
+        assert!(popped.jobs.is_empty());
+        assert_eq!(popped.expired.len(), 2);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "sheds must not wait out the batching window"
+        );
     }
 
     #[test]
@@ -155,7 +339,7 @@ mod tests {
                 let q = q.clone();
                 thread::spawn(move || {
                     for i in 0..5 {
-                        assert!(q.push(p * 100 + i));
+                        assert!(q.push(p * 100 + i).is_ok());
                         thread::sleep(Duration::from_millis(7));
                     }
                 })
@@ -164,8 +348,8 @@ mod tests {
         let mut got = 0;
         while got < total {
             let t0 = Instant::now();
-            let batch = q.pop_batch().expect("queue is never closed here");
-            assert!(!batch.is_empty());
+            let popped = q.pop_batch().expect("queue is never closed here");
+            assert!(!popped.jobs.is_empty());
             // each flush must come from the max_delay timer, not a full
             // batch — generous bound for slow CI
             assert!(
@@ -173,7 +357,7 @@ mod tests {
                 "timeout flush stalled: {:?}",
                 t0.elapsed()
             );
-            got += batch.len();
+            got += popped.jobs.len();
         }
         assert_eq!(got, total);
         for p in producers {
@@ -189,7 +373,7 @@ mod tests {
                 let q = q.clone();
                 thread::spawn(move || {
                     for i in 0..50 {
-                        q.push(p * 100 + i);
+                        q.push(p * 100 + i).unwrap();
                     }
                 })
             })
@@ -199,7 +383,7 @@ mod tests {
             let mut got = 0;
             while got < 200 {
                 if let Some(b) = qc.pop_batch() {
-                    got += b.len();
+                    got += b.jobs.len();
                 } else {
                     break;
                 }

@@ -20,6 +20,10 @@ use crate::util::stats;
 /// lifetime observation count.
 pub const LATENCY_WINDOW: usize = 4096;
 
+/// Smoothing factor for [`Metrics::observe_ewma`] (1/8: a step change
+/// settles within a few tens of observations without chasing one outlier).
+pub const EWMA_ALPHA: f64 = 0.125;
+
 /// One latency series: a bounded ring of recent samples plus the lifetime
 /// count.
 #[derive(Default)]
@@ -67,6 +71,21 @@ impl Metrics {
     /// arena's per-layer high-water marks.
     pub fn set_gauge(&self, name: &str, value: f64) {
         self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Fold `value` into an exponentially-weighted moving average stored as
+    /// the gauge `name` (the first observation seeds the average).  The
+    /// serving worker smooths per-batch inference time into
+    /// `infer_batch.ewma_ms` this way; the admission-control path reads that
+    /// gauge to derive the `retry_after_ms` hint on overload sheds.
+    pub fn observe_ewma(&self, name: &str, value: f64) {
+        let mut g = self.gauges.lock().unwrap();
+        match g.get_mut(name) {
+            Some(prev) => *prev += EWMA_ALPHA * (value - *prev),
+            None => {
+                g.insert(name.to_string(), value);
+            }
+        }
     }
 
     pub fn observe_s(&self, name: &str, seconds: f64) {
@@ -161,6 +180,19 @@ mod tests {
         let snap = m.snapshot().to_json();
         assert!(snap.contains("gauge.pool.spawns"));
         assert!(snap.contains("gauge.pool.wakeups"));
+    }
+
+    #[test]
+    fn ewma_seeds_then_tracks() {
+        let m = Metrics::new();
+        m.observe_ewma("e", 10.0);
+        assert_eq!(m.gauge("e"), Some(10.0), "first observation seeds the average");
+        m.observe_ewma("e", 20.0);
+        assert!((m.gauge("e").unwrap() - 11.25).abs() < 1e-12, "alpha = 1/8");
+        for _ in 0..200 {
+            m.observe_ewma("e", 20.0);
+        }
+        assert!((m.gauge("e").unwrap() - 20.0).abs() < 1e-6, "converges to the new level");
     }
 
     #[test]

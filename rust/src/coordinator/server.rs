@@ -27,9 +27,46 @@
 //! spawned per request" steady-state invariant), and every roster engine's
 //! uniform [`crate::runtime::engine::EngineReport`] as the
 //! `engine.<name>.*` gauge family (`docs/METRICS.md`).
+//!
+//! ## Fault tolerance
+//!
+//! The serving path degrades gracefully under the three pressures that
+//! actually hit edge deployments:
+//!
+//! * **Overload** — the queue is bounded ([`ServerConfig::queue_cap`],
+//!   default 4× the batch size): at capacity, `push` rejects and the
+//!   connection replies `{"error":"overloaded","retry_after_ms":N}`, with
+//!   `N` derived from the observed per-batch inference EWMA times the
+//!   backlog depth.  Jobs that waited past [`ServerConfig::deadline`] are
+//!   shed by the worker with a `deadline exceeded` reply instead of burning
+//!   a kernel slot (`shed_overload` / `shed_deadline` counters,
+//!   `queue.depth` gauge).
+//! * **Engine failures** — every forward runs under `catch_unwind`: an
+//!   engine error or panic fails only the in-flight batch (each job gets a
+//!   terminal error reply) and the worker keeps serving with a fresh
+//!   [`Scratch`].  An engine that fails
+//!   [`ServerConfig::quarantine_after`] times consecutively is
+//!   *quarantined*: [`Roster::route`] hides it from the dispatch policy, so
+//!   the existing preference orders degrade traffic to the next engine
+//!   class, and after [`ServerConfig::quarantine_cooldown`] routed batches
+//!   the engine is probed once — a successful probe reinstates it, a failed
+//!   one re-quarantines (`engine.<name>.quarantined` gauges, `quarantines`
+//!   / `engine_failures` / `worker_panics` counters).
+//! * **Shutdown** — [`Server::stop`] drains the queue and sends every
+//!   unserved job an explicit `server shutting down` reply
+//!   (`shed_shutdown`), so clients never hang out their reply timeout,
+//!   which is itself derived from the configured deadline
+//!   ([`ServerConfig::reply_timeout`]) rather than a hardcoded 30s.
+//!
+//! Chaos scenarios are driven through [`crate::util::faults`]
+//! (`PALLAS_FAULTS`): when armed at roster-build time every engine is
+//! wrapped in a [`FaultInjector`]; disarmed, the wrapper is never
+//! constructed and the hot path is untouched.
 
+use std::cell::Cell;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{self, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -38,14 +75,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::batcher::{BatchQueue, Pending};
+use super::batcher::{BatchQueue, Pending, PushError};
 use super::metrics::Metrics;
 use crate::device::{CsdQuality, QualityConfig};
 use crate::kernels::{self, Scratch};
 use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::AssignMode;
-use crate::runtime::engine::{DispatchPolicy, Engine, EngineKind, PjrtEngine, PolicySelect};
+use crate::runtime::engine::{
+    DispatchPolicy, Engine, EngineKind, FaultInjector, PjrtEngine, PolicySelect,
+};
 use crate::runtime::host::{CsdEngine, F32Engine, QuantizedEngine};
 use crate::tensor::{ops, Tensor};
 use crate::util::json::{self, Value};
@@ -98,6 +137,42 @@ pub struct ServerConfig {
     /// Batch-dispatch policy for the `Auto` roster (ignored when the
     /// roster is pinned to a single engine).
     pub policy: PolicySelect,
+    /// Admission cap on the batch queue (`--queue-cap`); 0 means "derive":
+    /// 4× the batch size ([`ServerConfig::effective_queue_cap`]).
+    pub queue_cap: usize,
+    /// Queue-wait deadline (`--deadline-ms`): a job still queued this long
+    /// after arrival is shed with a `deadline exceeded` reply.
+    pub deadline: Duration,
+    /// Consecutive `forward_with` failures (errors or panics) after which an
+    /// engine is quarantined and routed around.
+    pub quarantine_after: u32,
+    /// Routed batches a quarantined engine sits out before one probe batch
+    /// is sent its way (tick-based, not wall-clock, so chaos outcomes are
+    /// deterministic under any pool configuration).
+    pub quarantine_cooldown: u64,
+}
+
+impl ServerConfig {
+    /// The admission cap actually applied: `queue_cap`, or 4× the batch
+    /// size when left at 0 — deep enough to absorb a burst of a few full
+    /// batches, shallow enough that queue wait stays bounded by a handful
+    /// of batch windows.
+    pub fn effective_queue_cap(&self) -> usize {
+        if self.queue_cap == 0 {
+            self.batch.saturating_mul(4).max(1)
+        } else {
+            self.queue_cap
+        }
+    }
+
+    /// How long a connection waits for its reply before giving up: the
+    /// queue deadline (the longest a job may legitimately sit queued), one
+    /// batching window, and a generous inference allowance.  Replaces the
+    /// old hardcoded 30s wait, and stays consistent with `deadline` by
+    /// construction.
+    pub fn reply_timeout(&self) -> Duration {
+        self.deadline + self.max_delay + Duration::from_secs(5)
+    }
 }
 
 impl Default for ServerConfig {
@@ -109,6 +184,40 @@ impl Default for ServerConfig {
             bind: "127.0.0.1:0".into(),
             engine: EngineSelect::Auto,
             policy: PolicySelect::BatchFill,
+            queue_cap: 0,
+            deadline: Duration::from_secs(2),
+            quarantine_after: 3,
+            quarantine_cooldown: 64,
+        }
+    }
+}
+
+/// Per-engine failure bookkeeping for quarantine.  `Cell`-based because the
+/// roster is owned by the single inference-worker thread and routing takes
+/// `&self`.
+struct Health {
+    /// Consecutive `forward_with` failures; any success resets it.
+    consecutive: Cell<u32>,
+    /// `Some(tick)` while quarantined: the route tick at which the engine
+    /// becomes a probe candidate again.  `None` = healthy.
+    quarantined_until: Cell<Option<u64>>,
+}
+
+impl Health {
+    fn new() -> Health {
+        Health { consecutive: Cell::new(0), quarantined_until: Cell::new(None) }
+    }
+
+    fn is_quarantined(&self) -> bool {
+        self.quarantined_until.get().is_some()
+    }
+
+    /// Visible to the dispatch policy at `tick`: healthy, or quarantined
+    /// with the cooldown expired (a probe candidate).
+    fn available(&self, tick: u64) -> bool {
+        match self.quarantined_until.get() {
+            None => true,
+            Some(until) => tick >= until,
         }
     }
 }
@@ -118,6 +227,11 @@ impl Default for ServerConfig {
 /// [`EngineSelect`] builds a one-engine roster (the policy is then inert);
 /// `Auto` builds the full roster.  Constructed on, and owned by, the worker
 /// thread — the PJRT runtime is not `Send`.
+///
+/// The roster also owns the quarantine state: the worker reports each
+/// batch's outcome via [`Roster::note_ok`] / [`Roster::note_failure`], and
+/// [`Roster::route`] hides quarantined engines from the policy so the
+/// preference orders degrade traffic to the next engine class.
 pub struct Roster {
     engines: Vec<Box<dyn Engine>>,
     /// `engines[i]`'s kind, precomputed for the policy's route call.
@@ -130,6 +244,18 @@ pub struct Roster {
     /// `dispatch_<engine>` counter names, precomputed per roster index so
     /// the worker's hot loop does not format a key per batch.
     dispatch_counters: Vec<String>,
+    /// `engine.<name>.quarantined` gauge names, precomputed likewise.
+    quarantine_gauges: Vec<String>,
+    health: Vec<Health>,
+    /// Route calls so far — the deterministic clock quarantine cooldowns
+    /// count in (wall time would make chaos outcomes timing-dependent).
+    tick: Cell<u64>,
+    /// Fast path: when false, `route` skips all quarantine filtering.
+    any_quarantined: Cell<bool>,
+    /// Lifetime quarantine events (entries and probe-failure renewals).
+    quarantine_events: Cell<u64>,
+    quarantine_after: u32,
+    quarantine_cooldown: u64,
 }
 
 impl Roster {
@@ -213,12 +339,41 @@ impl Roster {
                 cfg.batch
             );
         }
-        let kinds = engines.iter().map(|e| e.kind()).collect();
+        // chaos harness: with fault injection armed at build time, every
+        // roster engine is wrapped so injected errors/panics/delays hit the
+        // exact forward path real failures would.  Disarmed (the normal
+        // case), the wrapper is never constructed and the serving hot path
+        // carries zero fault-layer code.
+        if crate::util::faults::armed() {
+            engines = engines
+                .into_iter()
+                .map(|e| Box::new(FaultInjector::new(e)) as Box<dyn Engine>)
+                .collect();
+        }
+        let kinds: Vec<EngineKind> = engines.iter().map(|e| e.kind()).collect();
         let dispatch_counters = engines
             .iter()
             .map(|e| format!("dispatch_{}", e.name().replace('-', "_")))
             .collect();
-        Ok(Roster { engines, kinds, policy: cfg.policy.build(), artifact_batch, dispatch_counters })
+        let quarantine_gauges = engines
+            .iter()
+            .map(|e| format!("engine.{}.quarantined", e.name()))
+            .collect();
+        let health = engines.iter().map(|_| Health::new()).collect();
+        Ok(Roster {
+            engines,
+            kinds,
+            policy: cfg.policy.build(),
+            artifact_batch,
+            dispatch_counters,
+            quarantine_gauges,
+            health,
+            tick: Cell::new(0),
+            any_quarantined: Cell::new(false),
+            quarantine_events: Cell::new(0),
+            quarantine_after: cfg.quarantine_after.max(1),
+            quarantine_cooldown: cfg.quarantine_cooldown.max(1),
+        })
     }
 
     /// Backend label for the startup `engine_*` counter: the pinned engine's
@@ -254,27 +409,124 @@ impl Roster {
         &self.dispatch_counters[i]
     }
 
+    /// The precomputed `engine.<name>.quarantined` gauge key for index `i`.
+    pub fn quarantine_gauge(&self, i: usize) -> &str {
+        &self.quarantine_gauges[i]
+    }
+
     /// Every engine on the roster (for telemetry export).
     pub fn engines(&self) -> impl Iterator<Item = &dyn Engine> {
         self.engines.iter().map(|e| e.as_ref())
     }
 
-    /// The roster index the policy routes an `n`-row batch to.
+    /// Whether roster index `i` is currently quarantined.
+    pub fn quarantined(&self, i: usize) -> bool {
+        self.health[i].is_quarantined()
+    }
+
+    /// Whether any engine is currently quarantined.
+    pub fn any_quarantined(&self) -> bool {
+        self.any_quarantined.get()
+    }
+
+    /// Lifetime quarantine events (initial entries plus probe-failure
+    /// renewals).
+    pub fn quarantine_events(&self) -> u64 {
+        self.quarantine_events.get()
+    }
+
+    /// The roster index the policy routes an `n`-row batch to.  Quarantined
+    /// engines are invisible to the policy until their cooldown expires
+    /// (then exactly eligible again — the next batch they win is their
+    /// probe); if *everything* is quarantined the full roster is used, since
+    /// routing around every engine would mean serving nothing.
     pub fn route(&self, n: usize) -> usize {
+        let tick = self.tick.get() + 1;
+        self.tick.set(tick);
         if self.engines.len() == 1 {
             return 0;
         }
-        self.policy
-            .route(n, self.artifact_batch, &self.kinds)
-            .min(self.engines.len() - 1)
+        if !self.any_quarantined.get() {
+            return self
+                .policy
+                .route(n, self.artifact_batch, &self.kinds)
+                .min(self.engines.len() - 1);
+        }
+        let mut avail_kinds = Vec::with_capacity(self.kinds.len());
+        let mut avail_idx = Vec::with_capacity(self.kinds.len());
+        for (i, h) in self.health.iter().enumerate() {
+            if h.available(tick) {
+                avail_kinds.push(self.kinds[i]);
+                avail_idx.push(i);
+            }
+        }
+        if avail_idx.is_empty() {
+            return self
+                .policy
+                .route(n, self.artifact_batch, &self.kinds)
+                .min(self.engines.len() - 1);
+        }
+        let j = self
+            .policy
+            .route(n, self.artifact_batch, &avail_kinds)
+            .min(avail_idx.len() - 1);
+        avail_idx[j]
+    }
+
+    /// Record a successful forward on roster index `i`: resets its failure
+    /// streak, and — if this was a probe of a quarantined engine —
+    /// reinstates it.
+    pub fn note_ok(&self, i: usize) {
+        let h = &self.health[i];
+        h.consecutive.set(0);
+        if h.is_quarantined() {
+            h.quarantined_until.set(None);
+            self.any_quarantined
+                .set(self.health.iter().any(|h| h.is_quarantined()));
+        }
+    }
+
+    /// Record a failed forward (error or panic) on roster index `i`.
+    /// Returns `true` when this failure put (or kept) the engine in
+    /// quarantine — a fresh entry after `quarantine_after` consecutive
+    /// failures, or an immediate renewal when a probe of an
+    /// already-quarantined engine fails.
+    pub fn note_failure(&self, i: usize) -> bool {
+        let h = &self.health[i];
+        let streak = h.consecutive.get() + 1;
+        h.consecutive.set(streak);
+        if streak >= self.quarantine_after || h.is_quarantined() {
+            h.quarantined_until
+                .set(Some(self.tick.get() + self.quarantine_cooldown));
+            self.any_quarantined.set(true);
+            self.quarantine_events.set(self.quarantine_events.get() + 1);
+            return true;
+        }
+        false
+    }
+
+    /// Forward one batch on roster index `i` (no health bookkeeping — the
+    /// supervised worker wraps this in `catch_unwind` and reports the
+    /// outcome via [`Roster::note_ok`] / [`Roster::note_failure`]).
+    pub fn forward(&self, i: usize, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        self.engines[i].forward_with(x, scratch)
     }
 
     /// Route and execute one batch; returns the chosen roster index and the
-    /// logits (real rows only — the PJRT wrapper trims its padding).
+    /// logits (real rows only — the PJRT wrapper trims its padding).  The
+    /// outcome feeds the quarantine bookkeeping.
     pub fn dispatch(&self, x: &Tensor, scratch: &mut Scratch) -> Result<(usize, Tensor)> {
         let i = self.route(x.shape()[0]);
-        let logits = self.engines[i].forward_with(x, scratch)?;
-        Ok((i, logits))
+        match self.engines[i].forward_with(x, scratch) {
+            Ok(logits) => {
+                self.note_ok(i);
+                Ok((i, logits))
+            }
+            Err(e) => {
+                self.note_failure(i);
+                Err(e)
+            }
+        }
     }
 }
 
@@ -303,6 +555,23 @@ struct Job {
     resp: mpsc::Sender<Value>,
 }
 
+/// Reply `{"id":..,"error":..}` to one job (terminal error path).
+fn reply_error(job: &Pending<Job>, msg: &str) {
+    let resp = json::obj(vec![
+        ("id", json::num(job.payload.id as f64)),
+        ("error", json::s(msg)),
+    ]);
+    let _ = job.payload.resp.send(resp);
+}
+
+/// Where the worker gets its weights: an artifact directory on disk (the
+/// CLI path — also enables PJRT), or an in-memory store (tests and benches
+/// serve synthetic models with nothing on disk).
+enum EngineSource {
+    Artifacts(PathBuf),
+    Store(WeightStore),
+}
+
 /// A running server; `stop()` for graceful shutdown.
 pub struct Server {
     pub port: u16,
@@ -316,13 +585,33 @@ impl Server {
     /// Start the server; blocks until the PJRT worker has loaded weights and
     /// compiled the artifact (so the first request is never a cold start).
     pub fn start(artifacts: PathBuf, cfg: ServerConfig) -> Result<Server> {
+        Self::start_inner(EngineSource::Artifacts(artifacts), cfg)
+    }
+
+    /// Start the server over an already-loaded weight store, with no
+    /// artifacts on disk (the PJRT path is skipped).  Chaos tests and the
+    /// overload bench serve synthetic stores this way.
+    pub fn start_with_store(store: WeightStore, cfg: ServerConfig) -> Result<Server> {
+        Self::start_inner(EngineSource::Store(store), cfg)
+    }
+
+    fn start_inner(source: EngineSource, cfg: ServerConfig) -> Result<Server> {
+        // arm fault injection from PALLAS_FAULTS before the roster builds
+        // (the build wraps engines only when armed); a malformed spec fails
+        // startup loudly rather than running a chaos scenario fault-free
+        crate::util::faults::arm_from_env()?;
         let listener = TcpListener::bind(&cfg.bind)
             .with_context(|| format!("binding {}", cfg.bind))?;
         listener.set_nonblocking(true)?;
         let port = listener.local_addr()?.port();
 
         let shutdown = Arc::new(AtomicBool::new(false));
-        let queue = Arc::new(BatchQueue::<Job>::new(cfg.batch, cfg.max_delay));
+        let queue = Arc::new(BatchQueue::<Job>::bounded(
+            cfg.batch,
+            cfg.max_delay,
+            cfg.effective_queue_cap(),
+            Some(cfg.deadline),
+        ));
         let metrics = Arc::new(Metrics::new());
 
         // --- inference worker (owns the non-Send engine roster) -------------
@@ -331,9 +620,12 @@ impl Server {
         let wm = metrics.clone();
         let wcfg = cfg.clone();
         let worker = thread::Builder::new().name("infer-worker".into()).spawn(move || {
-            let roster = match WeightStore::load(&artifacts, wcfg.model)
-                .and_then(|store| Roster::build(Some(&artifacts), store, &wcfg))
-            {
+            let built = match source {
+                EngineSource::Artifacts(dir) => WeightStore::load(&dir, wcfg.model)
+                    .and_then(|store| Roster::build(Some(&dir), store, &wcfg)),
+                EngineSource::Store(store) => Roster::build(None, store, &wcfg),
+            };
+            let roster = match built {
                 Ok(r) => {
                     let _ = ready_tx.send(Ok(()));
                     r
@@ -353,18 +645,47 @@ impl Server {
             // its spawn counter stays flat once serving is warm
             let pool = kernels::Pool::global();
 
-            while let Some(batch) = wq.pop_batch() {
+            while let Some(popped) = wq.pop_batch() {
+                // deadline sheds: terminal replies, no kernel slot spent
+                for job in &popped.expired {
+                    wm.inc("shed_deadline", 1);
+                    reply_error(job, "deadline exceeded");
+                }
+                wm.set_gauge("queue.depth", wq.len() as f64);
+                let batch = popped.jobs;
+                if batch.is_empty() {
+                    continue;
+                }
                 let t0 = Instant::now();
                 let n = batch.len();
-                let routed: Result<(usize, Vec<usize>)> = batch_tensor(&batch, n, h, w, c)
-                    .and_then(|x| roster.dispatch(&x, &mut scratch))
-                    .map(|(i, logits)| (i, ops::argmax_rows(&logits)));
-                match routed {
-                    Ok((idx, preds)) => {
+                let x = match batch_tensor(&batch, n, h, w, c) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        for job in &batch {
+                            reply_error(job, &msg);
+                        }
+                        continue;
+                    }
+                };
+                // route *before* the supervised forward so an error or
+                // panic is attributed to the engine that actually ran
+                let idx = roster.route(n);
+                let outcome =
+                    panic::catch_unwind(AssertUnwindSafe(|| {
+                        roster.forward(idx, &x, &mut scratch)
+                    }));
+                match outcome {
+                    Ok(Ok(logits)) => {
+                        roster.note_ok(idx);
+                        let preds = ops::argmax_rows(&logits);
                         let engine = roster.engine(idx);
                         wm.inc(roster.dispatch_counter(idx), 1);
                         let infer_s = t0.elapsed().as_secs_f64();
                         wm.observe_s("infer_batch", infer_s);
+                        // smoothed batch time, the retry_after_ms basis for
+                        // overload sheds on the admission path
+                        wm.observe_ewma("infer_batch.ewma_ms", infer_s * 1e3);
                         wm.inc("batches", 1);
                         wm.inc("requests", n as u64);
                         // pool + arena telemetry: spawns must stay flat once
@@ -411,15 +732,36 @@ impl Server {
                             let _ = job.payload.resp.send(resp);
                         }
                     }
-                    Err(e) => {
-                        for job in batch {
-                            let resp = json::obj(vec![
-                                ("id", json::num(job.payload.id as f64)),
-                                ("error", json::s(&format!("{e:#}"))),
-                            ]);
-                            let _ = job.payload.resp.send(resp);
+                    Ok(Err(e)) => {
+                        // engine error: fail only this batch, keep serving
+                        if roster.note_failure(idx) {
+                            wm.inc("quarantines", 1);
+                        }
+                        wm.inc("engine_failures", 1);
+                        let msg = format!("{e:#}");
+                        for job in &batch {
+                            reply_error(job, &msg);
                         }
                     }
+                    Err(_) => {
+                        // engine panic: the arena may be mid-mutation —
+                        // rebuild it, fail this batch, keep the roster and
+                        // keep serving
+                        scratch = Scratch::new();
+                        if roster.note_failure(idx) {
+                            wm.inc("quarantines", 1);
+                        }
+                        wm.inc("worker_panics", 1);
+                        for job in &batch {
+                            reply_error(job, "engine panicked; batch failed");
+                        }
+                    }
+                }
+                for i in 0..roster.len() {
+                    wm.set_gauge(
+                        roster.quarantine_gauge(i),
+                        if roster.quarantined(i) { 1.0 } else { 0.0 },
+                    );
                 }
             }
         })?;
@@ -435,6 +777,7 @@ impl Server {
             let (h, w, c) = cfg.model.input_hwc();
             h * w * c
         };
+        let reply_timeout = cfg.reply_timeout();
         let acceptor = thread::Builder::new().name("acceptor".into()).spawn(move || {
             let mut conns: Vec<JoinHandle<()>> = Vec::new();
             while !ash.load(Ordering::Relaxed) {
@@ -447,7 +790,14 @@ impl Server {
                             thread::Builder::new()
                                 .name("conn".into())
                                 .spawn(move || {
-                                    let _ = handle_conn(stream, q, m, pix_expected, sh);
+                                    let _ = handle_conn(
+                                        stream,
+                                        q,
+                                        m,
+                                        pix_expected,
+                                        sh,
+                                        reply_timeout,
+                                    );
                                 })
                                 .unwrap(),
                         );
@@ -473,11 +823,20 @@ impl Server {
     }
 
     /// Graceful shutdown: stop accepting, drain the queue, join threads.
+    /// Every queued-but-unserved job gets an explicit `server shutting
+    /// down` reply (counted in `shed_shutdown`) — dropping their response
+    /// senders would leave those clients hanging until their reply timeout.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         // give in-flight connection reads a beat, then close the queue
         thread::sleep(Duration::from_millis(20));
-        self.queue.close();
+        let backlog = self.queue.close();
+        if !backlog.is_empty() {
+            self.metrics.inc("shed_shutdown", backlog.len() as u64);
+            for job in &backlog {
+                reply_error(job, "server shutting down");
+            }
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -490,6 +849,7 @@ fn handle_conn(
     metrics: Arc<Metrics>,
     pix_expected: usize,
     shutdown: Arc<AtomicBool>,
+    reply_timeout: Duration,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     // read timeout so the thread notices shutdown even on idle connections
@@ -523,12 +883,20 @@ fn handle_conn(
             Ok((id, pixels)) => {
                 let (tx, rx) = mpsc::channel();
                 let job = Job { id, pixels, enqueued: Instant::now(), resp: tx };
-                if !queue.push(job) {
-                    json::obj(vec![("error", json::s("server shutting down"))])
-                } else {
-                    match rx.recv_timeout(Duration::from_secs(30)) {
+                match queue.push(job) {
+                    Ok(()) => match rx.recv_timeout(reply_timeout) {
                         Ok(v) => v,
                         Err(_) => json::obj(vec![("error", json::s("inference timeout"))]),
+                    },
+                    Err(PushError::Full) => {
+                        metrics.inc("shed_overload", 1);
+                        json::obj(vec![
+                            ("error", json::s("overloaded")),
+                            ("retry_after_ms", json::num(retry_after_ms(&queue, &metrics))),
+                        ])
+                    }
+                    Err(PushError::Closed) => {
+                        json::obj(vec![("error", json::s("server shutting down"))])
                     }
                 }
             }
@@ -543,19 +911,34 @@ fn handle_conn(
     }
 }
 
+/// The backoff hint attached to an `overloaded` shed: the time to drain the
+/// current backlog, estimated as (batches queued) × (observed per-batch
+/// inference EWMA).  Before the first batch completes there is no EWMA yet;
+/// one batching window is the honest floor.
+fn retry_after_ms(queue: &BatchQueue<Job>, metrics: &Metrics) -> f64 {
+    let ewma_ms = metrics
+        .gauge("infer_batch.ewma_ms")
+        .unwrap_or_else(|| queue.max_delay.as_secs_f64() * 1e3);
+    let backlog_batches = queue.len().div_ceil(queue.max_batch).max(1);
+    (ewma_ms * backlog_batches as f64).ceil().max(1.0)
+}
+
 fn parse_request(line: &str, pix_expected: usize) -> Result<(u64, Vec<f32>)> {
     let v = json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
     let id = v
         .get("id")
         .as_f64()
         .context("missing id")? as u64;
-    let pixels: Vec<f32> = v
-        .get("pixels")
-        .as_arr()
-        .context("missing pixels")?
-        .iter()
-        .map(|x| x.as_f64().unwrap_or(0.0) as f32)
-        .collect();
+    let arr = v.get("pixels").as_arr().context("missing pixels")?;
+    let mut pixels = Vec::with_capacity(arr.len());
+    for (i, x) in arr.iter().enumerate() {
+        // a non-numeric entry is a malformed request: reject it instead of
+        // silently serving garbage (the old path mapped it to 0.0)
+        match x.as_f64() {
+            Some(f) => pixels.push(f as f32),
+            None => bail!("pixel {i} is not a number"),
+        }
+    }
     if pixels.len() != pix_expected {
         bail!("expected {pix_expected} pixels, got {}", pixels.len());
     }
@@ -605,12 +988,41 @@ mod tests {
     }
 
     #[test]
+    fn parse_request_rejects_non_numeric_pixels() {
+        // regression: these used to be silently served as 0.0
+        for bad in [
+            "{\"id\":1,\"pixels\":[0.0,\"x\"]}",
+            "{\"id\":1,\"pixels\":[null,1.0]}",
+            "{\"id\":1,\"pixels\":[0.0,true]}",
+            "{\"id\":1,\"pixels\":[[],1.0]}",
+        ] {
+            let e = parse_request(bad, 2).unwrap_err();
+            assert!(
+                format!("{e:#}").contains("not a number"),
+                "{bad}: unexpected error {e:#}"
+            );
+        }
+    }
+
+    #[test]
     fn default_config_sane() {
         let c = ServerConfig::default();
         assert_eq!(c.batch, 32);
         assert!(c.bind.ends_with(":0"));
         assert_eq!(c.engine, EngineSelect::Auto);
         assert_eq!(c.policy, PolicySelect::BatchFill);
+        // admission-control defaults: cap derives from the batch size, the
+        // client reply wait strictly dominates the queue deadline
+        assert_eq!(c.queue_cap, 0);
+        assert_eq!(c.effective_queue_cap(), 4 * 32);
+        assert_eq!(
+            ServerConfig { queue_cap: 7, ..ServerConfig::default() }.effective_queue_cap(),
+            7
+        );
+        assert_eq!(c.deadline, Duration::from_secs(2));
+        assert!(c.reply_timeout() > c.deadline + c.max_delay);
+        assert_eq!(c.quarantine_after, 3);
+        assert_eq!(c.quarantine_cooldown, 64);
     }
 
     use crate::data::synth_store;
@@ -734,6 +1146,92 @@ mod tests {
     }
 
     #[test]
+    fn quarantine_routes_around_then_probes_back() {
+        let store = synth_store(81, ModelKind::Lenet);
+        let cfg = ServerConfig {
+            policy: PolicySelect::EnergyBudget,
+            quarantine_after: 2,
+            quarantine_cooldown: 4,
+            ..Default::default()
+        };
+        let roster = Roster::build(None, store, &cfg).unwrap();
+        // the energy policy sends singletons to the CSD engine
+        let csd = roster.route(1);
+        assert_eq!(roster.engine(csd).kind(), EngineKind::Csd);
+        assert!(!roster.any_quarantined());
+
+        // two consecutive failures quarantine it; the first is forgiven
+        assert!(!roster.note_failure(csd));
+        assert!(roster.note_failure(csd));
+        assert!(roster.quarantined(csd));
+        assert!(roster.any_quarantined());
+        assert_eq!(roster.quarantine_events(), 1);
+
+        // routed around: singletons degrade to the next energy preference
+        let alt = roster.route(1);
+        assert_ne!(alt, csd);
+        assert_eq!(roster.engine(alt).kind(), EngineKind::Quantized);
+
+        // a success elsewhere must not reinstate the quarantined engine
+        roster.note_ok(alt);
+        assert!(roster.quarantined(csd));
+
+        // after the (tick-based) cooldown, the engine wins a probe batch
+        let mut probed = false;
+        for _ in 0..2 * cfg.quarantine_cooldown {
+            if roster.route(1) == csd {
+                probed = true;
+                break;
+            }
+        }
+        assert!(probed, "cooldown expiry must make the engine a probe candidate");
+
+        // a failed probe re-quarantines immediately (no fresh streak)
+        assert!(roster.note_failure(csd));
+        assert_eq!(roster.quarantine_events(), 2);
+        assert_ne!(roster.route(1), csd, "failed probe: back behind the fence");
+
+        // a successful probe reinstates it
+        let mut probe2 = false;
+        for _ in 0..2 * cfg.quarantine_cooldown {
+            if roster.route(1) == csd {
+                probe2 = true;
+                break;
+            }
+        }
+        assert!(probe2);
+        roster.note_ok(csd);
+        assert!(!roster.quarantined(csd));
+        assert!(!roster.any_quarantined());
+        assert_eq!(roster.route(1), csd, "reinstated engine serves again");
+    }
+
+    #[test]
+    fn fully_quarantined_roster_keeps_serving() {
+        let store = synth_store(82, ModelKind::Lenet);
+        let cfg = ServerConfig {
+            quarantine_after: 1,
+            quarantine_cooldown: 1000,
+            ..Default::default()
+        };
+        let roster = Roster::build(None, store, &cfg).unwrap();
+        for i in 0..roster.len() {
+            assert!(roster.note_failure(i), "quarantine_after=1: first failure fences");
+            assert!(roster.quarantined(i));
+        }
+        // routing around *everything* would mean serving nothing — the full
+        // roster stays in play instead
+        for n in [1usize, 8, 32] {
+            let i = roster.route(n);
+            assert!(i < roster.len());
+        }
+        // and a success anywhere starts reinstating
+        let i = roster.route(32);
+        roster.note_ok(i);
+        assert!(!roster.quarantined(i));
+    }
+
+    #[test]
     fn batch_tensor_copies_rows() {
         let (tx, _rx) = mpsc::channel();
         let jobs: Vec<Pending<Job>> = (0..2)
@@ -754,5 +1252,28 @@ mod tests {
         let p = batch_tensor(&jobs, 3, 2, 2, 1).unwrap();
         assert_eq!(p.shape(), &[3, 2, 2, 1]);
         assert_eq!(&p.data()[8..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn retry_after_scales_with_backlog() {
+        let q: BatchQueue<Job> = BatchQueue::bounded(4, Duration::from_millis(5), 64, None);
+        let m = Metrics::new();
+        // no EWMA yet: the batching window is the floor
+        assert_eq!(retry_after_ms(&q, &m), 5.0);
+        m.observe_ewma("infer_batch.ewma_ms", 8.0);
+        // empty queue still hints one batch worth
+        assert_eq!(retry_after_ms(&q, &m), 8.0);
+        let (tx, _rx) = mpsc::channel();
+        for id in 0..9 {
+            q.push(Job {
+                id,
+                pixels: Vec::new(),
+                enqueued: Instant::now(),
+                resp: tx.clone(),
+            })
+            .unwrap();
+        }
+        // 9 queued jobs at max_batch 4 = 3 batches to drain
+        assert_eq!(retry_after_ms(&q, &m), 24.0);
     }
 }

@@ -80,10 +80,13 @@ subcommands:
   serve         TCP inference server (JSON lines; dynamic batching;
                 --engine auto|pjrt|host|host-quant|host-csd
                 [--digits K: CSD partial products/weight, K >= 1; omit for exact]
-                [--policy batch-fill|latency|energy: Auto batch dispatch])
+                [--policy batch-fill|latency|energy: Auto batch dispatch]
+                [--queue-cap N: admission cap, 0 = 4x batch]
+                [--deadline-ms MS: shed jobs queued longer than this])
   client        synthetic load against a server (--port, --n)
   repro         regenerate a paper table/figure   (--exp table3|fig7|...|all)
-common flags: --artifacts DIR  --model lenet|convnet  --fast";
+common flags: --artifacts DIR  --model lenet|convnet  --fast
+chaos: PALLAS_FAULTS arms deterministic fault injection (see README)";
 
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = artifacts(args);
@@ -193,6 +196,17 @@ fn cmd_deploy_sim(args: &Args) -> Result<()> {
     let mut link_cfg = device.link;
     if let Some(ber) = args.get("ber") {
         link_cfg.ber = ber.parse().context("--ber")?;
+    }
+    // chaos harness: PALLAS_FAULTS="link.burst=ENTER:EXIT:BER" layers a
+    // Gilbert–Elliott burst profile over the device link, so the deploy
+    // pipeline's ARQ can be exercised under correlated (not i.i.d.) loss
+    qsq_edge::util::faults::arm_from_env()?;
+    if let Some(b) = qsq_edge::util::faults::link_burst() {
+        println!(
+            "link burst     : Gilbert–Elliott p_enter={} p_exit={} ber_bad={} (PALLAS_FAULTS)",
+            b.p_enter, b.p_exit, b.ber_bad
+        );
+        link_cfg.burst = Some(b);
     }
     // joint two-dial deployment: the profile's memory budget sizes (phi, N),
     // its MACs-derived energy budget sizes the CSD digit dial, and the model
@@ -328,6 +342,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bind: format!("127.0.0.1:{}", args.get_usize("port", 9000)),
         engine,
         policy,
+        // admission control: 0 derives the cap (4x batch); jobs queued past
+        // the deadline are shed with a terminal `deadline exceeded` reply
+        queue_cap: args.get_usize("queue-cap", 0),
+        deadline: std::time::Duration::from_millis(args.get_u64("deadline-ms", 2000)),
+        ..Default::default()
     };
     let srv = server::Server::start(dir, cfg)?;
     println!("serving on 127.0.0.1:{} (ctrl-c to stop)", srv.port);

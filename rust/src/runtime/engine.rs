@@ -348,6 +348,58 @@ impl Engine for PjrtEngine {
     }
 }
 
+/// Chaos wrapper around any [`Engine`]: before each forward it consults the
+/// armed fault plan ([`crate::util::faults::engine_action`], keyed by the
+/// wrapped engine's name) and injects the decided failure — an error return,
+/// a panic (exercising the supervised worker), or a latency spike — else
+/// delegates untouched.  Identity (`kind`/`name`/`model`/`report`) passes
+/// straight through, so metrics keys, dispatch policies, and quarantine all
+/// see the real engine.
+///
+/// Only the roster build constructs this, and only when fault injection is
+/// armed at that moment — the disarmed serving path never allocates or
+/// checks anything fault-related per forward.
+pub struct FaultInjector {
+    inner: Box<dyn Engine>,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Box<dyn Engine>) -> FaultInjector {
+        FaultInjector { inner }
+    }
+}
+
+impl Engine for FaultInjector {
+    fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        use crate::util::faults::{engine_action, Action};
+        match engine_action(self.inner.name()) {
+            Some(Action::Error) => bail!("injected fault: {} errored", self.inner.name()),
+            Some(Action::Panic) => panic!("injected fault: {} panicked", self.inner.name()),
+            Some(Action::Delay(d)) => {
+                std::thread::sleep(d);
+                self.inner.forward_with(x, scratch)
+            }
+            None => self.inner.forward_with(x, scratch),
+        }
+    }
+
+    fn kind(&self) -> EngineKind {
+        self.inner.kind()
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn model(&self) -> ModelKind {
+        self.inner.model()
+    }
+
+    fn report(&self) -> EngineReport {
+        self.inner.report()
+    }
+}
+
 /// The batch-size crossover of artifact dispatch: running a padded artifact
 /// costs the full compiled batch regardless of occupancy, and the compiled
 /// kernels are roughly a few times faster per row than the host engines —
@@ -607,6 +659,24 @@ mod tests {
         assert!(PolicySelect::from_name("round-robin").is_err());
         assert_eq!(PolicySelect::default(), PolicySelect::BatchFill);
         assert_eq!(PolicySelect::EnergyBudget.build().name(), "energy-budget");
+    }
+
+    #[test]
+    fn fault_injector_is_transparent_when_disarmed() {
+        // identity and forwards delegate untouched (fault injection is
+        // never armed inside unit tests — arming is process-global; the
+        // armed behavior is covered by the test_chaos integration binary)
+        let store = crate::data::synth_store(91, crate::model::meta::ModelKind::Lenet);
+        let inner: Box<dyn Engine> = Box::new(crate::runtime::host::F32Engine::new(store));
+        let wrapped = FaultInjector::new(inner);
+        assert_eq!(wrapped.kind(), EngineKind::F32);
+        assert_eq!(wrapped.name(), "host-f32");
+        assert_eq!(wrapped.model(), crate::model::meta::ModelKind::Lenet);
+        let mut scratch = Scratch::new();
+        let x = Tensor::new(vec![2, 28, 28, 1], vec![0.1; 2 * 28 * 28]).unwrap();
+        let y = wrapped.forward_with(&x, &mut scratch).unwrap();
+        assert_eq!(y.shape(), &[2, 10]);
+        assert_eq!(wrapped.report().forwards, 1, "report reads through the wrapper");
     }
 
     #[test]

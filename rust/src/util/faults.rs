@@ -1,0 +1,317 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Edge deployments fail in ways unit tests rarely exercise: an engine
+//! starts erroring, a worker panics mid-batch, a kernel stalls, the queue
+//! backs up.  This module is the single switchboard those failures are
+//! *injected* through, so the chaos suite (`rust/tests/test_chaos.rs`) can
+//! drive the real server through overload + crashes and assert the
+//! fault-tolerance layer (bounded admission, engine quarantine, supervised
+//! worker) actually degrades gracefully.
+//!
+//! Three properties the design guarantees:
+//!
+//! * **Zero cost when disarmed.**  Every hook fast-paths on one relaxed
+//!   atomic load ([`armed`]); with `PALLAS_FAULTS` unset nothing else runs —
+//!   no RNG, no lock, no allocation — and the engine-level faults are not
+//!   even wired in (the server only wraps roster engines in
+//!   [`crate::runtime::engine::FaultInjector`] when armed at build time).
+//! * **Deterministic.**  All decisions come from one seeded [`Rng`]
+//!   consumed behind a mutex.  The serving hooks are consulted only from
+//!   the single inference-worker thread (engine faults per forward, queue
+//!   stalls per pop), so a fixed request sequence yields the same fault
+//!   sequence on every run — including under `PALLAS_POOL_THREADS=1` vs
+//!   the default pool, which only changes row-band parallelism *inside* a
+//!   bitwise-deterministic kernel call.  The CI chaos gate runs the suite
+//!   under both pool configurations with the same seed and the outcomes
+//!   must match.
+//! * **Armed explicitly.**  Either programmatically ([`arm`]/[`disarm`],
+//!   what the tests do) or via the `PALLAS_FAULTS` environment variable
+//!   ([`arm_from_env`], called once at server startup).
+//!
+//! ## `PALLAS_FAULTS` grammar
+//!
+//! Semicolon-separated `key=value` clauses:
+//!
+//! ```text
+//! PALLAS_FAULTS="seed=7;engine.error=host-csd:0.5;engine.panic=*:0.05;
+//!                engine.delay=host-f32:0.2:25;queue.stall=0.1:10;
+//!                link.burst=0.01:0.25:0.02"
+//! ```
+//!
+//! | clause | value | meaning |
+//! |---|---|---|
+//! | `seed` | `u64` | RNG seed (default 0) |
+//! | `engine.error` | `NAME:PROB` | `forward_with` on engine `NAME` returns an error with probability `PROB` (`NAME` may be `*`) |
+//! | `engine.panic` | `NAME:PROB` | `forward_with` panics instead |
+//! | `engine.delay` | `NAME:PROB:MS` | a latency spike of `MS` milliseconds before the forward |
+//! | `queue.stall` | `PROB:MS` | the batch pop stalls `MS` milliseconds (simulates a wedged consumer) |
+//! | `link.burst` | `ENTER:EXIT:BER` | arms a Gilbert–Elliott burst profile ([`crate::channel::link::BurstConfig`]) that `deploy-sim` applies to its link |
+//!
+//! Each clause kind may repeat (e.g. different probabilities per engine).
+//! Probabilities are validated to `[0, 1]`; a malformed spec fails server
+//! startup loudly rather than silently running fault-free.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// What an armed engine hook decided for one forward.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Action {
+    /// Return an error from `forward_with`.
+    Error,
+    /// Panic inside `forward_with` (exercises the supervised worker).
+    Panic,
+    /// Sleep this long, then forward normally (latency spike).
+    Delay(Duration),
+}
+
+/// A parsed fault specification (see the module docs for the grammar).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the decision RNG.
+    pub seed: u64,
+    /// `(engine name or "*", probability)` — injected `forward_with` errors.
+    pub engine_error: Vec<(String, f64)>,
+    /// `(engine name or "*", probability)` — injected panics.
+    pub engine_panic: Vec<(String, f64)>,
+    /// `(engine name or "*", probability, millis)` — latency spikes.
+    pub engine_delay: Vec<(String, f64, u64)>,
+    /// `(probability, millis)` — batch-pop stalls.
+    pub queue_stall: Option<(f64, u64)>,
+    /// `(p_enter, p_exit, ber_bad)` — Gilbert–Elliott burst profile for the
+    /// channel link (consumed by `deploy-sim`, not by the serving hooks).
+    pub link_burst: Option<(f64, f64, f64)>,
+}
+
+fn parse_prob(s: &str) -> Result<f64> {
+    let p: f64 = s.parse().with_context(|| format!("bad probability {s:?}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("probability {p} outside [0, 1]");
+    }
+    Ok(p)
+}
+
+impl FaultPlan {
+    /// Parse the `PALLAS_FAULTS` grammar.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (key, val) = clause
+                .split_once('=')
+                .with_context(|| format!("clause {clause:?} is not key=value"))?;
+            let parts: Vec<&str> = val.split(':').collect();
+            match (key.trim(), parts.as_slice()) {
+                ("seed", [s]) => {
+                    plan.seed = s.parse().with_context(|| format!("bad seed {s:?}"))?
+                }
+                ("engine.error", [name, p]) => {
+                    plan.engine_error.push((name.to_string(), parse_prob(p)?))
+                }
+                ("engine.panic", [name, p]) => {
+                    plan.engine_panic.push((name.to_string(), parse_prob(p)?))
+                }
+                ("engine.delay", [name, p, ms]) => plan.engine_delay.push((
+                    name.to_string(),
+                    parse_prob(p)?,
+                    ms.parse().with_context(|| format!("bad delay ms {ms:?}"))?,
+                )),
+                ("queue.stall", [p, ms]) => {
+                    plan.queue_stall = Some((
+                        parse_prob(p)?,
+                        ms.parse().with_context(|| format!("bad stall ms {ms:?}"))?,
+                    ))
+                }
+                ("link.burst", [enter, exit, ber]) => {
+                    plan.link_burst = Some((
+                        parse_prob(enter)?,
+                        parse_prob(exit)?,
+                        parse_prob(ber)?,
+                    ))
+                }
+                (k, _) => bail!("bad fault clause {k:?} = {val:?} (see util::faults docs)"),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Fast-path switch: every hook checks this before touching the plan state.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+struct Active {
+    plan: FaultPlan,
+    rng: Rng,
+}
+
+static STATE: Mutex<Option<Active>> = Mutex::new(None);
+
+/// Whether fault injection is currently armed (one relaxed atomic load —
+/// this is the entire hot-path cost of the fault layer when disarmed).
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm fault injection with `plan` (replaces any previous plan and resets
+/// the decision RNG to `plan.seed` — re-arming the same plan replays the
+/// same decision sequence).
+pub fn arm(plan: FaultPlan) {
+    let rng = Rng::new(plan.seed);
+    *STATE.lock().unwrap() = Some(Active { plan, rng });
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm fault injection; all hooks revert to no-ops.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    *STATE.lock().unwrap() = None;
+}
+
+/// Arm from the `PALLAS_FAULTS` environment variable if it is set and
+/// nothing is armed yet.  Returns whether injection is armed afterwards;
+/// a malformed spec is a hard error (failing loudly beats running a chaos
+/// scenario fault-free).
+pub fn arm_from_env() -> Result<bool> {
+    if armed() {
+        return Ok(true);
+    }
+    match std::env::var("PALLAS_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            let plan = FaultPlan::parse(&spec)
+                .with_context(|| format!("parsing PALLAS_FAULTS={spec:?}"))?;
+            arm(plan);
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+fn name_matches(pat: &str, engine: &str) -> bool {
+    pat == "*" || pat == engine
+}
+
+/// The fault decision for one forward on `engine` (`None` = run normally).
+/// Severity order: panic, then error, then delay — the first rule that
+/// fires wins.  Only the inference worker thread calls this, so the
+/// decision stream is a deterministic function of the seed and the
+/// request sequence.
+pub fn engine_action(engine: &str) -> Option<Action> {
+    if !armed() {
+        return None;
+    }
+    let mut g = STATE.lock().unwrap();
+    let Active { plan, rng } = g.as_mut()?;
+    for (pat, p) in &plan.engine_panic {
+        if name_matches(pat, engine) && rng.chance(*p) {
+            return Some(Action::Panic);
+        }
+    }
+    for (pat, p) in &plan.engine_error {
+        if name_matches(pat, engine) && rng.chance(*p) {
+            return Some(Action::Error);
+        }
+    }
+    for (pat, p, ms) in &plan.engine_delay {
+        if name_matches(pat, engine) && rng.chance(*p) {
+            return Some(Action::Delay(Duration::from_millis(*ms)));
+        }
+    }
+    None
+}
+
+/// An injected batch-pop stall, if one fires (`None` = pop normally).
+pub fn queue_stall() -> Option<Duration> {
+    if !armed() {
+        return None;
+    }
+    let mut g = STATE.lock().unwrap();
+    let Active { plan, rng } = g.as_mut()?;
+    let (p, ms) = plan.queue_stall?;
+    rng.chance(p).then(|| Duration::from_millis(ms))
+}
+
+/// The armed Gilbert–Elliott burst profile for the channel link, if any.
+/// Unlike the serving hooks this is configuration, not a per-call decision
+/// (the link has its own seeded RNG), so it draws nothing from the fault
+/// RNG.
+pub fn link_burst() -> Option<crate::channel::link::BurstConfig> {
+    if !armed() {
+        return None;
+    }
+    let g = STATE.lock().unwrap();
+    let (p_enter, p_exit, ber_bad) = g.as_ref()?.plan.link_burst?;
+    Some(crate::channel::link::BurstConfig { p_enter, p_exit, ber_bad })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests here only exercise the *parser* and plan equality — they
+    // never arm the global switchboard, because `cargo test` runs tests
+    // concurrently in one process and arming would leak faults into every
+    // other suite.  Arm/disarm behavior is covered by the dedicated
+    // `test_chaos` integration binary, which serializes access.
+
+    #[test]
+    fn parses_full_grammar() {
+        let plan = FaultPlan::parse(
+            "seed=42;engine.error=host-csd:0.5;engine.panic=*:0.05;\
+             engine.delay=host-f32:0.2:25;queue.stall=0.1:10;link.burst=0.01:0.25:0.02",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.engine_error, vec![("host-csd".to_string(), 0.5)]);
+        assert_eq!(plan.engine_panic, vec![("*".to_string(), 0.05)]);
+        assert_eq!(plan.engine_delay, vec![("host-f32".to_string(), 0.2, 25)]);
+        assert_eq!(plan.queue_stall, Some((0.1, 10)));
+        assert_eq!(plan.link_burst, Some((0.01, 0.25, 0.02)));
+    }
+
+    #[test]
+    fn clauses_may_repeat_and_whitespace_is_tolerated() {
+        let plan =
+            FaultPlan::parse(" engine.error=host-csd:1.0 ; engine.error=host-qgemm:0.5 ;;")
+                .unwrap();
+        assert_eq!(plan.engine_error.len(), 2);
+        assert_eq!(plan.seed, 0, "seed defaults to 0");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "engine.error=host-csd",      // missing probability
+            "engine.error=host-csd:1.5",  // probability out of range
+            "engine.delay=host-f32:0.2",  // missing millis
+            "queue.stall=0.1:abc",        // non-numeric millis
+            "seed=notanumber",
+            "unknown.site=1:0.5",
+            "noequals",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_the_empty_plan() {
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+    }
+
+    #[test]
+    fn disarmed_hooks_are_noops() {
+        // nothing armed in this process (see module-test note above)
+        assert!(!armed());
+        assert_eq!(engine_action("host-csd"), None);
+        assert_eq!(queue_stall(), None);
+        assert!(link_burst().is_none());
+    }
+}

@@ -3,6 +3,7 @@
 //! proptest, log) are implemented here instead (DESIGN.md §9).
 
 pub mod cli;
+pub mod faults;
 pub mod json;
 pub mod log;
 pub mod npy;

@@ -1,0 +1,489 @@
+//! Chaos suite: the fault-tolerance layer under deterministic fault
+//! injection ([`qsq_edge::util::faults`]).
+//!
+//! Every test here arms the process-global fault switchboard, so the whole
+//! binary serializes on one lock and each test disarms before releasing it —
+//! faults must never leak into a neighbouring test.  All servers run over
+//! synthetic weight stores (`Server::start_with_store`), so the suite needs
+//! no artifacts on disk.
+//!
+//! CI runs this binary twice — default kernel pool and
+//! `PALLAS_POOL_THREADS=1` — as a determinism gate: every assertion below is
+//! a pure function of the fault seed and the request sequence (fault
+//! decisions are drawn on the single inference-worker thread; quarantine
+//! cooldowns count route ticks, not wall time), so the outcomes must be
+//! identical under both pool configurations.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use qsq_edge::coordinator::server::{Client, Roster, Server, ServerConfig};
+use qsq_edge::data::{synth_store, RequestGen};
+use qsq_edge::kernels::Scratch;
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::runtime::engine::PolicySelect;
+use qsq_edge::tensor::Tensor;
+use qsq_edge::util::faults::{self, FaultPlan};
+use qsq_edge::util::json::Value;
+
+/// Arming is process-global: serialize every test and start from disarmed.
+static CHAOS: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = CHAOS.lock().unwrap_or_else(|e| e.into_inner());
+    faults::disarm();
+    g
+}
+
+fn arm(spec: &str) {
+    faults::arm(FaultPlan::parse(spec).unwrap());
+}
+
+/// Classify a terminal reply.
+fn kind_of(reply: &Value) -> &'static str {
+    if reply.get("pred").as_f64().is_some() {
+        return "pred";
+    }
+    match reply.get("error").as_str() {
+        Some("overloaded") => "overloaded",
+        Some("deadline exceeded") => "deadline",
+        Some("server shutting down") => "shutdown",
+        Some("inference timeout") => "timeout",
+        Some(_) => "engine-error",
+        None => "malformed",
+    }
+}
+
+fn one_image(seed: u64) -> Tensor {
+    RequestGen::new(ModelKind::Lenet, seed).next().0
+}
+
+/// Serve `n` sequential requests from one client; returns reply kinds.
+fn drive(port: u16, gen_seed: u64, n: usize) -> Vec<&'static str> {
+    let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+    let mut gen = RequestGen::new(ModelKind::Lenet, gen_seed);
+    (0..n)
+        .map(|i| {
+            let (img, _) = gen.next();
+            kind_of(&c.infer(i as u64, img.data()).unwrap())
+        })
+        .collect()
+}
+
+/// Sequential predictions for a fixed input set (None for error replies).
+fn preds_for(port: u16, gen_seed: u64, n: usize) -> Vec<Option<u64>> {
+    let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+    let mut gen = RequestGen::new(ModelKind::Lenet, gen_seed);
+    (0..n)
+        .map(|i| {
+            let (img, _) = gen.next();
+            let r = c.infer(i as u64, img.data()).unwrap();
+            r.get("pred").as_f64().map(|p| p as u64)
+        })
+        .collect()
+}
+
+/// A deterministic failure fence: engine errors on host-qgemm at p=1.0 fail
+/// every batch it serves until the roster quarantines it and the preference
+/// order degrades singleton traffic to the exact f32 engine.
+#[test]
+fn quarantine_reroutes_to_a_surviving_engine() {
+    let _g = guard();
+    arm("seed=5;engine.error=host-qgemm:1.0");
+    let cfg = ServerConfig {
+        quarantine_after: 2,
+        quarantine_cooldown: 100_000, // no probes inside this test
+        ..Default::default()
+    };
+    let srv = Server::start_with_store(synth_store(41, ModelKind::Lenet), cfg).unwrap();
+    let kinds = drive(srv.port, 7, 10);
+
+    // singletons route to host-qgemm; its first two batches fail, the
+    // quarantine fence drops, and every later request is served by f32
+    assert_eq!(&kinds[..2], &["engine-error", "engine-error"], "{kinds:?}");
+    assert!(
+        kinds[2..].iter().all(|k| *k == "pred"),
+        "post-quarantine requests must be served: {kinds:?}"
+    );
+    assert_eq!(srv.metrics.counter("engine_failures"), 2);
+    assert_eq!(srv.metrics.counter("quarantines"), 1);
+    assert_eq!(srv.metrics.counter("worker_panics"), 0);
+    assert_eq!(srv.metrics.gauge("engine.host-qgemm.quarantined"), Some(1.0));
+    assert_eq!(srv.metrics.gauge("engine.host-f32.quarantined"), Some(0.0));
+    assert!(srv.metrics.counter("dispatch_host_f32") >= 8);
+    srv.stop();
+    faults::disarm();
+}
+
+/// Injected panics fail only the in-flight batch: the supervised worker
+/// keeps the roster, quarantines the panicking engine, and — once disarmed
+/// and reinstated — serves bit-identically to a fault-free server over the
+/// same weights and inputs.
+#[test]
+fn panics_fail_one_batch_and_recovery_is_bitwise() {
+    let _g = guard();
+    const STORE_SEED: u64 = 42;
+    const INPUT_SEED: u64 = 9;
+    const N: usize = 12;
+
+    // fault-free baseline over the same store/inputs
+    let base = Server::start_with_store(
+        synth_store(STORE_SEED, ModelKind::Lenet),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let baseline = preds_for(base.port, INPUT_SEED, N);
+    base.stop();
+    assert!(baseline.iter().all(|p| p.is_some()));
+
+    arm("seed=6;engine.panic=host-qgemm:1.0");
+    // cooldown 30 route ticks: long enough that no probe fires during the
+    // 8-request armed drive (which would panic a third time), short enough
+    // that the disarmed warm-up loop below reaches the probe
+    let cfg = ServerConfig {
+        quarantine_after: 2,
+        quarantine_cooldown: 30,
+        ..Default::default()
+    };
+    let srv = Server::start_with_store(synth_store(STORE_SEED, ModelKind::Lenet), cfg).unwrap();
+
+    // chaos phase: the first two singleton batches panic, then quarantine
+    // degrades traffic to f32 and serving continues
+    let kinds = drive(srv.port, 77, 8);
+    assert_eq!(&kinds[..2], &["engine-error", "engine-error"], "{kinds:?}");
+    assert!(kinds[2..].iter().all(|k| *k == "pred"), "{kinds:?}");
+    assert_eq!(srv.metrics.counter("worker_panics"), 2);
+    assert!(srv.metrics.counter("quarantines") >= 1);
+
+    // disarm and warm up until the probe reinstates host-qgemm
+    faults::disarm();
+    let mut c = Client::connect(&format!("127.0.0.1:{}", srv.port)).unwrap();
+    let img = one_image(1234);
+    let mut reinstated = false;
+    for i in 0..50 {
+        let r = c.infer(1000 + i, img.data()).unwrap();
+        assert_eq!(kind_of(&r), "pred", "disarmed serving must be clean");
+        if srv.metrics.gauge("engine.host-qgemm.quarantined") == Some(0.0) {
+            reinstated = true;
+            break;
+        }
+    }
+    assert!(reinstated, "cooldown probe must reinstate the engine");
+
+    // post-chaos: bitwise-identical predictions to the fault-free baseline
+    let recovered = preds_for(srv.port, INPUT_SEED, N);
+    assert_eq!(recovered, baseline, "post-chaos forwards must match fault-free");
+    srv.stop();
+    faults::disarm();
+}
+
+/// Bounded admission: with the worker wedged by injected pop stalls, a tiny
+/// queue fills and pushes shed with `overloaded` + a positive
+/// `retry_after_ms`, while accepted requests still complete.
+#[test]
+fn overload_sheds_with_retry_after_hint() {
+    let _g = guard();
+    arm("seed=8;queue.stall=1.0:40");
+    let cfg = ServerConfig {
+        batch: 4,
+        queue_cap: 4,
+        max_delay: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let srv = Server::start_with_store(synth_store(43, ModelKind::Lenet), cfg).unwrap();
+    let port = srv.port;
+
+    let threads: Vec<_> = (0..12)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+                let mut gen = RequestGen::new(ModelKind::Lenet, 100 + t);
+                let (mut preds, mut shed) = (0u64, 0u64);
+                for i in 0..6 {
+                    let (img, _) = gen.next();
+                    let r = c.infer(t * 100 + i, img.data()).unwrap();
+                    match kind_of(&r) {
+                        "pred" => preds += 1,
+                        "overloaded" => {
+                            let hint = r.get("retry_after_ms").as_f64().unwrap();
+                            assert!(hint >= 1.0, "retry hint must be positive: {hint}");
+                            shed += 1;
+                        }
+                        other => panic!("unexpected reply kind {other}: {}", r.to_json()),
+                    }
+                }
+                (preds, shed)
+            })
+        })
+        .collect();
+    let (mut preds, mut shed) = (0, 0);
+    for t in threads {
+        let (p, s) = t.join().unwrap();
+        preds += p;
+        shed += s;
+    }
+    assert_eq!(preds + shed, 72, "every request got a terminal reply");
+    assert!(shed > 0, "12 clients into a cap-4 queue must shed");
+    assert!(preds > 0, "admitted requests must still be served");
+    assert_eq!(srv.metrics.counter("shed_overload"), shed);
+    assert_eq!(srv.metrics.counter("requests"), preds);
+    srv.stop();
+    faults::disarm();
+}
+
+/// Deadline shedding at the server level: jobs that sat queued past the
+/// deadline while the worker was wedged get a prompt `deadline exceeded`
+/// reply instead of burning a kernel slot.
+#[test]
+fn stale_jobs_are_shed_at_the_deadline() {
+    let _g = guard();
+    arm("seed=9;queue.stall=1.0:150");
+    let cfg = ServerConfig {
+        deadline: Duration::from_millis(50),
+        max_delay: Duration::from_millis(2),
+        ..Default::default()
+    };
+    let srv = Server::start_with_store(synth_store(44, ModelKind::Lenet), cfg).unwrap();
+    let port = srv.port;
+
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let kinds = drive(port, 200 + t, 3);
+                assert!(
+                    kinds.iter().all(|k| *k == "pred" || *k == "deadline"),
+                    "only served or deadline-shed: {kinds:?}"
+                );
+                kinds.iter().filter(|k| **k == "deadline").count() as u64
+            })
+        })
+        .collect();
+    let shed: u64 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    assert!(shed > 0, "a 150ms-stalled worker must shed 50ms-deadline jobs");
+    assert_eq!(srv.metrics.counter("shed_deadline"), shed);
+    srv.stop();
+    faults::disarm();
+}
+
+/// Graceful shutdown: requests still queued when `stop()` lands get an
+/// explicit `server shutting down` reply promptly — no client ever waits
+/// out its reply timeout against a dropped sender.
+#[test]
+fn shutdown_replies_to_queued_jobs_promptly() {
+    let _g = guard();
+    arm("seed=10;queue.stall=1.0:300");
+    let cfg = ServerConfig {
+        max_delay: Duration::from_millis(2),
+        ..Default::default()
+    };
+    let srv = Server::start_with_store(synth_store(45, ModelKind::Lenet), cfg).unwrap();
+    let port = srv.port;
+
+    let clients: Vec<_> = (0..5)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+                let img = one_image(300 + t);
+                let t0 = Instant::now();
+                let r = c.infer(t, img.data()).unwrap();
+                (kind_of(&r), t0.elapsed())
+            })
+        })
+        .collect();
+    // let the requests reach the queue (the worker is stalled), then stop
+    std::thread::sleep(Duration::from_millis(100));
+    srv.stop();
+
+    let mut shutdown_replies = 0;
+    for c in clients {
+        let (kind, waited) = c.join().unwrap();
+        assert!(
+            kind == "pred" || kind == "shutdown",
+            "terminal reply required, got {kind}"
+        );
+        assert!(
+            waited < Duration::from_secs(5),
+            "reply after stop() took {waited:?} — the old path hung 30s"
+        );
+        if kind == "shutdown" {
+            shutdown_replies += 1;
+        }
+    }
+    assert!(shutdown_replies > 0, "the stalled worker left a backlog to drain");
+    faults::disarm();
+}
+
+/// The full storm — overload, injected errors, panics, latency spikes, and
+/// pop stalls at once.  Every request gets a terminal reply within the
+/// configured reply window, the shed/quarantine metrics move, and after
+/// disarming the same server serves bit-identically to a fault-free run.
+#[test]
+fn mixed_chaos_yields_terminal_replies_then_bitwise_recovery() {
+    let _g = guard();
+    const STORE_SEED: u64 = 46;
+    const INPUT_SEED: u64 = 11;
+    const N: usize = 8;
+
+    let base = Server::start_with_store(
+        synth_store(STORE_SEED, ModelKind::Lenet),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let baseline = preds_for(base.port, INPUT_SEED, N);
+    base.stop();
+
+    arm(
+        "seed=12;engine.error=*:0.10;engine.panic=*:0.05;engine.delay=*:0.10:5;\
+         queue.stall=0.3:10",
+    );
+    let cfg = ServerConfig {
+        batch: 4,
+        queue_cap: 8,
+        max_delay: Duration::from_millis(2),
+        deadline: Duration::from_millis(300),
+        quarantine_after: 2,
+        quarantine_cooldown: 8,
+        ..Default::default()
+    };
+    let reply_window = cfg.reply_timeout() + Duration::from_secs(2);
+    let srv = Server::start_with_store(synth_store(STORE_SEED, ModelKind::Lenet), cfg).unwrap();
+    let port = srv.port;
+
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+                let mut gen = RequestGen::new(ModelKind::Lenet, 400 + t);
+                let mut counts = std::collections::BTreeMap::new();
+                for i in 0..20u64 {
+                    let (img, _) = gen.next();
+                    let t0 = Instant::now();
+                    let r = c.infer(t * 1000 + i, img.data()).unwrap();
+                    assert!(
+                        t0.elapsed() < reply_window,
+                        "reply exceeded the bounded window: {:?}",
+                        t0.elapsed()
+                    );
+                    *counts.entry(kind_of(&r)).or_insert(0u64) += 1;
+                }
+                counts
+            })
+        })
+        .collect();
+    let mut total = std::collections::BTreeMap::new();
+    for t in threads {
+        for (k, v) in t.join().unwrap() {
+            *total.entry(k).or_insert(0) += v;
+        }
+    }
+    assert!(!total.contains_key("malformed"), "{total:?}");
+    assert_eq!(total.values().sum::<u64>(), 160, "all requests terminal: {total:?}");
+    assert!(total.get("pred").copied().unwrap_or(0) > 0, "{total:?}");
+    let m = &srv.metrics;
+    assert!(
+        m.counter("engine_failures") + m.counter("worker_panics") > 0,
+        "the storm must have hit some batches"
+    );
+
+    // calm: disarm, then warm up until host-qgemm — the engine singleton
+    // traffic routes to, i.e. the one the recovery comparison exercises —
+    // is reinstated (engines that win no routes are never probed, by
+    // design: quarantine only gates engines traffic would actually reach)
+    faults::disarm();
+    let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+    let img = one_image(5000);
+    let mut calm = false;
+    for i in 0..100 {
+        let r = c.infer(9000 + i, img.data()).unwrap();
+        assert_eq!(kind_of(&r), "pred", "disarmed serving must be clean");
+        if m.gauge("engine.host-qgemm.quarantined") != Some(1.0) {
+            calm = true;
+            break;
+        }
+    }
+    assert!(calm, "the serving engine must reinstate after the storm");
+    let recovered = preds_for(port, INPUT_SEED, N);
+    assert_eq!(recovered, baseline, "post-chaos forwards must match fault-free");
+    srv.stop();
+    faults::disarm();
+}
+
+/// The CI determinism gate's foundation: with a fixed seed, the exact
+/// sequence of (routed engine, outcome) over a fixed request stream is
+/// reproducible — re-arming the same plan replays the same decisions, and
+/// nothing in the path depends on pool parallelism or wall time.
+#[test]
+fn fault_stream_is_deterministic_for_a_fixed_seed() {
+    let _g = guard();
+    let spec = "seed=1234;engine.error=*:0.35;engine.delay=*:0.1:1";
+
+    let run = || {
+        arm(spec);
+        let cfg = ServerConfig {
+            policy: PolicySelect::EnergyBudget,
+            quarantine_after: 2,
+            quarantine_cooldown: 5,
+            ..Default::default()
+        };
+        let roster = Roster::build(None, synth_store(55, ModelKind::Lenet), &cfg).unwrap();
+        let mut scratch = Scratch::new();
+        let mut pix = qsq_edge::util::rng::Rng::new(99);
+        let mut seq = Vec::new();
+        for i in 0..120usize {
+            let n = 1 + i % 4; // fixed batch-size pattern
+            let data: Vec<f32> = (0..n * 28 * 28).map(|_| pix.f32()).collect();
+            let x = Tensor::new(vec![n, 28, 28, 1], data).unwrap();
+            let idx = roster.route(n);
+            let ok = roster.forward(idx, &x, &mut scratch).is_ok();
+            if ok {
+                roster.note_ok(idx);
+            } else {
+                roster.note_failure(idx);
+            }
+            seq.push((idx, ok));
+        }
+        let events = roster.quarantine_events();
+        faults::disarm();
+        (seq, events)
+    };
+
+    let (seq_a, events_a) = run();
+    let (seq_b, events_b) = run();
+    assert_eq!(seq_a, seq_b, "same seed, same request stream → same decisions");
+    assert_eq!(events_a, events_b);
+    assert!(
+        seq_a.iter().filter(|(_, ok)| !ok).count() >= 10,
+        "p=0.35 over 120 forwards must inject a healthy error count"
+    );
+    assert!(events_a >= 1, "consecutive errors must have quarantined at least once");
+    assert!(
+        seq_a.iter().any(|(_, ok)| *ok),
+        "most forwards still succeed under p=0.35"
+    );
+}
+
+/// Arming is explicit and disarming is total: after `disarm`, the hooks are
+/// no-ops again and a freshly built roster carries no injector wrappers.
+#[test]
+fn disarm_restores_clean_serving() {
+    let _g = guard();
+    arm("seed=3;engine.error=*:1.0");
+    assert!(faults::armed());
+    assert!(faults::engine_action("host-f32").is_some());
+    faults::disarm();
+    assert!(!faults::armed());
+    assert_eq!(faults::engine_action("host-f32"), None);
+    assert_eq!(faults::queue_stall(), None);
+
+    // a server built disarmed serves every request cleanly
+    let srv = Server::start_with_store(
+        synth_store(47, ModelKind::Lenet),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let kinds = drive(srv.port, 13, 5);
+    assert!(kinds.iter().all(|k| *k == "pred"), "{kinds:?}");
+    assert_eq!(srv.metrics.counter("engine_failures"), 0);
+    assert_eq!(srv.metrics.counter("worker_panics"), 0);
+    srv.stop();
+}
