@@ -1,4 +1,4 @@
-//! End-to-end serving benchmark, three parts:
+//! End-to-end serving benchmark, four parts:
 //!
 //! * **Per-policy dispatch** (no artifacts needed): the `Auto` engine
 //!   roster over a synthetic store, timed per batch size under each
@@ -13,14 +13,22 @@
 //!   the two numbers that show bounded admission doing its job: sheds rise
 //!   with offered load while the served tail stays flat instead of growing
 //!   with queue depth.  Also merged into `BENCH_kernels.json`.
+//! * **Hot-swap latency** (no artifacts needed): a zero-downtime
+//!   `deploy_store` against a live server under closed-loop traffic —
+//!   transfer start → the first reply served by the new generation, and the
+//!   p99 of requests served *during* the swap window (the zero-downtime
+//!   claim as a number).  Also merged into `BENCH_kernels.json`.
 //! * **TCP + dynamic batching + PJRT** (needs `make artifacts`): the
 //!   system-level throughput/latency number the edge story rests on
 //!   (§Perf L3), measured as a client sees it.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use qsq_edge::bench::{run_bench, BenchResult};
 use qsq_edge::coordinator::server::{Client, Roster, Server, ServerConfig};
+use qsq_edge::coordinator::swap::SwapConfig;
 use qsq_edge::data::{synth_store, RequestGen};
 use qsq_edge::kernels::Scratch;
 use qsq_edge::model::meta::ModelKind;
@@ -76,7 +84,11 @@ fn merge_into_bench_kernels(entries: &[BenchResult]) {
     results.retain(|v| {
         v.get("name")
             .as_str()
-            .map(|n| !n.starts_with("dispatch ") && !n.starts_with("overload "))
+            .map(|n| {
+                !n.starts_with("dispatch ")
+                    && !n.starts_with("overload ")
+                    && !n.starts_with("swap ")
+            })
             .unwrap_or(true)
     });
     results.extend(entries.iter().map(|r| r.to_json()));
@@ -183,6 +195,97 @@ fn overload_sweep_entries() -> Vec<BenchResult> {
     out
 }
 
+/// Hot-swap a live server under closed-loop traffic and measure the two
+/// numbers the zero-downtime claim rests on: transfer start → the first
+/// reply served by the new generation, and the p99 of requests served
+/// *during* the swap window (a flat p99 means staging really happened off
+/// the serving thread).
+fn swap_latency_entries() -> Vec<BenchResult> {
+    println!("\n== hot model swap (synthetic store, clean link) ==");
+    let cfg = ServerConfig {
+        batch: 4,
+        max_delay: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let srv = Server::start_with_store(synth_store(5, ModelKind::Lenet), cfg).unwrap();
+    let port = srv.port;
+
+    // closed-loop traffic for the whole run; only latencies taken inside
+    // the swap window feed the served-p99 entry
+    let stop = Arc::new(AtomicBool::new(false));
+    let window = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..2u64)
+        .map(|t| {
+            let stop = stop.clone();
+            let window = window.clone();
+            std::thread::spawn(move || -> Vec<f64> {
+                let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+                let mut gen = RequestGen::new(ModelKind::Lenet, 700 + t);
+                let mut lat = Vec::new();
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let (img, _) = gen.next();
+                    let t0 = Instant::now();
+                    let r = c.infer(t * 100_000 + i, img.data()).unwrap();
+                    assert!(
+                        r.get("pred").as_f64().is_some(),
+                        "swap bench traffic must never drop: {}",
+                        r.to_json()
+                    );
+                    if window.load(Ordering::Relaxed) {
+                        lat.push(t0.elapsed().as_secs_f64());
+                    }
+                    i += 1;
+                }
+                lat
+            })
+        })
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(30));
+    window.store(true, Ordering::Relaxed);
+    let t0 = Instant::now();
+    let rep = srv
+        .deploy_store(&synth_store(6, ModelKind::Lenet), &SwapConfig::default())
+        .unwrap();
+    // transfer start → the first reply the new generation serves
+    let mut probe = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+    let mut pg = RequestGen::new(ModelKind::Lenet, 800);
+    let swap_latency_s = loop {
+        let (img, _) = pg.next();
+        let r = probe.infer(999_000, img.data()).unwrap();
+        if r.get("gen").as_f64() == Some(rep.generation as f64) {
+            break t0.elapsed().as_secs_f64();
+        }
+    };
+    std::thread::sleep(Duration::from_millis(30));
+    window.store(false, Ordering::Relaxed);
+    stop.store(true, Ordering::Relaxed);
+    let mut lat = Vec::new();
+    for h in handles {
+        lat.extend(h.join().unwrap());
+    }
+    srv.stop();
+
+    let p99_s = if lat.is_empty() { 0.0 } else { stats::percentile(&lat, 99.0) };
+    println!(
+        "swap latency (transfer start -> new-gen first reply): {:.2} ms \
+         ({} container bytes, {} frames)",
+        swap_latency_s * 1e3,
+        rep.container_bytes,
+        rep.transfer.frames
+    );
+    println!(
+        "served p99 during the swap window: {:.2} ms over {} requests",
+        p99_s * 1e3,
+        lat.len()
+    );
+    vec![
+        scalar_entry("swap latency", 1, swap_latency_s, 0.0),
+        scalar_entry("swap served-p99", lat.len(), p99_s, 0.0),
+    ]
+}
+
 fn drive(clients: usize, per_client: usize, delay: Duration) -> Option<(f64, Vec<f64>)> {
     let dir = artifacts_dir();
     if !dir.join("manifest.json").exists() {
@@ -218,6 +321,7 @@ fn drive(clients: usize, per_client: usize, delay: Duration) -> Option<(f64, Vec
 fn main() {
     let mut entries = policy_dispatch_entries();
     entries.extend(overload_sweep_entries());
+    entries.extend(swap_latency_entries());
     merge_into_bench_kernels(&entries);
 
     println!("\n== bench_serving_e2e (LeNet, batch-32 artifact) ==");

@@ -13,6 +13,8 @@
 //! The chaos harness arms it via `PALLAS_FAULTS=link.burst=ENTER:EXIT:BER`
 //! ([`crate::util::faults`]).
 
+use std::fmt;
+
 use anyhow::Result;
 
 use super::frame::{fragment, reassemble, Frame};
@@ -64,16 +66,56 @@ impl Default for LinkConfig {
 }
 
 /// What a transfer cost.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct TransferReport {
     pub payload_bytes: usize,
     pub wire_bytes: usize,
     pub frames: usize,
+    /// Frames that actually made it across (equals `frames` on success;
+    /// strictly fewer in the partial report of a [`TransferError`]).
+    pub frames_delivered: usize,
     pub retransmissions: u32,
     pub elapsed_s: f64,
     /// DRAM-interface energy equivalent of the payload (paper §IV.C metric).
+    /// Only priced on delivered payloads (0 in a partial report — the wasted
+    /// air time is `elapsed_s`/`wire_bytes`).
     pub transfer_energy_pj: f64,
 }
+
+/// Typed ARQ-exhaustion error: [`Link::transmit`] gave up because one frame
+/// exceeded [`LinkConfig::max_retries`].  Carries the partial
+/// [`TransferReport`] accumulated up to the abort — frames delivered, wire
+/// bytes burned, retransmissions, wasted air time — so a failed deploy is
+/// diagnosable instead of a bare message.  Recover it from an
+/// `anyhow::Error` with `err.downcast_ref::<TransferError>()` — context
+/// frames layered on top don't hide it.
+#[derive(Clone, Debug)]
+pub struct TransferError {
+    /// Sequence number of the frame that exhausted its retries.
+    pub frame: u32,
+    /// The retry cap that was exceeded.
+    pub max_retries: u32,
+    /// Everything the transfer cost before it was abandoned.
+    pub partial: TransferReport,
+}
+
+impl fmt::Display for TransferError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "frame {} exceeded {} retries ({}/{} frames delivered, \
+             {} retransmissions, {} wire bytes wasted)",
+            self.frame,
+            self.max_retries,
+            self.partial.frames_delivered,
+            self.partial.frames,
+            self.partial.retransmissions,
+            self.partial.wire_bytes,
+        )
+    }
+}
+
+impl std::error::Error for TransferError {}
 
 pub struct Link {
     pub cfg: LinkConfig,
@@ -172,18 +214,25 @@ impl Link {
                         tries += 1;
                         report.retransmissions += 1;
                         if tries > self.cfg.max_retries {
-                            anyhow::bail!(
-                                "frame {} exceeded {} retries (ber={})",
-                                f.seq,
-                                self.cfg.max_retries,
-                                self.cfg.ber
-                            );
+                            // hand back everything the doomed transfer cost:
+                            // the typed error keeps the partial report so a
+                            // failed deploy stays diagnosable
+                            report.frames_delivered = received.len();
+                            report.elapsed_s = self.cfg.latency_s
+                                + report.wire_bytes as f64 * 8.0 / self.cfg.bandwidth_bps
+                                + report.retransmissions as f64 * 2.0 * self.cfg.latency_s;
+                            return Err(anyhow::Error::new(TransferError {
+                                frame: f.seq,
+                                max_retries: self.cfg.max_retries,
+                                partial: report,
+                            }));
                         }
                     }
                 }
             }
         }
 
+        report.frames_delivered = received.len();
         report.elapsed_s = self.cfg.latency_s
             + report.wire_bytes as f64 * 8.0 / self.cfg.bandwidth_bps
             // one RTT per retransmission (stop-and-wait)
@@ -229,6 +278,49 @@ mod tests {
         let cfg = LinkConfig { ber: 0.05, max_retries: 3, ..Default::default() };
         let mut link = Link::new(cfg, 3);
         assert!(link.transmit(&payload(5_000)).is_err());
+    }
+
+    #[test]
+    fn exhaustion_error_carries_the_partial_report() {
+        // Gilbert–Elliott stuck in the bad state: p_enter = 1 flips to bad on
+        // the first byte and p_exit = 0 never leaves, so at ber_bad = 0.5
+        // every frame corrupts and the very first frame exhausts its retries
+        // regardless of the RNG walk — a deterministic exhaustion.
+        let cfg = LinkConfig {
+            burst: Some(BurstConfig { p_enter: 1.0, p_exit: 0.0, ber_bad: 0.5 }),
+            max_retries: 3,
+            ..Default::default()
+        };
+        let err = Link::new(cfg, 7).transmit(&payload(5_000)).unwrap_err();
+        let te = err
+            .downcast_ref::<TransferError>()
+            .expect("exhaustion must surface the typed TransferError");
+        assert_eq!(te.frame, 0, "the first frame already exhausts");
+        assert_eq!(te.max_retries, 3);
+        assert_eq!(te.partial.frames_delivered, 0);
+        assert_eq!(te.partial.frames, 5); // 5000 B / 1024 B payload
+        assert_eq!(te.partial.retransmissions, cfg.max_retries + 1);
+        assert!(te.partial.wire_bytes > 0, "wasted wire bytes must be priced");
+        assert!(te.partial.elapsed_s > 0.0, "wasted air time must be priced");
+        assert_eq!(te.partial.transfer_energy_pj, 0.0, "nothing was delivered");
+    }
+
+    #[test]
+    fn stuck_bad_burst_exhausts_identically_per_seed() {
+        let cfg = LinkConfig {
+            burst: Some(BurstConfig { p_enter: 1.0, p_exit: 0.0, ber_bad: 0.5 }),
+            max_retries: 5,
+            ..Default::default()
+        };
+        let data = payload(8_000);
+        let partial_of = |seed: u64| -> TransferReport {
+            let err = Link::new(cfg, seed).transmit(&data).unwrap_err();
+            err.downcast_ref::<TransferError>().expect("typed error").partial
+        };
+        assert_eq!(partial_of(13), partial_of(13), "same seed, same abort");
+        // a different seed corrupts different bits but the stuck-bad chain
+        // still dooms frame 0 after exactly max_retries + 1 sends
+        assert_eq!(partial_of(14).retransmissions, cfg.max_retries + 1);
     }
 
     #[test]

@@ -4,4 +4,4 @@
 pub mod frame;
 pub mod link;
 
-pub use link::{BurstConfig, Link, LinkConfig, TransferReport};
+pub use link::{BurstConfig, Link, LinkConfig, TransferError, TransferReport};

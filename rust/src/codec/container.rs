@@ -14,6 +14,14 @@
 //! Little-endian throughout.  Every tensor section carries its own CRC so a
 //! receiver behind a lossy link can pinpoint corruption (see
 //! [`crate::channel`]) and request selective retransmission.
+//!
+//! [`decode_model`] is the hot-swap path's first line of defense, so it is
+//! hardened against hostile bytes: each section is first walked by a
+//! bounds-only scan that validates every length field against the bytes
+//! actually present, then its CRC is checked (a mismatch names the offending
+//! tensor), and only a CRC-verified slice reaches the allocating parse.
+//! Truncated, bit-flipped, or garbage input yields an error — never a panic
+//! or an attacker-sized allocation (see `tests/test_codec_fuzz.rs`).
 
 use anyhow::{bail, Context, Result};
 
@@ -165,6 +173,34 @@ impl<'a> Cursor<'a> {
     }
 }
 
+/// Bounds-only walk of one tensor section starting at `c.i`: every length
+/// field is validated against the bytes actually present *before* anything
+/// is allocated, and the walk returns the raw name bytes for diagnostics.
+/// Running this scan (then the section CRC check) ahead of the real parse is
+/// what makes [`decode_model`] panic-free on arbitrary garbage — a corrupt
+/// scalar count of four billion must yield an error, not an allocation the
+/// size of the lie.
+fn scan_section<'a>(c: &mut Cursor<'a>) -> Result<&'a [u8]> {
+    let name_len = c.u8()? as usize;
+    let name = c.take(name_len)?;
+    let rank = c.u8()? as usize;
+    c.take(4 * rank)?; // dims
+    let _phi = c.u8()?;
+    let bits = c.u8()? as u32;
+    c.take(12)?; // group, gamma, delta
+    let n_scalars = c.u32()? as usize;
+    c.take(n_scalars.checked_mul(4).context("scalar count overflows")?)?;
+    let n_codes = c.u32()? as usize;
+    // a packed code costs at least one wire bit, so any count beyond 8x the
+    // remaining bytes is corrupt; bounding it here also keeps the
+    // packed-length arithmetic overflow-free on 32-bit targets
+    if n_codes > c.b.len().saturating_sub(c.i).saturating_mul(8) {
+        bail!("code count {n_codes} exceeds the container");
+    }
+    c.take(packed_len(n_codes, bits))?;
+    Ok(name)
+}
+
 /// Parse container bytes back into a model, verifying all CRCs.
 pub fn decode_model(bytes: &[u8]) -> Result<EncodedModel> {
     if bytes.len() < 11 {
@@ -172,9 +208,9 @@ pub fn decode_model(bytes: &[u8]) -> Result<EncodedModel> {
     }
     let (body, tail) = bytes.split_at(bytes.len() - 4);
     let total_crc = u32::from_le_bytes(tail.try_into().unwrap());
-    if crc32(body) != total_crc {
-        bail!("container total CRC mismatch");
-    }
+    // deferred to the end so a section-level CRC failure can name the
+    // offending tensor instead of drowning in the whole-container mismatch
+    let total_ok = crc32(body) == total_crc;
     let mut c = Cursor { b: body, i: 0 };
     if c.take(4)? != MAGIC {
         bail!("bad magic");
@@ -185,8 +221,24 @@ pub fn decode_model(bytes: &[u8]) -> Result<EncodedModel> {
     }
     let n_tensors = c.u8()? as usize;
     let mut tensors = Vec::with_capacity(n_tensors);
-    for _ in 0..n_tensors {
+    for sec_idx in 0..n_tensors {
         let sec_start = c.i;
+        // phase 1: bounds-only scan establishes the section's extent (and a
+        // best-effort name) without trusting a single length field
+        let mut scan = Cursor { b: body, i: sec_start };
+        let raw_name =
+            scan_section(&mut scan).with_context(|| format!("tensor section {sec_idx}"))?;
+        let sec_end = scan.i;
+        let stored = scan.u32().with_context(|| format!("tensor section {sec_idx}"))?;
+        // phase 2: the section CRC gates the allocating parse
+        if crc32(&body[sec_start..sec_end]) != stored {
+            bail!(
+                "tensor section {sec_idx} ({}): section CRC mismatch",
+                String::from_utf8_lossy(raw_name)
+            );
+        }
+        // phase 3: strict parse of the CRC-verified slice — every allocation
+        // below is bounded by the scan above
         let name_len = c.u8()? as usize;
         let name = String::from_utf8(c.take(name_len)?.to_vec()).context("tensor name")?;
         let rank = c.u8()? as usize;
@@ -213,11 +265,7 @@ pub fn decode_model(bytes: &[u8]) -> Result<EncodedModel> {
             .into_iter()
             .map(|w| from_wire(w.0, phi))
             .collect::<Result<Vec<Code>>>()?;
-        let sec_crc = crc32(&body[sec_start..c.i]);
-        let stored = c.u32()?;
-        if sec_crc != stored {
-            bail!("tensor {name}: section CRC mismatch");
-        }
+        c.u32()?; // section CRC — already verified in phase 2
         let (k, oc) = crate::quant::qsq::matrix_dims(&shape)?;
         if k * oc != n_codes || group == 0 || k % group != 0 || (k / group) * oc != n_scalars {
             bail!("tensor {name}: inconsistent geometry");
@@ -239,6 +287,9 @@ pub fn decode_model(bytes: &[u8]) -> Result<EncodedModel> {
     }
     if c.i != body.len() {
         bail!("trailing bytes in container");
+    }
+    if !total_ok {
+        bail!("container total CRC mismatch");
     }
     Ok(EncodedModel { tensors })
 }
@@ -324,6 +375,49 @@ mod tests {
         let bytes = encode_model(&m).unwrap();
         assert!(decode_model(&bytes[..bytes.len() - 10]).is_err());
         assert!(decode_model(&[]).is_err());
+    }
+
+    #[test]
+    fn section_crc_failure_names_the_tensor() {
+        let m = sample_model(7);
+        let bytes = encode_model(&m).unwrap();
+        // flip a bit inside the first section's payload (header is 7 bytes,
+        // the name sits at 8..11, the scalar/code payload starts after 42)
+        let mut bad = bytes.clone();
+        bad[40] ^= 0x04;
+        let msg = format!("{:#}", decode_model(&bad).unwrap_err());
+        assert!(msg.contains("section CRC mismatch"), "got: {msg}");
+        assert!(msg.contains("c2w"), "error must name the tensor, got: {msg}");
+    }
+
+    #[test]
+    fn hostile_scalar_count_errors_before_allocating() {
+        // hand-build a section lying about n_scalars with valid CRCs: the
+        // bounds scan must reject it without attempting the 16 GiB
+        // allocation the lie implies
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.push(1); // one tensor
+        let mut sec = Vec::new();
+        sec.push(1); // name_len
+        sec.push(b'x');
+        sec.push(2); // rank
+        put_u32(&mut sec, 4);
+        put_u32(&mut sec, 4);
+        sec.push(4); // phi
+        sec.push(3); // bits
+        put_u32(&mut sec, 4); // group
+        put_f32(&mut sec, 1.0); // gamma
+        put_f32(&mut sec, 0.5); // delta
+        put_u32(&mut sec, u32::MAX); // n_scalars: the lie
+        let sc = crc32(&sec);
+        body.extend_from_slice(&sec);
+        put_u32(&mut body, sc);
+        let total = crc32(&body);
+        put_u32(&mut body, total);
+        let msg = format!("{:#}", decode_model(&body).unwrap_err());
+        assert!(msg.contains("tensor section 0"), "got: {msg}");
     }
 
     #[test]

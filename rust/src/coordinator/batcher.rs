@@ -68,6 +68,10 @@ pub struct BatchQueue<T> {
 struct Inner<T> {
     queue: VecDeque<Pending<T>>,
     closed: bool,
+    /// One-shot wakeup flag set by [`BatchQueue::kick`]: the next
+    /// `pop_batch` returns (with an empty batch if nothing else is due) so
+    /// the consumer re-checks out-of-band state such as the hot-swap slot.
+    kicked: bool,
 }
 
 impl<T> BatchQueue<T> {
@@ -87,7 +91,7 @@ impl<T> BatchQueue<T> {
         assert!(max_batch > 0);
         assert!(capacity > 0);
         BatchQueue {
-            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false, kicked: false }),
             cv: Condvar::new(),
             max_batch,
             max_delay,
@@ -139,6 +143,14 @@ impl<T> BatchQueue<T> {
                     expired.push(g.queue.pop_front().unwrap());
                 }
             }
+            if g.kicked {
+                // a kick outranks batch formation: the consumer wants to run
+                // its between-batches checks *now* (e.g. install a staged
+                // hot-swap generation); any queued jobs simply wait for the
+                // next pop, which follows immediately
+                g.kicked = false;
+                return Some(Popped { jobs: Vec::new(), expired });
+            }
             if !g.queue.is_empty() {
                 let waited = g.queue.front().unwrap().enqueued.elapsed();
                 if g.queue.len() >= self.max_batch || waited >= self.max_delay {
@@ -159,6 +171,18 @@ impl<T> BatchQueue<T> {
                 g = self.cv.wait(g).unwrap();
             }
         }
+    }
+
+    /// Wake the (possibly idle) consumer: its next [`BatchQueue::pop_batch`]
+    /// returns promptly — with an empty batch if nothing is due — so it can
+    /// run its between-batches checks.  The serving worker only looks at the
+    /// hot-swap slot between pops, so a deploy posted to an idle server
+    /// needs this nudge; without traffic the worker would otherwise sleep on
+    /// the condvar and never install the staged generation.
+    pub fn kick(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.kicked = true;
+        self.cv.notify_all();
     }
 
     /// Close the queue, waking all waiters, and return the drained backlog
@@ -363,6 +387,25 @@ mod tests {
         for p in producers {
             p.join().unwrap();
         }
+    }
+
+    #[test]
+    fn kick_wakes_an_idle_consumer_with_an_empty_pop() {
+        let q = Arc::new(BatchQueue::new(8, Duration::from_millis(5)));
+        let qc = q.clone();
+        let consumer = thread::spawn(move || {
+            let t0 = Instant::now();
+            let popped = qc.pop_batch().expect("kick must not close the queue");
+            (t0.elapsed(), popped.jobs.len(), popped.expired.len())
+        });
+        thread::sleep(Duration::from_millis(30)); // let the consumer block
+        q.kick();
+        let (waited, jobs, expired) = consumer.join().unwrap();
+        assert_eq!((jobs, expired), (0, 0), "a kick pops an empty batch");
+        assert!(waited < Duration::from_secs(5), "kick must wake promptly");
+        // the flag is one-shot: queued work flows normally afterwards
+        q.push(7).unwrap();
+        assert_eq!(q.pop_batch().unwrap().jobs.len(), 1);
     }
 
     #[test]

@@ -6,3 +6,4 @@ pub mod finetune;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod swap;

@@ -4,8 +4,10 @@
 //! Protocol (one JSON object per line):
 //! ```text
 //! -> {"id": 7, "pixels": [ ... H*W*C floats ... ]}
-//! <- {"id": 7, "pred": 3, "latency_us": 812, "batch": 32}
+//! <- {"id": 7, "pred": 3, "latency_us": 812, "batch": 32, "gen": 1}
 //! ```
+//! `gen` is the roster generation that served the request (it advances on a
+//! hot model swap — see below).
 //! Each connection is synchronous (request → response); concurrency comes
 //! from multiple connections feeding the shared [`BatchQueue`], which the
 //! worker drains in dynamic batches.  The worker executes over a [`Roster`]
@@ -58,17 +60,39 @@
 //!   which is itself derived from the configured deadline
 //!   ([`ServerConfig::reply_timeout`]) rather than a hardcoded 30s.
 //!
+//! ## Hot model swap
+//!
+//! [`Server::deploy_store`] replaces the serving model with zero downtime:
+//! the [`super::swap`] pipeline stages a complete replacement generation off
+//! the serving thread (encode → noisy-channel transfer → hardened decode →
+//! engine build → canary gate), posts it to the worker's
+//! [`SwapSlot`](super::swap::SwapSlot), and the worker installs it *between*
+//! batches — the in-flight batch finishes on the old generation, and the
+//! [`Roster`] generation counter advances (`swap.generation` gauge, `gen` in
+//! every reply).  The displaced engines are retained for
+//! [`ServerConfig::probation_batches`]: if the new generation racks up
+//! [`ServerConfig::rollback_quarantines`] quarantine events inside that
+//! window, the worker rolls the old generation straight back
+//! (`swap.rollbacks`).  A failure at any staging stage leaves the old
+//! generation serving untouched and bumps the matching `swap.fail.*`
+//! counter.  All PR-6 guarantees hold across the swap boundary: admission
+//! stays bounded (the queue is never touched), quarantine state is rebuilt
+//! per generation, and [`Server::stop`] marks the slot dead so no deployer
+//! blocks on a worker that exited.
+//!
 //! Chaos scenarios are driven through [`crate::util::faults`]
 //! (`PALLAS_FAULTS`): when armed at roster-build time every engine is
 //! wrapped in a [`FaultInjector`]; disarmed, the wrapper is never
-//! constructed and the hot path is untouched.
+//! constructed and the hot path is untouched.  Swapped-in generations get
+//! the same treatment at install time, and the `swap.build` / `swap.canary`
+//! clauses fail the staging pipeline at those stages.
 
 use std::cell::Cell;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::panic::{self, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
@@ -77,6 +101,7 @@ use anyhow::{bail, Context, Result};
 
 use super::batcher::{BatchQueue, Pending, PushError};
 use super::metrics::Metrics;
+use super::swap::{self, PendingSwap, SwapConfig, SwapError, SwapReport, SwapSlot, SwapStage};
 use crate::device::{CsdQuality, QualityConfig};
 use crate::kernels::{self, Scratch};
 use crate::model::meta::ModelKind;
@@ -92,13 +117,19 @@ use crate::util::json::{self, Value};
 pub use crate::runtime::engine::batch_prefers_artifact;
 
 /// Quality the `Auto` roster quantizes its code-domain engine at (the
-/// canonical phi=4, N=16 point the deploy pipeline defaults to).
-const AUTO_QUALITY: QualityConfig = QualityConfig { phi: 4, group: 16 };
+/// canonical phi=4, N=16 point the deploy pipeline defaults to).  Public so
+/// [`super::swap::SwapConfig`]'s defaults replace like with like.
+pub const AUTO_QUALITY: QualityConfig = QualityConfig { phi: 4, group: 16 };
 
 /// Digit budget the `Auto` roster's CSD engine serves at: 4 kept partial
 /// products per weight keeps truncation error small while the energy policy
 /// still halves-or-better the shift-and-add work of exact CSD.
-const AUTO_CSD_DIGITS: usize = 4;
+pub const AUTO_CSD_DIGITS: usize = 4;
+
+/// Longest a deployer waits for the worker to pick up and acknowledge a
+/// posted generation.  The worker installs between batches, so this only
+/// trips if the worker is wedged in a pathological forward.
+const SWAP_INSTALL_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Which inference engine(s) the worker thread runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -150,6 +181,14 @@ pub struct ServerConfig {
     /// is sent its way (tick-based, not wall-clock, so chaos outcomes are
     /// deterministic under any pool configuration).
     pub quarantine_cooldown: u64,
+    /// Batches a freshly swapped-in generation serves with the displaced
+    /// engines still retained: within this window a quarantine storm rolls
+    /// the old generation straight back.  0 disables probation (the old
+    /// engines retire at install).
+    pub probation_batches: u64,
+    /// Quarantine events within the probation window that trigger an
+    /// automatic rollback to the displaced generation.
+    pub rollback_quarantines: u64,
 }
 
 impl ServerConfig {
@@ -188,6 +227,8 @@ impl Default for ServerConfig {
             deadline: Duration::from_secs(2),
             quarantine_after: 3,
             quarantine_cooldown: 64,
+            probation_batches: 32,
+            rollback_quarantines: 1,
         }
     }
 }
@@ -256,6 +297,10 @@ pub struct Roster {
     quarantine_events: Cell<u64>,
     quarantine_after: u32,
     quarantine_cooldown: u64,
+    /// Which model generation this engine set serves (1 at startup,
+    /// advanced by [`Roster::install`] on every hot swap — and moved *back*
+    /// on a probation rollback).  Stamped into every reply as `gen`.
+    generation: Cell<u64>,
 }
 
 impl Roster {
@@ -373,7 +418,48 @@ impl Roster {
             quarantine_events: Cell::new(0),
             quarantine_after: cfg.quarantine_after.max(1),
             quarantine_cooldown: cfg.quarantine_cooldown.max(1),
+            generation: Cell::new(1),
         })
+    }
+
+    /// The model generation currently serving.
+    pub fn generation(&self) -> u64 {
+        self.generation.get()
+    }
+
+    /// The batch size the dispatch policy prices crossovers against.
+    pub fn artifact_batch(&self) -> usize {
+        self.artifact_batch
+    }
+
+    /// Atomically replace the engine set (hot swap / rollback): the new
+    /// engines take over with fresh health, dispatch and quarantine
+    /// bookkeeping, and the roster starts reporting `generation`.  Returns
+    /// the displaced engines — the caller keeps them through the probation
+    /// window (rollback reinstalls them) or drops them to retire.  Policy
+    /// and quarantine thresholds persist across generations; the route tick
+    /// keeps counting so cooldown arithmetic never goes backwards.
+    pub fn install(
+        &mut self,
+        engines: Vec<Box<dyn Engine>>,
+        generation: u64,
+        artifact_batch: usize,
+    ) -> Vec<Box<dyn Engine>> {
+        assert!(!engines.is_empty(), "a roster generation needs at least one engine");
+        self.kinds = engines.iter().map(|e| e.kind()).collect();
+        self.dispatch_counters = engines
+            .iter()
+            .map(|e| format!("dispatch_{}", e.name().replace('-', "_")))
+            .collect();
+        self.quarantine_gauges = engines
+            .iter()
+            .map(|e| format!("engine.{}.quarantined", e.name()))
+            .collect();
+        self.health = engines.iter().map(|_| Health::new()).collect();
+        self.any_quarantined.set(false);
+        self.artifact_batch = artifact_batch;
+        self.generation.set(generation);
+        std::mem::replace(&mut self.engines, engines)
     }
 
     /// Backend label for the startup `engine_*` counter: the pinned engine's
@@ -572,12 +658,51 @@ enum EngineSource {
     Store(WeightStore),
 }
 
-/// A running server; `stop()` for graceful shutdown.
+/// The displaced generation, retained by the worker while a swapped-in one
+/// proves itself.  Dropped (engines retire) when `left` reaches 0; moved
+/// back into the roster on a quarantine storm.
+struct Probation {
+    generation: u64,
+    engines: Vec<Box<dyn Engine>>,
+    artifact_batch: usize,
+    /// Served batches remaining in the window.
+    left: u64,
+    /// `Roster::quarantine_events` at install time — events above this
+    /// baseline were earned by the new generation.
+    baseline: u64,
+}
+
+/// Prepare a staged generation's engines for install: coerce away the
+/// `Send` bound (the worker owns them from here on) and — mirroring
+/// [`Roster::build`] — wrap each in a [`FaultInjector`] when chaos is
+/// armed, so injected faults hit swapped-in generations exactly like the
+/// boot generation.
+fn wrap_generation(engines: Vec<Box<dyn Engine + Send>>) -> Vec<Box<dyn Engine>> {
+    let armed = crate::util::faults::armed();
+    engines
+        .into_iter()
+        .map(|e| {
+            let e: Box<dyn Engine> = e;
+            if armed {
+                Box::new(FaultInjector::new(e)) as Box<dyn Engine>
+            } else {
+                e
+            }
+        })
+        .collect()
+}
+
+/// A running server; `stop()` for graceful shutdown,
+/// [`deploy_store`](Server::deploy_store) for zero-downtime model swaps.
 pub struct Server {
     pub port: u16,
     pub metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     queue: Arc<BatchQueue<Job>>,
+    /// Mailbox between deploy callers and the serving worker.
+    swap: Arc<SwapSlot>,
+    /// Next generation number a successful deploy gets (boot roster is 1).
+    next_gen: AtomicU64,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -613,30 +738,37 @@ impl Server {
             Some(cfg.deadline),
         ));
         let metrics = Arc::new(Metrics::new());
+        let swap_slot = Arc::new(SwapSlot::new());
 
         // --- inference worker (owns the non-Send engine roster) -------------
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let wq = queue.clone();
         let wm = metrics.clone();
         let wcfg = cfg.clone();
+        let ws = swap_slot.clone();
         let worker = thread::Builder::new().name("infer-worker".into()).spawn(move || {
             let built = match source {
                 EngineSource::Artifacts(dir) => WeightStore::load(&dir, wcfg.model)
                     .and_then(|store| Roster::build(Some(&dir), store, &wcfg)),
                 EngineSource::Store(store) => Roster::build(None, store, &wcfg),
             };
-            let roster = match built {
+            let mut roster = match built {
                 Ok(r) => {
                     let _ = ready_tx.send(Ok(()));
                     r
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
+                    ws.mark_dead("engine roster failed to build");
                     return;
                 }
             };
             wm.inc(&format!("engine_{}", roster.name()), 1);
             wm.inc(&format!("policy_{}", roster.policy_name()), 1);
+            wm.set_gauge("swap.generation", roster.generation() as f64);
+            // displaced engines held through a swapped-in generation's
+            // probation window (rollback re-installs them)
+            let mut probation: Option<Probation> = None;
             let (h, w, c) = wcfg.model.input_hwc();
             // one arena per worker: the host engines stop allocating per
             // request once the buffers are warm
@@ -646,6 +778,36 @@ impl Server {
             let pool = kernels::Pool::global();
 
             while let Some(popped) = wq.pop_batch() {
+                // hot-swap pickup: installs land here, *between* batches, so
+                // an in-flight batch always finishes on the generation that
+                // started it (deploy_store kicks the queue, so an idle
+                // worker reaches this point without waiting for traffic)
+                if ws.has_pending() {
+                    if let Some(p) = ws.take_pending() {
+                        let gen = p.generation;
+                        let displaced_gen = roster.generation();
+                        let displaced_ab = roster.artifact_batch();
+                        let displaced =
+                            roster.install(wrap_generation(p.engines), gen, wcfg.batch);
+                        probation = if wcfg.probation_batches > 0 {
+                            Some(Probation {
+                                generation: displaced_gen,
+                                engines: displaced,
+                                artifact_batch: displaced_ab,
+                                left: wcfg.probation_batches,
+                                baseline: roster.quarantine_events(),
+                            })
+                        } else {
+                            None // probation disabled: the old engines retire now
+                        };
+                        wm.set_gauge("swap.generation", gen as f64);
+                        wm.set_gauge(
+                            "swap.probation_left",
+                            probation.as_ref().map_or(0.0, |p| p.left as f64),
+                        );
+                        ws.ack_installed(gen);
+                    }
+                }
                 // deadline sheds: terminal replies, no kernel slot spent
                 for job in &popped.expired {
                     wm.inc("shed_deadline", 1);
@@ -728,6 +890,7 @@ impl Server {
                                 ("pred", json::num(preds[i] as f64)),
                                 ("latency_us", json::num(e2e.as_micros() as f64)),
                                 ("batch", json::num(n as f64)),
+                                ("gen", json::num(roster.generation() as f64)),
                             ]);
                             let _ = job.payload.resp.send(resp);
                         }
@@ -757,6 +920,32 @@ impl Server {
                         }
                     }
                 }
+                // probation accounting for the batch just served: a
+                // quarantine storm earned by the new generation rolls the
+                // displaced one straight back; otherwise the window shrinks
+                // and, once cleared, the displaced engines retire
+                let storm = probation.as_ref().map_or(false, |p| {
+                    roster.quarantine_events()
+                        >= p.baseline + wcfg.rollback_quarantines.max(1)
+                });
+                if storm {
+                    let p = probation.take().unwrap();
+                    roster.install(p.engines, p.generation, p.artifact_batch);
+                    wm.inc("swap.rollbacks", 1);
+                    wm.set_gauge("swap.generation", p.generation as f64);
+                    wm.set_gauge("swap.probation_left", 0.0);
+                    eprintln!(
+                        "server: quarantine storm during probation; rolled back to \
+                         generation {}",
+                        p.generation
+                    );
+                } else if let Some(p) = probation.as_mut() {
+                    p.left -= 1;
+                    wm.set_gauge("swap.probation_left", p.left as f64);
+                }
+                if probation.as_ref().map_or(false, |p| p.left == 0) {
+                    probation = None; // window cleared; displaced engines retire
+                }
                 for i in 0..roster.len() {
                     wm.set_gauge(
                         roster.quarantine_gauge(i),
@@ -764,6 +953,9 @@ impl Server {
                     );
                 }
             }
+            // queue closed: no deploy can ever land again — fail any
+            // in-flight or future deploy instead of leaving it blocked
+            ws.mark_dead("server shut down");
         })?;
         ready_rx
             .recv()
@@ -818,7 +1010,67 @@ impl Server {
             metrics,
             shutdown,
             queue,
+            swap: swap_slot,
+            next_gen: AtomicU64::new(2),
             handles: vec![worker, acceptor],
+        })
+    }
+
+    /// Hot-swap the serving model to `store` with zero downtime: stage a
+    /// complete replacement generation through the [`super::swap`] pipeline
+    /// (encode → noisy-channel transfer → hardened decode → engine build →
+    /// canary gate) on *this* thread, then hand it to the serving worker,
+    /// which installs it between batches.  Blocks until the worker
+    /// acknowledges the install (bounded by an internal timeout) and
+    /// returns the [`SwapReport`].
+    ///
+    /// On any failure the old generation keeps serving untouched; the
+    /// matching `swap.fail.*` / `swap.canary_rejects` counter and
+    /// `swap.failed` are bumped, and the returned error downcasts to
+    /// [`SwapError`] naming the stage (with the partial
+    /// [`TransferReport`](crate::channel::TransferReport) reachable under a
+    /// transfer failure).
+    pub fn deploy_store(&self, store: &WeightStore, cfg: &SwapConfig) -> Result<SwapReport> {
+        let t0 = Instant::now();
+        self.metrics.inc("swap.attempts", 1);
+        let staged = match swap::stage(store, cfg) {
+            Ok(s) => s,
+            Err(e) => {
+                let stage = e
+                    .downcast_ref::<SwapError>()
+                    .map_or(SwapStage::Build, |se| se.stage);
+                self.metrics.inc(stage.fail_counter(), 1);
+                self.metrics.inc("swap.failed", 1);
+                return Err(e);
+            }
+        };
+        let generation = self.next_gen.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = self
+            .swap
+            .post(PendingSwap { generation, engines: staged.engines })
+        {
+            self.metrics.inc(SwapStage::Install.fail_counter(), 1);
+            self.metrics.inc("swap.failed", 1);
+            return Err(e);
+        }
+        // wake the worker even with no traffic flowing: the kicked queue
+        // returns an empty pop, and the worker notices the pending
+        // generation without waiting out a batch window
+        self.queue.kick();
+        if let Err(e) = self.swap.wait_installed(generation, SWAP_INSTALL_TIMEOUT) {
+            self.metrics.inc(SwapStage::Install.fail_counter(), 1);
+            self.metrics.inc("swap.failed", 1);
+            return Err(e);
+        }
+        self.metrics.inc("swap.installs", 1);
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        self.metrics.set_gauge("swap.last_latency_ms", elapsed_s * 1e3);
+        Ok(SwapReport {
+            generation,
+            container_bytes: staged.container_bytes,
+            transfer: staged.transfer,
+            canary: staged.canary,
+            elapsed_s,
         })
     }
 
@@ -1023,6 +1275,10 @@ mod tests {
         assert!(c.reply_timeout() > c.deadline + c.max_delay);
         assert_eq!(c.quarantine_after, 3);
         assert_eq!(c.quarantine_cooldown, 64);
+        // hot-swap probation defaults: a one-quarantine storm inside a
+        // 32-batch window rolls back
+        assert_eq!(c.probation_batches, 32);
+        assert_eq!(c.rollback_quarantines, 1);
     }
 
     use crate::data::synth_store;
@@ -1229,6 +1485,43 @@ mod tests {
         let i = roster.route(32);
         roster.note_ok(i);
         assert!(!roster.quarantined(i));
+    }
+
+    #[test]
+    fn roster_install_swaps_generation_and_returns_the_displaced_engines() {
+        let cfg = ServerConfig::default();
+        let mut roster =
+            Roster::build(None, synth_store(83, ModelKind::Lenet), &cfg).unwrap();
+        assert_eq!(roster.generation(), 1);
+        assert_eq!(roster.len(), 3);
+        // poison the boot generation's health so the reset is observable
+        for _ in 0..cfg.quarantine_after {
+            roster.note_failure(0);
+        }
+        assert!(roster.any_quarantined());
+
+        let staged = swap::stage(&synth_store(84, ModelKind::Lenet), &SwapConfig::default())
+            .unwrap();
+        let displaced = roster.install(wrap_generation(staged.engines), 2, cfg.batch);
+        assert_eq!(roster.generation(), 2);
+        assert_eq!(displaced.len(), 3, "the whole boot generation comes back out");
+        assert_eq!(roster.len(), 3);
+        // fresh generation, fresh health: the old quarantine is gone
+        assert!(!roster.any_quarantined());
+        for i in 0..roster.len() {
+            assert!(!roster.quarantined(i));
+        }
+        // and it serves: a dispatch routes + forwards on the new engines
+        let mut r = Rng::new(85);
+        let mut scratch = Scratch::new();
+        let (_, logits) = roster.dispatch(&synth_batch(&mut r, 2), &mut scratch).unwrap();
+        assert_eq!(logits.shape(), &[2, 10]);
+
+        // rollback path: reinstalling the displaced set restores generation 1
+        roster.install(displaced, 1, cfg.batch);
+        assert_eq!(roster.generation(), 1);
+        let (_, logits) = roster.dispatch(&synth_batch(&mut r, 1), &mut scratch).unwrap();
+        assert_eq!(logits.shape(), &[1, 10]);
     }
 
     #[test]

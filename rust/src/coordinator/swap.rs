@@ -1,0 +1,561 @@
+//! Zero-downtime model hot-swap over the noisy channel.
+//!
+//! The paper's deployment story — 3-bit QSQ containers small enough to ship
+//! over a communication channel and decode on the edge device — previously
+//! only worked offline: one process served one immutable model.  This module
+//! makes the serving [`Roster`](super::server::Roster) *generational*: a
+//! freshly trained store is staged into a complete replacement engine set
+//! off the serving thread, gated, and atomically installed while traffic
+//! keeps flowing.
+//!
+//! ## Pipeline (all off the serving thread)
+//!
+//! ```text
+//! trainer store ──encode──▶ QSQ1 container ──Link (ARQ, bursts)──▶ bytes
+//!                                                                   │
+//!                       hardened decode_model (per-section CRC) ◀───┘
+//!                                │
+//!                 engine build (qgemm + CSD + f32 on the edge store)
+//!                                │
+//!                 canary gate (held-back batch vs the decode oracle)
+//!                                │
+//!            SwapSlot ──▶ worker installs between batches (atomic swap)
+//! ```
+//!
+//! * **Transfer** rides [`Link`] — frames + CRC + stop-and-wait ARQ, with
+//!   any `PALLAS_FAULTS` `link.burst` profile applied, exactly like
+//!   `deploy-sim`.  Retry exhaustion surfaces the typed
+//!   [`TransferError`](crate::channel::TransferError) with its partial
+//!   report.
+//! * **Decode** is the hardened [`decode_model`] (bounds-scanned sections,
+//!   per-section CRC naming the offending tensor).
+//! * **Build** constructs the full host engine set on the decoded edge
+//!   store: code-domain qgemm from exactly the codes that crossed the wire,
+//!   truncated-CSD, and the exact f32 path.  PJRT is deliberately excluded
+//!   from hot swap — its runtime is thread-owned and artifact-bound; a
+//!   swapped-in generation always serves the host roster.
+//! * **Canary** forwards a held-back validation batch on every new engine
+//!   and compares against the decode oracle (the fused f32 forward of the
+//!   edge store): max |logit diff| and argmax agreement must clear
+//!   [`CanaryConfig`] thresholds before the generation ever sees traffic.
+//! * **Install** posts the staged generation to the worker's [`SwapSlot`];
+//!   the worker picks it up *between* batches, so the in-flight batch
+//!   finishes on the old generation.  The displaced engines are retained
+//!   for a probation window — a quarantine storm rolls straight back
+//!   (see `coordinator::server`).
+//!
+//! Any stage failure leaves the old generation serving untouched; the error
+//! downcasts to [`SwapError`] naming the stage, and the server bumps the
+//! matching `swap.fail.*` / `swap.canary_rejects` counter
+//! (`docs/METRICS.md`).
+//!
+//! Fault points for chaos testing: `swap.build` and `swap.canary` clauses
+//! in `PALLAS_FAULTS` fail the respective stage
+//! ([`crate::util::faults::swap_build_fail`] /
+//! [`crate::util::faults::swap_canary_fail`]).
+
+use std::fmt;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::deploy::encode_store;
+use crate::channel::{Link, LinkConfig, TransferReport};
+use crate::codec::{decode_model, encode_model};
+use crate::device::{CsdQuality, QualityConfig};
+use crate::kernels::Scratch;
+use crate::model::store::WeightStore;
+use crate::quant::qsq::AssignMode;
+use crate::runtime::engine::Engine;
+use crate::runtime::host::{self, CsdEngine, F32Engine, QuantizedEngine};
+use crate::tensor::{ops, Tensor};
+use crate::util::faults;
+
+use super::server::{AUTO_CSD_DIGITS, AUTO_QUALITY};
+
+/// Where in the pipeline a swap failed (the `swap.fail.*` counter key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapStage {
+    /// Channel transfer (ARQ exhaustion — the partial
+    /// [`TransferReport`] rides the inner
+    /// [`TransferError`](crate::channel::TransferError)).
+    Transfer,
+    /// Container integrity: CRC mismatch, truncation, malformed sections.
+    Decode,
+    /// Engine construction on the decoded edge store (or encode-side
+    /// failure before the transfer).
+    Build,
+    /// Canary divergence against the decode oracle.
+    Canary,
+    /// Posting to / waiting on the serving worker.
+    Install,
+}
+
+impl SwapStage {
+    pub fn name(self) -> &'static str {
+        match self {
+            SwapStage::Transfer => "transfer",
+            SwapStage::Decode => "decode",
+            SwapStage::Build => "build",
+            SwapStage::Canary => "canary",
+            SwapStage::Install => "install",
+        }
+    }
+
+    /// The metrics counter a failure at this stage increments.
+    pub fn fail_counter(self) -> &'static str {
+        match self {
+            SwapStage::Transfer => "swap.fail.transfer",
+            SwapStage::Decode => "swap.fail.decode",
+            SwapStage::Build => "swap.fail.build",
+            SwapStage::Canary => "swap.canary_rejects",
+            SwapStage::Install => "swap.fail.install",
+        }
+    }
+}
+
+/// A staging failure, tagged with the pipeline stage it happened at.  The
+/// underlying cause stays reachable through the public `source` field (e.g.
+/// `source.downcast_ref::<TransferError>()` for the partial transfer
+/// report).
+#[derive(Debug)]
+pub struct SwapError {
+    pub stage: SwapStage,
+    pub source: anyhow::Error,
+}
+
+impl fmt::Display for SwapError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "swap {} stage failed: {:#}", self.stage.name(), self.source)
+    }
+}
+
+impl std::error::Error for SwapError {}
+
+fn stage_err(stage: SwapStage, source: anyhow::Error) -> anyhow::Error {
+    anyhow::Error::new(SwapError { stage, source })
+}
+
+/// The held-back validation gate a staged generation must clear before it
+/// ever sees traffic.
+#[derive(Clone, Copy, Debug)]
+pub struct CanaryConfig {
+    /// Rows in the held-back validation batch.
+    pub batch: usize,
+    /// Seed of the synthetic validation inputs ([`crate::data::RequestGen`]).
+    pub seed: u64,
+    /// Max tolerated |logit difference| vs the decode oracle, per engine.
+    /// The gate catches *gross* divergence (a wrong or corrupt build), not
+    /// quantization noise — the packed engines legitimately differ from the
+    /// oracle by their approximation error.
+    pub max_abs_diff: f64,
+    /// Min argmax agreement with the oracle over the batch, per engine.
+    pub min_agreement: f64,
+}
+
+impl Default for CanaryConfig {
+    fn default() -> Self {
+        CanaryConfig { batch: 8, seed: 701, max_abs_diff: 0.5, min_agreement: 0.25 }
+    }
+}
+
+/// Everything a hot deploy needs: the quality dials the new generation is
+/// encoded/served at, the channel the container crosses, and the canary
+/// gate.  The defaults match the `Auto` roster's canonical quality point,
+/// so a default swap replaces like with like.
+#[derive(Clone, Copy, Debug)]
+pub struct SwapConfig {
+    /// QSQ dial (phi, N) the store is encoded at.
+    pub quality: QualityConfig,
+    /// CSD digit dial the new generation's CSD engine serves at.
+    pub csd: CsdQuality,
+    /// Code-assignment mode for the encode.
+    pub mode: AssignMode,
+    /// The channel profile; any armed `PALLAS_FAULTS` `link.burst` profile
+    /// is overlaid on top, exactly like `deploy-sim`.
+    pub link: LinkConfig,
+    /// Link RNG seed (deterministic channel walk per seed).
+    pub seed: u64,
+    pub canary: CanaryConfig,
+}
+
+impl Default for SwapConfig {
+    fn default() -> Self {
+        SwapConfig {
+            quality: AUTO_QUALITY,
+            csd: CsdQuality::new(AUTO_CSD_DIGITS),
+            mode: AssignMode::SigmaSearch,
+            link: LinkConfig::default(),
+            seed: 7,
+            canary: CanaryConfig::default(),
+        }
+    }
+}
+
+/// Per-engine canary result (also returned in the [`SwapReport`] so deploy
+/// callers can log how close the gate was).
+#[derive(Clone, Debug)]
+pub struct CanaryOutcome {
+    pub engine: &'static str,
+    pub max_abs_diff: f64,
+    pub agreement: f64,
+}
+
+/// A fully staged replacement generation: the decoded edge store, the built
+/// (but not yet installed) engine set, and what staging cost.  Engines are
+/// `Send` — they are built on the deploy thread and handed to the serving
+/// worker through the [`SwapSlot`].
+pub struct StagedGeneration {
+    /// The edge-side store: original fp32 head/biases + decoded approximate
+    /// weights, the oracle the canary compared against.
+    pub edge: WeightStore,
+    /// The replacement engine set, in the `Auto` roster's host order:
+    /// code-domain qgemm, truncated CSD, exact f32.
+    pub engines: Vec<Box<dyn Engine + Send>>,
+    pub transfer: TransferReport,
+    /// Container bytes that crossed the channel.
+    pub container_bytes: usize,
+    pub canary: Vec<CanaryOutcome>,
+}
+
+/// What a completed swap reports back to the deployer.
+#[derive(Clone, Debug)]
+pub struct SwapReport {
+    /// The generation number now serving.
+    pub generation: u64,
+    pub container_bytes: usize,
+    pub transfer: TransferReport,
+    pub canary: Vec<CanaryOutcome>,
+    /// Transfer start → worker acknowledged the install.
+    pub elapsed_s: f64,
+}
+
+/// Run the staging pipeline (encode → transfer → decode → build → canary)
+/// for `store`; returns the staged generation ready to post to a
+/// [`SwapSlot`].  Pure with respect to the serving thread — tests use it
+/// directly to build the bitwise reference for post-swap logits.
+pub fn stage(store: &WeightStore, cfg: &SwapConfig) -> Result<StagedGeneration> {
+    // trainer side: encode at the requested dial (an encode failure is a
+    // build-class failure — nothing ever left the trainer)
+    let encoded =
+        encode_store(store, cfg.quality, cfg.mode).map_err(|e| stage_err(SwapStage::Build, e))?;
+    let container = encode_model(&encoded).map_err(|e| stage_err(SwapStage::Build, e))?;
+
+    // the channel: frames + CRC + ARQ, with any armed burst profile overlaid
+    let mut link_cfg = cfg.link;
+    if let Some(b) = faults::link_burst() {
+        link_cfg.burst = Some(b);
+    }
+    let mut link = Link::new(link_cfg, cfg.seed);
+    let (received, transfer) =
+        link.transmit(&container).map_err(|e| stage_err(SwapStage::Transfer, e))?;
+
+    // edge side: integrity-checked decode, then reconstruct the edge store
+    // (decoded approximate weights over the original fp32 head/biases)
+    let decoded = decode_model(&received).map_err(|e| stage_err(SwapStage::Decode, e))?;
+    let mut edge = store.clone();
+    for et in &decoded.tensors {
+        let w = et.tensor.decode();
+        let t = Tensor::new(et.tensor.shape.clone(), w)
+            .and_then(|t| edge.set(&et.name, t).map(|_| ()));
+        if let Err(e) = t {
+            return Err(stage_err(SwapStage::Decode, e));
+        }
+    }
+
+    if faults::swap_build_fail() {
+        return Err(stage_err(
+            SwapStage::Build,
+            anyhow!("injected engine-build failure (PALLAS_FAULTS swap.build)"),
+        ));
+    }
+    let quant = QuantizedEngine::from_encoded(&edge, &decoded)
+        .map_err(|e| stage_err(SwapStage::Build, e))?;
+    let csd =
+        CsdEngine::from_store(&edge, cfg.csd).map_err(|e| stage_err(SwapStage::Build, e))?;
+    let f32e = F32Engine::new(edge.clone());
+    let engines: Vec<Box<dyn Engine + Send>> =
+        vec![Box::new(quant), Box::new(csd), Box::new(f32e)];
+
+    let canary =
+        canary_check(&edge, &engines, &cfg.canary).map_err(|e| stage_err(SwapStage::Canary, e))?;
+
+    Ok(StagedGeneration { edge, engines, transfer, container_bytes: container.len(), canary })
+}
+
+/// Forward the held-back validation batch on every staged engine and compare
+/// against the decode oracle (the fused f32 forward of the edge store).
+/// Fails naming the first engine outside the gate.
+fn canary_check(
+    edge: &WeightStore,
+    engines: &[Box<dyn Engine + Send>],
+    cfg: &CanaryConfig,
+) -> Result<Vec<CanaryOutcome>> {
+    if faults::swap_canary_fail() {
+        bail!("injected canary divergence (PALLAS_FAULTS swap.canary)");
+    }
+    let rows = cfg.batch.max(1);
+    let (h, w, c) = edge.kind.input_hwc();
+    let pix = h * w * c;
+    let mut gen = crate::data::RequestGen::new(edge.kind, cfg.seed);
+    let mut xdata = Vec::with_capacity(rows * pix);
+    for _ in 0..rows {
+        let (img, _) = gen.next();
+        xdata.extend_from_slice(img.data());
+    }
+    let x = Tensor::new(vec![rows, h, w, c], xdata)?;
+    let want = host::forward(edge, &x)?;
+    let want_arg = ops::argmax_rows(&want);
+    let mut outcomes = Vec::with_capacity(engines.len());
+    let mut scratch = Scratch::new();
+    for e in engines {
+        let got = e.forward_with(&x, &mut scratch)?;
+        let diff = got.max_abs_diff(&want) as f64;
+        let got_arg = ops::argmax_rows(&got);
+        let agree = want_arg.iter().zip(&got_arg).filter(|(a, b)| a == b).count() as f64
+            / want_arg.len().max(1) as f64;
+        if diff > cfg.max_abs_diff || agree < cfg.min_agreement {
+            bail!(
+                "canary divergence on {}: max |logit diff| {diff:.4} (limit {}), \
+                 argmax agreement {agree:.2} (floor {})",
+                e.name(),
+                cfg.max_abs_diff,
+                cfg.min_agreement
+            );
+        }
+        outcomes.push(CanaryOutcome { engine: e.name(), max_abs_diff: diff, agreement: agree });
+    }
+    Ok(outcomes)
+}
+
+/// A staged generation in flight to the serving worker.
+pub(crate) struct PendingSwap {
+    pub generation: u64,
+    pub engines: Vec<Box<dyn Engine + Send>>,
+}
+
+enum SlotState {
+    Idle,
+    Pending(PendingSwap),
+    Installed(u64),
+    /// The worker exited; deploys can no longer land.
+    Dead(String),
+}
+
+/// The single-slot mailbox between a deploy thread and the serving worker.
+/// The deployer [`post`](SwapSlot::post)s a staged generation and
+/// [`wait_installed`](SwapSlot::wait_installed)s; the worker polls
+/// [`has_pending`](SwapSlot::has_pending) between batches (one relaxed
+/// atomic load — the serving hot path cost of the swap layer), takes the
+/// pending generation, installs it, and
+/// [`ack_installed`](SwapSlot::ack_installed)s.
+pub(crate) struct SwapSlot {
+    armed: std::sync::atomic::AtomicBool,
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+impl SwapSlot {
+    pub(crate) fn new() -> SwapSlot {
+        SwapSlot {
+            armed: std::sync::atomic::AtomicBool::new(false),
+            state: Mutex::new(SlotState::Idle),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Worker-side fast path: anything staged?
+    #[inline]
+    pub(crate) fn has_pending(&self) -> bool {
+        self.armed.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    /// Stage a generation for the worker.  One deploy at a time: a second
+    /// post while one is pending is rejected (the caller reports a failed
+    /// deploy; the pending one is untouched).
+    pub(crate) fn post(&self, p: PendingSwap) -> Result<()> {
+        let mut g = self.state.lock().unwrap();
+        match &*g {
+            SlotState::Idle | SlotState::Installed(_) => {
+                *g = SlotState::Pending(p);
+                self.armed.store(true, std::sync::atomic::Ordering::Release);
+                Ok(())
+            }
+            SlotState::Pending(_) => bail!("another deploy is already staged"),
+            SlotState::Dead(msg) => bail!("serving worker is gone: {msg}"),
+        }
+    }
+
+    /// Worker side: take the staged generation, if any.
+    pub(crate) fn take_pending(&self) -> Option<PendingSwap> {
+        let mut g = self.state.lock().unwrap();
+        if matches!(&*g, SlotState::Pending(_)) {
+            self.armed.store(false, std::sync::atomic::Ordering::Release);
+            match std::mem::replace(&mut *g, SlotState::Idle) {
+                SlotState::Pending(p) => Some(p),
+                _ => unreachable!(),
+            }
+        } else {
+            None
+        }
+    }
+
+    /// Worker side: the taken generation is now serving.
+    pub(crate) fn ack_installed(&self, generation: u64) {
+        *self.state.lock().unwrap() = SlotState::Installed(generation);
+        self.cv.notify_all();
+    }
+
+    /// Deployer side: block until the worker acknowledges `generation` (or
+    /// the worker dies / `timeout` passes).  Resets the slot to idle on
+    /// success so the next deploy can post.
+    pub(crate) fn wait_installed(&self, generation: u64, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.state.lock().unwrap();
+        loop {
+            match &*g {
+                SlotState::Installed(gen) if *gen == generation => {
+                    *g = SlotState::Idle;
+                    return Ok(());
+                }
+                SlotState::Dead(msg) => bail!("swap not installed: {msg}"),
+                _ => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("swap install timed out after {timeout:?}");
+            }
+            let (ng, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+
+    /// Worker side, on exit: fail any in-flight or future deploy instead of
+    /// leaving its thread blocked on the condvar.  A staged-but-never-
+    /// installed generation is dropped here.
+    pub(crate) fn mark_dead(&self, msg: &str) {
+        self.armed.store(false, std::sync::atomic::Ordering::Release);
+        *self.state.lock().unwrap() = SlotState::Dead(msg.to_string());
+        self.cv.notify_all();
+    }
+}
+
+impl Default for SwapSlot {
+    fn default() -> Self {
+        SwapSlot::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_store;
+    use crate::model::meta::ModelKind;
+
+    // Fault injection is never armed here (process-global); fault-driven
+    // swap behavior lives in the test_chaos integration binary.
+
+    #[test]
+    fn staging_is_deterministic_and_logits_are_bitwise() {
+        let cfg = SwapConfig::default();
+        let a = stage(&synth_store(61, ModelKind::Lenet), &cfg).unwrap();
+        let b = stage(&synth_store(61, ModelKind::Lenet), &cfg).unwrap();
+        assert_eq!(a.transfer, b.transfer, "same seed, same channel walk");
+        assert_eq!(a.container_bytes, b.container_bytes);
+        assert_eq!(a.engines.len(), 3, "qgemm + csd + f32");
+        // post-swap logits must bitwise-match the new store: two independent
+        // stagings of the same store produce bitwise-identical engines
+        let mut gen = crate::data::RequestGen::new(ModelKind::Lenet, 99);
+        let (h, w, c) = ModelKind::Lenet.input_hwc();
+        let mut xdata = Vec::new();
+        for _ in 0..3 {
+            let (img, _) = gen.next();
+            xdata.extend_from_slice(img.data());
+        }
+        let x = Tensor::new(vec![3, h, w, c], xdata).unwrap();
+        let mut sa = Scratch::new();
+        let mut sb = Scratch::new();
+        for (ea, eb) in a.engines.iter().zip(&b.engines) {
+            let ya = ea.forward_with(&x, &mut sa).unwrap();
+            let yb = eb.forward_with(&x, &mut sb).unwrap();
+            assert_eq!(ya.data(), yb.data(), "{} logits must be bitwise equal", ea.name());
+        }
+        // the f32 engine serves the edge store exactly: bitwise the oracle
+        let oracle = host::forward(&a.edge, &x).unwrap();
+        let yf = a.engines[2].forward_with(&x, &mut sa).unwrap();
+        assert_eq!(yf.data(), oracle.data());
+        // canary outcomes are recorded for every engine and inside the gate
+        assert_eq!(a.canary.len(), 3);
+        for o in &a.canary {
+            assert!(o.max_abs_diff <= cfg.canary.max_abs_diff, "{}: {o:?}", o.engine);
+            assert!(o.agreement >= cfg.canary.min_agreement, "{}: {o:?}", o.engine);
+        }
+    }
+
+    #[test]
+    fn impossible_canary_gate_rejects_the_generation() {
+        // an agreement floor above 1.0 can never be met — the gate must
+        // reject at the Canary stage (deterministically, whatever the
+        // numerics), and the error names the stage
+        let cfg = SwapConfig {
+            canary: CanaryConfig { min_agreement: 2.0, ..CanaryConfig::default() },
+            ..SwapConfig::default()
+        };
+        let err = stage(&synth_store(62, ModelKind::Lenet), &cfg).unwrap_err();
+        let se = err.downcast_ref::<SwapError>().expect("typed SwapError");
+        assert_eq!(se.stage, SwapStage::Canary);
+        assert!(format!("{se}").contains("canary divergence"), "{se}");
+    }
+
+    #[test]
+    fn hopeless_link_fails_at_the_transfer_stage_with_partial_report() {
+        use crate::channel::{BurstConfig, TransferError};
+        let cfg = SwapConfig {
+            link: LinkConfig {
+                burst: Some(BurstConfig { p_enter: 1.0, p_exit: 0.0, ber_bad: 0.5 }),
+                max_retries: 3,
+                ..LinkConfig::default()
+            },
+            ..SwapConfig::default()
+        };
+        let err = stage(&synth_store(63, ModelKind::Lenet), &cfg).unwrap_err();
+        let se = err.downcast_ref::<SwapError>().expect("typed SwapError");
+        assert_eq!(se.stage, SwapStage::Transfer);
+        let te = se
+            .source
+            .downcast_ref::<TransferError>()
+            .expect("partial transfer report must survive the stage wrapper");
+        assert_eq!(te.partial.frames_delivered, 0);
+        assert_eq!(te.partial.retransmissions, 4, "max_retries 3 → 4 sends");
+    }
+
+    #[test]
+    fn slot_handshake_posts_installs_and_rejects_double_post() {
+        let slot = SwapSlot::new();
+        assert!(!slot.has_pending());
+        assert!(slot.take_pending().is_none());
+        let engines = || -> Vec<Box<dyn Engine + Send>> {
+            vec![Box::new(F32Engine::new(synth_store(64, ModelKind::Lenet)))]
+        };
+        slot.post(PendingSwap { generation: 2, engines: engines() }).unwrap();
+        assert!(slot.has_pending());
+        // one deploy at a time
+        let err = slot.post(PendingSwap { generation: 3, engines: engines() }).unwrap_err();
+        assert!(format!("{err:#}").contains("already staged"));
+        // worker takes and acks; the waiting deployer unblocks
+        let p = slot.take_pending().unwrap();
+        assert_eq!(p.generation, 2);
+        assert!(!slot.has_pending());
+        slot.ack_installed(2);
+        slot.wait_installed(2, Duration::from_secs(1)).unwrap();
+        // slot is idle again: the next deploy can post
+        slot.post(PendingSwap { generation: 3, engines: engines() }).unwrap();
+        // a dead worker fails pending and future deploys
+        slot.mark_dead("test shutdown");
+        assert!(!slot.has_pending());
+        assert!(slot.wait_installed(3, Duration::from_millis(10)).is_err());
+        let err = slot.post(PendingSwap { generation: 4, engines: engines() }).unwrap_err();
+        assert!(format!("{err:#}").contains("worker is gone"));
+    }
+}

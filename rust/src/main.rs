@@ -211,13 +211,35 @@ fn cmd_deploy_sim(args: &Args) -> Result<()> {
     // joint two-dial deployment: the profile's memory budget sizes (phi, N),
     // its MACs-derived energy budget sizes the CSD digit dial, and the model
     // ships over the (possibly --ber-overridden) link — one pipeline pass
-    let (edge, engine, rep) = deploy::deploy_for_device_with_link(
+    let (edge, engine, rep) = match deploy::deploy_for_device_with_link(
         &store,
         device,
         mode(args)?,
         link_cfg,
         args.get_u64("seed", 7),
-    )?;
+    ) {
+        Ok(t) => t,
+        Err(e) => {
+            // ARQ exhaustion: surface what the doomed transfer cost before
+            // it was abandoned, not just that it failed
+            if let Some(te) = e.downcast_ref::<qsq_edge::channel::TransferError>() {
+                println!(
+                    "transfer FAILED: frame {} exceeded {} retries",
+                    te.frame, te.max_retries
+                );
+                println!(
+                    "partial        : {}/{} frames delivered, {} retransmissions, \
+                     {} wire bytes and {:.3} s wasted",
+                    te.partial.frames_delivered,
+                    te.partial.frames,
+                    te.partial.retransmissions,
+                    te.partial.wire_bytes,
+                    te.partial.elapsed_s,
+                );
+            }
+            return Err(e);
+        }
+    };
     let quality = rep.quality;
     let csd = rep.csd.expect("csd engine deployment records the digit dial");
     let digits = if csd.max_digits == usize::MAX {

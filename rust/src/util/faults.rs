@@ -45,7 +45,9 @@
 //! | `engine.panic` | `NAME:PROB` | `forward_with` panics instead |
 //! | `engine.delay` | `NAME:PROB:MS` | a latency spike of `MS` milliseconds before the forward |
 //! | `queue.stall` | `PROB:MS` | the batch pop stalls `MS` milliseconds (simulates a wedged consumer) |
-//! | `link.burst` | `ENTER:EXIT:BER` | arms a Gilbert–Elliott burst profile ([`crate::channel::link::BurstConfig`]) that `deploy-sim` applies to its link |
+//! | `link.burst` | `ENTER:EXIT:BER` | arms a Gilbert–Elliott burst profile ([`crate::channel::link::BurstConfig`]) that `deploy-sim` and the hot-swap pipeline apply to their links |
+//! | `swap.build` | `PROB` | the hot-swap pipeline's engine-build stage fails ([`crate::coordinator::swap`]) |
+//! | `swap.canary` | `PROB` | the hot-swap canary gate reports divergence and rejects the staged generation |
 //!
 //! Each clause kind may repeat (e.g. different probabilities per engine).
 //! Probabilities are validated to `[0, 1]`; a malformed spec fails server
@@ -84,8 +86,13 @@ pub struct FaultPlan {
     /// `(probability, millis)` — batch-pop stalls.
     pub queue_stall: Option<(f64, u64)>,
     /// `(p_enter, p_exit, ber_bad)` — Gilbert–Elliott burst profile for the
-    /// channel link (consumed by `deploy-sim`, not by the serving hooks).
+    /// channel link (consumed by `deploy-sim` and the hot-swap pipeline,
+    /// not by the serving hooks).
     pub link_burst: Option<(f64, f64, f64)>,
+    /// Probability that the hot-swap engine-build stage fails.
+    pub swap_build: Option<f64>,
+    /// Probability that the hot-swap canary gate reports divergence.
+    pub swap_canary: Option<f64>,
 }
 
 fn parse_prob(s: &str) -> Result<f64> {
@@ -137,6 +144,8 @@ impl FaultPlan {
                         parse_prob(ber)?,
                     ))
                 }
+                ("swap.build", [p]) => plan.swap_build = Some(parse_prob(p)?),
+                ("swap.canary", [p]) => plan.swap_canary = Some(parse_prob(p)?),
                 (k, _) => bail!("bad fault clause {k:?} = {val:?} (see util::faults docs)"),
             }
         }
@@ -252,6 +261,38 @@ pub fn link_burst() -> Option<crate::channel::link::BurstConfig> {
     Some(crate::channel::link::BurstConfig { p_enter, p_exit, ber_bad })
 }
 
+/// One fault decision for a hot-swap stage.  Certainties (`p <= 0` or
+/// `p >= 1`) never touch the decision RNG: swap stages run on the *deploy*
+/// thread, concurrently with the inference worker, and a deploy-side draw
+/// would perturb the worker's deterministic fault stream.  The chaos suite
+/// only arms swap clauses at 0 or 1, so determinism of the serving-side
+/// sequence is preserved.
+fn swap_stage_fires(pick: impl Fn(&FaultPlan) -> Option<f64>) -> bool {
+    if !armed() {
+        return false;
+    }
+    let mut g = STATE.lock().unwrap();
+    let Some(active) = g.as_mut() else { return false };
+    let Some(p) = pick(&active.plan) else { return false };
+    if p >= 1.0 {
+        true
+    } else if p <= 0.0 {
+        false
+    } else {
+        active.rng.chance(p)
+    }
+}
+
+/// Whether the armed plan fails the hot-swap engine-build stage.
+pub fn swap_build_fail() -> bool {
+    swap_stage_fires(|p| p.swap_build)
+}
+
+/// Whether the armed plan makes the hot-swap canary gate report divergence.
+pub fn swap_canary_fail() -> bool {
+    swap_stage_fires(|p| p.swap_canary)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,7 +307,8 @@ mod tests {
     fn parses_full_grammar() {
         let plan = FaultPlan::parse(
             "seed=42;engine.error=host-csd:0.5;engine.panic=*:0.05;\
-             engine.delay=host-f32:0.2:25;queue.stall=0.1:10;link.burst=0.01:0.25:0.02",
+             engine.delay=host-f32:0.2:25;queue.stall=0.1:10;link.burst=0.01:0.25:0.02;\
+             swap.build=0.25;swap.canary=1.0",
         )
         .unwrap();
         assert_eq!(plan.seed, 42);
@@ -275,6 +317,8 @@ mod tests {
         assert_eq!(plan.engine_delay, vec![("host-f32".to_string(), 0.2, 25)]);
         assert_eq!(plan.queue_stall, Some((0.1, 10)));
         assert_eq!(plan.link_burst, Some((0.01, 0.25, 0.02)));
+        assert_eq!(plan.swap_build, Some(0.25));
+        assert_eq!(plan.swap_canary, Some(1.0));
     }
 
     #[test]
@@ -293,6 +337,8 @@ mod tests {
             "engine.error=host-csd:1.5",  // probability out of range
             "engine.delay=host-f32:0.2",  // missing millis
             "queue.stall=0.1:abc",        // non-numeric millis
+            "swap.build=2.0",             // probability out of range
+            "swap.canary=maybe",          // non-numeric probability
             "seed=notanumber",
             "unknown.site=1:0.5",
             "noequals",
@@ -313,5 +359,7 @@ mod tests {
         assert_eq!(engine_action("host-csd"), None);
         assert_eq!(queue_stall(), None);
         assert!(link_burst().is_none());
+        assert!(!swap_build_fail());
+        assert!(!swap_canary_fail());
     }
 }

@@ -13,16 +13,25 @@
 //! decisions are drawn on the single inference-worker thread; quarantine
 //! cooldowns count route ticks, not wall time), so the outcomes must be
 //! identical under both pool configurations.
+//!
+//! The hot-swap scenario family at the bottom drives
+//! [`Server::deploy_store`] through the same switchboard: a mid-traffic
+//! swap over a bursty channel, staged failures at every pipeline stage
+//! (`link.burst` stuck bad, `swap.canary`, `swap.build`), and a
+//! probation-window quarantine storm that rolls the old generation back.
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use qsq_edge::channel::{LinkConfig, TransferError};
 use qsq_edge::coordinator::server::{Client, Roster, Server, ServerConfig};
+use qsq_edge::coordinator::swap::{self, SwapConfig, SwapError, SwapStage};
 use qsq_edge::data::{synth_store, RequestGen};
 use qsq_edge::kernels::Scratch;
 use qsq_edge::model::meta::ModelKind;
 use qsq_edge::runtime::engine::PolicySelect;
-use qsq_edge::tensor::Tensor;
+use qsq_edge::tensor::{ops, Tensor};
 use qsq_edge::util::faults::{self, FaultPlan};
 use qsq_edge::util::json::Value;
 
@@ -68,6 +77,11 @@ fn drive(port: u16, gen_seed: u64, n: usize) -> Vec<&'static str> {
             kind_of(&c.infer(i as u64, img.data()).unwrap())
         })
         .collect()
+}
+
+/// The roster generation a success reply was served by.
+fn gen_of(reply: &Value) -> Option<u64> {
+    reply.get("gen").as_f64().map(|g| g as u64)
 }
 
 /// Sequential predictions for a fixed input set (None for error replies).
@@ -486,4 +500,245 @@ fn disarm_restores_clean_serving() {
     assert_eq!(srv.metrics.counter("engine_failures"), 0);
     assert_eq!(srv.metrics.counter("worker_panics"), 0);
     srv.stop();
+}
+
+// --- hot model swap under chaos ---------------------------------------------
+
+/// The headline swap scenario: continuous traffic from four clients while a
+/// new model generation ships over a bursty channel mid-stream.  Zero
+/// requests are dropped or left hanging, the generation stamp in the replies
+/// advances 1 → 2, and post-swap predictions match a reference staging of
+/// the same store bit-for-bit (at `batch: 4` even singletons clear the
+/// quarter-full crossover, so batch-fill routes everything to the
+/// artifact-class f32 engine — the compare runs against
+/// `staged.engines[2]`).
+#[test]
+fn hot_swap_mid_traffic_over_bursty_channel() {
+    let _g = guard();
+    const STORE_A: u64 = 61;
+    const STORE_B: u64 = 62;
+    // armed before start: the boot roster gets (pass-through) injector
+    // wrappers and the deploy link gets the Gilbert–Elliott burst profile
+    arm("seed=21;link.burst=0.001:0.05:0.01");
+    let cfg = ServerConfig {
+        batch: 4,
+        max_delay: Duration::from_millis(2),
+        probation_batches: 4,
+        ..Default::default()
+    };
+    let srv = Server::start_with_store(synth_store(STORE_A, ModelKind::Lenet), cfg).unwrap();
+    let port = srv.port;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let threads: Vec<_> = (0..4u64)
+        .map(|t| {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+                let mut gen = RequestGen::new(ModelKind::Lenet, 500 + t);
+                let mut n = 0u64;
+                let mut gens = std::collections::BTreeSet::new();
+                while !stop.load(Ordering::Relaxed) {
+                    let (img, _) = gen.next();
+                    let r = c.infer(t * 10_000 + n, img.data()).unwrap();
+                    assert_eq!(
+                        kind_of(&r),
+                        "pred",
+                        "no request may drop during the swap: {}",
+                        r.to_json()
+                    );
+                    gens.insert(gen_of(&r).expect("success replies carry gen"));
+                    n += 1;
+                }
+                (n, gens)
+            })
+        })
+        .collect();
+
+    // let traffic establish on generation 1, then deploy mid-stream
+    std::thread::sleep(Duration::from_millis(50));
+    let scfg = SwapConfig {
+        link: LinkConfig { max_retries: 64, ..Default::default() },
+        seed: 33,
+        ..Default::default()
+    };
+    let store_b = synth_store(STORE_B, ModelKind::Lenet);
+    let rep = srv.deploy_store(&store_b, &scfg).unwrap();
+    assert_eq!(rep.generation, 2);
+    assert!(
+        rep.transfer.retransmissions > 0,
+        "the burst profile must have forced ARQ retransmissions"
+    );
+    assert_eq!(rep.transfer.frames_delivered, rep.transfer.frames);
+    assert_eq!(rep.canary.len(), 3, "every staged engine was canaried");
+
+    // let the new generation serve under load, then stop traffic
+    std::thread::sleep(Duration::from_millis(50));
+    stop.store(true, Ordering::Relaxed);
+    let mut total = 0u64;
+    let mut gens = std::collections::BTreeSet::new();
+    for t in threads {
+        let (n, g) = t.join().unwrap();
+        total += n;
+        gens.extend(g);
+    }
+    assert!(total > 0, "traffic must actually have flowed");
+    assert!(
+        gens.contains(&1) && gens.contains(&2),
+        "both generations must have served: {gens:?}"
+    );
+
+    // post-swap logits must bitwise-match the new store: an independent
+    // staging of the same store over the same (seeded) channel builds
+    // bitwise-identical engines, so its predictions are the ground truth
+    let staged = swap::stage(&store_b, &scfg).unwrap();
+    let mut scratch = Scratch::new();
+    let mut c = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+    let mut reqs = RequestGen::new(ModelKind::Lenet, 777);
+    for i in 0..12u64 {
+        let (img, _) = reqs.next();
+        let r = c.infer(90_000 + i, img.data()).unwrap();
+        assert_eq!(kind_of(&r), "pred");
+        assert_eq!(gen_of(&r), Some(2), "all post-swap traffic is generation 2");
+        let x = Tensor::new(vec![1, 28, 28, 1], img.data().to_vec()).unwrap();
+        let logits = staged.engines[2].forward_with(&x, &mut scratch).unwrap();
+        let want = ops::argmax_rows(&logits)[0] as f64;
+        assert_eq!(r.get("pred").as_f64(), Some(want), "request {i} diverged");
+    }
+
+    let m = &srv.metrics;
+    assert_eq!(m.counter("swap.attempts"), 1);
+    assert_eq!(m.counter("swap.installs"), 1);
+    assert_eq!(m.counter("swap.rollbacks"), 0);
+    assert_eq!(m.counter("swap.failed"), 0);
+    assert_eq!(m.gauge("swap.generation"), Some(2.0));
+    assert_eq!(m.counter("shed_overload"), 0, "admission stayed bounded and clean");
+    srv.stop();
+    faults::disarm();
+}
+
+/// Every staging failure mode leaves the old generation serving untouched:
+/// ARQ exhaustion on a stuck-bad channel (deterministic for a fixed seed —
+/// satellite of the CI determinism gate), an injected canary rejection, and
+/// an injected engine-build failure.  Each is surfaced as a typed
+/// [`SwapError`] naming the stage, with the partial transfer report
+/// reachable under the transfer failure.
+#[test]
+fn failed_deploy_stages_leave_the_old_generation_serving() {
+    let _g = guard();
+    const STORE_A: u64 = 63;
+    const STORE_B: u64 = 64;
+    // built disarmed: the serving path itself is fault-free throughout
+    let srv = Server::start_with_store(
+        synth_store(STORE_A, ModelKind::Lenet),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let baseline = preds_for(srv.port, 17, 6);
+    assert!(baseline.iter().all(|p| p.is_some()));
+    let store_b = synth_store(STORE_B, ModelKind::Lenet);
+
+    // 1. transfer exhaustion: Gilbert–Elliott stuck in the bad state
+    // corrupts every frame, so frame 0 exhausts its retries — identically
+    // for any fixed seed and pool configuration
+    arm("seed=24;link.burst=1.0:0.0:0.5");
+    let scfg = SwapConfig {
+        link: LinkConfig { max_retries: 3, ..Default::default() },
+        seed: 24,
+        ..Default::default()
+    };
+    let err = srv.deploy_store(&store_b, &scfg).unwrap_err();
+    let se = err.downcast_ref::<SwapError>().expect("typed stage error");
+    assert_eq!(se.stage, SwapStage::Transfer);
+    let te = se
+        .source
+        .downcast_ref::<TransferError>()
+        .expect("the partial transfer report survives the stage wrapper");
+    assert_eq!(te.frame, 0, "the first frame already exhausts");
+    assert_eq!(te.partial.frames_delivered, 0, "stuck-bad: nothing lands");
+    assert_eq!(te.partial.retransmissions, 4, "max_retries 3 → exactly 4 sends");
+
+    // 2. canary divergence (injected at certainty — no RNG draw, so the
+    // worker's fault stream is untouched)
+    arm("seed=25;swap.canary=1.0");
+    let err = srv.deploy_store(&store_b, &SwapConfig::default()).unwrap_err();
+    assert_eq!(err.downcast_ref::<SwapError>().unwrap().stage, SwapStage::Canary);
+
+    // 3. engine-build failure (injected)
+    arm("seed=26;swap.build=1.0");
+    let err = srv.deploy_store(&store_b, &SwapConfig::default()).unwrap_err();
+    assert_eq!(err.downcast_ref::<SwapError>().unwrap().stage, SwapStage::Build);
+
+    faults::disarm();
+    let m = &srv.metrics;
+    assert_eq!(m.counter("swap.attempts"), 3);
+    assert_eq!(m.counter("swap.failed"), 3);
+    assert_eq!(m.counter("swap.fail.transfer"), 1);
+    assert_eq!(m.counter("swap.canary_rejects"), 1);
+    assert_eq!(m.counter("swap.fail.build"), 1);
+    assert_eq!(m.counter("swap.installs"), 0);
+    assert_eq!(m.counter("swap.rollbacks"), 0);
+    assert_eq!(m.gauge("swap.generation"), Some(1.0), "generation never moved");
+    // the old generation answers, bit-identically to before the failed deploys
+    assert_eq!(preds_for(srv.port, 17, 6), baseline);
+    srv.stop();
+    faults::disarm();
+}
+
+/// A swap that *installs* cleanly but collapses under traffic rolls back
+/// automatically: the staged generation passes its canary on raw engines,
+/// the install wraps it in (armed) fault injectors, every batch it serves
+/// errors, and the first quarantine event inside the probation window
+/// reinstates the displaced generation — which then serves bit-identically
+/// to the pre-swap baseline.
+#[test]
+fn quarantine_storm_during_probation_rolls_back() {
+    let _g = guard();
+    const STORE_A: u64 = 65;
+    const STORE_B: u64 = 66;
+    let cfg = ServerConfig {
+        quarantine_after: 2,
+        probation_batches: 16,
+        rollback_quarantines: 1,
+        ..Default::default()
+    };
+    // built DISARMED: the boot generation carries no injector wrappers, so
+    // the storm below only ever hits the swapped-in generation
+    let srv = Server::start_with_store(synth_store(STORE_A, ModelKind::Lenet), cfg).unwrap();
+    let baseline = preds_for(srv.port, 19, 6);
+    assert!(baseline.iter().all(|p| p.is_some()));
+
+    // arm engine errors, then deploy: staging forwards on the raw engines
+    // (the canary judges the model, not the chaos harness), but the install
+    // wraps the new generation — which then fails every batch it serves
+    arm("seed=27;engine.error=*:1.0");
+    let rep = srv
+        .deploy_store(&synth_store(STORE_B, ModelKind::Lenet), &SwapConfig::default())
+        .unwrap();
+    assert_eq!(rep.generation, 2);
+    assert_eq!(srv.metrics.gauge("swap.generation"), Some(2.0));
+
+    // two singleton batches fail (quarantine_after = 2) → quarantine event →
+    // probation storm → automatic rollback; everything after is served by
+    // the displaced generation
+    let kinds = drive(srv.port, 600, 8);
+    assert_eq!(&kinds[..2], &["engine-error", "engine-error"], "{kinds:?}");
+    assert!(
+        kinds[2..].iter().all(|k| *k == "pred"),
+        "rolled-back serving must be clean: {kinds:?}"
+    );
+    let m = &srv.metrics;
+    assert_eq!(m.counter("swap.installs"), 1);
+    assert_eq!(m.counter("swap.rollbacks"), 1);
+    assert_eq!(m.gauge("swap.generation"), Some(1.0), "back on generation 1");
+    assert!(m.counter("quarantines") >= 1);
+
+    faults::disarm();
+    assert_eq!(
+        preds_for(srv.port, 19, 6),
+        baseline,
+        "the rolled-back generation answers bit-identically"
+    );
+    srv.stop();
+    faults::disarm();
 }

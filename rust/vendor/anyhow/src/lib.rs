@@ -6,7 +6,14 @@
 //! `ensure!` macros.  Errors carry a flat context chain of strings —
 //! `{e}` prints the outermost message, `{e:#}` prints the whole chain joined
 //! with `": "`, exactly like the real crate's Display impls.
+//!
+//! Like the real crate, an [`Error`] built from a typed error value
+//! ([`Error::new`] or the blanket `From`/`?` conversion) keeps that value
+//! and [`Error::downcast_ref`] recovers it; adding `.context(..)` frames
+//! does not disturb it.  `anyhow!`/`bail!` errors carry no value and never
+//! downcast.
 
+use std::any::Any;
 use std::convert::Infallible;
 use std::fmt::{self, Debug, Display};
 
@@ -14,15 +21,31 @@ use std::fmt::{self, Debug, Display};
 /// real crate.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
-/// A string-chain error: outermost context first.
+/// A string-chain error: outermost context first, plus the typed error
+/// value it was built from (when it was built from one) for downcasting.
 pub struct Error {
     chain: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Construct from any displayable message.
     pub fn msg<M: Display>(m: M) -> Error {
-        Error { chain: vec![m.to_string()] }
+        Error { chain: vec![m.to_string()], payload: None }
+    }
+
+    /// Construct from a typed error value, keeping it downcastable.
+    pub fn new<E>(e: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain, payload: Some(Box::new(e)) }
     }
 
     /// Wrap with an outer context message.
@@ -34,6 +57,12 @@ impl Error {
     /// The context chain, outermost first.
     pub fn chain(&self) -> impl Iterator<Item = &str> {
         self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The typed error value this `Error` was built from, if it was built
+    /// from one of type `E` (context frames layered on top don't hide it).
+    pub fn downcast_ref<E: Any>(&self) -> Option<&E> {
+        self.payload.as_ref()?.downcast_ref::<E>()
     }
 }
 
@@ -68,13 +97,7 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Error {
-        let mut chain = vec![e.to_string()];
-        let mut src = e.source();
-        while let Some(s) = src {
-            chain.push(s.to_string());
-            src = s.source();
-        }
-        Error { chain }
+        Error::new(e)
     }
 }
 
@@ -182,5 +205,35 @@ mod tests {
         let r: Result<()> = Err(Error::msg("inner"));
         let e = r.with_context(|| format!("outer {}", 1)).unwrap_err();
         assert_eq!(format!("{e:#}"), "outer 1: inner");
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Typed {
+        code: u32,
+    }
+    impl Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.code)
+        }
+    }
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn typed_payloads_downcast_through_context() {
+        let e = Error::new(Typed { code: 7 });
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed { code: 7 }));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        // context frames change the message, not the payload
+        let e = e.context("while frobbing");
+        assert_eq!(format!("{e:#}"), "while frobbing: typed error 7");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed { code: 7 }));
+        // `?`-converted std errors downcast too
+        fn fails() -> Result<()> {
+            Err(Typed { code: 9 })?;
+            Ok(())
+        }
+        assert_eq!(fails().unwrap_err().downcast_ref::<Typed>(), Some(&Typed { code: 9 }));
+        // message-only errors carry no payload
+        assert!(anyhow!("plain").downcast_ref::<Typed>().is_none());
     }
 }
