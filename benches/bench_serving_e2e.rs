@@ -57,7 +57,7 @@ fn policy_dispatch_entries() -> Vec<BenchResult> {
         for n in [1usize, 8, 32] {
             let xdata: Vec<f32> = (0..n * 28 * 28).map(|_| r.f32()).collect();
             let x = Tensor::new(vec![n, 28, 28, 1], xdata).unwrap();
-            let engine = roster.engine(roster.route(n)).name();
+            let engine = roster.engine_name(roster.route(n));
             let name = format!("dispatch {:<13} b={n:<2} -> {engine}", policy.name());
             let b = run_bench(&name, 2, 12, n as f64, || {
                 roster.dispatch(&x, &mut scratch).unwrap()

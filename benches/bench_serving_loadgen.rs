@@ -1,0 +1,287 @@
+//! Open-loop serving load harness: Poisson arrivals at a swept target QPS
+//! against a live server (synthetic store, no artifacts needed), measuring
+//! the numbers a saturation story actually needs — p50/p99/p999 latency and
+//! the shed rate at each offered level — and writing them to
+//! `BENCH_serving.json` so the serving trajectory is tracked across PRs
+//! next to `BENCH_kernels.json`.
+//!
+//! **Open-loop** is the load model that finds saturation: arrivals follow a
+//! fixed schedule drawn before the run (exponential inter-arrival gaps, so
+//! a Poisson process), and a slow server does *not* slow the arrival
+//! process down — unlike closed-loop clients, which self-throttle and hide
+//! queueing collapse.  Latency is measured from each request's *scheduled*
+//! arrival time, not from when the writer actually got it onto the wire,
+//! so coordinated omission cannot flatter the tail.
+//!
+//! The offered load is spread over `LOADGEN_CONNS` pipelined connections
+//! (independent Poisson streams sum to a Poisson stream), each with many
+//! requests in flight — this leans on the mux front end's id-keyed
+//! out-of-order replies; a closed-loop one-at-a-time client could never
+//! offer load beyond `conns / latency`.
+//!
+//! Environment knobs (CI smoke uses low levels; local runs can sweep to
+//! saturation):
+//!
+//! * `LOADGEN_QPS`   — comma-separated target levels (default `100,300,600`)
+//! * `LOADGEN_SECS`  — seconds per level (default `4`)
+//! * `LOADGEN_CONNS` — connections the load is spread over (default `16`)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use qsq_edge::coordinator::server::{Server, ServerConfig};
+use qsq_edge::data::{synth_store, RequestGen};
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::util::json::{self, Value};
+use qsq_edge::util::rng::Rng;
+use qsq_edge::util::stats;
+
+/// Requests per connection are numbered locally; ids encode (conn, seq) so
+/// the reader can map a reply back to its scheduled arrival.
+const CONN_ID_STRIDE: u64 = 1_000_000;
+
+struct LevelResult {
+    target_qps: f64,
+    offered: usize,
+    completed: usize,
+    shed: usize,
+    achieved_qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    p999_ms: f64,
+}
+
+fn env_f64_list(name: &str, default: &str) -> Vec<f64> {
+    std::env::var(name)
+        .unwrap_or_else(|_| default.to_string())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&q| q > 0.0)
+        .collect()
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+/// Draw one connection's Poisson arrival schedule: offsets (seconds from
+/// run start) with exponential gaps at `rate` arrivals/sec, covering
+/// `secs`.
+fn poisson_offsets(rng: &mut Rng, rate: f64, secs: f64) -> Vec<f64> {
+    let mut offsets = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        let u = (rng.f32() as f64).min(1.0 - 1e-9);
+        t += -(1.0 - u).ln() / rate;
+        if t >= secs {
+            return offsets;
+        }
+        offsets.push(t);
+    }
+}
+
+/// One reply line, classified.  `seq` is the per-connection sequence the
+/// id encodes.
+enum Reply {
+    Completed { seq: usize, at: Instant },
+    Shed,
+    Other(String),
+}
+
+fn classify(line: &str) -> Option<Reply> {
+    let v = json::parse(line).ok()?;
+    let seq = (v.get("id").as_f64()? as u64 % CONN_ID_STRIDE) as usize;
+    if v.get("pred").as_f64().is_some() {
+        return Some(Reply::Completed { seq, at: Instant::now() });
+    }
+    match v.get("error").as_str() {
+        Some("overloaded") | Some("deadline exceeded") | Some("server shutting down") => {
+            Some(Reply::Shed)
+        }
+        Some(e) => Some(Reply::Other(e.to_string())),
+        None => Some(Reply::Other(line.to_string())),
+    }
+}
+
+/// Run one offered-load level against a fresh server.
+fn run_level(target_qps: f64, secs: f64, conns: usize) -> LevelResult {
+    let cfg = ServerConfig {
+        max_delay: Duration::from_millis(2),
+        ..Default::default()
+    };
+    let srv = Server::start_with_store(synth_store(5, ModelKind::Lenet), cfg).unwrap();
+    let port = srv.port;
+
+    // one request body reused for every send: the load harness measures the
+    // serving path, not image generation
+    let (img, _) = RequestGen::new(ModelKind::Lenet, 11).next();
+    let pixels: Vec<Value> = img.data().iter().map(|&p| json::num(p as f64)).collect();
+    let pixels = Arc::new(Value::Arr(pixels));
+
+    let per_conn_rate = target_qps / conns as f64;
+    let schedules: Vec<Arc<Vec<f64>>> = (0..conns)
+        .map(|c| {
+            let mut rng = Rng::new(1000 + c as u64);
+            Arc::new(poisson_offsets(&mut rng, per_conn_rate, secs))
+        })
+        .collect();
+    let offered: usize = schedules.iter().map(|s| s.len()).sum();
+
+    let start = Instant::now() + Duration::from_millis(50); // connect window
+    let handles: Vec<_> = (0..conns)
+        .map(|c| {
+            let schedule = schedules[c].clone();
+            let pixels = pixels.clone();
+            std::thread::spawn(move || -> (usize, usize, usize, Vec<f64>) {
+                let stream = TcpStream::connect(format!("127.0.0.1:{port}")).unwrap();
+                stream.set_nodelay(true).ok();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+                // writer half on this thread's spawn: paces sends to the
+                // precomputed schedule, pipelining without waiting on replies
+                let wsched = schedule.clone();
+                let mut wstream = stream.try_clone().unwrap();
+                let writer = std::thread::spawn(move || {
+                    for (seq, &off) in wsched.iter().enumerate() {
+                        let due = start + Duration::from_secs_f64(off);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        let id = c as u64 * CONN_ID_STRIDE + seq as u64;
+                        let req = json::obj(vec![
+                            ("id", json::num(id as f64)),
+                            ("pixels", (*pixels).clone()),
+                        ]);
+                        wstream.write_all(req.to_json().as_bytes()).unwrap();
+                        wstream.write_all(b"\n").unwrap();
+                    }
+                    // half-close: the server flushes every in-flight reply,
+                    // then closes — the reader below sees EOF when done
+                    wstream.shutdown(Shutdown::Write).ok();
+                });
+
+                let mut completed = 0usize;
+                let mut shed = 0usize;
+                let mut other = 0usize;
+                let mut lat_ms = Vec::new();
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {}
+                    }
+                    match classify(line.trim()) {
+                        Some(Reply::Completed { seq, at }) => {
+                            completed += 1;
+                            // latency from the *scheduled* arrival — the
+                            // anti-coordinated-omission measurement
+                            let sched = start + Duration::from_secs_f64(schedule[seq]);
+                            lat_ms.push(
+                                at.saturating_duration_since(sched).as_secs_f64() * 1e3,
+                            );
+                        }
+                        Some(Reply::Shed) => shed += 1,
+                        Some(Reply::Other(e)) => {
+                            eprintln!("loadgen: unexpected reply: {e}");
+                            other += 1;
+                        }
+                        None => other += 1,
+                    }
+                }
+                writer.join().unwrap();
+                (completed, shed, other, lat_ms)
+            })
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let mut completed = 0usize;
+    let mut shed = 0usize;
+    let mut other = 0usize;
+    let mut lat_ms = Vec::new();
+    for h in handles {
+        let (c, s, o, l) = h.join().unwrap();
+        completed += c;
+        shed += s;
+        other += o;
+        lat_ms.extend(l);
+    }
+    let wall = t0.elapsed().as_secs_f64().max(secs);
+    srv.stop();
+    assert_eq!(other, 0, "load harness saw non-shed error replies");
+    assert_eq!(
+        completed + shed,
+        offered,
+        "every offered request must get a terminal reply"
+    );
+
+    let pct = |p: f64| if lat_ms.is_empty() { 0.0 } else { stats::percentile(&lat_ms, p) };
+    LevelResult {
+        target_qps,
+        offered,
+        completed,
+        shed,
+        achieved_qps: completed as f64 / wall,
+        p50_ms: pct(50.0),
+        p99_ms: pct(99.0),
+        p999_ms: pct(99.9),
+    }
+}
+
+fn main() {
+    let levels = env_f64_list("LOADGEN_QPS", "100,300,600");
+    let secs = env_f64_list("LOADGEN_SECS", "4").first().copied().unwrap_or(4.0);
+    let conns = env_usize("LOADGEN_CONNS", 16);
+
+    println!(
+        "== open-loop serving loadgen (synthetic store, {conns} conns, {secs}s/level) =="
+    );
+    println!(
+        "{:>10} {:>8} {:>10} {:>6} {:>10} {:>9} {:>9} {:>9} {:>10}",
+        "target", "offered", "completed", "shed", "shed-rate", "p50 ms", "p99 ms", "p999 ms",
+        "achieved"
+    );
+    let mut results = Vec::new();
+    for qps in levels {
+        let r = run_level(qps, secs, conns);
+        let shed_rate = r.shed as f64 / r.offered.max(1) as f64;
+        println!(
+            "{:>10.0} {:>8} {:>10} {:>6} {:>10.3} {:>9.2} {:>9.2} {:>9.2} {:>10.1}",
+            r.target_qps,
+            r.offered,
+            r.completed,
+            r.shed,
+            shed_rate,
+            r.p50_ms,
+            r.p99_ms,
+            r.p999_ms,
+            r.achieved_qps
+        );
+        results.push(json::obj(vec![
+            ("name", json::s(&format!("loadgen qps={:.0}", r.target_qps))),
+            ("target_qps", json::num(r.target_qps)),
+            ("offered", json::num(r.offered as f64)),
+            ("completed", json::num(r.completed as f64)),
+            ("shed", json::num(r.shed as f64)),
+            ("shed_rate", json::num(shed_rate)),
+            ("achieved_qps", json::num(r.achieved_qps)),
+            ("p50_ms", json::num(r.p50_ms)),
+            ("p99_ms", json::num(r.p99_ms)),
+            ("p999_ms", json::num(r.p999_ms)),
+        ]));
+    }
+    let doc = json::obj(vec![
+        ("bench", json::s("serving_loadgen")),
+        ("results", Value::Arr(results)),
+    ]);
+    std::fs::write("BENCH_serving.json", doc.to_json() + "\n").unwrap();
+    println!("wrote BENCH_serving.json");
+}

@@ -1,11 +1,13 @@
 //! Dynamic batching queue for the serving loop, with bounded admission and
 //! per-request deadlines.
 //!
-//! Requests arrive from acceptor threads; the single inference worker pops a
-//! batch when either (a) `max_batch` requests are waiting or (b) the oldest
-//! request has waited `max_delay` — the classic dynamic-batching policy the
-//! batch-32 PJRT artifact wants (the batch is padded to the artifact size by
-//! the worker).
+//! Requests arrive from the mux front end; the replicated inference workers
+//! each pop a batch when either (a) `max_batch` requests are waiting or
+//! (b) the oldest request has waited `max_delay` — the classic
+//! dynamic-batching policy the batch-32 PJRT artifact wants (the batch is
+//! padded to the artifact size by the worker).  The queue is safe with any
+//! number of producers and consumers: batches are drained under one mutex
+//! hold, so a job lands in exactly one worker's batch.
 //!
 //! Two fault-tolerance mechanisms bound the queue's behavior under pressure:
 //!
@@ -110,11 +112,13 @@ impl<T> BatchQueue<T> {
             return Err(PushError::Full);
         }
         g.queue.push_back(Pending { payload, enqueued: Instant::now() });
-        // single-consumer queue: the inference worker is the only condvar
-        // waiter (push never blocks), so one wakeup per push suffices —
-        // notify_all would make every producer syscall-storm the same
-        // thread.  close() keeps notify_all as the belt-and-braces wakeup
-        // for that same worker.
+        // One wakeup per push is enough even with N worker threads parked on
+        // the condvar: each push adds one job, and one woken worker either
+        // serves it or goes back to a `wait_timeout` bounded by `max_delay`,
+        // so no job can strand a sleeping worker for longer than the batching
+        // window.  notify_all here would make every producer syscall-storm
+        // the whole worker pool per request; close() and kick() keep
+        // notify_all because those events concern every waiter.
         self.cv.notify_one();
         Ok(())
     }
@@ -173,12 +177,16 @@ impl<T> BatchQueue<T> {
         }
     }
 
-    /// Wake the (possibly idle) consumer: its next [`BatchQueue::pop_batch`]
-    /// returns promptly — with an empty batch if nothing is due — so it can
-    /// run its between-batches checks.  The serving worker only looks at the
-    /// hot-swap slot between pops, so a deploy posted to an idle server
-    /// needs this nudge; without traffic the worker would otherwise sleep on
-    /// the condvar and never install the staged generation.
+    /// Wake the (possibly idle) consumers: the next [`BatchQueue::pop_batch`]
+    /// to observe the flag returns promptly — with an empty batch if nothing
+    /// is due — so that worker can run its between-batches checks.  The flag
+    /// is one-shot and consumed under the mutex, so with N replicated
+    /// workers exactly one of them takes the empty pop; the serving workers
+    /// only look at the hot-swap slot between pops, so a deploy posted to an
+    /// idle server needs this nudge — without traffic every worker would
+    /// otherwise sleep on the condvar and never install the staged
+    /// generation.  (`notify_all` because the kicked worker may be any of
+    /// them; the rest re-check state and go back to sleep.)
     pub fn kick(&self) {
         let mut g = self.inner.lock().unwrap();
         g.kicked = true;
@@ -406,6 +414,87 @@ mod tests {
         // the flag is one-shot: queued work flows normally afterwards
         q.push(7).unwrap();
         assert_eq!(q.pop_batch().unwrap().jobs.len(), 1);
+    }
+
+    #[test]
+    fn replicated_consumers_partition_jobs_exactly_once() {
+        // N workers draining one queue: every job is served by exactly one
+        // consumer (batches drain under the mutex), and closing the queue
+        // releases all of them.
+        use std::collections::HashSet;
+        use std::sync::mpsc;
+        let q = Arc::new(BatchQueue::new(8, Duration::from_millis(3)));
+        let (tx, rx) = mpsc::channel::<Vec<i32>>();
+        let workers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    while let Some(popped) = q.pop_batch() {
+                        if !popped.jobs.is_empty() {
+                            tx.send(popped.jobs.iter().map(|p| p.payload).collect()).unwrap();
+                        }
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let total = 300;
+        for i in 0..total {
+            q.push(i).unwrap();
+            if i % 50 == 0 {
+                thread::sleep(Duration::from_millis(1)); // vary batch shapes
+            }
+        }
+        let mut seen = HashSet::new();
+        let mut got = 0;
+        while got < total {
+            let batch = rx.recv_timeout(Duration::from_secs(30)).expect("workers stalled");
+            for v in batch {
+                assert!(seen.insert(v), "job {v} served by two workers");
+                got += 1;
+            }
+        }
+        assert!(q.close().is_empty(), "all jobs already drained");
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(seen.len() as i32, total);
+    }
+
+    #[test]
+    fn kick_with_replicated_consumers_wakes_exactly_one_empty_pop() {
+        // the one-shot flag must be consumed by a single worker — a kick
+        // observed by every replica would multiply swap-pickup checks and,
+        // worse, double-install
+        use std::sync::mpsc;
+        let q = Arc::new(BatchQueue::new(8, Duration::from_secs(30)));
+        let (tx, rx) = mpsc::channel::<usize>();
+        let workers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    while let Some(popped) = q.pop_batch() {
+                        tx.send(popped.jobs.len()).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        thread::sleep(Duration::from_millis(30)); // let all three block
+        q.kick();
+        let first = rx.recv_timeout(Duration::from_secs(10)).expect("kick lost");
+        assert_eq!(first, 0, "the kicked worker pops an empty batch");
+        // no second empty pop arrives: the other workers went back to sleep
+        assert!(
+            rx.recv_timeout(Duration::from_millis(200)).is_err(),
+            "kick flag consumed more than once"
+        );
+        q.close();
+        for w in workers {
+            w.join().unwrap();
+        }
     }
 
     #[test]

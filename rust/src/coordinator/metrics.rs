@@ -5,7 +5,9 @@
 //! `gauge.scratch_hw.<layer>.*`, the unified per-engine
 //! `gauge.engine.<name>.*` family, `latency_ms.<series>.*` and the
 //! latency-ring semantics — is documented for dashboard consumers
-//! in `docs/METRICS.md`; keep the two in sync.
+//! in `docs/METRICS.md`; keep the two in sync.  The same registry also
+//! renders as Prometheus text ([`Metrics::prometheus`]) for the server's
+//! `/metrics` endpoint.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -150,9 +152,64 @@ impl Metrics {
                 format!("latency_ms.{k}.p95"),
                 json::num(stats::percentile(xs, 95.0) * 1e3),
             );
+            obj.insert(
+                format!("latency_ms.{k}.p99"),
+                json::num(stats::percentile(xs, 99.0) * 1e3),
+            );
             obj.insert(format!("latency_ms.{k}.count"), json::num(s.total as f64));
         }
         Value::Obj(obj)
+    }
+
+    /// Prometheus text exposition (version 0.0.4) over the same registry the
+    /// JSON snapshot reads.  Dotted keys become `qsq_`-prefixed metric names
+    /// with every non-`[a-zA-Z0-9_]` byte mapped to `_`: counters export as
+    /// `qsq_<name>_total` (`TYPE counter`), gauges as `qsq_<name>`
+    /// (`TYPE gauge`), and each latency series as a `TYPE summary` —
+    /// `qsq_<name>_seconds{quantile="…"}` over the retained window plus
+    /// `qsq_<name>_seconds_count` carrying the lifetime total.  (No `_sum`
+    /// line: the ring forgets old samples, so a lifetime sum would drift
+    /// from the window and `rate()` over it would lie.  `BTreeMap` iteration
+    /// keeps the output stably ordered for diffing.)
+    pub fn prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            name.chars()
+                .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+                .collect()
+        }
+        let mut out = String::new();
+        {
+            let counters = self.counters.lock().unwrap();
+            for (k, v) in counters.iter() {
+                let n = sanitize(k);
+                out.push_str(&format!("# TYPE qsq_{n}_total counter\n"));
+                out.push_str(&format!("qsq_{n}_total {v}\n"));
+            }
+        }
+        {
+            let gauges = self.gauges.lock().unwrap();
+            for (k, v) in gauges.iter() {
+                let n = sanitize(k);
+                out.push_str(&format!("# TYPE qsq_{n} gauge\n"));
+                out.push_str(&format!("qsq_{n} {v}\n"));
+            }
+        }
+        {
+            let lats = self.latencies.lock().unwrap();
+            for (k, s) in lats.iter() {
+                if s.samples.is_empty() {
+                    continue;
+                }
+                let n = sanitize(k);
+                out.push_str(&format!("# TYPE qsq_{n}_seconds summary\n"));
+                for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0), ("0.999", 99.9)] {
+                    let v = stats::percentile(&s.samples, p);
+                    out.push_str(&format!("qsq_{n}_seconds{{quantile=\"{q}\"}} {v}\n"));
+                }
+                out.push_str(&format!("qsq_{n}_seconds_count {}\n", s.total));
+            }
+        }
+        out
     }
 }
 
@@ -250,6 +307,50 @@ mod tests {
         // slot 10 still holds the oldest retained sample
         assert_eq!(s.samples[10], 10.0);
         assert_eq!(s.total, (LATENCY_WINDOW + 10) as u64);
+    }
+
+    #[test]
+    fn prometheus_renders_all_three_families() {
+        let m = Metrics::new();
+        m.inc("requests", 7);
+        m.set_gauge("engine.host-csd.forwards", 3.0);
+        for i in 1..=100 {
+            m.observe_s("infer_batch", i as f64 / 1000.0);
+        }
+        let text = m.prometheus();
+        // counters: sanitized name, _total suffix, TYPE line
+        assert!(text.contains("# TYPE qsq_requests_total counter\n"));
+        assert!(text.contains("qsq_requests_total 7\n"));
+        // gauges: dots and dashes both map to underscores
+        assert!(text.contains("# TYPE qsq_engine_host_csd_forwards gauge\n"));
+        assert!(text.contains("qsq_engine_host_csd_forwards 3\n"));
+        // latency series: summary with the four quantiles + lifetime count
+        assert!(text.contains("# TYPE qsq_infer_batch_seconds summary\n"));
+        assert!(text.contains("qsq_infer_batch_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("qsq_infer_batch_seconds{quantile=\"0.999\"}"));
+        assert!(text.contains("qsq_infer_batch_seconds_count 100\n"));
+        // exposition hygiene: every line is either a comment or `name value`
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# TYPE qsq_") || line.starts_with("qsq_"),
+                "unexpected exposition line: {line}"
+            );
+        }
+        assert!(text.ends_with('\n'));
+    }
+
+    #[test]
+    fn prometheus_skips_empty_series_and_snapshot_carries_p99() {
+        let m = Metrics::new();
+        // a series that exists but has no samples yet must not emit a
+        // quantile-less summary block
+        m.latencies.lock().unwrap().entry("empty".into()).or_default();
+        assert!(!m.prometheus().contains("qsq_empty"));
+        for i in 1..=100 {
+            m.observe_s("e2e", i as f64 / 1000.0);
+        }
+        let snap = m.snapshot().to_json();
+        assert!(snap.contains("latency_ms.e2e.p99"), "snapshot: {snap}");
     }
 
     #[test]

@@ -4,6 +4,7 @@ pub mod batcher;
 pub mod deploy;
 pub mod finetune;
 pub mod metrics;
+pub(crate) mod mux;
 pub mod router;
 pub mod server;
 pub mod swap;

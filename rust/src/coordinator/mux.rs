@@ -1,0 +1,672 @@
+//! Multiplexed event-loop front end: one thread, every connection.
+//!
+//! A single non-blocking poll loop owns the listener and all client
+//! sockets — no thread-per-connection, so concurrency is bounded by file
+//! descriptors, not OS threads.  Std-only by design (the vendored
+//! dependency universe has no `mio`/`epoll` binding): the loop polls each
+//! socket with non-blocking reads/writes and sleeps briefly only when a
+//! full pass makes no progress, which keeps idle CPU negligible while
+//! bounding added latency to well under a millisecond.
+//!
+//! Per connection the mux maintains:
+//!
+//! * a **read buffer** reassembling newline-delimited requests from
+//!   arbitrarily fragmented TCP reads (a slow writer dribbling one request
+//!   across many segments is fine);
+//! * an **in-flight table** of requests handed to the worker pool, keyed
+//!   by the request `id` — requests may be *pipelined* (many unanswered on
+//!   one connection) and replies are forwarded in completion order, so a
+//!   batch that lands early never waits behind a slow one (out-of-order
+//!   responses are the contract; clients match replies by `id`);
+//! * a **write buffer** absorbing partial writes — a slow reader backs up
+//!   its own buffer (hard-capped, then the connection is dropped) and
+//!   never stalls the loop or other connections.
+//!
+//! Request parsing is strict ([`parse_request`]): malformed JSON, a
+//! missing/non-integer `id`, bad pixels, and a *duplicate* `id` already in
+//! flight on the same connection are each a typed [`RequestError`],
+//! answered with a terminal error reply and counted in `bad_requests` —
+//! a duplicate id would otherwise key two in-flight replies to one slot.
+//!
+//! The same port speaks just enough HTTP for ops tooling: `GET /healthz`
+//! (liveness + serving generation), `GET /metrics` (Prometheus text
+//! exposition of the `counter.`/`gauge.`/`latency_ms.` schema), and
+//! `GET /metrics.json` (the JSON snapshot).  See `docs/METRICS.md`.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchQueue, PushError};
+use super::metrics::Metrics;
+use super::server::{retry_after_ms, Job, Roster};
+use crate::util::json::{self, Value};
+
+/// Largest buffered request line; a line still unterminated past this is
+/// not a client we can serve (one request is H*W*C ≈ tens of KB of JSON).
+const MAX_LINE_BYTES: usize = 1 << 20;
+/// Largest backed-up write buffer before a slow reader is disconnected.
+const MAX_WRITE_BUF: usize = 4 << 20;
+/// Reads drained per connection per tick (fairness under a fast writer).
+const READS_PER_TICK: usize = 4;
+const READ_CHUNK: usize = 16 * 1024;
+/// Idle sleep when a full pass over every socket made no progress.
+const IDLE_SLEEP: Duration = Duration::from_micros(500);
+/// How long after shutdown the mux keeps flushing terminal replies.
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+/// Gauge refresh period for `mux.connections` / `mux.inflight`.
+const GAUGE_PERIOD: Duration = Duration::from_millis(250);
+
+/// Everything the mux loop shares with the rest of the server.
+pub(crate) struct MuxParams {
+    pub(crate) queue: Arc<BatchQueue<Job>>,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) roster: Arc<Roster>,
+    pub(crate) shutdown: Arc<AtomicBool>,
+    /// Pixels per request (H*W*C for the served model).
+    pub(crate) pix_expected: usize,
+    /// How long a dispatched request may stay unanswered before the mux
+    /// replies `inference timeout` on the worker's behalf.
+    pub(crate) reply_timeout: Duration,
+    /// Replicated worker count (reported by `/healthz`).
+    pub(crate) workers: usize,
+}
+
+/// Why a request line was rejected.  Every variant is terminal for that
+/// request only (the connection stays up) and counts in `bad_requests`.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum RequestError {
+    BadJson(String),
+    MissingId,
+    NonIntegerId,
+    MissingPixels,
+    BadPixel(usize),
+    WrongPixelCount { expected: usize, got: usize },
+    /// The same `id` is already in flight on this connection — admitting it
+    /// would key two replies to one slot.
+    DuplicateId(u64),
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::BadJson(e) => write!(f, "bad json: {e}"),
+            RequestError::MissingId => write!(f, "missing id"),
+            RequestError::NonIntegerId => write!(f, "id must be a non-negative integer"),
+            RequestError::MissingPixels => write!(f, "missing pixels"),
+            RequestError::BadPixel(i) => write!(f, "pixel {i} is not a number"),
+            RequestError::WrongPixelCount { expected, got } => {
+                write!(f, "expected {expected} pixels, got {got}")
+            }
+            RequestError::DuplicateId(id) => {
+                write!(f, "duplicate id {id}: already in flight on this connection")
+            }
+        }
+    }
+}
+
+impl RequestError {
+    /// The terminal error reply for this rejection.  A duplicate id names
+    /// the id so a pipelining client can match it; the other variants have
+    /// no trustworthy id to echo.
+    fn reply(&self) -> Value {
+        match self {
+            RequestError::DuplicateId(id) => json::obj(vec![
+                ("error", json::s(&self.to_string())),
+                ("id", json::num(*id as f64)),
+            ]),
+            _ => json::obj(vec![("error", json::s(&self.to_string()))]),
+        }
+    }
+}
+
+/// Parse one request line: `{"id": N, "pixels": [ ... ]}` with exactly
+/// `pix_expected` numeric pixels and a non-negative integer `id`.
+pub(crate) fn parse_request(
+    line: &str,
+    pix_expected: usize,
+) -> Result<(u64, Vec<f32>), RequestError> {
+    let v = json::parse(line).map_err(|e| RequestError::BadJson(e.to_string()))?;
+    let idf = v.get("id").as_f64().ok_or(RequestError::MissingId)?;
+    if !(idf >= 0.0 && idf.fract() == 0.0 && idf <= u64::MAX as f64) {
+        return Err(RequestError::NonIntegerId);
+    }
+    let id = idf as u64;
+    let arr = v.get("pixels").as_arr().ok_or(RequestError::MissingPixels)?;
+    if arr.len() != pix_expected {
+        return Err(RequestError::WrongPixelCount { expected: pix_expected, got: arr.len() });
+    }
+    let mut pixels = Vec::with_capacity(arr.len());
+    for (i, p) in arr.iter().enumerate() {
+        pixels.push(p.as_f64().ok_or(RequestError::BadPixel(i))? as f32);
+    }
+    Ok((id, pixels))
+}
+
+/// `{"id":..,"error":..}` — the terminal reply shape for a request that
+/// was admitted (so its id is trustworthy) but cannot be served.
+fn err_reply(id: u64, msg: &str) -> Value {
+    json::obj(vec![("error", json::s(msg)), ("id", json::num(id as f64))])
+}
+
+/// A write buffer tolerant of partial writes: [`WriteBuf::flush_to`] pushes
+/// as much as the socket accepts and keeps the rest for the next tick, so
+/// a slow reader costs buffer space, never loop stalls.
+struct WriteBuf {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already written (compacted once it grows).
+    pos: usize,
+}
+
+impl WriteBuf {
+    fn new() -> WriteBuf {
+        WriteBuf { buf: Vec::new(), pos: 0 }
+    }
+
+    fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Write what the sink will take; `Ok(true)` if any bytes moved.
+    fn flush_to(&mut self, w: &mut impl Write) -> io::Result<bool> {
+        let mut progress = false;
+        while self.pos < self.buf.len() {
+            match w.write(&self.buf[self.pos..]) {
+                Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "write zero")),
+                Ok(n) => {
+                    self.pos += n;
+                    progress = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 64 * 1024 {
+            // drop the written prefix so a long-lived slow reader does not
+            // pin an ever-growing allocation
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        Ok(progress)
+    }
+}
+
+/// One dispatched request awaiting its worker reply.
+struct Inflight {
+    id: u64,
+    rx: mpsc::Receiver<Value>,
+    since: Instant,
+}
+
+/// One multiplexed client connection.
+struct Conn {
+    stream: TcpStream,
+    /// Unconsumed request bytes (reassembles fragmented lines).
+    rbuf: Vec<u8>,
+    wbuf: WriteBuf,
+    inflight: Vec<Inflight>,
+    /// Close once the write buffer drains (EOF seen, HTTP reply sent, or a
+    /// protocol error made further input meaningless).
+    close_after_flush: bool,
+    /// Read and discard further input (still detects the client's close).
+    discard_input: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: WriteBuf::new(),
+            inflight: Vec::new(),
+            close_after_flush: false,
+            discard_input: false,
+            dead: false,
+        }
+    }
+
+    /// Nothing left to deliver: safe to let shutdown close the socket.
+    fn drained(&self) -> bool {
+        self.inflight.is_empty() && self.wbuf.is_empty()
+    }
+
+    fn push_reply(&mut self, v: Value) {
+        if self.wbuf.len() > MAX_WRITE_BUF {
+            // slow reader past the hard cap: drop the connection rather
+            // than buffer without bound
+            self.dead = true;
+            return;
+        }
+        self.wbuf.push(v.to_json().as_bytes());
+        self.wbuf.push(b"\n");
+    }
+
+    /// One scheduling pass: read, parse/dispatch, collect replies, flush.
+    /// Returns whether any byte or reply moved (the loop's idle signal).
+    fn step(&mut self, p: &MuxParams) -> bool {
+        let mut progress = false;
+        progress |= self.fill_read_buffer(p);
+        if self.dead {
+            return progress;
+        }
+        progress |= self.process_lines(p);
+        progress |= self.poll_replies(p);
+        match self.wbuf.flush_to(&mut self.stream) {
+            Ok(moved) => progress |= moved,
+            Err(_) => {
+                self.dead = true;
+                return progress;
+            }
+        }
+        if self.close_after_flush && self.drained() {
+            self.dead = true;
+        }
+        progress
+    }
+
+    fn fill_read_buffer(&mut self, p: &MuxParams) -> bool {
+        let mut progress = false;
+        let mut chunk = [0u8; READ_CHUNK];
+        for _ in 0..READS_PER_TICK {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    // client closed its write side: no more requests, but
+                    // pending replies still flush before we hang up
+                    self.close_after_flush = true;
+                    self.discard_input = true;
+                    progress = true;
+                    break;
+                }
+                Ok(n) => {
+                    progress = true;
+                    if !self.discard_input {
+                        self.rbuf.extend_from_slice(&chunk[..n]);
+                        if self.rbuf.len() > MAX_LINE_BYTES
+                            && !self.rbuf.contains(&b'\n')
+                        {
+                            p.metrics.inc("bad_requests", 1);
+                            self.push_reply(json::obj(vec![(
+                                "error",
+                                json::s("request line too long"),
+                            )]));
+                            self.close_after_flush = true;
+                            self.discard_input = true;
+                            self.rbuf.clear();
+                            break;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    fn process_lines(&mut self, p: &MuxParams) -> bool {
+        let mut progress = false;
+        while !self.discard_input {
+            let Some(nl) = self.rbuf.iter().position(|&b| b == b'\n') else { break };
+            let raw: Vec<u8> = self.rbuf.drain(..=nl).collect();
+            let line = String::from_utf8_lossy(&raw);
+            let line = line.trim_end_matches('\n').trim_end_matches('\r').trim();
+            if line.is_empty() {
+                continue;
+            }
+            progress = true;
+            if line.starts_with("GET ") || line.starts_with("HEAD ") {
+                // just enough HTTP for ops tooling: answer the request
+                // line, ignore the header block, close when flushed
+                let is_head = line.starts_with("HEAD ");
+                let path = line.split_whitespace().nth(1).unwrap_or("/").to_string();
+                let resp = http_response(&path, is_head, p);
+                self.wbuf.push(resp.as_bytes());
+                self.close_after_flush = true;
+                self.discard_input = true;
+                self.rbuf.clear();
+                break;
+            }
+            self.dispatch_line(line, p);
+        }
+        progress
+    }
+
+    fn dispatch_line(&mut self, line: &str, p: &MuxParams) {
+        match parse_request(line, p.pix_expected) {
+            Ok((id, pixels)) => {
+                if self.inflight.iter().any(|f| f.id == id) {
+                    p.metrics.inc("bad_requests", 1);
+                    self.push_reply(RequestError::DuplicateId(id).reply());
+                    return;
+                }
+                let (tx, rx) = mpsc::channel();
+                let job = Job { id, pixels, enqueued: Instant::now(), resp: tx };
+                match p.queue.push(job) {
+                    Ok(()) => {
+                        self.inflight.push(Inflight { id, rx, since: Instant::now() })
+                    }
+                    Err(PushError::Full) => {
+                        // admission control: shed with a backoff hint
+                        p.metrics.inc("shed_overload", 1);
+                        let hint = retry_after_ms(&p.queue, &p.metrics);
+                        self.push_reply(json::obj(vec![
+                            ("error", json::s("overloaded")),
+                            ("id", json::num(id as f64)),
+                            ("retry_after_ms", json::num(hint)),
+                        ]));
+                    }
+                    Err(PushError::Closed) => {
+                        self.push_reply(err_reply(id, "server shutting down"));
+                    }
+                }
+            }
+            Err(e) => {
+                p.metrics.inc("bad_requests", 1);
+                self.push_reply(e.reply());
+            }
+        }
+    }
+
+    /// Forward completed replies in *completion* order — out-of-order by
+    /// design; pipelining clients match replies to requests by `id`.
+    fn poll_replies(&mut self, p: &MuxParams) -> bool {
+        let mut progress = false;
+        let mut i = 0;
+        while i < self.inflight.len() {
+            match self.inflight[i].rx.try_recv() {
+                Ok(v) => {
+                    self.inflight.swap_remove(i);
+                    self.push_reply(v);
+                    progress = true;
+                }
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    // the job's sender was dropped without a reply (a
+                    // worker died mid-batch): terminal error, not a hang
+                    let id = self.inflight.swap_remove(i).id;
+                    self.push_reply(err_reply(id, "inference aborted"));
+                    progress = true;
+                }
+                Err(mpsc::TryRecvError::Empty) => {
+                    if self.inflight[i].since.elapsed() > p.reply_timeout {
+                        let id = self.inflight.swap_remove(i).id;
+                        self.push_reply(err_reply(id, "inference timeout"));
+                        progress = true;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        progress
+    }
+}
+
+/// Render one ops response.  `Connection: close` keeps the HTTP surface
+/// stateless — curl/Prometheus reconnect per scrape.
+fn http_response(path: &str, is_head: bool, p: &MuxParams) -> String {
+    let (status, ctype, body) = match path {
+        "/healthz" => {
+            let body = json::obj(vec![
+                ("generation", json::num(p.roster.generation() as f64)),
+                ("status", json::s("ok")),
+                ("workers", json::num(p.workers as f64)),
+            ])
+            .to_json()
+                + "\n";
+            ("200 OK", "application/json", body)
+        }
+        "/metrics" => ("200 OK", "text/plain; version=0.0.4", p.metrics.prometheus()),
+        "/metrics.json" => {
+            ("200 OK", "application/json", p.metrics.snapshot().to_json() + "\n")
+        }
+        _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+    };
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    if is_head {
+        head
+    } else {
+        head + &body
+    }
+}
+
+/// The mux event loop.  Accepts while the server is up; on shutdown stops
+/// accepting, keeps flushing terminal replies until every connection is
+/// drained (bounded by [`DRAIN_GRACE`]), then exits and drops the sockets.
+pub(crate) fn run(listener: TcpListener, p: MuxParams) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut drain_deadline: Option<Instant> = None;
+    let mut last_gauges = Instant::now();
+    loop {
+        let shutting_down = p.shutdown.load(Ordering::Relaxed);
+        let mut progress = false;
+        if !shutting_down {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nodelay(true).ok();
+                        if stream.set_nonblocking(true).is_ok() {
+                            p.metrics.inc("mux.accepted", 1);
+                            conns.push(Conn::new(stream));
+                            progress = true;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+        for conn in &mut conns {
+            progress |= conn.step(&p);
+        }
+        conns.retain(|c| !c.dead);
+        if last_gauges.elapsed() >= GAUGE_PERIOD {
+            last_gauges = Instant::now();
+            p.metrics.set_gauge("mux.connections", conns.len() as f64);
+            p.metrics.set_gauge(
+                "mux.inflight",
+                conns.iter().map(|c| c.inflight.len()).sum::<usize>() as f64,
+            );
+        }
+        if shutting_down {
+            // every queued job gets its terminal reply from stop()'s drain
+            // or a serving worker, and reply_timeout bounds the rest — so
+            // "all connections drained" is reached, with DRAIN_GRACE as
+            // the backstop against a wedged peer
+            if p.queue.is_closed() && drain_deadline.is_none() {
+                drain_deadline = Some(Instant::now() + DRAIN_GRACE);
+            }
+            let drained = conns.iter().all(|c| c.drained());
+            let expired = drain_deadline.is_some_and(|d| Instant::now() >= d);
+            if (drained && p.queue.is_closed()) || expired {
+                break;
+            }
+        }
+        if !progress {
+            thread::sleep(IDLE_SLEEP);
+        }
+    }
+    p.metrics.set_gauge("mux.connections", 0.0);
+    p.metrics.set_gauge("mux.inflight", 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{Roster, ServerConfig};
+    use crate::data::synth_store;
+    use crate::model::meta::ModelKind;
+
+    #[test]
+    fn parse_request_validates() {
+        let ok = parse_request(r#"{"id": 7, "pixels": [0.1, 0.2, 0.3, 0.4]}"#, 4).unwrap();
+        assert_eq!(ok.0, 7);
+        assert_eq!(ok.1.len(), 4);
+
+        let e = parse_request("{nope", 4).unwrap_err();
+        assert!(matches!(e, RequestError::BadJson(_)));
+        assert!(e.to_string().starts_with("bad json:"));
+
+        let e = parse_request(r#"{"pixels": [1, 2, 3, 4]}"#, 4).unwrap_err();
+        assert_eq!(e, RequestError::MissingId);
+        assert_eq!(e.to_string(), "missing id");
+
+        let e = parse_request(r#"{"id": 1, "nopixels": true}"#, 4).unwrap_err();
+        assert_eq!(e, RequestError::MissingPixels);
+        assert_eq!(e.to_string(), "missing pixels");
+
+        let e = parse_request(r#"{"id": 1, "pixels": [1, 2]}"#, 4).unwrap_err();
+        assert_eq!(e, RequestError::WrongPixelCount { expected: 4, got: 2 });
+        assert_eq!(e.to_string(), "expected 4 pixels, got 2");
+    }
+
+    #[test]
+    fn parse_request_rejects_non_numeric_pixels() {
+        let e = parse_request(r#"{"id": 1, "pixels": [1, "x", 3, 4]}"#, 4).unwrap_err();
+        assert_eq!(e, RequestError::BadPixel(1));
+        assert!(e.to_string().contains("not a number"));
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_ids() {
+        // the bugfix: a missing or malformed id is a typed rejection, never
+        // a request that silently keys its reply to the wrong slot
+        for line in [
+            r#"{"id": -1, "pixels": [1, 2, 3, 4]}"#,
+            r#"{"id": 1.5, "pixels": [1, 2, 3, 4]}"#,
+        ] {
+            let e = parse_request(line, 4).unwrap_err();
+            assert_eq!(e, RequestError::NonIntegerId, "{line}");
+        }
+        let e = parse_request(r#"{"id": "seven", "pixels": [1, 2, 3, 4]}"#, 4).unwrap_err();
+        assert_eq!(e, RequestError::MissingId);
+        // and the duplicate-id reply names the id so a pipelining client
+        // can match the rejection
+        let r = RequestError::DuplicateId(9).reply();
+        assert_eq!(r.get("id").as_f64(), Some(9.0));
+        assert!(r.get("error").as_str().unwrap().contains("duplicate id 9"));
+    }
+
+    /// A sink that takes at most 3 bytes per write and blocks when its
+    /// budget runs out — the pathological slow reader.
+    struct Dribble {
+        out: Vec<u8>,
+        budget: usize,
+    }
+
+    impl Write for Dribble {
+        fn write(&mut self, b: &[u8]) -> io::Result<usize> {
+            if self.budget == 0 {
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "blocked"));
+            }
+            let n = b.len().min(3).min(self.budget);
+            self.budget -= n;
+            self.out.extend_from_slice(&b[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_buf_survives_partial_writes_and_compacts() {
+        let payload: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        let mut wb = WriteBuf::new();
+        wb.push(&payload);
+        assert_eq!(wb.len(), payload.len());
+        let mut sink = Dribble { out: Vec::new(), budget: 0 };
+        // a fully blocked sink: no progress, no error, nothing lost
+        assert!(!wb.flush_to(&mut sink).unwrap());
+        assert_eq!(wb.len(), payload.len());
+        // dribble the rest out in small budget grants
+        let mut rounds = 0;
+        while !wb.is_empty() {
+            sink.budget = 4096;
+            wb.flush_to(&mut sink).unwrap();
+            rounds += 1;
+            assert!(rounds < 200, "must terminate");
+        }
+        assert_eq!(sink.out, payload, "every byte arrives exactly once, in order");
+        // buffer fully reset after drain
+        assert_eq!(wb.len(), 0);
+        assert_eq!(wb.pos, 0);
+        assert!(wb.buf.is_empty());
+    }
+
+    fn test_params() -> MuxParams {
+        let cfg = ServerConfig::default();
+        let roster = Arc::new(
+            Roster::build(None, synth_store(99, ModelKind::Lenet), &cfg).unwrap(),
+        );
+        MuxParams {
+            queue: Arc::new(BatchQueue::bounded(4, Duration::from_millis(5), 16, None)),
+            metrics: Arc::new(Metrics::new()),
+            roster,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            pix_expected: 4,
+            reply_timeout: Duration::from_secs(1),
+            workers: 2,
+        }
+    }
+
+    #[test]
+    fn http_responses_render() {
+        let p = test_params();
+        p.metrics.inc("requests", 3);
+        let h = http_response("/healthz", false, &p);
+        assert!(h.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(h.contains("Content-Type: application/json"));
+        assert!(h.contains("Connection: close"));
+        let body = h.split("\r\n\r\n").nth(1).unwrap();
+        let v = json::parse(body.trim()).unwrap();
+        assert_eq!(v.get("status").as_str(), Some("ok"));
+        assert_eq!(v.get("workers").as_f64(), Some(2.0));
+        assert_eq!(v.get("generation").as_f64(), Some(1.0));
+        // content-length is the body's exact byte count
+        let clen: usize = h
+            .lines()
+            .find(|l| l.starts_with("Content-Length: "))
+            .and_then(|l| l.trim_start_matches("Content-Length: ").trim().parse().ok())
+            .unwrap();
+        assert_eq!(clen, body.len());
+
+        let m = http_response("/metrics", false, &p);
+        assert!(m.contains("text/plain; version=0.0.4"));
+        assert!(m.contains("qsq_requests_total 3"));
+
+        // HEAD: headers only, same content-length
+        let head = http_response("/metrics", true, &p);
+        assert!(head.ends_with("\r\n\r\n"));
+        assert!(!head.contains("qsq_requests_total"));
+
+        let j = http_response("/metrics.json", false, &p);
+        let jbody = j.split("\r\n\r\n").nth(1).unwrap();
+        assert!(json::parse(jbody.trim()).is_ok());
+
+        assert!(http_response("/nope", false, &p).starts_with("HTTP/1.1 404"));
+    }
+}

@@ -1,5 +1,6 @@
-//! TCP inference server: JSON-lines protocol, dynamic batching, one
-//! inference owner thread over a pluggable engine.
+//! TCP inference server: JSON-lines protocol over a multiplexed event-loop
+//! front end, with N replicated inference workers over a shared engine
+//! roster.
 //!
 //! Protocol (one JSON object per line):
 //! ```text
@@ -8,27 +9,42 @@
 //! ```
 //! `gen` is the roster generation that served the request (it advances on a
 //! hot model swap — see below).
-//! Each connection is synchronous (request → response); concurrency comes
-//! from multiple connections feeding the shared [`BatchQueue`], which the
-//! worker drains in dynamic batches.  The worker executes over a [`Roster`]
-//! of boxed [`Engine`]s: the PJRT artifact wrapper (padded to the compiled
-//! batch size), the pure-rust blocked-GEMM [`F32Engine`], the code-domain
-//! [`QuantizedEngine`] (plane-packed codes on qgemm v2), and the CSD
-//! shift-and-add [`CsdEngine`] (truncated-CSD digit planes on
-//! `kernels::csd`).  [`EngineSelect`] pins the roster to one engine, or
-//! `Auto` builds the full roster and a pluggable
+//!
+//! ## Front end and workers
+//!
+//! A single non-blocking mux thread ([`super::mux`]) owns the listener and
+//! every client socket: requests on one connection may be *pipelined* and
+//! replies come back keyed by `id` in completion order, so one slow batch
+//! never head-of-line-blocks a connection.  The same port answers plain
+//! HTTP `GET`s for ops: `/healthz`, `/metrics` (Prometheus text), and
+//! `/metrics.json` (the JSON snapshot).
+//!
+//! Parsed requests land on the shared bounded [`BatchQueue`], drained by
+//! [`ServerConfig::workers`] replicated inference workers (default:
+//! `available_parallelism`).  Each worker owns its own [`Scratch`] arena and
+//! leases the persistent kernel pool; all of them execute over one shared
+//! [`Roster`] of boxed [`Engine`]s behind a read-write lock — forwards take
+//! a read lock (concurrent across workers), a hot-swap install takes the
+//! write lock, which is exactly the old "install between batches" contract
+//! generalized to N workers.  The roster holds the PJRT artifact wrapper
+//! (padded to the compiled batch size), the pure-rust blocked-GEMM
+//! [`F32Engine`], the code-domain [`QuantizedEngine`] (plane-packed codes on
+//! qgemm v2), and the CSD shift-and-add [`CsdEngine`] (truncated-CSD digit
+//! planes on `kernels::csd`).  [`EngineSelect`] pins the roster to one
+//! engine, or `Auto` builds the full roster and a pluggable
 //! [`DispatchPolicy`] re-routes every popped batch (`--policy`
 //! batch-fill|latency|energy): artifact-filling batches to the compiled
 //! path, small/singleton batches to the low-latency or minimum-energy host
 //! engines — under the energy policy the smallest batches reach the CSD
-//! engine.  The worker owns one [`Scratch`] arena, so the host paths stop
-//! allocating per request once warm, and all host kernels dispatch row bands
-//! on the persistent worker pool.  After every batch the worker exports the
-//! pool's spawn/wakeup counters, the arena's per-layer high-water marks
-//! (`pool.*`, `scratch_hw.*` — a flat `pool.spawns` is the "zero threads
-//! spawned per request" steady-state invariant), and every roster engine's
-//! uniform [`crate::runtime::engine::EngineReport`] as the
-//! `engine.<name>.*` gauge family (`docs/METRICS.md`).
+//! engine.  Row-band kernels compute each output row independently, so
+//! logits are bitwise identical whichever worker serves the batch:
+//! `--workers N` reproduces `--workers 1` exactly on a pinned engine.
+//! After every batch the serving worker exports the pool's spawn/wakeup
+//! counters, its arena's per-layer high-water marks (`pool.*`,
+//! `scratch_hw.*`), its own `worker.<i>.batches` / `worker.<i>.ewma_ms`
+//! gauges, and the routed engine's uniform
+//! [`crate::runtime::engine::EngineReport`] as the `engine.<name>.*` gauge
+//! family (`docs/METRICS.md`).
 //!
 //! ## Fault tolerance
 //!
@@ -36,17 +52,17 @@
 //! actually hit edge deployments:
 //!
 //! * **Overload** — the queue is bounded ([`ServerConfig::queue_cap`],
-//!   default 4× the batch size): at capacity, `push` rejects and the
-//!   connection replies `{"error":"overloaded","retry_after_ms":N}`, with
-//!   `N` derived from the observed per-batch inference EWMA times the
-//!   backlog depth.  Jobs that waited past [`ServerConfig::deadline`] are
-//!   shed by the worker with a `deadline exceeded` reply instead of burning
+//!   default 4× the batch size): at capacity, `push` rejects and the mux
+//!   replies `{"id":N,"error":"overloaded","retry_after_ms":R}`, with `R`
+//!   derived from the observed per-batch inference EWMA times the backlog
+//!   depth.  Jobs that waited past [`ServerConfig::deadline`] are shed by
+//!   the popping worker with a `deadline exceeded` reply instead of burning
 //!   a kernel slot (`shed_overload` / `shed_deadline` counters,
 //!   `queue.depth` gauge).
-//! * **Engine failures** — every forward runs under `catch_unwind`: an
-//!   engine error or panic fails only the in-flight batch (each job gets a
-//!   terminal error reply) and the worker keeps serving with a fresh
-//!   [`Scratch`].  An engine that fails
+//! * **Engine failures** — every forward runs under `catch_unwind` inside
+//!   [`Roster::serve_batch`]: an engine error or panic fails only the
+//!   in-flight batch (each job gets a terminal error reply) and the worker
+//!   keeps serving with a fresh [`Scratch`].  An engine that fails
 //!   [`ServerConfig::quarantine_after`] times consecutively is
 //!   *quarantined*: [`Roster::route`] hides it from the dispatch policy, so
 //!   the existing preference orders degrade traffic to the next engine
@@ -64,43 +80,49 @@
 //!
 //! [`Server::deploy_store`] replaces the serving model with zero downtime:
 //! the [`super::swap`] pipeline stages a complete replacement generation off
-//! the serving thread (encode → noisy-channel transfer → hardened decode →
-//! engine build → canary gate), posts it to the worker's
-//! [`SwapSlot`](super::swap::SwapSlot), and the worker installs it *between*
-//! batches — the in-flight batch finishes on the old generation, and the
-//! [`Roster`] generation counter advances (`swap.generation` gauge, `gen` in
-//! every reply).  The displaced engines are retained for
-//! [`ServerConfig::probation_batches`]: if the new generation racks up
+//! the serving threads (encode → noisy-channel transfer → hardened decode →
+//! engine build → canary gate), posts it to the shared
+//! [`SwapSlot`](super::swap::SwapSlot), and whichever worker next reaches
+//! its between-batches check installs it into the shared roster under the
+//! write lock — in-flight batches finish on the old generation (their read
+//! locks are held through the forward), and the [`Roster`] generation
+//! counter advances (`swap.generation` gauge, `gen` in every reply).  The
+//! displaced engines are retained for [`ServerConfig::probation_batches`]
+//! served batches *across all workers* (the accounting is global, under one
+//! mutex): if the new generation racks up
 //! [`ServerConfig::rollback_quarantines`] quarantine events inside that
-//! window, the worker rolls the old generation straight back
+//! window, the observing worker rolls the old generation straight back
 //! (`swap.rollbacks`).  A failure at any staging stage leaves the old
 //! generation serving untouched and bumps the matching `swap.fail.*`
 //! counter.  All PR-6 guarantees hold across the swap boundary: admission
 //! stays bounded (the queue is never touched), quarantine state is rebuilt
 //! per generation, and [`Server::stop`] marks the slot dead so no deployer
-//! blocks on a worker that exited.
+//! blocks on workers that exited.
 //!
 //! Chaos scenarios are driven through [`crate::util::faults`]
 //! (`PALLAS_FAULTS`): when armed at roster-build time every engine is
 //! wrapped in a [`FaultInjector`]; disarmed, the wrapper is never
 //! constructed and the hot path is untouched.  Swapped-in generations get
 //! the same treatment at install time, and the `swap.build` / `swap.canary`
-//! clauses fail the staging pipeline at those stages.
+//! clauses fail the staging pipeline at those stages.  While faults are
+//! armed the worker count is clamped to 1 — fault decisions are drawn from
+//! one RNG stream, and replicated workers would interleave draws
+//! nondeterministically.
 
-use std::cell::Cell;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::panic::{self, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::batcher::{BatchQueue, Pending, PushError};
+use super::batcher::{BatchQueue, Pending};
 use super::metrics::Metrics;
+use super::mux;
 use super::swap::{self, PendingSwap, SwapConfig, SwapError, SwapReport, SwapSlot, SwapStage};
 use crate::device::{CsdQuality, QualityConfig};
 use crate::kernels::{self, Scratch};
@@ -108,7 +130,7 @@ use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::AssignMode;
 use crate::runtime::engine::{
-    DispatchPolicy, Engine, EngineKind, FaultInjector, PjrtEngine, PolicySelect,
+    DispatchPolicy, Engine, EngineKind, EngineReport, FaultInjector, PjrtEngine, PolicySelect,
 };
 use crate::runtime::host::{CsdEngine, F32Engine, QuantizedEngine};
 use crate::tensor::{ops, Tensor};
@@ -126,12 +148,12 @@ pub const AUTO_QUALITY: QualityConfig = QualityConfig { phi: 4, group: 16 };
 /// still halves-or-better the shift-and-add work of exact CSD.
 pub const AUTO_CSD_DIGITS: usize = 4;
 
-/// Longest a deployer waits for the worker to pick up and acknowledge a
-/// posted generation.  The worker installs between batches, so this only
-/// trips if the worker is wedged in a pathological forward.
+/// Longest a deployer waits for a worker to pick up and acknowledge a
+/// posted generation.  Workers install between batches, so this only
+/// trips if every worker is wedged in a pathological forward.
 const SWAP_INSTALL_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// Which inference engine(s) the worker thread runs.
+/// Which inference engine(s) the worker threads run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineSelect {
     /// Batch-aware roster: every popped batch is re-routed by the
@@ -189,6 +211,12 @@ pub struct ServerConfig {
     /// Quarantine events within the probation window that trigger an
     /// automatic rollback to the displaced generation.
     pub rollback_quarantines: u64,
+    /// Replicated inference workers draining the shared queue
+    /// (`--workers`); 0 derives the count from `available_parallelism`.
+    /// Clamped to 1 while fault injection is armed, so chaos outcomes draw
+    /// from one RNG stream deterministically
+    /// ([`ServerConfig::effective_workers`]).
+    pub workers: usize,
 }
 
 impl ServerConfig {
@@ -212,6 +240,22 @@ impl ServerConfig {
     pub fn reply_timeout(&self) -> Duration {
         self.deadline + self.max_delay + Duration::from_secs(5)
     }
+
+    /// The worker count actually spawned: `workers`, or
+    /// `available_parallelism` when left at 0 — and always 1 while fault
+    /// injection is armed (fault decisions are drawn from a single seeded
+    /// stream; replicated workers would interleave draws and break the
+    /// chaos determinism gate).
+    pub fn effective_workers(&self) -> usize {
+        if crate::util::faults::armed() {
+            return 1;
+        }
+        if self.workers > 0 {
+            self.workers
+        } else {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
 }
 
 impl Default for ServerConfig {
@@ -229,78 +273,150 @@ impl Default for ServerConfig {
             quarantine_cooldown: 64,
             probation_batches: 32,
             rollback_quarantines: 1,
+            workers: 0,
         }
     }
 }
 
-/// Per-engine failure bookkeeping for quarantine.  `Cell`-based because the
-/// roster is owned by the single inference-worker thread and routing takes
-/// `&self`.
+/// Sentinel for [`Health::quarantined_until`]: not quarantined.
+const HEALTHY: u64 = u64::MAX;
+
+/// Per-engine failure bookkeeping for quarantine.  Atomic because N workers
+/// report outcomes concurrently under the roster's *read* lock; the
+/// bookkeeping rides along without forcing forwards to serialize.
 struct Health {
     /// Consecutive `forward_with` failures; any success resets it.
-    consecutive: Cell<u32>,
-    /// `Some(tick)` while quarantined: the route tick at which the engine
-    /// becomes a probe candidate again.  `None` = healthy.
-    quarantined_until: Cell<Option<u64>>,
+    consecutive: AtomicU32,
+    /// The route tick at which the engine becomes a probe candidate again;
+    /// [`HEALTHY`] (`u64::MAX`) while not quarantined.
+    quarantined_until: AtomicU64,
 }
 
 impl Health {
     fn new() -> Health {
-        Health { consecutive: Cell::new(0), quarantined_until: Cell::new(None) }
+        Health { consecutive: AtomicU32::new(0), quarantined_until: AtomicU64::new(HEALTHY) }
     }
 
     fn is_quarantined(&self) -> bool {
-        self.quarantined_until.get().is_some()
+        self.quarantined_until.load(Ordering::Relaxed) != HEALTHY
     }
 
     /// Visible to the dispatch policy at `tick`: healthy, or quarantined
     /// with the cooldown expired (a probe candidate).
     fn available(&self, tick: u64) -> bool {
-        match self.quarantined_until.get() {
-            None => true,
-            Some(until) => tick >= until,
-        }
+        let until = self.quarantined_until.load(Ordering::Relaxed);
+        until == HEALTHY || tick >= until
     }
 }
 
-/// The worker's engine roster: every serving engine as a boxed [`Engine`],
-/// with a [`DispatchPolicy`] picking one per popped batch.  A pinned
-/// [`EngineSelect`] builds a one-engine roster (the policy is then inert);
-/// `Auto` builds the full roster.  Constructed on, and owned by, the worker
-/// thread — the PJRT runtime is not `Send`.
-///
-/// The roster also owns the quarantine state: the worker reports each
-/// batch's outcome via [`Roster::note_ok`] / [`Roster::note_failure`], and
-/// [`Roster::route`] hides quarantined engines from the policy so the
-/// preference orders degrade traffic to the next engine class.
-pub struct Roster {
-    engines: Vec<Box<dyn Engine>>,
+/// One generation of the roster: the engine set plus everything derived
+/// from it.  Swapped wholesale under the write lock by [`Roster::install`].
+struct GenerationSet {
+    engines: Vec<Box<dyn Engine + Send + Sync>>,
     /// `engines[i]`'s kind, precomputed for the policy's route call.
     kinds: Vec<EngineKind>,
-    policy: Box<dyn DispatchPolicy>,
-    /// The batch size the policy crossovers price against: the compiled
-    /// artifact batch (the padded cost a routed batch actually pays) when a
-    /// PJRT engine is on the roster, the dynamic-batching cap otherwise.
-    artifact_batch: usize,
     /// `dispatch_<engine>` counter names, precomputed per roster index so
-    /// the worker's hot loop does not format a key per batch.
+    /// the workers' hot loop does not format a key per batch.
     dispatch_counters: Vec<String>,
     /// `engine.<name>.quarantined` gauge names, precomputed likewise.
     quarantine_gauges: Vec<String>,
     health: Vec<Health>,
-    /// Route calls so far — the deterministic clock quarantine cooldowns
-    /// count in (wall time would make chaos outcomes timing-dependent).
-    tick: Cell<u64>,
-    /// Fast path: when false, `route` skips all quarantine filtering.
-    any_quarantined: Cell<bool>,
-    /// Lifetime quarantine events (entries and probe-failure renewals).
-    quarantine_events: Cell<u64>,
-    quarantine_after: u32,
-    quarantine_cooldown: u64,
+    /// The batch size the policy crossovers price against: the compiled
+    /// artifact batch (the padded cost a routed batch actually pays) when a
+    /// PJRT engine is on the roster, the dynamic-batching cap otherwise.
+    artifact_batch: usize,
     /// Which model generation this engine set serves (1 at startup,
     /// advanced by [`Roster::install`] on every hot swap — and moved *back*
     /// on a probation rollback).  Stamped into every reply as `gen`.
-    generation: Cell<u64>,
+    generation: u64,
+}
+
+impl GenerationSet {
+    fn new(
+        engines: Vec<Box<dyn Engine + Send + Sync>>,
+        artifact_batch: usize,
+        generation: u64,
+    ) -> GenerationSet {
+        let kinds = engines.iter().map(|e| e.kind()).collect();
+        let dispatch_counters = engines
+            .iter()
+            .map(|e| format!("dispatch_{}", e.name().replace('-', "_")))
+            .collect();
+        let quarantine_gauges = engines
+            .iter()
+            .map(|e| format!("engine.{}.quarantined", e.name()))
+            .collect();
+        let health = engines.iter().map(|_| Health::new()).collect();
+        GenerationSet {
+            engines,
+            kinds,
+            dispatch_counters,
+            quarantine_gauges,
+            health,
+            artifact_batch,
+            generation,
+        }
+    }
+}
+
+/// How [`Roster::serve_batch`] resolved one batch.
+pub enum BatchOutcome {
+    /// The forward succeeded; real rows only (the PJRT wrapper trims its
+    /// padding).
+    Logits(Tensor),
+    /// The engine returned an error (formatted for the terminal reply).
+    Error(String),
+    /// The engine panicked; the caller's scratch arena may be mid-mutation
+    /// and must be rebuilt.
+    Panic,
+}
+
+/// Everything a worker needs to account for one served batch, captured
+/// under a single read lock so the roster indices are consistent even if an
+/// install lands immediately after.
+pub struct ServedBatch {
+    /// Roster index the policy routed to.
+    pub idx: usize,
+    /// Generation that served (or failed) the batch.
+    pub generation: u64,
+    /// The routed engine's precomputed `dispatch_<engine>` counter key.
+    pub dispatch_counter: String,
+    /// Whether a failure outcome put (or kept) the engine in quarantine.
+    pub quarantined_now: bool,
+    /// The routed engine's report, on success (exported as the
+    /// `engine.<name>.*` gauge family).
+    pub report: Option<EngineReport>,
+    pub outcome: BatchOutcome,
+}
+
+/// The shared engine roster: every serving engine as a boxed [`Engine`],
+/// with a [`DispatchPolicy`] picking one per popped batch.  A pinned
+/// [`EngineSelect`] builds a one-engine roster (the policy is then inert);
+/// `Auto` builds the full roster.
+///
+/// Shared across the replicated inference workers behind a read-write
+/// lock: [`Roster::serve_batch`] routes and forwards under a read lock
+/// (concurrent across workers), and [`Roster::install`] swaps the whole
+/// generation under the write lock — so an install waits for in-flight
+/// batches and an in-flight batch never sees a half-swapped roster.
+///
+/// The roster also owns the quarantine state: batch outcomes are recorded
+/// via [`Roster::note_ok`] / [`Roster::note_failure`] (atomics under the
+/// read lock), and [`Roster::route`] hides quarantined engines from the
+/// policy so the preference orders degrade traffic to the next engine
+/// class.
+pub struct Roster {
+    set: RwLock<GenerationSet>,
+    policy: Box<dyn DispatchPolicy + Send + Sync>,
+    /// Route calls so far — the deterministic clock quarantine cooldowns
+    /// count in (wall time would make chaos outcomes timing-dependent).
+    tick: AtomicU64,
+    /// Fast path: when false, `route` skips all quarantine filtering.
+    any_quarantined: AtomicBool,
+    /// Lifetime quarantine events (entries and probe-failure renewals).
+    quarantine_events: AtomicU64,
+    quarantine_after: u32,
+    quarantine_cooldown: u64,
 }
 
 impl Roster {
@@ -313,7 +429,7 @@ impl Roster {
         store: WeightStore,
         cfg: &ServerConfig,
     ) -> Result<Roster> {
-        let mut engines: Vec<Box<dyn Engine>> = Vec::new();
+        let mut engines: Vec<Box<dyn Engine + Send + Sync>> = Vec::new();
         // the batch size the policy crossovers price against: the PJRT
         // engine's *compiled* batch when one is on the roster — artifact_for
         // rounds cfg.batch up to a compiled size, and that padded size is
@@ -392,44 +508,41 @@ impl Roster {
         if crate::util::faults::armed() {
             engines = engines
                 .into_iter()
-                .map(|e| Box::new(FaultInjector::new(e)) as Box<dyn Engine>)
+                .map(|e| Box::new(FaultInjector::new(e)) as Box<dyn Engine + Send + Sync>)
                 .collect();
         }
-        let kinds: Vec<EngineKind> = engines.iter().map(|e| e.kind()).collect();
-        let dispatch_counters = engines
-            .iter()
-            .map(|e| format!("dispatch_{}", e.name().replace('-', "_")))
-            .collect();
-        let quarantine_gauges = engines
-            .iter()
-            .map(|e| format!("engine.{}.quarantined", e.name()))
-            .collect();
-        let health = engines.iter().map(|_| Health::new()).collect();
         Ok(Roster {
-            engines,
-            kinds,
+            set: RwLock::new(GenerationSet::new(engines, artifact_batch, 1)),
             policy: cfg.policy.build(),
-            artifact_batch,
-            dispatch_counters,
-            quarantine_gauges,
-            health,
-            tick: Cell::new(0),
-            any_quarantined: Cell::new(false),
-            quarantine_events: Cell::new(0),
+            tick: AtomicU64::new(0),
+            any_quarantined: AtomicBool::new(false),
+            quarantine_events: AtomicU64::new(0),
             quarantine_after: cfg.quarantine_after.max(1),
             quarantine_cooldown: cfg.quarantine_cooldown.max(1),
-            generation: Cell::new(1),
         })
+    }
+
+    /// Read-lock the generation set.  Poison-tolerant: engine panics are
+    /// caught *inside* [`Roster::serve_batch`]'s closure (the guard lives
+    /// outside it), so a poisoned lock can only mean a panic in roster
+    /// bookkeeping itself — the data is still a coherent generation, and
+    /// refusing to serve would turn one bug into a full outage.
+    fn read(&self) -> RwLockReadGuard<'_, GenerationSet> {
+        self.set.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn write(&self) -> RwLockWriteGuard<'_, GenerationSet> {
+        self.set.write().unwrap_or_else(|e| e.into_inner())
     }
 
     /// The model generation currently serving.
     pub fn generation(&self) -> u64 {
-        self.generation.get()
+        self.read().generation
     }
 
     /// The batch size the dispatch policy prices crossovers against.
     pub fn artifact_batch(&self) -> usize {
-        self.artifact_batch
+        self.read().artifact_batch
     }
 
     /// Atomically replace the engine set (hot swap / rollback): the new
@@ -438,35 +551,28 @@ impl Roster {
     /// the displaced engines — the caller keeps them through the probation
     /// window (rollback reinstalls them) or drops them to retire.  Policy
     /// and quarantine thresholds persist across generations; the route tick
-    /// keeps counting so cooldown arithmetic never goes backwards.
+    /// keeps counting so cooldown arithmetic never goes backwards.  Takes
+    /// the write lock, so the install waits out in-flight forwards and no
+    /// worker ever sees a half-swapped roster.
     pub fn install(
-        &mut self,
-        engines: Vec<Box<dyn Engine>>,
+        &self,
+        engines: Vec<Box<dyn Engine + Send + Sync>>,
         generation: u64,
         artifact_batch: usize,
-    ) -> Vec<Box<dyn Engine>> {
+    ) -> Vec<Box<dyn Engine + Send + Sync>> {
         assert!(!engines.is_empty(), "a roster generation needs at least one engine");
-        self.kinds = engines.iter().map(|e| e.kind()).collect();
-        self.dispatch_counters = engines
-            .iter()
-            .map(|e| format!("dispatch_{}", e.name().replace('-', "_")))
-            .collect();
-        self.quarantine_gauges = engines
-            .iter()
-            .map(|e| format!("engine.{}.quarantined", e.name()))
-            .collect();
-        self.health = engines.iter().map(|_| Health::new()).collect();
-        self.any_quarantined.set(false);
-        self.artifact_batch = artifact_batch;
-        self.generation.set(generation);
-        std::mem::replace(&mut self.engines, engines)
+        let mut set = self.write();
+        self.any_quarantined.store(false, Ordering::Relaxed);
+        std::mem::replace(&mut *set, GenerationSet::new(engines, artifact_batch, generation))
+            .engines
     }
 
     /// Backend label for the startup `engine_*` counter: the pinned engine's
     /// name, or `auto-hybrid` for a policy-routed roster.
     pub fn name(&self) -> &'static str {
-        if self.engines.len() == 1 {
-            self.engines[0].name()
+        let set = self.read();
+        if set.engines.len() == 1 {
+            set.engines[0].name()
         } else {
             "auto-hybrid"
         }
@@ -478,47 +584,119 @@ impl Roster {
     }
 
     pub fn len(&self) -> usize {
-        self.engines.len()
+        self.read().engines.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.engines.is_empty()
+        self.len() == 0
     }
 
-    /// The engine at roster index `i`.
-    pub fn engine(&self, i: usize) -> &dyn Engine {
-        self.engines[i].as_ref()
+    /// The kind of the engine at roster index `i`.
+    pub fn kind_of(&self, i: usize) -> EngineKind {
+        self.read().kinds[i]
+    }
+
+    /// The stable name of the engine at roster index `i`.
+    pub fn engine_name(&self, i: usize) -> &'static str {
+        self.read().engines[i].name()
+    }
+
+    /// The lifetime report of the engine at roster index `i`.
+    pub fn report_of(&self, i: usize) -> EngineReport {
+        self.read().engines[i].report()
+    }
+
+    /// Every roster engine's report, in roster order (telemetry export).
+    pub fn reports(&self) -> Vec<EngineReport> {
+        self.read().engines.iter().map(|e| e.report()).collect()
     }
 
     /// The precomputed `dispatch_<engine>` counter key for roster index `i`.
-    pub fn dispatch_counter(&self, i: usize) -> &str {
-        &self.dispatch_counters[i]
+    pub fn dispatch_counter(&self, i: usize) -> String {
+        self.read().dispatch_counters[i].clone()
     }
 
-    /// The precomputed `engine.<name>.quarantined` gauge key for index `i`.
-    pub fn quarantine_gauge(&self, i: usize) -> &str {
-        &self.quarantine_gauges[i]
-    }
-
-    /// Every engine on the roster (for telemetry export).
-    pub fn engines(&self) -> impl Iterator<Item = &dyn Engine> {
-        self.engines.iter().map(|e| e.as_ref())
+    /// Emit every engine's `engine.<name>.quarantined` gauge (1.0/0.0).
+    pub fn export_quarantine_gauges(&self, mut f: impl FnMut(&str, f64)) {
+        let set = self.read();
+        for (g, h) in set.quarantine_gauges.iter().zip(&set.health) {
+            f(g, if h.is_quarantined() { 1.0 } else { 0.0 });
+        }
     }
 
     /// Whether roster index `i` is currently quarantined.
     pub fn quarantined(&self, i: usize) -> bool {
-        self.health[i].is_quarantined()
+        self.read().health[i].is_quarantined()
     }
 
     /// Whether any engine is currently quarantined.
     pub fn any_quarantined(&self) -> bool {
-        self.any_quarantined.get()
+        self.any_quarantined.load(Ordering::Relaxed)
     }
 
     /// Lifetime quarantine events (initial entries plus probe-failure
     /// renewals).
     pub fn quarantine_events(&self) -> u64 {
-        self.quarantine_events.get()
+        self.quarantine_events.load(Ordering::Relaxed)
+    }
+
+    fn route_locked(&self, set: &GenerationSet, n: usize) -> usize {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        if set.engines.len() == 1 {
+            return 0;
+        }
+        if !self.any_quarantined.load(Ordering::Relaxed) {
+            return self
+                .policy
+                .route(n, set.artifact_batch, &set.kinds)
+                .min(set.engines.len() - 1);
+        }
+        let mut avail_kinds = Vec::with_capacity(set.kinds.len());
+        let mut avail_idx = Vec::with_capacity(set.kinds.len());
+        for (i, h) in set.health.iter().enumerate() {
+            if h.available(tick) {
+                avail_kinds.push(set.kinds[i]);
+                avail_idx.push(i);
+            }
+        }
+        if avail_idx.is_empty() {
+            return self
+                .policy
+                .route(n, set.artifact_batch, &set.kinds)
+                .min(set.engines.len() - 1);
+        }
+        let j = self
+            .policy
+            .route(n, set.artifact_batch, &avail_kinds)
+            .min(avail_idx.len() - 1);
+        avail_idx[j]
+    }
+
+    fn note_ok_locked(&self, set: &GenerationSet, i: usize) {
+        let h = &set.health[i];
+        h.consecutive.store(0, Ordering::Relaxed);
+        if h.is_quarantined() {
+            h.quarantined_until.store(HEALTHY, Ordering::Relaxed);
+            self.any_quarantined.store(
+                set.health.iter().any(|h| h.is_quarantined()),
+                Ordering::Relaxed,
+            );
+        }
+    }
+
+    fn note_failure_locked(&self, set: &GenerationSet, i: usize) -> bool {
+        let h = &set.health[i];
+        let streak = h.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if streak >= self.quarantine_after || h.is_quarantined() {
+            h.quarantined_until.store(
+                self.tick.load(Ordering::Relaxed) + self.quarantine_cooldown,
+                Ordering::Relaxed,
+            );
+            self.any_quarantined.store(true, Ordering::Relaxed);
+            self.quarantine_events.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
     }
 
     /// The roster index the policy routes an `n`-row batch to.  Quarantined
@@ -527,49 +705,16 @@ impl Roster {
     /// probe); if *everything* is quarantined the full roster is used, since
     /// routing around every engine would mean serving nothing.
     pub fn route(&self, n: usize) -> usize {
-        let tick = self.tick.get() + 1;
-        self.tick.set(tick);
-        if self.engines.len() == 1 {
-            return 0;
-        }
-        if !self.any_quarantined.get() {
-            return self
-                .policy
-                .route(n, self.artifact_batch, &self.kinds)
-                .min(self.engines.len() - 1);
-        }
-        let mut avail_kinds = Vec::with_capacity(self.kinds.len());
-        let mut avail_idx = Vec::with_capacity(self.kinds.len());
-        for (i, h) in self.health.iter().enumerate() {
-            if h.available(tick) {
-                avail_kinds.push(self.kinds[i]);
-                avail_idx.push(i);
-            }
-        }
-        if avail_idx.is_empty() {
-            return self
-                .policy
-                .route(n, self.artifact_batch, &self.kinds)
-                .min(self.engines.len() - 1);
-        }
-        let j = self
-            .policy
-            .route(n, self.artifact_batch, &avail_kinds)
-            .min(avail_idx.len() - 1);
-        avail_idx[j]
+        let set = self.read();
+        self.route_locked(&set, n)
     }
 
     /// Record a successful forward on roster index `i`: resets its failure
     /// streak, and — if this was a probe of a quarantined engine —
     /// reinstates it.
     pub fn note_ok(&self, i: usize) {
-        let h = &self.health[i];
-        h.consecutive.set(0);
-        if h.is_quarantined() {
-            h.quarantined_until.set(None);
-            self.any_quarantined
-                .set(self.health.iter().any(|h| h.is_quarantined()));
-        }
+        let set = self.read();
+        self.note_ok_locked(&set, i);
     }
 
     /// Record a failed forward (error or panic) on roster index `i`.
@@ -578,40 +723,67 @@ impl Roster {
     /// failures, or an immediate renewal when a probe of an
     /// already-quarantined engine fails.
     pub fn note_failure(&self, i: usize) -> bool {
-        let h = &self.health[i];
-        let streak = h.consecutive.get() + 1;
-        h.consecutive.set(streak);
-        if streak >= self.quarantine_after || h.is_quarantined() {
-            h.quarantined_until
-                .set(Some(self.tick.get() + self.quarantine_cooldown));
-            self.any_quarantined.set(true);
-            self.quarantine_events.set(self.quarantine_events.get() + 1);
-            return true;
-        }
-        false
+        let set = self.read();
+        self.note_failure_locked(&set, i)
     }
 
-    /// Forward one batch on roster index `i` (no health bookkeeping — the
-    /// supervised worker wraps this in `catch_unwind` and reports the
-    /// outcome via [`Roster::note_ok`] / [`Roster::note_failure`]).
+    /// Forward one batch on roster index `i` with no health bookkeeping
+    /// (chaos tests drive route/forward/note_* granularly to observe the
+    /// fault stream; the serving workers use [`Roster::serve_batch`]).
     pub fn forward(&self, i: usize, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
-        self.engines[i].forward_with(x, scratch)
+        self.read().engines[i].forward_with(x, scratch)
     }
 
     /// Route and execute one batch; returns the chosen roster index and the
     /// logits (real rows only — the PJRT wrapper trims its padding).  The
     /// outcome feeds the quarantine bookkeeping.
     pub fn dispatch(&self, x: &Tensor, scratch: &mut Scratch) -> Result<(usize, Tensor)> {
-        let i = self.route(x.shape()[0]);
-        match self.engines[i].forward_with(x, scratch) {
+        let set = self.read();
+        let i = self.route_locked(&set, x.shape()[0]);
+        match set.engines[i].forward_with(x, scratch) {
             Ok(logits) => {
-                self.note_ok(i);
+                self.note_ok_locked(&set, i);
                 Ok((i, logits))
             }
             Err(e) => {
-                self.note_failure(i);
+                self.note_failure_locked(&set, i);
                 Err(e)
             }
+        }
+    }
+
+    /// Route, forward (supervised), and record one batch under a *single*
+    /// read lock — the serving workers' whole per-batch roster interaction.
+    /// The `catch_unwind` wraps only the engine forward, *inside* the
+    /// guard's scope: a panicking engine never unwinds past the lock, so
+    /// the roster cannot be poisoned by the failure modes it exists to
+    /// absorb.  (The caller's scratch arena may be mid-mutation after a
+    /// [`BatchOutcome::Panic`] and must be rebuilt.)
+    pub fn serve_batch(&self, x: &Tensor, scratch: &mut Scratch) -> ServedBatch {
+        let set = self.read();
+        let idx = self.route_locked(&set, x.shape()[0]);
+        let engine = set.engines[idx].as_ref();
+        let caught =
+            panic::catch_unwind(AssertUnwindSafe(|| engine.forward_with(x, scratch)));
+        let (quarantined_now, report, outcome) = match caught {
+            Ok(Ok(logits)) => {
+                self.note_ok_locked(&set, idx);
+                (false, Some(engine.report()), BatchOutcome::Logits(logits))
+            }
+            Ok(Err(e)) => (
+                self.note_failure_locked(&set, idx),
+                None,
+                BatchOutcome::Error(format!("{e:#}")),
+            ),
+            Err(_) => (self.note_failure_locked(&set, idx), None, BatchOutcome::Panic),
+        };
+        ServedBatch {
+            idx,
+            generation: set.generation,
+            dispatch_counter: set.dispatch_counters[idx].clone(),
+            quarantined_now,
+            report,
+            outcome,
         }
     }
 }
@@ -634,11 +806,14 @@ fn batch_tensor(
     Tensor::new(vec![rows, h, w, c], xdata)
 }
 
-struct Job {
-    id: u64,
-    pixels: Vec<f32>,
-    enqueued: Instant,
-    resp: mpsc::Sender<Value>,
+/// One admitted inference request: parsed by the mux front end, batched by
+/// the queue, served by a worker, and answered through `resp` (the mux
+/// holds the receiving end in the connection's in-flight table).
+pub(crate) struct Job {
+    pub(crate) id: u64,
+    pub(crate) pixels: Vec<f32>,
+    pub(crate) enqueued: Instant,
+    pub(crate) resp: mpsc::Sender<Value>,
 }
 
 /// Reply `{"id":..,"error":..}` to one job (terminal error path).
@@ -650,7 +825,7 @@ fn reply_error(job: &Pending<Job>, msg: &str) {
     let _ = job.payload.resp.send(resp);
 }
 
-/// Where the worker gets its weights: an artifact directory on disk (the
+/// Where the workers get their weights: an artifact directory on disk (the
 /// CLI path — also enables PJRT), or an in-memory store (tests and benches
 /// serve synthetic models with nothing on disk).
 enum EngineSource {
@@ -658,37 +833,34 @@ enum EngineSource {
     Store(WeightStore),
 }
 
-/// The displaced generation, retained by the worker while a swapped-in one
-/// proves itself.  Dropped (engines retire) when `left` reaches 0; moved
-/// back into the roster on a quarantine storm.
+/// The displaced generation, retained while a swapped-in one proves
+/// itself.  Shared across workers under a mutex — the probation window and
+/// rollback trigger are global, not per-worker.  Dropped (engines retire)
+/// when `left` reaches 0; moved back into the roster on a quarantine storm.
 struct Probation {
     generation: u64,
-    engines: Vec<Box<dyn Engine>>,
+    engines: Vec<Box<dyn Engine + Send + Sync>>,
     artifact_batch: usize,
-    /// Served batches remaining in the window.
+    /// Served batches remaining in the window (across all workers).
     left: u64,
     /// `Roster::quarantine_events` at install time — events above this
     /// baseline were earned by the new generation.
     baseline: u64,
 }
 
-/// Prepare a staged generation's engines for install: coerce away the
-/// `Send` bound (the worker owns them from here on) and — mirroring
-/// [`Roster::build`] — wrap each in a [`FaultInjector`] when chaos is
+/// Prepare a staged generation's engines for install — mirroring
+/// [`Roster::build`], wrap each in a [`FaultInjector`] when chaos is
 /// armed, so injected faults hit swapped-in generations exactly like the
 /// boot generation.
-fn wrap_generation(engines: Vec<Box<dyn Engine + Send>>) -> Vec<Box<dyn Engine>> {
-    let armed = crate::util::faults::armed();
+fn wrap_generation(
+    engines: Vec<Box<dyn Engine + Send + Sync>>,
+) -> Vec<Box<dyn Engine + Send + Sync>> {
+    if !crate::util::faults::armed() {
+        return engines;
+    }
     engines
         .into_iter()
-        .map(|e| {
-            let e: Box<dyn Engine> = e;
-            if armed {
-                Box::new(FaultInjector::new(e)) as Box<dyn Engine>
-            } else {
-                e
-            }
-        })
+        .map(|e| Box::new(FaultInjector::new(e)) as Box<dyn Engine + Send + Sync>)
         .collect()
 }
 
@@ -699,16 +871,29 @@ pub struct Server {
     pub metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     queue: Arc<BatchQueue<Job>>,
-    /// Mailbox between deploy callers and the serving worker.
+    /// Mailbox between deploy callers and the serving workers.
     swap: Arc<SwapSlot>,
     /// Next generation number a successful deploy gets (boot roster is 1).
     next_gen: AtomicU64,
     handles: Vec<JoinHandle<()>>,
 }
 
+/// Everything one replicated inference worker needs (bundled so the spawn
+/// site stays readable).
+struct WorkerCtx {
+    index: usize,
+    cfg: ServerConfig,
+    queue: Arc<BatchQueue<Job>>,
+    metrics: Arc<Metrics>,
+    roster: Arc<Roster>,
+    slot: Arc<SwapSlot>,
+    probation: Arc<Mutex<Option<Probation>>>,
+}
+
 impl Server {
-    /// Start the server; blocks until the PJRT worker has loaded weights and
-    /// compiled the artifact (so the first request is never a cold start).
+    /// Start the server; blocks until the weights are loaded and the roster
+    /// (including any PJRT artifact compile) is built, so the first request
+    /// is never a cold start.
     pub fn start(artifacts: PathBuf, cfg: ServerConfig) -> Result<Server> {
         Self::start_inner(EngineSource::Artifacts(artifacts), cfg)
     }
@@ -740,270 +925,60 @@ impl Server {
         let metrics = Arc::new(Metrics::new());
         let swap_slot = Arc::new(SwapSlot::new());
 
-        // --- inference worker (owns the non-Send engine roster) -------------
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let wq = queue.clone();
-        let wm = metrics.clone();
-        let wcfg = cfg.clone();
-        let ws = swap_slot.clone();
-        let worker = thread::Builder::new().name("infer-worker".into()).spawn(move || {
-            let built = match source {
-                EngineSource::Artifacts(dir) => WeightStore::load(&dir, wcfg.model)
-                    .and_then(|store| Roster::build(Some(&dir), store, &wcfg)),
-                EngineSource::Store(store) => Roster::build(None, store, &wcfg),
-            };
-            let mut roster = match built {
-                Ok(r) => {
-                    let _ = ready_tx.send(Ok(()));
-                    r
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    ws.mark_dead("engine roster failed to build");
-                    return;
-                }
-            };
-            wm.inc(&format!("engine_{}", roster.name()), 1);
-            wm.inc(&format!("policy_{}", roster.policy_name()), 1);
-            wm.set_gauge("swap.generation", roster.generation() as f64);
-            // displaced engines held through a swapped-in generation's
-            // probation window (rollback re-installs them)
-            let mut probation: Option<Probation> = None;
-            let (h, w, c) = wcfg.model.input_hwc();
-            // one arena per worker: the host engines stop allocating per
-            // request once the buffers are warm
-            let mut scratch = Scratch::new();
-            // the persistent kernel pool the host engines dispatch bands on;
-            // its spawn counter stays flat once serving is warm
-            let pool = kernels::Pool::global();
-
-            while let Some(popped) = wq.pop_batch() {
-                // hot-swap pickup: installs land here, *between* batches, so
-                // an in-flight batch always finishes on the generation that
-                // started it (deploy_store kicks the queue, so an idle
-                // worker reaches this point without waiting for traffic)
-                if ws.has_pending() {
-                    if let Some(p) = ws.take_pending() {
-                        let gen = p.generation;
-                        let displaced_gen = roster.generation();
-                        let displaced_ab = roster.artifact_batch();
-                        let displaced =
-                            roster.install(wrap_generation(p.engines), gen, wcfg.batch);
-                        probation = if wcfg.probation_batches > 0 {
-                            Some(Probation {
-                                generation: displaced_gen,
-                                engines: displaced,
-                                artifact_batch: displaced_ab,
-                                left: wcfg.probation_batches,
-                                baseline: roster.quarantine_events(),
-                            })
-                        } else {
-                            None // probation disabled: the old engines retire now
-                        };
-                        wm.set_gauge("swap.generation", gen as f64);
-                        wm.set_gauge(
-                            "swap.probation_left",
-                            probation.as_ref().map_or(0.0, |p| p.left as f64),
-                        );
-                        ws.ack_installed(gen);
-                    }
-                }
-                // deadline sheds: terminal replies, no kernel slot spent
-                for job in &popped.expired {
-                    wm.inc("shed_deadline", 1);
-                    reply_error(job, "deadline exceeded");
-                }
-                wm.set_gauge("queue.depth", wq.len() as f64);
-                let batch = popped.jobs;
-                if batch.is_empty() {
-                    continue;
-                }
-                let t0 = Instant::now();
-                let n = batch.len();
-                let x = match batch_tensor(&batch, n, h, w, c) {
-                    Ok(x) => x,
-                    Err(e) => {
-                        let msg = format!("{e:#}");
-                        for job in &batch {
-                            reply_error(job, &msg);
-                        }
-                        continue;
-                    }
-                };
-                // route *before* the supervised forward so an error or
-                // panic is attributed to the engine that actually ran
-                let idx = roster.route(n);
-                let outcome =
-                    panic::catch_unwind(AssertUnwindSafe(|| {
-                        roster.forward(idx, &x, &mut scratch)
-                    }));
-                match outcome {
-                    Ok(Ok(logits)) => {
-                        roster.note_ok(idx);
-                        let preds = ops::argmax_rows(&logits);
-                        let engine = roster.engine(idx);
-                        wm.inc(roster.dispatch_counter(idx), 1);
-                        let infer_s = t0.elapsed().as_secs_f64();
-                        wm.observe_s("infer_batch", infer_s);
-                        // smoothed batch time, the retry_after_ms basis for
-                        // overload sheds on the admission path
-                        wm.observe_ewma("infer_batch.ewma_ms", infer_s * 1e3);
-                        wm.inc("batches", 1);
-                        wm.inc("requests", n as u64);
-                        // pool + arena telemetry: spawns must stay flat once
-                        // warm (a moving spawn gauge is a perf regression),
-                        // and the per-layer high-water marks show how much
-                        // arena each layer of the served model really needs
-                        let ps = pool.stats();
-                        wm.set_gauge("pool.spawns", ps.spawns as f64);
-                        wm.set_gauge("pool.wakeups", ps.wakeups as f64);
-                        wm.set_gauge("pool.jobs", ps.jobs as f64);
-                        for (layer, pk) in scratch.layer_peaks() {
-                            wm.set_gauge(
-                                &format!("scratch_hw.{layer}.patch_bytes"),
-                                pk.patch_bytes as f64,
-                            );
-                            wm.set_gauge(
-                                &format!("scratch_hw.{layer}.pad_bytes"),
-                                pk.pad_bytes as f64,
-                            );
-                            wm.set_gauge(
-                                &format!("scratch_hw.{layer}.act_bytes"),
-                                pk.act_bytes as f64,
-                            );
-                        }
-                        // uniform per-engine telemetry: the engine that
-                        // served this batch exports the `engine.<name>.*`
-                        // gauge family from its EngineReport — forwards,
-                        // zero-skip, mean partial products, the lifetime
-                        // energy ledger (divide by `.forwards` for
-                        // per-batch numbers, by counter.requests for
-                        // per-request — docs/METRICS.md).  Only the routed
-                        // engine's report can have changed, so the other
-                        // roster members' gauges stay at their last export.
-                        engine.report().export(|k, v| wm.set_gauge(k, v));
-                        for (i, job) in batch.into_iter().enumerate() {
-                            let e2e = job.payload.enqueued.elapsed();
-                            wm.observe_s("request_e2e", e2e.as_secs_f64());
-                            let resp = json::obj(vec![
-                                ("id", json::num(job.payload.id as f64)),
-                                ("pred", json::num(preds[i] as f64)),
-                                ("latency_us", json::num(e2e.as_micros() as f64)),
-                                ("batch", json::num(n as f64)),
-                                ("gen", json::num(roster.generation() as f64)),
-                            ]);
-                            let _ = job.payload.resp.send(resp);
-                        }
-                    }
-                    Ok(Err(e)) => {
-                        // engine error: fail only this batch, keep serving
-                        if roster.note_failure(idx) {
-                            wm.inc("quarantines", 1);
-                        }
-                        wm.inc("engine_failures", 1);
-                        let msg = format!("{e:#}");
-                        for job in &batch {
-                            reply_error(job, &msg);
-                        }
-                    }
-                    Err(_) => {
-                        // engine panic: the arena may be mid-mutation —
-                        // rebuild it, fail this batch, keep the roster and
-                        // keep serving
-                        scratch = Scratch::new();
-                        if roster.note_failure(idx) {
-                            wm.inc("quarantines", 1);
-                        }
-                        wm.inc("worker_panics", 1);
-                        for job in &batch {
-                            reply_error(job, "engine panicked; batch failed");
-                        }
-                    }
-                }
-                // probation accounting for the batch just served: a
-                // quarantine storm earned by the new generation rolls the
-                // displaced one straight back; otherwise the window shrinks
-                // and, once cleared, the displaced engines retire
-                let storm = probation.as_ref().map_or(false, |p| {
-                    roster.quarantine_events()
-                        >= p.baseline + wcfg.rollback_quarantines.max(1)
-                });
-                if storm {
-                    let p = probation.take().unwrap();
-                    roster.install(p.engines, p.generation, p.artifact_batch);
-                    wm.inc("swap.rollbacks", 1);
-                    wm.set_gauge("swap.generation", p.generation as f64);
-                    wm.set_gauge("swap.probation_left", 0.0);
-                    eprintln!(
-                        "server: quarantine storm during probation; rolled back to \
-                         generation {}",
-                        p.generation
-                    );
-                } else if let Some(p) = probation.as_mut() {
-                    p.left -= 1;
-                    wm.set_gauge("swap.probation_left", p.left as f64);
-                }
-                if probation.as_ref().map_or(false, |p| p.left == 0) {
-                    probation = None; // window cleared; displaced engines retire
-                }
-                for i in 0..roster.len() {
-                    wm.set_gauge(
-                        roster.quarantine_gauge(i),
-                        if roster.quarantined(i) { 1.0 } else { 0.0 },
-                    );
-                }
+        // build the shared roster on *this* thread: startup failures surface
+        // directly, and callers return with the model loaded (and any PJRT
+        // artifact compiled) — the first request is never a cold start
+        let roster = Arc::new(match source {
+            EngineSource::Artifacts(dir) => {
+                let store = WeightStore::load(&dir, cfg.model)?;
+                Roster::build(Some(&dir), store, &cfg)?
             }
-            // queue closed: no deploy can ever land again — fail any
-            // in-flight or future deploy instead of leaving it blocked
-            ws.mark_dead("server shut down");
-        })?;
-        ready_rx
-            .recv()
-            .context("inference worker died during startup")??;
+            EngineSource::Store(store) => Roster::build(None, store, &cfg)?,
+        });
+        metrics.inc(&format!("engine_{}", roster.name()), 1);
+        metrics.inc(&format!("policy_{}", roster.policy_name()), 1);
+        metrics.set_gauge("swap.generation", roster.generation() as f64);
 
-        // --- acceptor -------------------------------------------------------
-        let aq = queue.clone();
-        let ash = shutdown.clone();
-        let am = metrics.clone();
+        let workers = cfg.effective_workers();
+        metrics.set_gauge("workers", workers as f64);
+        let probation: Arc<Mutex<Option<Probation>>> = Arc::new(Mutex::new(None));
+
+        let mut handles = Vec::with_capacity(workers + 1);
+        for index in 0..workers {
+            let ctx = WorkerCtx {
+                index,
+                cfg: cfg.clone(),
+                queue: queue.clone(),
+                metrics: metrics.clone(),
+                roster: roster.clone(),
+                slot: swap_slot.clone(),
+                probation: probation.clone(),
+            };
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("infer-worker-{index}"))
+                    .spawn(move || worker_loop(ctx))?,
+            );
+        }
+
         let pix_expected = {
             let (h, w, c) = cfg.model.input_hwc();
             h * w * c
         };
-        let reply_timeout = cfg.reply_timeout();
-        let acceptor = thread::Builder::new().name("acceptor".into()).spawn(move || {
-            let mut conns: Vec<JoinHandle<()>> = Vec::new();
-            while !ash.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let q = aq.clone();
-                        let m = am.clone();
-                        let sh = ash.clone();
-                        conns.push(
-                            thread::Builder::new()
-                                .name("conn".into())
-                                .spawn(move || {
-                                    let _ = handle_conn(
-                                        stream,
-                                        q,
-                                        m,
-                                        pix_expected,
-                                        sh,
-                                        reply_timeout,
-                                    );
-                                })
-                                .unwrap(),
-                        );
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        thread::sleep(Duration::from_millis(2));
-                    }
-                    Err(_) => break,
-                }
-            }
-            for c in conns {
-                let _ = c.join();
-            }
-        })?;
+        let params = mux::MuxParams {
+            queue: queue.clone(),
+            metrics: metrics.clone(),
+            roster,
+            shutdown: shutdown.clone(),
+            pix_expected,
+            reply_timeout: cfg.reply_timeout(),
+            workers,
+        };
+        handles.push(
+            thread::Builder::new()
+                .name("mux".into())
+                .spawn(move || mux::run(listener, params))?,
+        );
 
         Ok(Server {
             port,
@@ -1012,17 +987,17 @@ impl Server {
             queue,
             swap: swap_slot,
             next_gen: AtomicU64::new(2),
-            handles: vec![worker, acceptor],
+            handles,
         })
     }
 
     /// Hot-swap the serving model to `store` with zero downtime: stage a
     /// complete replacement generation through the [`super::swap`] pipeline
     /// (encode → noisy-channel transfer → hardened decode → engine build →
-    /// canary gate) on *this* thread, then hand it to the serving worker,
-    /// which installs it between batches.  Blocks until the worker
-    /// acknowledges the install (bounded by an internal timeout) and
-    /// returns the [`SwapReport`].
+    /// canary gate) on *this* thread, then hand it to the serving workers;
+    /// whichever reaches its between-batches check first installs it.
+    /// Blocks until the install is acknowledged (bounded by an internal
+    /// timeout) and returns the [`SwapReport`].
     ///
     /// On any failure the old generation keeps serving untouched; the
     /// matching `swap.fail.*` / `swap.canary_rejects` counter and
@@ -1053,9 +1028,9 @@ impl Server {
             self.metrics.inc("swap.failed", 1);
             return Err(e);
         }
-        // wake the worker even with no traffic flowing: the kicked queue
-        // returns an empty pop, and the worker notices the pending
-        // generation without waiting out a batch window
+        // wake a worker even with no traffic flowing: the kicked queue
+        // returns an empty pop to exactly one worker, which notices the
+        // pending generation without waiting out a batch window
         self.queue.kick();
         if let Err(e) = self.swap.wait_installed(generation, SWAP_INSTALL_TIMEOUT) {
             self.metrics.inc(SwapStage::Install.fail_counter(), 1);
@@ -1078,6 +1053,8 @@ impl Server {
     /// Every queued-but-unserved job gets an explicit `server shutting
     /// down` reply (counted in `shed_shutdown`) — dropping their response
     /// senders would leave those clients hanging until their reply timeout.
+    /// The mux flushes the terminal replies to their connections before
+    /// exiting.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         // give in-flight connection reads a beat, then close the queue
@@ -1095,79 +1072,209 @@ impl Server {
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    queue: Arc<BatchQueue<Job>>,
-    metrics: Arc<Metrics>,
-    pix_expected: usize,
-    shutdown: Arc<AtomicBool>,
-    reply_timeout: Duration,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    // read timeout so the thread notices shutdown even on idle connections
-    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    // `line` persists across timeout retries: read_line appends, so a line
-    // split by a read timeout reassembles on the next pass.
-    let mut line = String::new();
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // client closed
-            Ok(_) if line.ends_with('\n') => {}
-            Ok(_) => continue, // partial line at EOF-less boundary; keep reading
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                if shutdown.load(Ordering::Relaxed) {
-                    return Ok(());
+/// One replicated inference worker: drains the shared queue, serves batches
+/// over the shared roster, and runs the between-batches checks (hot-swap
+/// pickup, probation accounting) that used to belong to the single owner
+/// thread.  Any worker may pick up a posted swap; probation is global.
+fn worker_loop(ctx: WorkerCtx) {
+    let (h, w, c) = ctx.cfg.model.input_hwc();
+    // one arena per worker: the host engines stop allocating per request
+    // once the buffers are warm
+    let mut scratch = Scratch::new();
+    // the persistent kernel pool the host engines dispatch bands on; its
+    // spawn counter stays flat once serving is warm
+    let pool = kernels::Pool::global();
+    // per-worker gauge keys, formatted once (docs/METRICS.md: worker.<i>.*)
+    let batches_key = format!("worker.{}.batches", ctx.index);
+    let ewma_key = format!("worker.{}.ewma_ms", ctx.index);
+    let mut my_batches = 0u64;
+
+    while let Some(popped) = ctx.queue.pop_batch() {
+        // hot-swap pickup: installs land here, *between* this worker's
+        // batches; the roster's write lock makes other workers' in-flight
+        // batches finish on the generation that started them
+        // (deploy_store kicks the queue, so an idle worker reaches this
+        // point without waiting for traffic)
+        if ctx.slot.has_pending() {
+            if let Some(p) = ctx.slot.take_pending() {
+                let gen = p.generation;
+                // probation mutex held across the install so no other
+                // worker runs storm accounting against a half-updated pair
+                let mut prob = ctx.probation.lock().unwrap();
+                let displaced_gen = ctx.roster.generation();
+                let displaced_ab = ctx.roster.artifact_batch();
+                let displaced =
+                    ctx.roster.install(wrap_generation(p.engines), gen, ctx.cfg.batch);
+                *prob = if ctx.cfg.probation_batches > 0 {
+                    Some(Probation {
+                        generation: displaced_gen,
+                        engines: displaced,
+                        artifact_batch: displaced_ab,
+                        left: ctx.cfg.probation_batches,
+                        baseline: ctx.roster.quarantine_events(),
+                    })
+                } else {
+                    None // probation disabled: the old engines retire now
+                };
+                ctx.metrics.set_gauge("swap.generation", gen as f64);
+                ctx.metrics.set_gauge(
+                    "swap.probation_left",
+                    prob.as_ref().map_or(0.0, |p| p.left as f64),
+                );
+                drop(prob);
+                ctx.slot.ack_installed(gen);
+            }
+        }
+        // deadline sheds: terminal replies, no kernel slot spent
+        for job in &popped.expired {
+            ctx.metrics.inc("shed_deadline", 1);
+            reply_error(job, "deadline exceeded");
+        }
+        ctx.metrics.set_gauge("queue.depth", ctx.queue.len() as f64);
+        let batch = popped.jobs;
+        if batch.is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        let n = batch.len();
+        let x = match batch_tensor(&batch, n, h, w, c) {
+            Ok(x) => x,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for job in &batch {
+                    reply_error(job, &msg);
                 }
                 continue;
             }
-            Err(e) => return Err(e.into()),
-        }
-        if line.trim().is_empty() {
-            line.clear();
-            continue;
-        }
-        let reply = match parse_request(&line, pix_expected) {
-            Ok((id, pixels)) => {
-                let (tx, rx) = mpsc::channel();
-                let job = Job { id, pixels, enqueued: Instant::now(), resp: tx };
-                match queue.push(job) {
-                    Ok(()) => match rx.recv_timeout(reply_timeout) {
-                        Ok(v) => v,
-                        Err(_) => json::obj(vec![("error", json::s("inference timeout"))]),
-                    },
-                    Err(PushError::Full) => {
-                        metrics.inc("shed_overload", 1);
-                        json::obj(vec![
-                            ("error", json::s("overloaded")),
-                            ("retry_after_ms", json::num(retry_after_ms(&queue, &metrics))),
-                        ])
-                    }
-                    Err(PushError::Closed) => {
-                        json::obj(vec![("error", json::s("server shutting down"))])
-                    }
+        };
+        let served = ctx.roster.serve_batch(&x, &mut scratch);
+        match served.outcome {
+            BatchOutcome::Logits(ref logits) => {
+                let preds = ops::argmax_rows(logits);
+                ctx.metrics.inc(&served.dispatch_counter, 1);
+                let infer_s = t0.elapsed().as_secs_f64();
+                ctx.metrics.observe_s("infer_batch", infer_s);
+                // smoothed batch time, the retry_after_ms basis for
+                // overload sheds on the admission path
+                ctx.metrics.observe_ewma("infer_batch.ewma_ms", infer_s * 1e3);
+                ctx.metrics.inc("batches", 1);
+                ctx.metrics.inc("requests", n as u64);
+                my_batches += 1;
+                ctx.metrics.set_gauge(&batches_key, my_batches as f64);
+                ctx.metrics.observe_ewma(&ewma_key, infer_s * 1e3);
+                // pool + arena telemetry: spawns must stay flat once warm
+                // (a moving spawn gauge is a perf regression), and the
+                // per-layer high-water marks show how much arena each layer
+                // of the served model really needs
+                let ps = pool.stats();
+                ctx.metrics.set_gauge("pool.spawns", ps.spawns as f64);
+                ctx.metrics.set_gauge("pool.wakeups", ps.wakeups as f64);
+                ctx.metrics.set_gauge("pool.jobs", ps.jobs as f64);
+                for (layer, pk) in scratch.layer_peaks() {
+                    ctx.metrics.set_gauge(
+                        &format!("scratch_hw.{layer}.patch_bytes"),
+                        pk.patch_bytes as f64,
+                    );
+                    ctx.metrics.set_gauge(
+                        &format!("scratch_hw.{layer}.pad_bytes"),
+                        pk.pad_bytes as f64,
+                    );
+                    ctx.metrics.set_gauge(
+                        &format!("scratch_hw.{layer}.act_bytes"),
+                        pk.act_bytes as f64,
+                    );
+                }
+                // uniform per-engine telemetry: the engine that served this
+                // batch exports the `engine.<name>.*` gauge family from its
+                // EngineReport — forwards, zero-skip, mean partial
+                // products, the lifetime energy ledger (divide by
+                // `.forwards` for per-batch numbers, by counter.requests
+                // for per-request — docs/METRICS.md).  Only the routed
+                // engine's report can have changed, so the other roster
+                // members' gauges stay at their last export.
+                if let Some(rep) = &served.report {
+                    rep.export(|k, v| ctx.metrics.set_gauge(k, v));
+                }
+                for (i, job) in batch.into_iter().enumerate() {
+                    let e2e = job.payload.enqueued.elapsed();
+                    ctx.metrics.observe_s("request_e2e", e2e.as_secs_f64());
+                    let resp = json::obj(vec![
+                        ("id", json::num(job.payload.id as f64)),
+                        ("pred", json::num(preds[i] as f64)),
+                        ("latency_us", json::num(e2e.as_micros() as f64)),
+                        ("batch", json::num(n as f64)),
+                        ("gen", json::num(served.generation as f64)),
+                    ]);
+                    let _ = job.payload.resp.send(resp);
                 }
             }
-            Err(e) => {
-                metrics.inc("bad_requests", 1);
-                json::obj(vec![("error", json::s(&format!("{e:#}")))])
+            BatchOutcome::Error(ref msg) => {
+                // engine error: fail only this batch, keep serving
+                if served.quarantined_now {
+                    ctx.metrics.inc("quarantines", 1);
+                }
+                ctx.metrics.inc("engine_failures", 1);
+                for job in &batch {
+                    reply_error(job, msg);
+                }
             }
-        };
-        writer.write_all(reply.to_json().as_bytes())?;
-        writer.write_all(b"\n")?;
-        line.clear();
+            BatchOutcome::Panic => {
+                // engine panic: the arena may be mid-mutation — rebuild it,
+                // fail this batch, keep the roster and keep serving
+                scratch = Scratch::new();
+                if served.quarantined_now {
+                    ctx.metrics.inc("quarantines", 1);
+                }
+                ctx.metrics.inc("worker_panics", 1);
+                for job in &batch {
+                    reply_error(job, "engine panicked; batch failed");
+                }
+            }
+        }
+        // probation accounting for the batch just served — global, under
+        // the shared mutex: a quarantine storm earned by the new generation
+        // rolls the displaced one straight back (whichever worker observes
+        // it; taking the Option makes the rollback happen exactly once);
+        // otherwise the window shrinks and, once cleared, the displaced
+        // engines retire
+        let mut prob = ctx.probation.lock().unwrap();
+        let storm = prob.as_ref().is_some_and(|p| {
+            ctx.roster.quarantine_events()
+                >= p.baseline + ctx.cfg.rollback_quarantines.max(1)
+        });
+        if storm {
+            let p = prob.take().unwrap();
+            let rolled_gen = p.generation;
+            ctx.roster.install(p.engines, p.generation, p.artifact_batch);
+            ctx.metrics.inc("swap.rollbacks", 1);
+            ctx.metrics.set_gauge("swap.generation", rolled_gen as f64);
+            ctx.metrics.set_gauge("swap.probation_left", 0.0);
+            eprintln!(
+                "server: quarantine storm during probation; rolled back to \
+                 generation {rolled_gen}"
+            );
+        } else if let Some(p) = prob.as_mut() {
+            p.left -= 1;
+            ctx.metrics.set_gauge("swap.probation_left", p.left as f64);
+            if p.left == 0 {
+                *prob = None; // window cleared; displaced engines retire
+            }
+        }
+        drop(prob);
+        ctx.roster
+            .export_quarantine_gauges(|k, v| ctx.metrics.set_gauge(k, v));
     }
+    // queue closed: no deploy can ever land again — fail any in-flight or
+    // future deploy instead of leaving it blocked (idempotent across the
+    // replicated workers; the first to exit flips the slot)
+    ctx.slot.mark_dead("server shut down");
 }
 
 /// The backoff hint attached to an `overloaded` shed: the time to drain the
 /// current backlog, estimated as (batches queued) × (observed per-batch
 /// inference EWMA).  Before the first batch completes there is no EWMA yet;
 /// one batching window is the honest floor.
-fn retry_after_ms(queue: &BatchQueue<Job>, metrics: &Metrics) -> f64 {
+pub(crate) fn retry_after_ms(queue: &BatchQueue<Job>, metrics: &Metrics) -> f64 {
     let ewma_ms = metrics
         .gauge("infer_batch.ewma_ms")
         .unwrap_or_else(|| queue.max_delay.as_secs_f64() * 1e3);
@@ -1175,29 +1282,9 @@ fn retry_after_ms(queue: &BatchQueue<Job>, metrics: &Metrics) -> f64 {
     (ewma_ms * backlog_batches as f64).ceil().max(1.0)
 }
 
-fn parse_request(line: &str, pix_expected: usize) -> Result<(u64, Vec<f32>)> {
-    let v = json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
-    let id = v
-        .get("id")
-        .as_f64()
-        .context("missing id")? as u64;
-    let arr = v.get("pixels").as_arr().context("missing pixels")?;
-    let mut pixels = Vec::with_capacity(arr.len());
-    for (i, x) in arr.iter().enumerate() {
-        // a non-numeric entry is a malformed request: reject it instead of
-        // silently serving garbage (the old path mapped it to 0.0)
-        match x.as_f64() {
-            Some(f) => pixels.push(f as f32),
-            None => bail!("pixel {i} is not a number"),
-        }
-    }
-    if pixels.len() != pix_expected {
-        bail!("expected {pix_expected} pixels, got {}", pixels.len());
-    }
-    Ok((id, pixels))
-}
-
-/// Simple blocking client for examples/tests.
+/// Simple blocking client for examples/tests (one request in flight at a
+/// time; the mux front end also accepts pipelined traffic from clients
+/// that key replies by `id`).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -1232,31 +1319,6 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_request_validates() {
-        assert!(parse_request("{\"id\":1,\"pixels\":[0.0,1.0]}", 2).is_ok());
-        assert!(parse_request("{\"id\":1,\"pixels\":[0.0]}", 2).is_err());
-        assert!(parse_request("{\"pixels\":[0.0,1.0]}", 2).is_err());
-        assert!(parse_request("not json", 2).is_err());
-    }
-
-    #[test]
-    fn parse_request_rejects_non_numeric_pixels() {
-        // regression: these used to be silently served as 0.0
-        for bad in [
-            "{\"id\":1,\"pixels\":[0.0,\"x\"]}",
-            "{\"id\":1,\"pixels\":[null,1.0]}",
-            "{\"id\":1,\"pixels\":[0.0,true]}",
-            "{\"id\":1,\"pixels\":[[],1.0]}",
-        ] {
-            let e = parse_request(bad, 2).unwrap_err();
-            assert!(
-                format!("{e:#}").contains("not a number"),
-                "{bad}: unexpected error {e:#}"
-            );
-        }
-    }
-
-    #[test]
     fn default_config_sane() {
         let c = ServerConfig::default();
         assert_eq!(c.batch, 32);
@@ -1279,6 +1341,15 @@ mod tests {
         // 32-batch window rolls back
         assert_eq!(c.probation_batches, 32);
         assert_eq!(c.rollback_quarantines, 1);
+        // worker replication: 0 derives from available_parallelism, an
+        // explicit count is honored verbatim (fault injection is never
+        // armed inside unit tests, so no clamp applies here)
+        assert_eq!(c.workers, 0);
+        assert!(c.effective_workers() >= 1);
+        assert_eq!(
+            ServerConfig { workers: 3, ..ServerConfig::default() }.effective_workers(),
+            3
+        );
     }
 
     use crate::data::synth_store;
@@ -1312,7 +1383,7 @@ mod tests {
             let x = synth_batch(&mut r, n);
             let (i, logits) = roster.dispatch(&x, &mut scratch).unwrap();
             assert_eq!(logits.shape(), &[n, 10], "n={n}");
-            routed.insert(roster.engine(i).kind());
+            routed.insert(roster.kind_of(i));
         }
         assert_eq!(
             routed.into_iter().collect::<Vec<_>>(),
@@ -1321,8 +1392,8 @@ mod tests {
         );
 
         // every engine's report lands in the uniform engine.* gauge family
-        for e in roster.engines() {
-            e.report().export(|k, v| m.set_gauge(k, v));
+        for rep in roster.reports() {
+            rep.export(|k, v| m.set_gauge(k, v));
         }
         for name in ["host-f32", "host-qgemm", "host-csd"] {
             assert_eq!(
@@ -1375,7 +1446,7 @@ mod tests {
         let mut scratch = Scratch::new();
         let (i, logits) = roster.dispatch(&synth_batch(&mut r, 2), &mut scratch).unwrap();
         assert_eq!((i, logits.shape()), (0, &[2usize, 10][..]));
-        let rep = roster.engine(0).report();
+        let rep = roster.report_of(0);
         assert_eq!(rep.kind, EngineKind::Csd);
         assert!(rep.mean_pp <= 3.0 + 1e-12, "digit dial bounds the report's pp");
     }
@@ -1393,7 +1464,7 @@ mod tests {
         let fill = mk(PolicySelect::BatchFill);
         let floor = mk(PolicySelect::LatencyFloor);
         let energy = mk(PolicySelect::EnergyBudget);
-        let kind_at = |r: &Roster, n: usize| r.engine(r.route(n)).kind();
+        let kind_at = |r: &Roster, n: usize| r.kind_of(r.route(n));
         assert_eq!(kind_at(&fill, 16), EngineKind::F32);
         assert_eq!(kind_at(&floor, 16), EngineKind::Quantized);
         assert_eq!(kind_at(&fill, 1), EngineKind::Quantized);
@@ -1413,7 +1484,7 @@ mod tests {
         let roster = Roster::build(None, store, &cfg).unwrap();
         // the energy policy sends singletons to the CSD engine
         let csd = roster.route(1);
-        assert_eq!(roster.engine(csd).kind(), EngineKind::Csd);
+        assert_eq!(roster.kind_of(csd), EngineKind::Csd);
         assert!(!roster.any_quarantined());
 
         // two consecutive failures quarantine it; the first is forgiven
@@ -1426,7 +1497,7 @@ mod tests {
         // routed around: singletons degrade to the next energy preference
         let alt = roster.route(1);
         assert_ne!(alt, csd);
-        assert_eq!(roster.engine(alt).kind(), EngineKind::Quantized);
+        assert_eq!(roster.kind_of(alt), EngineKind::Quantized);
 
         // a success elsewhere must not reinstate the quarantined engine
         roster.note_ok(alt);
@@ -1490,7 +1561,7 @@ mod tests {
     #[test]
     fn roster_install_swaps_generation_and_returns_the_displaced_engines() {
         let cfg = ServerConfig::default();
-        let mut roster =
+        let roster =
             Roster::build(None, synth_store(83, ModelKind::Lenet), &cfg).unwrap();
         assert_eq!(roster.generation(), 1);
         assert_eq!(roster.len(), 3);
@@ -1522,6 +1593,48 @@ mod tests {
         assert_eq!(roster.generation(), 1);
         let (_, logits) = roster.dispatch(&synth_batch(&mut r, 1), &mut scratch).unwrap();
         assert_eq!(logits.shape(), &[1, 10]);
+    }
+
+    #[test]
+    fn serve_batch_reports_under_one_lock_and_survives_concurrent_readers() {
+        // serve_batch is the workers' whole per-batch roster interaction:
+        // run it from several threads at once against the shared roster and
+        // check every outcome is coherent (valid index, right generation,
+        // real logits)
+        let cfg = ServerConfig::default();
+        let roster = Arc::new(
+            Roster::build(None, synth_store(86, ModelKind::Lenet), &cfg).unwrap(),
+        );
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let roster = roster.clone();
+                thread::spawn(move || {
+                    let mut scratch = Scratch::new();
+                    let mut r = Rng::new(90 + t);
+                    for _ in 0..8 {
+                        let n = 1 + (r.f32() * 4.0) as usize;
+                        let xdata: Vec<f32> =
+                            (0..n * 28 * 28).map(|_| r.f32()).collect();
+                        let x = Tensor::new(vec![n, 28, 28, 1], xdata).unwrap();
+                        let served = roster.serve_batch(&x, &mut scratch);
+                        assert!(served.idx < 3);
+                        assert_eq!(served.generation, 1);
+                        assert!(served.dispatch_counter.starts_with("dispatch_"));
+                        match served.outcome {
+                            BatchOutcome::Logits(l) => {
+                                assert_eq!(l.shape(), &[n, 10]);
+                                assert!(served.report.is_some());
+                            }
+                            _ => panic!("healthy engines must serve"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(!roster.any_quarantined());
     }
 
     #[test]

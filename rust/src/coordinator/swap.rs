@@ -204,15 +204,16 @@ pub struct CanaryOutcome {
 
 /// A fully staged replacement generation: the decoded edge store, the built
 /// (but not yet installed) engine set, and what staging cost.  Engines are
-/// `Send` — they are built on the deploy thread and handed to the serving
-/// worker through the [`SwapSlot`].
+/// `Send + Sync` — they are built on the deploy thread, handed through the
+/// [`SwapSlot`], and installed into the shared roster that every replicated
+/// inference worker reads.
 pub struct StagedGeneration {
     /// The edge-side store: original fp32 head/biases + decoded approximate
     /// weights, the oracle the canary compared against.
     pub edge: WeightStore,
     /// The replacement engine set, in the `Auto` roster's host order:
     /// code-domain qgemm, truncated CSD, exact f32.
-    pub engines: Vec<Box<dyn Engine + Send>>,
+    pub engines: Vec<Box<dyn Engine + Send + Sync>>,
     pub transfer: TransferReport,
     /// Container bytes that crossed the channel.
     pub container_bytes: usize,
@@ -275,7 +276,7 @@ pub fn stage(store: &WeightStore, cfg: &SwapConfig) -> Result<StagedGeneration> 
     let csd =
         CsdEngine::from_store(&edge, cfg.csd).map_err(|e| stage_err(SwapStage::Build, e))?;
     let f32e = F32Engine::new(edge.clone());
-    let engines: Vec<Box<dyn Engine + Send>> =
+    let engines: Vec<Box<dyn Engine + Send + Sync>> =
         vec![Box::new(quant), Box::new(csd), Box::new(f32e)];
 
     let canary =
@@ -289,7 +290,7 @@ pub fn stage(store: &WeightStore, cfg: &SwapConfig) -> Result<StagedGeneration> 
 /// Fails naming the first engine outside the gate.
 fn canary_check(
     edge: &WeightStore,
-    engines: &[Box<dyn Engine + Send>],
+    engines: &[Box<dyn Engine + Send + Sync>],
     cfg: &CanaryConfig,
 ) -> Result<Vec<CanaryOutcome>> {
     if faults::swap_canary_fail() {
@@ -332,7 +333,7 @@ fn canary_check(
 /// A staged generation in flight to the serving worker.
 pub(crate) struct PendingSwap {
     pub generation: u64,
-    pub engines: Vec<Box<dyn Engine + Send>>,
+    pub engines: Vec<Box<dyn Engine + Send + Sync>>,
 }
 
 enum SlotState {
@@ -535,7 +536,7 @@ mod tests {
         let slot = SwapSlot::new();
         assert!(!slot.has_pending());
         assert!(slot.take_pending().is_none());
-        let engines = || -> Vec<Box<dyn Engine + Send>> {
+        let engines = || -> Vec<Box<dyn Engine + Send + Sync>> {
             vec![Box::new(F32Engine::new(synth_store(64, ModelKind::Lenet)))]
         };
         slot.post(PendingSwap { generation: 2, engines: engines() }).unwrap();

@@ -77,12 +77,17 @@ subcommands:
   decode        inspect a QSQ container           (--in model.qsq)
   deploy-sim    full encode→channel→decode pipeline vs a device profile
   finetune      on-device FC fine-tuning of the quantized LeNet
-  serve         TCP inference server (JSON lines; dynamic batching;
+  serve         TCP inference server (multiplexed JSON lines, pipelined
+                ids, out-of-order replies; GET /healthz, /metrics
+                [Prometheus], /metrics.json on the same port;
                 --engine auto|pjrt|host|host-quant|host-csd
                 [--digits K: CSD partial products/weight, K >= 1; omit for exact]
                 [--policy batch-fill|latency|energy: Auto batch dispatch]
                 [--queue-cap N: admission cap, 0 = 4x batch]
-                [--deadline-ms MS: shed jobs queued longer than this])
+                [--deadline-ms MS: shed jobs queued longer than this]
+                [--workers N: replicated inference workers, 0 = all cores]
+                [--synth: serve a synthetic store, no artifacts needed]
+                [--serve-secs S: bounded run + clean shutdown, for CI])
   client        synthetic load against a server (--port, --n)
   repro         regenerate a paper table/figure   (--exp table3|fig7|...|all)
 common flags: --artifacts DIR  --model lenet|convnet  --fast
@@ -368,13 +373,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // the deadline are shed with a terminal `deadline exceeded` reply
         queue_cap: args.get_usize("queue-cap", 0),
         deadline: std::time::Duration::from_millis(args.get_u64("deadline-ms", 2000)),
+        // replicated inference workers (0 = available_parallelism)
+        workers: args.get_usize("workers", 0),
         ..Default::default()
     };
-    let srv = server::Server::start(dir, cfg)?;
+    // --synth: serve a deterministic synthetic store with no artifacts on
+    // disk (the PJRT path is skipped) — CI smokes the full serving stack
+    // this way on runners that never ran `make artifacts`
+    let srv = if args.has_flag("synth") {
+        let store = qsq_edge::data::synth_store(args.get_u64("seed", 7), cfg.model);
+        server::Server::start_with_store(store, cfg)?
+    } else {
+        server::Server::start(dir, cfg)?
+    };
     println!("serving on 127.0.0.1:{} (ctrl-c to stop)", srv.port);
+    // --serve-secs N: run bounded, then exercise the graceful-shutdown path
+    // and exit 0 (CI end-to-end smoke); omitted = serve until killed
+    let serve_secs = args.get_u64("serve-secs", 0);
+    let t0 = std::time::Instant::now();
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(5));
+        std::thread::sleep(std::time::Duration::from_secs(
+            if serve_secs > 0 { 1 } else { 5 },
+        ));
         println!("{}", srv.metrics.snapshot().to_json());
+        if serve_secs > 0 && t0.elapsed().as_secs() >= serve_secs {
+            srv.stop();
+            println!("served {serve_secs}s; clean shutdown");
+            return Ok(());
+        }
     }
 }
 

@@ -30,10 +30,9 @@
 //! minimum-energy path that was previously unreachable from `Auto`.
 //! Policies are selected with `--policy` on the CLI ([`PolicySelect`]).
 
-use std::cell::RefCell;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -134,7 +133,8 @@ impl EngineReport {
 
 /// One inference engine on the serving path.  Implemented by the fused f32
 /// host path, the code-domain and CSD engines, and the PJRT artifact
-/// wrapper; the server holds them as `Box<dyn Engine>` in a roster and
+/// wrapper; the server holds them as `Box<dyn Engine + Send + Sync>` in a
+/// shared roster drained by replicated inference workers, and
 /// routes batches with a [`DispatchPolicy`].
 pub trait Engine {
     /// Forward one batch, reusing the worker's scratch arena (engines with
@@ -236,15 +236,19 @@ impl Engine for CsdEngine {
 /// compiled batch size and only the real rows of the logits are returned, so
 /// the roster can treat this engine exactly like the host paths.
 ///
-/// Not `Send`/`Sync` (the PJRT `Runtime` is thread-owned) — like every other
-/// engine it is constructed on, and owned by, the inference worker thread.
+/// `Send + Sync` like the host engines, so it can sit on the shared roster
+/// under replicated inference workers: the prebuilt argument vector is the
+/// only mutable state, and the `Mutex` around it serializes forwards — the
+/// PJRT executable runs one padded batch at a time by construction, so
+/// concurrent callers queue on the lock instead of racing slot 0.
 pub struct PjrtEngine {
     /// Keeps the PJRT client alive for the executable's lifetime.
     _rt: Runtime,
     exe: Arc<Executable>,
-    /// Prebuilt args; interior mutability because only slot 0 changes per
-    /// forward and the trait takes `&self` (single-threaded owner).
-    args: RefCell<Vec<ArgValue>>,
+    /// Prebuilt args; only slot 0 changes per forward and the trait takes
+    /// `&self`, so the mutex both provides interior mutability and
+    /// serializes the single-execution PJRT path under worker replication.
+    args: Mutex<Vec<ArgValue>>,
     /// The compiled (padded) execution batch size.
     batch: usize,
     model: ModelKind,
@@ -271,7 +275,7 @@ impl PjrtEngine {
         Ok(PjrtEngine {
             _rt: rt,
             exe,
-            args: RefCell::new(args),
+            args: Mutex::new(args),
             batch: compiled,
             model,
             macs_per_exec: ModelMeta::of(model).macs_per_image() * compiled as u64,
@@ -306,7 +310,7 @@ impl PjrtEngine {
         xdata[..b * pix].copy_from_slice(x.data());
         let padded = Tensor::new(vec![self.batch, h, w, c], xdata)?;
         let out = {
-            let mut args = self.args.borrow_mut();
+            let mut args = self.args.lock().unwrap();
             args[0] = ArgValue::F32(padded);
             self.exe.run(&args)?
         };
@@ -358,13 +362,15 @@ impl Engine for PjrtEngine {
 ///
 /// Only the roster build constructs this, and only when fault injection is
 /// armed at that moment — the disarmed serving path never allocates or
-/// checks anything fault-related per forward.
+/// checks anything fault-related per forward.  Carries the roster's
+/// `Send + Sync` bound through, so wrapped generations still share across
+/// replicated workers.
 pub struct FaultInjector {
-    inner: Box<dyn Engine>,
+    inner: Box<dyn Engine + Send + Sync>,
 }
 
 impl FaultInjector {
-    pub fn new(inner: Box<dyn Engine>) -> FaultInjector {
+    pub fn new(inner: Box<dyn Engine + Send + Sync>) -> FaultInjector {
         FaultInjector { inner }
     }
 }
@@ -547,8 +553,10 @@ impl PolicySelect {
         }
     }
 
-    /// Instantiate the policy.
-    pub fn build(self) -> Box<dyn DispatchPolicy> {
+    /// Instantiate the policy.  Policies are stateless, so the trait object
+    /// carries `Send + Sync` and the shared roster can route from any
+    /// inference worker.
+    pub fn build(self) -> Box<dyn DispatchPolicy + Send + Sync> {
         match self {
             PolicySelect::BatchFill => Box::new(BatchFillPolicy),
             PolicySelect::LatencyFloor => Box::new(LatencyFloorPolicy),
@@ -667,7 +675,8 @@ mod tests {
         // never armed inside unit tests — arming is process-global; the
         // armed behavior is covered by the test_chaos integration binary)
         let store = crate::data::synth_store(91, crate::model::meta::ModelKind::Lenet);
-        let inner: Box<dyn Engine> = Box::new(crate::runtime::host::F32Engine::new(store));
+        let inner: Box<dyn Engine + Send + Sync> =
+            Box::new(crate::runtime::host::F32Engine::new(store));
         let wrapped = FaultInjector::new(inner);
         assert_eq!(wrapped.kind(), EngineKind::F32);
         assert_eq!(wrapped.name(), "host-f32");

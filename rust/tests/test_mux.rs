@@ -1,0 +1,373 @@
+//! Multiplexed front-end integration: pipelined out-of-order replies keyed
+//! by `id`, many concurrent connections on one event loop, slow
+//! readers/writers, worker replication (N workers must serve the same
+//! predictions as 1), typed bad-request rejection, terminal shed/shutdown
+//! replies, and the HTTP ops surface (`/healthz`, Prometheus `/metrics`,
+//! `/metrics.json`) — all over synthetic stores, no artifacts needed.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use qsq_edge::coordinator::server::{EngineSelect, Server, ServerConfig};
+use qsq_edge::data::{synth_store, RequestGen};
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::util::json::{self, Value};
+
+const PIX: usize = 28 * 28; // LeNet input
+
+fn start(cfg: ServerConfig) -> Server {
+    Server::start_with_store(synth_store(5, ModelKind::Lenet), cfg).unwrap()
+}
+
+fn connect(port: u16) -> (BufReader<TcpStream>, TcpStream) {
+    let s = TcpStream::connect(format!("127.0.0.1:{port}")).unwrap();
+    s.set_nodelay(true).ok();
+    (BufReader::new(s.try_clone().unwrap()), s)
+}
+
+/// A valid request line with an all-zeros image (shared fast path for
+/// tests that don't care about the prediction value).
+fn zeros_line(id: u64) -> String {
+    format!("{{\"id\":{id},\"pixels\":[{}]}}\n", vec!["0"; PIX].join(","))
+}
+
+fn req_line(id: u64, pixels: &[f32]) -> String {
+    let arr = Value::Arr(pixels.iter().map(|&p| json::num(p as f64)).collect());
+    json::obj(vec![("id", json::num(id as f64)), ("pixels", arr)]).to_json() + "\n"
+}
+
+fn read_reply(r: &mut BufReader<TcpStream>) -> Value {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    json::parse(line.trim()).unwrap()
+}
+
+#[test]
+fn pipelined_replies_key_by_id_any_order() {
+    let srv = start(ServerConfig::default());
+    let (mut r, mut w) = connect(srv.port);
+    // fire 32 requests without reading a single reply — pipelining is the
+    // contract, and replies come back in *completion* order, so the only
+    // valid way to consume them is by id
+    let mut gen = RequestGen::new(ModelKind::Lenet, 7);
+    for id in 0..32u64 {
+        let (img, _) = gen.next();
+        w.write_all(req_line(id, img.data()).as_bytes()).unwrap();
+    }
+    let mut seen = BTreeMap::new();
+    for _ in 0..32 {
+        let v = read_reply(&mut r);
+        assert!(v.get("error").is_null(), "{}", v.to_json());
+        let id = v.get("id").as_f64().unwrap() as u64;
+        let pred = v.get("pred").as_f64().unwrap();
+        assert!((0.0..10.0).contains(&pred));
+        assert!(seen.insert(id, pred).is_none(), "duplicate reply for id {id}");
+    }
+    assert_eq!(seen.keys().copied().collect::<Vec<_>>(), (0..32).collect::<Vec<_>>());
+    srv.stop();
+}
+
+#[test]
+fn sixty_four_plus_connections_multiplexed_concurrently() {
+    // the acceptance bar: >= 64 connections open at once, every one with
+    // pipelined unanswered requests, all on one event-loop thread
+    let srv = start(ServerConfig::default());
+    let mut conns: Vec<(BufReader<TcpStream>, TcpStream)> =
+        (0..72).map(|_| connect(srv.port)).collect();
+    // all connections write both their requests before any reply is read
+    for (c, (_, w)) in conns.iter_mut().enumerate() {
+        let base = c as u64 * 100;
+        w.write_all(zeros_line(base).as_bytes()).unwrap();
+        w.write_all(zeros_line(base + 1).as_bytes()).unwrap();
+    }
+    for (c, (r, _)) in conns.iter_mut().enumerate() {
+        let base = c as u64 * 100;
+        let mut got: Vec<u64> = (0..2)
+            .map(|_| {
+                let v = read_reply(r);
+                assert!(v.get("error").is_null(), "conn {c}: {}", v.to_json());
+                v.get("id").as_f64().unwrap() as u64
+            })
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![base, base + 1], "conn {c}");
+    }
+    assert_eq!(srv.metrics.counter("requests"), 144);
+    srv.stop();
+}
+
+#[test]
+fn slow_writer_dribbling_bytes_still_parses() {
+    // one request split across many tiny TCP segments: the mux must
+    // reassemble the line, never treating a partial read as a request
+    let srv = start(ServerConfig::default());
+    let (mut r, mut w) = connect(srv.port);
+    let line = zeros_line(9);
+    for chunk in line.as_bytes().chunks(97) {
+        w.write_all(chunk).unwrap();
+        w.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let v = read_reply(&mut r);
+    assert_eq!(v.get("id").as_f64(), Some(9.0));
+    assert!(v.get("pred").as_f64().is_some(), "{}", v.to_json());
+    srv.stop();
+}
+
+#[test]
+fn slow_reader_gets_every_pipelined_reply() {
+    // a reader that doesn't drain for a while: replies queue in the write
+    // buffer (and socket), nothing is lost, the loop never stalls on us
+    let srv = start(ServerConfig::default());
+    let (mut r, mut w) = connect(srv.port);
+    for id in 0..16u64 {
+        w.write_all(zeros_line(id).as_bytes()).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(300)); // all 16 served, unread
+    let mut ids: Vec<u64> = (0..16)
+        .map(|_| {
+            let v = read_reply(&mut r);
+            assert!(v.get("error").is_null(), "{}", v.to_json());
+            v.get("id").as_f64().unwrap() as u64
+        })
+        .collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..16).collect::<Vec<_>>());
+    srv.stop();
+}
+
+/// Serve one fixed request set and collect the id -> pred map.
+fn preds_with_workers(workers: usize) -> BTreeMap<u64, f64> {
+    let cfg = ServerConfig {
+        // pinned to the pure-f32 host engine: the parity claim is about
+        // worker replication, not dispatch-policy routing
+        engine: EngineSelect::Host,
+        workers,
+        ..Default::default()
+    };
+    let srv = start(cfg);
+    // 8 connections x 8 pipelined requests, so replicated workers really
+    // serve interleaved batches
+    let handles: Vec<_> = (0..8u64)
+        .map(|c| {
+            let port = srv.port;
+            std::thread::spawn(move || {
+                let (mut r, mut w) = connect(port);
+                let mut gen = RequestGen::new(ModelKind::Lenet, 100 + c);
+                for i in 0..8u64 {
+                    let (img, _) = gen.next();
+                    w.write_all(req_line(c * 1000 + i, img.data()).as_bytes()).unwrap();
+                }
+                (0..8)
+                    .map(|_| {
+                        let v = read_reply(&mut r);
+                        assert!(v.get("error").is_null(), "{}", v.to_json());
+                        (
+                            v.get("id").as_f64().unwrap() as u64,
+                            v.get("pred").as_f64().unwrap(),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let mut out = BTreeMap::new();
+    for h in handles {
+        for (id, pred) in h.join().unwrap() {
+            out.insert(id, pred);
+        }
+    }
+    srv.stop();
+    out
+}
+
+#[test]
+fn replicated_workers_match_single_worker_predictions() {
+    // row-band kernels compute each output row independently, so however
+    // the dynamic batcher groups requests and whichever worker serves each
+    // batch, the logits per request are bitwise identical — N workers must
+    // reproduce the single-worker predictions exactly
+    let one = preds_with_workers(1);
+    let four = preds_with_workers(4);
+    assert_eq!(one.len(), 64);
+    assert_eq!(one, four, "worker replication changed served predictions");
+}
+
+#[test]
+fn overload_sheds_are_terminal_and_counted() {
+    let cfg = ServerConfig {
+        batch: 2,
+        queue_cap: 2,
+        max_delay: Duration::from_millis(1),
+        workers: 4,
+        ..Default::default()
+    };
+    let srv = start(cfg);
+    let (mut r, mut w) = connect(srv.port);
+    let n = 400u64;
+    for id in 0..n {
+        w.write_all(zeros_line(id).as_bytes()).unwrap();
+    }
+    let (mut preds, mut sheds) = (0u64, 0u64);
+    let mut seen = std::collections::BTreeSet::new();
+    for _ in 0..n {
+        let v = read_reply(&mut r);
+        assert!(seen.insert(v.get("id").as_f64().unwrap() as u64), "{}", v.to_json());
+        if v.get("pred").as_f64().is_some() {
+            preds += 1;
+        } else {
+            let e = v.get("error").as_str().unwrap();
+            assert!(
+                e == "overloaded" || e == "deadline exceeded",
+                "unexpected terminal reply: {e}"
+            );
+            if e == "overloaded" {
+                // the shed carries an actionable backoff hint
+                assert!(v.get("retry_after_ms").as_f64().unwrap() >= 1.0);
+            }
+            sheds += 1;
+        }
+    }
+    assert_eq!(preds + sheds, n, "every offered request got exactly one terminal reply");
+    assert!(sheds > 0, "a cap-2 queue under a 400-request burst must shed");
+    assert!(preds > 0, "admission control must not starve the served path");
+    assert_eq!(
+        srv.metrics.counter("shed_overload") + srv.metrics.counter("shed_deadline"),
+        sheds
+    );
+    srv.stop();
+}
+
+#[test]
+fn shutdown_replies_are_terminal_under_replication() {
+    let cfg = ServerConfig {
+        batch: 64,
+        max_delay: Duration::from_secs(5), // jobs sit queued until stop()
+        workers: 4,
+        ..Default::default()
+    };
+    let srv = start(cfg);
+    let (mut r, mut w) = connect(srv.port);
+    for id in 0..10u64 {
+        w.write_all(zeros_line(id).as_bytes()).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(200)); // all 10 admitted, none served
+    let m = srv.metrics.clone();
+    srv.stop();
+    // stop() drained the backlog: every queued job answered explicitly —
+    // clients never hang out a reply timeout on shutdown
+    let mut ids = Vec::new();
+    for _ in 0..10 {
+        let v = read_reply(&mut r);
+        assert_eq!(v.get("error").as_str(), Some("server shutting down"), "{}", v.to_json());
+        ids.push(v.get("id").as_f64().unwrap() as u64);
+    }
+    ids.sort_unstable();
+    assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    assert_eq!(m.counter("shed_shutdown"), 10);
+    // and the socket closes cleanly afterwards
+    let mut line = String::new();
+    assert_eq!(r.read_line(&mut line).unwrap(), 0, "EOF after drain");
+}
+
+#[test]
+fn bad_requests_are_typed_and_counted() {
+    let cfg = ServerConfig {
+        batch: 64,
+        max_delay: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let srv = start(cfg);
+    let (mut r, mut w) = connect(srv.port);
+
+    // a valid request that will sit in the batching window...
+    w.write_all(zeros_line(5).as_bytes()).unwrap();
+    // ...so a second use of its id is a *duplicate in flight* — the bugfix:
+    // admitting it would key two replies to one slot
+    w.write_all(zeros_line(5).as_bytes()).unwrap();
+    w.write_all(b"{\"pixels\":[1,2]}\n").unwrap(); // missing id
+    w.write_all(b"{\"id\":1.5,\"pixels\":[1,2]}\n").unwrap(); // non-integer id
+    w.write_all(b"{\"id\":6,\"pixels\":[1,2]}\n").unwrap(); // wrong pixel count
+
+    let mut errors = Vec::new();
+    let mut pred_id = None;
+    for _ in 0..5 {
+        let v = read_reply(&mut r);
+        match v.get("error").as_str() {
+            Some(e) => errors.push((e.to_string(), v.get("id").as_f64())),
+            None => pred_id = v.get("id").as_f64(),
+        }
+    }
+    assert_eq!(pred_id, Some(5.0), "the original request still serves");
+    assert_eq!(errors.len(), 4);
+    let texts: Vec<&str> = errors.iter().map(|(e, _)| e.as_str()).collect();
+    assert!(texts.iter().any(|e| e.contains("duplicate id 5")), "{texts:?}");
+    assert!(texts.contains(&"missing id"), "{texts:?}");
+    assert!(texts.contains(&"id must be a non-negative integer"), "{texts:?}");
+    assert!(texts.iter().any(|e| e.contains("expected 784 pixels")), "{texts:?}");
+    // the duplicate-id rejection echoes the id; the id-less rejections can't
+    let dup = errors.iter().find(|(e, _)| e.contains("duplicate")).unwrap();
+    assert_eq!(dup.1, Some(5.0));
+    assert_eq!(srv.metrics.counter("bad_requests"), 4);
+
+    // once id 5's reply has been delivered it is no longer in flight —
+    // reusing the id on the same connection is legal again
+    w.write_all(zeros_line(5).as_bytes()).unwrap();
+    let v = read_reply(&mut r);
+    assert!(v.get("pred").as_f64().is_some(), "{}", v.to_json());
+    assert_eq!(srv.metrics.counter("bad_requests"), 4, "no new rejection");
+    srv.stop();
+}
+
+/// Issue one HTTP GET and return the full raw response.
+fn http_get(port: u16, path: &str) -> String {
+    let mut s = TcpStream::connect(format!("127.0.0.1:{port}")).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.1\r\nHost: qsq\r\n\r\n").as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap(); // Connection: close -> EOF
+    out
+}
+
+fn http_body(resp: &str) -> &str {
+    resp.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+#[test]
+fn healthz_and_metrics_served_over_http() {
+    let cfg = ServerConfig { workers: 2, ..Default::default() };
+    let srv = start(cfg);
+    // put some traffic through so every metric family has content
+    let (mut r, mut w) = connect(srv.port);
+    for id in 0..4u64 {
+        w.write_all(zeros_line(id).as_bytes()).unwrap();
+    }
+    for _ in 0..4 {
+        let v = read_reply(&mut r);
+        assert!(v.get("error").is_null());
+    }
+
+    let h = http_get(srv.port, "/healthz");
+    assert!(h.starts_with("HTTP/1.1 200 OK\r\n"), "{h}");
+    let hv = json::parse(http_body(&h).trim()).unwrap();
+    assert_eq!(hv.get("status").as_str(), Some("ok"));
+    assert_eq!(hv.get("workers").as_f64(), Some(2.0));
+    assert_eq!(hv.get("generation").as_f64(), Some(1.0));
+
+    let m = http_get(srv.port, "/metrics");
+    assert!(m.contains("text/plain; version=0.0.4"), "{m}");
+    let mb = http_body(&m);
+    assert!(mb.contains("# TYPE qsq_requests_total counter"), "{mb}");
+    assert!(mb.contains("qsq_requests_total 4"), "{mb}");
+    assert!(mb.contains("# TYPE qsq_swap_generation gauge"), "{mb}");
+    assert!(mb.contains("# TYPE qsq_infer_batch_seconds summary"), "{mb}");
+    assert!(mb.contains("quantile=\"0.999\""), "{mb}");
+
+    let j = http_get(srv.port, "/metrics.json");
+    let jv = json::parse(http_body(&j).trim()).unwrap();
+    assert!(jv.get("counter.requests").as_f64().is_some(), "{}", jv.to_json());
+
+    assert!(http_get(srv.port, "/nope").starts_with("HTTP/1.1 404"));
+    srv.stop();
+}
