@@ -17,11 +17,17 @@
 //! * O(sort) sigma-search quantization vs the naive 19x8 grid (152 full
 //!   assignment passes).
 //!
+//! * the lane-ized plane-sum primitives (`kernels::lanes`) vs their
+//!   retained scalar oracles — the `plane-sum-*` / `swar-sum-*` pairs the
+//!   CI bench summary renders as a speedup ratio — and warm engine
+//!   forwards with sticky band pinning vs re-dealt leasing at the server
+//!   batch size.
+//!
 //! Emits `BENCH_kernels.json` (name/median/p95/throughput per entry) so the
 //! perf trajectory is tracked across PRs, including counter entries for the
 //! scratch arena (reuse/alloc), the persistent worker pool
-//! (spawn-vs-wakeup — spawns are asserted frozen across warm forwards), and
-//! the per-layer scratch high-water marks.
+//! (spawn-vs-wakeup — spawns are asserted frozen across warm forwards —
+//! and pin hits-vs-misses), and the per-layer scratch high-water marks.
 
 use qsq_edge::bench::{run_bench, write_json, BenchResult};
 use qsq_edge::data::synth_store;
@@ -63,6 +69,21 @@ fn pool_entry(name: &str, stats: kernels::PoolStats) -> BenchResult {
         p95_s: 0.0,
         min_s: 0.0,
         items_per_iter: stats.wakeups as f64,
+    }
+}
+
+/// A synthetic JSON entry for the sticky-pinning counters (same convention
+/// as [`pool_entry`]): `iters` holds the pin-hit count and `items_per_iter`
+/// the pin-miss count.
+fn pin_entry(name: &str, stats: kernels::PoolStats) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: stats.pin_hits as usize,
+        mean_s: 0.0,
+        median_s: 0.0,
+        p95_s: 0.0,
+        min_s: 0.0,
+        items_per_iter: stats.pin_misses as f64,
     }
 }
 
@@ -133,6 +154,53 @@ fn main() {
         results.push(predec);
         results.push(fast);
         results.push(v2);
+    }
+
+    // --- lane-ized plane sums vs the retained scalar oracles ----------------
+    {
+        use qsq_edge::kernels::lanes;
+        // a server-batch-scale plane workload: 64 planes of 4096 offsets
+        // gathering from a 16k activation buffer — the exact inner loop
+        // qgemm2's level planes and the CSD digit planes spend their time in
+        let nact = 16 * 1024usize;
+        let xs = gen_weights(&mut r, nact, 1.0);
+        let planes: Vec<Vec<u16>> = (0..64)
+            .map(|_| (0..4096).map(|_| r.below(nact as u64) as u16).collect())
+            .collect();
+        let items = (planes.len() * 4096) as f64;
+        let scalar = run_bench("plane-sum-scalar 64x4096", 3, 30, items, || {
+            planes.iter().map(|p| lanes::gather_sum_scalar(p, &xs)).sum::<f32>()
+        });
+        println!("{}", scalar.report());
+        let lane = run_bench("plane-sum-lanes  64x4096", 3, 30, items, || {
+            planes.iter().map(|p| lanes::gather_sum(p, &xs)).sum::<f32>()
+        });
+        println!("{}", lane.report());
+        println!(
+            "  -> plane-sum lane speedup {:.2}x vs scalar",
+            scalar.median_s / lane.median_s.max(1e-12)
+        );
+        results.push(scalar);
+        results.push(lane);
+
+        // the SWAR word sums behind the integer datapath, same gate: the
+        // differential harness (tests/test_lanes.rs) pins bitwise equality,
+        // this pins the speedup trajectory
+        let i16s: Vec<i16> = (0..256 * 1024).map(|_| r.range_i64(-32768, 32767) as i16).collect();
+        let sitems = i16s.len() as f64;
+        assert_eq!(lanes::sum_i16(&i16s), lanes::sum_i16_scalar(&i16s));
+        let s16 = run_bench("swar-sum-i16-scalar 256k", 3, 30, sitems, || {
+            lanes::sum_i16_scalar(&i16s)
+        });
+        println!("{}", s16.report());
+        let l16 = run_bench("swar-sum-i16-lanes  256k", 3, 30, sitems, || lanes::sum_i16(&i16s));
+        println!("{}", l16.report());
+        println!(
+            "  -> swar i16 speedup {:.2}x vs scalar",
+            s16.median_s / l16.median_s.max(1e-12)
+        );
+        results.push(s16);
+        results.push(l16);
     }
 
     // --- fused qconv vs the materialized pad+im2col+qgemm2 pipeline ---------
@@ -231,6 +299,32 @@ fn main() {
             after.spawns, after.wakeups, after.jobs
         );
         results.push(pool_entry("kernel-pool-spawns-vs-wakeups", after));
+
+        // --- sticky band pinning vs re-dealt leasing at the server batch ----
+        // placement-only, so the outputs are bitwise identical either way;
+        // what this tracks is the wall-clock delta cache locality buys
+        let pool = engine.pool();
+        pool.set_pinned(true);
+        let pinned = run_bench("engine-fwd lenet pinned-bands  b=32", 2, 12, items, || {
+            engine.forward_with(&x, &mut s_q).unwrap()
+        });
+        println!("{}", pinned.report());
+        pool.set_pinned(false);
+        let redealt = run_bench("engine-fwd lenet redealt-bands b=32", 2, 12, items, || {
+            engine.forward_with(&x, &mut s_q).unwrap()
+        });
+        pool.set_pinned(true);
+        println!("{}", redealt.report());
+        let ps = pool.stats();
+        println!(
+            "  -> pinned bands {:.2}x vs re-dealt ({} pin hits, {} pin misses)",
+            redealt.median_s / pinned.median_s.max(1e-12),
+            ps.pin_hits,
+            ps.pin_misses
+        );
+        results.push(pinned);
+        results.push(redealt);
+        results.push(pin_entry("kernel-pool-pin-hits-vs-misses", ps));
 
         // --- per-layer scratch high-water marks -----------------------------
         for (layer, pk) in s_q.layer_peaks() {

@@ -910,6 +910,10 @@ impl Server {
         // (the build wraps engines only when armed); a malformed spec fails
         // startup loudly rather than running a chaos scenario fault-free
         crate::util::faults::arm_from_env()?;
+        // reject an unparsable PALLAS_POOL_THREADS here, before the global
+        // pool lazily initializes: a typo'd width must fail startup, not
+        // silently serve at the default
+        crate::kernels::pool::validate_env().map_err(|e| anyhow::anyhow!(e))?;
         let listener = TcpListener::bind(&cfg.bind)
             .with_context(|| format!("binding {}", cfg.bind))?;
         listener.set_nonblocking(true)?;
@@ -1170,6 +1174,8 @@ fn worker_loop(ctx: WorkerCtx) {
                 ctx.metrics.set_gauge("pool.spawns", ps.spawns as f64);
                 ctx.metrics.set_gauge("pool.wakeups", ps.wakeups as f64);
                 ctx.metrics.set_gauge("pool.jobs", ps.jobs as f64);
+                ctx.metrics.set_gauge("pool.pin_hits", ps.pin_hits as f64);
+                ctx.metrics.set_gauge("pool.pin_misses", ps.pin_misses as f64);
                 for (layer, pk) in scratch.layer_peaks() {
                     ctx.metrics.set_gauge(
                         &format!("scratch_hw.{layer}.patch_bytes"),
@@ -1409,6 +1415,8 @@ mod tests {
                 "energy.compute_pj",
                 "energy.total_pj",
                 "pool.spawns",
+                "pool.pin_hits",
+                "pool.pin_misses",
             ] {
                 assert!(
                     m.gauge(&format!("engine.{name}.{suffix}")).is_some(),

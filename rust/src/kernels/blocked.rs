@@ -82,19 +82,29 @@ pub fn gemm_band(out: &mut [f32], xd: &[f32], wd: &[f32], k: usize, n: usize) {
             }
             j += NR;
         }
-        // leftover columns (< NR): direct accumulation, still k-ascending
+        // leftover columns (< NR): a fixed-width register accumulator array
+        // (only the first `jend - j` lanes live) instead of accumulating
+        // through `out` memory each k step — the same lane shape the main
+        // microtile hands the autovectorizer.  Per element the reduction is
+        // still k-ascending into a single accumulator spilled once into the
+        // zeroed output, so the bitwise contract with `matmul_naive` holds.
         if j < jend {
+            let rem = jend - j;
             for i in 0..rows {
+                let mut accr = [0.0f32; NR];
                 let xrow = &xd[i * k..(i + 1) * k];
                 for (kx, &a) in xrow.iter().enumerate() {
                     if a == 0.0 {
                         continue;
                     }
                     let wrow = &wd[kx * n + j..kx * n + jend];
-                    let orow = &mut out[i * n + j..i * n + jend];
-                    for (o, &wv) in orow.iter_mut().zip(wrow) {
-                        *o += a * wv;
+                    for (c, &wv) in accr[..rem].iter_mut().zip(wrow) {
+                        *c += a * wv;
                     }
+                }
+                let orow = &mut out[i * n + j..i * n + jend];
+                for (o, &c) in orow.iter_mut().zip(&accr) {
+                    *o += c;
                 }
             }
         }

@@ -17,7 +17,9 @@
 //!   offsets — the CSD analogue of qgemm2's per-level offset planes.
 //! * **Shift-and-add inner loop.**  Per output element the kernel sums the
 //!   activations each plane selects (a straight pass over a contiguous `u16`
-//!   stream) and combines plane sums as `acc += 2^(e - frac) * (pos - neg)`.
+//!   stream, run on the [`super::lanes::gather_sum`] lane reduction; the
+//!   scalar order survives as [`csd_gemm_scalar_on`], the differential
+//!   oracle) and combines plane sums as `acc += 2^(e - frac) * (pos - neg)`.
 //!   The only multiplies are those exact power-of-two scalings — wire shifts
 //!   in the QSM datapath, exact f32 ops here — so at most `max_digits`
 //!   partial products are spent per weight, exactly like the hardware.
@@ -259,25 +261,22 @@ impl PackedCsdTensor {
     }
 }
 
-/// Sum the activations a plane's offsets select — a straight pass over a
-/// contiguous `u16` stream, shared shape with qgemm2's inner loop.
-#[inline]
-fn plane_sum(offsets: &[u16], xrow: &[f32]) -> f32 {
-    let mut s = 0.0f32;
-    for &off in offsets {
-        s += xrow[off as usize];
-    }
-    s
-}
-
 /// One row band of the CSD kernel: `out` is `rows x OC` (rows inferred),
 /// `xb` the matching rows of the activation matrix.  Accumulates into `out`.
 ///
 /// Loop order is (column, row, plane): a column's plane list is resolved
 /// once and reused across every row of the band.  Per output element the
-/// planes accumulate in ascending exponent order with rows ascending inside
-/// each plane, so band/chunk splits cannot change any value.
-pub(crate) fn csd_band(out: &mut [f32], xb: &[f32], p: &PackedCsdTensor) {
+/// planes accumulate in ascending exponent order with a deterministic
+/// reduction inside each plane (`plane_sum` — the lane gather for serving,
+/// the scalar oracle for the reference path), so band/chunk splits cannot
+/// change any value.
+#[inline(always)]
+fn csd_band_with<S: Fn(&[u16], &[f32]) -> f32>(
+    out: &mut [f32],
+    xb: &[f32],
+    p: &PackedCsdTensor,
+    plane_sum: S,
+) {
     let (k, oc) = (p.k, p.oc);
     if oc == 0 {
         return;
@@ -304,6 +303,18 @@ pub(crate) fn csd_band(out: &mut [f32], xb: &[f32], p: &PackedCsdTensor) {
     }
 }
 
+/// The serving band: digit-plane sums on the [`super::lanes::gather_sum`]
+/// lane reduction.
+pub(crate) fn csd_band(out: &mut [f32], xb: &[f32], p: &PackedCsdTensor) {
+    csd_band_with(out, xb, p, super::lanes::gather_sum)
+}
+
+/// The retained scalar-oracle band: digit-plane sums in single-accumulator
+/// order ([`super::lanes::gather_sum_scalar`]).
+pub(crate) fn csd_band_scalar(out: &mut [f32], xb: &[f32], p: &PackedCsdTensor) {
+    csd_band_with(out, xb, p, super::lanes::gather_sum_scalar)
+}
+
 /// `out[M,OC] = x[M,K] @ packed` on the digit-plane layout (caller provides
 /// a zeroed `out` of exactly `m * OC`), row bands on the global worker pool.
 pub fn csd_gemm_into(out: &mut [f32], xd: &[f32], m: usize, p: &PackedCsdTensor) {
@@ -324,6 +335,24 @@ pub fn csd_gemm_into_on(
     let total = m.saturating_mul(p.ops_per_row());
     let nthreads = super::threads_for_rows(m, total, CSD_PAR_THRESHOLD).min(pool.width());
     let band = |_: usize, ob: &mut [f32], xb: &[f32]| csd_band(ob, xb, p);
+    super::for_each_row_band_on(pool, out, xd, m, p.k, p.oc, nthreads, band);
+}
+
+/// [`csd_gemm_into_on`] with every digit-plane sum on the retained scalar
+/// oracle — identical banding, single-accumulator reduction order.  The
+/// differential baseline, not a serving path.
+pub fn csd_gemm_scalar_on(
+    pool: &super::Pool,
+    out: &mut [f32],
+    xd: &[f32],
+    m: usize,
+    p: &PackedCsdTensor,
+) {
+    debug_assert_eq!(out.len(), m * p.oc);
+    debug_assert_eq!(xd.len(), m * p.k);
+    let total = m.saturating_mul(p.ops_per_row());
+    let nthreads = super::threads_for_rows(m, total, CSD_PAR_THRESHOLD).min(pool.width());
+    let band = |_: usize, ob: &mut [f32], xb: &[f32]| csd_band_scalar(ob, xb, p);
     super::for_each_row_band_on(pool, out, xd, m, p.k, p.oc, nthreads, band);
 }
 

@@ -1,0 +1,243 @@
+//! Lane-ized reduction primitives for the plane-sum inner loops (std only,
+//! no nightly, no intrinsics).
+//!
+//! Every code-domain inner loop in this crate — qgemm2's level planes,
+//! the CSD digit planes — bottoms out in the same operation: *sum the f32
+//! activations a contiguous `u16` offset stream selects*.  The scalar form
+//! folds every element into one accumulator, so the whole plane serializes
+//! on one ~4-cycle add latency chain.  [`gather_sum`] breaks that chain:
+//! offsets are walked in fixed [`F32_LANES`]-wide chunks with one
+//! independent accumulator per lane (the shape autovectorizers and
+//! out-of-order cores both want), and the lanes are folded with a *fixed*
+//! pairwise tree so the reduction order — and therefore the result — is a
+//! deterministic function of the plane alone, never of banding or timing.
+//!
+//! The scalar forms ([`gather_sum_scalar`], [`sum_i8_scalar`],
+//! [`sum_i16_scalar`]) are retained as the bitwise oracles the differential
+//! harness (`tests/test_lanes.rs`) and `benches/bench_kernels.rs` compare
+//! against.
+//!
+//! Alongside the f32 gather lanes live the true SWAR word sums the paper's
+//! integer datapath maps onto: [`sum_i8`] packs 8 biased bytes per `u64`
+//! word and [`sum_i16`] 4 biased half-words, accumulating into split
+//! even/odd lane registers and **widening every fixed number of words**
+//! ([`I8_WIDEN_WORDS`] / [`I16_WIDEN_WORDS`]) so a lane's partial sum can
+//! never carry into its neighbor.  The widening interval is chosen from the
+//! lane arithmetic, not tuned: an i8 lane holds at most `255 * words` in a
+//! u16 (overflow past 257 words), an i16 lane at most `65535 * words` in a
+//! u32 (overflow past 65537 words).  The differential harness drives
+//! all-extremal inputs *longer* than those intervals, so a missed widen
+//! fails loudly instead of wrapping silently.
+
+/// Chunk width of the f32 gather lanes: how many independent accumulators
+/// [`gather_sum`] carries through a plane.
+pub const F32_LANES: usize = 8;
+
+/// i8 SWAR lanes per `u64` word.
+pub const I8_LANES: usize = 8;
+
+/// Words accumulated between i8 lane widenings.  Each word adds at most
+/// 255 (a biased byte) to each u16 lane, so `255 * I8_WIDEN_WORDS` must
+/// stay below `u16::MAX`: 256 words leave lane headroom of exactly one
+/// more word.
+pub const I8_WIDEN_WORDS: usize = 256;
+
+/// i16 SWAR lanes per `u64` word.
+pub const I16_LANES: usize = 4;
+
+/// Words accumulated between i16 lane widenings.  Each word adds at most
+/// 65535 (a biased half-word) to each u32 lane, so
+/// `65535 * I16_WIDEN_WORDS` must stay below `u32::MAX`: 65536 words leave
+/// lane headroom of exactly one more word.
+pub const I16_WIDEN_WORDS: usize = 1 << 16;
+
+/// Sum the activations an offset plane selects, one accumulator — the
+/// scalar oracle the lane form is differentially tested against.
+#[inline]
+pub fn gather_sum_scalar(offsets: &[u16], xs: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for &off in offsets {
+        s += xs[off as usize];
+    }
+    s
+}
+
+/// Sum the activations an offset plane selects with [`F32_LANES`]
+/// independent accumulators — the plane-sum hot path of
+/// [`super::qgemm::qgemm2`] and the CSD digit planes.
+///
+/// Planes shorter than one chunk take the scalar loop unchanged (bitwise
+/// equal to [`gather_sum_scalar`], and the common case for sparse qgemm2
+/// cells).  Longer planes reassociate the reduction — lane partials fold in
+/// a fixed pairwise tree, then the sub-chunk tail — so the result can
+/// differ from the scalar order by normal f32 rounding, but is itself fully
+/// deterministic: it depends only on the plane contents, never on banding,
+/// pinning, or thread count.
+#[inline]
+pub fn gather_sum(offsets: &[u16], xs: &[f32]) -> f32 {
+    if offsets.len() < F32_LANES {
+        return gather_sum_scalar(offsets, xs);
+    }
+    let mut acc = [0.0f32; F32_LANES];
+    let mut chunks = offsets.chunks_exact(F32_LANES);
+    for ch in &mut chunks {
+        for (a, &off) in acc.iter_mut().zip(ch) {
+            *a += xs[off as usize];
+        }
+    }
+    let mut tail = 0.0f32;
+    for &off in chunks.remainder() {
+        tail += xs[off as usize];
+    }
+    // fixed pairwise fold: (0+4)+(2+6) then (1+5)+(3+7), tail last
+    (((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]))) + tail
+}
+
+/// Scalar i8 sum into i64 — the oracle for [`sum_i8`].
+pub fn sum_i8_scalar(xs: &[i8]) -> i64 {
+    xs.iter().map(|&v| v as i64).sum()
+}
+
+/// Sum an `i8` slice via SWAR on `u64`: [`I8_LANES`] biased bytes per word,
+/// even/odd bytes split into two 4×u16 lane registers, widened into the
+/// i64 total every [`I8_WIDEN_WORDS`] words so no lane can carry into its
+/// neighbor.  Exact for every input (integer arithmetic — bitwise equal to
+/// [`sum_i8_scalar`]).
+pub fn sum_i8(xs: &[i8]) -> i64 {
+    // XOR with 0x80 maps i8 to its biased (x + 128) u8 representation
+    const BIAS: u64 = 0x8080_8080_8080_8080;
+    const LO_BYTES: u64 = 0x00FF_00FF_00FF_00FF;
+    let mut total: i64 = 0;
+    let mut biased: i64 = 0; // elements folded through the biased lanes
+    let mut even: u64 = 0; // bytes 0,2,4,6 as 4 x u16 lanes
+    let mut odd: u64 = 0; // bytes 1,3,5,7 as 4 x u16 lanes
+    let mut words = 0usize;
+    let mut chunks = xs.chunks_exact(I8_LANES);
+    for ch in &mut chunks {
+        let mut b = [0u8; 8];
+        for (d, &s) in b.iter_mut().zip(ch) {
+            *d = s as u8;
+        }
+        let w = u64::from_le_bytes(b) ^ BIAS;
+        even += w & LO_BYTES;
+        odd += (w >> 8) & LO_BYTES;
+        words += 1;
+        if words == I8_WIDEN_WORDS {
+            total += fold_u16_lanes(even) + fold_u16_lanes(odd);
+            biased += (words * I8_LANES) as i64;
+            (even, odd, words) = (0, 0, 0);
+        }
+    }
+    if words > 0 {
+        total += fold_u16_lanes(even) + fold_u16_lanes(odd);
+        biased += (words * I8_LANES) as i64;
+    }
+    total -= 128 * biased; // undo the per-element bias
+    for &v in chunks.remainder() {
+        total += v as i64;
+    }
+    total
+}
+
+/// Scalar i16 sum into i64 — the oracle for [`sum_i16`].
+pub fn sum_i16_scalar(xs: &[i16]) -> i64 {
+    xs.iter().map(|&v| v as i64).sum()
+}
+
+/// Sum an `i16` slice via SWAR on `u64`: [`I16_LANES`] biased half-words
+/// per word, even/odd halves split into two 2×u32 lane registers, widened
+/// into the i64 total every [`I16_WIDEN_WORDS`] words.  Exact for every
+/// input (bitwise equal to [`sum_i16_scalar`]); in particular the total may
+/// exceed `i32` — the widen carries lanes into i64 before any lane can
+/// wrap, which is exactly what the overflow-adversarial harness cases pin.
+pub fn sum_i16(xs: &[i16]) -> i64 {
+    // XOR with 0x8000 maps i16 to its biased (x + 32768) u16 representation
+    const BIAS: u64 = 0x8000_8000_8000_8000;
+    const LO_HALVES: u64 = 0x0000_FFFF_0000_FFFF;
+    let mut total: i64 = 0;
+    let mut biased: i64 = 0;
+    let mut even: u64 = 0; // half-words 0,2 as 2 x u32 lanes
+    let mut odd: u64 = 0; // half-words 1,3 as 2 x u32 lanes
+    let mut words = 0usize;
+    let mut chunks = xs.chunks_exact(I16_LANES);
+    for ch in &mut chunks {
+        let w = (ch[0] as u16 as u64)
+            | ((ch[1] as u16 as u64) << 16)
+            | ((ch[2] as u16 as u64) << 32)
+            | ((ch[3] as u16 as u64) << 48);
+        let w = w ^ BIAS;
+        even += w & LO_HALVES;
+        odd += (w >> 16) & LO_HALVES;
+        words += 1;
+        if words == I16_WIDEN_WORDS {
+            total += fold_u32_lanes(even) + fold_u32_lanes(odd);
+            biased += (words * I16_LANES) as i64;
+            (even, odd, words) = (0, 0, 0);
+        }
+    }
+    if words > 0 {
+        total += fold_u32_lanes(even) + fold_u32_lanes(odd);
+        biased += (words * I16_LANES) as i64;
+    }
+    total -= 32768 * biased;
+    for &v in chunks.remainder() {
+        total += v as i64;
+    }
+    total
+}
+
+#[inline]
+fn fold_u16_lanes(acc: u64) -> i64 {
+    ((acc & 0xFFFF) + ((acc >> 16) & 0xFFFF) + ((acc >> 32) & 0xFFFF) + (acc >> 48)) as i64
+}
+
+#[inline]
+fn fold_u32_lanes(acc: u64) -> i64 {
+    ((acc & 0xFFFF_FFFF) + (acc >> 32)) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gather_sum_short_planes_bitwise_equal_scalar() {
+        let xs: Vec<f32> = (0..64).map(|v| (v as f32).sin()).collect();
+        for len in 0..F32_LANES {
+            let offsets: Vec<u16> = (0..len as u16).map(|o| (o * 7) % 64).collect();
+            let (s, l) = (gather_sum_scalar(&offsets, &xs), gather_sum(&offsets, &xs));
+            assert_eq!(s.to_bits(), l.to_bits(), "len {len} must take the scalar path");
+        }
+    }
+
+    #[test]
+    fn gather_sum_exact_on_integer_activations() {
+        // integer activations: both orders are exact, so lane == scalar
+        let mut r = Rng::new(7);
+        let xs: Vec<f32> = (0..256).map(|_| r.range_i64(-16, 16) as f32).collect();
+        for len in [8usize, 9, 63, 64, 65, 500] {
+            let offsets: Vec<u16> = (0..len).map(|_| r.below(256) as u16).collect();
+            assert_eq!(gather_sum(&offsets, &xs), gather_sum_scalar(&offsets, &xs), "len {len}");
+        }
+    }
+
+    #[test]
+    fn swar_sums_match_scalar_oracles() {
+        let mut r = Rng::new(11);
+        let i8s: Vec<i8> = (0..3000).map(|_| r.range_i64(-128, 127) as i8).collect();
+        let i16s: Vec<i16> = (0..3000).map(|_| r.range_i64(-32768, 32767) as i16).collect();
+        for len in [0usize, 1, 7, 8, 9, 63, 65, 3000] {
+            assert_eq!(sum_i8(&i8s[..len]), sum_i8_scalar(&i8s[..len]), "i8 len {len}");
+            let l16 = len.min(i16s.len());
+            assert_eq!(sum_i16(&i16s[..l16]), sum_i16_scalar(&i16s[..l16]), "i16 len {len}");
+        }
+    }
+
+    #[test]
+    fn widen_interval_leaves_lane_headroom() {
+        // the compile-time arithmetic the widening intervals rely on
+        assert!(255u32 * I8_WIDEN_WORDS as u32 <= u16::MAX as u32);
+        assert!(65535u64 * I16_WIDEN_WORDS as u64 <= u32::MAX as u64);
+    }
+}

@@ -31,6 +31,14 @@
 //!   band-by-band on the plane-packed qgemm, the CSD shift-and-add kernel,
 //!   or the f32 microkernel, so the full patch matrix is never materialized
 //!   and steady-state serving allocates nothing per request.
+//! * [`mod@lanes`] — the lane-ized reduction primitives under all of the
+//!   above: the plane-sum hot path ([`lanes::gather_sum`], fixed-width
+//!   chunked f32 gathers with one accumulator per lane) that qgemm2 and the
+//!   CSD kernel call per plane, plus the true SWAR-on-`u64` integer sums
+//!   ([`lanes::sum_i8`] / [`lanes::sum_i16`]) with carry-safe lane widening
+//!   every fixed word count.  The scalar forms are retained as bitwise
+//!   oracles; `tests/test_lanes.rs` is the differential harness that sweeps
+//!   every chunk/tail boundary and the widening overflow edge.
 //! * [`mod@pool`] — the persistent worker pool every row-band kernel
 //!   (blocked f32, qgemm2, csd, and the fused conv driver) dispatches on.
 //!   Workers are spawned once (lazily, on first kernel use)
@@ -38,7 +46,12 @@
 //!   instead of a `std::thread::scope` spawn + join per matmul, so
 //!   steady-state serving spawns zero threads per request
 //!   ([`PoolStats::spawns`] freezes after initialization, exactly like
-//!   [`ScratchStats::allocs`] freezes once the arena is warm).
+//!   [`ScratchStats::allocs`] freezes once the arena is warm).  In its
+//!   default *pinned* mode the pool leases each band index to a preferred
+//!   worker, so the same row ranges land on the same (cache-warm) worker
+//!   across the layers of one forward and across warm forwards; the
+//!   [`PoolStats::pin_hits`] / [`PoolStats::pin_misses`] counters expose how
+//!   often locality actually held.
 //!
 //! ## The `PALLAS_POOL_THREADS` knob
 //!
@@ -50,7 +63,12 @@
 //! path — useful on tiny edge cores, under cgroup CPU quotas the runtime
 //! cannot see, or to pin down nondeterministic scheduling while debugging.
 //! Band partitioning is by whole rows either way, so threaded and serial
-//! runs are bitwise identical.
+//! runs are bitwise identical.  A value that is not an integer `>= 1` is
+//! rejected loudly ([`pool::parse_pool_threads`] returns an error, and the
+//! server refuses to start) instead of silently falling back.
+//! `PALLAS_POOL_PIN=0` disables band pinning (bands lease arbitrary idle
+//! workers, the pre-pinning behavior); results are bitwise identical either
+//! way — pinning moves *where* a band runs, never how its rows reduce.
 //!
 //! The remaining member of the kernel set lives with the quantizer it
 //! accelerates: [`crate::quant::sigma_fast`] scores the whole 19x8
@@ -64,18 +82,23 @@
 
 pub mod blocked;
 pub mod csd;
+pub mod lanes;
 pub mod pool;
 pub mod qconv;
 pub mod qgemm;
 
 pub use csd::{
-    csd_gemm, csd_gemm_into, csd_gemm_into_on, csd_gemm_threads, CsdStats, PackedCsdTensor,
+    csd_gemm, csd_gemm_into, csd_gemm_into_on, csd_gemm_scalar_on, csd_gemm_threads, CsdStats,
+    PackedCsdTensor,
 };
 pub use pool::{Pool, PoolStats};
-pub use qconv::{csd_conv, csd_conv_into, fconv_into, qconv, qconv_into};
+pub use qconv::{
+    csd_conv, csd_conv_into, csd_conv_scalar_into, fconv_into, qconv, qconv_into,
+    qconv_scalar_into,
+};
 pub use qgemm::{
-    qgemm, qgemm2, qgemm2_into, qgemm2_into_on, qgemm2_qt, qgemm2_threads, qgemm_qt,
-    PackedQTensor, PackedQTensorV2,
+    qgemm, qgemm2, qgemm2_into, qgemm2_into_on, qgemm2_qt, qgemm2_scalar_on, qgemm2_threads,
+    qgemm_qt, PackedQTensor, PackedQTensorV2,
 };
 
 /// Decide how many band workers a row-parallel kernel should use: one

@@ -31,12 +31,25 @@
 //!   order) is fixed by the caller exactly as the scoped-thread
 //!   `for_each_row_band` fixed it, so a pooled run stays bitwise identical
 //!   to a single-thread run.
+//! * **Sticky band pinning.**  Leasing used to hand bands to *arbitrary*
+//!   idle workers, so the worker that computed rows 8..16 of layer 1 rarely
+//!   saw those rows again in layer 2 — every layer restarted cold on both
+//!   the activation slice and the worker's cache.  In pinned mode (the
+//!   default, see [`Pool::set_pinned`] and `PALLAS_POOL_PIN`) band `b`
+//!   prefers worker `(b - 1) % workers` and falls back to any idle worker
+//!   only when the preferred one is busy; [`PoolStats::pin_hits`] /
+//!   [`PoolStats::pin_misses`] count how often locality held.  Only the
+//!   executing thread changes — banding, and therefore every reduction
+//!   order, is untouched, so pinned and redealt runs are bitwise identical.
 //! * **Sizing.**  The lazily-initialized global pool
 //!   ([`Pool::global`], via `OnceLock`) sizes itself to
 //!   `available_parallelism` capped at [`MAX_POOL_THREADS`].  The
 //!   `PALLAS_POOL_THREADS` environment variable overrides the size (read
 //!   once, at first use); `PALLAS_POOL_THREADS=1` keeps zero workers and
-//!   every kernel degrades to the serial single-thread path.
+//!   every kernel degrades to the serial single-thread path.  A value that
+//!   does not parse as an integer >= 1 is rejected ([`parse_pool_threads`])
+//!   — the server validates at startup ([`validate_env`]) and refuses to
+//!   boot rather than run at a silently-wrong width.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -82,7 +95,11 @@ struct Slot {
 
 /// Monotonic pool counters (see [`Pool::stats`]).  In steady-state serving
 /// `spawns` is flat — threads are created only when the pool is built —
-/// while `wakeups` and `jobs` keep climbing with traffic.
+/// while `wakeups` and `jobs` keep climbing with traffic.  With band
+/// pinning enabled (the default), `pin_hits` vs `pin_misses` shows how
+/// often a band actually landed on its preferred (cache-warm) worker: a
+/// lone dispatching engine should hit nearly always, while concurrent
+/// engines competing for workers show up as misses.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PoolStats {
     /// Worker threads ever spawned (frozen after pool construction).
@@ -91,12 +108,19 @@ pub struct PoolStats {
     pub wakeups: u64,
     /// Band jobs executed in total, inline bands included.
     pub jobs: u64,
+    /// Pinned leases that landed on the band's preferred worker.
+    pub pin_hits: u64,
+    /// Pinned leases that fell back to an arbitrary idle worker (preferred
+    /// one busy).  Both counters stay 0 with pinning disabled.
+    pub pin_misses: u64,
 }
 
 struct Stats {
     spawns: AtomicU64,
     wakeups: AtomicU64,
     jobs: AtomicU64,
+    pin_hits: AtomicU64,
+    pin_misses: AtomicU64,
 }
 
 /// The persistent worker pool.  See the module docs for the design; see
@@ -105,6 +129,10 @@ pub struct Pool {
     slots: Vec<std::sync::Arc<Slot>>,
     /// Indices of currently idle workers (leased/returned by `run_bands`).
     free: Mutex<Vec<usize>>,
+    /// Band-pinning mode: lease band `b` to worker `(b - 1) % workers` when
+    /// that worker is idle, so the same row ranges land on the same worker
+    /// across layers and warm forwards (see [`Pool::set_pinned`]).
+    pinned: std::sync::atomic::AtomicBool,
     stats: Stats,
     handles: Mutex<Vec<JoinHandle<()>>>,
 }
@@ -118,14 +146,43 @@ impl std::fmt::Debug for Pool {
     }
 }
 
-/// Resolve a `PALLAS_POOL_THREADS`-style override: a parseable value >= 1 is
-/// clamped to [`MAX_POOL_THREADS`]; anything else (unset, garbage, `0`)
-/// falls back to `default`.
-pub fn parse_pool_threads(raw: Option<&str>, default: usize) -> usize {
-    match raw.and_then(|s| s.trim().parse::<usize>().ok()) {
-        Some(n) if n >= 1 => n.min(MAX_POOL_THREADS),
-        _ => default.clamp(1, MAX_POOL_THREADS),
+/// Resolve a `PALLAS_POOL_THREADS`-style override: unset falls back to
+/// `default`; a parseable value >= 1 is clamped to [`MAX_POOL_THREADS`];
+/// anything else — garbage, empty, `0` — is an **error**.  A typo'd
+/// override used to fall back silently, which meant a misconfigured
+/// deployment ran at the wrong compute width with no signal; now the server
+/// refuses to start and says why.
+pub fn parse_pool_threads(raw: Option<&str>, default: usize) -> Result<usize, String> {
+    match raw {
+        None => Ok(default.clamp(1, MAX_POOL_THREADS)),
+        Some(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n.min(MAX_POOL_THREADS)),
+            _ => Err(format!(
+                "PALLAS_POOL_THREADS must be an integer >= 1 (total compute width \
+                 including the dispatching thread), got {s:?}"
+            )),
+        },
     }
+}
+
+/// Resolve a `PALLAS_POOL_PIN`-style flag: unset and anything but an
+/// explicit off-value means pinned (the default).
+pub fn parse_pool_pin(raw: Option<&str>) -> bool {
+    !matches!(
+        raw.map(str::trim),
+        Some("0") | Some("off") | Some("false") | Some("no")
+    )
+}
+
+/// Validate the pool environment without building a pool — the server calls
+/// this at startup so a malformed `PALLAS_POOL_THREADS` fails the boot with
+/// a clear error instead of panicking at the first parallel kernel call.
+pub fn validate_env() -> Result<(), String> {
+    parse_pool_threads(
+        std::env::var("PALLAS_POOL_THREADS").ok().as_deref(),
+        default_threads(),
+    )
+    .map(|_| ())
 }
 
 fn default_threads() -> usize {
@@ -146,13 +203,19 @@ impl Pool {
     }
 
     /// Build a pool sized from the environment (the global pool's recipe,
-    /// constructible privately so tests can pin the env override).
+    /// constructible privately so tests can pin the env override).  Panics
+    /// on a malformed `PALLAS_POOL_THREADS` — the server validates the
+    /// environment first ([`validate_env`]) so it can fail startup
+    /// gracefully instead.
     pub fn from_env() -> Pool {
         let threads = parse_pool_threads(
             std::env::var("PALLAS_POOL_THREADS").ok().as_deref(),
             default_threads(),
-        );
-        Pool::new(threads)
+        )
+        .unwrap_or_else(|e| panic!("{e}"));
+        let pool = Pool::new(threads);
+        pool.set_pinned(parse_pool_pin(std::env::var("PALLAS_POOL_PIN").ok().as_deref()));
+        pool
     }
 
     /// Build a pool of total width `threads` (the caller counts as one, so
@@ -163,10 +226,13 @@ impl Pool {
         let pool = Pool {
             slots: (0..nworkers).map(|_| std::sync::Arc::new(Slot::default())).collect(),
             free: Mutex::new((0..nworkers).collect()),
+            pinned: std::sync::atomic::AtomicBool::new(true),
             stats: Stats {
                 spawns: AtomicU64::new(0),
                 wakeups: AtomicU64::new(0),
                 jobs: AtomicU64::new(0),
+                pin_hits: AtomicU64::new(0),
+                pin_misses: AtomicU64::new(0),
             },
             handles: Mutex::new(Vec::with_capacity(nworkers)),
         };
@@ -194,12 +260,31 @@ impl Pool {
         self.slots.len()
     }
 
+    /// Enable or disable sticky band pinning (default: enabled; the global
+    /// pool additionally honors `PALLAS_POOL_PIN=0`).  With pinning on,
+    /// [`Pool::run_bands`] leases band `b` to worker `(b - 1) % workers`
+    /// whenever that worker is idle, so a forward pass that dispatches the
+    /// same band layout layer after layer keeps each row range on the same
+    /// worker — and its slice of activations in that worker's cache.  The
+    /// band *partitioning* never changes, only which thread executes a
+    /// band, so pinned and redealt runs are bitwise identical.
+    pub fn set_pinned(&self, on: bool) {
+        self.pinned.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether sticky band pinning is enabled.
+    pub fn is_pinned(&self) -> bool {
+        self.pinned.load(Ordering::Relaxed)
+    }
+
     /// Snapshot of the pool counters.
     pub fn stats(&self) -> PoolStats {
         PoolStats {
             spawns: self.stats.spawns.load(Ordering::Relaxed),
             wakeups: self.stats.wakeups.load(Ordering::Relaxed),
             jobs: self.stats.jobs.load(Ordering::Relaxed),
+            pin_hits: self.stats.pin_hits.load(Ordering::Relaxed),
+            pin_misses: self.stats.pin_misses.load(Ordering::Relaxed),
         }
     }
 
@@ -227,12 +312,35 @@ impl Pool {
         }
         // lease whatever is idle, never more than the spare bands; leasing
         // is non-blocking, which is what makes concurrent callers (and
-        // re-entrant band functions) deadlock-free
+        // re-entrant band functions) deadlock-free.  `leased[i]` runs band
+        // `i + 1`: in pinned mode band `b` prefers worker `(b - 1) %
+        // workers` — a stable mapping, so repeated dispatches of the same
+        // band layout reuse each worker's cache-warm rows — and falls back
+        // to any idle worker (a pin miss) when the preferred one is busy.
         let leased: Vec<usize> = {
             let mut free = self.free.lock().unwrap();
             let take = free.len().min(nbands - 1);
-            let at = free.len() - take;
-            free.split_off(at)
+            if take > 0 && self.pinned.load(Ordering::Relaxed) {
+                let mut leased = vec![usize::MAX; take];
+                let mut hits = 0u64;
+                for (i, w) in leased.iter_mut().enumerate() {
+                    let pref = i % self.slots.len();
+                    if let Some(pos) = free.iter().position(|&f| f == pref) {
+                        free.swap_remove(pos);
+                        *w = pref;
+                        hits += 1;
+                    }
+                }
+                for w in leased.iter_mut().filter(|w| **w == usize::MAX) {
+                    *w = free.pop().expect("take <= free.len() idle workers");
+                }
+                self.stats.pin_hits.fetch_add(hits, Ordering::Relaxed);
+                self.stats.pin_misses.fetch_add(take as u64 - hits, Ordering::Relaxed);
+                leased
+            } else {
+                let at = free.len() - take;
+                free.split_off(at)
+            }
         };
         // SAFETY (lifetime erasure): the erased reference is dereferenced
         // only by leased workers, and the epoch barrier below does not let
@@ -404,12 +512,83 @@ mod tests {
 
     #[test]
     fn parse_pool_threads_override() {
-        assert_eq!(parse_pool_threads(Some("1"), 8), 1);
-        assert_eq!(parse_pool_threads(Some(" 4 "), 8), 4);
-        assert_eq!(parse_pool_threads(Some("999"), 8), MAX_POOL_THREADS);
-        assert_eq!(parse_pool_threads(Some("0"), 8), 8, "0 falls back to default");
-        assert_eq!(parse_pool_threads(Some("nope"), 8), 8);
-        assert_eq!(parse_pool_threads(None, 8), 8);
-        assert_eq!(parse_pool_threads(None, 0), 1, "default itself is clamped");
+        assert_eq!(parse_pool_threads(Some("1"), 8), Ok(1));
+        assert_eq!(parse_pool_threads(Some(" 4 "), 8), Ok(4));
+        assert_eq!(parse_pool_threads(Some("999"), 8), Ok(MAX_POOL_THREADS));
+        assert_eq!(parse_pool_threads(None, 8), Ok(8));
+        assert_eq!(parse_pool_threads(None, 0), Ok(1), "default itself is clamped");
+    }
+
+    #[test]
+    fn parse_pool_threads_rejects_garbage_loudly() {
+        for bad in ["nope", "0", "", "  ", "-3", "1.5", "1e2"] {
+            let got = parse_pool_threads(Some(bad), 8);
+            let err = got.expect_err(&format!("{bad:?} must be rejected, not defaulted"));
+            assert!(
+                err.contains("PALLAS_POOL_THREADS") && err.contains(bad.trim()),
+                "error must name the variable and echo the value: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_pool_pin_flag() {
+        assert!(parse_pool_pin(None), "pinning defaults on");
+        assert!(parse_pool_pin(Some("1")));
+        for off in ["0", "off", "false", "no", " 0 "] {
+            assert!(!parse_pool_pin(Some(off)), "{off:?} must disable pinning");
+        }
+    }
+
+    #[test]
+    fn pinned_leasing_is_sticky_when_workers_are_free() {
+        let pool = Pool::new(4);
+        assert!(pool.is_pinned(), "pinning is the default mode");
+        for _ in 0..20 {
+            pool.run_bands(4, &|_| {});
+        }
+        let s = pool.stats();
+        // a lone caller with all workers idle lands every band on its
+        // preferred worker: 3 leased bands per call, all hits
+        assert_eq!(s.pin_hits, 60, "every lease must hit its preferred worker");
+        assert_eq!(s.pin_misses, 0);
+    }
+
+    #[test]
+    fn redealt_mode_counts_no_pin_stats_and_stays_bitwise() {
+        let pool = Pool::new(3);
+        pool.set_pinned(false);
+        assert!(!pool.is_pinned());
+        // band b writes its own disjoint cells; values must not depend on
+        // which worker ran the band
+        let out = std::sync::Mutex::new(vec![0.0f32; 6]);
+        pool.run_bands(3, &|b| {
+            let mut o = out.lock().unwrap();
+            o[b * 2] = b as f32;
+            o[b * 2 + 1] = (b * 10) as f32;
+        });
+        assert_eq!(*out.lock().unwrap(), [0.0, 0.0, 1.0, 10.0, 2.0, 20.0]);
+        let s = pool.stats();
+        assert_eq!((s.pin_hits, s.pin_misses), (0, 0), "redealt mode never counts pins");
+    }
+
+    #[test]
+    fn pinned_and_redealt_runs_are_bitwise_identical() {
+        // same band partition, only executor placement differs
+        let run = |pinned: bool| {
+            let pool = Pool::new(4);
+            pool.set_pinned(pinned);
+            let out = std::sync::Mutex::new(vec![0.0f32; 8]);
+            for pass in 0..5u32 {
+                pool.run_bands(4, &|b| {
+                    let mut o = out.lock().unwrap();
+                    o[b * 2] += (b as f32 + 0.1).sin() * pass as f32;
+                    o[b * 2 + 1] += (b as f32).cos();
+                });
+            }
+            let v = out.lock().unwrap().clone();
+            v
+        };
+        assert_eq!(run(true), run(false));
     }
 }

@@ -251,6 +251,33 @@ pub fn qconv_into(
     )
 }
 
+/// [`qconv_into`] with plane sums on the retained scalar oracle — identical
+/// banding and chunking, single-accumulator reduction order.  The
+/// scalar-reference forward path, not a serving path.
+pub fn qconv_scalar_into(
+    pool: &Pool,
+    xd: &[f32],
+    dims: (usize, usize, usize, usize),
+    p: &PackedQTensorV2,
+    same: bool,
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+) -> Result<(usize, usize, usize)> {
+    packed_conv_into(
+        pool,
+        xd,
+        dims,
+        "qconv",
+        &p.shape,
+        p.k,
+        (p.ops_per_row(), QGEMM_PAR_THRESHOLD),
+        same,
+        scratch,
+        out,
+        &|o: &mut [f32], slab: &[f32]| super::qgemm::qgemm2_band_scalar(o, slab, p),
+    )
+}
+
 /// Fused CSD-domain conv: `x [B,H,W,C]` (flat slice) ⊛ truncated-CSD packed
 /// `[kh,kw,C,OC]` → `out [B*H'*W'*OC]` (grown in place, never reallocated
 /// once warm) — the same band/chunk arena driver as [`qconv_into`] with the
@@ -277,6 +304,32 @@ pub fn csd_conv_into(
         scratch,
         out,
         &|o: &mut [f32], slab: &[f32]| csd_band(o, slab, p),
+    )
+}
+
+/// [`csd_conv_into`] with digit-plane sums on the retained scalar oracle —
+/// identical banding and chunking, single-accumulator reduction order.
+pub fn csd_conv_scalar_into(
+    pool: &Pool,
+    xd: &[f32],
+    dims: (usize, usize, usize, usize),
+    p: &PackedCsdTensor,
+    same: bool,
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+) -> Result<(usize, usize, usize)> {
+    packed_conv_into(
+        pool,
+        xd,
+        dims,
+        "csd_conv",
+        &p.shape,
+        p.k,
+        (p.ops_per_row(), CSD_PAR_THRESHOLD),
+        same,
+        scratch,
+        out,
+        &|o: &mut [f32], slab: &[f32]| super::csd::csd_band_scalar(o, slab, p),
     )
 }
 

@@ -13,8 +13,10 @@
 //!   surviving codes of each cell are split into six *offset planes*, one
 //!   per nonzero level (+1, +2, +4, −1, −2, −4).  The inner loop is then a
 //!   straight sum of activations over each contiguous plane — no LUT build,
-//!   no per-entry code select, 2 bytes per entry instead of 4 — and the six
-//!   plane sums are combined with adds only
+//!   no per-entry code select, 2 bytes per entry instead of 4 — run on the
+//!   lane-ized gather reduction ([`super::lanes::gather_sum`]; the scalar
+//!   order survives as [`qgemm2_scalar_on`], the differential oracle) — and
+//!   the six plane sums are combined with adds only
 //!   (`acc = (s₁−m₁) + 2(s₂−m₂) + 4(s₄−m₄)`, doublings as self-adds).  Rows
 //!   are split across the persistent worker pool with the same band scheme
 //!   as [`super::blocked`], so a pooled run is bitwise identical to the
@@ -243,17 +245,6 @@ impl PackedQTensorV2 {
     }
 }
 
-/// Sum the activations a plane's offsets select — the v2 inner loop: a
-/// straight pass over a contiguous `u16` stream, no code select, no LUT.
-#[inline]
-fn plane_sum(offsets: &[u16], xg: &[f32]) -> f32 {
-    let mut s = 0.0f32;
-    for &off in offsets {
-        s += xg[off as usize];
-    }
-    s
-}
-
 /// One row band of the v2 kernel: `out` is `rows x OC` (pre-zeroed, rows
 /// inferred), `xb` the matching rows of the activation matrix.  Accumulates
 /// into `out`.
@@ -263,7 +254,16 @@ fn plane_sum(offsets: &[u16], xg: &[f32]) -> f32 {
 /// the activation gathers vary in the inner loop.  Per output element the
 /// group partials still accumulate in ascending group order with the same
 /// combine expression, so reordering rows/columns cannot change any value.
-pub(crate) fn qgemm2_band(out: &mut [f32], xb: &[f32], p: &PackedQTensorV2) {
+/// The per-plane reduction is whatever `plane_sum` implements — the lane
+/// form for serving, the scalar oracle for the differential reference path —
+/// and is a pure function of the plane, so banding still cannot reorder it.
+#[inline(always)]
+fn qgemm2_band_with<S: Fn(&[u16], &[f32]) -> f32>(
+    out: &mut [f32],
+    xb: &[f32],
+    p: &PackedQTensorV2,
+    plane_sum: S,
+) {
     let (k, oc) = (p.k, p.oc);
     if oc == 0 {
         return;
@@ -301,6 +301,19 @@ pub(crate) fn qgemm2_band(out: &mut [f32], xb: &[f32], p: &PackedQTensorV2) {
     }
 }
 
+/// The serving band: plane sums on the [`super::lanes::gather_sum`] lane
+/// reduction (fixed-width chunks, one accumulator per lane).
+pub(crate) fn qgemm2_band(out: &mut [f32], xb: &[f32], p: &PackedQTensorV2) {
+    qgemm2_band_with(out, xb, p, super::lanes::gather_sum)
+}
+
+/// The retained scalar-oracle band: plane sums in single-accumulator order
+/// ([`super::lanes::gather_sum_scalar`]).  The differential harness and the
+/// scalar-reference engine forwards run on this.
+pub(crate) fn qgemm2_band_scalar(out: &mut [f32], xb: &[f32], p: &PackedQTensorV2) {
+    qgemm2_band_with(out, xb, p, super::lanes::gather_sum_scalar)
+}
+
 /// `out[M,OC] = x[M,K] @ packed` on the plane-packed layout (caller provides
 /// a zeroed `out` of exactly `m * OC`), row bands on the global worker pool.
 pub fn qgemm2_into(out: &mut [f32], xd: &[f32], m: usize, p: &PackedQTensorV2) {
@@ -321,6 +334,26 @@ pub fn qgemm2_into_on(
     let total = m.saturating_mul(p.ops_per_row());
     let nthreads = super::threads_for_rows(m, total, QGEMM_PAR_THRESHOLD).min(pool.width());
     let band = |_: usize, ob: &mut [f32], xb: &[f32]| qgemm2_band(ob, xb, p);
+    super::for_each_row_band_on(pool, out, xd, m, p.k, p.oc, nthreads, band);
+}
+
+/// [`qgemm2_into_on`] with every plane sum on the retained scalar oracle —
+/// identical banding, single-accumulator reduction order.  This is the
+/// baseline the lane kernel is differentially compared against (and what
+/// the engines' scalar-reference forwards run on); it is not a serving
+/// path.
+pub fn qgemm2_scalar_on(
+    pool: &super::Pool,
+    out: &mut [f32],
+    xd: &[f32],
+    m: usize,
+    p: &PackedQTensorV2,
+) {
+    debug_assert_eq!(out.len(), m * p.oc);
+    debug_assert_eq!(xd.len(), m * p.k);
+    let total = m.saturating_mul(p.ops_per_row());
+    let nthreads = super::threads_for_rows(m, total, QGEMM_PAR_THRESHOLD).min(pool.width());
+    let band = |_: usize, ob: &mut [f32], xb: &[f32]| qgemm2_band_scalar(ob, xb, p);
     super::for_each_row_band_on(pool, out, xd, m, p.k, p.oc, nthreads, band);
 }
 
@@ -466,6 +499,35 @@ mod tests {
                 let par = qgemm2_threads(&x, &p, nt).unwrap();
                 assert_eq!(par.data(), st.data(), "m={m} nt={nt} diverged");
             }
+        }
+    }
+
+    #[test]
+    fn lane_band_matches_scalar_oracle_band() {
+        let mut r = Rng::new(77);
+        let w: Vec<f32> = (0..96 * 12).map(|_| (r.normal() * 0.3) as f32).collect();
+        let qt = quantize(&w, &[96, 12], 24, 4, AssignMode::SigmaSearch).unwrap();
+        let p = PackedQTensorV2::pack(&qt).unwrap();
+        let pool = crate::kernels::Pool::new(1);
+        for m in [1usize, 4, 9] {
+            // gaussian data: lane reassociation may round differently, but
+            // stays within normal f32 noise of the scalar order
+            let xg: Vec<f32> = (0..m * 96).map(|_| r.normal() as f32).collect();
+            let mut lane = vec![0.0f32; m * 12];
+            qgemm2_into_on(&pool, &mut lane, &xg, m, &p);
+            let mut scalar = vec![0.0f32; m * 12];
+            qgemm2_scalar_on(&pool, &mut scalar, &xg, m, &p);
+            for (a, b) in lane.iter().zip(&scalar) {
+                assert!((a - b).abs() < 1e-4, "m={m}: lane {a} vs scalar {b}");
+            }
+            // integer activations: every plane sum is exact in both orders,
+            // so lane and scalar must be bitwise equal
+            let xi: Vec<f32> = (0..m * 96).map(|_| r.range_i64(-8, 8) as f32).collect();
+            let mut lane_i = vec![0.0f32; m * 12];
+            qgemm2_into_on(&pool, &mut lane_i, &xi, m, &p);
+            let mut scalar_i = vec![0.0f32; m * 12];
+            qgemm2_scalar_on(&pool, &mut scalar_i, &xi, m, &p);
+            assert_eq!(lane_i, scalar_i, "m={m}: integer data must be exact in both orders");
         }
     }
 

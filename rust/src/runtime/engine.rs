@@ -127,6 +127,8 @@ impl EngineReport {
             set(&format!("{p}.pool.spawns"), ps.spawns as f64);
             set(&format!("{p}.pool.wakeups"), ps.wakeups as f64);
             set(&format!("{p}.pool.jobs"), ps.jobs as f64);
+            set(&format!("{p}.pool.pin_hits"), ps.pin_hits as f64);
+            set(&format!("{p}.pool.pin_misses"), ps.pin_misses as f64);
         }
     }
 }
@@ -694,7 +696,7 @@ mod tests {
         rep.forwards = 3;
         rep.mean_pp = 2.5;
         rep.ledger.partial_products = 120;
-        rep.pool = Some(PoolStats { spawns: 4, wakeups: 9, jobs: 12 });
+        rep.pool = Some(PoolStats { spawns: 4, wakeups: 9, jobs: 12, pin_hits: 7, pin_misses: 2 });
         let mut keys = Vec::new();
         rep.export(|k, v| keys.push((k.to_string(), v)));
         let get = |name: &str| {
@@ -704,6 +706,8 @@ mod tests {
         assert_eq!(get("engine.host-csd.mean_pp"), Some(2.5));
         assert_eq!(get("engine.host-csd.energy.partial_products"), Some(120.0));
         assert_eq!(get("engine.host-csd.pool.spawns"), Some(4.0));
+        assert_eq!(get("engine.host-csd.pool.pin_hits"), Some(7.0));
+        assert_eq!(get("engine.host-csd.pool.pin_misses"), Some(2.0));
         // every engine exports the same core family, populated or not
         let mut f32_keys = Vec::new();
         EngineReport::new(EngineKind::F32).export(|k, _| f32_keys.push(k.to_string()));

@@ -56,7 +56,14 @@ pub fn forward(store: &WeightStore, x: &Tensor) -> Result<Tensor> {
 /// serving form: a worker holds one arena and stops allocating per request
 /// once it is warm.  Band jobs run on the global persistent pool.
 pub fn forward_with(store: &WeightStore, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
-    let fwd = FusedFwd { store, packed: None, csd: None, energy: None, pool: Pool::global() };
+    let fwd = FusedFwd {
+        store,
+        packed: None,
+        csd: None,
+        energy: None,
+        pool: Pool::global(),
+        scalar: false,
+    };
     fwd.run(x, scratch)
 }
 
@@ -170,6 +177,7 @@ impl F32Engine {
             csd: None,
             energy: Some(&self.ledger),
             pool: self.pool,
+            scalar: false,
         }
         .run(x, scratch);
         if out.is_ok() {
@@ -210,6 +218,12 @@ struct FusedFwd<'a> {
     csd: Option<&'a BTreeMap<String, PackedCsdTensor>>,
     energy: Option<&'a Mutex<Ledger>>,
     pool: &'static Pool,
+    /// Run every plane sum on the retained scalar oracle instead of the
+    /// lane reduction — the differential-reference forward
+    /// ([`QuantizedEngine::forward_scalar_reference`] /
+    /// [`CsdEngine::forward_scalar_reference`]), never the serving path.
+    /// Banding, chunking, and the f32 microkernel are identical either way.
+    scalar: bool,
 }
 
 impl FusedFwd<'_> {
@@ -261,12 +275,20 @@ impl FusedFwd<'_> {
         out: &mut Vec<f32>,
     ) -> Result<(usize, usize, usize)> {
         if let Some(p) = self.csd_for(name) {
-            let (oh, ow, oc) = kernels::csd_conv_into(self.pool, xb, dims, p, same, scratch, out)?;
+            let (oh, ow, oc) = if self.scalar {
+                kernels::csd_conv_scalar_into(self.pool, xb, dims, p, same, scratch, out)?
+            } else {
+                kernels::csd_conv_into(self.pool, xb, dims, p, same, scratch, out)?
+            };
             self.note_csd_energy(p, dims.0 * oh * ow);
             return Ok((oh, ow, oc));
         }
         if let Some(p) = self.packed_for(name) {
-            return kernels::qconv_into(self.pool, xb, dims, p, same, scratch, out);
+            return if self.scalar {
+                kernels::qconv_scalar_into(self.pool, xb, dims, p, same, scratch, out)
+            } else {
+                kernels::qconv_into(self.pool, xb, dims, p, same, scratch, out)
+            };
         }
         let wt = self.store.get(name)?;
         let ws = wt.shape();
@@ -305,7 +327,11 @@ impl FusedFwd<'_> {
             scratch.last.grow(0, 0, m * p.oc);
             let o = &mut out[..m * p.oc];
             o.fill(0.0);
-            kernels::csd_gemm_into_on(self.pool, o, xb, m, p);
+            if self.scalar {
+                kernels::csd_gemm_scalar_on(self.pool, o, xb, m, p);
+            } else {
+                kernels::csd_gemm_into_on(self.pool, o, xb, m, p);
+            }
             self.note_csd_energy(p, m);
             return Ok(p.oc);
         }
@@ -317,7 +343,11 @@ impl FusedFwd<'_> {
             scratch.last.grow(0, 0, m * p.oc);
             let o = &mut out[..m * p.oc];
             o.fill(0.0);
-            kernels::qgemm2_into_on(self.pool, o, xb, m, p);
+            if self.scalar {
+                kernels::qgemm2_scalar_on(self.pool, o, xb, m, p);
+            } else {
+                kernels::qgemm2_into_on(self.pool, o, xb, m, p);
+            }
             return Ok(p.oc);
         }
         let wt = self.store.get(name)?;
@@ -550,12 +580,31 @@ impl QuantizedEngine {
             csd: None,
             energy: Some(&self.ledger),
             pool: self.pool,
+            scalar: false,
         }
         .run(x, scratch);
         if out.is_ok() {
             self.forwards.fetch_add(1, Ordering::Relaxed);
         }
         out
+    }
+
+    /// Forward one batch through the scalar plane-sum oracles — same packed
+    /// planes, same banding, but every plane sum runs the single-accumulator
+    /// reference loop instead of the lane-ized kernels.  A reference path:
+    /// it neither counts toward [`QuantizedEngine::forwards`] nor touches the
+    /// energy ledger, so differential harnesses can interleave it with
+    /// serving traffic without perturbing the gauges.
+    pub fn forward_scalar_reference(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        FusedFwd {
+            store: &self.store,
+            packed: Some(&self.packed),
+            csd: None,
+            energy: None,
+            pool: self.pool,
+            scalar: true,
+        }
+        .run(x, scratch)
     }
 }
 
@@ -673,12 +722,29 @@ impl CsdEngine {
             csd: Some(&self.packed),
             energy: Some(&self.ledger),
             pool: self.pool,
+            scalar: false,
         }
         .run(x, scratch);
         if out.is_ok() {
             self.forwards.fetch_add(1, Ordering::Relaxed);
         }
         out
+    }
+
+    /// Forward one batch through the scalar plane-sum oracles — same digit
+    /// planes and banding, single-accumulator plane sums.  Does not count a
+    /// forward or touch the energy ledger (see
+    /// [`QuantizedEngine::forward_scalar_reference`]).
+    pub fn forward_scalar_reference(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        FusedFwd {
+            store: &self.store,
+            packed: None,
+            csd: Some(&self.packed),
+            energy: None,
+            pool: self.pool,
+            scalar: true,
+        }
+        .run(x, scratch)
     }
 }
 

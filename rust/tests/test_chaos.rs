@@ -25,12 +25,14 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use qsq_edge::channel::{LinkConfig, TransferError};
-use qsq_edge::coordinator::server::{Client, Roster, Server, ServerConfig};
+use qsq_edge::coordinator::server::{Client, Roster, Server, ServerConfig, AUTO_CSD_DIGITS};
 use qsq_edge::coordinator::swap::{self, SwapConfig, SwapError, SwapStage};
 use qsq_edge::data::{synth_store, RequestGen};
-use qsq_edge::kernels::Scratch;
+use qsq_edge::device::CsdQuality;
+use qsq_edge::kernels::{Pool, Scratch};
 use qsq_edge::model::meta::ModelKind;
 use qsq_edge::runtime::engine::PolicySelect;
+use qsq_edge::runtime::host::CsdEngine;
 use qsq_edge::tensor::{ops, Tensor};
 use qsq_edge::util::faults::{self, FaultPlan};
 use qsq_edge::util::json::Value;
@@ -741,4 +743,100 @@ fn quarantine_storm_during_probation_rolls_back() {
     );
     srv.stop();
     faults::disarm();
+}
+
+/// Lane-ized serving as a pure function of the request stream: the same
+/// fixed-seed traffic with a hot swap mid-stream yields an identical
+/// (generation, prediction, outcome) sequence across repeated runs and
+/// across both band-leasing modes (sticky-pinned and re-dealt) — pinning
+/// only moves bands between workers — and every prediction matches the
+/// *scalar* plane-sum reference forward of the generation that served it.
+/// Batch 16 under the energy policy routes every singleton to the CSD
+/// engine, so the whole stream exercises the lane-ized digit-plane sums;
+/// CI re-runs this binary under `PALLAS_POOL_THREADS=1`, and every
+/// assertion below must hold unchanged there.
+#[test]
+fn lane_swap_stream_is_pin_invariant_and_matches_scalar_reference() {
+    let _g = guard();
+    const STORE_A: u64 = 71;
+    const STORE_B: u64 = 72;
+    const SWAP_AT: u64 = 12;
+    const TOTAL: u64 = 24;
+
+    let run = |pinned: bool| {
+        Pool::global().set_pinned(pinned);
+        arm("seed=29;link.burst=0.001:0.05:0.01");
+        let cfg = ServerConfig {
+            policy: PolicySelect::EnergyBudget,
+            batch: 16,
+            max_delay: Duration::from_millis(1),
+            probation_batches: 2,
+            ..Default::default()
+        };
+        let srv = Server::start_with_store(synth_store(STORE_A, ModelKind::Lenet), cfg).unwrap();
+        let mut c = Client::connect(&format!("127.0.0.1:{}", srv.port)).unwrap();
+        let mut gen = RequestGen::new(ModelKind::Lenet, 880);
+        let scfg = SwapConfig {
+            link: LinkConfig { max_retries: 64, ..Default::default() },
+            seed: 35,
+            ..Default::default()
+        };
+        let mut stream = Vec::new();
+        for i in 0..TOTAL {
+            if i == SWAP_AT {
+                let rep = srv
+                    .deploy_store(&synth_store(STORE_B, ModelKind::Lenet), &scfg)
+                    .unwrap();
+                assert_eq!(rep.generation, 2);
+            }
+            let (img, _) = gen.next();
+            let r = c.infer(i, img.data()).unwrap();
+            stream.push((gen_of(&r), r.get("pred").as_f64().map(|p| p as u64), kind_of(&r)));
+        }
+        assert!(
+            srv.metrics.counter("dispatch_host_csd") >= TOTAL,
+            "energy policy must route the singleton stream to the CSD engine"
+        );
+        faults::disarm();
+        srv.stop();
+        stream
+    };
+
+    let first = run(true);
+    let again = run(true);
+    assert_eq!(first, again, "fixed seed must reproduce the exact stream");
+    let redealt = run(false);
+    Pool::global().set_pinned(true); // restore the default leasing mode
+    assert_eq!(first, redealt, "re-dealt leasing must not change any outcome");
+
+    // every reply succeeded and the generation flips exactly at the swap
+    for (i, (g, p, k)) in first.iter().enumerate() {
+        assert_eq!(*k, "pred", "request {i}: {first:?}");
+        assert!(p.is_some(), "request {i}");
+        let want_gen = if (i as u64) < SWAP_AT { 1 } else { 2 };
+        assert_eq!(*g, Some(want_gen), "request {i} generation");
+    }
+
+    // scalar ground truth: per generation, a CSD engine at the roster's
+    // digit budget forwarded through the retained scalar plane-sum oracles
+    // — a lane-ization bug that moves any logit across an argmax boundary
+    // diverges here
+    let quality = CsdQuality::new(AUTO_CSD_DIGITS);
+    let engines = [
+        CsdEngine::from_store(&synth_store(STORE_A, ModelKind::Lenet), quality).unwrap(),
+        CsdEngine::from_store(&synth_store(STORE_B, ModelKind::Lenet), quality).unwrap(),
+    ];
+    let mut scratch = Scratch::new();
+    let mut gen = RequestGen::new(ModelKind::Lenet, 880);
+    for (i, (_, p, _)) in first.iter().enumerate() {
+        let (img, _) = gen.next();
+        let x = Tensor::new(vec![1, 28, 28, 1], img.data().to_vec()).unwrap();
+        let e = &engines[usize::from(i as u64 >= SWAP_AT)];
+        let logits = e.forward_scalar_reference(&x, &mut scratch).unwrap();
+        assert_eq!(
+            p.unwrap(),
+            ops::argmax_rows(&logits)[0] as u64,
+            "request {i} diverged from the scalar plane-sum baseline"
+        );
+    }
 }

@@ -24,8 +24,13 @@
 //!     synthetic store through one parameterized harness — bitwise against
 //!     the naive per-op oracle where the path is exact (f32), within
 //!     tolerance over its own decode elsewhere — with the warm-forward
-//!     scratch alloc-freeze and the uniform `EngineReport` schema asserted
-//!     through the trait, not per-engine APIs.
+//!     scratch alloc-freeze, bitwise equality across sticky-pinned and
+//!     re-dealt band leasing, and the uniform `EngineReport` schema
+//!     asserted through the trait, not per-engine APIs;
+//! (i) scalar-reference parity: the lane-ized serving forwards agree with
+//!     the retained scalar plane-sum oracles (`forward_scalar_reference`)
+//!     at ULP scale with identical predictions, and the reference path
+//!     counts no forwards and charges no energy.
 
 use qsq_edge::data::synth_store;
 use qsq_edge::device::{CsdQuality, QualityConfig};
@@ -259,12 +264,21 @@ fn pooled_bands_bitwise_equal_serial_at_band_boundaries() {
         let mut serial = vec![0.0f32; m * n];
         blocked::gemm_band(&mut serial, &xd, &wd, k, n);
         for width in [2usize, 3, 5] {
-            let pool = Pool::new(width);
-            let mut pooled = vec![0.0f32; m * n];
-            for_each_row_band_on(&pool, &mut pooled, &xd, m, k, n, width, |_, ob, xb| {
-                blocked::gemm_band(ob, xb, &wd, k, n);
-            });
-            assert_eq!(pooled, serial, "m={m} width={width} diverged from serial");
+            // pinning only changes which worker a band lands on, never the
+            // banding itself, so both leasing modes must stay bitwise equal
+            // to the serial run
+            for pinned in [true, false] {
+                let pool = Pool::new(width);
+                pool.set_pinned(pinned);
+                let mut pooled = vec![0.0f32; m * n];
+                for_each_row_band_on(&pool, &mut pooled, &xd, m, k, n, width, |_, ob, xb| {
+                    blocked::gemm_band(ob, xb, &wd, k, n);
+                });
+                assert_eq!(
+                    pooled, serial,
+                    "m={m} width={width} pinned={pinned} diverged from serial"
+                );
+            }
         }
     }
 }
@@ -470,12 +484,22 @@ fn engine_conformance_every_impl_on_the_same_store() {
             scratch.stats
         );
 
+        // sticky band pinning is placement-only: the same engine on the
+        // same pool must stay bitwise identical with pinning on and off
+        // (re-dealt leasing); the default (pinned) mode is restored after
+        for pinned in [false, true] {
+            Pool::global().set_pinned(pinned);
+            let again = engine.forward_with(&x, &mut scratch).unwrap();
+            assert_eq!(again.data(), got.data(), "{name}: pinned={pinned} changed the result");
+        }
+        assert!(Pool::global().is_pinned(), "{name}: default pin mode must be restored");
+
         // uniform report schema: forwards counted, energy charged, pool
         // visible — the same fields for every engine
         let rep = engine.report();
         assert_eq!(rep.kind, engine.kind(), "{name}");
         assert_eq!(rep.name, name);
-        assert_eq!(rep.forwards, 4, "{name}: 1 cold + 3 warm forwards");
+        assert_eq!(rep.forwards, 6, "{name}: 1 cold + 3 warm + 2 pin-mode forwards");
         assert!(rep.ledger.total_pj() > 0.0, "{name}: every engine charges energy");
         assert!(rep.pool.is_some(), "{name}: host engines report their pool");
         match rep.kind {
@@ -490,6 +514,47 @@ fn engine_conformance_every_impl_on_the_same_store() {
         }
     }
     assert_eq!(seen, [EngineKind::F32, EngineKind::Quantized, EngineKind::Csd]);
+}
+
+// --- (i) lane-vs-scalar reference parity -------------------------------------
+
+#[test]
+fn lane_forwards_match_scalar_reference_and_reference_is_free() {
+    use qsq_edge::runtime::host::CsdEngine;
+
+    // the serving forwards run the lane-ized plane sums; the reference
+    // forwards run the retained single-accumulator scalar oracles through
+    // the identical banding and dispatch.  Lanes only reassociate the f32
+    // gather within one plane, so parity is ULP-scale on gaussian inputs
+    // and predictions must be identical — and the reference path must not
+    // count forwards or charge the energy ledger.
+    let store = synth_store(63, ModelKind::Lenet);
+    let quality = QualityConfig { phi: 4, group: 16 };
+    let q = QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+    let c = CsdEngine::from_store(&store, CsdQuality::new(3)).unwrap();
+    let mut r = Rng::new(64);
+    let x = Tensor::new(vec![4, 28, 28, 1], gen_weights(&mut r, 4 * 28 * 28, 1.0)).unwrap();
+    let mut scratch = Scratch::new();
+
+    let q_lane = q.forward_with(&x, &mut scratch).unwrap();
+    let q_ref = q.forward_scalar_reference(&x, &mut scratch).unwrap();
+    let qd = q_lane.max_abs_diff(&q_ref) as f64;
+    assert!(qd < 1e-3, "qgemm2 lane vs scalar reference drifted by {qd}");
+    assert_eq!(ops::argmax_rows(&q_lane), ops::argmax_rows(&q_ref), "qgemm2 predictions");
+    assert_eq!(q.forwards(), 1, "scalar reference must not count a forward");
+
+    let c_lane = c.forward_with(&x, &mut scratch).unwrap();
+    let spent = c.ledger().partial_products;
+    let c_ref = c.forward_scalar_reference(&x, &mut scratch).unwrap();
+    let cd = c_lane.max_abs_diff(&c_ref) as f64;
+    assert!(cd < 1e-3, "csd lane vs scalar reference drifted by {cd}");
+    assert_eq!(ops::argmax_rows(&c_lane), ops::argmax_rows(&c_ref), "csd predictions");
+    assert_eq!(c.forwards(), 1, "scalar reference must not count a forward");
+    assert_eq!(
+        c.ledger().partial_products,
+        spent,
+        "scalar reference must not charge the energy ledger"
+    );
 }
 
 #[test]

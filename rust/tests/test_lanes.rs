@@ -1,0 +1,246 @@
+//! Differential kernel-equivalence harness for the lane-ized plane sums
+//! (`kernels::lanes`) — the gate for every SWAR/chunked fast path:
+//!
+//! (a) `gather_sum` vs the retained scalar oracle at every chunk/tail
+//!     boundary length — bitwise where the scalar order is preserved
+//!     (planes shorter than one chunk; integer-valued activations, where
+//!     every addition is exact), ULP-bounded against an f64 reference on
+//!     gaussian activations (lane folding reassociates, it must not lose
+//!     accuracy);
+//! (b) `sum_i8` / `sum_i16` bitwise vs their scalar oracles at the same
+//!     boundary lengths, plus *overflow-adversarial* all-extremal inputs
+//!     longer than one widening interval — a missed i16→i32-scale widen
+//!     (or a sum past `i32::MAX`) fails loudly here instead of wrapping
+//!     silently in a kernel;
+//! (c) kernel-level differential: the lane-ized `qgemm2` / `csd_gemm`
+//!     entry points vs their `*_scalar_on` twins on the same packed
+//!     tensors, under a serial and a wide pool — bitwise on integer
+//!     activations, tolerance + identical argmax on gaussian.
+
+use qsq_edge::device::CsdQuality;
+use qsq_edge::kernels::lanes::{
+    gather_sum, gather_sum_scalar, sum_i16, sum_i16_scalar, sum_i8, sum_i8_scalar, F32_LANES,
+    I16_LANES, I16_WIDEN_WORDS, I8_LANES, I8_WIDEN_WORDS,
+};
+use qsq_edge::kernels::{
+    csd_gemm_into_on, csd_gemm_scalar_on, qgemm2_into_on, qgemm2_scalar_on, PackedCsdTensor,
+    PackedQTensorV2, Pool,
+};
+use qsq_edge::quant::qsq::{quantize, AssignMode};
+use qsq_edge::util::prop::{check, forall, gen_weights};
+use qsq_edge::util::rng::Rng;
+
+/// Every length that straddles a chunk or tail boundary of the `lane`-wide
+/// fast path: empty, sub-chunk, the chunk edge itself, and the same edges
+/// eight chunks in.
+fn boundary_lengths(lane: usize) -> Vec<usize> {
+    vec![
+        0,
+        1,
+        lane - 1,
+        lane,
+        lane + 1,
+        2 * lane - 1,
+        2 * lane,
+        8 * lane - 1,
+        8 * lane,
+        8 * lane + 1,
+    ]
+}
+
+// --- (a) f32 gather lanes ----------------------------------------------------
+
+#[test]
+fn prop_gather_sum_bitwise_scalar_where_order_is_preserved() {
+    forall(
+        20,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            // gaussian activations; planes shorter than one chunk take the
+            // scalar loop verbatim, so equality is bitwise even here
+            let xs = gen_weights(&mut r, 512, 1.0);
+            for len in 0..F32_LANES {
+                let offsets: Vec<u16> = (0..len).map(|_| r.below(512) as u16).collect();
+                let (s, l) = (gather_sum_scalar(&offsets, &xs), gather_sum(&offsets, &xs));
+                check(
+                    s.to_bits() == l.to_bits(),
+                    &format!("short plane len={len} must be bitwise scalar (seed {seed})"),
+                )?;
+            }
+            // integer-valued activations: every addition is exact in f32,
+            // so lane reassociation cannot change the value at any length
+            let ints: Vec<f32> = (0..512).map(|_| r.range_i64(-16, 16) as f32).collect();
+            for len in boundary_lengths(F32_LANES) {
+                let offsets: Vec<u16> = (0..len).map(|_| r.below(512) as u16).collect();
+                check(
+                    gather_sum(&offsets, &ints) == gather_sum_scalar(&offsets, &ints),
+                    &format!("integer plane len={len} diverged (seed {seed})"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gather_sum_ulp_bounded_on_gaussian_planes() {
+    forall(
+        20,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            let xs = gen_weights(&mut r, 600, 1.0);
+            for len in boundary_lengths(F32_LANES) {
+                let offsets: Vec<u16> = (0..len).map(|_| r.below(600) as u16).collect();
+                // both orders must sit within a summation-error bound of
+                // the f64 reference; the bound scales with sum |x| and n
+                let exact: f64 = offsets.iter().map(|&o| xs[o as usize] as f64).sum();
+                let abs: f64 = offsets.iter().map(|&o| xs[o as usize].abs() as f64).sum();
+                let bound = (len.max(1) as f64) * (f32::EPSILON as f64) * abs + 1e-12;
+                let lane = gather_sum(&offsets, &xs) as f64;
+                let scalar = gather_sum_scalar(&offsets, &xs) as f64;
+                check(
+                    (lane - exact).abs() <= bound,
+                    &format!("lane sum off by {} > {bound} at len={len}", (lane - exact).abs()),
+                )?;
+                check(
+                    (lane - scalar).abs() <= 2.0 * bound,
+                    &format!("lane vs scalar gap {} at len={len}", (lane - scalar).abs()),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// --- (b) SWAR word sums ------------------------------------------------------
+
+#[test]
+fn prop_swar_sums_bitwise_equal_scalar_at_every_boundary() {
+    forall(
+        20,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            let i8s: Vec<i8> = (0..8 * I8_LANES + 1)
+                .map(|_| r.range_i64(i8::MIN as i64, i8::MAX as i64) as i8)
+                .collect();
+            for len in boundary_lengths(I8_LANES) {
+                check(
+                    sum_i8(&i8s[..len]) == sum_i8_scalar(&i8s[..len]),
+                    &format!("sum_i8 len={len} diverged (seed {seed})"),
+                )?;
+            }
+            let i16s: Vec<i16> = (0..8 * I16_LANES + 1)
+                .map(|_| r.range_i64(i16::MIN as i64, i16::MAX as i64) as i16)
+                .collect();
+            for len in boundary_lengths(I16_LANES) {
+                check(
+                    sum_i16(&i16s[..len]) == sum_i16_scalar(&i16s[..len]),
+                    &format!("sum_i16 len={len} diverged (seed {seed})"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn swar_widening_survives_adversarial_extremes_past_the_interval() {
+    // longer than one widening interval of all-extremal values: if the
+    // implementation missed a widen, a u16 lane wraps at 257 words of i8
+    // extremes and the total comes back wrong.  Straddle the interval
+    // boundary itself (±1 word) and an interval-plus-tail length.
+    for words in [I8_WIDEN_WORDS - 1, I8_WIDEN_WORDS, I8_WIDEN_WORDS + 1, 2 * I8_WIDEN_WORDS + 3] {
+        for v in [i8::MIN, i8::MAX] {
+            let n = words * I8_LANES + 5; // off-word tail too
+            let xs = vec![v; n];
+            assert_eq!(
+                sum_i8(&xs),
+                v as i64 * n as i64,
+                "i8 extremes wrapped at {words} words of {v}"
+            );
+        }
+        // alternating extremes: lanes see the worst-case biased magnitude
+        // while the true sum stays near zero
+        let n = words * I8_LANES;
+        let xs: Vec<i8> = (0..n).map(|i| if i % 2 == 0 { i8::MIN } else { i8::MAX }).collect();
+        assert_eq!(sum_i8(&xs), sum_i8_scalar(&xs), "alternating i8 extremes at {words} words");
+    }
+    // i16: one widening interval of extremes sums far past i32 range — a
+    // premature i32 narrowing (the widening boundary the issue pins) or a
+    // missed widen both fail here
+    for words in [I16_WIDEN_WORDS - 1, I16_WIDEN_WORDS, I16_WIDEN_WORDS + 1] {
+        for v in [i16::MIN, i16::MAX] {
+            let n = words * I16_LANES + 3;
+            let xs = vec![v; n];
+            let want = v as i64 * n as i64;
+            assert!(
+                want.unsigned_abs() > i32::MAX as u64,
+                "case must exceed i32 to be adversarial"
+            );
+            assert_eq!(sum_i16(&xs), want, "i16 extremes wrapped at {words} words of {v}");
+        }
+    }
+}
+
+// --- (c) kernel-level lane-vs-scalar differential ----------------------------
+
+#[test]
+fn qgemm2_lane_and_scalar_paths_agree_under_both_pool_widths() {
+    let mut r = Rng::new(0x1A5E);
+    // a shape whose per-cell planes straddle the chunk width both ways
+    let (k, oc, group, m) = (96usize, 14usize, 16usize, 9usize);
+    let w = gen_weights(&mut r, k * oc, 0.3);
+    let qt = quantize(&w, &[k, oc], group, 4, AssignMode::SigmaSearch).unwrap();
+    let p = PackedQTensorV2::pack(&qt).unwrap();
+    for width in [1usize, 4] {
+        let pool = Pool::new(width);
+        // integer activations: plane sums are exact, lane == scalar bitwise
+        let ints: Vec<f32> = (0..m * k).map(|_| r.range_i64(-8, 8) as f32).collect();
+        let mut lane = vec![0.0f32; m * oc];
+        let mut scalar = vec![0.0f32; m * oc];
+        qgemm2_into_on(&pool, &mut lane, &ints, m, &p);
+        qgemm2_scalar_on(&pool, &mut scalar, &ints, m, &p);
+        assert_eq!(lane, scalar, "qgemm2 integer inputs must be bitwise (width {width})");
+        // gaussian activations: ULP-scale agreement
+        let xs = gen_weights(&mut r, m * k, 1.0);
+        lane.fill(0.0);
+        scalar.fill(0.0);
+        qgemm2_into_on(&pool, &mut lane, &xs, m, &p);
+        qgemm2_scalar_on(&pool, &mut scalar, &xs, m, &p);
+        for (i, (l, s)) in lane.iter().zip(&scalar).enumerate() {
+            assert!(
+                (l - s).abs() < 1e-4,
+                "qgemm2 cell {i} lane {l} vs scalar {s} (width {width})"
+            );
+        }
+    }
+}
+
+#[test]
+fn csd_lane_and_scalar_paths_agree_under_both_pool_widths() {
+    let mut r = Rng::new(0xC5D);
+    let (k, oc, m) = (80usize, 11usize, 7usize);
+    let w = gen_weights(&mut r, k * oc, 0.25);
+    let p = PackedCsdTensor::pack(&w, &[k, oc], CsdQuality::new(3)).unwrap();
+    for width in [1usize, 4] {
+        let pool = Pool::new(width);
+        // ternary activations: digit-plane sums are exact either way
+        let terns: Vec<f32> = (0..m * k).map(|_| r.range_i64(-1, 1) as f32).collect();
+        let mut lane = vec![0.0f32; m * oc];
+        let mut scalar = vec![0.0f32; m * oc];
+        csd_gemm_into_on(&pool, &mut lane, &terns, m, &p);
+        csd_gemm_scalar_on(&pool, &mut scalar, &terns, m, &p);
+        assert_eq!(lane, scalar, "csd ternary inputs must be bitwise (width {width})");
+        let xs = gen_weights(&mut r, m * k, 1.0);
+        lane.fill(0.0);
+        scalar.fill(0.0);
+        csd_gemm_into_on(&pool, &mut lane, &xs, m, &p);
+        csd_gemm_scalar_on(&pool, &mut scalar, &xs, m, &p);
+        for (i, (l, s)) in lane.iter().zip(&scalar).enumerate() {
+            assert!((l - s).abs() < 1e-4, "csd cell {i} lane {l} vs scalar {s} (width {width})");
+        }
+    }
+}
