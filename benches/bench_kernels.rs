@@ -21,7 +21,13 @@
 //!   retained scalar oracles — the `plane-sum-*` / `swar-sum-*` pairs the
 //!   CI bench summary renders as a speedup ratio — and warm engine
 //!   forwards with sticky band pinning vs re-dealt leasing at the server
-//!   batch size.
+//!   batch size;
+//! * the calibrated integer-activation datapath: the i16 SWAR plane gather
+//!   vs its scalar oracle *and* vs the f32 lane path on the same planes
+//!   (the headline int-vs-f32 ratio), a calibrated integer engine forward
+//!   vs the f32-activation code-domain engine, and the integer engine
+//!   under pinned vs re-dealt band placement (what the cross-forward
+//!   affinity table buys the i16 ping/pong planes).
 //!
 //! Emits `BENCH_kernels.json` (name/median/p95/throughput per entry) so the
 //! perf trajectory is tracked across PRs, including counter entries for the
@@ -180,6 +186,7 @@ fn main() {
             "  -> plane-sum lane speedup {:.2}x vs scalar",
             scalar.median_s / lane.median_s.max(1e-12)
         );
+        let f32_lane_median = lane.median_s;
         results.push(scalar);
         results.push(lane);
 
@@ -201,6 +208,30 @@ fn main() {
         );
         results.push(s16);
         results.push(l16);
+
+        // the integer-datapath plane sum: the very same planes, activations
+        // calibrated down to i16 — gathers become pure SWAR integer
+        // reductions (exact, order-free) instead of f32 lane folds.  The
+        // f32-lane-vs-i16-lane pair is the headline ratio of the integer
+        // activation datapath.
+        let fmt = kernels::format_for_max_abs(kernels::max_abs(&xs));
+        let mut xq = vec![0i16; nact];
+        kernels::quantize_into(&xs, fmt, &mut xq);
+        let gs16 = run_bench("plane-sum-i16-scalar 64x4096", 3, 30, items, || {
+            planes.iter().map(|p| lanes::gather_sum_i16_scalar(p, &xq)).sum::<i64>()
+        });
+        println!("{}", gs16.report());
+        let gl16 = run_bench("plane-sum-i16-lanes  64x4096", 3, 30, items, || {
+            planes.iter().map(|p| lanes::gather_sum_i16(p, &xq)).sum::<i64>()
+        });
+        println!("{}", gl16.report());
+        println!(
+            "  -> i16 plane-sum {:.2}x vs i16 scalar, {:.2}x vs the f32 lane path",
+            gs16.median_s / gl16.median_s.max(1e-12),
+            f32_lane_median / gl16.median_s.max(1e-12)
+        );
+        results.push(gs16);
+        results.push(gl16);
     }
 
     // --- fused qconv vs the materialized pad+im2col+qgemm2 pipeline ---------
@@ -279,9 +310,27 @@ fn main() {
             f32e.median_s / qe.median_s.max(1e-12),
             100.0 * engine.skipped_fraction()
         );
+        // the calibrated integer-activation datapath on the same store and
+        // batch: activations quantized to i16 between layers, plane sums on
+        // the SWAR integer gather, one dequant-rescale per output cell
+        let mut int_engine =
+            QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+        int_engine.calibrate(&x).unwrap();
+        let mut s_i = Scratch::new();
+        let ie = run_bench("engine-fwd lenet int-datapath b=32", 2, 12, items, || {
+            int_engine.forward_with(&x, &mut s_i).unwrap()
+        });
+        println!("{}", ie.report());
+        println!(
+            "  -> integer datapath {:.2}x vs f32-activation code-domain (act_bits {})",
+            qe.median_s / ie.median_s.max(1e-12),
+            int_engine.act_plan().unwrap().act_bits()
+        );
         results.push(f32e);
         results.push(qe);
+        results.push(ie);
         results.push(scratch_entry("engine-scratch-arena", s_q.stats));
+        results.push(scratch_entry("int-engine-scratch-arena", s_i.stats));
 
         // --- persistent worker pool: spawns must be frozen once warm --------
         let warm = engine.pool().stats();
@@ -325,6 +374,29 @@ fn main() {
         results.push(pinned);
         results.push(redealt);
         results.push(pin_entry("kernel-pool-pin-hits-vs-misses", ps));
+
+        // the same placement experiment on the integer datapath, warm
+        // across forwards: the affinity table keeps each band's slice of
+        // the i16 ping/pong planes on the worker that last touched it, so
+        // this pair tracks what cross-forward stickiness buys the
+        // integer-activation engine
+        pool.set_pinned(true);
+        let ipinned = run_bench("engine-fwd lenet int-pinned-bands  b=32", 2, 12, items, || {
+            int_engine.forward_with(&x, &mut s_i).unwrap()
+        });
+        println!("{}", ipinned.report());
+        pool.set_pinned(false);
+        let iredealt = run_bench("engine-fwd lenet int-redealt-bands b=32", 2, 12, items, || {
+            int_engine.forward_with(&x, &mut s_i).unwrap()
+        });
+        pool.set_pinned(true);
+        println!("{}", iredealt.report());
+        println!(
+            "  -> int datapath pinned bands {:.2}x vs re-dealt",
+            iredealt.median_s / ipinned.median_s.max(1e-12)
+        );
+        results.push(ipinned);
+        results.push(iredealt);
 
         // --- per-layer scratch high-water marks -----------------------------
         for (layer, pk) in s_q.layer_peaks() {

@@ -1,8 +1,9 @@
 //! Design-space exploration (Fig.-10 style): sweep quality level phi and
 //! vector length N over both models; print (memory savings, energy
-//! efficiency, accuracy) per point plus the QSM multiplier trade-off — and
-//! the CSD digit dial stacked on top of (phi, N), i.e. the full
-//! accuracy-vs-energy frontier both quality knobs span.
+//! efficiency, accuracy) per point plus the QSM multiplier trade-off — the
+//! CSD digit dial stacked on top of (phi, N), and the activation-bits dial
+//! (f32 vs calibrated i16 fixed-point serving) as the third axis, i.e. the
+//! full accuracy-vs-energy frontier all three quality knobs span.
 //!
 //! ```bash
 //! cargo run --release --example quality_sweep [-- --fast]
@@ -34,6 +35,7 @@ fn main() -> Result<()> {
     }
     qsm_micro_sweep();
     csd_dial_sweep(fast)?;
+    act_dial_sweep(fast)?;
     Ok(())
 }
 
@@ -146,5 +148,59 @@ fn csd_dial_sweep(fast: bool) -> Result<()> {
     }
     println!("   (fewer digits -> fewer partial products -> less pJ/input;");
     println!("    the dial is runtime-selectable via EngineSelect::HostCsd)");
+    Ok(())
+}
+
+/// The activation-bits dial stacked on (phi, N) — the third frontier axis:
+/// the same code-domain engine served with f32 activations (act 32) and
+/// with the calibrated i16 fixed-point datapath (act 16, one calibration
+/// pass on the input batch).  Agreement vs the fp32 forward is the
+/// accuracy proxy; the ledger's integer adds vs fp32 multiplies show the
+/// arithmetic the dial moves out of floating point.
+fn act_dial_sweep(fast: bool) -> Result<()> {
+    use qsq_edge::data::synth_store;
+    use qsq_edge::device::QualityConfig;
+    use qsq_edge::runtime::host::QuantizedEngine;
+
+    let kind = ModelKind::Lenet;
+    let store = synth_store(34, kind);
+    let n = if fast { 32 } else { 128 };
+    let mut r = Rng::new(8);
+    let xdata: Vec<f32> = (0..n * 28 * 28).map(|_| r.f32()).collect();
+    let x = Tensor::new(vec![n, 28, 28, 1], xdata)?;
+    let base_pred = ops::argmax_rows(&forward(&store, &x)?);
+
+    println!("\n== activation-bits dial x (phi, N) — the third frontier axis ==");
+    println!("   (synthetic LeNet, {n} inputs; agreement vs the fp32 forward)");
+    println!(
+        "{:<5} {:<4} {:<5} {:>9} {:>12} {:>12} {:>12}",
+        "phi", "N", "act", "agree", "int adds", "fp muls", "pJ/input"
+    );
+    for &(phi, group) in &[(4u32, 16usize), (1, 16)] {
+        let quality = QualityConfig { phi, group };
+        for act in [32u32, 16] {
+            let mut engine =
+                QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch)?;
+            if act == 16 {
+                engine.calibrate(&x)?;
+            }
+            let pred = ops::argmax_rows(&engine.forward(&x)?);
+            let agree = pred.iter().zip(&base_pred).filter(|(a, b)| a == b).count();
+            let led = engine.ledger();
+            println!(
+                "{:<5} {:<4} {:<5} {:>8.1}% {:>12} {:>12} {:>12.3e}",
+                phi,
+                group,
+                act,
+                100.0 * agree as f64 / n as f64,
+                led.int_adds,
+                led.fp_muls,
+                led.total_pj() / (engine.forwards().max(1) as usize * n) as f64
+            );
+        }
+    }
+    println!("   (act 16 runs the calibrated i16 SWAR plane sums with one");
+    println!("    dequant-rescale per cell; act 32 keeps f32 activations —");
+    println!("    DeviceProfile::select_act_bits picks the width per class)");
     Ok(())
 }

@@ -141,7 +141,7 @@ pub fn deploy_for_device_with_link(
     seed: u64,
 ) -> Result<(WeightStore, CsdEngine, DeployReport)> {
     let meta = &store.meta;
-    let (quality, csd) = device
+    let (quality, csd, _act_bits) = device
         .select_quality(
             |phi, group| crate::model::bits::model_bits(meta, phi, group).encoded_bits,
             meta.macs_per_image(),

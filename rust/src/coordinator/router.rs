@@ -14,7 +14,7 @@ use crate::model::bits;
 use crate::model::meta::{ModelKind, ModelMeta};
 use crate::quant::qsq::AssignMode;
 
-/// A deployment decision for one device: both stacked quality dials.
+/// A deployment decision for one device: all three stacked quality dials.
 #[derive(Clone, Debug)]
 pub struct DeployPlan {
     pub device: String,
@@ -23,6 +23,10 @@ pub struct DeployPlan {
     /// CSD digit dial — what the edge multiplier spends per weight
     /// (MACs-derived energy budget).
     pub csd: CsdQuality,
+    /// Activation bit-width dial — the fixed-point width the device's
+    /// serving datapath runs activations at (16 for the calibrated i16
+    /// integer path on edge classes, 32 for server-class f32).
+    pub act_bits: u32,
     pub mode: AssignMode,
     pub estimated_bits: u64,
 }
@@ -42,10 +46,11 @@ pub fn plan_deployments(
                 bits::model_bits(meta, phi, group).encoded_bits
             };
             match d.select_quality(bits_at, macs) {
-                Some((q, csd)) => Ok(DeployPlan {
+                Some((q, csd, act_bits)) => Ok(DeployPlan {
                     device: d.name.clone(),
                     quality: q,
                     csd,
+                    act_bits,
                     mode,
                     estimated_bits: bits_at(q.phi, q.group),
                 }),

@@ -130,17 +130,20 @@ impl DeviceProfile {
         ]
     }
 
-    /// Joint quality selection over both stacked dials (the full §V story):
-    /// the *highest* QSQ quality whose encoded model fits the memory budget
-    /// (`bits_at(phi, group)` estimates the encoded size), paired with the
-    /// largest CSD digit budget the device's MACs-derived energy budget
-    /// affords for a model costing `macs` MACs per inference
-    /// ([`Self::select_csd_quality`]).  The search is separable because the
-    /// dials price different resources — (phi, N) buys bytes on the device,
-    /// `max_digits` buys partial-product rows per request — and the paper's
-    /// methodology stacks them: the codes that fit cross the channel, then
-    /// the edge multiplier truncates their CSD form on top.  A device
-    /// profile alone therefore determines the full stacked-dial
+    /// Joint quality selection over the three stacked dials (the full §V
+    /// story): the *highest* QSQ quality whose encoded model fits the memory
+    /// budget (`bits_at(phi, group)` estimates the encoded size), paired
+    /// with the largest CSD digit budget the device's MACs-derived energy
+    /// budget affords for a model costing `macs` MACs per inference
+    /// ([`Self::select_csd_quality`]), plus the activation bit-width of the
+    /// device class ([`Self::select_act_bits`]).  The search is separable
+    /// because the dials price different resources — (phi, N) buys bytes on
+    /// the device, `max_digits` buys partial-product rows per request,
+    /// act-bits buys per-activation energy on the serving datapath — and the
+    /// paper's methodology stacks them: the codes that fit cross the
+    /// channel, the edge multiplier truncates their CSD form on top, and the
+    /// activations between the layers run at the class's fixed-point width.
+    /// A device profile alone therefore determines the full stacked-dial
     /// configuration.
     ///
     /// Returns `None` only when no (phi, N) fits the memory budget.
@@ -148,7 +151,7 @@ impl DeviceProfile {
         &self,
         bits_at: impl Fn(u32, usize) -> u64,
         macs: u64,
-    ) -> Option<(QualityConfig, CsdQuality)> {
+    ) -> Option<(QualityConfig, CsdQuality, u32)> {
         // quality-ordered candidates: high phi + small N (best accuracy)
         // down to low phi + large N (smallest model)
         let candidates = [
@@ -163,10 +166,30 @@ impl DeviceProfile {
         ];
         for (phi, group) in candidates {
             if bits_at(phi, group) / 8 <= self.model_budget_bytes {
-                return Some((QualityConfig { phi, group }, self.select_csd_quality(macs)));
+                return Some((
+                    QualityConfig { phi, group },
+                    self.select_csd_quality(macs),
+                    self.select_act_bits(),
+                ));
             }
         }
         None
+    }
+
+    /// The third quality dial: the activation bit-width the device serves
+    /// at.  Every edge class runs the calibrated fixed-point datapath —
+    /// activations quantized to i16 between layers
+    /// ([`crate::kernels::ACT_TOTAL_BITS`]), plane sums as pure integer
+    /// reductions — while the server class keeps f32 activations (reported
+    /// as 32): it has the FLOPs to spare and stays the exact oracle the
+    /// integer datapath is validated against.
+    pub fn select_act_bits(&self) -> u32 {
+        match self.class {
+            DeviceClass::McuTiny | DeviceClass::EdgeSmall | DeviceClass::EdgeLarge => {
+                crate::kernels::ACT_TOTAL_BITS
+            }
+            DeviceClass::Server => 32,
+        }
     }
 
     /// Size the CSD digit dial from the device's energy/compute budget: the
@@ -226,7 +249,7 @@ mod tests {
     fn bigger_device_gets_better_quality() {
         let roster = DeviceProfile::roster();
         let weights = 10_000_000u64; // 10M-param model
-        let q: Vec<Option<(QualityConfig, CsdQuality)>> =
+        let q: Vec<Option<(QualityConfig, CsdQuality, u32)>> =
             roster.iter().map(|d| d.select_quality(bits(weights), LENET_MACS)).collect();
         // the MCU can't fit a 10M-weight model at any quality
         assert!(q[0].is_none());
@@ -238,9 +261,10 @@ mod tests {
     #[test]
     fn mcu_fits_small_model() {
         let mcu = &DeviceProfile::roster()[0];
-        let (q, csd) = mcu.select_quality(bits(45_000), LENET_MACS).unwrap(); // LeNet-scale
+        let (q, csd, act) = mcu.select_quality(bits(45_000), LENET_MACS).unwrap(); // LeNet-scale
         assert!(q.phi >= 1);
         assert!(csd.max_digits >= 1);
+        assert_eq!(act, 16, "edge classes serve fixed-point activations");
     }
 
     #[test]
@@ -266,7 +290,7 @@ mod tests {
         // 2e8 MACs/s * 10 ms = 2e6 rows / 281640 MACs = 7 digits
         assert_eq!(csd[1].max_digits, 7);
         // joint selection returns the same digit dial next to the QSQ dial
-        let (_, joint) = roster[1].select_quality(bits(45_000), LENET_MACS).unwrap();
+        let (_, joint, _) = roster[1].select_quality(bits(45_000), LENET_MACS).unwrap();
         assert_eq!(joint, csd[1]);
     }
 
@@ -301,10 +325,21 @@ mod tests {
     fn quality_order_prefers_accuracy() {
         // an unconstrained device must get the best quality on both dials
         let d = &DeviceProfile::roster()[3];
-        let (q, csd) = d.select_quality(|_, _| 0, 1_000_000).unwrap();
+        let (q, csd, act) = d.select_quality(|_, _| 0, 1_000_000).unwrap();
         assert_eq!(q, QualityConfig { phi: 4, group: 8 });
         assert_eq!(csd, CsdQuality::exact());
+        assert_eq!(act, 32, "the server class stays on f32 activations");
         // a zero-MAC model is degenerate: exact CSD, not a panic
         assert_eq!(d.select_csd_quality(0), CsdQuality::exact());
+    }
+
+    #[test]
+    fn act_bits_dial_splits_edge_from_server() {
+        let roster = DeviceProfile::roster();
+        let bits: Vec<u32> = roster.iter().map(|d| d.select_act_bits()).collect();
+        assert_eq!(bits, [16, 16, 16, 32], "every edge class is fixed-point, server is f32");
+        // the edge width is the calibration module's carrier width — the
+        // dial and the datapath can never disagree
+        assert_eq!(bits[0], crate::kernels::ACT_TOTAL_BITS);
     }
 }

@@ -61,6 +61,12 @@ pub struct Ledger {
     pub gated_rows: u64,
     pub decoder_ops: u64,
     pub skipped_macs: u64,
+    /// Activation bit-width gauge: 0 while every forward ran the f32
+    /// activation path, 16 once a calibrated integer (i16) forward ran.
+    /// A *gauge*, not a counter — [`Ledger::add`] max-merges it and
+    /// [`Ledger::compute_pj`] does not price it (the integer datapath's
+    /// cost shows up as `int_adds`/`fp_muls` instead).
+    pub act_bits: u64,
 }
 
 impl Ledger {
@@ -95,6 +101,9 @@ impl Ledger {
         self.gated_rows += other.gated_rows;
         self.decoder_ops += other.decoder_ops;
         self.skipped_macs += other.skipped_macs;
+        // gauge, not counter: the merged ledger ran at the widest
+        // activation width either side ever used
+        self.act_bits = self.act_bits.max(other.act_bits);
     }
 }
 
@@ -143,6 +152,22 @@ mod tests {
         l2.add(&l);
         assert_eq!(l2.total_pj(), l.total_pj());
         assert_eq!(l2.gated_rows, 7);
+    }
+
+    #[test]
+    fn act_bits_is_a_max_merged_unpriced_gauge() {
+        let mut l = Ledger::new();
+        l.act_bits = 16;
+        let before = l.total_pj();
+        let mut wide = Ledger::new();
+        wide.act_bits = 32;
+        l.add(&wide);
+        assert_eq!(l.act_bits, 32, "merge keeps the widest width");
+        let mut narrow = Ledger::new();
+        narrow.act_bits = 16;
+        l.add(&narrow);
+        assert_eq!(l.act_bits, 32, "a narrower forward cannot lower the gauge");
+        assert_eq!(l.total_pj(), before, "act_bits is never priced");
     }
 
     #[test]

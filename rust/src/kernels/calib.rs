@@ -1,0 +1,235 @@
+//! Activation calibration for the fixed-point integer datapath.
+//!
+//! The paper's QSM pipeline is integer end-to-end; what the serving path
+//! needs to join it is a *per-layer activation Q-format*.  This module is
+//! that calibration pass: observe the max-|activation| each layer's input
+//! sees on a representative (synth/validation) batch, pick the widest
+//! [`Format`] whose fractional scaling still covers that range without
+//! saturating ([`format_for_max_abs`]), and freeze the choice into an
+//! [`ActPlan`].  With a plan in hand the fused pipeline
+//! (`runtime::host::FusedFwd`) quantizes activations between layers inside
+//! the i16 ping/pong scratch buffers and the qgemm2/CSD kernels gather them
+//! through `lanes::gather_sum_i16` — a pure SWAR integer reduction with one
+//! dequant-rescale per (group, column) cell.
+//!
+//! Two properties the differential harness (`tests/test_intpath.rs`) pins:
+//!
+//! * **Determinism** — the same batch always yields the same formats: the
+//!   pass is a pure fold over the activations, no RNG, no timing.
+//! * **Saturation, never wraparound** — quantization is round-to-nearest
+//!   with clamping ([`quantize_into`], same semantics as
+//!   [`crate::hw::fixedpoint::Fixed::from_f64`]).  An activation outside
+//!   the calibrated range clips to the format's extremes; it can never wrap
+//!   sign like a bare `as i16` cast would.
+
+use std::collections::BTreeMap;
+
+use crate::hw::fixedpoint::Format;
+
+/// Total bits of the activation fixed-point format (sign included).  i16 is
+/// the carrier the SWAR word sums pack four-per-`u64`, and 16 activation
+/// bits is the paper's edge operating point; the fraction is what
+/// calibration picks per layer.
+pub const ACT_TOTAL_BITS: u32 = 16;
+
+/// Largest |x| in a buffer (0.0 for an empty one).  The range statistic the
+/// calibration pass folds per layer; symmetric formats only need the one
+/// number.
+pub fn max_abs(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, &v| a.max(v.abs()))
+}
+
+/// Pick the activation format for a layer whose inputs reached `max_abs`:
+/// the largest fractional shift `f` (at [`ACT_TOTAL_BITS`] total) such that
+/// `max_abs * 2^f` still rounds inside the raw range — i.e. the finest
+/// resolution that represents the whole observed range without saturating.
+/// A degenerate all-zero layer gets the finest format; a range beyond the
+/// integer capacity of the format (`max_abs > max_raw`) gets `frac = 0` and
+/// relies on saturation.
+pub fn format_for_max_abs(max_abs: f32) -> Format {
+    let total = ACT_TOTAL_BITS;
+    let max_raw = ((1i64 << (total - 1)) - 1) as f64;
+    let mut frac = total - 1;
+    if max_abs > 0.0 {
+        let v = max_abs as f64;
+        while frac > 0 && (v * (1u64 << frac) as f64).round() > max_raw {
+            frac -= 1;
+        }
+    }
+    Format { total, frac }
+}
+
+/// Quantize f32 activations to the format's raw i16 domain: round to
+/// nearest, **clamp** to `[min_raw, max_raw]` (saturate, never wrap) —
+/// element-for-element the semantics of
+/// [`crate::hw::fixedpoint::Fixed::from_f64`] on the i16 carrier.
+pub fn quantize_into(xs: &[f32], fmt: Format, dst: &mut [i16]) {
+    debug_assert!(dst.len() >= xs.len());
+    let s = fmt.scale();
+    let (lo, hi) = (fmt.min_raw(), fmt.max_raw());
+    for (d, &v) in dst.iter_mut().zip(xs) {
+        *d = ((v as f64 * s).round() as i64).clamp(lo, hi) as i16;
+    }
+}
+
+/// The reciprocal scale that maps the format's raw domain back to f32 —
+/// the one dequant-rescale factor each integer plane sum pays per
+/// (group, column) cell.
+pub fn dequant_scale(fmt: Format) -> f32 {
+    (1.0 / fmt.scale()) as f32
+}
+
+/// Pre-quantize a layer's f32 bias vector into the i32 raw domain of the
+/// layer-output format, so the serving epilogue adds integers (computed
+/// once at calibration time, never per forward).
+pub fn quantize_bias(bias: &[f32], fmt: Format) -> Vec<i32> {
+    let s = fmt.scale();
+    bias.iter().map(|&b| (b as f64 * s).round() as i32).collect()
+}
+
+/// The integer-domain layer epilogue: requantize a GEMM accumulator row
+/// block `acc` (`rows x n` f32) into the next layer's format while adding
+/// the pre-quantized bias and applying ReLU — all in raw integers.  ReLU is
+/// the lower clamp at 0; the upper clamp saturates at the format maximum,
+/// so a post-bias overshoot clips instead of wrapping.
+pub fn bias_relu_quantize_into(acc: &[f32], bias_q: &[i32], fmt: Format, dst: &mut [i16]) {
+    let n = bias_q.len();
+    debug_assert!(dst.len() >= acc.len());
+    if n == 0 {
+        return;
+    }
+    let s = fmt.scale();
+    let hi = fmt.max_raw();
+    for (row, drow) in acc.chunks_exact(n).zip(dst.chunks_exact_mut(n)) {
+        for ((d, &v), &bq) in drow.iter_mut().zip(row).zip(bias_q) {
+            let q = (v as f64 * s).round() as i64 + bq as i64;
+            *d = q.clamp(0, hi) as i16;
+        }
+    }
+}
+
+/// The calibrated per-layer activation plan: one Q-format per layer input
+/// (keyed by the layer's weight-tensor name) plus the pre-quantized bias
+/// vectors (keyed by the bias-tensor name, in the *output* format of their
+/// layer).  Built once by an engine's `calibrate` pass, then read-only on
+/// the serving path.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ActPlan {
+    formats: BTreeMap<String, Format>,
+    biases: BTreeMap<String, Vec<i32>>,
+}
+
+impl ActPlan {
+    /// The calibrated input format of layer `name`, if calibration saw it.
+    pub fn format(&self, name: &str) -> Option<Format> {
+        self.formats.get(name).copied()
+    }
+
+    /// The pre-quantized bias raw values for bias tensor `name`.
+    pub fn bias_q(&self, name: &str) -> Option<&[i32]> {
+        self.biases.get(name).map(|v| v.as_slice())
+    }
+
+    /// Record layer `name`'s input format.
+    pub fn set_format(&mut self, name: &str, fmt: Format) {
+        self.formats.insert(name.to_string(), fmt);
+    }
+
+    /// Record bias tensor `name`'s pre-quantized raw values.
+    pub fn set_bias_q(&mut self, name: &str, q: Vec<i32>) {
+        self.biases.insert(name.to_string(), q);
+    }
+
+    /// Activation bit-width of the plan (the Ledger's `act_bits` gauge).
+    pub fn act_bits(&self) -> u32 {
+        ACT_TOTAL_BITS
+    }
+
+    /// True when no layer has been calibrated.
+    pub fn is_empty(&self) -> bool {
+        self.formats.is_empty()
+    }
+
+    /// The calibrated `(layer, format)` pairs, sorted by layer name.
+    pub fn formats(&self) -> impl Iterator<Item = (&str, Format)> {
+        self.formats.iter().map(|(n, &f)| (n.as_str(), f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_covers_observed_range_without_saturation() {
+        for ma in [1e-4f32, 0.3, 1.0, 1.9994, 7.5, 100.0, 30000.0] {
+            let fmt = format_for_max_abs(ma);
+            assert_eq!(fmt.total, ACT_TOTAL_BITS);
+            // the observed extreme itself must quantize inside the range
+            let q = (ma as f64 * fmt.scale()).round() as i64;
+            assert!(q <= fmt.max_raw(), "max_abs {ma} saturates Q{}.{}", fmt.total, fmt.frac);
+            // ... and one more fractional bit would not fit (finest choice)
+            if fmt.frac + 1 < fmt.total {
+                let q2 = (ma as f64 * 2.0 * fmt.scale()).round() as i64;
+                assert!(q2 > fmt.max_raw(), "format for {ma} is not the finest");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_ranges_get_the_finest_format() {
+        assert_eq!(format_for_max_abs(0.0).frac, ACT_TOTAL_BITS - 1);
+        // beyond integer capacity: integer format, saturation handles it
+        assert_eq!(format_for_max_abs(1e9).frac, 0);
+    }
+
+    #[test]
+    fn quantize_saturates_and_never_wraps() {
+        let fmt = format_for_max_abs(1.0);
+        let xs = [0.5f32, -0.25, 1.0, 2.0, -3.0, 1e9, -1e9];
+        let mut q = vec![0i16; xs.len()];
+        quantize_into(&xs, fmt, &mut q);
+        let d = dequant_scale(fmt);
+        assert!((q[0] as f32 * d - 0.5).abs() < 1e-3);
+        assert!((q[1] as f32 * d + 0.25).abs() < 1e-3);
+        // everything past the range clamps to the extremes — same sign in,
+        // extreme of the same sign out (a wrap would flip it)
+        assert_eq!(q[3], fmt.max_raw() as i16);
+        assert_eq!(q[5], fmt.max_raw() as i16);
+        assert_eq!(q[4], fmt.min_raw() as i16);
+        assert_eq!(q[6], fmt.min_raw() as i16);
+    }
+
+    #[test]
+    fn integer_epilogue_matches_float_bias_relu_within_epsilon() {
+        let fmt = format_for_max_abs(4.0);
+        let bias = [0.25f32, -1.0, 0.5];
+        let bq = quantize_bias(&bias, fmt);
+        let acc = [0.5f32, 0.4, -2.0, 3.9, 0.9, -0.1];
+        let mut q = vec![0i16; acc.len()];
+        bias_relu_quantize_into(&acc, &bq, fmt, &mut q);
+        let d = dequant_scale(fmt);
+        for (i, (&v, &qi)) in acc.iter().zip(&q).enumerate() {
+            let want = (v + bias[i % 3]).max(0.0);
+            assert!(
+                (qi as f32 * d - want).abs() <= 2.0 * d,
+                "cell {i}: {} vs {want}",
+                qi as f32 * d
+            );
+            assert!(qi >= 0, "ReLU output must be non-negative in the raw domain");
+        }
+    }
+
+    #[test]
+    fn plan_is_a_value_type() {
+        let mut a = ActPlan::default();
+        assert!(a.is_empty());
+        a.set_format("c1w", format_for_max_abs(1.0));
+        a.set_bias_q("c1b", vec![1, 2, 3]);
+        let b = a.clone();
+        assert_eq!(a, b);
+        assert_eq!(a.format("c1w"), Some(format_for_max_abs(1.0)));
+        assert_eq!(a.bias_q("c1b"), Some(&[1i32, 2, 3][..]));
+        assert_eq!(a.act_bits(), 16);
+    }
+}

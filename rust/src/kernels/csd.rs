@@ -71,6 +71,9 @@ pub(crate) const CSD_PAR_THRESHOLD: usize = 1 << 18;
 struct Plane {
     /// `2^(digit_index - frac)`: the exact power-of-two weight of the plane.
     scale: f32,
+    /// The digit index itself — the left-shift the integer-activation band
+    /// applies (`scale` with the format's `2^-frac` factored out).
+    exp: u8,
     start: u32,
     mid: u32,
     end: u32,
@@ -199,7 +202,13 @@ impl PackedCsdTensor {
                 let mid = offsets.len() as u32;
                 offsets.extend_from_slice(neg);
                 let end = offsets.len() as u32;
-                planes.push(Plane { scale: pow2(i as i32 - fmt.frac as i32), start, mid, end });
+                planes.push(Plane {
+                    scale: pow2(i as i32 - fmt.frac as i32),
+                    exp: i as u8,
+                    start,
+                    mid,
+                    end,
+                });
             }
             col_bounds.push(planes.len() as u32);
         }
@@ -315,6 +324,24 @@ pub(crate) fn csd_band_scalar(out: &mut [f32], xb: &[f32], p: &PackedCsdTensor) 
     csd_band_with(out, xb, p, super::lanes::gather_sum_scalar)
 }
 
+/// The integer-activation serving band: i16 digit-plane sums on the SWAR
+/// [`super::lanes::gather_sum_i16`] reduction (the fused-conv slab kernel of
+/// the integer datapath).
+pub(crate) fn csd_band_i16(out: &mut [f32], xb: &[i16], p: &PackedCsdTensor, dequant_in: f32) {
+    csd_band_i16_with(out, xb, p, dequant_in, super::lanes::gather_sum_i16)
+}
+
+/// The integer-activation scalar-oracle band — bitwise equal to
+/// [`csd_band_i16`] on every input (integer sums are exact either way).
+pub(crate) fn csd_band_i16_scalar(
+    out: &mut [f32],
+    xb: &[i16],
+    p: &PackedCsdTensor,
+    dequant_in: f32,
+) {
+    csd_band_i16_with(out, xb, p, dequant_in, super::lanes::gather_sum_i16_scalar)
+}
+
 /// `out[M,OC] = x[M,K] @ packed` on the digit-plane layout (caller provides
 /// a zeroed `out` of exactly `m * OC`), row bands on the global worker pool.
 pub fn csd_gemm_into(out: &mut [f32], xd: &[f32], m: usize, p: &PackedCsdTensor) {
@@ -354,6 +381,95 @@ pub fn csd_gemm_scalar_on(
     let nthreads = super::threads_for_rows(m, total, CSD_PAR_THRESHOLD).min(pool.width());
     let band = |_: usize, ob: &mut [f32], xb: &[f32]| csd_band_scalar(ob, xb, p);
     super::for_each_row_band_on(pool, out, xd, m, p.k, p.oc, nthreads, band);
+}
+
+/// One row band of the *integer-activation* CSD kernel: `xb` holds raw i16
+/// activations, every digit-plane sum is an exact i64 reduction (the SWAR
+/// [`super::lanes::gather_sum_i16`] for serving, the scalar gather for the
+/// oracle), and a plane's power-of-two weight is applied as a **left shift
+/// of its integer sum** — the literal shift-and-add of the QSM datapath,
+/// with no f32 op inside the column accumulation at all.  The single
+/// dequant-rescale per (column, row) cell folds the weight format's
+/// `2^-frac` together with the activation format's reciprocal scale.
+/// Integer reductions are exact in any order, so the lane and scalar forms
+/// are bitwise equal on every input.
+#[inline(always)]
+fn csd_band_i16_with<S: Fn(&[u16], &[i16]) -> i64>(
+    out: &mut [f32],
+    xb: &[i16],
+    p: &PackedCsdTensor,
+    dequant_in: f32,
+    plane_sum: S,
+) {
+    let (k, oc) = (p.k, p.oc);
+    if oc == 0 {
+        return;
+    }
+    let rows = out.len() / oc;
+    // one dequant-rescale per cell: weight-format and activation-format
+    // reciprocal scales folded into a single exact power-of-two-times-dq
+    let scale = pow2(-(p.quality.fmt.frac as i32)) * dequant_in;
+    for j in 0..oc {
+        let (lo, hi) = (p.col_bounds[j] as usize, p.col_bounds[j + 1] as usize);
+        let planes = &p.planes[lo..hi];
+        if planes.is_empty() {
+            continue; // fully gated column: every MAC skipped
+        }
+        for i in 0..rows {
+            let xrow = &xb[i * k..(i + 1) * k];
+            let mut acc = 0i64;
+            for pl in planes {
+                let s = plane_sum(&p.offsets[pl.start as usize..pl.mid as usize], xrow)
+                    - plane_sum(&p.offsets[pl.mid as usize..pl.end as usize], xrow);
+                // the digit's power-of-two weight is a pure integer shift
+                acc += s << pl.exp;
+            }
+            out[i * oc + j] += scale * (acc as f32);
+        }
+    }
+}
+
+/// `out[M,OC] += dequant(xq[M,K]) @ packed` with i16 activations on the
+/// truncated-CSD shift-and-add kernel: digit-plane sums through the SWAR
+/// [`super::lanes::gather_sum_i16`] reduction, row bands on `pool`.
+/// `dequant_in` is the activation format's reciprocal scale.
+pub fn csd_gemm_i16_into_on(
+    pool: &super::Pool,
+    out: &mut [f32],
+    xq: &[i16],
+    m: usize,
+    p: &PackedCsdTensor,
+    dequant_in: f32,
+) {
+    debug_assert_eq!(out.len(), m * p.oc);
+    debug_assert_eq!(xq.len(), m * p.k);
+    let total = m.saturating_mul(p.ops_per_row());
+    let nthreads = super::threads_for_rows(m, total, CSD_PAR_THRESHOLD).min(pool.width());
+    let band = |_: usize, ob: &mut [f32], xb: &[i16]| {
+        csd_band_i16_with(ob, xb, p, dequant_in, super::lanes::gather_sum_i16)
+    };
+    super::for_each_row_band_i16_on(pool, out, xq, m, p.k, p.oc, nthreads, band);
+}
+
+/// [`csd_gemm_i16_into_on`] with every digit-plane sum on the scalar gather
+/// oracle — the differential baseline; must be **bitwise** equal to the
+/// SWAR form on every input (integer sums are exact in both orders).
+pub fn csd_gemm_i16_scalar_on(
+    pool: &super::Pool,
+    out: &mut [f32],
+    xq: &[i16],
+    m: usize,
+    p: &PackedCsdTensor,
+    dequant_in: f32,
+) {
+    debug_assert_eq!(out.len(), m * p.oc);
+    debug_assert_eq!(xq.len(), m * p.k);
+    let total = m.saturating_mul(p.ops_per_row());
+    let nthreads = super::threads_for_rows(m, total, CSD_PAR_THRESHOLD).min(pool.width());
+    let band = |_: usize, ob: &mut [f32], xb: &[i16]| {
+        csd_band_i16_with(ob, xb, p, dequant_in, super::lanes::gather_sum_i16_scalar)
+    };
+    super::for_each_row_band_i16_on(pool, out, xq, m, p.k, p.oc, nthreads, band);
 }
 
 /// Shared tensor-level entry: validate shapes, run with the given thread
@@ -648,6 +764,49 @@ mod tests {
             p.stats.weights * p.quality.max_rows() as u64
         );
         assert!(l1.total_pj() > 0.0);
+    }
+
+    #[test]
+    fn i16_band_bitwise_equals_f32_band_on_ternary_activations() {
+        // Ternary activations at dequant 1.0: both paths compute the same
+        // integers scaled by the same power of two, every f32 add exact
+        // (partial sums stay far below 2^24), so the integer band must be
+        // *bitwise* equal to the f32 band.
+        let mut r = Rng::new(29);
+        let (k, oc) = (48usize, 5usize);
+        let w = safe_weights(&mut r, k * oc);
+        let p = PackedCsdTensor::pack(&w, &[k, oc], quality(3)).unwrap();
+        let pool = crate::kernels::Pool::new(1);
+        for m in [1usize, 4, 6] {
+            let x = ternary_x(&mut r, m, k);
+            let xq: Vec<i16> = x.data().iter().map(|&v| v as i16).collect();
+            let want = csd_gemm_threads(&x, &p, 1).unwrap();
+            let mut got = vec![0.0f32; m * oc];
+            csd_gemm_i16_into_on(&pool, &mut got, &xq, m, &p, 1.0);
+            assert_eq!(got.as_slice(), want.data(), "m={m} diverged");
+        }
+    }
+
+    #[test]
+    fn i16_lane_and_scalar_orders_are_bitwise_equal() {
+        // Integer plane sums are exact in any order, so the SWAR gather and
+        // the scalar gather must agree bitwise on every input — including
+        // full-range i16 activations.
+        let mut r = Rng::new(31);
+        let (k, oc) = (96usize, 11usize);
+        let w = safe_weights(&mut r, k * oc);
+        let p = PackedCsdTensor::pack(&w, &[k, oc], quality(4)).unwrap();
+        let pool = crate::kernels::Pool::new(4);
+        let dq = 1.0f32 / 4096.0;
+        for m in [1usize, 4, 9] {
+            let xq: Vec<i16> =
+                (0..m * k).map(|_| r.range_i64(-32768, 32767) as i16).collect();
+            let mut lane = vec![0.0f32; m * oc];
+            let mut scalar = vec![0.0f32; m * oc];
+            csd_gemm_i16_into_on(&pool, &mut lane, &xq, m, &p, dq);
+            csd_gemm_i16_scalar_on(&pool, &mut scalar, &xq, m, &p, dq);
+            assert_eq!(lane, scalar, "m={m} diverged");
+        }
     }
 
     #[test]

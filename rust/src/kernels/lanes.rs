@@ -186,6 +186,51 @@ pub fn sum_i16(xs: &[i16]) -> i64 {
     total
 }
 
+/// Stack-chunk width of the i16 gather: offsets are materialized into a
+/// fixed `[i16; I16_GATHER_CHUNK]` buffer and each chunk is reduced by
+/// [`sum_i16`], so the gather never allocates and the SWAR word loop runs
+/// over contiguous half-words.
+pub const I16_GATHER_CHUNK: usize = 256;
+
+/// Sum the i16 activations an offset plane selects, one accumulator — the
+/// scalar oracle for [`gather_sum_i16`].  Integer arithmetic into i64, so
+/// the value is exact at every length.
+#[inline]
+pub fn gather_sum_i16_scalar(offsets: &[u16], xs: &[i16]) -> i64 {
+    let mut s = 0i64;
+    for &off in offsets {
+        s += xs[off as usize] as i64;
+    }
+    s
+}
+
+/// Sum the i16 activations an offset plane selects through the SWAR word
+/// reduction — the integer-activation plane-sum hot path of
+/// [`super::qgemm::qgemm2`] and the CSD digit planes.
+///
+/// The plane's offsets are gathered [`I16_GATHER_CHUNK`] at a time into a
+/// fixed stack buffer and each contiguous chunk is reduced by [`sum_i16`]
+/// (four biased half-words per `u64` word).  Every addition is integer, so
+/// unlike the f32 [`gather_sum`] there is no reassociation caveat: the
+/// result is **bitwise equal** to [`gather_sum_i16_scalar`] at every
+/// length.  Planes shorter than one SWAR word take the scalar loop.
+#[inline]
+pub fn gather_sum_i16(offsets: &[u16], xs: &[i16]) -> i64 {
+    if offsets.len() < I16_LANES {
+        return gather_sum_i16_scalar(offsets, xs);
+    }
+    let mut buf = [0i16; I16_GATHER_CHUNK];
+    let mut total = 0i64;
+    for ch in offsets.chunks(I16_GATHER_CHUNK) {
+        let b = &mut buf[..ch.len()];
+        for (d, &off) in b.iter_mut().zip(ch) {
+            *d = xs[off as usize];
+        }
+        total += sum_i16(b);
+    }
+    total
+}
+
 #[inline]
 fn fold_u16_lanes(acc: u64) -> i64 {
     ((acc & 0xFFFF) + ((acc >> 16) & 0xFFFF) + ((acc >> 32) & 0xFFFF) + (acc >> 48)) as i64
@@ -232,6 +277,29 @@ mod tests {
             let l16 = len.min(i16s.len());
             assert_eq!(sum_i16(&i16s[..l16]), sum_i16_scalar(&i16s[..l16]), "i16 len {len}");
         }
+    }
+
+    #[test]
+    fn gather_sum_i16_bitwise_equal_scalar_at_chunk_boundaries() {
+        let mut r = Rng::new(13);
+        let xs: Vec<i16> = (0..512).map(|_| r.range_i64(-32768, 32767) as i16).collect();
+        for len in [0usize, 1, 3, 4, 5, 255, 256, 257, 511, 512, 1000] {
+            let offsets: Vec<u16> = (0..len).map(|_| r.below(512) as u16).collect();
+            assert_eq!(
+                gather_sum_i16(&offsets, &xs),
+                gather_sum_i16_scalar(&offsets, &xs),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn gather_sum_i16_extremes_do_not_wrap() {
+        // every offset hits the same extremal value: the chunk sums stress
+        // the biased-lane arithmetic while the true total is exact in i64
+        let xs = vec![i16::MIN; 4];
+        let offsets: Vec<u16> = vec![0; 3 * I16_GATHER_CHUNK + 7];
+        assert_eq!(gather_sum_i16(&offsets, &xs), i16::MIN as i64 * offsets.len() as i64);
     }
 
     #[test]

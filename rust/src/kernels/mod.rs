@@ -39,6 +39,18 @@
 //!   every fixed word count.  The scalar forms are retained as bitwise
 //!   oracles; `tests/test_lanes.rs` is the differential harness that sweeps
 //!   every chunk/tail boundary and the widening overflow edge.
+//! * [`mod@calib`] — the activation-calibration pass of the integer
+//!   datapath: observe per-layer activation ranges on a representative
+//!   batch, pick one saturating Q-format per layer ([`calib::ActPlan`]),
+//!   and quantize/dequantize activations through it.  With a plan in hand
+//!   the fused pipeline runs layer-to-layer on i16 ping/pong buffers
+//!   ([`Scratch::qact_a`] / [`Scratch::qact_b`]) and the qgemm2/CSD plane
+//!   sums gather i16 activations through [`lanes::gather_sum_i16`] — the
+//!   inner loop becomes a pure SWAR integer reduction with one
+//!   dequant-rescale per (group, column) cell.  `tests/test_intpath.rs` is
+//!   the differential gate: i16 gathers bitwise vs their scalar oracle,
+//!   calibration determinism, saturation clamp-never-wrap, and the whole
+//!   integer forward against `forward_scalar_reference`.
 //! * [`mod@pool`] — the persistent worker pool every row-band kernel
 //!   (blocked f32, qgemm2, csd, and the fused conv driver) dispatches on.
 //!   Workers are spawned once (lazily, on first kernel use)
@@ -81,24 +93,29 @@
 //! high-water marks).
 
 pub mod blocked;
+pub mod calib;
 pub mod csd;
 pub mod lanes;
 pub mod pool;
 pub mod qconv;
 pub mod qgemm;
 
+pub use calib::{
+    bias_relu_quantize_into, dequant_scale, format_for_max_abs, max_abs, quantize_bias,
+    quantize_into, ActPlan, ACT_TOTAL_BITS,
+};
 pub use csd::{
-    csd_gemm, csd_gemm_into, csd_gemm_into_on, csd_gemm_scalar_on, csd_gemm_threads, CsdStats,
-    PackedCsdTensor,
+    csd_gemm, csd_gemm_i16_into_on, csd_gemm_i16_scalar_on, csd_gemm_into, csd_gemm_into_on,
+    csd_gemm_scalar_on, csd_gemm_threads, CsdStats, PackedCsdTensor,
 };
 pub use pool::{Pool, PoolStats};
 pub use qconv::{
-    csd_conv, csd_conv_into, csd_conv_scalar_into, fconv_into, qconv, qconv_into,
-    qconv_scalar_into,
+    csd_conv, csd_conv_i16_into, csd_conv_i16_scalar_into, csd_conv_into, csd_conv_scalar_into,
+    fconv_into, qconv, qconv_i16_into, qconv_i16_scalar_into, qconv_into, qconv_scalar_into,
 };
 pub use qgemm::{
-    qgemm, qgemm2, qgemm2_into, qgemm2_into_on, qgemm2_qt, qgemm2_scalar_on, qgemm2_threads,
-    qgemm_qt, PackedQTensor, PackedQTensorV2,
+    qgemm, qgemm2, qgemm2_i16_into_on, qgemm2_i16_scalar_on, qgemm2_into, qgemm2_into_on,
+    qgemm2_qt, qgemm2_scalar_on, qgemm2_threads, qgemm_qt, PackedQTensor, PackedQTensorV2,
 };
 
 /// Decide how many band workers a row-parallel kernel should use: one
@@ -118,7 +135,9 @@ pub fn threads_for_rows(m: usize, total_ops: usize, par_threshold: usize) -> usi
 
 /// One pre-split row band awaiting pickup by a pool job: `(first_row,
 /// out_band, x_band)`, taken exactly once by the job that owns the index.
-type BandPart<'a> = std::sync::Mutex<Option<(usize, &'a mut [f32], &'a [f32])>>;
+/// Generic over the activation element (`f32` for the float path, `i16`
+/// for the fixed-point datapath) — the output accumulator stays f32.
+type BandPart<'a, T> = std::sync::Mutex<Option<(usize, &'a mut [f32], &'a [T])>>;
 
 /// Split `out` (`m` rows of `out_cols`) and `x` (`m` rows of `x_cols`) into
 /// matching row bands and run `band(first_row, out_band, x_band)` on each,
@@ -138,6 +157,42 @@ pub fn for_each_row_band_on<F>(
 ) where
     F: Fn(usize, &mut [f32], &[f32]) + Sync,
 {
+    for_each_row_band_t_on(pool, out, x, m, x_cols, out_cols, nthreads, band)
+}
+
+/// [`for_each_row_band_on`] for i16 activation rows — the band splitter of
+/// the integer-datapath kernels (`qgemm2_i16_into_on`,
+/// `csd_gemm_i16_into_on`).  Identical banding, so the integer kernels
+/// inherit the same bitwise serial-vs-pooled guarantee.
+#[allow(clippy::too_many_arguments)]
+pub fn for_each_row_band_i16_on<F>(
+    pool: &Pool,
+    out: &mut [f32],
+    x: &[i16],
+    m: usize,
+    x_cols: usize,
+    out_cols: usize,
+    nthreads: usize,
+    band: F,
+) where
+    F: Fn(usize, &mut [f32], &[i16]) + Sync,
+{
+    for_each_row_band_t_on(pool, out, x, m, x_cols, out_cols, nthreads, band)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn for_each_row_band_t_on<T: Sync, F>(
+    pool: &Pool,
+    out: &mut [f32],
+    x: &[T],
+    m: usize,
+    x_cols: usize,
+    out_cols: usize,
+    nthreads: usize,
+    band: F,
+) where
+    F: Fn(usize, &mut [f32], &[T]) + Sync,
+{
     if m == 0 {
         return;
     }
@@ -151,7 +206,7 @@ pub fn for_each_row_band_on<F>(
         band(0, out, x);
         return;
     }
-    let parts: Vec<BandPart> = out
+    let parts: Vec<BandPart<T>> = out
         .chunks_mut(rows_per_band * out_cols)
         .zip(x.chunks(rows_per_band * x_cols))
         .enumerate()
@@ -211,6 +266,16 @@ impl LayerPeak {
         self.act_bytes = self.act_bytes.max(act_elems * b);
     }
 
+    /// Fold an integer-path kernel call's staging sizes (in i16 elements)
+    /// into the peak — half the bytes per element of the f32 path, which is
+    /// exactly the arena saving the fixed-point datapath buys.
+    pub(crate) fn grow_i16(&mut self, patch_elems: usize, pad_elems: usize, act_elems: usize) {
+        let b = std::mem::size_of::<i16>();
+        self.patch_bytes = self.patch_bytes.max(patch_elems * b);
+        self.pad_bytes = self.pad_bytes.max(pad_elems * b);
+        self.act_bytes = self.act_bytes.max(act_elems * b);
+    }
+
     fn merge(&mut self, other: LayerPeak) {
         self.patch_bytes = self.patch_bytes.max(other.patch_bytes);
         self.pad_bytes = self.pad_bytes.max(other.pad_bytes);
@@ -232,6 +297,18 @@ pub struct Scratch {
     pub act_a: Vec<f32>,
     /// Activation pong buffer (conv / dense outputs before pooling).
     pub act_b: Vec<f32>,
+    /// Fixed-point twin of [`Scratch::act_a`]: quantized layer inputs /
+    /// pooled outputs on the integer datapath (i16 at the layer's
+    /// calibrated Q-format).
+    pub qact_a: Vec<i16>,
+    /// Fixed-point twin of [`Scratch::act_b`]: quantized conv / dense
+    /// outputs before pooling.
+    pub qact_b: Vec<i16>,
+    /// Fixed-point twin of [`Scratch::patches`]: i16 im2col band slabs.
+    pub qpatches: Vec<i16>,
+    /// Fixed-point twin of [`Scratch::padded`]: i16 SAME-conv zero-pad
+    /// staging.
+    pub qpadded: Vec<i16>,
     pub stats: ScratchStats,
     /// Staging sizes of the most recent kernel call(s), pending attribution
     /// to a layer by [`Scratch::note_layer`].
@@ -276,6 +353,22 @@ pub fn ensure_cap(buf: &mut Vec<f32>, len: usize, stats: &mut ScratchStats) {
         stats.allocs += 1;
     }
     buf.resize(len, 0.0);
+}
+
+/// [`ensure_cap`] for the i16 twin buffers of the integer datapath — same
+/// warm-hit/grow accounting in the same [`ScratchStats`], so the
+/// alloc-freeze assertion covers both element widths.
+pub fn ensure_cap_i16(buf: &mut Vec<i16>, len: usize, stats: &mut ScratchStats) {
+    if buf.len() >= len {
+        stats.reuses += 1;
+        return;
+    }
+    if buf.capacity() >= len {
+        stats.reuses += 1;
+    } else {
+        stats.allocs += 1;
+    }
+    buf.resize(len, 0);
 }
 
 #[cfg(test)]
@@ -360,6 +453,40 @@ mod tests {
         ensure_cap(&mut buf, 32, &mut stats);
         ensure_cap(&mut buf, 64, &mut stats);
         assert_eq!((stats.allocs, stats.reuses), (1, 2), "warm buffer must not realloc");
+    }
+
+    #[test]
+    fn ensure_cap_i16_counts_reuse() {
+        let mut stats = ScratchStats::default();
+        let mut buf: Vec<i16> = Vec::new();
+        ensure_cap_i16(&mut buf, 64, &mut stats);
+        assert_eq!((stats.allocs, stats.reuses), (1, 0));
+        assert_eq!(buf.len(), 64);
+        ensure_cap_i16(&mut buf, 32, &mut stats);
+        ensure_cap_i16(&mut buf, 64, &mut stats);
+        assert_eq!((stats.allocs, stats.reuses), (1, 2), "warm i16 buffer must not realloc");
+    }
+
+    #[test]
+    fn i16_row_bands_cover_all_rows_once() {
+        let (m, xc, oc) = (7, 3, 2);
+        let x: Vec<i16> = (0..(m * xc) as i16).collect();
+        let pool = Pool::new(3);
+        let mut out = vec![0.0f32; m * oc];
+        for_each_row_band_i16_on(&pool, &mut out, &x, m, xc, oc, 3, |row0, ob, xb| {
+            let rows = ob.len() / oc;
+            assert_eq!(xb.len(), rows * xc);
+            for i in 0..rows {
+                for j in 0..oc {
+                    ob[i * oc + j] += (row0 + i) as f32 + xb[i * xc] as f32;
+                }
+            }
+        });
+        for i in 0..m {
+            for j in 0..oc {
+                assert_eq!(out[i * oc + j], (i + i * xc) as f32, "row {i} col {j}");
+            }
+        }
     }
 
     #[test]

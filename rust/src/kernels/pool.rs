@@ -38,9 +38,14 @@
 //!   default, see [`Pool::set_pinned`] and `PALLAS_POOL_PIN`) band `b`
 //!   prefers worker `(b - 1) % workers` and falls back to any idle worker
 //!   only when the preferred one is busy; [`PoolStats::pin_hits`] /
-//!   [`PoolStats::pin_misses`] count how often locality held.  Only the
-//!   executing thread changes — banding, and therefore every reduction
-//!   order, is untouched, so pinned and redealt runs are bitwise identical.
+//!   [`PoolStats::pin_misses`] count how often locality held.  A small
+//!   affinity table additionally *persists* the band→worker assignment
+//!   across layers and warm forwards: once a band lands anywhere — static
+//!   seat or fallback — later dispatches prefer that same worker, so one
+//!   transient collision does not strand a band's rows on a cold cache for
+//!   the rest of the serving session.  Only the executing thread changes —
+//!   banding, and therefore every reduction order, is untouched, so pinned
+//!   and redealt runs are bitwise identical.
 //! * **Sizing.**  The lazily-initialized global pool
 //!   ([`Pool::global`], via `OnceLock`) sizes itself to
 //!   `available_parallelism` capped at [`MAX_POOL_THREADS`].  The
@@ -52,7 +57,7 @@
 //!   boot rather than run at a silently-wrong width.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -60,6 +65,15 @@ use std::thread::JoinHandle;
 /// this crate serves see diminishing returns, and it bounds the damage of a
 /// typo'd `PALLAS_POOL_THREADS`.
 pub const MAX_POOL_THREADS: usize = 16;
+
+/// Size of the cross-forward band→worker affinity table.  Band lease slot
+/// `i` remembers the worker it last ran on in `affinity[i % AFFINITY_BANDS]`
+/// so the *next* dispatch of the same band layout — the next layer of the
+/// same forward, or the next warm forward entirely — prefers that worker
+/// again even when the static `i % workers` seat was busy the first time.
+/// Kernel dispatches band far fewer than 256 ways, so wrapping never aliases
+/// in practice.
+const AFFINITY_BANDS: usize = 256;
 
 /// One posted band job: the type-erased band closure and the band index the
 /// worker must run.  The `'static` is a lie told by [`Pool::run_bands`]'s
@@ -133,6 +147,14 @@ pub struct Pool {
     /// that worker is idle, so the same row ranges land on the same worker
     /// across layers and warm forwards (see [`Pool::set_pinned`]).
     pinned: std::sync::atomic::AtomicBool,
+    /// Cross-forward affinity memory: `affinity[i % AFFINITY_BANDS]` holds
+    /// the worker lease slot `i` actually ran on last time (or `usize::MAX`
+    /// before the first dispatch).  In pinned mode the remembered worker
+    /// *is* the preferred worker, so a band that once fell back to an
+    /// arbitrary idle worker keeps returning to that same worker — and its
+    /// warmed cache lines — in every later layer and warm forward, instead
+    /// of oscillating back toward the static seat.
+    affinity: Vec<AtomicUsize>,
     stats: Stats,
     handles: Mutex<Vec<JoinHandle<()>>>,
 }
@@ -227,6 +249,7 @@ impl Pool {
             slots: (0..nworkers).map(|_| std::sync::Arc::new(Slot::default())).collect(),
             free: Mutex::new((0..nworkers).collect()),
             pinned: std::sync::atomic::AtomicBool::new(true),
+            affinity: (0..AFFINITY_BANDS).map(|_| AtomicUsize::new(usize::MAX)).collect(),
             stats: Stats {
                 spawns: AtomicU64::new(0),
                 wakeups: AtomicU64::new(0),
@@ -262,12 +285,14 @@ impl Pool {
 
     /// Enable or disable sticky band pinning (default: enabled; the global
     /// pool additionally honors `PALLAS_POOL_PIN=0`).  With pinning on,
-    /// [`Pool::run_bands`] leases band `b` to worker `(b - 1) % workers`
+    /// [`Pool::run_bands`] leases band `b` to the worker it last ran on
+    /// (the affinity table; `(b - 1) % workers` before any history exists)
     /// whenever that worker is idle, so a forward pass that dispatches the
-    /// same band layout layer after layer keeps each row range on the same
-    /// worker — and its slice of activations in that worker's cache.  The
-    /// band *partitioning* never changes, only which thread executes a
-    /// band, so pinned and redealt runs are bitwise identical.
+    /// same band layout layer after layer — and forward after forward —
+    /// keeps each row range on the same worker, and its slice of
+    /// activations in that worker's cache.  The band *partitioning* never
+    /// changes, only which thread executes a band, so pinned and redealt
+    /// runs are bitwise identical.
     pub fn set_pinned(&self, on: bool) {
         self.pinned.store(on, Ordering::Relaxed);
     }
@@ -324,15 +349,32 @@ impl Pool {
                 let mut leased = vec![usize::MAX; take];
                 let mut hits = 0u64;
                 for (i, w) in leased.iter_mut().enumerate() {
-                    let pref = i % self.slots.len();
+                    // prefer the worker this slot actually ran on last time
+                    // (cross-forward affinity); before any history exists
+                    // that is the static seat `i % workers`, so an
+                    // uncontended pool behaves exactly as pure static
+                    // pinning did
+                    let remembered = self.affinity[i % AFFINITY_BANDS].load(Ordering::Relaxed);
+                    let pref = if remembered < self.slots.len() {
+                        remembered
+                    } else {
+                        i % self.slots.len()
+                    };
                     if let Some(pos) = free.iter().position(|&f| f == pref) {
                         free.swap_remove(pos);
                         *w = pref;
                         hits += 1;
+                        self.affinity[i % AFFINITY_BANDS].store(pref, Ordering::Relaxed);
                     }
                 }
-                for w in leased.iter_mut().filter(|w| **w == usize::MAX) {
+                for (i, w) in
+                    leased.iter_mut().enumerate().filter(|(_, w)| **w == usize::MAX)
+                {
                     *w = free.pop().expect("take <= free.len() idle workers");
+                    // remember the fallback too: next dispatch of this band
+                    // layout goes straight back to the worker whose cache
+                    // this band just warmed
+                    self.affinity[i % AFFINITY_BANDS].store(*w, Ordering::Relaxed);
                 }
                 self.stats.pin_hits.fetch_add(hits, Ordering::Relaxed);
                 self.stats.pin_misses.fetch_add(take as u64 - hits, Ordering::Relaxed);
@@ -552,6 +594,51 @@ mod tests {
         // preferred worker: 3 leased bands per call, all hits
         assert_eq!(s.pin_hits, 60, "every lease must hit its preferred worker");
         assert_eq!(s.pin_misses, 0);
+    }
+
+    #[test]
+    fn affinity_persists_a_fallback_assignment_across_forwards() {
+        // width-4 pool: 3 workers, run_bands(4) leases 3 bands.  Steal
+        // worker 0 from the free list so lease slot 0's static seat is
+        // "busy" for the first dispatch, then watch the affinity table
+        // re-route later forwards to the worker the band actually warmed.
+        let pool = Pool::new(4);
+        let stolen = {
+            let mut free = pool.free.lock().unwrap();
+            let pos = free.iter().position(|&w| w == 0).unwrap();
+            free.swap_remove(pos)
+        };
+        assert_eq!(stolen, 0);
+
+        // forward A: slot 0 wants worker 0 (no history) -> busy, falls back
+        // to worker 2 and remembers it; slot 1 hits worker 1.  take = 2.
+        pool.run_bands(4, &|_| {});
+        let a = pool.stats();
+        assert_eq!((a.pin_hits, a.pin_misses), (1, 1), "slot 0 must miss its cold seat");
+        assert_eq!(pool.affinity[0].load(Ordering::Relaxed), 2, "fallback must be remembered");
+        assert_eq!(pool.affinity[1].load(Ordering::Relaxed), 1);
+
+        // worker 0 comes back; forward B leases all 3 slots.  Slot 0 now
+        // *prefers* worker 2 (affinity) and hits; slot 1 hits worker 1;
+        // slot 2's static seat 2 is taken by slot 0, so it falls back to
+        // worker 0 and remembers that.
+        pool.free.lock().unwrap().push(stolen);
+        pool.run_bands(4, &|_| {});
+        let b = pool.stats();
+        assert_eq!((b.pin_hits - a.pin_hits, b.pin_misses - a.pin_misses), (2, 1));
+        assert_eq!(pool.affinity[2].load(Ordering::Relaxed), 0);
+
+        // forward C: the table now covers all three slots (2, 1, 0) — a
+        // permutation of the workers — so every lease is a hit and the
+        // assignment is stable from here on.
+        pool.run_bands(4, &|_| {});
+        let c = pool.stats();
+        assert_eq!((c.pin_hits - b.pin_hits, c.pin_misses - b.pin_misses), (3, 0));
+        assert_eq!(
+            [0, 1, 2].map(|s| pool.affinity[s].load(Ordering::Relaxed)),
+            [2, 1, 0],
+            "the realized band->worker permutation must be frozen"
+        );
     }
 
     #[test]

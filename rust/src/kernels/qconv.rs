@@ -24,9 +24,9 @@
 use anyhow::{bail, Result};
 
 use super::blocked;
-use super::csd::{csd_band, PackedCsdTensor, CSD_PAR_THRESHOLD};
-use super::qgemm::{qgemm2_band, PackedQTensorV2, QGEMM_PAR_THRESHOLD};
-use super::{ensure_cap, threads_for_rows, LayerPeak, Pool, Scratch, ScratchStats};
+use super::csd::{csd_band, csd_band_i16, PackedCsdTensor, CSD_PAR_THRESHOLD};
+use super::qgemm::{qgemm2_band, qgemm2_band_i16, PackedQTensorV2, QGEMM_PAR_THRESHOLD};
+use super::{ensure_cap, ensure_cap_i16, threads_for_rows, LayerPeak, Pool, Scratch, ScratchStats};
 use crate::tensor::ops;
 use crate::tensor::Tensor;
 
@@ -88,29 +88,111 @@ fn geometry(
     })
 }
 
+/// The element domain of the conv activation datapath — `f32` or raw `i16`.
+/// The trait routes each domain's structural staging primitives and its
+/// [`Scratch`] arena pair, so the one band/chunk driver below serves both
+/// the float pipeline and the calibrated integer pipeline without touching
+/// the f32 code paths (the f32 impl delegates to the exact functions the
+/// driver called before it was generic).
+trait ConvElem: Copy + Default + Sync {
+    fn ensure(buf: &mut Vec<Self>, len: usize, stats: &mut ScratchStats);
+    fn stage_patch_rows(
+        xd: &[Self],
+        dims: (usize, usize, usize, usize),
+        kh: usize,
+        kw: usize,
+        row0: usize,
+        nrows: usize,
+        dst: &mut [Self],
+    );
+    fn pad_into(xd: &[Self], dims: (usize, usize, usize, usize), p: usize, dst: &mut [Self]);
+    fn grow_peak(last: &mut LayerPeak, patch_elems: usize, pad_elems: usize, act_elems: usize);
+    /// This domain's `(patches, padded, stats, last)` arena fields, split
+    /// out of the one `&mut Scratch` borrow.
+    fn arena(
+        scratch: &mut Scratch,
+    ) -> (&mut Vec<Self>, &mut Vec<Self>, &mut ScratchStats, &mut LayerPeak);
+}
+
+impl ConvElem for f32 {
+    fn ensure(buf: &mut Vec<f32>, len: usize, stats: &mut ScratchStats) {
+        ensure_cap(buf, len, stats)
+    }
+    fn stage_patch_rows(
+        xd: &[f32],
+        dims: (usize, usize, usize, usize),
+        kh: usize,
+        kw: usize,
+        row0: usize,
+        nrows: usize,
+        dst: &mut [f32],
+    ) {
+        ops::im2col_rows_into(xd, dims, kh, kw, row0, nrows, dst)
+    }
+    fn pad_into(xd: &[f32], dims: (usize, usize, usize, usize), p: usize, dst: &mut [f32]) {
+        ops::pad_hw_into(xd, dims, p, dst)
+    }
+    fn grow_peak(last: &mut LayerPeak, patch_elems: usize, pad_elems: usize, act_elems: usize) {
+        last.grow(patch_elems, pad_elems, act_elems)
+    }
+    fn arena(
+        s: &mut Scratch,
+    ) -> (&mut Vec<f32>, &mut Vec<f32>, &mut ScratchStats, &mut LayerPeak) {
+        (&mut s.patches, &mut s.padded, &mut s.stats, &mut s.last)
+    }
+}
+
+impl ConvElem for i16 {
+    fn ensure(buf: &mut Vec<i16>, len: usize, stats: &mut ScratchStats) {
+        ensure_cap_i16(buf, len, stats)
+    }
+    fn stage_patch_rows(
+        xd: &[i16],
+        dims: (usize, usize, usize, usize),
+        kh: usize,
+        kw: usize,
+        row0: usize,
+        nrows: usize,
+        dst: &mut [i16],
+    ) {
+        ops::im2col_rows_i16_into(xd, dims, kh, kw, row0, nrows, dst)
+    }
+    fn pad_into(xd: &[i16], dims: (usize, usize, usize, usize), p: usize, dst: &mut [i16]) {
+        ops::pad_hw_i16_into(xd, dims, p, dst)
+    }
+    fn grow_peak(last: &mut LayerPeak, patch_elems: usize, pad_elems: usize, act_elems: usize) {
+        last.grow_i16(patch_elems, pad_elems, act_elems)
+    }
+    fn arena(
+        s: &mut Scratch,
+    ) -> (&mut Vec<i16>, &mut Vec<i16>, &mut ScratchStats, &mut LayerPeak) {
+        (&mut s.qpatches, &mut s.qpadded, &mut s.stats, &mut s.last)
+    }
+}
+
 /// Stage the zero-padded input into the `padded` scratch buffer (or pass
 /// the input through untouched for VALID convs).
-fn staged_input<'a>(
-    xd: &'a [f32],
+fn staged_input<'a, T: ConvElem>(
+    xd: &'a [T],
     g: &Geom,
-    padded: &'a mut Vec<f32>,
+    padded: &'a mut Vec<T>,
     stats: &mut ScratchStats,
-) -> &'a [f32] {
+) -> &'a [T] {
     if g.pad == 0 {
         return xd;
     }
     let plen = g.b * g.h2 * g.w2 * g.c;
-    ensure_cap(padded, plen, stats);
+    T::ensure(padded, plen, stats);
     let pd = &mut padded[..plen];
-    pd.fill(0.0);
-    ops::pad_hw_into(xd, (g.b, g.h, g.w, g.c), g.pad, pd);
+    pd.fill(T::default());
+    T::pad_into(xd, (g.b, g.h, g.w, g.c), g.pad, pd);
     &padded[..plen]
 }
 
 /// One pre-split conv band awaiting pickup by a pool job: `(first_row,
 /// out_band, patch_slab)`, taken exactly once by the job that owns the
 /// index.
-type ConvBandPart<'a> = std::sync::Mutex<Option<(usize, &'a mut [f32], &'a mut [f32])>>;
+type ConvBandPart<'a, T> = std::sync::Mutex<Option<(usize, &'a mut [f32], &'a mut [T])>>;
 
 /// The shared band/chunk driver: split the `[B*H'*W']` patch-row space into
 /// row bands, one persistent-pool job each; within a band, alternate
@@ -119,18 +201,19 @@ type ConvBandPart<'a> = std::sync::Mutex<Option<(usize, &'a mut [f32], &'a mut [
 /// out chunk).  `cost = (work_per_row, par_threshold)` feeds band dispatch;
 /// `last` collects the staging high-water for layer telemetry.
 #[allow(clippy::too_many_arguments)] // geometry + 3 disjoint scratch fields + pool, by design
-fn conv_driver<K>(
+fn conv_driver<T, K>(
     pool: &Pool,
-    xin: &[f32],
+    xin: &[T],
     g: &Geom,
     cost: (usize, usize),
-    patches: &mut Vec<f32>,
+    patches: &mut Vec<T>,
     stats: &mut ScratchStats,
     last: &mut LayerPeak,
     out: &mut [f32],
     kernel: &K,
 ) where
-    K: Fn(&mut [f32], &[f32]) + Sync,
+    T: ConvElem,
+    K: Fn(&mut [f32], &[T]) + Sync,
 {
     debug_assert_eq!(out.len(), g.rows * g.oc);
     if g.rows == 0 || g.oc == 0 {
@@ -138,16 +221,18 @@ fn conv_driver<K>(
     }
     let nthreads =
         threads_for_rows(g.rows, g.rows.saturating_mul(cost.0), cost.1).min(pool.width());
-    ensure_cap(patches, nthreads * CHUNK * g.kcols, stats);
-    last.grow(nthreads * CHUNK * g.kcols, 0, out.len());
+    T::ensure(patches, nthreads * CHUNK * g.kcols, stats);
+    // patch slabs are T-wide; the output accumulator is always f32
+    T::grow_peak(last, nthreads * CHUNK * g.kcols, 0, 0);
+    last.grow(0, 0, out.len());
     let (kcols, oc) = (g.kcols, g.oc);
-    let run_band = |row0: usize, oband: &mut [f32], pband: &mut [f32]| {
+    let run_band = |row0: usize, oband: &mut [f32], pband: &mut [T]| {
         let band_rows = oband.len() / oc;
         let mut done = 0;
         while done < band_rows {
             let nr = CHUNK.min(band_rows - done);
             let slab = &mut pband[..nr * kcols];
-            ops::im2col_rows_into(xin, (g.b, g.h2, g.w2, g.c), g.kh, g.kw, row0 + done, nr, slab);
+            T::stage_patch_rows(xin, (g.b, g.h2, g.w2, g.c), g.kh, g.kw, row0 + done, nr, slab);
             let ochunk = &mut oband[done * oc..(done + nr) * oc];
             ochunk.fill(0.0);
             kernel(ochunk, slab);
@@ -160,7 +245,7 @@ fn conv_driver<K>(
     }
     let rpb = g.rows.div_ceil(nthreads);
     let nbands = g.rows.div_ceil(rpb);
-    let parts: Vec<ConvBandPart> = out
+    let parts: Vec<ConvBandPart<T>> = out
         .chunks_mut(rpb * oc)
         .zip(patches.chunks_mut(CHUNK * kcols))
         .enumerate()
@@ -178,9 +263,9 @@ fn conv_driver<K>(
 /// buffers, and run the band/chunk driver with the given band `kernel`.
 /// `what` names the caller in errors; `cost` feeds thread dispatch.
 #[allow(clippy::too_many_arguments)] // geometry + 2 packed fields + scratch + kernel, by design
-fn packed_conv_into<K>(
+fn packed_conv_into<T, K>(
     pool: &Pool,
-    xd: &[f32],
+    xd: &[T],
     dims: (usize, usize, usize, usize),
     what: &str,
     shape: &[usize],
@@ -192,7 +277,8 @@ fn packed_conv_into<K>(
     kernel: &K,
 ) -> Result<(usize, usize, usize)>
 where
-    K: Fn(&mut [f32], &[f32]) + Sync,
+    T: ConvElem,
+    K: Fn(&mut [f32], &[T]) + Sync,
 {
     if shape.len() != 4 {
         bail!("{what}: packed weight must be [kh,kw,C,OC], got {shape:?}");
@@ -205,22 +291,13 @@ where
     if g.kcols != k {
         bail!("{what}: weight K={k} but window is {kh}x{kw}x{}", dims.3);
     }
-    ensure_cap(out, g.rows * g.oc, &mut scratch.stats);
+    let (patches, padded, stats, last) = T::arena(scratch);
+    ensure_cap(out, g.rows * g.oc, stats);
     if g.pad > 0 {
-        scratch.last.grow(0, g.b * g.h2 * g.w2 * g.c, 0);
+        T::grow_peak(last, 0, g.b * g.h2 * g.w2 * g.c, 0);
     }
-    let xin = staged_input(xd, &g, &mut scratch.padded, &mut scratch.stats);
-    conv_driver(
-        pool,
-        xin,
-        &g,
-        cost,
-        &mut scratch.patches,
-        &mut scratch.stats,
-        &mut scratch.last,
-        &mut out[..g.rows * g.oc],
-        kernel,
-    );
+    let xin = staged_input(xd, &g, padded, stats);
+    conv_driver(pool, xin, &g, cost, patches, stats, last, &mut out[..g.rows * g.oc], kernel);
     Ok((g.oh, g.ow, oc))
 }
 
@@ -278,6 +355,64 @@ pub fn qconv_scalar_into(
     )
 }
 
+/// Fused code-domain conv on the integer datapath: raw-i16 activations
+/// `xq [B,H,W,C]` (at the layer's calibrated Q-format, reciprocal scale
+/// `dequant_in`) ⊛ packed `[kh,kw,C,OC]` → f32 `out [B*H'*W'*OC]`.  Same
+/// band/chunk arena driver as [`qconv_into`], staging i16 patch slabs in
+/// `scratch.qpatches` / `scratch.qpadded` (half the arena bytes), plane
+/// sums on the SWAR i16 gather.  Returns `(H', W', OC)`.
+pub fn qconv_i16_into(
+    pool: &Pool,
+    xq: &[i16],
+    dims: (usize, usize, usize, usize),
+    p: &PackedQTensorV2,
+    dequant_in: f32,
+    same: bool,
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+) -> Result<(usize, usize, usize)> {
+    packed_conv_into(
+        pool,
+        xq,
+        dims,
+        "qconv",
+        &p.shape,
+        p.k,
+        (p.ops_per_row(), QGEMM_PAR_THRESHOLD),
+        same,
+        scratch,
+        out,
+        &|o: &mut [f32], slab: &[i16]| qgemm2_band_i16(o, slab, p, dequant_in),
+    )
+}
+
+/// [`qconv_i16_into`] with plane sums on the scalar i16 gather oracle —
+/// bitwise equal to the SWAR form on every input.
+pub fn qconv_i16_scalar_into(
+    pool: &Pool,
+    xq: &[i16],
+    dims: (usize, usize, usize, usize),
+    p: &PackedQTensorV2,
+    dequant_in: f32,
+    same: bool,
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+) -> Result<(usize, usize, usize)> {
+    packed_conv_into(
+        pool,
+        xq,
+        dims,
+        "qconv",
+        &p.shape,
+        p.k,
+        (p.ops_per_row(), QGEMM_PAR_THRESHOLD),
+        same,
+        scratch,
+        out,
+        &|o: &mut [f32], slab: &[i16]| super::qgemm::qgemm2_band_i16_scalar(o, slab, p, dequant_in),
+    )
+}
+
 /// Fused CSD-domain conv: `x [B,H,W,C]` (flat slice) ⊛ truncated-CSD packed
 /// `[kh,kw,C,OC]` → `out [B*H'*W'*OC]` (grown in place, never reallocated
 /// once warm) — the same band/chunk arena driver as [`qconv_into`] with the
@@ -330,6 +465,61 @@ pub fn csd_conv_scalar_into(
         scratch,
         out,
         &|o: &mut [f32], slab: &[f32]| super::csd::csd_band_scalar(o, slab, p),
+    )
+}
+
+/// Fused CSD-domain conv on the integer datapath: raw-i16 activations ⊛
+/// truncated-CSD packed `[kh,kw,C,OC]` → f32 `out` — shift-and-add digit
+/// planes over SWAR i16 gathers, i16 arena staging.  Returns `(H', W', OC)`.
+pub fn csd_conv_i16_into(
+    pool: &Pool,
+    xq: &[i16],
+    dims: (usize, usize, usize, usize),
+    p: &PackedCsdTensor,
+    dequant_in: f32,
+    same: bool,
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+) -> Result<(usize, usize, usize)> {
+    packed_conv_into(
+        pool,
+        xq,
+        dims,
+        "csd_conv",
+        &p.shape,
+        p.k,
+        (p.ops_per_row(), CSD_PAR_THRESHOLD),
+        same,
+        scratch,
+        out,
+        &|o: &mut [f32], slab: &[i16]| csd_band_i16(o, slab, p, dequant_in),
+    )
+}
+
+/// [`csd_conv_i16_into`] with digit-plane sums on the scalar i16 gather
+/// oracle — bitwise equal to the SWAR form on every input.
+pub fn csd_conv_i16_scalar_into(
+    pool: &Pool,
+    xq: &[i16],
+    dims: (usize, usize, usize, usize),
+    p: &PackedCsdTensor,
+    dequant_in: f32,
+    same: bool,
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+) -> Result<(usize, usize, usize)> {
+    packed_conv_into(
+        pool,
+        xq,
+        dims,
+        "csd_conv",
+        &p.shape,
+        p.k,
+        (p.ops_per_row(), CSD_PAR_THRESHOLD),
+        same,
+        scratch,
+        out,
+        &|o: &mut [f32], slab: &[i16]| super::csd::csd_band_i16_scalar(o, slab, p, dequant_in),
     )
 }
 
@@ -543,6 +733,78 @@ mod tests {
         }
         assert_eq!(scratch.stats.allocs, cold_allocs, "warm passes must not allocate");
         assert!(scratch.stats.reuses >= 9, "stats: {:?}", scratch.stats);
+    }
+
+    #[test]
+    fn i16_conv_bitwise_equals_f32_conv_on_integer_activations() {
+        // Integer activations at dequant 1.0: the i16 driver stages the same
+        // values through the same bands and chunks, every plane sum is exact
+        // in both domains, and `alpha * 1.0` is exact — so both the code-
+        // domain and CSD-domain integer convs must be bitwise equal to their
+        // f32 twins.
+        let mut r = Rng::new(23);
+        let (wshape, xs) = (vec![3usize, 3, 3, 8], vec![2usize, 12, 12, 3]);
+        let nw: usize = wshape.iter().product();
+        let w = gauss(&mut r, nw, 0.3);
+        let group = crate::quant::vectorize::Grouping::nearest_divisor(&wshape, 8).unwrap();
+        let qt = quantize(&w, &wshape, group, 4, AssignMode::SigmaSearch).unwrap();
+        let pq = PackedQTensorV2::pack(&qt).unwrap();
+        let cq = crate::device::CsdQuality {
+            fmt: crate::hw::fixedpoint::Format::Q16_14,
+            max_digits: 2,
+        };
+        let pc = PackedCsdTensor::pack(&w, &wshape, cq).unwrap();
+        let nx: usize = xs.iter().product();
+        let dims = (xs[0], xs[1], xs[2], xs[3]);
+        let pool = Pool::global();
+        for same in [false, true] {
+            let xd: Vec<f32> = (0..nx).map(|_| r.range_i64(-8, 8) as f32).collect();
+            let xq: Vec<i16> = xd.iter().map(|&v| v as i16).collect();
+            let mut sf = Scratch::new();
+            let mut si = Scratch::new();
+            let (mut of, mut oi) = (Vec::new(), Vec::new());
+            let shp = qconv_into(pool, &xd, dims, &pq, same, &mut sf, &mut of).unwrap();
+            let shpi = qconv_i16_into(pool, &xq, dims, &pq, 1.0, same, &mut si, &mut oi).unwrap();
+            assert_eq!(shp, shpi);
+            let n = dims.0 * shp.0 * shp.1 * shp.2;
+            assert_eq!(&oi[..n], &of[..n], "qconv same={same} diverged");
+            let (mut cf, mut ci) = (Vec::new(), Vec::new());
+            let xt: Vec<f32> = (0..nx).map(|_| r.range_i64(-1, 1) as f32).collect();
+            let xtq: Vec<i16> = xt.iter().map(|&v| v as i16).collect();
+            let shp = csd_conv_into(pool, &xt, dims, &pc, same, &mut sf, &mut cf).unwrap();
+            let shpi =
+                csd_conv_i16_into(pool, &xtq, dims, &pc, 1.0, same, &mut si, &mut ci).unwrap();
+            assert_eq!(shp, shpi);
+            let n = dims.0 * shp.0 * shp.1 * shp.2;
+            assert_eq!(&ci[..n], &cf[..n], "csd_conv same={same} diverged");
+        }
+    }
+
+    #[test]
+    fn i16_conv_scratch_freezes_and_scalar_oracle_is_bitwise() {
+        let mut r = Rng::new(27);
+        let wshape = vec![3usize, 3, 8, 4];
+        let w = gauss(&mut r, 3 * 3 * 8 * 4, 0.3);
+        let qt = quantize(&w, &wshape, 8, 4, AssignMode::SigmaSearch).unwrap();
+        let p = PackedQTensorV2::pack(&qt).unwrap();
+        let dims = (2usize, 8usize, 8usize, 8usize);
+        let xq: Vec<i16> =
+            (0..2 * 8 * 8 * 8).map(|_| r.range_i64(-32768, 32767) as i16).collect();
+        let dq = 1.0f32 / 1024.0;
+        let pool = Pool::global();
+        let mut scratch = Scratch::new();
+        let mut out = Vec::new();
+        qconv_i16_into(pool, &xq, dims, &p, dq, true, &mut scratch, &mut out).unwrap();
+        let cold_allocs = scratch.stats.allocs;
+        assert!(cold_allocs > 0);
+        for _ in 0..3 {
+            qconv_i16_into(pool, &xq, dims, &p, dq, true, &mut scratch, &mut out).unwrap();
+        }
+        assert_eq!(scratch.stats.allocs, cold_allocs, "warm i16 passes must not allocate");
+        // SWAR gather vs scalar gather: integer sums, bitwise equal
+        let mut sout = Vec::new();
+        qconv_i16_scalar_into(pool, &xq, dims, &p, dq, true, &mut scratch, &mut sout).unwrap();
+        assert_eq!(out, sout, "i16 lane vs scalar conv diverged");
     }
 
     #[test]

@@ -314,6 +314,24 @@ pub(crate) fn qgemm2_band_scalar(out: &mut [f32], xb: &[f32], p: &PackedQTensorV
     qgemm2_band_with(out, xb, p, super::lanes::gather_sum_scalar)
 }
 
+/// The integer-activation serving band: i16 plane sums on the SWAR
+/// [`super::lanes::gather_sum_i16`] reduction (the fused-conv slab kernel of
+/// the integer datapath).
+pub(crate) fn qgemm2_band_i16(out: &mut [f32], xb: &[i16], p: &PackedQTensorV2, dequant_in: f32) {
+    qgemm2_band_i16_with(out, xb, p, dequant_in, super::lanes::gather_sum_i16)
+}
+
+/// The integer-activation scalar-oracle band — bitwise equal to
+/// [`qgemm2_band_i16`] on every input (integer sums are exact either way).
+pub(crate) fn qgemm2_band_i16_scalar(
+    out: &mut [f32],
+    xb: &[i16],
+    p: &PackedQTensorV2,
+    dequant_in: f32,
+) {
+    qgemm2_band_i16_with(out, xb, p, dequant_in, super::lanes::gather_sum_i16_scalar)
+}
+
 /// `out[M,OC] = x[M,K] @ packed` on the plane-packed layout (caller provides
 /// a zeroed `out` of exactly `m * OC`), row bands on the global worker pool.
 pub fn qgemm2_into(out: &mut [f32], xd: &[f32], m: usize, p: &PackedQTensorV2) {
@@ -355,6 +373,106 @@ pub fn qgemm2_scalar_on(
     let nthreads = super::threads_for_rows(m, total, QGEMM_PAR_THRESHOLD).min(pool.width());
     let band = |_: usize, ob: &mut [f32], xb: &[f32]| qgemm2_band_scalar(ob, xb, p);
     super::for_each_row_band_on(pool, out, xd, m, p.k, p.oc, nthreads, band);
+}
+
+/// One row band of the *integer-activation* v2 kernel: `xb` holds raw i16
+/// activations (the layer's calibrated fixed-point domain), and every plane
+/// sum is an exact i64 integer reduction — the serving form routes through
+/// [`super::lanes::gather_sum_i16`], i.e. the SWAR `sum_i16` word loop.
+/// The six plane totals combine with integer adds only (doublings as
+/// self-adds, mirroring the f32 band), and the **one multiply per
+/// (group, column) cell** folds the cell's alpha together with the
+/// activation dequant-rescale `dequant_in = 2^-frac`: the f32 accumulator
+/// sees `(alpha * dequant_in) * t` with `t` exact.  Because both the lane
+/// and the scalar plane sums are integer-exact, the two orders are bitwise
+/// equal at every length — stronger than the f32 band's ULP bound.
+#[inline(always)]
+fn qgemm2_band_i16_with<S: Fn(&[u16], &[i16]) -> i64>(
+    out: &mut [f32],
+    xb: &[i16],
+    p: &PackedQTensorV2,
+    dequant_in: f32,
+    plane_sum: S,
+) {
+    let (k, oc) = (p.k, p.oc);
+    if oc == 0 {
+        return;
+    }
+    let g = k / p.group;
+    let rows = out.len() / oc;
+    for gi in 0..g {
+        let cell0 = gi * oc;
+        let x0 = gi * p.group;
+        for j in 0..oc {
+            let b = &p.bounds[(cell0 + j) * PLANES..(cell0 + j) * PLANES + PLANES + 1];
+            // one dequant-rescale per cell, fused into the existing alpha
+            let scale = p.scalars[cell0 + j] * dequant_in;
+            let seg = [
+                &p.offsets[b[0] as usize..b[1] as usize],
+                &p.offsets[b[1] as usize..b[2] as usize],
+                &p.offsets[b[2] as usize..b[3] as usize],
+                &p.offsets[b[3] as usize..b[4] as usize],
+                &p.offsets[b[4] as usize..b[5] as usize],
+                &p.offsets[b[5] as usize..b[6] as usize],
+            ];
+            for i in 0..rows {
+                let xg = &xb[i * k + x0..i * k + x0 + p.group];
+                // integer combine: (s1-m1) + 2(s2-m2) + 4(s4-m4), exact
+                let t1 = plane_sum(seg[0], xg) - plane_sum(seg[3], xg);
+                let mut t2 = plane_sum(seg[1], xg) - plane_sum(seg[4], xg);
+                t2 += t2;
+                let mut t4 = plane_sum(seg[2], xg) - plane_sum(seg[5], xg);
+                t4 += t4;
+                t4 += t4;
+                out[i * oc + j] += scale * ((t1 + t2 + t4) as f32);
+            }
+        }
+    }
+}
+
+/// `out[M,OC] += dequant(xq[M,K]) @ packed` with i16 activations: the
+/// integer-datapath serving kernel, plane sums on the SWAR
+/// [`super::lanes::gather_sum_i16`] reduction, row bands on `pool`.
+/// `dequant_in` is the activation format's reciprocal scale
+/// ([`super::calib::dequant_scale`]).
+pub fn qgemm2_i16_into_on(
+    pool: &super::Pool,
+    out: &mut [f32],
+    xq: &[i16],
+    m: usize,
+    p: &PackedQTensorV2,
+    dequant_in: f32,
+) {
+    debug_assert_eq!(out.len(), m * p.oc);
+    debug_assert_eq!(xq.len(), m * p.k);
+    let total = m.saturating_mul(p.ops_per_row());
+    let nthreads = super::threads_for_rows(m, total, QGEMM_PAR_THRESHOLD).min(pool.width());
+    let band = |_: usize, ob: &mut [f32], xb: &[i16]| {
+        qgemm2_band_i16_with(ob, xb, p, dequant_in, super::lanes::gather_sum_i16)
+    };
+    super::for_each_row_band_i16_on(pool, out, xq, m, p.k, p.oc, nthreads, band);
+}
+
+/// [`qgemm2_i16_into_on`] with every plane sum on the scalar gather oracle
+/// ([`super::lanes::gather_sum_i16_scalar`]) — the differential baseline.
+/// Integer reductions are exact in both orders, so this must be **bitwise**
+/// equal to the SWAR form on every input.
+pub fn qgemm2_i16_scalar_on(
+    pool: &super::Pool,
+    out: &mut [f32],
+    xq: &[i16],
+    m: usize,
+    p: &PackedQTensorV2,
+    dequant_in: f32,
+) {
+    debug_assert_eq!(out.len(), m * p.oc);
+    debug_assert_eq!(xq.len(), m * p.k);
+    let total = m.saturating_mul(p.ops_per_row());
+    let nthreads = super::threads_for_rows(m, total, QGEMM_PAR_THRESHOLD).min(pool.width());
+    let band = |_: usize, ob: &mut [f32], xb: &[i16]| {
+        qgemm2_band_i16_with(ob, xb, p, dequant_in, super::lanes::gather_sum_i16_scalar)
+    };
+    super::for_each_row_band_i16_on(pool, out, xq, m, p.k, p.oc, nthreads, band);
 }
 
 /// Shared tensor-level entry: validate shapes, run with the given thread
@@ -528,6 +646,43 @@ mod tests {
             let mut scalar_i = vec![0.0f32; m * 12];
             qgemm2_scalar_on(&pool, &mut scalar_i, &xi, m, &p);
             assert_eq!(lane_i, scalar_i, "m={m}: integer data must be exact in both orders");
+        }
+    }
+
+    #[test]
+    fn i16_band_bitwise_equals_f32_band_on_unit_scale_integers() {
+        // frac = 0 and integer activations: the i16 raw domain IS the f32
+        // value domain, and every reduction is exact on both paths, so the
+        // integer kernel must reproduce the f32 kernel bitwise
+        let qt = dyadic_qt(21, 48, 7, 16);
+        let p = PackedQTensorV2::pack(&qt).unwrap();
+        let pool = crate::kernels::Pool::new(1);
+        let m = 5;
+        let x = int_activations(22, m, 48);
+        let xq: Vec<i16> = x.data().iter().map(|&v| v as i16).collect();
+        let mut f32_out = vec![0.0f32; m * 7];
+        qgemm2_into_on(&pool, &mut f32_out, x.data(), m, &p);
+        let mut i16_out = vec![0.0f32; m * 7];
+        qgemm2_i16_into_on(&pool, &mut i16_out, &xq, m, &p, 1.0);
+        assert_eq!(i16_out, f32_out);
+    }
+
+    #[test]
+    fn i16_lane_and_scalar_orders_are_bitwise_equal() {
+        let mut r = Rng::new(23);
+        let w: Vec<f32> = (0..96 * 11).map(|_| (r.normal() * 0.3) as f32).collect();
+        let qt = quantize(&w, &[96, 11], 24, 4, AssignMode::SigmaSearch).unwrap();
+        let p = PackedQTensorV2::pack(&qt).unwrap();
+        let pool = crate::kernels::Pool::new(4);
+        for m in [1usize, 4, 9] {
+            let xq: Vec<i16> =
+                (0..m * 96).map(|_| r.range_i64(-32768, 32767) as i16).collect();
+            let dq = 1.0f32 / 4096.0;
+            let mut lane = vec![0.0f32; m * 11];
+            qgemm2_i16_into_on(&pool, &mut lane, &xq, m, &p, dq);
+            let mut scalar = vec![0.0f32; m * 11];
+            qgemm2_i16_scalar_on(&pool, &mut scalar, &xq, m, &p, dq);
+            assert_eq!(lane, scalar, "m={m}: integer plane sums are exact in both orders");
         }
     }
 

@@ -48,10 +48,10 @@
 //!   kernels are property-tested against.
 //! * [`repro`] — one module per table/figure of the paper.
 //!
-//! ## The two quality dials
+//! ## The three quality dials
 //!
-//! The paper's deployment story exposes two orthogonal quality/energy knobs,
-//! and both are runtime-selectable here:
+//! The paper's deployment story exposes three orthogonal quality/energy
+//! knobs, all runtime-selectable here:
 //!
 //! 1. **QSQ (phi, N)** ([`device::QualityConfig`]) — how many code levels
 //!    and how long each scalar group is; decides what crosses the channel.
@@ -59,10 +59,15 @@
 //!    partial products the Quality Scalable Multiplier spends per weight at
 //!    inference; decides what the edge multiplier computes
 //!    ([`kernels::csd`], §V.B).
+//! 3. **Activation bits** ([`kernels::ACT_TOTAL_BITS`], `kernels::calib`) —
+//!    whether activations between layers stay f32 or run the calibrated
+//!    i16 fixed-point datapath (SWAR integer plane sums, one
+//!    dequant-rescale per output cell).
 //!
-//! [`device::DeviceProfile::select_quality`] picks both jointly: the memory
-//! budget sizes the QSQ dial, a MACs-derived energy budget sizes the digit
-//! dial — one device profile determines the full stacked configuration.
+//! [`device::DeviceProfile::select_quality`] picks all three jointly: the
+//! memory budget sizes the QSQ dial, a MACs-derived energy budget sizes the
+//! digit dial, and the device class sets the activation width — one device
+//! profile determines the full stacked configuration.
 //!
 //! See the repository `README.md` for the build/test/bench workflow,
 //! `docs/METRICS.md` for the serving metrics schema, and [`repro`] for the

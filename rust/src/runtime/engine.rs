@@ -37,7 +37,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::hw::energy::Ledger;
-use crate::kernels::{PoolStats, Scratch};
+use crate::kernels::{PoolStats, Scratch, ScratchStats};
 use crate::model::meta::{ModelKind, ModelMeta};
 use crate::model::store::WeightStore;
 use crate::runtime::client::{ArgValue, Executable, Runtime};
@@ -121,6 +121,8 @@ impl EngineReport {
         set(&format!("{p}.energy.skipped_macs"), self.ledger.skipped_macs as f64);
         set(&format!("{p}.energy.fp_muls"), self.ledger.fp_muls as f64);
         set(&format!("{p}.energy.fp_adds"), self.ledger.fp_adds as f64);
+        set(&format!("{p}.energy.int_adds"), self.ledger.int_adds as f64);
+        set(&format!("{p}.energy.act_bits"), self.ledger.act_bits as f64);
         set(&format!("{p}.energy.compute_pj"), self.ledger.compute_pj());
         set(&format!("{p}.energy.total_pj"), self.ledger.total_pj());
         if let Some(ps) = self.pool {
@@ -295,9 +297,17 @@ impl PjrtEngine {
         self.forwards.load(Ordering::Relaxed)
     }
 
-    /// Forward one batch: pad to the compiled size, execute, return the real
-    /// rows of the logits.
+    /// Forward one batch (one-shot scratch): pad to the compiled size,
+    /// execute, return the real rows of the logits.
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.forward_with(x, &mut Scratch::new())
+    }
+
+    /// Forward one batch, accounting the padded staging against the worker's
+    /// scratch arena stats: the slot-0 buffer is re-padded *in place* on warm
+    /// forwards ([`stage_padded`]), so like the host engines a warm PJRT
+    /// engine allocates nothing per request beyond the returned logits.
+    pub fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
         let s = x.shape();
         let (h, w, c) = self.model.input_hwc();
         if s.len() != 4 || s[1] != h || s[2] != w || s[3] != c {
@@ -307,13 +317,9 @@ impl PjrtEngine {
         if b > self.batch {
             bail!("batch {b} exceeds the compiled artifact batch {}", self.batch);
         }
-        let pix = h * w * c;
-        let mut xdata = vec![0.0f32; self.batch * pix];
-        xdata[..b * pix].copy_from_slice(x.data());
-        let padded = Tensor::new(vec![self.batch, h, w, c], xdata)?;
         let out = {
             let mut args = self.args.lock().unwrap();
-            args[0] = ArgValue::F32(padded);
+            stage_padded(&mut args[0], x, self.batch, (h, w, c), &mut scratch.stats)?;
             self.exe.run(&args)?
         };
         let logits = &out[0];
@@ -328,9 +334,42 @@ impl PjrtEngine {
     }
 }
 
+/// Stage a `b`-row batch into the prebuilt slot-0 argument, padded to the
+/// compiled `batch`: when the slot already holds a padded tensor of the
+/// right shape the rows are copied in and the tail zeroed **in place** (a
+/// [`ScratchStats`] reuse — the warm path allocates nothing); only a cold or
+/// reshaped slot allocates the padded buffer (an alloc).
+fn stage_padded(
+    slot: &mut ArgValue,
+    x: &Tensor,
+    batch: usize,
+    hwc: (usize, usize, usize),
+    stats: &mut ScratchStats,
+) -> Result<()> {
+    let (h, w, c) = hwc;
+    let pix = h * w * c;
+    let b = x.shape()[0];
+    match slot {
+        ArgValue::F32(t) if t.shape() == [batch, h, w, c] => {
+            stats.reuses += 1;
+            let d = t.data_mut();
+            d[..b * pix].copy_from_slice(x.data());
+            // clear rows a previous, larger batch staged
+            d[b * pix..].fill(0.0);
+        }
+        other => {
+            stats.allocs += 1;
+            let mut xdata = vec![0.0f32; batch * pix];
+            xdata[..b * pix].copy_from_slice(x.data());
+            *other = ArgValue::F32(Tensor::new(vec![batch, h, w, c], xdata)?);
+        }
+    }
+    Ok(())
+}
+
 impl Engine for PjrtEngine {
-    fn forward_with(&self, x: &Tensor, _scratch: &mut Scratch) -> Result<Tensor> {
-        self.forward(x)
+    fn forward_with(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        PjrtEngine::forward_with(self, x, scratch)
     }
 
     fn kind(&self) -> EngineKind {
@@ -691,11 +730,44 @@ mod tests {
     }
 
     #[test]
+    fn pjrt_padded_staging_reuses_the_slot_buffer_when_warm() {
+        let mut stats = ScratchStats::default();
+        let mut slot = ArgValue::F32(Tensor::zeros(vec![0]));
+        let x =
+            Tensor::new(vec![2, 4, 4, 1], (0..32).map(|i| i as f32).collect()).unwrap();
+        stage_padded(&mut slot, &x, 8, (4, 4, 1), &mut stats).unwrap();
+        assert_eq!(stats.allocs, 1, "cold staging grows the slot once");
+        match &slot {
+            ArgValue::F32(t) => {
+                assert_eq!(t.shape(), &[8, 4, 4, 1]);
+                assert_eq!(&t.data()[..32], x.data());
+                assert!(t.data()[32..].iter().all(|&v| v == 0.0), "tail is zero-padded");
+            }
+            _ => panic!("slot must hold the padded batch tensor"),
+        }
+        // warm passes re-pad in place: no allocation, and the rows a larger
+        // earlier batch staged are cleared
+        let y = Tensor::new(vec![1, 4, 4, 1], vec![7.0; 16]).unwrap();
+        stage_padded(&mut slot, &y, 8, (4, 4, 1), &mut stats).unwrap();
+        stage_padded(&mut slot, &y, 8, (4, 4, 1), &mut stats).unwrap();
+        assert_eq!(stats.allocs, 1, "warm staging must not allocate");
+        assert_eq!(stats.reuses, 2);
+        match &slot {
+            ArgValue::F32(t) => {
+                assert_eq!(&t.data()[..16], &[7.0f32; 16][..]);
+                assert!(t.data()[16..].iter().all(|&v| v == 0.0), "stale rows cleared");
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
     fn report_exports_the_uniform_gauge_family() {
         let mut rep = EngineReport::new(EngineKind::Csd);
         rep.forwards = 3;
         rep.mean_pp = 2.5;
         rep.ledger.partial_products = 120;
+        rep.ledger.act_bits = 16;
         rep.pool = Some(PoolStats { spawns: 4, wakeups: 9, jobs: 12, pin_hits: 7, pin_misses: 2 });
         let mut keys = Vec::new();
         rep.export(|k, v| keys.push((k.to_string(), v)));
@@ -705,6 +777,7 @@ mod tests {
         assert_eq!(get("engine.host-csd.forwards"), Some(3.0));
         assert_eq!(get("engine.host-csd.mean_pp"), Some(2.5));
         assert_eq!(get("engine.host-csd.energy.partial_products"), Some(120.0));
+        assert_eq!(get("engine.host-csd.energy.act_bits"), Some(16.0));
         assert_eq!(get("engine.host-csd.pool.spawns"), Some(4.0));
         assert_eq!(get("engine.host-csd.pool.pin_hits"), Some(7.0));
         assert_eq!(get("engine.host-csd.pool.pin_misses"), Some(2.0));
@@ -716,6 +789,8 @@ mod tests {
             "skipped_fraction",
             "mean_pp",
             "energy.partial_products",
+            "energy.int_adds",
+            "energy.act_bits",
             "energy.total_pj",
         ] {
             assert!(

@@ -40,7 +40,8 @@ use anyhow::{bail, Context, Result};
 use crate::codec::{EncodedModel, EncodedTensor};
 use crate::device::{CsdQuality, QualityConfig};
 use crate::hw::energy::Ledger;
-use crate::kernels::{self, blocked, PackedCsdTensor, PackedQTensorV2, Pool, Scratch};
+use crate::hw::fixedpoint::Format;
+use crate::kernels::{self, blocked, ActPlan, PackedCsdTensor, PackedQTensorV2, Pool, Scratch};
 use crate::model::meta::ModelKind;
 use crate::model::store::WeightStore;
 use crate::quant::qsq::{quantize, AssignMode};
@@ -63,6 +64,8 @@ pub fn forward_with(store: &WeightStore, x: &Tensor, scratch: &mut Scratch) -> R
         energy: None,
         pool: Pool::global(),
         scalar: false,
+        acts: None,
+        ranges: None,
     };
     fwd.run(x, scratch)
 }
@@ -178,6 +181,8 @@ impl F32Engine {
             energy: Some(&self.ledger),
             pool: self.pool,
             scalar: false,
+            acts: None,
+            ranges: None,
         }
         .run(x, scratch);
         if out.is_ok() {
@@ -205,6 +210,32 @@ pub fn quantize_tensors(
     Ok(tensors)
 }
 
+/// Freeze observed per-layer activation ranges into an [`ActPlan`]: each
+/// quantized chain layer gets the finest Q-format that covers its observed
+/// max-|activation| without wrapping ([`kernels::format_for_max_abs`]), and
+/// each *interior* bias is pre-quantized in the format its epilogue emits —
+/// the **next** layer's input format.  The last chain layer keeps its f32
+/// bias: its epilogue stays f32 so the fp32 head sees float features.
+fn build_act_plan(store: &WeightStore, ranges: &BTreeMap<String, f32>) -> Result<ActPlan> {
+    let chain: &[(&str, &str)] = match store.kind {
+        ModelKind::Lenet => &[("c1w", "c1b"), ("c2w", "c2b"), ("f1w", "f1b"), ("f2w", "f2b")],
+        ModelKind::Convnet => &[("k1", "b1"), ("k2", "b2"), ("k3", "b3"), ("k4", "b4")],
+    };
+    let mut plan = ActPlan::default();
+    for &(wname, _) in chain {
+        let ma = *ranges
+            .get(wname)
+            .with_context(|| format!("{wname}: no activation range observed by calibration"))?;
+        plan.set_format(wname, kernels::format_for_max_abs(ma));
+    }
+    for i in 0..chain.len() - 1 {
+        let bname = chain[i].1;
+        let fmt = plan.format(chain[i + 1].0).expect("format set above");
+        plan.set_bias_q(bname, kernels::quantize_bias(store.get(bname)?.data(), fmt));
+    }
+    Ok(plan)
+}
+
 /// The fused zero-copy forward pipeline, shared by the f32 engine (`packed`
 /// and `csd` both `None`), the code-domain [`QuantizedEngine`], and the CSD
 /// [`CsdEngine`]: per layer the packed layout is preferred when present, the
@@ -224,6 +255,19 @@ struct FusedFwd<'a> {
     /// [`CsdEngine::forward_scalar_reference`]), never the serving path.
     /// Banding, chunking, and the f32 microkernel are identical either way.
     scalar: bool,
+    /// The calibrated integer-activation plan.  When present (and
+    /// non-empty) the forward runs the fixed-point datapath: activations
+    /// quantized i16 between layers inside the `qact_a`/`qact_b` ping/pong
+    /// buffers, packed-layer plane sums through the SWAR i16 gathers, one
+    /// dequant-rescale per output cell, integer bias+ReLU and maxpool
+    /// epilogues.  `None` is the plain f32 activation path.
+    acts: Option<&'a ActPlan>,
+    /// Calibration observer: when set, [`FusedFwd::conv_into`] /
+    /// [`FusedFwd::dense_into`] fold each layer input's max-|activation|
+    /// into the map (keyed by weight-tensor name).  Engines run one f32
+    /// forward with this set to build an [`ActPlan`]; never set while
+    /// serving.
+    ranges: Option<&'a Mutex<BTreeMap<String, f32>>>,
 }
 
 impl FusedFwd<'_> {
@@ -253,6 +297,32 @@ impl FusedFwd<'_> {
         }
     }
 
+    /// Fold one integer-datapath layer into the energy ledger: `int_macs`
+    /// i16 multiply-accumulates done as integer adds, plus one f32
+    /// dequant-rescale multiply per output cell — and raise the `act_bits`
+    /// gauge to the fixed-point activation width.
+    fn note_int_energy(&self, int_macs: usize, dequant_cells: usize) {
+        if let Some(l) = self.energy {
+            let mut l = l.lock().unwrap();
+            l.int_adds += int_macs as u64;
+            l.fp_muls += dequant_cells as u64;
+            l.act_bits = l.act_bits.max(kernels::ACT_TOTAL_BITS as u64);
+        }
+    }
+
+    /// Calibration observer: fold this layer input's max-|activation| into
+    /// the ranges map (no-op while serving).
+    fn observe(&self, name: &str, xb: &[f32]) {
+        if let Some(r) = self.ranges {
+            let m = kernels::max_abs(xb);
+            let mut g = r.lock().unwrap();
+            let e = g.entry(name.to_string()).or_insert(0.0);
+            if m > *e {
+                *e = m;
+            }
+        }
+    }
+
     /// The layer's bias, validated against the layer width `n` (the in-place
     /// epilogues, unlike `ops::add_bias`, cannot detect a mismatch
     /// themselves).
@@ -274,6 +344,7 @@ impl FusedFwd<'_> {
         scratch: &mut Scratch,
         out: &mut Vec<f32>,
     ) -> Result<(usize, usize, usize)> {
+        self.observe(name, xb);
         if let Some(p) = self.csd_for(name) {
             let (oh, ow, oc) = if self.scalar {
                 kernels::csd_conv_scalar_into(self.pool, xb, dims, p, same, scratch, out)?
@@ -319,6 +390,7 @@ impl FusedFwd<'_> {
         scratch: &mut Scratch,
         out: &mut Vec<f32>,
     ) -> Result<usize> {
+        self.observe(name, xb);
         if let Some(p) = self.csd_for(name) {
             if xb.len() != m * p.k {
                 bail!("{name}: dense input {} != {}x{}", xb.len(), m, p.k);
@@ -365,6 +437,113 @@ impl FusedFwd<'_> {
         Ok(n)
     }
 
+    /// One conv layer of the integer datapath: raw-i16 activations `xq` (at
+    /// the reciprocal scale `dequant_in`) through the packed layer's SWAR
+    /// i16 kernel into the f32 accumulator `out`.  Only packed layers have
+    /// an integer form — an uncalibratable f32 fallback layer is an error,
+    /// not a silent domain switch.
+    #[allow(clippy::too_many_arguments)] // mirrors conv_into + the dequant scale
+    fn conv_i16_into(
+        &self,
+        xq: &[i16],
+        dims: (usize, usize, usize, usize),
+        name: &str,
+        dequant_in: f32,
+        same: bool,
+        scratch: &mut Scratch,
+        out: &mut Vec<f32>,
+    ) -> Result<(usize, usize, usize)> {
+        if let Some(p) = self.csd_for(name) {
+            let (oh, ow, oc) = if self.scalar {
+                kernels::csd_conv_i16_scalar_into(
+                    self.pool, xq, dims, p, dequant_in, same, scratch, out,
+                )?
+            } else {
+                kernels::csd_conv_i16_into(self.pool, xq, dims, p, dequant_in, same, scratch, out)?
+            };
+            let rows = dims.0 * oh * ow;
+            self.note_csd_energy(p, rows);
+            self.note_int_energy(0, rows * oc);
+            return Ok((oh, ow, oc));
+        }
+        if let Some(p) = self.packed_for(name) {
+            let (oh, ow, oc) = if self.scalar {
+                kernels::qconv_i16_scalar_into(
+                    self.pool, xq, dims, p, dequant_in, same, scratch, out,
+                )?
+            } else {
+                kernels::qconv_i16_into(self.pool, xq, dims, p, dequant_in, same, scratch, out)?
+            };
+            let rows = dims.0 * oh * ow;
+            self.note_int_energy(rows * p.k * p.oc, rows * oc);
+            return Ok((oh, ow, oc));
+        }
+        bail!("{name}: the integer datapath requires a packed (code/CSD) layer")
+    }
+
+    /// One dense layer of the integer datapath (`xq` is raw-i16 `[m, K]`);
+    /// returns the layer width N.  See [`FusedFwd::conv_i16_into`].
+    fn dense_i16_into(
+        &self,
+        xq: &[i16],
+        m: usize,
+        name: &str,
+        dequant_in: f32,
+        scratch: &mut Scratch,
+        out: &mut Vec<f32>,
+    ) -> Result<usize> {
+        if let Some(p) = self.csd_for(name) {
+            if xq.len() != m * p.k {
+                bail!("{name}: dense input {} != {}x{}", xq.len(), m, p.k);
+            }
+            kernels::ensure_cap(out, m * p.oc, &mut scratch.stats);
+            scratch.last.grow(0, 0, m * p.oc);
+            let o = &mut out[..m * p.oc];
+            o.fill(0.0);
+            if self.scalar {
+                kernels::csd_gemm_i16_scalar_on(self.pool, o, xq, m, p, dequant_in);
+            } else {
+                kernels::csd_gemm_i16_into_on(self.pool, o, xq, m, p, dequant_in);
+            }
+            self.note_csd_energy(p, m);
+            self.note_int_energy(0, m * p.oc);
+            return Ok(p.oc);
+        }
+        if let Some(p) = self.packed_for(name) {
+            if xq.len() != m * p.k {
+                bail!("{name}: dense input {} != {}x{}", xq.len(), m, p.k);
+            }
+            kernels::ensure_cap(out, m * p.oc, &mut scratch.stats);
+            scratch.last.grow(0, 0, m * p.oc);
+            let o = &mut out[..m * p.oc];
+            o.fill(0.0);
+            if self.scalar {
+                kernels::qgemm2_i16_scalar_on(self.pool, o, xq, m, p, dequant_in);
+            } else {
+                kernels::qgemm2_i16_into_on(self.pool, o, xq, m, p, dequant_in);
+            }
+            self.note_int_energy(m * p.k * p.oc, m * p.oc);
+            return Ok(p.oc);
+        }
+        bail!("{name}: the integer datapath requires a packed (code/CSD) layer")
+    }
+
+    /// The calibrated input format of layer `name`, out of the plan.
+    fn fmt_of(plan: &ActPlan, name: &str) -> Result<Format> {
+        plan.format(name).with_context(|| format!("{name}: layer missing from the ActPlan"))
+    }
+
+    /// The pre-quantized bias of tensor `name`, validated against width `n`.
+    fn bias_q_of<'p>(plan: &'p ActPlan, name: &str, n: usize) -> Result<&'p [i32]> {
+        let bq = plan
+            .bias_q(name)
+            .with_context(|| format!("{name}: bias missing from the ActPlan"))?;
+        if bq.len() != n {
+            bail!("{name}: pre-quantized bias len {} vs layer width {n}", bq.len());
+        }
+        Ok(bq)
+    }
+
     fn run(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
         let s = x.shape();
         let (want_hw, want_c) = match self.store.kind {
@@ -380,15 +559,27 @@ impl FusedFwd<'_> {
         // activations ping-pong between two pooled buffers; they are moved
         // out of the arena for the duration of the pass (the arena is still
         // borrowed by every layer for patch/pad staging) and always put
-        // back, error or not
+        // back, error or not.  The integer datapath additionally ping-pongs
+        // the i16 twins.
         let mut cur = std::mem::take(&mut scratch.act_a);
         let mut nxt = std::mem::take(&mut scratch.act_b);
-        let out = match self.store.kind {
-            ModelKind::Lenet => self.lenet_body(x, &mut cur, &mut nxt, scratch),
-            ModelKind::Convnet => self.convnet_body(x, &mut cur, &mut nxt, scratch),
+        let mut qcur = std::mem::take(&mut scratch.qact_a);
+        let mut qnxt = std::mem::take(&mut scratch.qact_b);
+        let plan = self.acts.filter(|p| !p.is_empty());
+        let out = match (self.store.kind, plan) {
+            (ModelKind::Lenet, Some(p)) => {
+                self.lenet_body_int(p, x, &mut cur, &mut nxt, &mut qcur, &mut qnxt, scratch)
+            }
+            (ModelKind::Convnet, Some(p)) => {
+                self.convnet_body_int(p, x, &mut cur, &mut nxt, &mut qcur, &mut qnxt, scratch)
+            }
+            (ModelKind::Lenet, None) => self.lenet_body(x, &mut cur, &mut nxt, scratch),
+            (ModelKind::Convnet, None) => self.convnet_body(x, &mut cur, &mut nxt, scratch),
         };
         scratch.act_a = cur;
         scratch.act_b = nxt;
+        scratch.qact_a = qcur;
+        scratch.qact_b = qnxt;
         out
     }
 
@@ -464,6 +655,161 @@ impl FusedFwd<'_> {
         ops::bias_inplace(&mut logits, self.bias_of("fcb", n)?);
         Tensor::new(vec![b, n], logits)
     }
+
+    /// LeNet on the integer datapath: the request batch is quantized once at
+    /// c1's calibrated format, then every quantized layer runs raw-i16 in →
+    /// f32 accumulator → integer epilogue (pre-quantized bias + saturating
+    /// ReLU, requantized straight into the *next* layer's format) → i16
+    /// maxpool, ping-ponging the `qact` buffers.  The last quantized layer
+    /// (f2) takes the f32 epilogue so the fp32 head sees float features, and
+    /// the head emits f32 logits exactly like the float path.
+    #[allow(clippy::too_many_arguments)] // two f32 + two i16 ping/pong buffers, by design
+    fn lenet_body_int(
+        &self,
+        plan: &ActPlan,
+        x: &Tensor,
+        cur: &mut Vec<f32>,
+        nxt: &mut Vec<f32>,
+        qcur: &mut Vec<i16>,
+        qnxt: &mut Vec<i16>,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let b = x.shape()[0];
+        // quantize the request batch into the i16 ping buffer, c1's format
+        let fmt_c1 = Self::fmt_of(plan, "c1w")?;
+        let n_in = b * 28 * 28;
+        kernels::ensure_cap_i16(qcur, n_in, &mut scratch.stats);
+        kernels::quantize_into(x.data(), fmt_c1, &mut qcur[..n_in]);
+
+        // c1: integer conv → epilogue at c2's input format → i16 pool
+        let dq = kernels::dequant_scale(fmt_c1);
+        let (oh, ow, oc) =
+            self.conv_i16_into(&qcur[..n_in], (b, 28, 28, 1), "c1w", dq, false, scratch, nxt)?;
+        let fmt_c2 = Self::fmt_of(plan, "c2w")?;
+        let n1 = b * oh * ow * oc;
+        kernels::ensure_cap_i16(qnxt, n1, &mut scratch.stats);
+        kernels::bias_relu_quantize_into(
+            &nxt[..n1],
+            Self::bias_q_of(plan, "c1b", oc)?,
+            fmt_c2,
+            &mut qnxt[..n1],
+        );
+        scratch.note_layer("c1w");
+        let (mut dh, mut dw, mut dc) = (oh / 2, ow / 2, oc);
+        kernels::ensure_cap_i16(qcur, b * dh * dw * dc, &mut scratch.stats);
+        ops::maxpool2_i16_into(&qnxt[..n1], (b, oh, ow, oc), &mut qcur[..b * dh * dw * dc]);
+
+        // c2: integer conv → epilogue at f1's input format → i16 pool
+        let dq = kernels::dequant_scale(fmt_c2);
+        let (oh, ow, oc) = self.conv_i16_into(
+            &qcur[..b * dh * dw * dc],
+            (b, dh, dw, dc),
+            "c2w",
+            dq,
+            false,
+            scratch,
+            nxt,
+        )?;
+        let fmt_f1 = Self::fmt_of(plan, "f1w")?;
+        let n2 = b * oh * ow * oc;
+        kernels::ensure_cap_i16(qnxt, n2, &mut scratch.stats);
+        kernels::bias_relu_quantize_into(
+            &nxt[..n2],
+            Self::bias_q_of(plan, "c2b", oc)?,
+            fmt_f1,
+            &mut qnxt[..n2],
+        );
+        scratch.note_layer("c2w");
+        (dh, dw, dc) = (oh / 2, ow / 2, oc);
+        kernels::ensure_cap_i16(qcur, b * dh * dw * dc, &mut scratch.stats);
+        ops::maxpool2_i16_into(&qnxt[..n2], (b, oh, ow, oc), &mut qcur[..b * dh * dw * dc]);
+
+        // f1: integer dense → epilogue at f2's input format
+        let feat = dh * dw * dc;
+        let fmt_f2 = Self::fmt_of(plan, "f2w")?;
+        let dq = kernels::dequant_scale(fmt_f1);
+        let n = self.dense_i16_into(&qcur[..b * feat], b, "f1w", dq, scratch, nxt)?;
+        kernels::ensure_cap_i16(qnxt, b * n, &mut scratch.stats);
+        kernels::bias_relu_quantize_into(
+            &nxt[..b * n],
+            Self::bias_q_of(plan, "f1b", n)?,
+            fmt_f2,
+            &mut qnxt[..b * n],
+        );
+        scratch.note_layer("f1w");
+        std::mem::swap(qcur, qnxt);
+
+        // f2: last integer layer — f32 epilogue feeds the fp32 head
+        let dq = kernels::dequant_scale(fmt_f2);
+        let n = self.dense_i16_into(&qcur[..b * n], b, "f2w", dq, scratch, nxt)?;
+        ops::bias_relu_inplace(&mut nxt[..b * n], self.bias_of("f2b", n)?);
+        scratch.note_layer("f2w");
+
+        // fp32 head, same as the float path
+        let width = self.dense_into(&nxt[..b * n], b, "f3w", scratch, cur)?;
+        scratch.note_layer("f3w");
+        let mut logits = cur[..b * width].to_vec();
+        ops::bias_inplace(&mut logits, self.bias_of("f3b", width)?);
+        Tensor::new(vec![b, width], logits)
+    }
+
+    /// ConvNet-4 on the integer datapath — same structure as
+    /// [`FusedFwd::lenet_body_int`]: k1–k3 run fully integer epilogues, k4
+    /// (the last quantized layer) takes the f32 epilogue and pool so the
+    /// fp32 head sees float features.
+    #[allow(clippy::too_many_arguments)] // two f32 + two i16 ping/pong buffers, by design
+    fn convnet_body_int(
+        &self,
+        plan: &ActPlan,
+        x: &Tensor,
+        cur: &mut Vec<f32>,
+        nxt: &mut Vec<f32>,
+        qcur: &mut Vec<i16>,
+        qnxt: &mut Vec<i16>,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let b = x.shape()[0];
+        let layers = [("k1", "b1"), ("k2", "b2"), ("k3", "b3"), ("k4", "b4")];
+        let (mut dh, mut dw, mut dc) = (32usize, 32, 3);
+        let mut fmt_in = Self::fmt_of(plan, "k1")?;
+        let n_in = b * dh * dw * dc;
+        kernels::ensure_cap_i16(qcur, n_in, &mut scratch.stats);
+        kernels::quantize_into(x.data(), fmt_in, &mut qcur[..n_in]);
+        for (i, &(kname, bname)) in layers.iter().enumerate() {
+            let xn = b * dh * dw * dc;
+            let dq = kernels::dequant_scale(fmt_in);
+            let (oh, ow, oc) =
+                self.conv_i16_into(&qcur[..xn], (b, dh, dw, dc), kname, dq, true, scratch, nxt)?;
+            let no = b * oh * ow * oc;
+            (dh, dw, dc) = (oh / 2, ow / 2, oc);
+            if i + 1 < layers.len() {
+                let fmt_out = Self::fmt_of(plan, layers[i + 1].0)?;
+                kernels::ensure_cap_i16(qnxt, no, &mut scratch.stats);
+                kernels::bias_relu_quantize_into(
+                    &nxt[..no],
+                    Self::bias_q_of(plan, bname, oc)?,
+                    fmt_out,
+                    &mut qnxt[..no],
+                );
+                scratch.note_layer(kname);
+                kernels::ensure_cap_i16(qcur, b * dh * dw * dc, &mut scratch.stats);
+                ops::maxpool2_i16_into(&qnxt[..no], (b, oh, ow, oc), &mut qcur[..b * dh * dw * dc]);
+                fmt_in = fmt_out;
+            } else {
+                // k4: f32 epilogue + f32 pool feed the fp32 head
+                ops::bias_relu_inplace(&mut nxt[..no], self.bias_of(bname, oc)?);
+                scratch.note_layer(kname);
+                kernels::ensure_cap(cur, b * dh * dw * dc, &mut scratch.stats);
+                ops::maxpool2_into(&nxt[..no], (b, oh, ow, oc), &mut cur[..b * dh * dw * dc]);
+            }
+        }
+        let feat = dh * dw * dc;
+        let n = self.dense_into(&cur[..b * feat], b, "fcw", scratch, nxt)?;
+        scratch.note_layer("fcw");
+        let mut logits = nxt[..b * n].to_vec();
+        ops::bias_inplace(&mut logits, self.bias_of("fcb", n)?);
+        Tensor::new(vec![b, n], logits)
+    }
 }
 
 /// The code-domain serving engine: quantized tensors stay as plane-packed
@@ -489,6 +835,10 @@ pub struct QuantizedEngine {
     /// dispatches on — shared process-wide, so engines running concurrently
     /// split one warm worker set instead of spawning per matmul.
     pool: &'static Pool,
+    /// The calibrated integer-activation plan ([`QuantizedEngine::calibrate`]).
+    /// `None` until calibrated; once set, every forward runs the fixed-point
+    /// i16 activation datapath.
+    acts: Option<ActPlan>,
 }
 
 impl QuantizedEngine {
@@ -527,7 +877,36 @@ impl QuantizedEngine {
             ledger: Mutex::new(Ledger::new()),
             forwards: AtomicU64::new(0),
             pool: Pool::global(),
+            acts: None,
         })
+    }
+
+    /// Calibrate the integer-activation datapath on a representative batch:
+    /// one f32-activation forward over this engine's own packed layers with
+    /// the range observer on, then freeze the observed per-layer ranges into
+    /// an [`ActPlan`].  Every subsequent forward runs fixed-point.  The pass
+    /// is deterministic (a pure fold over the activations) and does not
+    /// count a forward or touch the energy ledger.
+    pub fn calibrate(&mut self, batch: &Tensor) -> Result<()> {
+        let ranges = Mutex::new(BTreeMap::new());
+        FusedFwd {
+            store: &self.store,
+            packed: Some(&self.packed),
+            csd: None,
+            energy: None,
+            pool: self.pool,
+            scalar: false,
+            acts: None,
+            ranges: Some(&ranges),
+        }
+        .run(batch, &mut Scratch::new())?;
+        self.acts = Some(build_act_plan(&self.store, &ranges.into_inner().unwrap())?);
+        Ok(())
+    }
+
+    /// The calibrated activation plan (`None` before [`QuantizedEngine::calibrate`]).
+    pub fn act_plan(&self) -> Option<&ActPlan> {
+        self.acts.as_ref()
     }
 
     pub fn model(&self) -> ModelKind {
@@ -581,6 +960,8 @@ impl QuantizedEngine {
             energy: Some(&self.ledger),
             pool: self.pool,
             scalar: false,
+            acts: self.acts.as_ref(),
+            ranges: None,
         }
         .run(x, scratch);
         if out.is_ok() {
@@ -603,6 +984,29 @@ impl QuantizedEngine {
             energy: None,
             pool: self.pool,
             scalar: true,
+            acts: None,
+            ranges: None,
+        }
+        .run(x, scratch)
+    }
+
+    /// Forward one batch through the *integer* datapath with every plane sum
+    /// on the scalar oracle — the fixed-point twin of
+    /// [`QuantizedEngine::forward_scalar_reference`], bitwise against the
+    /// lane-ized integer serving path.  Errors if the engine has not been
+    /// calibrated.  Does not count a forward or touch the energy ledger.
+    pub fn forward_int_scalar_reference(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        let plan =
+            self.acts.as_ref().context("integer reference needs a calibrated engine (ActPlan)")?;
+        FusedFwd {
+            store: &self.store,
+            packed: Some(&self.packed),
+            csd: None,
+            energy: None,
+            pool: self.pool,
+            scalar: true,
+            acts: Some(plan),
+            ranges: None,
         }
         .run(x, scratch)
     }
@@ -633,6 +1037,10 @@ pub struct CsdEngine {
     forwards: AtomicU64,
     /// The persistent worker pool every row-band kernel dispatches on.
     pool: &'static Pool,
+    /// The calibrated integer-activation plan ([`CsdEngine::calibrate`]).
+    /// `None` until calibrated; once set, every forward runs the fixed-point
+    /// i16 activation datapath.
+    acts: Option<ActPlan>,
 }
 
 impl CsdEngine {
@@ -661,7 +1069,34 @@ impl CsdEngine {
             ledger: Mutex::new(Ledger::new()),
             forwards: AtomicU64::new(0),
             pool: Pool::global(),
+            acts: None,
         })
+    }
+
+    /// Calibrate the integer-activation datapath on a representative batch —
+    /// the CSD twin of [`QuantizedEngine::calibrate`]: one f32-activation
+    /// forward over this engine's own digit planes with the range observer
+    /// on, frozen into an [`ActPlan`].  Deterministic; counts no forward.
+    pub fn calibrate(&mut self, batch: &Tensor) -> Result<()> {
+        let ranges = Mutex::new(BTreeMap::new());
+        FusedFwd {
+            store: &self.store,
+            packed: None,
+            csd: Some(&self.packed),
+            energy: None,
+            pool: self.pool,
+            scalar: false,
+            acts: None,
+            ranges: Some(&ranges),
+        }
+        .run(batch, &mut Scratch::new())?;
+        self.acts = Some(build_act_plan(&self.store, &ranges.into_inner().unwrap())?);
+        Ok(())
+    }
+
+    /// The calibrated activation plan (`None` before [`CsdEngine::calibrate`]).
+    pub fn act_plan(&self) -> Option<&ActPlan> {
+        self.acts.as_ref()
     }
 
     pub fn model(&self) -> ModelKind {
@@ -723,6 +1158,8 @@ impl CsdEngine {
             energy: Some(&self.ledger),
             pool: self.pool,
             scalar: false,
+            acts: self.acts.as_ref(),
+            ranges: None,
         }
         .run(x, scratch);
         if out.is_ok() {
@@ -743,6 +1180,29 @@ impl CsdEngine {
             energy: None,
             pool: self.pool,
             scalar: true,
+            acts: None,
+            ranges: None,
+        }
+        .run(x, scratch)
+    }
+
+    /// Forward one batch through the *integer* datapath with every plane sum
+    /// on the scalar oracle — the fixed-point twin of
+    /// [`CsdEngine::forward_scalar_reference`], bitwise against the lane-ized
+    /// integer serving path.  Errors if the engine has not been calibrated.
+    /// Does not count a forward or touch the energy ledger.
+    pub fn forward_int_scalar_reference(&self, x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        let plan =
+            self.acts.as_ref().context("integer reference needs a calibrated engine (ActPlan)")?;
+        FusedFwd {
+            store: &self.store,
+            packed: None,
+            csd: Some(&self.packed),
+            energy: None,
+            pool: self.pool,
+            scalar: true,
+            acts: Some(plan),
+            ranges: None,
         }
         .run(x, scratch)
     }
@@ -1062,5 +1522,116 @@ mod tests {
         let diff = got.max_abs_diff(&want);
         assert!(diff < 5e-2, "convnet engine vs decoded-store forward: {diff}");
         assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&want));
+    }
+
+    #[test]
+    fn calibrated_quantized_engine_tracks_the_f32_path_and_flags_act_bits() {
+        let store = random_store(31, crate::model::meta::ModelKind::Lenet);
+        let quality = QualityConfig { phi: 4, group: 16 };
+        let mut engine =
+            QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+        let mut r = crate::util::rng::Rng::new(32);
+        let xdata: Vec<f32> = (0..4 * 28 * 28).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![4, 28, 28, 1], xdata).unwrap();
+
+        // the f32 oracle of the very same packed layers, before calibration
+        let mut scratch = Scratch::new();
+        let f32_ref = engine.forward_scalar_reference(&x, &mut scratch).unwrap();
+        assert!(
+            engine.act_plan().is_none()
+                && engine.forward_int_scalar_reference(&x, &mut scratch).is_err(),
+            "the integer reference must demand a calibrated plan"
+        );
+
+        engine.calibrate(&x).unwrap();
+        let plan = engine.act_plan().expect("calibrate sets the plan");
+        assert_eq!(plan.formats().count(), 4, "all four quantized LeNet layers calibrated");
+        assert_eq!(plan.act_bits(), 16);
+
+        // integer serving stays close to the f32 oracle: same predictions,
+        // only activation-quantization noise apart
+        let got = engine.forward_with(&x, &mut scratch).unwrap();
+        assert_eq!(got.shape(), f32_ref.shape());
+        let diff = got.max_abs_diff(&f32_ref);
+        assert!(diff < 5e-2, "integer datapath vs f32 oracle: {diff}");
+        assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&f32_ref));
+        // the lifetime ledger now carries the activation-width gauge and
+        // the integer-layer adds
+        let l = engine.ledger();
+        assert_eq!(l.act_bits, 16, "a calibrated forward must raise the act_bits gauge");
+        assert!(l.int_adds > 0, "integer layers must charge int adds");
+    }
+
+    #[test]
+    fn integer_serving_is_bitwise_equal_to_its_scalar_reference_and_freezes() {
+        let store = random_store(33, crate::model::meta::ModelKind::Lenet);
+        let quality = QualityConfig { phi: 4, group: 16 };
+        let mut engine =
+            QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+        let mut r = crate::util::rng::Rng::new(34);
+        let xdata: Vec<f32> = (0..4 * 28 * 28).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![4, 28, 28, 1], xdata).unwrap();
+        engine.calibrate(&x).unwrap();
+
+        let mut scratch = Scratch::new();
+        let first = engine.forward_with(&x, &mut scratch).unwrap();
+        // integer plane sums are exact in any order, so the lane-ized
+        // serving path and the scalar oracle agree bitwise
+        let oracle = engine.forward_int_scalar_reference(&x, &mut scratch).unwrap();
+        assert_eq!(first.data(), oracle.data(), "integer lane vs scalar oracle");
+        // warm integer forwards allocate nothing: the i16 ping/pong twins
+        // and the qpatches/qpadded arena pair are sized after pass one
+        let cold_allocs = scratch.stats.allocs;
+        for _ in 0..3 {
+            let again = engine.forward_with(&x, &mut scratch).unwrap();
+            assert_eq!(again.data(), first.data(), "warm integer pass changed the result");
+        }
+        assert_eq!(
+            scratch.stats.allocs, cold_allocs,
+            "warm integer requests must not allocate: {:?}",
+            scratch.stats
+        );
+    }
+
+    #[test]
+    fn calibrated_csd_engine_tracks_the_f32_path() {
+        let store = random_store(35, crate::model::meta::ModelKind::Lenet);
+        let mut engine = CsdEngine::from_store(&store, CsdQuality::exact()).unwrap();
+        let mut r = crate::util::rng::Rng::new(36);
+        let xdata: Vec<f32> = (0..3 * 28 * 28).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![3, 28, 28, 1], xdata).unwrap();
+        let mut scratch = Scratch::new();
+        let f32_ref = engine.forward_scalar_reference(&x, &mut scratch).unwrap();
+        engine.calibrate(&x).unwrap();
+        let got = engine.forward_with(&x, &mut scratch).unwrap();
+        let diff = got.max_abs_diff(&f32_ref);
+        assert!(diff < 5e-2, "csd integer datapath vs f32 oracle: {diff}");
+        assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&f32_ref));
+        let oracle = engine.forward_int_scalar_reference(&x, &mut scratch).unwrap();
+        assert_eq!(got.data(), oracle.data(), "csd integer lane vs scalar oracle");
+        assert_eq!(engine.ledger().act_bits, 16);
+    }
+
+    #[test]
+    fn calibration_is_deterministic() {
+        let store = random_store(37, crate::model::meta::ModelKind::Convnet);
+        let quality = QualityConfig { phi: 4, group: 16 };
+        let mut r = crate::util::rng::Rng::new(38);
+        let xdata: Vec<f32> = (0..2 * 32 * 32 * 3).map(|_| r.f32()).collect();
+        let x = Tensor::new(vec![2, 32, 32, 3], xdata).unwrap();
+        let mut a =
+            QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+        let mut b =
+            QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+        a.calibrate(&x).unwrap();
+        b.calibrate(&x).unwrap();
+        // and recalibrating on the same batch cannot move the plan either
+        let first = a.act_plan().unwrap().clone();
+        a.calibrate(&x).unwrap();
+        assert_eq!(a.act_plan().unwrap(), &first, "recalibration moved the plan");
+        assert_eq!(a.act_plan().unwrap(), b.act_plan().unwrap(), "calibration must be a pure fold");
+        let fa = a.forward(&x).unwrap();
+        let fb = b.forward(&x).unwrap();
+        assert_eq!(fa.data(), fb.data());
     }
 }

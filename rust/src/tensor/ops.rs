@@ -92,12 +92,39 @@ pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> Result<(Tensor, usize, usize)
 /// ordering within a row is (di, dj, c), identical to [`im2col`].
 pub fn im2col_rows_into(
     xd: &[f32],
-    (b, h, w, c): (usize, usize, usize, usize),
+    dims: (usize, usize, usize, usize),
     kh: usize,
     kw: usize,
     row0: usize,
     nrows: usize,
     dst: &mut [f32],
+) {
+    im2col_rows_t_into(xd, dims, kh, kw, row0, nrows, dst)
+}
+
+/// [`im2col_rows_into`] on raw i16 activations — the patch-staging primitive
+/// of the integer datapath.  Structural copies only, so it is the same
+/// function elementwise as the f32 form.
+pub fn im2col_rows_i16_into(
+    xd: &[i16],
+    dims: (usize, usize, usize, usize),
+    kh: usize,
+    kw: usize,
+    row0: usize,
+    nrows: usize,
+    dst: &mut [i16],
+) {
+    im2col_rows_t_into(xd, dims, kh, kw, row0, nrows, dst)
+}
+
+fn im2col_rows_t_into<T: Copy>(
+    xd: &[T],
+    (b, h, w, c): (usize, usize, usize, usize),
+    kh: usize,
+    kw: usize,
+    row0: usize,
+    nrows: usize,
+    dst: &mut [T],
 ) {
     let (oh, ow) = (h - kh + 1, w - kw + 1);
     let kcols = kh * kw * c;
@@ -158,9 +185,29 @@ pub fn pad_hw(x: &Tensor, p: usize) -> Result<Tensor> {
 /// caller has zeroed — only the interior strips are written).
 pub fn pad_hw_into(
     xd: &[f32],
-    (b, h, w, c): (usize, usize, usize, usize),
+    dims: (usize, usize, usize, usize),
     p: usize,
     dst: &mut [f32],
+) {
+    pad_hw_t_into(xd, dims, p, dst)
+}
+
+/// [`pad_hw_into`] on raw i16 activations (caller zeroes `dst`; zero raw is
+/// zero in every Q-format, so integer SAME-conv padding is exact).
+pub fn pad_hw_i16_into(
+    xd: &[i16],
+    dims: (usize, usize, usize, usize),
+    p: usize,
+    dst: &mut [i16],
+) {
+    pad_hw_t_into(xd, dims, p, dst)
+}
+
+fn pad_hw_t_into<T: Copy>(
+    xd: &[T],
+    (b, h, w, c): (usize, usize, usize, usize),
+    p: usize,
+    dst: &mut [T],
 ) {
     let (nh, nw) = (h + 2 * p, w + 2 * p);
     debug_assert!(dst.len() >= b * nh * nw * c);
@@ -203,7 +250,23 @@ pub fn bias_inplace(buf: &mut [f32], bias: &[f32]) {
 
 /// 2x2/stride-2 max pool from `src` `[b,h,w,c]` (h, w even) into `dst`
 /// `[b,h/2,w/2,c]` (fully overwritten).
-pub fn maxpool2_into(src: &[f32], (b, h, w, c): (usize, usize, usize, usize), dst: &mut [f32]) {
+pub fn maxpool2_into(src: &[f32], dims: (usize, usize, usize, usize), dst: &mut [f32]) {
+    maxpool2_t_into(src, dims, dst, f32::max)
+}
+
+/// [`maxpool2_into`] on raw i16 activations.  Max commutes with the
+/// (monotone) quantization map, so pooling raw values equals quantizing the
+/// f32 pool output — the integer pipeline pools without dequantizing.
+pub fn maxpool2_i16_into(src: &[i16], dims: (usize, usize, usize, usize), dst: &mut [i16]) {
+    maxpool2_t_into(src, dims, dst, std::cmp::max)
+}
+
+fn maxpool2_t_into<T: Copy, M: Fn(T, T) -> T>(
+    src: &[T],
+    (b, h, w, c): (usize, usize, usize, usize),
+    dst: &mut [T],
+    max: M,
+) {
     debug_assert!(h % 2 == 0 && w % 2 == 0);
     let (oh, ow) = (h / 2, w / 2);
     debug_assert!(dst.len() >= b * oh * ow * c);
@@ -214,9 +277,9 @@ pub fn maxpool2_into(src: &[f32], (b, h, w, c): (usize, usize, usize, usize), ds
                 let r1 = r0 + w * c;
                 let o = ((bi * oh + oi) * ow + oj) * c;
                 for ci in 0..c {
-                    let m0 = src[r0 + ci].max(src[r0 + c + ci]);
-                    let m1 = src[r1 + ci].max(src[r1 + c + ci]);
-                    dst[o + ci] = m0.max(m1);
+                    let m0 = max(src[r0 + ci], src[r0 + c + ci]);
+                    let m1 = max(src[r1 + ci], src[r1 + c + ci]);
+                    dst[o + ci] = max(m0, m1);
                 }
             }
         }
@@ -448,6 +511,39 @@ mod tests {
         let mut dst = vec![0.0f32; 2 * 2 * 3 * 3];
         maxpool2_into(x.data(), (2, 4, 6, 3), &mut dst);
         assert_eq!(&dst[..], want.data());
+    }
+
+    #[test]
+    fn i16_structural_ops_match_f32_forms_elementwise() {
+        // Integer-valued data round-trips f32 exactly, so the i16 structural
+        // ops (copy/pad/max only — no arithmetic) must mirror the f32 ones.
+        let mut r = crate::util::rng::Rng::new(9);
+        let dims = (2usize, 4usize, 6usize, 3usize);
+        let n = 2 * 4 * 6 * 3;
+        let qi: Vec<i16> = (0..n).map(|_| r.range_i64(-32768, 32767) as i16).collect();
+        let xf: Vec<f32> = qi.iter().map(|&v| v as f32).collect();
+
+        let kcols = 3 * 2 * 3;
+        let rows = 2 * 2 * 5;
+        let mut bf = vec![0.0f32; rows * kcols];
+        let mut bq = vec![0i16; rows * kcols];
+        im2col_rows_into(&xf, dims, 3, 2, 0, rows, &mut bf);
+        im2col_rows_i16_into(&qi, dims, 3, 2, 0, rows, &mut bq);
+        assert!(bf.iter().zip(&bq).all(|(&f, &q)| f == q as f32), "im2col diverged");
+
+        let padded = 2 * 6 * 8 * 3;
+        let mut pf = vec![0.0f32; padded];
+        let mut pq = vec![0i16; padded];
+        pad_hw_into(&xf, dims, 1, &mut pf);
+        pad_hw_i16_into(&qi, dims, 1, &mut pq);
+        assert!(pf.iter().zip(&pq).all(|(&f, &q)| f == q as f32), "pad diverged");
+
+        let pooled = 2 * 2 * 3 * 3;
+        let mut mf = vec![0.0f32; pooled];
+        let mut mq = vec![0i16; pooled];
+        maxpool2_into(&xf, dims, &mut mf);
+        maxpool2_i16_into(&qi, dims, &mut mq);
+        assert!(mf.iter().zip(&mq).all(|(&f, &q)| f == q as f32), "maxpool diverged");
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Differential gate for the integer-activation datapath (the i16
+//! fixed-point ping/pong planes):
+//!
+//! (a) `gather_sum_i16` vs its scalar oracle — **bitwise** at every
+//!     chunk/tail boundary (integer additions are exact in any order), plus
+//!     overflow-adversarial all-extremal gathers longer than one chunk;
+//! (b) calibration-layer properties: activation quantization **saturates,
+//!     never wraps** (a value past the calibrated range clips to the format
+//!     extreme with its sign intact), in-range values round-trip within
+//!     half a raw step, and the integer ReLU epilogue clamps to `[0,
+//!     max_raw]` at both ends;
+//! (c) kernel-level differential: the SWAR `qgemm2_i16` / `csd_gemm_i16`
+//!     entry points vs their `*_scalar_on` twins — bitwise on every input,
+//!     under a serial and a wide pool;
+//! (d) engine-level conformance: a calibrated `QuantizedEngine` /
+//!     `CsdEngine` integer forward tracks its own f32 scalar oracle
+//!     (tolerance + identical argmax), is **bitwise** equal to the integer
+//!     scalar reference, freezes scratch allocations once warm, and
+//!     calibration itself is a pure fold (same batch ⇒ same plan, same
+//!     logits, across engines and recalibrations).
+//!
+//! CI runs this suite under the default pool and `PALLAS_POOL_THREADS=1`,
+//! so the engine-level paths execute both banded and fully serial.
+
+use qsq_edge::data::synth_store;
+use qsq_edge::device::{CsdQuality, QualityConfig};
+use qsq_edge::hw::fixedpoint::Format;
+use qsq_edge::kernels::lanes::{
+    gather_sum_i16, gather_sum_i16_scalar, I16_GATHER_CHUNK, I16_LANES,
+};
+use qsq_edge::kernels::{
+    bias_relu_quantize_into, csd_gemm_i16_into_on, csd_gemm_i16_scalar_on, dequant_scale,
+    format_for_max_abs, qgemm2_i16_into_on, qgemm2_i16_scalar_on, quantize_into, PackedCsdTensor,
+    PackedQTensorV2, Pool, Scratch, ACT_TOTAL_BITS,
+};
+use qsq_edge::model::meta::ModelKind;
+use qsq_edge::quant::qsq::{quantize, AssignMode};
+use qsq_edge::runtime::host::{CsdEngine, QuantizedEngine};
+use qsq_edge::tensor::{ops, Tensor};
+use qsq_edge::util::prop::{check, forall, gen_weights};
+use qsq_edge::util::rng::Rng;
+
+/// Lengths that straddle every fast-path boundary of the i16 gather: the
+/// SWAR-lane edge, the fixed gather-chunk edge, and a multi-chunk tail.
+fn gather_boundary_lengths() -> Vec<usize> {
+    vec![
+        0,
+        1,
+        I16_LANES - 1,
+        I16_LANES,
+        I16_LANES + 1,
+        I16_GATHER_CHUNK - 1,
+        I16_GATHER_CHUNK,
+        I16_GATHER_CHUNK + 1,
+        2 * I16_GATHER_CHUNK + 3,
+    ]
+}
+
+// --- (a) the SWAR i16 gather --------------------------------------------------
+
+#[test]
+fn prop_gather_sum_i16_bitwise_scalar_at_every_boundary() {
+    forall(
+        20,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            let xs: Vec<i16> = (0..700)
+                .map(|_| r.range_i64(i16::MIN as i64, i16::MAX as i64) as i16)
+                .collect();
+            for len in gather_boundary_lengths() {
+                let offsets: Vec<u16> = (0..len).map(|_| r.below(700) as u16).collect();
+                check(
+                    gather_sum_i16(&offsets, &xs) == gather_sum_i16_scalar(&offsets, &xs),
+                    &format!("i16 gather len={len} diverged (seed {seed})"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gather_i16_extremes_survive_past_the_chunk() {
+    // every offset lands on one extreme value, for lengths past several
+    // gather chunks: a missed widen inside the chunked reduction would
+    // wrap here instead of summing exactly
+    for v in [i16::MIN, i16::MAX] {
+        let xs = [v; 4];
+        let n = 4 * I16_GATHER_CHUNK + 5;
+        let offsets: Vec<u16> = (0..n).map(|i| (i % 4) as u16).collect();
+        assert_eq!(
+            gather_sum_i16(&offsets, &xs),
+            v as i64 * n as i64,
+            "i16 gather wrapped on {n} extremes of {v}"
+        );
+    }
+    // alternating extremes: worst-case biased lane magnitude, near-zero sum
+    let xs = [i16::MIN, i16::MAX];
+    let offsets: Vec<u16> = (0..3 * I16_GATHER_CHUNK).map(|i| (i % 2) as u16).collect();
+    assert_eq!(gather_sum_i16(&offsets, &xs), gather_sum_i16_scalar(&offsets, &xs));
+}
+
+// --- (b) calibration-layer saturation properties ------------------------------
+
+#[test]
+fn prop_activation_quantization_saturates_never_wraps() {
+    forall(
+        30,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            let ma = 0.01 + r.f32() * 100.0;
+            let fmt = format_for_max_abs(ma);
+            check(fmt.total == ACT_TOTAL_BITS, "activation formats are 16-bit")?;
+            let (lo, hi) = (fmt.min_raw(), fmt.max_raw());
+
+            // a mix of in-range, out-of-range, and absurdly out-of-range
+            let mut xs: Vec<f32> =
+                (0..64).map(|_| (r.normal() * 2.0 * ma as f64) as f32).collect();
+            xs.extend_from_slice(&[ma * 1e6, -ma * 1e6, f32::MAX, f32::MIN]);
+            let mut q = vec![0i16; xs.len()];
+            quantize_into(&xs, fmt, &mut q);
+            for (&v, &raw) in xs.iter().zip(&q) {
+                let raw = raw as i64;
+                check(
+                    (lo..=hi).contains(&raw),
+                    &format!("raw {raw} escaped [{lo}, {hi}] for v={v} (seed {seed})"),
+                )?;
+                // saturation keeps the sign: a clipped positive can never
+                // come back negative (the wrap a bare `as i16` would take)
+                check(
+                    v <= 0.0 || raw >= 0,
+                    &format!("positive v={v} wrapped to raw {raw} (seed {seed})"),
+                )?;
+                check(
+                    v >= 0.0 || raw <= 0,
+                    &format!("negative v={v} wrapped to raw {raw} (seed {seed})"),
+                )?;
+            }
+            // the absurd values sit exactly on the format extremes
+            let n = q.len();
+            check(q[n - 2] as i64 == hi && q[n - 1] as i64 == lo, "extremes must saturate")?;
+
+            // in-range values round-trip within half a raw step
+            let dq = dequant_scale(fmt);
+            let in_range: Vec<f32> =
+                (0..64).map(|_| (r.f32() * 2.0 - 1.0) * 0.95 * ma).collect();
+            let mut qr = vec![0i16; in_range.len()];
+            quantize_into(&in_range, fmt, &mut qr);
+            for (&v, &raw) in in_range.iter().zip(&qr) {
+                let back = raw as f32 * dq;
+                check(
+                    (back - v).abs() <= 0.75 * dq + 1e-6,
+                    &format!("roundtrip {v} -> {raw} -> {back} off by more than a half step"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_integer_epilogue_clamps_at_both_ends() {
+    forall(
+        30,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            let fmt = Format { total: ACT_TOTAL_BITS, frac: r.below(16) as u32 };
+            let hi = fmt.max_raw();
+            let n = 1 + r.below(9) as usize;
+            let rows = 1 + r.below(4) as usize;
+            let bias_q: Vec<i32> = (0..n).map(|_| r.range_i64(-1000, 1000) as i32).collect();
+            let acc = gen_weights(&mut r, rows * n, 1e4);
+            let mut dst = vec![0i16; rows * n];
+            bias_relu_quantize_into(&acc, &bias_q, fmt, &mut dst);
+            for &d in &dst {
+                check(
+                    (0..=hi).contains(&(d as i64)),
+                    &format!("epilogue raw {d} escaped [0, {hi}] (seed {seed})"),
+                )?;
+            }
+            // deterministic extremes: a huge positive pre-activation pins
+            // the format max, a huge negative one pins the ReLU floor
+            let extremes = [1e30f32, -1e30];
+            let mut d2 = vec![0i16; 2];
+            bias_relu_quantize_into(&extremes, &[0], fmt, &mut d2);
+            check(d2[0] as i64 == hi && d2[1] == 0, "extreme epilogue inputs must clamp")?;
+            Ok(())
+        },
+    );
+}
+
+// --- (c) kernel-level i16 lane-vs-scalar differential -------------------------
+
+#[test]
+fn qgemm2_i16_lane_and_scalar_are_bitwise_under_both_pool_widths() {
+    let mut r = Rng::new(0x17B1);
+    let (k, oc, group, m) = (96usize, 14usize, 16usize, 9usize);
+    let w = gen_weights(&mut r, k * oc, 0.3);
+    let qt = quantize(&w, &[k, oc], group, 4, AssignMode::SigmaSearch).unwrap();
+    let p = PackedQTensorV2::pack(&qt).unwrap();
+    let xq: Vec<i16> = (0..m * k).map(|_| r.range_i64(-512, 512) as i16).collect();
+    let dq = 1.0 / 256.0f32;
+    for width in [1usize, 4] {
+        let pool = Pool::new(width);
+        let mut lane = vec![0.0f32; m * oc];
+        let mut scalar = vec![0.0f32; m * oc];
+        qgemm2_i16_into_on(&pool, &mut lane, &xq, m, &p, dq);
+        qgemm2_i16_scalar_on(&pool, &mut scalar, &xq, m, &p, dq);
+        // the plane sums are exact i64 in both orders and both paths apply
+        // the same one dequant multiply per cell, so equality is bitwise
+        assert_eq!(lane, scalar, "qgemm2 i16 lane vs scalar diverged (width {width})");
+        assert!(lane.iter().any(|&v| v != 0.0), "degenerate case: all-zero output");
+    }
+}
+
+#[test]
+fn csd_gemm_i16_lane_and_scalar_are_bitwise_under_both_pool_widths() {
+    let mut r = Rng::new(0x17B2);
+    let (k, oc, m) = (80usize, 11usize, 7usize);
+    let w = gen_weights(&mut r, k * oc, 0.25);
+    let p = PackedCsdTensor::pack(&w, &[k, oc], CsdQuality::new(3)).unwrap();
+    let xq: Vec<i16> = (0..m * k).map(|_| r.range_i64(-512, 512) as i16).collect();
+    let dq = 1.0 / 128.0f32;
+    for width in [1usize, 4] {
+        let pool = Pool::new(width);
+        let mut lane = vec![0.0f32; m * oc];
+        let mut scalar = vec![0.0f32; m * oc];
+        csd_gemm_i16_into_on(&pool, &mut lane, &xq, m, &p, dq);
+        csd_gemm_i16_scalar_on(&pool, &mut scalar, &xq, m, &p, dq);
+        assert_eq!(lane, scalar, "csd i16 lane vs scalar diverged (width {width})");
+        assert!(lane.iter().any(|&v| v != 0.0), "degenerate case: all-zero output");
+    }
+}
+
+// --- (d) engine-level conformance ---------------------------------------------
+
+fn lenet_batch(seed: u64, b: usize) -> Tensor {
+    let mut r = Rng::new(seed);
+    let xdata: Vec<f32> = (0..b * 28 * 28).map(|_| r.f32()).collect();
+    Tensor::new(vec![b, 28, 28, 1], xdata).unwrap()
+}
+
+#[test]
+fn calibrated_quantized_engine_conforms_and_freezes() {
+    let store = synth_store(91, ModelKind::Lenet);
+    let quality = QualityConfig { phi: 4, group: 16 };
+    let mut engine =
+        QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+    let x = lenet_batch(92, 3);
+    let mut scratch = Scratch::new();
+    let f32_ref = engine.forward_scalar_reference(&x, &mut scratch).unwrap();
+    assert!(
+        engine.forward_int_scalar_reference(&x, &mut scratch).is_err(),
+        "integer reference must refuse to run uncalibrated"
+    );
+    engine.calibrate(&x).unwrap();
+
+    // integer serving vs the f32 oracle over the same packed layers: only
+    // activation-quantization noise apart, identical predictions
+    let got = engine.forward_with(&x, &mut scratch).unwrap();
+    let diff = got.max_abs_diff(&f32_ref);
+    assert!(diff < 5e-2, "integer datapath vs f32 oracle: {diff}");
+    assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&f32_ref));
+
+    // integer serving vs the integer scalar reference: bitwise
+    let oracle = engine.forward_int_scalar_reference(&x, &mut scratch).unwrap();
+    assert_eq!(got.data(), oracle.data(), "integer lane vs integer scalar oracle");
+
+    // warm integer forwards reuse the i16 ping/pong twins: allocs freeze
+    let cold = scratch.stats.allocs;
+    for _ in 0..3 {
+        let again = engine.forward_with(&x, &mut scratch).unwrap();
+        assert_eq!(again.data(), got.data(), "warm integer pass changed the logits");
+    }
+    assert_eq!(scratch.stats.allocs, cold, "warm forwards allocated: {:?}", scratch.stats);
+    assert_eq!(engine.ledger().act_bits, 16, "the act-width gauge must be raised");
+}
+
+#[test]
+fn calibrated_csd_engine_conforms() {
+    let store = synth_store(93, ModelKind::Lenet);
+    let mut engine = CsdEngine::from_store(&store, CsdQuality::exact()).unwrap();
+    let x = lenet_batch(94, 3);
+    let mut scratch = Scratch::new();
+    let f32_ref = engine.forward_scalar_reference(&x, &mut scratch).unwrap();
+    engine.calibrate(&x).unwrap();
+    let got = engine.forward_with(&x, &mut scratch).unwrap();
+    let diff = got.max_abs_diff(&f32_ref);
+    assert!(diff < 5e-2, "csd integer datapath vs f32 oracle: {diff}");
+    assert_eq!(ops::argmax_rows(&got), ops::argmax_rows(&f32_ref));
+    let oracle = engine.forward_int_scalar_reference(&x, &mut scratch).unwrap();
+    assert_eq!(got.data(), oracle.data(), "csd integer lane vs integer scalar oracle");
+    assert_eq!(engine.ledger().act_bits, 16);
+}
+
+#[test]
+fn calibration_is_a_pure_fold_across_engines_and_reruns() {
+    let store = synth_store(95, ModelKind::Convnet);
+    let quality = QualityConfig { phi: 4, group: 16 };
+    let mut r = Rng::new(96);
+    let xdata: Vec<f32> = (0..2 * 32 * 32 * 3).map(|_| r.f32()).collect();
+    let x = Tensor::new(vec![2, 32, 32, 3], xdata).unwrap();
+    let mut a = QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+    let mut b = QuantizedEngine::quantize_store(&store, quality, AssignMode::SigmaSearch).unwrap();
+    a.calibrate(&x).unwrap();
+    b.calibrate(&x).unwrap();
+    assert_eq!(a.act_plan().unwrap(), b.act_plan().unwrap(), "same batch must give one plan");
+    let first = a.act_plan().unwrap().clone();
+    a.calibrate(&x).unwrap();
+    assert_eq!(a.act_plan().unwrap(), &first, "recalibration moved the plan");
+    let fa = a.forward(&x).unwrap();
+    let fb = b.forward(&x).unwrap();
+    assert_eq!(fa.data(), fb.data(), "calibrated engines must serve identical logits");
+}

@@ -156,7 +156,7 @@ fn stacked_dials_from_device_profile_end_to_end() {
     // the report records both dials, consistent with the profile's own
     // selection and the engine's serving configuration
     let meta = store.meta.clone();
-    let (want_q, want_csd) = device
+    let (want_q, want_csd, want_act) = device
         .select_quality(
             |phi, g| qsq_edge::model::bits::model_bits(&meta, phi, g).encoded_bits,
             meta.macs_per_image(),
@@ -164,6 +164,7 @@ fn stacked_dials_from_device_profile_end_to_end() {
         .unwrap();
     assert_eq!(rep.quality, want_q);
     assert_eq!(rep.csd, Some(want_csd));
+    assert_eq!(want_act, 16, "the FPGA class selects the i16 activation dial");
     assert_eq!(engine.quality(), want_csd);
     assert!(want_csd.max_digits >= 1 && want_csd.max_digits != usize::MAX);
     assert!(rep.memory_savings() > 0.5);
